@@ -1,0 +1,67 @@
+//! Low-precision showdown: every linear-layer precision variant trained on
+//! the same data, same init, same optimizer (the Fig 1/2 story in one run).
+//!
+//! Also demonstrates the native kernels: times one SwitchBack vs standard
+//! vs LLM.int8() block step on the rust GEMM substrate (the Fig 3/13 story).
+//!
+//! ```
+//! cargo run --release --example lowprec_showdown -- [steps]
+//! ```
+
+use switchback::config::TrainConfig;
+use switchback::coordinator::Trainer;
+use switchback::nn::{LinearKind, TransformerBlock};
+use switchback::runtime::Runtime;
+use switchback::tensor::{Matrix, Rng};
+use switchback::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let runtime = Runtime::cpu()?;
+
+    println!("=== accuracy: all precision variants, same init/data (tiny) ===");
+    let variants = [
+        "highprec",
+        "switchback_int8",
+        "llmint8",
+        "fp8_tensorwise",
+        "switchback_fp8",
+    ];
+    let mut rows = vec![];
+    for v in variants {
+        let cfg = TrainConfig::preset(&format!("{v}_tiny_b32"), steps);
+        let mut trainer = Trainer::new(&runtime, cfg)?;
+        let res = trainer.run(false)?;
+        println!(
+            "  {v:<18} tail-loss {:8.4}  acc {:5.1}%  {}",
+            res.tail_loss,
+            100.0 * res.zero_shot_acc.unwrap_or(f32::NAN),
+            if res.diverged { "DIVERGED" } else { "" }
+        );
+        rows.push((v, res.tail_loss, res.zero_shot_acc.unwrap_or(f32::NAN)));
+    }
+    let base = rows.iter().find(|r| r.0 == "highprec").unwrap().2;
+    println!("\n  Δacc vs highprec (paper: SwitchBack ≈ 0, LLM.int8 clearly negative):");
+    for (v, _, acc) in &rows {
+        if *v != "highprec" {
+            println!("    {v:<18} {:+5.1}pp", 100.0 * (acc - base));
+        }
+    }
+
+    println!("\n=== speed: one transformer-block train step on the native kernels ===");
+    let (dim, seq, batch) = (512, 64, 8);
+    let mut rng = Rng::seed(0);
+    let x = Matrix::randn(batch * seq, dim, 0.5, &mut rng);
+    for kind in [LinearKind::Standard, LinearKind::SwitchBack, LinearKind::LlmInt8] {
+        let blk = TransformerBlock::new(dim, 8, seq, kind, &mut Rng::seed(1));
+        let r = bench::bench(kind.label(), 8, || {
+            let _ = blk.train_step_compute(&x);
+        });
+        bench::report(&r);
+    }
+    println!("  (paper Fig 4/13: SwitchBack beats the standard layer; LLM.int8 does not)");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! End-to-end driver: train a real CLIP model through the full system and
+//! log the loss curve + zero-shot accuracy (the EXPERIMENTS.md §E2E run).
+//!
+//! All layers compose here: synthetic corpus (rust) → AOT'd jax model with
+//! SwitchBack int8 linear layers (PJRT) → StableAdamW + telemetry (rust).
+//!
+//! ```
+//! cargo run --release --example train_clip_e2e -- [size] [steps]
+//!   size  ∈ {micro, tiny, small, base*}      (default small; *needs `make artifacts-large`)
+//!   steps (default 300)
+//! ```
+
+use switchback::config::{OptimizerKind, TrainConfig};
+use switchback::coordinator::Trainer;
+use switchback::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size = args.first().map(String::as_str).unwrap_or("small");
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let artifact = match size {
+        "base" => "switchback_int8_base_b16".to_string(),
+        s => format!("switchback_int8_{s}_b32"),
+    };
+
+    let runtime = Runtime::cpu()?;
+    println!("PJRT platform: {}", runtime.platform());
+    let mut cfg = TrainConfig::preset(&artifact, steps)
+        .with_optimizer(OptimizerKind::StableAdamw, 0.99);
+    cfg.metrics_path = Some(format!("results/e2e/{size}_{steps}.jsonl"));
+    println!("e2e config: {}", cfg.to_json());
+
+    let mut trainer = Trainer::new(&runtime, cfg)?;
+    let batch = {
+        let art = trainer.artifact();
+        println!(
+            "model: {} — {} params, {} tensors, batch {}",
+            art.manifest.name, art.manifest.n_params, art.manifest.n_tensors,
+            art.manifest.batch,
+        );
+        art.manifest.batch
+    };
+
+    let t0 = std::time::Instant::now();
+    let res = trainer.run(true)?;
+    let mins = t0.elapsed().as_secs_f32() / 60.0;
+
+    println!("\n=== loss curve (10 points) ===");
+    let loss = res.loss_trace();
+    let n = loss.len();
+    for i in 0..10 {
+        let idx = (i * n / 10).min(n - 1);
+        println!("  step {:>5}: {:.4}", idx + 1, loss[idx]);
+    }
+    println!("  step {:>5}: {:.4}  (final)", n, loss[n - 1]);
+    println!("\n=== summary ===");
+    println!("  steps/s          : {:.2}", res.steps_per_sec);
+    println!("  wall time        : {mins:.1} min");
+    println!("  first loss       : {:.4}  (ln batch = {:.4})",
+             loss[0], (batch as f32).ln());
+    println!("  tail loss        : {:.4}", res.tail_loss);
+    println!(
+        "  zero-shot acc    : {}   (chance = {:.1}%)",
+        res.zero_shot_acc
+            .map(|a| format!("{:.1}%", 100.0 * a))
+            .unwrap_or_else(|| "n/a".into()),
+        100.0 / 64.0
+    );
+    println!("  diverged         : {}", res.diverged);
+    println!("  metrics          : results/e2e/{size}_{steps}.jsonl");
+    Ok(())
+}

@@ -1,0 +1,9 @@
+"""Build-time Python for the SwitchBack + StableAdamW reproduction.
+
+L1: ``kernels/`` — Pallas kernels + pure-jnp oracles.
+L2: ``layers`` / ``vit`` / ``model`` — CLIP dual-tower with pluggable
+    linear-layer precision; ``aot`` lowers loss-and-grads to HLO text for
+    the rust L3 coordinator.
+
+Nothing here is imported at runtime; ``make artifacts`` runs it once.
+"""

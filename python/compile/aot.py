@@ -1,0 +1,228 @@
+"""AOT pipeline: lower the L2 model to HLO text + manifests for rust.
+
+For every entry in ``configs.BUILDS`` this emits into ``artifacts/``:
+
+* ``<name>.hlo.txt``         — train-step HLO: ``(p_0..p_N, images, tokens)
+                               → (loss, block_mags, g_0..g_N)``
+* ``<name>.encode.hlo.txt``  — eval HLO: ``→ (image_embs, text_embs)``
+* ``<name>.manifest.json``   — tensor names/shapes/offsets, optimizer
+                               metadata (decay mask, tensor kinds), input
+                               shapes, output layout, init specs
+* ``<name>.params.bin``      — raw little-endian f32 initial parameters
+                               (seed 0), concatenated in manifest order
+
+HLO **text** is the interchange format (not ``.serialize()``): jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Python runs only here — never on the training path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import BUILDS, Build, make_config
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _init_spec(name: str, leaf) -> str:
+    """Describe how to re-initialize this tensor for a fresh seed (rust side)."""
+    arr = np.asarray(leaf)
+    if arr.ndim == 0:
+        return f"const:{float(arr):.6f}"
+    if np.all(arr == 0):
+        return "zeros"
+    if np.all(arr == 1):
+        return "ones"
+    return f"normal:{float(arr.std()):.6g}"
+
+
+def build_one(build: Build, outdir: str, check: bool = False) -> dict:
+    cfg = make_config(build.size, variant=build.variant,
+                      layer_scale=build.layer_scale, kq_norm=build.kq_norm)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    leaves, names, treedef = model.flatten_params(params)
+    n = len(leaves)
+    B = build.batch
+    img_spec = jax.ShapeDtypeStruct((B, cfg.patches, cfg.patch_dim), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((B, cfg.seq), jnp.int32)
+    leaf_specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+
+    def train_fn(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:n])
+        loss, mags, grads = model.loss_and_grads(p, args[n], args[n + 1], cfg)
+        return (loss, mags, *jax.tree_util.tree_leaves(grads))
+
+    def encode_fn(*args):
+        p = jax.tree_util.tree_unflatten(treedef, args[:n])
+        return model.encode(p, args[n], args[n + 1], cfg)
+
+    name = build.name
+    lowered = jax.jit(train_fn, keep_unused=True).lower(*leaf_specs, img_spec, tok_spec)
+    hlo_path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    encode_rel = None
+    if build.with_encode:
+        enc_lowered = jax.jit(encode_fn, keep_unused=True).lower(*leaf_specs, img_spec, tok_spec)
+        encode_rel = f"{name}.encode.hlo.txt"
+        with open(os.path.join(outdir, encode_rel), "w") as f:
+            f.write(to_hlo_text(enc_lowered))
+
+    # Initial parameters (seed 0), concatenated f32 little-endian.
+    flat = np.concatenate([np.asarray(l, np.float32).ravel() for l in leaves])
+    bin_rel = f"{name}.params.bin"
+    flat.tofile(os.path.join(outdir, bin_rel))
+
+    offset = 0
+    tensors = []
+    for nm, leaf in zip(names, leaves):
+        arr = np.asarray(leaf)
+        meta = model.param_metadata(nm, arr.shape)
+        tensors.append({
+            "name": nm,
+            "shape": list(arr.shape),
+            "numel": int(arr.size),
+            "offset": offset,
+            "decay": meta["decay"],
+            "kind": meta["kind"],
+            "init": _init_spec(nm, leaf),
+        })
+        offset += int(arr.size)
+
+    manifest = {
+        "name": name,
+        "size": build.size,
+        "variant": build.variant,
+        "batch": B,
+        "config": {
+            "dim": cfg.dim, "vision_blocks": cfg.vision_blocks,
+            "text_blocks": cfg.text_blocks, "heads": cfg.heads,
+            "patches": cfg.patches, "patch_dim": cfg.patch_dim,
+            "seq": cfg.seq, "vocab": cfg.vocab, "embed_dim": cfg.edim,
+            "layer_scale": cfg.layer_scale, "kq_norm": cfg.kq_norm,
+        },
+        "n_tensors": n,
+        "n_params": int(flat.size),
+        "inputs": {
+            "images": [B, cfg.patches, cfg.patch_dim],
+            "tokens": [B, cfg.seq],
+        },
+        "outputs": {
+            "loss": 0, "mags": 1, "grads_start": 2,
+            "n_mags": cfg.vision_blocks + cfg.text_blocks,
+        },
+        "hlo": f"{name}.hlo.txt",
+        "encode_hlo": encode_rel,
+        "params_bin": bin_rel,
+        "tensors": tensors,
+    }
+    with open(os.path.join(outdir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if check:
+        # Golden step: deterministic batch, executed by jax, recorded so the
+        # rust integration test can verify the runtime end-to-end.
+        imgs = np.sin(np.arange(B * cfg.patches * cfg.patch_dim,
+                                dtype=np.float32)).reshape(
+            B, cfg.patches, cfg.patch_dim)
+        toks = (np.arange(B * cfg.seq, dtype=np.int32) % cfg.vocab).reshape(
+            B, cfg.seq)
+        out = jax.jit(train_fn)(*leaves, jnp.asarray(imgs), jnp.asarray(toks))
+        golden = {
+            "loss": float(out[0]),
+            "mags": [float(v) for v in np.asarray(out[1])],
+            "grad0_l2": float(np.linalg.norm(np.asarray(out[2]))),
+        }
+        with open(os.path.join(outdir, f"{name}.golden.json"), "w") as f:
+            json.dump(golden, f, indent=1)
+
+    return manifest
+
+
+def write_quant_golden(outdir: str) -> None:
+    """Golden vectors for the rust `quant` mirror: a deterministic matrix and
+    its row-wise / tensor-wise / fp8 quantizations from the jnp oracles.
+    `rust/tests/golden.rs` asserts bit-for-bit agreement."""
+    from .kernels import fp8 as fp8mod
+    from .kernels import ref
+
+    rows, cols = 13, 37
+    x = np.sin(0.7 * np.arange(rows * cols, dtype=np.float32) ** 1.1).reshape(
+        rows, cols) * 3.0
+    rc, rs = ref.rowwise_quant_ref(x)
+    tc, ts = ref.tensorwise_quant_ref(x)
+    fp8_vals = fp8mod.fp8_round_ref(jnp.asarray(x.ravel()[:64]), fp8mod.E4M3)
+    fp8_e5 = fp8mod.fp8_round_ref(jnp.asarray(x.ravel()[:64]) * 100.0, fp8mod.E5M2)
+    golden = {
+        "rows": rows,
+        "cols": cols,
+        "x": [float(v) for v in x.ravel()],
+        "row_codes": [int(v) for v in np.asarray(rc).ravel()],
+        "row_state": [float(v) for v in np.asarray(rs)],
+        "tensor_codes": [int(v) for v in np.asarray(tc).ravel()],
+        "tensor_state": float(ts),
+        "fp8_e4m3": [float(v) for v in np.asarray(fp8_vals)],
+        "fp8_e5m2_x100": [float(v) for v in np.asarray(fp8_e5)],
+    }
+    with open(os.path.join(outdir, "quant_golden.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters on build names")
+    ap.add_argument("--large", action="store_true",
+                    help="also build the base/e2e100m artifacts")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    builds = list(BUILDS)
+    if not args.large:
+        builds = [b for b in builds if b.size not in ("base", "e2e100m")]
+    if args.only:
+        pats = args.only.split(",")
+        builds = [b for b in builds if any(p in b.name for p in pats)]
+    if args.list:
+        for b in builds:
+            print(b.name)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    write_quant_golden(args.out)
+    index = []
+    for i, b in enumerate(builds):
+        print(f"[{i + 1}/{len(builds)}] lowering {b.name} ...", flush=True)
+        m = build_one(b, args.out, check=(b.size == "micro"
+                                          and b.variant == "highprec"
+                                          and b.batch == 32))
+        index.append({"name": m["name"], "size": m["size"],
+                      "variant": m["variant"], "batch": m["batch"],
+                      "n_params": m["n_params"]})
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"wrote {len(index)} artifact sets to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

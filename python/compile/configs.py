@@ -1,0 +1,117 @@
+"""Model size presets and build matrix for AOT artifacts.
+
+The paper trains CLIP ViT-Base / Large / Huge (up to ~1B params) on LAION-2B;
+we keep the architecture family and scale it to CPU-trainable sizes (DESIGN.md
+§Substitutions).  ``micro``→``small`` are the sweep workhorses (Fig 1/2/5–10);
+``base``/``e2e100m`` exist for the end-to-end driver.
+
+Images arrive pre-patchified from the rust data pipeline as
+``[batch, patches, patch_dim]`` so the patch embedding is literally a linear
+layer — the exact analogue of ``visual.conv1.weight``, the layer whose
+out-of-date second-moment estimator the paper traces loss spikes to.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    dim: int
+    vision_blocks: int
+    text_blocks: int
+    heads: int
+    patches: int = 16        # 4×4 grid of patches
+    patch_dim: int = 48      # 4×4 RGB patch, flattened
+    seq: int = 16            # text sequence length
+    vocab: int = 512
+    embed_dim: int = 0       # shared CLIP embedding dim; 0 → == dim
+    mlp_ratio: int = 4
+    # Stability/precision knobs (paper §2.3, §3.2):
+    layer_scale: bool = False        # zero-init layer-scale (Fig 5)
+    kq_norm: bool = False            # KQ layernorm baseline (Fig 5)
+    variant: str = "highprec"        # linear-layer precision variant
+
+    @property
+    def edim(self) -> int:
+        return self.embed_dim or self.dim
+
+
+SIZES = {
+    "micro": dict(dim=64, vision_blocks=2, text_blocks=2, heads=4),
+    "tiny": dict(dim=128, vision_blocks=3, text_blocks=3, heads=4),
+    "small": dict(dim=256, vision_blocks=6, text_blocks=4, heads=8),
+    "base": dict(dim=512, vision_blocks=12, text_blocks=8, heads=8),
+    "e2e100m": dict(dim=768, vision_blocks=12, text_blocks=10, heads=12),
+}
+
+
+def make_config(size: str, variant: str = "highprec", layer_scale: bool = False,
+                kq_norm: bool = False) -> ModelConfig:
+    return ModelConfig(name=size, variant=variant, layer_scale=layer_scale,
+                       kq_norm=kq_norm, **SIZES[size])
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Approximate parameter count (exact count comes from the manifest)."""
+    d = cfg.dim
+    block = 4 * d * d + 2 * d * cfg.mlp_ratio * d + 4 * d  # attn + mlp + lns
+    n = (cfg.vision_blocks + cfg.text_blocks) * block
+    n += cfg.patch_dim * d + cfg.vocab * d                  # embeddings
+    n += (cfg.patches + cfg.seq) * d                        # pos embeds
+    n += 2 * d * cfg.edim                                   # projections
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Build matrix: which (variant, size, batch) artifacts `make artifacts` emits.
+# Experiments reference artifacts by these names (rust config presets too).
+# ---------------------------------------------------------------------------
+
+DEFAULT_BATCH = 32
+
+
+@dataclass(frozen=True)
+class Build:
+    size: str
+    variant: str
+    batch: int = DEFAULT_BATCH
+    layer_scale: bool = False
+    kq_norm: bool = False
+    with_encode: bool = True   # also emit the eval (encode) artifact
+
+    @property
+    def name(self) -> str:
+        tags = []
+        if self.layer_scale:
+            tags.append("ls")
+        if self.kq_norm:
+            tags.append("kqn")
+        tag = ("_" + "_".join(tags)) if tags else ""
+        return f"{self.variant}_{self.size}{tag}_b{self.batch}"
+
+
+# Fig 1/2: int8 + fp8 accuracy-vs-scale across three sizes.
+_ACC_VARIANTS = ["highprec", "switchback_int8", "llmint8",
+                 "fp8_tensorwise", "switchback_fp8"]
+_ACC_SIZES = ["micro", "tiny", "small"]
+
+BUILDS = (
+    [Build(size=s, variant=v) for s in _ACC_SIZES for v in _ACC_VARIANTS]
+    # Fig 5: fp8 tensor-wise rescue attempts at `small` (the paper's ViT-L slot)
+    + [
+        Build(size="small", variant="fp8_tensorwise", layer_scale=True),
+        Build(size="small", variant="fp8_tensorwise", kq_norm=True),
+        Build(size="small", variant="highprec", layer_scale=True),
+    ]
+    # Fig 7: batch-size sweep (micro so the sweep is cheap)
+    + [Build(size="micro", variant="highprec", batch=b) for b in (8, 128, 512)]
+    # Composition proof: a real Pallas-kernel artifact (quickstart loads this)
+    + [Build(size="micro", variant="switchback_int8_pallas", batch=8,
+             with_encode=False)]
+    # End-to-end driver sizes
+    + [Build(size="base", variant="switchback_int8", batch=16),
+       Build(size="e2e100m", variant="highprec", batch=8, with_encode=False)]
+)

@@ -1,0 +1,14 @@
+"""L1 — Pallas kernels for SwitchBack low-precision training.
+
+``ref``        pure-jnp specification (oracles for pytest + rust goldens)
+``quant``      Pallas quantization kernels (row/tensor-wise int8, fused
+               quantize+transpose)
+``switchback`` Pallas fused int8-matmul-and-dequantize + whole-layer ops
+``fp8``        exact float8 (E4M3/E5M2) value simulation
+
+All Pallas kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU performance is estimated from the
+BlockSpecs (see DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf).
+"""
+
+from . import fp8, quant, ref, switchback  # noqa: F401

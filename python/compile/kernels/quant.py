@@ -1,0 +1,174 @@
+"""Pallas quantization kernels (int8, row-wise / tensor-wise / fused transpose).
+
+TPU adaptation of the paper's Triton kernels (DESIGN.md §Hardware-Adaptation):
+
+* Triton loads a row tile into SRAM, reduces absmax, scales + rounds in
+  registers.  Here each grid step holds a ``(block_rows, n)`` tile in VMEM,
+  reduces along the lane dimension, and writes int8 codes plus the f32 state.
+* The paper's ``tensor-wise_quantize_transpose`` fusion (one DRAM round-trip
+  for quantize+transpose, §2.2.1) maps to a kernel whose *output* BlockSpec
+  index map is the transpose of its input map — the tile is transposed while
+  VMEM-resident, so HBM sees exactly one read and one write.
+
+All kernels are total: absmax==0 rows quantize to zero codes with state 1
+(matching ``ref._safe_absmax`` and the rust mirror).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127.0
+
+
+def _pad_to(x, multiple, axis):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def _rowwise_kernel(x_ref, codes_ref, state_ref):
+    x = x_ref[...]
+    m = jnp.max(jnp.abs(x), axis=-1)
+    state = jnp.where(m == 0.0, 1.0, m)
+    codes = jnp.round(x * (INT8_MAX / state)[:, None])
+    codes_ref[...] = jnp.clip(codes, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    state_ref[...] = state
+
+
+def rowwise_quant(x, block_rows: int = 128):
+    """Row-wise int8 quantization (paper eq. (1)) as a Pallas kernel.
+
+    ``x [b, n] f32`` → ``(codes [b, n] int8, state [b] f32)``.  Grid over row
+    blocks; each step's VMEM working set is ``block_rows × n`` f32 in +
+    int8 out.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    b, n = x.shape
+    xp, _ = _pad_to(x, block_rows, 0)
+    bp = xp.shape[0]
+    grid = bp // block_rows
+    codes, state = pl.pallas_call(
+        _rowwise_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, n), jnp.int8),
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp)
+    return codes[:b], state[:b]
+
+
+def _scale_round_kernel(x_ref, state_ref, codes_ref):
+    x = x_ref[...]
+    scale = INT8_MAX / state_ref[0]
+    codes = jnp.round(x * scale)
+    codes_ref[...] = jnp.clip(codes, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def tensorwise_quant(x, block_rows: int = 128):
+    """Tensor-wise int8 quantization (paper eq. (2)).
+
+    The global absmax is a cheap O(n²) reduction done by XLA (it fuses with
+    whatever produced ``x``); the scale+round is the Pallas kernel.  Returns
+    ``(codes int8, state f32 scalar)``.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(jnp.abs(x))
+    state = jnp.where(m == 0.0, 1.0, m)
+    b, n = x.shape
+    xp, _ = _pad_to(x, block_rows, 0)
+    bp = xp.shape[0]
+    grid = bp // block_rows
+    codes = pl.pallas_call(
+        _scale_round_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, n), jnp.int8),
+        interpret=True,
+    )(xp, state[None])
+    return codes[:b], state
+
+
+def _quant_transpose_kernel(w_ref, state_ref, out_ref):
+    w = w_ref[...]
+    scale = INT8_MAX / state_ref[0]
+    codes = jnp.round(w.T * scale)
+    out_ref[...] = jnp.clip(codes, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def tensorwise_quant_transpose(w, block: int = 128):
+    """Fused tensor-wise quantize + transpose (the paper's
+    ``tensor-wise_quantize_transpose``; critical for the backward pass since
+    int8 MMA hardware only implements ``A Bᵀ``).
+
+    ``w [m, n] f32`` → ``(codes [n, m] int8, state f32 scalar)``.  Each grid
+    step reads one (block, block) tile, transposes it in VMEM, and writes it
+    to the transposed tile position — one HBM read + one HBM write total.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    m, n = w.shape
+    mx = jnp.max(jnp.abs(w))
+    state = jnp.where(mx == 0.0, 1.0, mx)
+    wp, _ = _pad_to(w, block, 0)
+    wp, _ = _pad_to(wp, block, 1)
+    mp, np_ = wp.shape
+    grid = (mp // block, np_ // block)
+    codes = pl.pallas_call(
+        _quant_transpose_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp), jnp.int8),
+        interpret=True,
+    )(wp, state[None])
+    return codes[:n, :m], state
+
+
+def _dequant_rowwise_kernel(codes_ref, state_ref, out_ref):
+    out_ref[...] = codes_ref[...].astype(jnp.float32) * (
+        state_ref[...] / INT8_MAX
+    )[:, None]
+
+
+def dequant_rowwise(codes, state, block_rows: int = 128):
+    """Dequantize row-wise int8 codes back to f32 (used by SwitchBackM's
+    memory-efficient backward, Algorithm 3)."""
+    b, n = codes.shape
+    cp, _ = _pad_to(codes, block_rows, 0)
+    sp, _ = _pad_to(state, block_rows, 0)
+    bp = cp.shape[0]
+    grid = bp // block_rows
+    out = pl.pallas_call(
+        _dequant_rowwise_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, n), jnp.float32),
+        interpret=True,
+    )(cp, sp)
+    return out[:b]

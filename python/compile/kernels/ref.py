@@ -1,0 +1,174 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Everything in this file is the *specification*: the Pallas kernels in
+``quant.py`` / ``switchback.py`` / ``fp8.py`` must match these functions
+bit-for-bit (int8 codes) or to float ULP (dequantized outputs).  The rust
+``quant`` module mirrors the same definitions and is cross-checked against
+golden vectors generated from here (see ``python/tests/test_golden.py``).
+
+Conventions follow the paper (§2.2.1):
+
+* ``Q_row(X)``  — row-wise int8 quantization, eq. (1): each row is scaled by
+  ``127 / absmax(row)`` and rounded; the state is the vector of row absmaxes.
+* ``Q_tensor(X)`` — tensor-wise int8 quantization, eq. (2).
+* ``Q_col(X)`` — column-wise quantization (used by SwitchBackQ / LLM.int8()).
+* dequantized matmul, eq. (3):
+  ``state_tensor(W)/127^2 * state_row(X) * (Q_row(X) @ Q_tensor(W)^T)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+INT8_MAX = 127.0
+
+
+def _safe_absmax(a, axis=None, keepdims=False):
+    """absmax with a floor so that all-zero tensors quantize to all-zero.
+
+    The paper's kernels divide by absmax; for an all-zero row that is 0/0.
+    Both bitsandbytes and our rust mirror treat absmax==0 as scale 1.
+    """
+    m = jnp.max(jnp.abs(a), axis=axis, keepdims=keepdims)
+    return jnp.where(m == 0.0, 1.0, m)
+
+
+def rowwise_quant_ref(x):
+    """Row-wise int8 quantization, paper eq. (1).
+
+    Returns ``(codes int8 [b, n], state f32 [b])`` where
+    ``codes = round(127 * x / absmax(row))``.
+    """
+    state = _safe_absmax(x, axis=-1)
+    codes = jnp.round(x * (INT8_MAX / state)[..., None])
+    codes = jnp.clip(codes, -INT8_MAX, INT8_MAX)
+    return codes.astype(jnp.int8), state
+
+
+def colwise_quant_ref(x):
+    """Column-wise int8 quantization (state per column)."""
+    state = _safe_absmax(x, axis=0)
+    codes = jnp.round(x * (INT8_MAX / state)[None, :])
+    codes = jnp.clip(codes, -INT8_MAX, INT8_MAX)
+    return codes.astype(jnp.int8), state
+
+
+def tensorwise_quant_ref(x):
+    """Tensor-wise int8 quantization, paper eq. (2).
+
+    Returns ``(codes int8, state f32 scalar)``.
+    """
+    state = _safe_absmax(x)
+    codes = jnp.round(x * (INT8_MAX / state))
+    codes = jnp.clip(codes, -INT8_MAX, INT8_MAX)
+    return codes.astype(jnp.int8), state
+
+
+def dequant_rowwise_ref(codes, state):
+    """Inverse of :func:`rowwise_quant_ref` (up to rounding)."""
+    return codes.astype(jnp.float32) * (state / INT8_MAX)[..., None]
+
+
+def int8_matmul_dequant_ref(x_codes, w_codes, state_x, state_w):
+    """int8 matmul + dequantize, paper eq. (3).
+
+    ``x_codes [b, k] int8``, ``w_codes [m, k] int8`` (weights stored row-major
+    as in ``nn.Linear``), ``state_x [b]`` row-wise state, ``state_w`` scalar
+    tensor-wise state.  Accumulation in int32 — exact, as on real int8 MMA
+    hardware.  Output ``[b, m] f32``.
+    """
+    acc = lax.dot_general(
+        x_codes,
+        w_codes,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    scale = (state_x / INT8_MAX)[:, None] * (state_w / INT8_MAX)
+    return acc.astype(jnp.float32) * scale
+
+
+def int8_matmul_dequant_rowcol_ref(x_codes, w_codes, state_x, state_w_col):
+    """int8 matmul where both operands have per-vector states.
+
+    Used by SwitchBackQ / LLM.int8(): ``x`` row-wise, ``w`` row-wise over its
+    own rows (i.e. per output unit).  ``w_codes [m, k]``, ``state_w_col [m]``.
+    Output ``[b, m] f32`` (paper eq. (4)).
+    """
+    acc = lax.dot_general(
+        x_codes,
+        w_codes,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    scale = (state_x / INT8_MAX)[:, None] * (state_w_col / INT8_MAX)[None, :]
+    return acc.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Whole-layer references (forward + both gradient matmuls).
+# ---------------------------------------------------------------------------
+
+
+def linear_fwd_ref(x, w):
+    """Standard full-precision linear forward: ``Y = X W^T``."""
+    return x @ w.T
+
+
+def switchback_fwd_ref(x, w):
+    """SwitchBack forward (Algorithm 1): row-wise X, tensor-wise W, int8."""
+    xq, sx = rowwise_quant_ref(x)
+    wq, sw = tensorwise_quant_ref(w)
+    return int8_matmul_dequant_ref(xq, wq, sx, sw)
+
+
+def switchback_dgrad_ref(g, w):
+    """SwitchBack input gradient: ``dX = G W`` with G row-wise, W tensor-wise.
+
+    The int8 matmul contracts over ``m`` so we hand it ``W^T [n, m]`` —
+    mirroring the paper's fused ``tensor-wise_quantize_transpose``.
+    """
+    gq, sg = rowwise_quant_ref(g)
+    wq, sw = tensorwise_quant_ref(w.T)
+    return int8_matmul_dequant_ref(gq, wq, sg, sw)
+
+
+def switchback_wgrad_ref(g, x):
+    """SwitchBack weight gradient — kept in high precision (the whole point):
+    ``dW = G^T X`` with inner dimension b = batch*seq."""
+    return g.T @ x
+
+
+def switchback_linear_ref(x, w):
+    """(fwd, dgrad, wgrad) triple for a given upstream gradient of ones —
+    convenience for golden-vector generation."""
+    y = switchback_fwd_ref(x, w)
+    g = jnp.ones_like(y)
+    return y, switchback_dgrad_ref(g, w), switchback_wgrad_ref(g, x)
+
+
+def llmint8_fwd_ref(x, w):
+    """LLM.int8()-style forward: row-wise X, row-wise (per-output) W."""
+    xq, sx = rowwise_quant_ref(x)
+    wq, sw = rowwise_quant_ref(w)
+    return int8_matmul_dequant_rowcol_ref(xq, wq, sx, sw)
+
+
+def llmint8_dgrad_ref(g, w):
+    """LLM.int8() input gradient: G row-wise, W^T column-wise-per-output."""
+    gq, sg = rowwise_quant_ref(g)
+    wq, sw = rowwise_quant_ref(w.T)
+    return int8_matmul_dequant_rowcol_ref(gq, wq, sg, sw)
+
+
+def llmint8_wgrad_ref(g, x):
+    """LLM.int8() weight gradient *also* in int8 — the failure mode the paper
+    identifies (inner dim = batch*seq is huge, quantization noise ∝ k).
+
+    ``dW = Gᵀ X``: G is quantized row-wise along the contraction (per output
+    unit), X column-wise (per input feature); the contraction runs over
+    b = batch×seq.
+    """
+    gq, sg = rowwise_quant_ref(g.T)   # [m, b], state [m]
+    xq, sxc = colwise_quant_ref(x)    # [b, n], state [n]
+    return int8_matmul_dequant_rowcol_ref(gq, xq.T, sg, sxc)

@@ -1,0 +1,181 @@
+"""Fused int8-matmul-and-dequantize Pallas kernel + SwitchBack layer ops.
+
+This is the paper's compute hot-spot (Algorithm 1) rendered for the TPU
+programming model:
+
+* grid ``(M/bm, N/bn, K/bk)`` with the K dimension innermost; an int32 VMEM
+  scratch accumulator plays the role of the MXU accumulator tile.  On the
+  last K step the dequantize epilogue (``state_row(X) ⊗ state(W) / 127²``)
+  is applied in-register and the f32 tile is written out — this is the
+  paper's fused ``matmul_int8_and_dequantize``.
+* block sizes default to 128×128×128: MXU-systolic-array aligned, and the
+  three tiles (int8 X, int8 W, int32 acc) occupy
+  ``bm·bk + bk·bn + 4·bm·bn ≈ 96 KiB`` — far under the ~16 MiB VMEM budget,
+  leaving room for double buffering (see EXPERIMENTS.md §Perf for the
+  footprint/utilization table).
+
+``interpret=True`` everywhere: the CPU PJRT runtime cannot execute Mosaic
+custom-calls.  Numerics are exact either way (int32 accumulation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import quant
+from .quant import INT8_MAX, _pad_to
+
+
+def _mm_dequant_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, nk: int):
+    """One (bm, bn) output tile; accumulates int8·int8 → int32 over K steps."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        scale = (sx_ref[...] / INT8_MAX)[:, None] * (sw_ref[0] / INT8_MAX)
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * scale
+
+
+def int8_matmul_dequant(
+    x_codes,
+    w_codes,
+    state_x,
+    state_w,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+):
+    """Fused int8 matmul + dequantize (paper eq. (3)).
+
+    ``x_codes [b, k] int8`` (row-wise quantized, ``state_x [b]``),
+    ``w_codes [m, k] int8`` (tensor-wise quantized, scalar ``state_w``).
+    Returns ``[b, m] f32``.
+    """
+    b, k = x_codes.shape
+    m, k2 = w_codes.shape
+    assert k == k2, f"inner dims disagree: {k} vs {k2}"
+    xq, _ = _pad_to(x_codes, block_m, 0)
+    xq, _ = _pad_to(xq, block_k, 1)
+    wq, _ = _pad_to(w_codes, block_n, 0)
+    wq, _ = _pad_to(wq, block_k, 1)
+    sx, _ = _pad_to(state_x, block_m, 0)
+    bp, kp = xq.shape
+    mp = wq.shape[0]
+    nk = kp // block_k
+    grid = (bp // block_m, mp // block_n, nk)
+    out = pl.pallas_call(
+        functools.partial(_mm_dequant_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, s: (j, s)),
+            pl.BlockSpec((block_m,), lambda i, j, s: (i,)),
+            pl.BlockSpec((1,), lambda i, j, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=True,
+    )(xq, wq, sx, jnp.asarray(state_w)[None])
+    return out[:b, :m]
+
+
+def _mm_dequant_rowcol_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        scale = (sx_ref[...] / INT8_MAX)[:, None] * (sw_ref[...] / INT8_MAX)[None, :]
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * scale
+
+
+def int8_matmul_dequant_rowcol(
+    x_codes,
+    w_codes,
+    state_x,
+    state_w,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+):
+    """Row×row int8 matmul + dequantize (paper eq. (4) — SwitchBackQ /
+    LLM.int8() style, per-output-unit weight states ``state_w [m]``)."""
+    b, k = x_codes.shape
+    m, _ = w_codes.shape
+    xq, _ = _pad_to(x_codes, block_m, 0)
+    xq, _ = _pad_to(xq, block_k, 1)
+    wq, _ = _pad_to(w_codes, block_n, 0)
+    wq, _ = _pad_to(wq, block_k, 1)
+    sx, _ = _pad_to(state_x, block_m, 0)
+    sw, _ = _pad_to(state_w, block_n, 0)
+    bp, kp = xq.shape
+    mp = wq.shape[0]
+    nk = kp // block_k
+    grid = (bp // block_m, mp // block_n, nk)
+    out = pl.pallas_call(
+        functools.partial(_mm_dequant_rowcol_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, s: (j, s)),
+            pl.BlockSpec((block_m,), lambda i, j, s: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=True,
+    )(xq, wq, sx, sw)
+    return out[:b, :m]
+
+
+# ---------------------------------------------------------------------------
+# Whole-layer SwitchBack ops built from the kernels (Algorithm 1).
+# These are what L2 (`compile/layers.py`) calls when `use_kernels=True`.
+# ---------------------------------------------------------------------------
+
+
+def switchback_fwd(x, w):
+    """Forward: ``Y = Q_row(X) Q_tensor(W)ᵀ`` dequantized — all Pallas."""
+    xq, sx = quant.rowwise_quant(x)
+    wq, sw = quant.tensorwise_quant(w)
+    return int8_matmul_dequant(xq, wq, sx, sw)
+
+
+def switchback_dgrad(g, w):
+    """Input gradient: ``dX = Q_row(G) Q_tensor(Wᵀ)ᵀ`` — uses the fused
+    quantize+transpose kernel exactly as Algorithm 1's backward."""
+    gq, sg = quant.rowwise_quant(g)
+    wtq, sw = quant.tensorwise_quant_transpose(w)
+    return int8_matmul_dequant(gq, wtq, sg, sw)
+
+
+def switchback_wgrad(g, x):
+    """Weight gradient in high precision (``matmul_fp16`` in Algorithm 1):
+    the inner dimension is batch×seq, where quantization noise would be
+    catastrophic (paper Appendix C)."""
+    return g.T @ x

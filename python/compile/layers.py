@@ -1,0 +1,253 @@
+"""L2 building blocks: precision-pluggable linear layers via ``jax.custom_vjp``.
+
+Every linear layer in the transformer (k/q/v/out projections + MLP, i.e.
+>90% of compute) is routed through one of these variants; everything else
+(layernorm, softmax, residuals) stays in high precision, exactly as in the
+paper (§1).
+
+Variants (paper §2.2):
+
+``highprec``          standard matmul fwd/bwd — the bfloat16-baseline stand-in
+                      (CPU PJRT computes f32; see DESIGN.md substitutions).
+``switchback_int8``   Algorithm 1: int8 fwd + dgrad (row-wise X/G, tensor-wise
+                      W), **high-precision wgrad** (inner dim = batch×seq).
+``switchbackq_int8``  Algorithm 4: row/column-wise weight quant instead of
+                      tensor-wise; wgrad still high precision.
+``llmint8``           LLM.int8()-style: all THREE matmuls int8 — the baseline
+                      that loses 5.9pp at ViT-Huge (Fig 1 left).
+``fp8_tensorwise``    §2.3 baseline: all matmuls in simulated fp8 (exact E4M3
+                      values) with tensor-wise scaling — diverges at scale
+                      unless feature magnitudes are controlled (Fig 1 right,
+                      Fig 5).
+``switchback_fp8``    SwitchBack with fp8 quantization instead of int8.
+
+Each variant has two implementations with identical semantics:
+the pure-jnp path (default — fast under CPU-interpreted AOT) and the Pallas
+kernel path (``use_kernels=True`` — proves L1→L2→L3 composition; pytest
+asserts the two agree).  The custom VJP makes jax.grad produce exactly the
+quantized backward of Algorithm 1 regardless of path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fp8, quant, ref, switchback
+
+
+def _as2d(x):
+    """Collapse leading dims: linear layers see [batch*seq, features]."""
+    return x.reshape(-1, x.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# highprec
+# ---------------------------------------------------------------------------
+
+
+def linear_highprec(x, w):
+    """Standard full-precision linear: ``Y = X Wᵀ`` with the usual VJP."""
+    return x @ w.T
+
+
+# ---------------------------------------------------------------------------
+# SwitchBack (int8)  — Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _switchback_int8(x, w, use_kernels=False):
+    if use_kernels:
+        return switchback.switchback_fwd(x, w)
+    return ref.switchback_fwd_ref(x, w)
+
+
+def _switchback_int8_fwd(x, w, use_kernels):
+    return _switchback_int8(x, w, use_kernels), (x, w)
+
+
+def _switchback_int8_bwd(use_kernels, res, g):
+    x, w = res
+    if use_kernels:
+        dx = switchback.switchback_dgrad(g, w)
+        dw = switchback.switchback_wgrad(g, x)
+    else:
+        dx = ref.switchback_dgrad_ref(g, w)
+        dw = ref.switchback_wgrad_ref(g, x)
+    return dx, dw
+
+
+_switchback_int8.defvjp(_switchback_int8_fwd, _switchback_int8_bwd)
+
+
+def linear_switchback_int8(x, w, use_kernels=False):
+    """SwitchBack int8 linear (Algorithm 1)."""
+    return _switchback_int8(x, w, use_kernels)
+
+
+# ---------------------------------------------------------------------------
+# SwitchBackQ (int8, row/col-wise weights) — Algorithm 4
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _switchbackq_int8(x, w):
+    return ref.llmint8_fwd_ref(x, w)
+
+
+def _switchbackq_fwd(x, w):
+    return _switchbackq_int8(x, w), (x, w)
+
+
+def _switchbackq_bwd(res, g):
+    x, w = res
+    dx = ref.llmint8_dgrad_ref(g, w)
+    dw = ref.switchback_wgrad_ref(g, x)  # wgrad stays high precision
+    return dx, dw
+
+
+_switchbackq_int8.defvjp(_switchbackq_fwd, _switchbackq_bwd)
+
+
+def linear_switchbackq_int8(x, w):
+    """SwitchBackQ: row-/column-wise weight quant, high-precision wgrad."""
+    return _switchbackq_int8(x, w)
+
+
+# ---------------------------------------------------------------------------
+# LLM.int8()-style — ALL matmuls int8 (the paper's failing baseline)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _llmint8(x, w):
+    return ref.llmint8_fwd_ref(x, w)
+
+
+def _llmint8_fwd(x, w):
+    return _llmint8(x, w), (x, w)
+
+
+def _llmint8_bwd(res, g):
+    x, w = res
+    dx = ref.llmint8_dgrad_ref(g, w)
+    dw = ref.llmint8_wgrad_ref(g, x)  # int8 wgrad: the noisy one
+    return dx, dw
+
+
+_llmint8.defvjp(_llmint8_fwd, _llmint8_bwd)
+
+
+def linear_llmint8(x, w):
+    """LLM.int8()-equivalent: int8 for fwd, dgrad AND wgrad (Fig 1-left
+    baseline; Appendix C explains why the wgrad noise sinks CLIP training)."""
+    return _llmint8(x, w)
+
+
+# ---------------------------------------------------------------------------
+# fp8 tensor-wise (§2.3 baseline) and SwitchBack-fp8
+# ---------------------------------------------------------------------------
+
+
+def _fp8_mm_tensorwise(a, b_t, fmt):
+    """Tensor-wise fp8 matmul a @ b_tᵀ (both operands fp8-rounded)."""
+    av, sa = fp8.fp8_tensorwise_quant_ref(a, fmt)
+    bv, sb = fp8.fp8_tensorwise_quant_ref(b_t, fmt)
+    return fp8.fp8_matmul_dequant_ref(av, bv, sa, sb, fmt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _fp8_tensorwise(x, w, fmt_name="e4m3"):
+    return _fp8_mm_tensorwise(x, w, fp8.FORMATS[fmt_name])
+
+
+def _fp8_tw_fwd(x, w, fmt_name):
+    return _fp8_tensorwise(x, w, fmt_name), (x, w)
+
+
+def _fp8_tw_bwd(fmt_name, res, g):
+    x, w = res
+    fmt = fp8.FORMATS[fmt_name]
+    dx = _fp8_mm_tensorwise(g, w.T, fmt)
+    dw = _fp8_mm_tensorwise(g.T, x.T, fmt)
+    return dx, dw
+
+
+_fp8_tensorwise.defvjp(_fp8_tw_fwd, _fp8_tw_bwd)
+
+
+def linear_fp8_tensorwise(x, w, fmt_name="e4m3"):
+    """fp8 with tensor-wise quantization for inputs, weights AND gradients —
+    the straightforward baseline that diverges at >420M scale (Fig 1 right)."""
+    return _fp8_tensorwise(x, w, fmt_name)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _switchback_fp8(x, w, fmt_name="e4m3"):
+    fmt = fp8.FORMATS[fmt_name]
+    xv, sx = fp8.fp8_rowwise_quant_ref(x, fmt)
+    wv, sw = fp8.fp8_tensorwise_quant_ref(w, fmt)
+    return fp8.fp8_matmul_dequant_ref(xv, wv, sx, sw, fmt)
+
+
+def _switchback_fp8_fwd(x, w, fmt_name):
+    return _switchback_fp8(x, w, fmt_name), (x, w)
+
+
+def _switchback_fp8_bwd(fmt_name, res, g):
+    x, w = res
+    fmt = fp8.FORMATS[fmt_name]
+    gv, sg = fp8.fp8_rowwise_quant_ref(g, fmt)
+    wv, sw = fp8.fp8_tensorwise_quant_ref(w.T, fmt)
+    dx = fp8.fp8_matmul_dequant_ref(gv, wv, sg, sw, fmt)
+    dw = g.T @ x  # high-precision wgrad, as in int8 SwitchBack
+    return dx, dw
+
+
+_switchback_fp8.defvjp(_switchback_fp8_fwd, _switchback_fp8_bwd)
+
+
+def linear_switchback_fp8(x, w, fmt_name="e4m3"):
+    """SwitchBack with fp8 (row-wise X/G, tensor-wise W, high-prec wgrad)."""
+    return _switchback_fp8(x, w, fmt_name)
+
+
+# ---------------------------------------------------------------------------
+# Variant registry
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    "highprec": lambda x, w: linear_highprec(x, w),
+    "switchback_int8": lambda x, w: linear_switchback_int8(x, w, False),
+    "switchback_int8_pallas": lambda x, w: linear_switchback_int8(x, w, True),
+    "switchbackq_int8": linear_switchbackq_int8,
+    "llmint8": linear_llmint8,
+    "fp8_tensorwise": lambda x, w: linear_fp8_tensorwise(x, w, "e4m3"),
+    "fp8_tensorwise_e5m2": lambda x, w: linear_fp8_tensorwise(x, w, "e5m2"),
+    "switchback_fp8": lambda x, w: linear_switchback_fp8(x, w, "e4m3"),
+}
+
+
+def apply_linear(variant: str, x, w):
+    """Apply variant linear over arbitrary leading dims: ``[..., n] → [..., m]``."""
+    fn = VARIANTS[variant]
+    y = fn(_as2d(x), w)
+    return y.reshape(*x.shape[:-1], w.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Non-linear layers (always high precision, as in the paper)
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)

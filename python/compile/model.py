@@ -1,0 +1,118 @@
+"""L2 — the CLIP model: dual tower + contrastive loss + grads.
+
+Two entry points get AOT-lowered (``aot.py``):
+
+* ``loss_and_grads(params, images, tokens)`` →
+  ``(loss, block_magnitudes, *flat_grads)`` — the training-step compute.
+  The optimizer deliberately does NOT live here: it is the paper's
+  *stability* contribution (StableAdamW, update clipping, loss scalar) and
+  is implemented in the rust coordinator (``rust/src/optim``), which
+  consumes these gradients every step.
+* ``encode(params, images, tokens)`` → ``(image_embs, text_embs)`` — the
+  eval path (zero-shot-style classification is computed host-side in rust).
+
+The contrastive loss is the standard symmetric InfoNCE of CLIP [46], with a
+learnable ``logit_scale`` clipped to ≤ ln(100) (the paper clips logit_scale
+even when not clipping gradients, §3.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import vit
+from .configs import ModelConfig
+
+MAX_LOG_SCALE = 4.6052  # ln(100), CLIP's logit_scale clip
+
+
+def init_params(key, cfg: ModelConfig):
+    kv, kt = jax.random.split(key)
+    return {
+        "visual": vit.init_vision_tower(kv, cfg),
+        "text": vit.init_text_tower(kt, cfg),
+        "logit_scale": jnp.asarray(jnp.log(1.0 / 0.07), jnp.float32),
+    }
+
+
+def encode(params, images, tokens, cfg: ModelConfig):
+    """Embed both modalities, L2-normalized."""
+    img, _ = vit.vision_forward(params["visual"], images, cfg)
+    txt, _ = vit.text_forward(params["text"], tokens, cfg)
+    img = img / jnp.linalg.norm(img, axis=-1, keepdims=True)
+    txt = txt / jnp.linalg.norm(txt, axis=-1, keepdims=True)
+    return img, txt
+
+
+def clip_loss(params, images, tokens, cfg: ModelConfig):
+    """Symmetric InfoNCE.  Aux output: per-block feature magnitudes
+    (vision ++ text), the Fig 5/14 probe."""
+    img, vmags = vit.vision_forward(params["visual"], images, cfg)
+    txt, tmags = vit.text_forward(params["text"], tokens, cfg)
+    img = img / jnp.linalg.norm(img, axis=-1, keepdims=True)
+    txt = txt / jnp.linalg.norm(txt, axis=-1, keepdims=True)
+    scale = jnp.exp(jnp.minimum(params["logit_scale"], MAX_LOG_SCALE))
+    logits = scale * img @ txt.T
+    labels = jnp.arange(logits.shape[0])
+    li = jnp.mean(-jax.nn.log_softmax(logits, axis=1)[labels, labels])
+    lt = jnp.mean(-jax.nn.log_softmax(logits, axis=0)[labels, labels])
+    loss = 0.5 * (li + lt)
+    return loss, jnp.concatenate([vmags, tmags])
+
+
+def loss_and_grads(params, images, tokens, cfg: ModelConfig):
+    """value_and_grad over :func:`clip_loss`; returns (loss, mags, grads)."""
+    (loss, mags), grads = jax.value_and_grad(clip_loss, has_aux=True)(
+        params, images, tokens, cfg)
+    return loss, mags, grads
+
+
+# ---------------------------------------------------------------------------
+# Flattening: the HLO interface is a flat list of f32 tensors.  The manifest
+# (aot.py) records the order, names, shapes, and optimizer metadata.
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params):
+    """→ (list of leaves, list of dotted names, treedef)."""
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(params)
+    names, leaves = [], []
+    for path, leaf in leaves_with_path:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append(".".join(parts))
+        leaves.append(leaf)
+    return leaves, names, treedef
+
+
+def param_metadata(name: str, shape) -> dict:
+    """Optimizer metadata per tensor.
+
+    * ``decay`` — weight decay applies to weight matrices only (not LN/bias/
+      embeddings/scales), following OpenCLIP.
+    * ``kind``  — tags the patch embedding (``visual.conv1.weight`` analogue,
+      the Fig 9/16–21 probe target), embeddings, layer-scales, etc.
+    """
+    is_matrix = len(shape) == 2
+    kind = "other"
+    if "patch_embed" in name:
+        kind = "patch_embed"
+    elif "tok_embed" in name or name.endswith(".pos"):
+        kind = "embedding"
+    elif "logit_scale" in name:
+        kind = "logit_scale"
+    elif ".ls1" in name or ".ls2" in name:
+        kind = "layer_scale"
+    elif "ln" in name or "kqn" in name:
+        kind = "norm"
+    elif is_matrix:
+        kind = "weight"
+    decay = kind in ("weight", "patch_embed")
+    return {"kind": kind, "decay": decay}

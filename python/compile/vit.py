@@ -1,0 +1,160 @@
+"""Transformer towers (vision + text) with precision-pluggable linears.
+
+Pre-norm ViT blocks, faithful to the paper's setup (§3.2):
+
+* the patch embedding is a linear layer over pre-patchified input — the
+  analogue of ``visual.conv1.weight`` (the layer whose stale second-moment
+  estimator causes loss spikes, §3.4);
+* a layer-norm sits after the patch embedding, before the transformer
+  ("we add a layer-norm after the patch embedding", §3.2);
+* optional zero-init **layer-scale** (eqs. (5)–(6)):
+  ``x' = x + γ1 * attn(ln(x))``, ``x'' = x' + γ2 * mlp(ln(x'))``;
+* optional **KQ layernorm** (the Fig 5 baseline that still diverges);
+* every q/k/v/out/mlp projection routes through ``layers.apply_linear`` so
+  the whole tower switches between highprec / SwitchBack / LLM.int8 / fp8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .configs import ModelConfig
+
+
+def _init_linear(key, out_dim, in_dim, std=None):
+    std = std if std is not None else (2.0 / (in_dim + out_dim)) ** 0.5
+    return jax.random.normal(key, (out_dim, in_dim), jnp.float32) * std
+
+
+def init_block(key, cfg: ModelConfig):
+    d, r = cfg.dim, cfg.mlp_ratio
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+        "attn": {
+            "wq": _init_linear(ks[0], d, d),
+            "wk": _init_linear(ks[1], d, d),
+            "wv": _init_linear(ks[2], d, d),
+            "wo": _init_linear(ks[3], d, d),
+        },
+        "ln2": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+        "mlp": {
+            "w1": _init_linear(ks[4], r * d, d),
+            "w2": _init_linear(ks[5], d, r * d),
+        },
+    }
+    if cfg.kq_norm:
+        p["kqn"] = {
+            "gq": jnp.ones(d), "bq": jnp.zeros(d),
+            "gk": jnp.ones(d), "bk": jnp.zeros(d),
+        }
+    if cfg.layer_scale:
+        # Zero-init layer-scale: at init the whole tower is the identity,
+        # which is what keeps feature magnitudes small (§2.3, Fig 5 right).
+        p["ls1"] = jnp.zeros(d)
+        p["ls2"] = jnp.zeros(d)
+    return p
+
+
+def attention(bp, x, heads: int, cfg: ModelConfig, causal: bool):
+    """Multi-head self-attention.  Projections use the precision variant;
+    the QKᵀ/softmax/AV core stays high precision (the paper replaces only
+    the nn.Linear layers).  ``bp`` is the whole block param dict (so the
+    optional KQ-layernorm params are visible)."""
+    p = bp["attn"]
+    B, S, d = x.shape
+    hd = d // heads
+    v = cfg.variant
+    q = layers.apply_linear(v, x, p["wq"])
+    k = layers.apply_linear(v, x, p["wk"])
+    if cfg.kq_norm:
+        kq = bp["kqn"]
+        q = layers.layer_norm(q, kq["gq"], kq["bq"])
+        k = layers.layer_norm(k, kq["gk"], kq["bk"])
+    vv = layers.apply_linear(v, x, p["wv"])
+
+    def split(t):
+        return t.reshape(B, S, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, vv = split(q), split(k), split(vv)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / (hd**0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+        scores = jnp.where(mask[None, None], scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = (attn @ vv).transpose(0, 2, 1, 3).reshape(B, S, d)
+    return layers.apply_linear(v, out, p["wo"])
+
+
+def block_apply(p, x, cfg: ModelConfig, causal: bool):
+    """One pre-norm block, with optional layer-scale (paper eqs. (5)–(6))."""
+    h = attention(p, layers.layer_norm(x, p["ln1"]["g"], p["ln1"]["b"]),
+                  cfg.heads, cfg, causal)
+    if cfg.layer_scale:
+        h = h * p["ls1"]
+    x = x + h
+    m = layers.apply_linear(
+        cfg.variant, layers.layer_norm(x, p["ln2"]["g"], p["ln2"]["b"]),
+        p["mlp"]["w1"])
+    m = layers.gelu(m)
+    m = layers.apply_linear(cfg.variant, m, p["mlp"]["w2"])
+    if cfg.layer_scale:
+        m = m * p["ls2"]
+    return x + m
+
+
+def init_vision_tower(key, cfg: ModelConfig):
+    d = cfg.dim
+    ks = jax.random.split(key, cfg.vision_blocks + 3)
+    return {
+        "patch_embed": _init_linear(ks[0], d, cfg.patch_dim),
+        "ln_pre": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+        "pos": jax.random.normal(ks[1], (cfg.patches, d)) * 0.02,
+        "blocks": [init_block(ks[2 + i], cfg) for i in range(cfg.vision_blocks)],
+        "ln_post": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+        "proj": _init_linear(ks[-1], cfg.edim, d, std=d**-0.5),
+    }
+
+
+def init_text_tower(key, cfg: ModelConfig):
+    d = cfg.dim
+    ks = jax.random.split(key, cfg.text_blocks + 3)
+    return {
+        "tok_embed": jax.random.normal(ks[0], (cfg.vocab, d)) * 0.02,
+        "pos": jax.random.normal(ks[1], (cfg.seq, d)) * 0.02,
+        "blocks": [init_block(ks[2 + i], cfg) for i in range(cfg.text_blocks)],
+        "ln_post": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+        "proj": _init_linear(ks[-1], cfg.edim, d, std=d**-0.5),
+    }
+
+
+def vision_forward(p, images, cfg: ModelConfig):
+    """``images [B, patches, patch_dim]`` → (embedding [B, edim],
+    per-block mean-|feature| magnitudes [vision_blocks])."""
+    x = layers.apply_linear(cfg.variant, images, p["patch_embed"])
+    x = layers.layer_norm(x, p["ln_pre"]["g"], p["ln_pre"]["b"])
+    x = x + p["pos"][None]
+    mags = []
+    for bp in p["blocks"]:
+        x = block_apply(bp, x, cfg, causal=False)
+        # E[abs(x_k)] — the Fig 5 (right) / Fig 14 probe.
+        mags.append(jnp.mean(jnp.abs(x)))
+    x = layers.layer_norm(x, p["ln_post"]["g"], p["ln_post"]["b"])
+    pooled = jnp.mean(x, axis=1)
+    emb = layers.apply_linear(cfg.variant, pooled, p["proj"])
+    return emb, jnp.stack(mags)
+
+
+def text_forward(p, tokens, cfg: ModelConfig):
+    """``tokens [B, seq] int32`` → (embedding [B, edim], magnitudes)."""
+    x = jnp.take(p["tok_embed"], tokens, axis=0) + p["pos"][None]
+    mags = []
+    for bp in p["blocks"]:
+        x = block_apply(bp, x, cfg, causal=True)
+        mags.append(jnp.mean(jnp.abs(x)))
+    x = layers.layer_norm(x, p["ln_post"]["g"], p["ln_post"]["b"])
+    pooled = jnp.mean(x, axis=1)
+    emb = layers.apply_linear(cfg.variant, pooled, p["proj"])
+    return emb, jnp.stack(mags)

@@ -1,0 +1,89 @@
+"""fp8 simulation correctness: our arithmetic emulation must agree
+bit-exactly with ml_dtypes' float8 types (within range), and the Pallas
+kernel must agree with the jnp reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fp8
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def via_mldtypes(x, dtype):
+    return np.asarray(jnp.asarray(x).astype(dtype).astype(jnp.float32))
+
+
+@given(seed=st.integers(0, 2**31), scale=st.sampled_from([1e-4, 1e-2, 1.0, 50.0, 400.0]))
+def test_e4m3_matches_mldtypes_bit_exactly(seed, scale):
+    x = scale * jax.random.normal(jax.random.PRNGKey(seed), (2048,))
+    x = jnp.clip(x, -448.0, 448.0)
+    ours = np.asarray(fp8.fp8_round_ref(x, fp8.E4M3))
+    theirs = via_mldtypes(x, jnp.float8_e4m3fn)
+    np.testing.assert_array_equal(ours, theirs)
+
+
+@given(seed=st.integers(0, 2**31), scale=st.sampled_from([1e-4, 1.0, 1000.0, 5e4]))
+def test_e5m2_matches_mldtypes_bit_exactly(seed, scale):
+    x = scale * jax.random.normal(jax.random.PRNGKey(seed), (2048,))
+    x = jnp.clip(x, -57344.0, 57344.0)
+    ours = np.asarray(fp8.fp8_round_ref(x, fp8.E5M2))
+    theirs = via_mldtypes(x, jnp.float8_e5m2)
+    np.testing.assert_array_equal(ours, theirs)
+
+
+def test_subnormal_grid_e4m3():
+    # E4M3 subnormals: multiples of 2^-9 below 2^-6
+    q = 2.0 ** -9
+    for m in range(8):
+        v = m * q
+        assert float(fp8.fp8_round_ref(jnp.array(v))) == v
+    # halfway rounds to even
+    assert float(fp8.fp8_round_ref(jnp.array(1.5 * q))) == 2 * q
+    assert float(fp8.fp8_round_ref(jnp.array(0.5 * q))) == 0.0
+
+
+def test_saturation():
+    assert float(fp8.fp8_round_ref(jnp.array(1e9))) == 448.0
+    assert float(fp8.fp8_round_ref(jnp.array(-1e9))) == -448.0
+
+
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**31))
+def test_pallas_kernel_matches_ref(n, seed):
+    x = 100.0 * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    got = np.asarray(fp8.fp8_round(x))
+    want = np.asarray(fp8.fp8_round_ref(x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_kernel_2d_shapes():
+    x = jax.random.normal(jax.random.PRNGKey(0), (37, 53))
+    got = np.asarray(fp8.fp8_round(x))
+    want = np.asarray(fp8.fp8_round_ref(x))
+    assert got.shape == (37, 53)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(seed=st.integers(0, 2**31))
+def test_tensorwise_fp8_quant_dequant_error_bounded(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64, 64))
+    v, state = fp8.fp8_tensorwise_quant_ref(x)
+    back = np.asarray(v) * float(state) / fp8.E4M3.max_value
+    # e4m3 relative error ≤ 2^-4 per value for normals (3 mantissa bits)
+    err = np.abs(back - np.asarray(x))
+    tol = np.maximum(np.abs(np.asarray(x)) * 2.0**-4, float(state) * 2.0**-9)
+    assert np.all(err <= tol + 1e-7)
+
+
+def test_fp8_matmul_dequant_identity_scaling():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+    w = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+    xv, sx = fp8.fp8_rowwise_quant_ref(x)
+    wv, sw = fp8.fp8_tensorwise_quant_ref(w)
+    out = fp8.fp8_matmul_dequant_ref(xv, wv, sx, sw)
+    exact = x @ w.T
+    rel = float(jnp.linalg.norm(out - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.1, rel

@@ -1,0 +1,163 @@
+"""L2 correctness: precision-pluggable linear layers (custom VJPs) and the
+CLIP model (shapes, loss, gradient structure, variant parity)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, layers, model
+from compile.kernels import ref
+
+
+def randn(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+# ---------------------------------------------------------------------------
+# custom VJPs implement exactly the paper's backward rules
+# ---------------------------------------------------------------------------
+
+
+def test_switchback_vjp_uses_quantized_dgrad_and_exact_wgrad():
+    x = randn(0, (32, 24))
+    w = randn(1, (16, 24), 0.1)
+    g = randn(2, (32, 16))
+    y, vjp = jax.vjp(lambda x, w: layers.linear_switchback_int8(x, w), x, w)
+    dx, dw = vjp(g)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref.switchback_fwd_ref(x, w)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(ref.switchback_dgrad_ref(g, w)), atol=1e-5)
+    # wgrad must be the EXACT high-precision product (Algorithm 1)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(g.T @ x), atol=1e-5)
+
+
+def test_llmint8_vjp_quantizes_wgrad_too():
+    x = randn(3, (32, 24))
+    w = randn(4, (16, 24), 0.1)
+    g = randn(5, (32, 16))
+    _, vjp = jax.vjp(lambda x, w: layers.linear_llmint8(x, w), x, w)
+    _, dw = vjp(g)
+    exact = np.asarray(g.T @ x)
+    got = np.asarray(dw)
+    np.testing.assert_allclose(got, np.asarray(ref.llmint8_wgrad_ref(g, x)), atol=1e-5)
+    # and it is NOT the exact product (quantization noise present)
+    assert np.abs(got - exact).max() > 1e-4
+
+
+def test_pallas_and_jnp_switchback_paths_agree():
+    x = randn(6, (48, 40))
+    w = randn(7, (24, 40), 0.1)
+    y_jnp = layers.linear_switchback_int8(x, w, use_kernels=False)
+    y_pls = layers.linear_switchback_int8(x, w, use_kernels=True)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_pls), atol=1e-4)
+    g = randn(8, (48, 24))
+    _, vjp_a = jax.vjp(lambda x, w: layers.linear_switchback_int8(x, w, False), x, w)
+    _, vjp_b = jax.vjp(lambda x, w: layers.linear_switchback_int8(x, w, True), x, w)
+    for a, b in zip(vjp_a(g), vjp_b(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_highprec_linear_grad_is_standard():
+    x = randn(9, (8, 6))
+    w = randn(10, (4, 6))
+    g = randn(11, (8, 4))
+    _, vjp = jax.vjp(lambda x, w: layers.linear_highprec(x, w), x, w)
+    dx, dw = vjp(g)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(g @ w), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(g.T @ x), atol=1e-5)
+
+
+def test_fp8_tensorwise_linear_is_close_but_not_exact():
+    x = randn(12, (32, 24))
+    w = randn(13, (16, 24), 0.1)
+    y = layers.linear_fp8_tensorwise(x, w)
+    exact = x @ w.T
+    rel = float(jnp.linalg.norm(y - exact) / jnp.linalg.norm(exact))
+    assert 0 < rel < 0.15, rel
+
+
+def test_apply_linear_handles_3d():
+    x = randn(14, (4, 5, 8))
+    w = randn(15, (6, 8))
+    y = layers.apply_linear("switchback_int8", x, w)
+    assert y.shape == (4, 5, 6)
+
+
+# ---------------------------------------------------------------------------
+# model-level properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def micro_setup():
+    cfg = configs.make_config("micro")
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    B = 8
+    imgs = randn(20, (B, cfg.patches, cfg.patch_dim))
+    toks = jnp.asarray(
+        np.random.RandomState(0).randint(0, cfg.vocab, size=(B, cfg.seq)), jnp.int32
+    )
+    return cfg, params, imgs, toks
+
+
+def test_loss_at_init_is_ln_batch(micro_setup):
+    cfg, params, imgs, toks = micro_setup
+    loss, mags = model.clip_loss(params, imgs, toks, cfg)
+    # at init embeddings are ~random: loss ≈ ln(B)
+    assert abs(float(loss) - np.log(imgs.shape[0])) < 0.5
+    assert mags.shape == (cfg.vision_blocks + cfg.text_blocks,)
+
+
+def test_grads_cover_every_parameter(micro_setup):
+    cfg, params, imgs, toks = micro_setup
+    _, _, grads = model.loss_and_grads(params, imgs, toks, cfg)
+    leaves, names, _ = model.flatten_params(params)
+    gleaves = jax.tree_util.tree_leaves(grads)
+    assert len(gleaves) == len(leaves)
+    nonzero = sum(bool(np.any(np.asarray(g) != 0)) for g in gleaves)
+    # everything should receive gradient except possibly a few norms
+    assert nonzero >= len(gleaves) - 2, f"{nonzero}/{len(gleaves)}"
+
+
+def test_encode_embeddings_are_normalized(micro_setup):
+    cfg, params, imgs, toks = micro_setup
+    img, txt = model.encode(params, imgs, toks, cfg)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(img), axis=-1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(txt), axis=-1), 1.0, atol=1e-5)
+
+
+def test_layer_scale_zero_init_makes_towers_identity_like():
+    cfg = configs.make_config("micro", layer_scale=True)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    imgs = randn(21, (4, cfg.patches, cfg.patch_dim))
+    toks = jnp.zeros((4, cfg.seq), jnp.int32)
+    _, mags = model.clip_loss(params, imgs, toks, cfg)
+    # with γ=0 every block is the identity: magnitudes are constant across depth
+    vm = np.asarray(mags[: cfg.vision_blocks])
+    assert np.allclose(vm, vm[0], rtol=1e-4), vm
+
+
+def test_variant_losses_agree_at_init():
+    # quantization is noise, not bias: all variants should start near ln(B)
+    imgs = randn(22, (8, 16, 48))
+    toks = jnp.zeros((8, 16), jnp.int32)
+    losses = {}
+    for variant in ["highprec", "switchback_int8", "llmint8", "fp8_tensorwise",
+                    "switchback_fp8"]:
+        cfg = configs.make_config("micro", variant=variant)
+        params = model.init_params(jax.random.PRNGKey(0), cfg)
+        loss, _ = model.clip_loss(params, imgs, toks, cfg)
+        losses[variant] = float(loss)
+    base = losses["highprec"]
+    for v, l in losses.items():
+        assert abs(l - base) < 0.2, f"{v}: {l} vs {base}"
+
+
+def test_param_metadata_tags():
+    assert model.param_metadata("visual.patch_embed", (64, 48))["kind"] == "patch_embed"
+    assert model.param_metadata("visual.patch_embed", (64, 48))["decay"] is True
+    assert model.param_metadata("text.tok_embed", (512, 64))["kind"] == "embedding"
+    assert model.param_metadata("visual.blocks.0.ln1.g", (64,))["decay"] is False
+    assert model.param_metadata("visual.blocks.0.ls1", (64,))["kind"] == "layer_scale"
+    assert model.param_metadata("logit_scale", ())["kind"] == "logit_scale"
+    assert model.param_metadata("visual.blocks.0.attn.wq", (64, 64))["decay"] is True

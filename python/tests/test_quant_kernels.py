@@ -1,0 +1,177 @@
+"""L1 correctness: Pallas quantization kernels vs the pure-jnp oracles.
+
+The hypothesis sweeps are the contract: for ANY shape/seed in range, the
+Pallas kernel must agree with ref.py — int8 codes bit-for-bat, dequantized
+floats to tight tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref, switchback
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def randn(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+# ---------------------------------------------------------------------------
+# row-wise / tensor-wise quantization
+# ---------------------------------------------------------------------------
+
+
+@given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 80),
+    seed=st.integers(0, 2**31),
+    scale=st.sampled_from([1e-3, 1.0, 100.0]),
+)
+def test_rowwise_quant_matches_ref(rows, cols, seed, scale):
+    x = randn(seed, (rows, cols), scale)
+    kc, ks = quant.rowwise_quant(x)
+    rc, rs = ref.rowwise_quant_ref(x)
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(ks), np.asarray(rs), rtol=1e-6)
+
+
+@given(rows=st.integers(1, 200), cols=st.integers(1, 64), seed=st.integers(0, 2**31))
+def test_tensorwise_quant_matches_ref(rows, cols, seed):
+    x = randn(seed, (rows, cols))
+    kc, ks = quant.tensorwise_quant(x)
+    rc, rs = ref.tensorwise_quant_ref(x)
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    assert float(ks) == pytest.approx(float(rs))
+
+
+@given(rows=st.integers(1, 150), cols=st.integers(1, 150), seed=st.integers(0, 2**31))
+def test_quant_transpose_is_quant_then_transpose(rows, cols, seed):
+    w = randn(seed, (rows, cols))
+    kc, ks = quant.tensorwise_quant_transpose(w)
+    rc, rs = ref.tensorwise_quant_ref(w)
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc).T)
+    assert float(ks) == pytest.approx(float(rs))
+
+
+def test_zero_input_is_total():
+    x = jnp.zeros((5, 7))
+    kc, ks = quant.rowwise_quant(x)
+    assert np.all(np.asarray(kc) == 0)
+    assert np.all(np.asarray(ks) == 1.0)
+
+
+def test_extreme_values_clip_to_int8_range():
+    x = jnp.array([[1e30, -1e30, 1.0]])
+    kc, _ = quant.rowwise_quant(x)
+    arr = np.asarray(kc)
+    assert arr.min() >= -127 and arr.max() <= 127
+
+
+@given(rows=st.integers(1, 100), cols=st.integers(1, 50), seed=st.integers(0, 2**31))
+def test_dequant_roundtrip_error_bounded(rows, cols, seed):
+    x = randn(seed, (rows, cols))
+    c, s = quant.rowwise_quant(x)
+    back = quant.dequant_rowwise(c, s)
+    step = np.asarray(s)[:, None] / 127.0
+    assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= 0.5 * step + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused int8 matmul + dequant
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 70),
+    k=st.integers(1, 90),
+    m=st.integers(1, 70),
+    seed=st.integers(0, 2**31),
+)
+def test_int8_matmul_dequant_matches_ref(b, k, m, seed):
+    x = randn(seed, (b, k))
+    w = randn(seed + 1, (m, k))
+    xq, sx = ref.rowwise_quant_ref(x)
+    wq, sw = ref.tensorwise_quant_ref(w)
+    got = switchback.int8_matmul_dequant(xq, wq, sx, sw)
+    want = ref.int8_matmul_dequant_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@given(
+    b=st.integers(1, 50),
+    k=st.integers(1, 70),
+    m=st.integers(1, 50),
+    seed=st.integers(0, 2**31),
+)
+def test_int8_matmul_rowcol_matches_ref(b, k, m, seed):
+    x = randn(seed, (b, k))
+    w = randn(seed + 1, (m, k))
+    xq, sx = ref.rowwise_quant_ref(x)
+    wq, sw = ref.rowwise_quant_ref(w)
+    got = switchback.int8_matmul_dequant_rowcol(xq, wq, sx, sw)
+    want = ref.int8_matmul_dequant_rowcol_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_int8_matmul_accumulates_in_int32():
+    # 256 * (127*127) = 4129024 > 2^16: breaks if accumulation is narrow;
+    # exact int32 accumulation reproduces it bit-for-bit after dequant.
+    k = 256
+    x = jnp.ones((1, k))
+    w = jnp.ones((1, k))
+    xq, sx = ref.rowwise_quant_ref(x)
+    wq, sw = ref.tensorwise_quant_ref(w)
+    out = switchback.int8_matmul_dequant(xq, wq, sx, sw)
+    assert float(out[0, 0]) == pytest.approx(k, rel=1e-6)
+
+
+def test_blocks_smaller_than_problem():
+    # grid > 1 in every dimension exercises the K-accumulation loop
+    x = randn(3, (300, 260))
+    w = randn(4, (290, 260))
+    xq, sx = ref.rowwise_quant_ref(x)
+    wq, sw = ref.tensorwise_quant_ref(w)
+    got = switchback.int8_matmul_dequant(xq, wq, sx, sw, block_m=128, block_n=128, block_k=128)
+    want = ref.int8_matmul_dequant_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# whole-layer SwitchBack ops
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 64),
+    n=st.integers(1, 64),
+    m=st.integers(1, 64),
+    seed=st.integers(0, 2**31),
+)
+def test_switchback_fwd_dgrad_match_ref(b, n, m, seed):
+    x = randn(seed, (b, n))
+    w = randn(seed + 1, (m, n), 0.1)
+    g = randn(seed + 2, (b, m))
+    np.testing.assert_allclose(
+        np.asarray(switchback.switchback_fwd(x, w)),
+        np.asarray(ref.switchback_fwd_ref(x, w)),
+        atol=1e-4, rtol=1e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(switchback.switchback_dgrad(g, w)),
+        np.asarray(ref.switchback_dgrad_ref(g, w)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_switchback_quantization_noise_is_small():
+    x = randn(0, (128, 256))
+    w = randn(1, (64, 256), 0.05)
+    exact = x @ w.T
+    q = ref.switchback_fwd_ref(x, w)
+    rel = float(jnp.linalg.norm(q - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.03, rel

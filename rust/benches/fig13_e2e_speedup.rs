@@ -1,0 +1,60 @@
+//! Fig 4 (right) + Fig 13: end-to-end transformer-block training-step
+//! speedups across model sizes, for SwitchBack vs the standard layer
+//! (Fig 4 right) and vs LLM.int8() (Fig 13).
+//!
+//! Paper setup: CLIP ViT-{M,B,L,H} on 4×A100; every linear in the block is
+//! replaced per variant, everything else (layernorm/softmax/residuals)
+//! stays float.  Here: full fwd+bwd of a transformer block on the native
+//! substrate at the matching widths.  SwitchBackM is included to show the
+//! Algorithm 3 memory/runtime trade.
+
+use switchback::nn::{LinearKind, TransformerBlock};
+use switchback::tensor::{Matrix, Rng};
+use switchback::util::bench::bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    // (name, dim) ~ CLIP ViT-M/B/L/H widths
+    let sizes: &[(&str, usize)] = if quick {
+        &[("vit-m", 512), ("vit-b", 768)]
+    } else {
+        &[("vit-m", 512), ("vit-b", 768), ("vit-l", 1024)]
+    };
+    let samples = 3;
+    let seq = 32;
+    let batch = 2;
+    println!("== Fig 4 (right) + Fig 13: end-to-end block train-step times ==\n");
+    println!("  size    dim    standard    switchback  switchbackM  llmint8     | sb vs std   llm vs std");
+    let mut table = vec![];
+    for &(name, dim) in sizes {
+        let heads = dim / 64;
+        let mut rng = Rng::seed(3);
+        let x = Matrix::randn(batch * seq, dim, 0.5, &mut rng);
+        let mut times = vec![];
+        for kind in [
+            LinearKind::Standard,
+            LinearKind::SwitchBack,
+            LinearKind::SwitchBackM,
+            LinearKind::LlmInt8,
+        ] {
+            let blk = TransformerBlock::new(dim, heads, seq, kind, &mut Rng::seed(5));
+            let r = bench(kind.label(), samples, || {
+                let _ = blk.train_step_compute(&x);
+            });
+            times.push(r.median_ns / 1e6);
+        }
+        let sb = 100.0 * (times[0] - times[1]) / times[0];
+        let llm = 100.0 * (times[0] - times[3]) / times[0];
+        println!(
+            "  {name:<6} {dim:<6} {:>9.2}   {:>9.2}   {:>9.2}   {:>9.2}   | {sb:+8.1}%   {llm:+8.1}%",
+            times[0], times[1], times[2], times[3]
+        );
+        table.push((name, sb, llm));
+    }
+    println!("\n== summary: % end-to-end speedup over the standard layer ==");
+    for (name, sb, llm) in &table {
+        println!("  {name:<6} switchback {sb:+6.1}%   llmint8 {llm:+6.1}%");
+    }
+    println!("\n  (paper Fig 4-right: SwitchBack speedup grows ViT-B→ViT-H, 13–25%;");
+    println!("   paper Fig 13: LLM.int8() provides NO speedup at these scales)");
+}

@@ -1,0 +1,49 @@
+//! Fig 4 (left): % of a SwitchBack linear layer's time spent in quantize
+//! ops, as a function of dim.  Paper: ≤25%, falling to ~10% at large dim
+//! (quantize is O(n²) against the matmul's O(n³)).
+
+use switchback::gemm::{gemm_i8_nt_rowtensor, SwitchBackOps};
+use switchback::quant::{rowwise_quant, tensorwise_quant, tensorwise_quant_transpose};
+use switchback::tensor::{Matrix, Rng};
+use switchback::util::bench::bench;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dims: &[usize] = if quick { &[128, 256] } else { &[128, 256, 512] };
+    let samples = 3;
+    println!("== Fig 4 (left): fraction of SwitchBack layer time in quantize ops ==\n");
+    println!("  dim     quantize-ms   matmul-ms   quant %");
+    for &dim in dims {
+        let b = 2 * dim; // see fig3 note
+        let (m, n) = (4 * dim, dim);
+        let mut rng = Rng::seed(7);
+        let x = Matrix::randn(b, n, 1.0, &mut rng);
+        let w = Matrix::randn(m, n, 0.05, &mut rng);
+        let g = Matrix::randn(b, m, 1.0, &mut rng);
+        let xq = rowwise_quant(&x);
+        let wq = tensorwise_quant(&w);
+        let gq = rowwise_quant(&g);
+        let wtq = tensorwise_quant_transpose(&w);
+
+        let q = bench("quant", samples, || {
+            let _ = rowwise_quant(&x);
+            let _ = tensorwise_quant(&w);
+            let _ = rowwise_quant(&g);
+            let _ = tensorwise_quant_transpose(&w);
+        })
+        .median_ns;
+        let mm = bench("matmuls", samples, || {
+            let _ = gemm_i8_nt_rowtensor(&xq, &wq);
+            let _ = gemm_i8_nt_rowtensor(&gq, &wtq);
+            let _ = SwitchBackOps::wgrad(&g, &x);
+        })
+        .median_ns;
+        let frac = 100.0 * q / (q + mm);
+        println!(
+            "  {dim:<6} {:>10.3}   {:>10.3}   {frac:5.1}%",
+            q / 1e6,
+            mm / 1e6
+        );
+    }
+    println!("\n  (paper: ≤25%, decreasing with dim)");
+}

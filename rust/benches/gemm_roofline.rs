@@ -1,0 +1,49 @@
+//! GEMM roofline: absolute throughput of the native kernels (GFLOP/s and
+//! effective GB/s), used by EXPERIMENTS.md §Perf to argue how far the
+//! substrate is from this machine's practical roofline, and to track the
+//! perf-pass iterations.
+
+use switchback::gemm::{gemm_f32_nn, gemm_f32_nt, gemm_i8_nt_rowtensor};
+use switchback::quant::{rowwise_quant, tensorwise_quant};
+use switchback::tensor::{Matrix, Rng};
+use switchback::util::bench::bench;
+use switchback::util::threads::num_threads;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let sizes: &[usize] = if quick { &[256] } else { &[256, 512] };
+    let samples = 3;
+    println!("threads: {}\n", num_threads());
+    println!("  n       kernel          median-ms   GFLOP/s (2n³/t)");
+    for &n in sizes {
+        let mut rng = Rng::seed(1);
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let flops = 2.0 * (n as f64).powi(3);
+        let aq = rowwise_quant(&a);
+        let bq = tensorwise_quant(&b);
+
+        let r1 = bench("f32 NT", samples, || {
+            let _ = gemm_f32_nt(&a, &b);
+        });
+        let r2 = bench("f32 NN", samples, || {
+            let _ = gemm_f32_nn(&a, &b);
+        });
+        let r3 = bench("i8 NT (+dequant)", samples, || {
+            let _ = gemm_i8_nt_rowtensor(&aq, &bq);
+        });
+        for r in [&r1, &r2, &r3] {
+            println!(
+                "  {n:<7} {:<15} {:>9.3}   {:>8.1}",
+                r.name,
+                r.median_ns / 1e6,
+                flops / r.median_ns
+            );
+        }
+        println!(
+            "  {n:<7} int8/f32-NT ratio: {:.2}x",
+            r1.median_ns / r3.median_ns
+        );
+        println!();
+    }
+}

@@ -1,0 +1,197 @@
+//! Configuration system: everything a training run or experiment sweep
+//! needs.  Serializable to JSON (via the in-tree [`crate::util::json`]
+//! writer) so experiment presets can be recorded alongside their logs.
+
+use crate::data::Shift;
+use crate::util::json::ObjWriter;
+
+/// Which optimizer drives the run (paper §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// plain AdamW [37]
+    Adamw,
+    /// AdamW + AdaFactor update clipping — the paper's StableAdamW (Alg. 2)
+    StableAdamw,
+    /// Lion (Appendix E baseline)
+    Lion,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "adamw" => Some(Self::Adamw),
+            "stable_adamw" => Some(Self::StableAdamw),
+            "lion" => Some(Self::Lion),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Adamw => "adamw",
+            Self::StableAdamw => "stable_adamw",
+            Self::Lion => "lion",
+        }
+    }
+}
+
+/// Loss-scaler policy (§3.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScalerKind {
+    /// no fp16 simulation (pure f32/bf16-style training)
+    #[default]
+    None,
+    /// PyTorch-style dynamic global scaler (skip whole step, halve/double)
+    DynamicGlobal,
+    /// the paper's fixed tensor-level scaler (skip offending tensors only)
+    FixedTensor,
+}
+
+impl ScalerKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(Self::None),
+            "dynamic_global" => Some(Self::DynamicGlobal),
+            "fixed_tensor" => Some(Self::FixedTensor),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::DynamicGlobal => "dynamic_global",
+            Self::FixedTensor => "fixed_tensor",
+        }
+    }
+}
+
+/// One training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// artifact name (e.g. "switchback_int8_small_b32") under `artifact_dir`
+    pub artifact: String,
+    pub artifact_dir: String,
+    pub steps: u64,
+    /// linear-warmup steps (paper: 25% of the run)
+    pub warmup: u64,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub optimizer: OptimizerKind,
+    /// β₂ schedule 1 − t^{−λ} (Fig 15); overrides beta2 when set
+    pub beta2_lambda: Option<f32>,
+    /// global-norm gradient clipping (Fig 10 baseline); None = off
+    pub grad_clip: Option<f32>,
+    pub scaler: ScalerKind,
+    pub seed: u64,
+    /// re-initialize params from the manifest init specs with this seed
+    /// instead of loading params.bin (seed 0 keeps the jax init exactly)
+    pub reinit: bool,
+    /// scheduled distribution shifts (the spike trigger; DESIGN.md)
+    pub shifts: Vec<Shift>,
+    /// log feature magnitudes / grad probes every N steps (0 = never)
+    pub probe_every: u64,
+    /// JSONL metrics path (None = in-memory only)
+    pub metrics_path: Option<String>,
+    /// evaluate zero-shot accuracy every N steps (0 = only at the end)
+    pub eval_every: u64,
+    /// examples per concept in the eval set
+    pub eval_per_concept: usize,
+}
+
+impl TrainConfig {
+    /// Baseline config used by the experiment presets: paper-shaped
+    /// (lr 2e-3, wd 0.2, 25% warmup) scaled to a short run.
+    pub fn preset(artifact: &str, steps: u64) -> Self {
+        Self {
+            artifact: artifact.to_string(),
+            artifact_dir: "artifacts".into(),
+            steps,
+            warmup: steps / 4,
+            lr: 2e-3,
+            weight_decay: 0.2,
+            beta1: 0.9,
+            beta2: 0.999,
+            optimizer: OptimizerKind::StableAdamw,
+            beta2_lambda: None,
+            grad_clip: None,
+            scaler: ScalerKind::None,
+            seed: 0,
+            reinit: false,
+            shifts: vec![],
+            probe_every: 1,
+            metrics_path: None,
+            eval_every: 0,
+            eval_per_concept: 4,
+        }
+    }
+
+    pub fn with_optimizer(mut self, opt: OptimizerKind, beta2: f32) -> Self {
+        self.optimizer = opt;
+        self.beta2 = beta2;
+        self
+    }
+
+    /// JSON summary for run logs (records the exact knob settings).
+    pub fn to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_str("artifact", &self.artifact)
+            .field_u64("steps", self.steps)
+            .field_u64("warmup", self.warmup)
+            .field_f32("lr", self.lr)
+            .field_f32("weight_decay", self.weight_decay)
+            .field_f32("beta1", self.beta1)
+            .field_f32("beta2", self.beta2)
+            .field_str("optimizer", self.optimizer.label())
+            .field_str("scaler", self.scaler.label())
+            .field_u64("seed", self.seed)
+            .field_bool("reinit", self.reinit);
+        if let Some(l) = self.beta2_lambda {
+            w.field_f32("beta2_lambda", l);
+        }
+        if let Some(c) = self.grad_clip {
+            w.field_f32("grad_clip", c);
+        }
+        if !self.shifts.is_empty() {
+            w.field_u64("n_shifts", self.shifts.len() as u64);
+        }
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn preset_is_paper_shaped() {
+        let cfg = TrainConfig::preset("highprec_micro_b32", 100);
+        assert_eq!(cfg.warmup, 25);
+        assert_eq!(cfg.lr, 2e-3);
+        assert_eq!(cfg.weight_decay, 0.2);
+        assert_eq!(cfg.optimizer, OptimizerKind::StableAdamw);
+    }
+
+    #[test]
+    fn kind_labels_roundtrip() {
+        for k in [OptimizerKind::Adamw, OptimizerKind::StableAdamw, OptimizerKind::Lion] {
+            assert_eq!(OptimizerKind::parse(k.label()), Some(k));
+        }
+        for s in [ScalerKind::None, ScalerKind::DynamicGlobal, ScalerKind::FixedTensor] {
+            assert_eq!(ScalerKind::parse(s.label()), Some(s));
+        }
+        assert_eq!(OptimizerKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn to_json_is_valid() {
+        let mut cfg = TrainConfig::preset("a", 10).with_optimizer(OptimizerKind::Adamw, 0.99);
+        cfg.grad_clip = Some(1.0);
+        let v = parse(&cfg.to_json()).unwrap();
+        assert_eq!(v.get("optimizer").unwrap().as_str(), Some("adamw"));
+        assert_eq!(v.get("grad_clip").unwrap().as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,81 @@
+//! Zero-shot-style evaluation — the ImageNet-with-80-prompts analogue.
+//!
+//! Each concept's canonical caption plays the role of a class prompt: we
+//! embed every canonical caption once, embed held-out images, and classify
+//! each image to the nearest caption embedding (cosine).  Accuracy over
+//! concepts is the headline metric of Fig 1 / Fig 10.
+
+use crate::data::SyntheticClip;
+use crate::runtime::Artifact;
+use anyhow::Result;
+
+/// Cosine-similarity argmax classification accuracy.
+pub fn zero_shot_accuracy(
+    artifact: &Artifact,
+    params: &[Vec<f32>],
+    data: &SyntheticClip,
+    per_concept: usize,
+) -> Result<f32> {
+    let m = &artifact.manifest;
+    let batch = m.batch;
+    let edim = m.config.embed_dim;
+    let n_concepts = data.config().n_concepts;
+
+    // 1) class-prompt embeddings: encode canonical captions (batched,
+    //    padded; images input is a dummy for the text side of encode).
+    let img_len = m.config.patches * m.config.patch_dim;
+    let mut class_embs = vec![0.0f32; n_concepts * edim];
+    let dummy_images = vec![0.0f32; batch * img_len];
+    let mut c = 0;
+    while c < n_concepts {
+        let take = batch.min(n_concepts - c);
+        let mut tokens = Vec::with_capacity(batch * m.config.seq);
+        for i in 0..batch {
+            let concept = if i < take { c + i } else { 0 };
+            tokens.extend(data.canonical_caption(concept));
+        }
+        let (_, txt) = artifact.encode(params, &dummy_images, &tokens)?;
+        for i in 0..take {
+            class_embs[(c + i) * edim..(c + i + 1) * edim]
+                .copy_from_slice(&txt[i * edim..(i + 1) * edim]);
+        }
+        c += take;
+    }
+
+    // 2) eval images, batched + padded.
+    let eval = data.eval_set(per_concept);
+    let n_eval = eval.concepts.len();
+    let mut correct = 0usize;
+    let mut idx = 0;
+    while idx < n_eval {
+        let take = batch.min(n_eval - idx);
+        let mut images = vec![0.0f32; batch * img_len];
+        let mut tokens = vec![0i32; batch * m.config.seq];
+        for i in 0..take {
+            images[i * img_len..(i + 1) * img_len]
+                .copy_from_slice(&eval.images[(idx + i) * img_len..(idx + i + 1) * img_len]);
+            tokens[i * m.config.seq..(i + 1) * m.config.seq].copy_from_slice(
+                &eval.tokens[(idx + i) * m.config.seq..(idx + i + 1) * m.config.seq],
+            );
+        }
+        let (img_embs, _) = artifact.encode(params, &images, &tokens)?;
+        for i in 0..take {
+            let emb = &img_embs[i * edim..(i + 1) * edim];
+            let mut best = 0usize;
+            let mut best_sim = f32::NEG_INFINITY;
+            for k in 0..n_concepts {
+                let ce = &class_embs[k * edim..(k + 1) * edim];
+                let sim: f32 = emb.iter().zip(ce).map(|(a, b)| a * b).sum();
+                if sim > best_sim {
+                    best_sim = sim;
+                    best = k;
+                }
+            }
+            if best == eval.concepts[idx + i] {
+                correct += 1;
+            }
+        }
+        idx += take;
+    }
+    Ok(correct as f32 / n_eval as f32)
+}

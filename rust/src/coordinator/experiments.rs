@@ -1,0 +1,597 @@
+//! Experiment registry: every figure in the paper, regenerated.
+//!
+//! Each `fig*` function builds its run matrix, executes it through the
+//! full stack (artifact → PJRT → rust optimizer → telemetry), writes JSONL
+//! logs under `results/<exp>/`, and prints the figure-shaped summary the
+//! paper reports (who wins, by how much, where the crossovers are).  See
+//! DESIGN.md's experiment index for the exp ↔ figure mapping and
+//! EXPERIMENTS.md for recorded paper-vs-measured outcomes.
+
+use crate::config::{OptimizerKind, ScalerKind, TrainConfig};
+use crate::coordinator::trainer::{RunResult, Trainer};
+use crate::data::Shift;
+use crate::quant;
+use crate::runtime::Runtime;
+use crate::telemetry::{
+    detect_loss_spikes, detect_rms_spikes, lead_lag_from_events, SpikeConfig,
+};
+use crate::tensor::Rng;
+use anyhow::{bail, Result};
+
+/// Shared context for all experiments.
+pub struct ExpCtx {
+    pub runtime: Runtime,
+    /// global step-count override (0 = per-experiment default)
+    pub steps: u64,
+    pub out_dir: String,
+    pub verbose: bool,
+    /// compiled-artifact cache: sweeps reuse executables across runs
+    /// (compilation dominates short-run wall time — EXPERIMENTS.md §Perf)
+    cache: std::cell::RefCell<
+        std::collections::HashMap<String, std::rc::Rc<crate::runtime::Artifact>>,
+    >,
+}
+
+impl ExpCtx {
+    pub fn new(runtime: Runtime, steps: u64, out_dir: String, verbose: bool) -> Self {
+        Self { runtime, steps, out_dir, verbose, cache: Default::default() }
+    }
+
+    fn steps_or(&self, default: u64) -> u64 {
+        if self.steps > 0 {
+            self.steps
+        } else {
+            default
+        }
+    }
+
+    fn artifact(&self, dir: &str, name: &str) -> Result<std::rc::Rc<crate::runtime::Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let a = std::rc::Rc::new(self.runtime.load(dir, name)?);
+        self.cache.borrow_mut().insert(name.to_string(), a.clone());
+        Ok(a)
+    }
+
+    fn run(&self, exp: &str, tag: &str, mut cfg: TrainConfig) -> Result<RunResult> {
+        cfg.metrics_path =
+            Some(format!("{}/{}/{}.jsonl", self.out_dir, exp, tag));
+        let artifact = self.artifact(&cfg.artifact_dir, &cfg.artifact)?;
+        let mut trainer = Trainer::with_artifact(&self.runtime, artifact, cfg);
+        let res = trainer.run(self.verbose)?;
+        println!(
+            "  [{tag}] tail-loss {:7.4}  acc {}  {}  ({:.1} steps/s)",
+            res.tail_loss,
+            res.zero_shot_acc
+                .map(|a| format!("{:5.1}%", 100.0 * a))
+                .unwrap_or_else(|| "  n/a".into()),
+            if res.diverged { "DIVERGED" } else { "ok" },
+            res.steps_per_sec,
+        );
+        Ok(res)
+    }
+}
+
+/// The stuck-in-the-past trigger schedule: abrupt input-gain changes late
+/// in the run (post-warmup), when β₂ history is long and LR is still high.
+fn spike_shifts(steps: u64) -> Vec<Shift> {
+    let s1 = steps * 55 / 100;
+    let s2 = steps * 70 / 100;
+    let s3 = steps * 85 / 100;
+    vec![
+        Shift { at_step: s1, image_gain: 6.0, remap_concepts: false },
+        Shift { at_step: s2, image_gain: 1.0 / 6.0, remap_concepts: true },
+        Shift { at_step: s3, image_gain: 8.0, remap_concepts: false },
+    ]
+}
+
+fn spike_cfg(steps: u64) -> SpikeConfig {
+    SpikeConfig { burn_in: (steps / 8).max(20), ..Default::default() }
+}
+
+fn count_spikes(res: &RunResult, steps: u64) -> usize {
+    detect_loss_spikes(&res.sink.loss_trace(), &spike_cfg(steps)).len()
+}
+
+pub fn list() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fig1-int8", "zero-shot acc vs scale: bf16 vs LLM.int8 vs SwitchBack (int8)"),
+        ("fig1-fp8", "zero-shot acc vs scale: bf16 vs tensor-wise fp8 vs SwitchBack (fp8)"),
+        ("fig2", "loss curves for the fig1 runs (reads fig1 logs)"),
+        ("fig5-divergence", "fp8 tensor-wise rescue attempts: gradclip / kq-norm / zero-init layer-scale"),
+        ("fig5-magnitude", "per-block feature magnitudes, init vs end, ± layer-scale"),
+        ("fig6", "loss spikes vs MODEL SIZE × β2"),
+        ("fig7", "loss spikes vs BATCH SIZE × β2"),
+        ("fig8", "loss spikes vs LEARNING RATE × β2"),
+        ("fig9", "RMS_t spikes precede loss spikes (patch embedding)"),
+        ("fig10", "StableAdamW vs gradient clipping vs β2 (loss + accuracy)"),
+        ("fig11", "loss spikes co-occur with activation/grad spikes + scaler drops"),
+        ("fig14", "gradient/activation mean+max through training, ± layer-scale"),
+        ("fig15", "β2 warmup schedule 1−t^−λ does not help"),
+        ("fig16", "lead-lag statistics pooled over β2 (larger model)"),
+        ("fig17", "lead-lag statistics pooled over β2 (smaller model)"),
+        ("fig21", "control: mid-transformer RMS does NOT predict loss spikes"),
+        ("appc-variance", "quantization noise variance grows ∝ inner dim k (eq. 14)"),
+    ]
+}
+
+pub fn run_experiment(ctx: &ExpCtx, name: &str) -> Result<()> {
+    match name {
+        "fig1-int8" => fig1(ctx, "int8"),
+        "fig1-fp8" => fig1(ctx, "fp8"),
+        "fig2" => fig2(ctx),
+        "fig5-divergence" => fig5_divergence(ctx),
+        "fig5-magnitude" => fig5_magnitude(ctx),
+        "fig6" => fig678(ctx, "fig6", Axis::ModelSize),
+        "fig7" => fig678(ctx, "fig7", Axis::BatchSize),
+        "fig8" => fig678(ctx, "fig8", Axis::LearningRate),
+        "fig9" => fig9(ctx),
+        "fig10" => fig10(ctx),
+        "fig11" => fig11(ctx),
+        "fig14" => fig14(ctx),
+        "fig15" => fig15(ctx),
+        "fig16" => fig16_like(ctx, "fig16", "small", false),
+        "fig17" => fig16_like(ctx, "fig17", "tiny", false),
+        "fig21" => fig16_like(ctx, "fig21", "small", true),
+        "appc-variance" => appc_variance(),
+        other => bail!("unknown experiment {other:?} — see `switchback exp --list`"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig 1 + 2: accuracy vs scale for the precision variants
+// ---------------------------------------------------------------------
+
+fn fig1(ctx: &ExpCtx, mode: &str) -> Result<()> {
+    let steps = ctx.steps_or(300);
+    let variants: &[&str] = if mode == "int8" {
+        &["highprec", "switchback_int8", "llmint8"]
+    } else {
+        &["highprec", "fp8_tensorwise", "switchback_fp8"]
+    };
+    let sizes = ["micro", "tiny", "small"];
+    println!("== Fig 1 ({mode}): zero-shot accuracy vs model scale ==");
+    println!("   (paper: SwitchBack within 0.1pp of bf16 at ViT-H; LLM.int8 −5.9pp; tensor-wise fp8 diverges at scale)");
+    let exp = format!("fig1-{mode}");
+    let mut rows = vec![];
+    for size in sizes {
+        for variant in variants {
+            let artifact = format!("{variant}_{size}_b32");
+            let cfg = TrainConfig::preset(&artifact, steps);
+            let res = ctx.run(&exp, &artifact, cfg)?;
+            rows.push((size, *variant, res.zero_shot_acc.unwrap_or(f32::NAN),
+                       res.tail_loss, res.diverged));
+        }
+    }
+    println!("\n  size     variant             acc      tail-loss");
+    for (size, variant, acc, loss, div) in &rows {
+        println!(
+            "  {size:<8} {variant:<18} {:6.1}%   {loss:8.4} {}",
+            100.0 * acc,
+            if *div { "DIVERGED" } else { "" }
+        );
+    }
+    // headline deltas vs highprec per size
+    println!("\n  Δacc vs highprec (paper Fig 1 shape):");
+    for size in sizes {
+        let base = rows.iter().find(|r| r.0 == size && r.1 == "highprec").unwrap().2;
+        for (s, v, acc, _, _) in &rows {
+            if *s == size && *v != "highprec" {
+                println!("  {size:<8} {v:<18} {:+6.1}pp", 100.0 * (acc - base));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn fig2(ctx: &ExpCtx) -> Result<()> {
+    println!("== Fig 2: loss curves for the Fig 1 runs ==");
+    let mut any = false;
+    for mode in ["int8", "fp8"] {
+        let dir = format!("{}/fig1-{mode}", ctx.out_dir);
+        let Ok(entries) = std::fs::read_dir(&dir) else { continue };
+        for e in entries.flatten() {
+            let path = e.path();
+            if path.extension().map(|x| x != "jsonl").unwrap_or(true) {
+                continue;
+            }
+            any = true;
+            let text = std::fs::read_to_string(&path)?;
+            let losses: Vec<f32> = text
+                .lines()
+                .filter_map(crate::telemetry::StepRecord::from_json)
+                .map(|r| r.loss)
+                .collect();
+            let name = path.file_stem().unwrap().to_string_lossy().to_string();
+            print!("  {name:<32}");
+            let n = losses.len().max(1);
+            for i in 0..10 {
+                let idx = (i * n / 10).min(n - 1);
+                print!(" {:7.3}", losses[idx]);
+            }
+            println!();
+        }
+    }
+    if !any {
+        bail!("no fig1 logs found — run `switchback exp fig1-int8` / `fig1-fp8` first");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig 5: fp8 divergence rescue + feature magnitudes
+// ---------------------------------------------------------------------
+
+fn fig5_divergence(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.steps_or(300);
+    println!("== Fig 5 (left): fp8 tensor-wise rescue attempts (paper's ViT-L slot = `small`) ==");
+    let runs: Vec<(&str, TrainConfig)> = vec![
+        ("bf16-baseline", TrainConfig::preset("highprec_small_b32", steps)),
+        ("fp8-tensorwise", TrainConfig::preset("fp8_tensorwise_small_b32", steps)),
+        ("fp8+gradclip1", {
+            let mut c = TrainConfig::preset("fp8_tensorwise_small_b32", steps);
+            c.grad_clip = Some(1.0);
+            c
+        }),
+        ("fp8+kq-norm", TrainConfig::preset("fp8_tensorwise_small_kqn_b32", steps)),
+        ("fp8+layerscale0", TrainConfig::preset("fp8_tensorwise_small_ls_b32", steps)),
+    ];
+    let mut results = vec![];
+    for (tag, cfg) in runs {
+        let res = ctx.run("fig5-divergence", tag, cfg)?;
+        results.push((tag, res));
+    }
+    println!("\n  run               tail-loss   acc    status   (paper: only layerscale0 trains)");
+    for (tag, res) in &results {
+        println!(
+            "  {tag:<17} {:9.4}  {:5.1}%  {}",
+            res.tail_loss,
+            100.0 * res.zero_shot_acc.unwrap_or(f32::NAN),
+            if res.diverged { "DIVERGED" } else { "ok" },
+        );
+    }
+    Ok(())
+}
+
+fn fig5_magnitude(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.steps_or(300);
+    println!("== Fig 5 (right): per-block E[|x_k|], init vs end, ± zero-init layer-scale ==");
+    for (tag, artifact) in [
+        ("no-layerscale", "highprec_small_b32"),
+        ("layerscale0", "highprec_small_ls_b32"),
+    ] {
+        let res = ctx.run("fig5-magnitude", tag, TrainConfig::preset(artifact, steps))?;
+        let fmt = |v: &[f32]| {
+            v.iter().map(|x| format!("{x:6.2}")).collect::<Vec<_>>().join(" ")
+        };
+        println!("  {tag:<14} init: {}", fmt(&res.mags_first));
+        println!("  {tag:<14} end : {}", fmt(&res.mags_last));
+    }
+    println!("  (paper: without the intervention, magnitudes grow with depth; layer-scale keeps them flat)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig 6/7/8: spike counts vs size / batch / lr, ablating β2
+// ---------------------------------------------------------------------
+
+enum Axis {
+    ModelSize,
+    BatchSize,
+    LearningRate,
+}
+
+fn fig678(ctx: &ExpCtx, exp: &str, axis: Axis) -> Result<()> {
+    let steps = ctx.steps_or(240);
+    let betas = [0.999f32, 0.99, 0.95, 0.9];
+    let cells: Vec<(String, String, f32)> = match axis {
+        Axis::ModelSize => ["micro", "tiny", "small"]
+            .iter()
+            .map(|s| (s.to_string(), format!("highprec_{s}_b32"), 2e-3))
+            .collect(),
+        Axis::BatchSize => [8usize, 32, 128, 512]
+            .iter()
+            .map(|b| (format!("batch{b}"), format!("highprec_micro_b{b}"), 2e-3))
+            .collect(),
+        Axis::LearningRate => [1e-3f32, 2e-3, 4e-3, 8e-3]
+            .iter()
+            .map(|lr| (format!("lr{lr:.0e}"), "highprec_tiny_b32".to_string(), *lr))
+            .collect(),
+    };
+    let what = match axis {
+        Axis::ModelSize => "model size",
+        Axis::BatchSize => "batch size",
+        Axis::LearningRate => "learning rate",
+    };
+    println!("== {exp}: loss spikes vs {what} × β2 (AdamW, shift schedule on) ==");
+    println!("  (paper: spikes increase along the axis; lowering β2 removes them; too low slows training)");
+    let mut table = vec![];
+    for (label, artifact, lr) in &cells {
+        for beta2 in betas {
+            let mut cfg = TrainConfig::preset(artifact, steps)
+                .with_optimizer(OptimizerKind::Adamw, beta2);
+            cfg.lr = *lr;
+            cfg.shifts = spike_shifts(steps);
+            let tag = format!("{label}_b2-{beta2}");
+            let res = ctx.run(exp, &tag, cfg)?;
+            let spikes = count_spikes(&res, steps);
+            table.push((label.clone(), beta2, spikes, res.tail_loss,
+                        res.zero_shot_acc.unwrap_or(f32::NAN)));
+        }
+    }
+    println!("\n  cell        β2      spikes  tail-loss    acc");
+    for (label, b2, spikes, loss, acc) in &table {
+        println!(
+            "  {label:<11} {b2:<6}  {spikes:>4}   {loss:9.4}  {:5.1}%",
+            100.0 * acc
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig 9 / 16 / 17 / 21: RMS spikes precede loss spikes
+// ---------------------------------------------------------------------
+
+fn fig9(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.steps_or(300);
+    println!("== Fig 9: RMS_t (patch embedding) spikes precede loss spikes ==");
+    let mut cfg = TrainConfig::preset("highprec_tiny_b32", steps)
+        .with_optimizer(OptimizerKind::Adamw, 0.999);
+    cfg.shifts = spike_shifts(steps);
+    let res = ctx.run("fig9", "adamw_b2-0.999", cfg)?;
+    let sc = spike_cfg(steps);
+    let loss = res.sink.loss_trace();
+    let rms = res.sink.rms_trace(&res.probe_names.0);
+    let report = crate::telemetry::lead_lag_analysis(&loss, &rms, &sc);
+    println!("  {}", report.summary());
+    for &t in &report.loss_spikes {
+        let t = t as usize;
+        let lo = t.saturating_sub(10);
+        println!("  around loss spike @ {t}:");
+        print!("    loss:");
+        for i in lo..(t + 3).min(loss.len()) {
+            print!(" {:6.3}", loss[i]);
+        }
+        print!("\n    RMS :");
+        for i in lo..(t + 3).min(rms.len()) {
+            print!(" {:6.2}", rms[i]);
+        }
+        println!();
+    }
+    // the paper's contrast: lower β2 keeps RMS near 1
+    let mut cfg2 = TrainConfig::preset("highprec_tiny_b32", steps)
+        .with_optimizer(OptimizerKind::Adamw, 0.95);
+    cfg2.shifts = spike_shifts(steps);
+    let res2 = ctx.run("fig9", "adamw_b2-0.95", cfg2)?;
+    let rms2 = res2.sink.rms_trace(&res2.probe_names.0);
+    let max2 = rms2.iter().fold(0.0f32, |m, &v| m.max(v));
+    println!("  β2=0.95: max RMS_t = {max2:.2} (paper: stays near 1 for lower β2)");
+    Ok(())
+}
+
+fn fig16_like(ctx: &ExpCtx, exp: &str, size: &str, use_mid_control: bool) -> Result<()> {
+    let steps = ctx.steps_or(260);
+    let which = if use_mid_control { "mid-transformer control tensor (Fig 21)" } else { "patch embedding" };
+    println!("== {exp}: pooled lead-lag statistics over β2 sweeps — probe: {which} ==");
+    let betas = [0.999f32, 0.998, 0.995];
+    let mut all_loss_spikes = vec![];
+    let mut all_rms_spikes = vec![];
+    let mut total_len = 0u64;
+    let sc = spike_cfg(steps);
+    for (i, beta2) in betas.iter().enumerate() {
+        let mut cfg = TrainConfig::preset(&format!("highprec_{size}_b32"), steps)
+            .with_optimizer(OptimizerKind::Adamw, *beta2);
+        cfg.shifts = spike_shifts(steps);
+        cfg.seed = i as u64;
+        cfg.reinit = i != 0;
+        let res = ctx.run(exp, &format!("b2-{beta2}"), cfg)?;
+        let loss = res.sink.loss_trace();
+        let probe = if use_mid_control { &res.probe_names.1 } else { &res.probe_names.0 };
+        let rms = res.sink.rms_trace(probe);
+        // pool events with a per-run offset so windows never straddle runs
+        let off = total_len;
+        all_loss_spikes.extend(detect_loss_spikes(&loss, &sc).iter().map(|t| t + off));
+        all_rms_spikes.extend(detect_rms_spikes(&rms, &sc).iter().map(|t| t + off));
+        total_len += loss.len() as u64 + 100;
+    }
+    let report = lead_lag_from_events(&all_loss_spikes, &all_rms_spikes, total_len);
+    println!("  pooled: {}", report.summary());
+    if use_mid_control {
+        println!("  (paper Fig 21: for a mid-transformer tensor, NONE of the loss spikes follow RMS spikes)");
+    } else {
+        println!("  (paper Fig 16/17: 14/15 resp. 13/15 loss spikes follow an RMS spike by 1–8 iters, ~1% by chance)");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig 10: StableAdamW vs gradient clipping
+// ---------------------------------------------------------------------
+
+fn fig10(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.steps_or(300);
+    println!("== Fig 10: update clipping (StableAdamW) vs gradient clipping vs β2 ==");
+    let mut rows = vec![];
+    for beta2 in [0.999f32, 0.99, 0.95] {
+        for (tag, opt, clip) in [
+            ("adamw", OptimizerKind::Adamw, None),
+            ("adamw+gradclip1", OptimizerKind::Adamw, Some(1.0)),
+            ("stable_adamw", OptimizerKind::StableAdamw, None),
+        ] {
+            let mut cfg = TrainConfig::preset("highprec_small_b32", steps)
+                .with_optimizer(opt, beta2);
+            cfg.grad_clip = clip;
+            cfg.shifts = spike_shifts(steps);
+            let label = format!("{tag}_b2-{beta2}");
+            let res = ctx.run("fig10", &label, cfg)?;
+            rows.push((tag, beta2, count_spikes(&res, steps), res.tail_loss,
+                       res.zero_shot_acc.unwrap_or(f32::NAN)));
+        }
+    }
+    println!("\n  optimizer         β2      spikes  tail-loss    acc   (paper: StableAdamW removes spikes AND beats gradclip on acc; β2=0.99 best with clipping)");
+    for (tag, b2, spikes, loss, acc) in &rows {
+        println!(
+            "  {tag:<17} {b2:<6}  {spikes:>4}   {loss:9.4}  {:5.1}%",
+            100.0 * acc
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig 11: spikes ↔ activations/gradients ↔ loss scalar
+// ---------------------------------------------------------------------
+
+fn fig11(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.steps_or(300);
+    println!("== Fig 11: loss spikes co-occur with activation/gradient spikes and scaler drops ==");
+    let mut cfg = TrainConfig::preset("highprec_tiny_b32", steps)
+        .with_optimizer(OptimizerKind::Adamw, 0.999);
+    cfg.shifts = spike_shifts(steps);
+    cfg.scaler = ScalerKind::DynamicGlobal;
+    let res = ctx.run("fig11", "dynamic_scaler", cfg)?;
+    let sc = spike_cfg(steps);
+    let loss = res.sink.loss_trace();
+    let spikes = detect_loss_spikes(&loss, &sc);
+    println!("  loss spikes at: {spikes:?}");
+    println!("  loss-scale drops: {}", res.sink.scale_drops());
+    let pe = &res.probe_names.0;
+    for &t in spikes.iter().take(4) {
+        let t = t as usize;
+        let lo = t.saturating_sub(3);
+        let hi = (t + 4).min(res.sink.records.len());
+        println!("  around step {t} (probe {pe}):");
+        for r in &res.sink.records[lo..hi] {
+            let probe = r.grad_probes.get(pe);
+            println!(
+                "    step {:>4} loss {:7.3} |g| {:9.3} grad-max {:9.3} feat-mag {:6.3} scale {:?} skipped {}",
+                r.step,
+                r.loss,
+                r.grad_norm,
+                probe.map(|p| p.max_abs).unwrap_or(0.0),
+                r.feature_mags.first().copied().unwrap_or(0.0),
+                r.loss_scale,
+                r.skipped_step,
+            );
+        }
+    }
+    // contrast with the paper's fixed tensor-level scaler
+    let mut cfg2 = TrainConfig::preset("highprec_tiny_b32", steps)
+        .with_optimizer(OptimizerKind::Adamw, 0.999);
+    cfg2.shifts = spike_shifts(steps);
+    cfg2.scaler = ScalerKind::FixedTensor;
+    let res2 = ctx.run("fig11", "fixed_tensor_scaler", cfg2)?;
+    let skipped: usize = res2.sink.records.iter().map(|r| r.skipped_tensors).sum();
+    let full_skips: usize = res2.sink.records.iter().filter(|r| r.skipped_step).count();
+    println!(
+        "  fixed tensor-level scaler: {skipped} tensor-updates skipped, {full_skips} whole-step skips (paper: skips localize to the patch embedding)"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig 14: magnitudes through training
+// ---------------------------------------------------------------------
+
+fn fig14(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.steps_or(300);
+    println!("== Fig 14 (+App B.2): gradient/activation mean & max through training ==");
+    for (tag, artifact) in [
+        ("small", "highprec_small_b32"),
+        ("small+layerscale", "highprec_small_ls_b32"),
+    ] {
+        let res = ctx.run("fig14", tag, TrainConfig::preset(artifact, steps))?;
+        let pe = &res.probe_names.0;
+        println!("  {tag}: step → [grad mean|max of {pe}] [block-0 feature mag]");
+        let n = res.sink.records.len();
+        for i in (0..n).step_by((n / 8).max(1)) {
+            let r = &res.sink.records[i];
+            if let Some(p) = r.grad_probes.get(pe) {
+                println!(
+                    "    {:>5}  {:9.5} | {:9.4}   feat {:6.3}",
+                    r.step,
+                    p.mean_abs,
+                    p.max_abs,
+                    r.feature_mags.first().copied().unwrap_or(0.0)
+                );
+            }
+        }
+    }
+    println!("  (paper App B.2: the absmax evolves smoothly — which is what makes tensor-wise fp8 a good proxy for scaler-free training)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fig 15: β2 warmup schedule
+// ---------------------------------------------------------------------
+
+fn fig15(ctx: &ExpCtx) -> Result<()> {
+    let steps = ctx.steps_or(300);
+    println!("== Fig 15: β2 schedule 1−t^−λ (AdaFactor/PaLM style) vs constant β2 ==");
+    let mut rows = vec![];
+    for lambda in [0.45f32, 0.5, 0.65] {
+        let mut cfg = TrainConfig::preset("highprec_tiny_b32", steps)
+            .with_optimizer(OptimizerKind::StableAdamw, 0.999);
+        cfg.beta2_lambda = Some(lambda);
+        let final_b2 = 1.0 - (steps as f32).powf(-lambda);
+        let res = ctx.run("fig15", &format!("lambda-{lambda}"), cfg)?;
+        rows.push((format!("λ={lambda} (β2_final={final_b2:.4})"),
+                   res.zero_shot_acc.unwrap_or(f32::NAN), res.tail_loss));
+    }
+    for beta2 in [0.99f32, 0.999] {
+        let cfg = TrainConfig::preset("highprec_tiny_b32", steps)
+            .with_optimizer(OptimizerKind::StableAdamw, beta2);
+        let res = ctx.run("fig15", &format!("const-{beta2}"), cfg)?;
+        rows.push((format!("const β2={beta2}"),
+                   res.zero_shot_acc.unwrap_or(f32::NAN), res.tail_loss));
+    }
+    println!("\n  schedule                        acc     tail-loss   (paper: the schedule does not improve accuracy)");
+    for (tag, acc, loss) in rows {
+        println!("  {tag:<30} {:5.1}%  {loss:9.4}", 100.0 * acc);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Appendix C: quantization noise variance ∝ k (pure rust, no artifacts)
+// ---------------------------------------------------------------------
+
+fn appc_variance() -> Result<()> {
+    println!("== Appendix C: Var(⟨û,v̂⟩ − ⟨u,v⟩) grows ∝ k (eq. 14) ==");
+    let trials = 400;
+    let mut rng = Rng::seed(2023);
+    println!("  k        noise-var      noise-var/k   (constant ⇒ linear growth)");
+    let mut ratios = vec![];
+    for k in [128usize, 512, 2048, 8192, 32768] {
+        let mut var = 0.0f64;
+        for _ in 0..trials {
+            let u = crate::tensor::Matrix::randn(1, k, 1.0, &mut rng);
+            let v = crate::tensor::Matrix::randn(1, k, 1.0, &mut rng);
+            let exact: f64 = u
+                .data
+                .iter()
+                .zip(&v.data)
+                .map(|(a, b)| (*a as f64) * (*b as f64))
+                .sum();
+            let uq = quant::rowwise_quant(&u);
+            let vq = quant::rowwise_quant(&v);
+            let qdot: f64 = uq
+                .codes
+                .data
+                .iter()
+                .zip(&vq.codes.data)
+                .map(|(a, b)| (*a as i32 * *b as i32) as f64)
+                .sum::<f64>()
+                * (uq.state[0] as f64 / 127.0)
+                * (vq.state[0] as f64 / 127.0);
+            var += (qdot - exact).powi(2);
+        }
+        var /= trials as f64;
+        println!("  {k:<8} {var:12.4}   {:12.6}", var / k as f64);
+        ratios.push(var / k as f64);
+    }
+    println!("  (paper: this is why the wgrad — inner dim ≈ 32768 in their CLIP runs — must stay high-precision)");
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! The L3 coordinator: training-loop orchestration + experiment sweeps.
+//!
+//! * [`trainer`] — the full training loop over an AOT artifact: data →
+//!   PJRT step → (optional loss-scaler) → (optional grad clip) →
+//!   optimizer → telemetry.
+//! * [`eval`] — zero-shot-style evaluation (classify eval images against
+//!   each concept's canonical caption embedding — the ImageNet-80-prompt
+//!   analogue).
+//! * [`experiments`] — the registry mapping every paper figure to a set of
+//!   runs and a printed summary (DESIGN.md experiment index).
+
+pub mod eval;
+pub mod experiments;
+pub mod trainer;
+
+pub use trainer::{RunResult, Trainer};

@@ -1,0 +1,261 @@
+//! The training loop — where L1/L2 artifacts, the rust optimizer, the
+//! loss scalers and the stability telemetry all compose.
+//!
+//! Per step:
+//! 1. synthesize the next batch ([`crate::data`], honouring the shift
+//!    schedule),
+//! 2. execute the AOT train-step (loss + grads + feature magnitudes),
+//! 3. run the loss-scaler policy (§3.6) on the (simulated-fp16) grads,
+//! 4. optionally clip the global gradient norm (Fig 10 baseline),
+//! 5. step the optimizer (AdamW / StableAdamW / Lion) with the schedule's
+//!    LR, collecting per-tensor `RMS_t`,
+//! 6. log everything to the metrics sink (the figures regenerate from
+//!    these logs).
+
+use crate::config::{OptimizerKind, ScalerKind, TrainConfig};
+use crate::coordinator::eval::zero_shot_accuracy;
+use crate::data::{DataConfig, SyntheticClip};
+use crate::optim::scaler::{DynamicGlobalScaler, FixedTensorScaler, ScaleDecision};
+use crate::optim::schedules::LrSchedule;
+use crate::optim::{clip_global_norm, AdamW, AdamWConfig, Lion, LionConfig, Optimizer};
+use crate::runtime::{Artifact, Runtime};
+use crate::telemetry::{MetricsSink, StepRecord, TensorProbe};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Outcome of a full run.
+pub struct RunResult {
+    pub config: TrainConfig,
+    pub final_loss: f32,
+    /// mean loss over the last 10% of steps (the robust curve endpoint)
+    pub tail_loss: f32,
+    pub zero_shot_acc: Option<f32>,
+    pub diverged: bool,
+    pub sink: MetricsSink,
+    /// names of the probed tensors: (patch_embed, mid control)
+    pub probe_names: (String, String),
+    pub steps_per_sec: f32,
+    /// feature magnitudes at init and at the end (Fig 5 right)
+    pub mags_first: Vec<f32>,
+    pub mags_last: Vec<f32>,
+}
+
+impl RunResult {
+    pub fn loss_trace(&self) -> Vec<f32> {
+        self.sink.loss_trace()
+    }
+}
+
+/// Trainer over one artifact.  The artifact is behind an `Rc` so sweep
+/// runners can reuse one compiled executable across many runs (compiling
+/// the HLO dominates short-run wall time — see EXPERIMENTS.md §Perf).
+pub struct Trainer<'rt> {
+    runtime: &'rt Runtime,
+    artifact: std::rc::Rc<Artifact>,
+    cfg: TrainConfig,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(runtime: &'rt Runtime, cfg: TrainConfig) -> Result<Self> {
+        let artifact =
+            std::rc::Rc::new(runtime.load(Path::new(&cfg.artifact_dir), &cfg.artifact)?);
+        Ok(Self { runtime, artifact, cfg })
+    }
+
+    /// Reuse an already-compiled artifact (sweep path).
+    pub fn with_artifact(
+        runtime: &'rt Runtime,
+        artifact: std::rc::Rc<Artifact>,
+        cfg: TrainConfig,
+    ) -> Self {
+        Self { runtime, artifact, cfg }
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    fn build_optimizer(&self, sizes: &[usize]) -> Box<dyn Optimizer> {
+        let metas = self.artifact.param_metas();
+        match self.cfg.optimizer {
+            OptimizerKind::Adamw | OptimizerKind::StableAdamw => {
+                let acfg = AdamWConfig {
+                    beta1: self.cfg.beta1,
+                    beta2: self.cfg.beta2,
+                    eps: 1e-6,
+                    weight_decay: self.cfg.weight_decay,
+                    update_clipping: self.cfg.optimizer == OptimizerKind::StableAdamw,
+                    beta2_schedule_lambda: self.cfg.beta2_lambda,
+                };
+                Box::new(AdamW::new(acfg, &metas, sizes))
+            }
+            OptimizerKind::Lion => Box::new(Lion::new(
+                LionConfig {
+                    beta1: self.cfg.beta1,
+                    beta2: self.cfg.beta2,
+                    weight_decay: self.cfg.weight_decay,
+                },
+                &metas,
+                sizes,
+            )),
+        }
+    }
+
+    /// Run the configured number of steps.  `verbose` prints a progress
+    /// line every ~20 steps.
+    pub fn run(&mut self, verbose: bool) -> Result<RunResult> {
+        let m = &self.artifact.manifest;
+        let mut data = SyntheticClip::new(DataConfig {
+            shifts: self.cfg.shifts.clone(),
+            ..DataConfig::for_model(
+                m.config.patches,
+                m.config.patch_dim,
+                m.config.seq,
+                m.config.vocab,
+                self.cfg.seed.wrapping_add(0x5EED),
+            )
+        });
+        let mut params =
+            self.artifact.initial_params(self.cfg.seed, self.cfg.reinit)?;
+        let sizes: Vec<usize> = params.iter().map(|p| p.len()).collect();
+        let mut opt = self.build_optimizer(&sizes);
+        let schedule =
+            LrSchedule::new(self.cfg.lr, self.cfg.warmup, self.cfg.steps);
+        let (pe_idx, mid_idx) = self.artifact.probe_indices();
+        let pe_name = m.tensors[pe_idx].name.clone();
+        let mid_name = m.tensors[mid_idx].name.clone();
+
+        let mut sink = match &self.cfg.metrics_path {
+            Some(p) => MetricsSink::to_file(Path::new(p))?,
+            None => MetricsSink::memory(),
+        };
+        let mut dyn_scaler = DynamicGlobalScaler::new();
+        let mut fix_scaler = FixedTensorScaler::new(65536.0, params.len());
+        let batch_size = self.artifact.batch();
+        let mut mags_first: Vec<f32> = vec![];
+        let mut mags_last: Vec<f32> = vec![];
+        let mut diverged = false;
+        let t0 = Instant::now();
+
+        for step in 1..=self.cfg.steps {
+            let batch = data.next_batch(batch_size);
+            let out =
+                self.artifact.train_step(&params, &batch.images, &batch.tokens)?;
+            if mags_first.is_empty() {
+                mags_first = out.mags.clone();
+            }
+            mags_last = out.mags.clone();
+            let mut grads = out.grads;
+            if !out.loss.is_finite() || out.loss > 50.0 {
+                diverged = true;
+            }
+
+            // §3.6 loss-scaler policy on simulated-fp16 gradients.
+            let (decision, scale) = match self.cfg.scaler {
+                ScalerKind::None => (ScaleDecision::Proceed, None),
+                ScalerKind::DynamicGlobal => {
+                    let d = dyn_scaler.inspect(&grads);
+                    (d, Some(dyn_scaler.scale))
+                }
+                ScalerKind::FixedTensor => {
+                    let d = fix_scaler.inspect(&grads);
+                    (d, Some(fix_scaler.scale))
+                }
+            };
+
+            let grad_norm = {
+                let mut ss = 0.0f64;
+                for g in &grads {
+                    for &v in g {
+                        if v.is_finite() {
+                            ss += (v as f64) * (v as f64);
+                        }
+                    }
+                }
+                ss.sqrt() as f32
+            };
+            if let Some(max_norm) = self.cfg.grad_clip {
+                clip_global_norm(&mut grads, max_norm);
+            }
+
+            let lr = schedule.at(step);
+            let mut rec = StepRecord {
+                step,
+                loss: out.loss,
+                lr,
+                grad_norm,
+                loss_scale: scale,
+                ..Default::default()
+            };
+            match decision {
+                ScaleDecision::Proceed => {
+                    let stats = opt.step(&mut params, &grads, lr, None);
+                    rec.rms.insert(pe_name.clone(), stats.rms[pe_idx]);
+                    rec.rms.insert(mid_name.clone(), stats.rms[mid_idx]);
+                }
+                ScaleDecision::SkipStep => {
+                    rec.skipped_step = true;
+                }
+                ScaleDecision::SkipTensors(mask) => {
+                    let stats = opt.step(&mut params, &grads, lr, Some(&mask));
+                    rec.skipped_tensors = stats.skipped_tensors;
+                    rec.rms.insert(pe_name.clone(), stats.rms[pe_idx]);
+                    rec.rms.insert(mid_name.clone(), stats.rms[mid_idx]);
+                }
+            }
+            if self.cfg.probe_every > 0 && step % self.cfg.probe_every == 0 {
+                rec.feature_mags = out.mags.clone();
+                let mut probes = BTreeMap::new();
+                probes.insert(pe_name.clone(), TensorProbe::of(&grads[pe_idx]));
+                probes.insert(mid_name.clone(), TensorProbe::of(&grads[mid_idx]));
+                rec.grad_probes = probes;
+            }
+            if verbose && (step % 20 == 0 || step == 1) {
+                println!(
+                    "  step {step:>5}  loss {:8.4}  lr {:.2e}  |g| {:8.3}",
+                    out.loss, lr, grad_norm
+                );
+            }
+            sink.log(rec);
+        }
+        let elapsed = t0.elapsed().as_secs_f32();
+
+        // Final zero-shot-style evaluation (if an encode artifact exists).
+        let zero_shot_acc = if self.artifact.manifest.encode_hlo.is_some() {
+            Some(zero_shot_accuracy(
+                &self.artifact,
+                &params,
+                &data,
+                self.cfg.eval_per_concept,
+            )?)
+        } else {
+            None
+        };
+
+        let losses = sink.loss_trace();
+        let tail_n = (losses.len() / 10).max(1);
+        let tail_loss = losses[losses.len() - tail_n..]
+            .iter()
+            .filter(|v| v.is_finite())
+            .sum::<f32>()
+            / tail_n as f32;
+        Ok(RunResult {
+            config: self.cfg.clone(),
+            final_loss: *losses.last().unwrap_or(&f32::NAN),
+            tail_loss,
+            zero_shot_acc,
+            diverged,
+            sink,
+            probe_names: (pe_name, mid_name),
+            steps_per_sec: self.cfg.steps as f32 / elapsed.max(1e-9),
+            mags_first,
+            mags_last,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.runtime
+    }
+}

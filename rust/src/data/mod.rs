@@ -1,0 +1,294 @@
+//! Synthetic image–text corpus — the LAION-2B stand-in (DESIGN.md
+//! §Substitutions).
+//!
+//! Generative model: `n_concepts` latent concepts.  Each concept `c` owns
+//! * an image prototype: a deterministic pseudo-random patch pattern
+//!   (per-concept RNG stream), and
+//! * a caption template: a deterministic token sequence drawn from a
+//!   concept-specific vocabulary band.
+//!
+//! A sample picks a concept, emits `prototype + σ·noise` as the patchified
+//! image and a jittered caption.  The contrastive task is therefore
+//! genuinely learnable (match image to its concept's caption against
+//! in-batch negatives) but not trivial (noise, token jitter).
+//!
+//! **Distribution shift schedule**: at configured iterations the stream
+//! rescales image intensity and/or remaps concepts.  An intensity rescale
+//! abruptly changes the *patch-embedding gradient scale* — precisely the
+//! "learning signal changes" precondition of the paper's stuck-in-the-past
+//! scenario (§3.4) — giving the stability experiments a deterministic
+//! spike trigger on a short schedule (the paper's runs are 20k iterations;
+//! ours are hundreds).
+
+use crate::tensor::Rng;
+
+/// One scheduled distribution shift.
+#[derive(Debug, Clone)]
+pub struct Shift {
+    /// iteration at which the shift takes effect (1-based, like steps)
+    pub at_step: u64,
+    /// multiply image intensities by this factor from then on
+    pub image_gain: f32,
+    /// if true, permute the concept→prototype mapping (semantic shift)
+    pub remap_concepts: bool,
+}
+
+/// Dataset configuration.
+#[derive(Debug, Clone)]
+pub struct DataConfig {
+    pub n_concepts: usize,
+    pub patches: usize,
+    pub patch_dim: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    /// image noise std relative to prototype std (1.0 = SNR 1)
+    pub noise: f32,
+    /// probability a caption token is replaced by a random one
+    pub token_jitter: f32,
+    pub seed: u64,
+    pub shifts: Vec<Shift>,
+}
+
+impl DataConfig {
+    pub fn for_model(
+        patches: usize,
+        patch_dim: usize,
+        seq: usize,
+        vocab: usize,
+        seed: u64,
+    ) -> Self {
+        Self {
+            n_concepts: 64,
+            patches,
+            patch_dim,
+            seq,
+            vocab,
+            // Hard enough that 150-step runs do NOT saturate: precision /
+            // optimizer quality shows up as accuracy differences (Fig 1).
+            noise: 1.0,
+            token_jitter: 0.2,
+            seed,
+            shifts: vec![],
+        }
+    }
+}
+
+/// A batch ready for the model: patchified images + token ids.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// `[batch, patches, patch_dim]` flattened row-major
+    pub images: Vec<f32>,
+    /// `[batch, seq]` flattened row-major
+    pub tokens: Vec<i32>,
+    /// concept id per example (for eval bookkeeping)
+    pub concepts: Vec<usize>,
+}
+
+/// The synthetic corpus stream.
+pub struct SyntheticClip {
+    cfg: DataConfig,
+    prototypes: Vec<Vec<f32>>, // [concept][patches*patch_dim]
+    /// concept -> prototype index (identity until a remap shift)
+    mapping: Vec<usize>,
+    rng: Rng,
+    step: u64,
+    gain: f32,
+}
+
+impl SyntheticClip {
+    pub fn new(cfg: DataConfig) -> Self {
+        let base = Rng::seed(cfg.seed);
+        let dim = cfg.patches * cfg.patch_dim;
+        let prototypes = (0..cfg.n_concepts)
+            .map(|c| {
+                let mut r = base.fork(1000 + c as u64);
+                let mut p = vec![0.0f32; dim];
+                r.fill_normal(&mut p, 1.0);
+                p
+            })
+            .collect();
+        let mapping = (0..cfg.n_concepts).collect();
+        let rng = base.fork(1);
+        Self { cfg, prototypes, mapping, rng, step: 0, gain: 1.0 }
+    }
+
+    pub fn config(&self) -> &DataConfig {
+        &self.cfg
+    }
+
+    /// Canonical (jitter-free) caption for a concept — the "class prompt"
+    /// used for zero-shot-style evaluation (the 80-template analogue).
+    pub fn canonical_caption(&self, concept: usize) -> Vec<i32> {
+        let c = concept as i32;
+        let v = self.cfg.vocab as i32;
+        (0..self.cfg.seq)
+            .map(|i| {
+                let i = i as i32;
+                // concept-specific token band with positional variation
+                (c * 7 + i * 3 + (c * i) % 5).rem_euclid(v)
+            })
+            .collect()
+    }
+
+    fn emit_example(
+        &mut self,
+        images: &mut Vec<f32>,
+        tokens: &mut Vec<i32>,
+        concept: usize,
+    ) {
+        let proto = &self.prototypes[self.mapping[concept]];
+        let noise = self.cfg.noise;
+        for &p in proto {
+            images.push(self.gain * (p + noise * self.rng.normal()));
+        }
+        let caption = self.canonical_caption(concept);
+        for tok in caption {
+            if self.rng.uniform() < self.cfg.token_jitter {
+                tokens.push(self.rng.below(self.cfg.vocab) as i32);
+            } else {
+                tokens.push(tok);
+            }
+        }
+    }
+
+    /// Advance the shift schedule to `step` (called by `next_batch`).
+    fn apply_shifts(&mut self) {
+        // collect triggered shifts first (borrow discipline)
+        let triggered: Vec<Shift> = self
+            .cfg
+            .shifts
+            .iter()
+            .filter(|s| s.at_step == self.step)
+            .cloned()
+            .collect();
+        for s in triggered {
+            self.gain *= s.image_gain;
+            if s.remap_concepts {
+                // deterministic rotation of the concept mapping
+                let n = self.mapping.len();
+                self.mapping.rotate_right(n / 3 + 1);
+            }
+        }
+    }
+
+    /// Produce the next training batch.  Concepts are sampled without
+    /// replacement while possible so in-batch negatives are distinct
+    /// (contrastive training needs that at small batch sizes).
+    pub fn next_batch(&mut self, batch: usize) -> Batch {
+        self.step += 1;
+        self.apply_shifts();
+        let n = self.cfg.n_concepts;
+        let mut images =
+            Vec::with_capacity(batch * self.cfg.patches * self.cfg.patch_dim);
+        let mut tokens = Vec::with_capacity(batch * self.cfg.seq);
+        let mut concepts = Vec::with_capacity(batch);
+        // shuffled concept deck, refilled as needed
+        let mut deck: Vec<usize> = (0..n).collect();
+        for i in 0..batch {
+            if i % n == 0 {
+                // Fisher–Yates reshuffle
+                for j in (1..deck.len()).rev() {
+                    let k = self.rng.below(j + 1);
+                    deck.swap(j, k);
+                }
+            }
+            let c = deck[i % n];
+            concepts.push(c);
+            self.emit_example(&mut images, &mut tokens, c);
+        }
+        Batch { images, tokens, concepts }
+    }
+
+    /// Deterministic eval set: `per_concept` images per concept, fixed seed
+    /// independent of training progress (but honouring the current gain /
+    /// mapping so eval matches the live distribution).
+    pub fn eval_set(&self, per_concept: usize) -> Batch {
+        let mut rng = Rng::seed(self.cfg.seed ^ 0xEEAA);
+        let mut images = vec![];
+        let mut tokens = vec![];
+        let mut concepts = vec![];
+        for c in 0..self.cfg.n_concepts {
+            let proto = &self.prototypes[self.mapping[c]];
+            for _ in 0..per_concept {
+                for &p in proto {
+                    images.push(self.gain * (p + self.cfg.noise * rng.normal()));
+                }
+                tokens.extend(self.canonical_caption(c));
+                concepts.push(c);
+            }
+        }
+        Batch { images, tokens, concepts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DataConfig {
+        DataConfig::for_model(16, 48, 16, 512, 7)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = SyntheticClip::new(cfg());
+        let mut b = SyntheticClip::new(cfg());
+        let ba = a.next_batch(8);
+        let bb = b.next_batch(8);
+        assert_eq!(ba.images, bb.images);
+        assert_eq!(ba.tokens, bb.tokens);
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut d = SyntheticClip::new(cfg());
+        let b = d.next_batch(5);
+        assert_eq!(b.images.len(), 5 * 16 * 48);
+        assert_eq!(b.tokens.len(), 5 * 16);
+        assert_eq!(b.concepts.len(), 5);
+        assert!(b.tokens.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn in_batch_negatives_distinct_for_small_batches() {
+        let mut d = SyntheticClip::new(cfg());
+        let b = d.next_batch(16); // ≤ n_concepts
+        let mut seen = std::collections::HashSet::new();
+        for &c in &b.concepts {
+            assert!(seen.insert(c), "duplicate concept {c} in small batch");
+        }
+    }
+
+    #[test]
+    fn captions_identify_concepts() {
+        let d = SyntheticClip::new(cfg());
+        let c0 = d.canonical_caption(0);
+        let c1 = d.canonical_caption(1);
+        assert_ne!(c0, c1);
+    }
+
+    #[test]
+    fn shift_changes_image_scale() {
+        let mut c = cfg();
+        c.shifts = vec![Shift { at_step: 3, image_gain: 8.0, remap_concepts: false }];
+        c.noise = 0.0;
+        let mut d = SyntheticClip::new(c);
+        let b2 = d.next_batch(4);
+        let b3 = d.next_batch(4); // shift has NOT fired yet at step 2
+        let b_shift = d.next_batch(4); // step 3: fired
+        let rms = |v: &Vec<f32>| {
+            (v.iter().map(|x| (x * x) as f64).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        assert!((rms(&b2.images) - rms(&b3.images)).abs() < 0.2);
+        assert!(rms(&b_shift.images) > 4.0 * rms(&b3.images));
+    }
+
+    #[test]
+    fn eval_set_is_labelled_and_stable() {
+        let d = SyntheticClip::new(cfg());
+        let e1 = d.eval_set(2);
+        let e2 = d.eval_set(2);
+        assert_eq!(e1.images, e2.images);
+        assert_eq!(e1.concepts.len(), 64 * 2);
+    }
+}

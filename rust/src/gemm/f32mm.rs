@@ -1,0 +1,117 @@
+//! f32 GEMM kernels (the "16-bit baseline" stand-in).
+//!
+//! Two variants for the two memory layouts a linear layer needs:
+//! * `gemm_f32_nt` — `A [m,k] · Bᵀ` with `B [n,k]`: dot products over two
+//!   contiguous rows (forward + wgrad-after-transpose path).
+//! * `gemm_f32_nn` — `A [m,k] · B [k,n]`: k-outer axpy form, streaming
+//!   through contiguous rows of B (dgrad path).
+//!
+//! Both are rayon-parallel over output row blocks and cache-blocked over k.
+
+use crate::tensor::Matrix;
+use crate::util::threads::par_chunks_mut;
+
+/// Contraction block: keeps an `KB`-long stripe of both operands in L1/L2.
+const KB: usize = 256;
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // 4-way unrolled dot; LLVM vectorizes each lane independently which
+    // breaks the fp-add dependency chain (≈3–4× vs the naive loop).
+    let n = a.len().min(b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc0 += a[j] * b[j];
+        acc1 += a[j + 1] * b[j + 1];
+        acc2 += a[j + 2] * b[j + 2];
+        acc3 += a[j + 3] * b[j + 3];
+    }
+    for j in chunks * 4..n {
+        acc0 += a[j] * b[j];
+    }
+    acc0 + acc1 + acc2 + acc3
+}
+
+/// `a [m, k] @ b [n, k]ᵀ → [m, n]`.
+pub fn gemm_f32_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "inner dims disagree");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut out = Matrix::zeros(m, n);
+    par_chunks_mut(&mut out.data, n, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + r;
+            let arow = &a.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                orow[j] = dot(arow, brow);
+            }
+        }
+    });
+    out
+}
+
+/// `a [m, k] @ b [k, n] → [m, n]` (k-blocked axpy form).
+pub fn gemm_f32_nn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "inner dims disagree");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    par_chunks_mut(&mut out.data, n, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + r;
+            let arow = &a.data[i * k..(i + 1) * k];
+            for p0 in (0..k).step_by(KB) {
+                let p1 = (p0 + KB).min(k);
+                for p in p0..p1 {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[p * n..(p + 1) * n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn nt_matches_naive() {
+        let mut rng = Rng::seed(21);
+        let a = Matrix::randn(17, 33, 1.0, &mut rng);
+        let b = Matrix::randn(9, 33, 1.0, &mut rng);
+        let fast = gemm_f32_nt(&a, &b);
+        let slow = a.matmul_naive(&b.transpose());
+        assert!(fast.max_abs_diff(&slow) < 1e-4);
+    }
+
+    #[test]
+    fn nn_matches_naive() {
+        let mut rng = Rng::seed(22);
+        let a = Matrix::randn(13, 600, 1.0, &mut rng);
+        let b = Matrix::randn(600, 11, 1.0, &mut rng);
+        let fast = gemm_f32_nn(&a, &b);
+        let slow = a.matmul_naive(&b);
+        assert!(fast.max_abs_diff(&slow) < 1e-3);
+    }
+
+    #[test]
+    fn empty_edge_cases() {
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(3, 5);
+        let out = gemm_f32_nt(&a, &b);
+        assert_eq!((out.rows, out.cols), (0, 3));
+    }
+}

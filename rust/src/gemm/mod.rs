@@ -1,0 +1,150 @@
+//! Native GEMM substrate — the *measured-speed* stand-in for the paper's
+//! A100 int8 tensor-core kernels (DESIGN.md §Substitutions).
+//!
+//! The paper's Fig 3/4/13 measure Triton int8 kernels against fp16 cuBLAS;
+//! we measure a rayon-parallel, cache-blocked i8×i8→i32 GEMM against an
+//! equally-optimized f32 GEMM.  The *shape* of the result carries over:
+//! 8-bit operands halve (vs f32: quarter) the memory traffic and widen the
+//! SIMD lanes, while quantize ops are O(n²) against the matmul's O(n³), so
+//! SwitchBack's advantage grows with `dim` and `batch×seq`.
+//!
+//! Layout conventions (matching the paper's observation that int8 hardware
+//! only implements `A Bᵀ`): all kernels are "NT" — both operands row-major,
+//! contracting over their *columns*, so every dot product runs over two
+//! contiguous rows and vectorizes.
+
+mod f32mm;
+mod i8mm;
+
+pub use f32mm::{gemm_f32_nn, gemm_f32_nt};
+pub use i8mm::{gemm_i8_nt_rowcol, gemm_i8_nt_rowtensor};
+
+use crate::quant::{
+    rowwise_quant, tensorwise_quant, tensorwise_quant_transpose,
+};
+use crate::tensor::Matrix;
+
+/// The three matmuls of a standard linear layer, full precision
+/// (Algorithm 5 — the `torch.autograd` baseline):
+/// fwd `Y = X Wᵀ`, dgrad `dX = G W`, wgrad `dW = Gᵀ X`.
+pub struct StandardLinearOps;
+
+impl StandardLinearOps {
+    /// `x [b, n]`, `w [m, n]` → `[b, m]`
+    pub fn forward(x: &Matrix, w: &Matrix) -> Matrix {
+        gemm_f32_nt(x, w)
+    }
+
+    /// `g [b, m]`, `w [m, n]` → `[b, n]`
+    pub fn dgrad(g: &Matrix, w: &Matrix) -> Matrix {
+        gemm_f32_nn(g, w)
+    }
+
+    /// `g [b, m]`, `x [b, n]` → `[m, n]` (inner dim = b = batch×seq)
+    pub fn wgrad(g: &Matrix, x: &Matrix) -> Matrix {
+        let gt = g.transpose();
+        gemm_f32_nn(&gt, x)
+    }
+}
+
+/// The SwitchBack linear layer ops (Algorithm 1) on the native substrate:
+/// int8 fwd + dgrad, f32 wgrad.
+pub struct SwitchBackOps;
+
+impl SwitchBackOps {
+    pub fn forward(x: &Matrix, w: &Matrix) -> Matrix {
+        let xq = rowwise_quant(x);
+        let wq = tensorwise_quant(w);
+        gemm_i8_nt_rowtensor(&xq, &wq)
+    }
+
+    pub fn dgrad(g: &Matrix, w: &Matrix) -> Matrix {
+        let gq = rowwise_quant(g);
+        // fused quantize+transpose: Wᵀ codes in one pass (§2.2.1)
+        let wtq = tensorwise_quant_transpose(w);
+        gemm_i8_nt_rowtensor(&gq, &wtq)
+    }
+
+    pub fn wgrad(g: &Matrix, x: &Matrix) -> Matrix {
+        StandardLinearOps::wgrad(g, x)
+    }
+}
+
+/// LLM.int8()-style ops: all three matmuls in int8 (Fig 13 comparator).
+pub struct LlmInt8Ops;
+
+impl LlmInt8Ops {
+    pub fn forward(x: &Matrix, w: &Matrix) -> Matrix {
+        let xq = rowwise_quant(x);
+        let wq = rowwise_quant(w);
+        gemm_i8_nt_rowcol(&xq, &wq)
+    }
+
+    pub fn dgrad(g: &Matrix, w: &Matrix) -> Matrix {
+        let gq = rowwise_quant(g);
+        let wt = w.transpose();
+        let wtq = rowwise_quant(&wt);
+        gemm_i8_nt_rowcol(&gq, &wtq)
+    }
+
+    pub fn wgrad(g: &Matrix, x: &Matrix) -> Matrix {
+        let gt = g.transpose();
+        let gq = rowwise_quant(&gt);
+        let xt = x.transpose();
+        let xq = rowwise_quant(&xt);
+        gemm_i8_nt_rowcol(&gq, &xq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn rel_err(a: &Matrix, b: &Matrix) -> f32 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (x, y) in a.data.iter().zip(&b.data) {
+            num += ((x - y) as f64).powi(2);
+            den += (*y as f64).powi(2);
+        }
+        (num / den.max(1e-30)).sqrt() as f32
+    }
+
+    #[test]
+    fn switchback_forward_close_to_f32() {
+        let mut rng = Rng::seed(11);
+        let x = Matrix::randn(64, 96, 1.0, &mut rng);
+        let w = Matrix::randn(48, 96, 0.1, &mut rng);
+        let yq = SwitchBackOps::forward(&x, &w);
+        let y = StandardLinearOps::forward(&x, &w);
+        let e = rel_err(&yq, &y);
+        assert!(e < 0.03, "quantization rel err too big: {e}");
+    }
+
+    #[test]
+    fn dgrad_matches_f32_within_quant_noise() {
+        let mut rng = Rng::seed(12);
+        let g = Matrix::randn(64, 48, 1.0, &mut rng);
+        let w = Matrix::randn(48, 96, 0.1, &mut rng);
+        let dq = SwitchBackOps::dgrad(&g, &w);
+        let d = StandardLinearOps::dgrad(&g, &w);
+        assert!(rel_err(&dq, &d) < 0.03);
+    }
+
+    #[test]
+    fn llmint8_wgrad_noisier_than_switchback_wgrad() {
+        // The paper's core claim (Appendix C): the int8 wgrad is the noisy
+        // one because its inner dimension is batch×seq.
+        let mut rng = Rng::seed(13);
+        let b = 2048; // large inner dim
+        let g = Matrix::randn(b, 32, 1.0, &mut rng);
+        let x = Matrix::randn(b, 32, 1.0, &mut rng);
+        let exact = StandardLinearOps::wgrad(&g, &x);
+        let sb = SwitchBackOps::wgrad(&g, &x); // f32: exact
+        let llm = LlmInt8Ops::wgrad(&g, &x); // int8: noisy
+        assert_eq!(rel_err(&sb, &exact), 0.0);
+        let e = rel_err(&llm, &exact);
+        assert!(e > 0.01, "int8 wgrad should be visibly noisy, got {e}");
+    }
+}

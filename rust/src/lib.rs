@@ -1,0 +1,38 @@
+//! # switchback — Stable and low-precision training for large-scale
+//! # vision-language models (NeurIPS 2023), reproduced in Rust + JAX + Pallas
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L1 (Pallas, build time)** — int8/fp8 quantization + fused
+//!   matmul-dequantize kernels (`python/compile/kernels/`).
+//! * **L2 (JAX, build time)** — CLIP dual-tower with precision-pluggable
+//!   linear layers, AOT-lowered to HLO text artifacts.
+//! * **L3 (this crate, runtime)** — everything on the training path:
+//!   - [`runtime`] loads + executes the AOT artifacts via PJRT,
+//!   - [`optim`] implements **StableAdamW** (the paper's Algorithm 2),
+//!     AdamW, gradient clipping, loss scalers,
+//!   - [`telemetry`] implements the RMS-spike / loss-spike analysis
+//!     apparatus (paper §3.4, Fig 9 & 16–21),
+//!   - [`data`] generates the synthetic image–text corpus (the LAION-2B
+//!     stand-in) with a scheduled distribution shift,
+//!   - [`quant`]/[`gemm`]/[`nn`] are the *measured-speed substrate*: native
+//!     int8/f32 GEMMs and hand-written fwd/bwd linear-layer variants that
+//!     regenerate the paper's Fig 3/4/13 speed results on this hardware,
+//!   - [`coordinator`] orchestrates training runs and experiment sweeps.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! model once; the `switchback` binary is then self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod gemm;
+pub mod nn;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod telemetry;
+pub mod tensor;
+pub mod util;
+
+pub use config::{OptimizerKind, TrainConfig};

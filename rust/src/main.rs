@@ -1,0 +1,241 @@
+//! `switchback` — CLI for the SwitchBack + StableAdamW reproduction.
+//!
+//! Subcommands:
+//! * `train <artifact> [--steps N --lr X --optimizer K ...]`
+//! * `exp <name> | --list | --all`   — regenerate a paper figure
+//! * `info <artifact>`               — inspect an artifact manifest
+//!
+//! Argument parsing is hand-rolled (offline build: no clap) — see
+//! `rust/src/util` for the other in-tree substrates.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use switchback::config::{OptimizerKind, ScalerKind, TrainConfig};
+use switchback::coordinator::experiments::{self, ExpCtx};
+use switchback::coordinator::Trainer;
+use switchback::data::Shift;
+use switchback::runtime::Runtime;
+
+const USAGE: &str = "\
+switchback — Stable and low-precision training for large-scale vision-language
+models (NeurIPS 2023), rust+JAX+Pallas reproduction.
+
+USAGE:
+  switchback train <artifact> [OPTIONS]     one training run
+  switchback exp <name> [OPTIONS]           regenerate a paper figure
+  switchback exp --list                     list experiments
+  switchback exp --all [--steps N]          run every experiment
+  switchback info <artifact>                inspect an artifact manifest
+
+TRAIN OPTIONS:
+  --artifact-dir DIR     (default: artifacts)
+  --steps N              (default: 300)
+  --warmup N             (default: steps/4)
+  --lr X                 (default: 2e-3)
+  --weight-decay X       (default: 0.2)
+  --beta1 X --beta2 X    (defaults: 0.9, 0.999)
+  --optimizer K          adamw | stable_adamw | lion (default: stable_adamw)
+  --grad-clip X          global-norm clipping (off by default)
+  --scaler K             none | dynamic_global | fixed_tensor (default: none)
+  --seed N               (default: 0 = exact jax init)
+  --metrics PATH         write JSONL metrics
+  --with-shifts          inject the stuck-in-the-past shift schedule
+  --quiet
+
+EXP OPTIONS:
+  --steps N              override per-experiment default step count
+  --out-dir DIR          (default: results)
+  --verbose
+";
+
+/// Tiny flag parser: positionals + `--key value` + boolean `--key`.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+const BOOL_FLAGS: &[&str] =
+    &["--list", "--all", "--verbose", "--quiet", "--with-shifts", "-v", "-q"];
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = vec![];
+        let mut flags = HashMap::new();
+        let mut bools = vec![];
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a.starts_with('-') {
+                if BOOL_FLAGS.contains(&a.as_str()) {
+                    bools.push(a.clone());
+                } else {
+                    let Some(v) = argv.get(i + 1) else {
+                        bail!("flag {a} expects a value");
+                    };
+                    flags.insert(a.trim_start_matches('-').to_string(), v.clone());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Self { positional, flags, bools })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v:?}")),
+        }
+    }
+
+    fn opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v:?}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let Some(artifact) = args.positional.first() else {
+        bail!("train: missing <artifact> (e.g. switchback_int8_small_b32)");
+    };
+    let steps: u64 = args.get("steps", 300)?;
+    let seed: u64 = args.get("seed", 0)?;
+    let optimizer = args
+        .flags
+        .get("optimizer")
+        .map(|s| OptimizerKind::parse(s).ok_or_else(|| anyhow::anyhow!("bad optimizer {s}")))
+        .transpose()?
+        .unwrap_or(OptimizerKind::StableAdamw);
+    let scaler = args
+        .flags
+        .get("scaler")
+        .map(|s| ScalerKind::parse(s).ok_or_else(|| anyhow::anyhow!("bad scaler {s}")))
+        .transpose()?
+        .unwrap_or(ScalerKind::None);
+    let cfg = TrainConfig {
+        artifact: artifact.clone(),
+        artifact_dir: args.get("artifact-dir", "artifacts".to_string())?,
+        steps,
+        warmup: args.get("warmup", steps / 4)?,
+        lr: args.get("lr", 2e-3)?,
+        weight_decay: args.get("weight-decay", 0.2)?,
+        beta1: args.get("beta1", 0.9)?,
+        beta2: args.get("beta2", 0.999)?,
+        optimizer,
+        beta2_lambda: args.opt("beta2-lambda")?,
+        grad_clip: args.opt("grad-clip")?,
+        scaler,
+        seed,
+        reinit: seed != 0,
+        shifts: if args.has("--with-shifts") {
+            vec![
+                Shift { at_step: steps * 55 / 100, image_gain: 6.0, remap_concepts: false },
+                Shift { at_step: steps * 75 / 100, image_gain: 1.0 / 6.0, remap_concepts: true },
+            ]
+        } else {
+            vec![]
+        },
+        probe_every: 1,
+        metrics_path: args.flags.get("metrics").cloned(),
+        eval_every: 0,
+        eval_per_concept: 4,
+    };
+    let runtime = Runtime::cpu()?;
+    println!("platform: {}", runtime.platform());
+    println!("config  : {}", cfg.to_json());
+    let mut trainer = Trainer::new(&runtime, cfg)?;
+    let res = trainer.run(!args.has("--quiet") && !args.has("-q"))?;
+    println!(
+        "done: final loss {:.4}, tail loss {:.4}, zero-shot acc {}, {:.1} steps/s{}",
+        res.final_loss,
+        res.tail_loss,
+        res.zero_shot_acc
+            .map(|v| format!("{:.1}%", v * 100.0))
+            .unwrap_or_else(|| "n/a".into()),
+        res.steps_per_sec,
+        if res.diverged { " [DIVERGED]" } else { "" },
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    if args.has("--list") || (args.positional.is_empty() && !args.has("--all")) {
+        println!("available experiments:");
+        for (name, desc) in experiments::list() {
+            println!("  {name:<16} {desc}");
+        }
+        return Ok(());
+    }
+    let ctx = ExpCtx::new(
+        Runtime::cpu()?,
+        args.get("steps", 0)?,
+        args.get("out-dir", "results".to_string())?,
+        args.has("--verbose") || args.has("-v"),
+    );
+    if args.has("--all") {
+        for (name, _) in experiments::list() {
+            println!("\n########## {name} ##########");
+            experiments::run_experiment(&ctx, name)?;
+        }
+    } else {
+        experiments::run_experiment(&ctx, &args.positional[0])?;
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let Some(artifact) = args.positional.first() else {
+        bail!("info: missing <artifact>");
+    };
+    let dir: String = args.get("artifact-dir", "artifacts".to_string())?;
+    let runtime = Runtime::cpu()?;
+    let art = runtime.load(&dir, artifact)?;
+    let m = &art.manifest;
+    println!("artifact : {}", m.name);
+    println!("variant  : {}   size: {}   batch: {}", m.variant, m.size, m.batch);
+    println!(
+        "model    : dim {} / vision {}x / text {}x / heads {} / layer_scale {}",
+        m.config.dim, m.config.vision_blocks, m.config.text_blocks, m.config.heads,
+        m.config.layer_scale
+    );
+    println!("tensors  : {}   params: {}", m.n_tensors, m.n_params);
+    let (pe, mid) = art.probe_indices();
+    println!(
+        "probes   : patch_embed = {}, mid control = {}",
+        m.tensors[pe].name, m.tensors[mid].name
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "exp" => cmd_exp(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}

@@ -1,0 +1,247 @@
+//! Linear-layer variants with explicit forward/backward (the native mirror
+//! of `python/compile/layers.py`), including the memory-efficient
+//! **SwitchBackM** (Algorithm 3) whose backward dequantizes the saved int8
+//! activations instead of keeping f32 around.
+
+use crate::gemm::{
+    gemm_i8_nt_rowcol, gemm_i8_nt_rowtensor, LlmInt8Ops, StandardLinearOps,
+    SwitchBackOps,
+};
+use crate::quant::{
+    dequant_rowwise, rowwise_quant, tensorwise_quant_transpose, QuantizedRow,
+};
+use crate::tensor::{Matrix, Rng};
+
+/// Which precision scheme the layer uses (paper §2.2 + Appendix B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinearKind {
+    /// Algorithm 5: all three matmuls full precision.
+    Standard,
+    /// Algorithm 1: int8 fwd + dgrad, f32 wgrad; saves f32 X for backward.
+    SwitchBack,
+    /// Algorithm 3: as SwitchBack but saves only int8 X (4× less memory),
+    /// paying one dequantize in the backward.
+    SwitchBackM,
+    /// All three matmuls int8 (LLM.int8()-style).
+    LlmInt8,
+}
+
+impl LinearKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Standard => "standard",
+            Self::SwitchBack => "switchback",
+            Self::SwitchBackM => "switchback_m",
+            Self::LlmInt8 => "llmint8",
+        }
+    }
+}
+
+/// What the forward pass saves for the backward pass.
+pub enum LinearCache {
+    /// f32 activations (Standard / SwitchBack / LlmInt8)
+    Full(Matrix),
+    /// int8 activations + state (SwitchBackM)
+    Quantized(QuantizedRow),
+}
+
+impl LinearCache {
+    /// Bytes retained for the backward pass — the Algorithm 3 selling point.
+    pub fn retained_bytes(&self) -> usize {
+        match self {
+            Self::Full(m) => m.data.len() * 4,
+            Self::Quantized(q) => q.codes.data.len() + q.state.len() * 4,
+        }
+    }
+}
+
+/// A bias-free linear layer `y = x Wᵀ` with pluggable precision.
+pub struct Linear {
+    pub w: Matrix, // [out, in]
+    pub kind: LinearKind,
+}
+
+impl Linear {
+    pub fn new(out_dim: usize, in_dim: usize, kind: LinearKind, rng: &mut Rng) -> Self {
+        let std = (2.0 / (in_dim + out_dim) as f32).sqrt();
+        Self { w: Matrix::randn(out_dim, in_dim, std, rng), kind }
+    }
+
+    /// Forward: `x [b, in] → [b, out]`, plus the backward cache.
+    pub fn forward(&self, x: &Matrix) -> (Matrix, LinearCache) {
+        match self.kind {
+            LinearKind::Standard => {
+                (StandardLinearOps::forward(x, &self.w), LinearCache::Full(x.clone()))
+            }
+            LinearKind::SwitchBack => {
+                (SwitchBackOps::forward(x, &self.w), LinearCache::Full(x.clone()))
+            }
+            LinearKind::SwitchBackM => {
+                // quantize once, reuse codes for both the matmul and the cache
+                let xq = rowwise_quant(x);
+                let wq = crate::quant::tensorwise_quant(&self.w);
+                let y = gemm_i8_nt_rowtensor(&xq, &wq);
+                (y, LinearCache::Quantized(xq))
+            }
+            LinearKind::LlmInt8 => {
+                (LlmInt8Ops::forward(x, &self.w), LinearCache::Full(x.clone()))
+            }
+        }
+    }
+
+    /// Backward: upstream `g [b, out]` → `(dx [b, in], dw [out, in])`.
+    pub fn backward(&self, cache: &LinearCache, g: &Matrix) -> (Matrix, Matrix) {
+        match (self.kind, cache) {
+            (LinearKind::Standard, LinearCache::Full(x)) => (
+                StandardLinearOps::dgrad(g, &self.w),
+                StandardLinearOps::wgrad(g, x),
+            ),
+            (LinearKind::SwitchBack, LinearCache::Full(x)) => (
+                SwitchBackOps::dgrad(g, &self.w),
+                SwitchBackOps::wgrad(g, x),
+            ),
+            (LinearKind::SwitchBackM, LinearCache::Quantized(xq)) => {
+                // Algorithm 3: dequantize X from int8, then f32 wgrad.
+                let x = dequant_rowwise(xq);
+                let dw = StandardLinearOps::wgrad(g, &x);
+                let dx = SwitchBackOps::dgrad(g, &self.w);
+                (dx, dw)
+            }
+            (LinearKind::LlmInt8, LinearCache::Full(x)) => {
+                let gq = rowwise_quant(g);
+                let wtq_t = {
+                    // row-wise per-output over Wᵀ — build via transpose
+                    let wt = self.w.transpose();
+                    rowwise_quant(&wt)
+                };
+                let dx = gemm_i8_nt_rowcol(&gq, &wtq_t);
+                let dw = LlmInt8Ops::wgrad(g, x);
+                (dx, dw)
+            }
+            _ => unreachable!("cache/kind mismatch"),
+        }
+    }
+}
+
+// keep the fused transpose path exercised (used directly by the benches)
+#[allow(dead_code)]
+fn _fused_transpose_is_public(w: &Matrix) {
+    let _ = tensorwise_quant_transpose(w);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel_err(a: &Matrix, b: &Matrix) -> f32 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (x, y) in a.data.iter().zip(&b.data) {
+            num += ((x - y) as f64).powi(2);
+            den += (*y as f64).powi(2);
+        }
+        (num / den.max(1e-30)).sqrt() as f32
+    }
+
+    /// Analytic gradients of the Standard layer vs finite differences on a
+    /// scalar loss L = sum(y ⊙ r).
+    #[test]
+    fn standard_backward_matches_finite_difference() {
+        let mut rng = Rng::seed(77);
+        let lin = Linear::new(3, 4, LinearKind::Standard, &mut rng);
+        let x = Matrix::randn(2, 4, 1.0, &mut rng);
+        let r = Matrix::randn(2, 3, 1.0, &mut rng);
+        let (_, cache) = lin.forward(&x);
+        let (dx, dw) = lin.backward(&cache, &r);
+        let h = 1e-3;
+        for i in 0..x.data.len() {
+            let mut xp = x.clone();
+            xp.data[i] += h;
+            let mut xm = x.clone();
+            xm.data[i] -= h;
+            let lp: f32 = lin.forward(&xp).0.data.iter().zip(&r.data).map(|(a, b)| a * b).sum();
+            let lm: f32 = lin.forward(&xm).0.data.iter().zip(&r.data).map(|(a, b)| a * b).sum();
+            assert!((dx.data[i] - (lp - lm) / (2.0 * h)).abs() < 1e-2);
+        }
+        for i in 0..lin.w.data.len() {
+            let mut lp_lin = Linear { w: lin.w.clone(), kind: lin.kind };
+            lp_lin.w.data[i] += h;
+            let mut lm_lin = Linear { w: lin.w.clone(), kind: lin.kind };
+            lm_lin.w.data[i] -= h;
+            let lp: f32 =
+                lp_lin.forward(&x).0.data.iter().zip(&r.data).map(|(a, b)| a * b).sum();
+            let lm: f32 =
+                lm_lin.forward(&x).0.data.iter().zip(&r.data).map(|(a, b)| a * b).sum();
+            assert!((dw.data[i] - (lp - lm) / (2.0 * h)).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn switchback_close_to_standard() {
+        let mut rng = Rng::seed(78);
+        let w = Matrix::randn(32, 48, 0.1, &mut rng);
+        let sb = Linear { w: w.clone(), kind: LinearKind::SwitchBack };
+        let st = Linear { w, kind: LinearKind::Standard };
+        let x = Matrix::randn(64, 48, 1.0, &mut rng);
+        let g = Matrix::randn(64, 32, 1.0, &mut rng);
+        let (ysb, csb) = sb.forward(&x);
+        let (yst, cst) = st.forward(&x);
+        assert!(rel_err(&ysb, &yst) < 0.03);
+        let (dxsb, dwsb) = sb.backward(&csb, &g);
+        let (dxst, dwst) = st.backward(&cst, &g);
+        assert!(rel_err(&dxsb, &dxst) < 0.03);
+        // wgrad identical: both are exact f32
+        assert_eq!(dwsb.max_abs_diff(&dwst), 0.0);
+    }
+
+    #[test]
+    fn switchbackm_saves_memory_and_stays_close() {
+        let mut rng = Rng::seed(79);
+        let w = Matrix::randn(32, 48, 0.1, &mut rng);
+        let sbm = Linear { w: w.clone(), kind: LinearKind::SwitchBackM };
+        let sb = Linear { w, kind: LinearKind::SwitchBack };
+        let x = Matrix::randn(64, 48, 1.0, &mut rng);
+        let g = Matrix::randn(64, 32, 1.0, &mut rng);
+        let (ym, cm) = sbm.forward(&x);
+        let (yf, cf) = sb.forward(&x);
+        assert_eq!(ym.max_abs_diff(&yf), 0.0, "same int8 forward");
+        assert!(cm.retained_bytes() * 3 < cf.retained_bytes(), "≈4× smaller cache");
+        let (dxm, dwm) = sbm.backward(&cm, &g);
+        let (dxf, dwf) = sb.backward(&cf, &g);
+        assert_eq!(dxm.max_abs_diff(&dxf), 0.0);
+        // wgrad differs only by the int8 round-trip of X
+        assert!(rel_err(&dwm, &dwf) < 0.03);
+    }
+
+    #[test]
+    fn llmint8_wgrad_noise_variance_grows_with_inner_dim() {
+        // Appendix C, measured: the *absolute* quantization-noise variance of
+        // the int8 wgrad grows ∝ the inner dimension (= batch×seq), eq. (14).
+        let mut rng = Rng::seed(80);
+        let w = Matrix::randn(16, 24, 0.1, &mut rng);
+        let noise_var = |b: usize, rng: &mut Rng| {
+            let llm = Linear { w: w.clone(), kind: LinearKind::LlmInt8 };
+            let st = Linear { w: w.clone(), kind: LinearKind::Standard };
+            let x = Matrix::randn(b, 24, 1.0, rng);
+            let g = Matrix::randn(b, 16, 1.0, rng);
+            let (_, cl) = llm.forward(&x);
+            let (_, cs) = st.forward(&x);
+            let (_, dwl) = llm.backward(&cl, &g);
+            let (_, dws) = st.backward(&cs, &g);
+            let n = dwl.data.len() as f64;
+            dwl.data
+                .iter()
+                .zip(&dws.data)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                / n
+        };
+        let v_small = noise_var(64, &mut rng);
+        let v_big = noise_var(4096, &mut rng);
+        assert!(
+            v_big > 8.0 * v_small,
+            "noise variance should scale ~linearly with inner dim (64→4096): \
+             {v_small} vs {v_big}"
+        );
+    }
+}

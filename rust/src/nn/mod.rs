@@ -1,0 +1,123 @@
+//! Native neural-network substrate: hand-written forward/backward for the
+//! linear-layer variants and a full transformer block.
+//!
+//! This is the *measured-speed* half of the reproduction (the accuracy
+//! experiments run through the AOT'd JAX model — see [`crate::runtime`]).
+//! The paper's Fig 3/4/13 compare wall-clock of SwitchBack vs standard vs
+//! LLM.int8() linear layers inside real training steps; those comparisons
+//! need kernels that actually run at different speeds, which the
+//! interpret-mode Pallas path cannot provide on CPU.  Here every variant's
+//! three matmuls run on the native [`crate::gemm`] kernels with real int8
+//! arithmetic.
+//!
+//! Numerics are cross-checked against the [`crate::quant`] +
+//! finite-difference oracles in the tests.
+
+mod block;
+mod linear;
+
+pub use block::{BlockGrads, TransformerBlock};
+pub use linear::{Linear, LinearCache, LinearKind};
+
+use crate::tensor::Matrix;
+
+/// GELU (tanh approximation, matching `jax.nn.gelu(approximate=True)`).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d gelu / dx.
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let x3 = 0.044715 * x * x * x;
+    let t = (C * (x + x3)).tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// Row-wise softmax in place.
+pub fn softmax_rows(m: &mut Matrix) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Softmax backward: given `s = softmax(z)` and upstream `ds`, returns
+/// `dz = s ⊙ (ds − ⟨ds, s⟩)` row-wise, in place over `ds`.
+pub fn softmax_backward_rows(s: &Matrix, ds: &mut Matrix) {
+    for r in 0..s.rows {
+        let srow = s.row(r);
+        let drow = ds.row_mut(r);
+        let dot: f32 = srow.iter().zip(drow.iter()).map(|(a, b)| a * b).sum();
+        for (d, &sv) in drow.iter_mut().zip(srow) {
+            *d = sv * (*d - dot);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_matches_known_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let h = 1e-3;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut m);
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(m.at(0, 2) > m.at(0, 1));
+    }
+
+    #[test]
+    fn softmax_backward_matches_finite_difference() {
+        let z = Matrix::from_vec(1, 4, vec![0.1, -0.2, 0.5, 0.0]);
+        let upstream = vec![0.3f32, -0.1, 0.2, 0.4];
+        let mut s = z.clone();
+        softmax_rows(&mut s);
+        let mut ds = Matrix::from_vec(1, 4, upstream.clone());
+        softmax_backward_rows(&s, &mut ds);
+        for i in 0..4 {
+            let h = 1e-3;
+            let mut zp = z.clone();
+            zp.data[i] += h;
+            softmax_rows(&mut zp);
+            let mut zm = z.clone();
+            zm.data[i] -= h;
+            softmax_rows(&mut zm);
+            let mut fd = 0.0;
+            for j in 0..4 {
+                fd += upstream[j] * (zp.data[j] - zm.data[j]) / (2.0 * h);
+            }
+            assert!((ds.data[i] - fd).abs() < 1e-3, "i={i}: {} vs {fd}", ds.data[i]);
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! AdamW and StableAdamW (paper Algorithm 2).
+//!
+//! Algorithm 2 writes Adam in the AdaFactor §7.1 form: the bias correction
+//! is folded into the decay rates,
+//! `β̂₁(t) = β₁ (1−β₁^{t−1})/(1−β₁^t)`, `β̂₂(t)` analogously — equivalent to
+//! the usual `v̂ = v/(1−β^t)` debiasing [54].  With `update_clipping` on,
+//! the per-tensor learning rate becomes `α / max(1, RMS_t)` where
+//! `RMS_t = sqrt(mean(g²/max(u, ε²)))` — AdaFactor's update clipping with
+//! d = 1, computed **independently per tensor** ("for implementation
+//! convenience", §3.5; that choice is load-bearing: it is what lets the
+//! patch embedding be slowed without touching healthy layers).
+//!
+//! The ε inside the max follows Appendix E.2 exactly (divide-by-zero
+//! guard: `g²/maximum(u, ε²)`).
+
+use super::{Optimizer, ParamMeta, StepStats};
+use crate::util::threads::num_threads;
+
+/// Hyperparameters for [`AdamW`] / StableAdamW.
+#[derive(Debug, Clone)]
+pub struct AdamWConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    /// `true` ⇒ StableAdamW (Algorithm 2); `false` ⇒ plain AdamW.
+    pub update_clipping: bool,
+    /// Optional β₂ schedule `1 − t^{−λ}` (Fig 15); overrides `beta2`.
+    pub beta2_schedule_lambda: Option<f32>,
+}
+
+impl Default for AdamWConfig {
+    fn default() -> Self {
+        Self {
+            beta1: 0.9,
+            beta2: 0.999, // the PyTorch default the paper shows is spike-prone
+            eps: 1e-6,    // Appendix E.2 uses 1e-6
+            weight_decay: 0.2,
+            update_clipping: false,
+            beta2_schedule_lambda: None,
+        }
+    }
+}
+
+impl AdamWConfig {
+    pub fn stable(beta2: f32) -> Self {
+        Self { beta2, update_clipping: true, ..Self::default() }
+    }
+
+    pub fn plain(beta2: f32) -> Self {
+        Self { beta2, update_clipping: false, ..Self::default() }
+    }
+}
+
+struct TensorState {
+    v: Vec<f32>, // first moment
+    u: Vec<f32>, // second moment
+    decay: bool,
+}
+
+/// AdamW / StableAdamW over flat per-tensor buffers.
+pub struct AdamW {
+    cfg: AdamWConfig,
+    state: Vec<TensorState>,
+    t: u64,
+}
+
+impl AdamW {
+    pub fn new(cfg: AdamWConfig, metas: &[ParamMeta], sizes: &[usize]) -> Self {
+        assert_eq!(metas.len(), sizes.len());
+        let state = metas
+            .iter()
+            .zip(sizes)
+            .map(|(m, &n)| TensorState {
+                v: vec![0.0; n],
+                u: vec![0.0; n],
+                decay: m.decay,
+            })
+            .collect();
+        Self { cfg, state, t: 0 }
+    }
+
+    /// Effective β₂ at step `t` (≥1): scheduled or constant.
+    fn beta2_at(&self, t: u64) -> f32 {
+        match self.cfg.beta2_schedule_lambda {
+            Some(lambda) => 1.0 - (t as f32).powf(-lambda),
+            None => self.cfg.beta2,
+        }
+    }
+
+    /// Second-moment view for a tensor (telemetry / tests).
+    pub fn second_moment(&self, i: usize) -> &[f32] {
+        &self.state[i].u
+    }
+}
+
+impl Optimizer for AdamW {
+    fn step(
+        &mut self,
+        params: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+        skip_mask: Option<&[bool]>,
+    ) -> StepStats {
+        self.t += 1;
+        let t = self.t;
+        let b1 = self.cfg.beta1;
+        let b2 = self.beta2_at(t);
+        // Correction folded into the betas (Algorithm 2 / AdaFactor §7.1).
+        let b1_hat = if t == 1 {
+            0.0
+        } else {
+            b1 * (1.0 - b1.powi(t as i32 - 1)) / (1.0 - b1.powi(t as i32))
+        };
+        let b2_hat = if t == 1 {
+            0.0
+        } else {
+            b2 * (1.0 - b2.powi(t as i32 - 1)) / (1.0 - b2.powi(t as i32))
+        };
+        let eps = self.cfg.eps;
+        let eps2 = eps * eps;
+        let wd = self.cfg.weight_decay;
+        let clip = self.cfg.update_clipping;
+
+        // Per-tensor update body (runs on worker threads below).
+        let update_one = |i: usize, p: &mut Vec<f32>, st: &mut TensorState,
+                          g: &Vec<f32>| -> (f32, f32) {
+            if skip_mask.map(|m| m[i]).unwrap_or(false) {
+                return (1.0, 1.0); // tensor-level skip: freeze moments too
+            }
+            // Moving averages + RMS_t in one pass.
+            let mut ratio_sum = 0.0f64;
+            for j in 0..p.len() {
+                let gj = g[j];
+                let g2 = gj * gj;
+                st.v[j] = b1_hat * st.v[j] + (1.0 - b1_hat) * gj;
+                st.u[j] = b2_hat * st.u[j] + (1.0 - b2_hat) * g2;
+                ratio_sum += (g2 / st.u[j].max(eps2)) as f64;
+            }
+            let rms = if p.is_empty() {
+                1.0
+            } else {
+                (ratio_sum / p.len() as f64).sqrt() as f32
+            };
+            // Update clipping: η = α / max(1, RMS_t)  (per tensor).
+            let lr_mult = if clip { 1.0 / rms.max(1.0) } else { 1.0 };
+            let eta = lr * lr_mult;
+            let decay = if st.decay { eta * wd } else { 0.0 };
+            for j in 0..p.len() {
+                let upd = st.v[j] / (st.u[j].sqrt() + eps);
+                p[j] -= decay * p[j] + eta * upd;
+            }
+            (rms, lr_mult)
+        };
+
+        let n = params.len();
+        let mut results = vec![(1.0f32, 1.0f32); n];
+        let workers = num_threads().min(n.max(1));
+        let per = n.div_ceil(workers.max(1));
+        std::thread::scope(|scope| {
+            let mut p_rest: &mut [Vec<f32>] = params;
+            let mut s_rest: &mut [TensorState] = &mut self.state;
+            let mut r_rest: &mut [(f32, f32)] = &mut results;
+            let mut g_rest: &[Vec<f32>] = grads;
+            let mut idx0 = 0usize;
+            let body = &update_one;
+            while !p_rest.is_empty() {
+                let take = per.min(p_rest.len());
+                let (pc, pt) = p_rest.split_at_mut(take);
+                p_rest = pt;
+                let (sc, st_) = s_rest.split_at_mut(take);
+                s_rest = st_;
+                let (rc, rt) = r_rest.split_at_mut(take);
+                r_rest = rt;
+                let (gc, gt) = g_rest.split_at(take);
+                g_rest = gt;
+                let my_idx0 = idx0;
+                idx0 += take;
+                scope.spawn(move || {
+                    for j in 0..take {
+                        rc[j] = body(my_idx0 + j, &mut pc[j], &mut sc[j], &gc[j]);
+                    }
+                });
+            }
+        });
+        let (rms, lr_mult): (Vec<f32>, Vec<f32>) = results.into_iter().unzip();
+        let skipped_tensors =
+            skip_mask.map(|m| m.iter().filter(|&&s| s).count()).unwrap_or(0);
+        StepStats { rms, lr_mult, skipped_tensors, skipped_step: false }
+    }
+
+    fn state_floats_per_param(&self) -> usize {
+        2 // v and u
+    }
+
+    fn name(&self) -> &'static str {
+        if self.cfg.update_clipping {
+            "stable_adamw"
+        } else {
+            "adamw"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(n: usize) -> Vec<ParamMeta> {
+        (0..n)
+            .map(|i| ParamMeta {
+                name: format!("p{i}"),
+                decay: false,
+                kind: "weight".into(),
+            })
+            .collect()
+    }
+
+    /// On a constant gradient, debiased Adam's first step is
+    /// θ ← θ − lr · g/(|g| + ε): the moments debias to exactly g and g².
+    #[test]
+    fn first_step_is_sign_times_lr() {
+        let mut opt = AdamW::new(AdamWConfig::plain(0.999), &meta(1), &[2]);
+        let mut p = vec![vec![1.0f32, -1.0]];
+        let g = vec![vec![0.5f32, -2.0]];
+        opt.step(&mut p, &g, 0.1, None);
+        assert!((p[0][0] - (1.0 - 0.1)).abs() < 1e-3, "{}", p[0][0]);
+        assert!((p[0][1] - (-1.0 + 0.1)).abs() < 1e-3);
+    }
+
+    /// Quadratic convergence sanity: minimize 0.5*x².
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = AdamW::new(AdamWConfig::plain(0.99), &meta(1), &[1]);
+        let mut p = vec![vec![5.0f32]];
+        for _ in 0..500 {
+            let g = vec![vec![p[0][0]]];
+            opt.step(&mut p, &g, 0.05, None);
+        }
+        assert!(p[0][0].abs() < 0.05, "did not converge: {}", p[0][0]);
+    }
+
+    /// The stuck-in-the-past scenario (§3.4): after a long quiet phase, a
+    /// sudden large gradient must produce RMS ≫ 1, and StableAdamW must
+    /// shrink the applied update relative to plain AdamW.
+    #[test]
+    fn update_clipping_tames_stale_second_moment() {
+        let metas = meta(1);
+        let mk = |clip: bool| AdamW::new(
+            AdamWConfig { update_clipping: clip, beta2: 0.999, ..Default::default() },
+            &metas,
+            &[1],
+        );
+        let run = |mut opt: AdamW| {
+            let mut p = vec![vec![0.0f32]];
+            // quiet phase: tiny gradients
+            for _ in 0..300 {
+                opt.step(&mut p, &vec![vec![1e-4]], 1e-3, None);
+            }
+            let before = p[0][0];
+            // signal change: gradient jumps 4 orders of magnitude
+            let stats = opt.step(&mut p, &vec![vec![1.0f32]], 1e-3, None);
+            ((p[0][0] - before).abs(), stats.rms[0])
+        };
+        let (jump_plain, rms_plain) = run(mk(false));
+        let (jump_stable, rms_stable) = run(mk(true));
+        assert!(rms_plain > 10.0, "RMS should spike, got {rms_plain}");
+        assert!((rms_stable - rms_plain).abs() < 1e-3);
+        assert!(
+            jump_stable < jump_plain / 5.0,
+            "clipped update {jump_stable} not ≪ unclipped {jump_plain}"
+        );
+    }
+
+    /// RMS_t ≈ 1 when the gradient distribution is stationary.
+    #[test]
+    fn rms_near_one_when_stationary() {
+        let mut opt = AdamW::new(AdamWConfig::stable(0.99), &meta(1), &[64]);
+        let mut p = vec![vec![0.0f32; 64]];
+        let mut rng = crate::tensor::Rng::seed(44);
+        let mut last = 0.0;
+        for _ in 0..200 {
+            let mut g = vec![0.0f32; 64];
+            rng.fill_normal(&mut g, 1.0);
+            let stats = opt.step(&mut p, &vec![g], 1e-4, None);
+            last = stats.rms[0];
+        }
+        assert!(last > 0.5 && last < 2.3, "stationary RMS should hover near 1: {last}");
+    }
+
+    #[test]
+    fn weight_decay_respects_mask() {
+        let metas = vec![
+            ParamMeta { name: "w".into(), decay: true, kind: "weight".into() },
+            ParamMeta { name: "ln".into(), decay: false, kind: "norm".into() },
+        ];
+        let mut opt = AdamW::new(
+            AdamWConfig { weight_decay: 0.5, ..AdamWConfig::plain(0.999) },
+            &metas,
+            &[1, 1],
+        );
+        let mut p = vec![vec![1.0f32], vec![1.0f32]];
+        // zero gradient: only decay should act
+        opt.step(&mut p, &vec![vec![0.0], vec![0.0]], 0.1, None);
+        assert!(p[0][0] < 1.0, "decayed tensor should shrink");
+        assert_eq!(p[1][0], 1.0, "no-decay tensor must not shrink");
+    }
+
+    #[test]
+    fn skip_mask_freezes_tensor_and_moments() {
+        let mut opt = AdamW::new(AdamWConfig::plain(0.999), &meta(2), &[1, 1]);
+        let mut p = vec![vec![1.0f32], vec![1.0f32]];
+        let g = vec![vec![1.0f32], vec![1.0f32]];
+        let stats = opt.step(&mut p, &g, 0.1, Some(&[true, false]));
+        assert_eq!(p[0][0], 1.0);
+        assert!(p[1][0] < 1.0);
+        assert_eq!(stats.skipped_tensors, 1);
+        assert_eq!(opt.second_moment(0)[0], 0.0, "skipped moments must not advance");
+        assert!(opt.second_moment(1)[0] > 0.0);
+    }
+
+    #[test]
+    fn beta2_schedule_takes_over() {
+        let cfg = AdamWConfig {
+            beta2_schedule_lambda: Some(0.5),
+            ..AdamWConfig::plain(0.999)
+        };
+        let opt = AdamW::new(cfg, &meta(1), &[1]);
+        assert!((opt.beta2_at(4) - 0.5).abs() < 1e-6); // 1 - 4^-0.5
+        assert!((opt.beta2_at(100) - 0.9).abs() < 1e-6); // 1 - 100^-0.5
+    }
+}

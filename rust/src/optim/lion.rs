@@ -1,0 +1,128 @@
+//! Lion [7] — the sign-update optimizer from Appendix E's Q&A.
+//!
+//! Lion never divides by a second-moment estimate, so it is structurally
+//! immune to the stuck-in-the-past scenario; the paper notes it slightly
+//! under-performs AdamW at ViT-Huge scale.  Included as a comparison
+//! baseline for the stability experiments.
+
+use super::{Optimizer, ParamMeta, StepStats};
+
+#[derive(Debug, Clone)]
+pub struct LionConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for LionConfig {
+    fn default() -> Self {
+        Self { beta1: 0.9, beta2: 0.99, weight_decay: 0.2 }
+    }
+}
+
+pub struct Lion {
+    cfg: LionConfig,
+    m: Vec<Vec<f32>>,
+    decay: Vec<bool>,
+}
+
+impl Lion {
+    pub fn new(cfg: LionConfig, metas: &[ParamMeta], sizes: &[usize]) -> Self {
+        Self {
+            cfg,
+            m: sizes.iter().map(|&n| vec![0.0; n]).collect(),
+            decay: metas.iter().map(|m| m.decay).collect(),
+        }
+    }
+}
+
+impl Optimizer for Lion {
+    fn step(
+        &mut self,
+        params: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+        skip_mask: Option<&[bool]>,
+    ) -> StepStats {
+        let (b1, b2, wd) = (self.cfg.beta1, self.cfg.beta2, self.cfg.weight_decay);
+        for (i, ((p, m), g)) in params
+            .iter_mut()
+            .zip(self.m.iter_mut())
+            .zip(grads.iter())
+            .enumerate()
+        {
+            if skip_mask.map(|s| s[i]).unwrap_or(false) {
+                continue;
+            }
+            let decay = if self.decay[i] { lr * wd } else { 0.0 };
+            for j in 0..p.len() {
+                // update direction: sign of interpolated momentum
+                let c = b1 * m[j] + (1.0 - b1) * g[j];
+                p[j] -= decay * p[j] + lr * c.signum();
+                // momentum EMA
+                m[j] = b2 * m[j] + (1.0 - b2) * g[j];
+            }
+        }
+        let skipped =
+            skip_mask.map(|m| m.iter().filter(|&&s| s).count()).unwrap_or(0);
+        StepStats { skipped_tensors: skipped, ..StepStats::empty(params.len()) }
+    }
+
+    fn state_floats_per_param(&self) -> usize {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "lion"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(n: usize) -> Vec<ParamMeta> {
+        (0..n)
+            .map(|i| ParamMeta { name: format!("p{i}"), decay: false, kind: "w".into() })
+            .collect()
+    }
+
+    #[test]
+    fn updates_are_bounded_by_lr() {
+        let mut opt = Lion::new(LionConfig::default(), &meta(1), &[2]);
+        let mut p = vec![vec![0.0f32, 0.0]];
+        // enormous gradient — update magnitude must still be exactly lr
+        opt.step(&mut p, &vec![vec![1e8, -1e8]], 0.01, None);
+        assert!((p[0][0] + 0.01).abs() < 1e-7);
+        assert!((p[0][1] - 0.01).abs() < 1e-7);
+    }
+
+    #[test]
+    fn immune_to_stale_history() {
+        // Same scenario as AdamW's stuck-in-the-past test: the jump after a
+        // signal change is the same size as any other step.
+        let mut opt = Lion::new(LionConfig::default(), &meta(1), &[1]);
+        let mut p = vec![vec![0.0f32]];
+        for _ in 0..300 {
+            opt.step(&mut p, &vec![vec![1e-4]], 1e-3, None);
+        }
+        let before = p[0][0];
+        opt.step(&mut p, &vec![vec![1.0]], 1e-3, None);
+        assert!((p[0][0] - before).abs() <= 1e-3 + 1e-7);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = Lion::new(
+            LionConfig { weight_decay: 0.0, ..Default::default() },
+            &meta(1),
+            &[1],
+        );
+        let mut p = vec![vec![3.0f32]];
+        for _ in 0..2000 {
+            let g = vec![vec![p[0][0]]];
+            opt.step(&mut p, &g, 0.01, None);
+        }
+        assert!(p[0][0].abs() < 0.05);
+    }
+}

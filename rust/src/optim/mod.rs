@@ -1,0 +1,133 @@
+//! Optimizers + stability interventions (paper §3).
+//!
+//! The paper's stability contribution — **StableAdamW** (Algorithm 2:
+//! AdamW + AdaFactor update clipping) — lives here, on the rust training
+//! path, consuming gradients computed by the AOT'd L2 model every step.
+//!
+//! * [`AdamW`] — the de-facto baseline, written in the AdaFactor §7.1 form
+//!   (bias correction folded into the βs) exactly as Algorithm 2 does.
+//! * [`AdamW`] with `update_clipping = true` — **StableAdamW**: per-tensor
+//!   `RMS_t = sqrt(mean(g²/max(u, ε²)))` divides the learning rate via
+//!   `1/max(1, RMS_t)`.
+//! * [`Lion`] — the sign-update optimizer discussed in Appendix E (immune
+//!   to the stuck-in-the-past scenario by construction).
+//! * [`clip_global_norm`] — the gradient-clipping intervention StableAdamW
+//!   is compared against in Fig 10.
+//! * [`scaler`] — the §3.6 loss scalers (PyTorch-style dynamic global vs
+//!   the paper's fixed tensor-level scaler).
+//! * [`schedules`] — warmup+cosine LR and the `1 − t^{−λ}` β₂ schedule
+//!   (Fig 15).
+
+mod adamw;
+mod lion;
+pub mod scaler;
+pub mod schedules;
+
+pub use adamw::{AdamW, AdamWConfig};
+pub use lion::{Lion, LionConfig};
+
+/// Per-tensor optimizer metadata (from the artifact manifest).
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    /// weight decay applies (weight matrices only, not LN/bias/embeddings)
+    pub decay: bool,
+    /// "patch_embed" | "embedding" | "weight" | "norm" | ... (telemetry tag)
+    pub kind: String,
+}
+
+/// What a step reports back to telemetry.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    /// Per-tensor `RMS_t` (1.0 for non-adaptive optimizers).  This is the
+    /// quantity whose spikes *precede* loss spikes (paper §3.4, Fig 9).
+    pub rms: Vec<f32>,
+    /// Per-tensor lr multiplier actually applied (`1/max(1, RMS_t)` for
+    /// StableAdamW, 1 otherwise).
+    pub lr_mult: Vec<f32>,
+    /// Tensors whose update was skipped by the tensor-level scaler.
+    pub skipped_tensors: usize,
+    /// Whole update skipped (global scaler saw Inf/NaN).
+    pub skipped_step: bool,
+}
+
+impl StepStats {
+    pub fn empty(n: usize) -> Self {
+        Self {
+            rms: vec![1.0; n],
+            lr_mult: vec![1.0; n],
+            skipped_tensors: 0,
+            skipped_step: false,
+        }
+    }
+}
+
+/// A first-order optimizer over flat per-tensor f32 buffers.
+pub trait Optimizer: Send {
+    /// One update step.  `lr` is the *scheduled* learning rate for this
+    /// iteration; implementations may further scale it per tensor (update
+    /// clipping).  `skip_mask[i] == true` means "do not apply tensor i's
+    /// update this step" (tensor-level loss scaler, §3.6) — moments are
+    /// not advanced for skipped tensors either.
+    fn step(
+        &mut self,
+        params: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        lr: f32,
+        skip_mask: Option<&[bool]>,
+    ) -> StepStats;
+
+    /// Number of optimizer-state floats per parameter (memory accounting).
+    fn state_floats_per_param(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Global-norm gradient clipping (the Fig 10 comparison baseline; the paper
+/// clips at norm 1.0, "standard in e.g. PaLM").  Returns the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [Vec<f32>], max_norm: f32) -> f32 {
+    let mut ss = 0.0f64;
+    for g in grads.iter() {
+        for &v in g {
+            ss += (v as f64) * (v as f64);
+        }
+    }
+    let norm = ss.sqrt() as f32;
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for v in g.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_reduces_norm_to_max() {
+        let mut grads = vec![vec![3.0, 4.0]]; // norm 5
+        let pre = clip_global_norm(&mut grads, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post: f32 = grads[0].iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((post - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_noop_below_max() {
+        let mut grads = vec![vec![0.3, 0.4]];
+        clip_global_norm(&mut grads, 1.0);
+        assert_eq!(grads[0], vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn clip_handles_zero() {
+        let mut grads = vec![vec![0.0; 4]];
+        let pre = clip_global_norm(&mut grads, 1.0);
+        assert_eq!(pre, 0.0);
+    }
+}

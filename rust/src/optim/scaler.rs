@@ -1,0 +1,164 @@
+//! Loss scalers (paper §3.6: "Loss spikes and the loss scalar").
+//!
+//! The paper observes that spikes make gradients overflow fp16 range in a
+//! *few specific tensors* (chiefly the patch embedding), yet the PyTorch
+//! default scaler reacts globally: it skips the whole update and halves the
+//! scalar, taking thousands of iterations to recover.  Their fix:
+//!
+//! 1. check Inf/NaN **per tensor** and skip only the offending tensors,
+//! 2. keep the scalar **fixed** at its initial value.
+//!
+//! We implement both policies.  Since the runtime computes f32 gradients,
+//! fp16 overflow is *simulated* faithfully: a gradient tensor "overflows"
+//! when `|g| * scale` exceeds fp16 max (65504) — exactly the condition that
+//! produces Inf in a real fp16 backward pass — or when it is already
+//! non-finite.
+
+/// fp16 largest finite value.
+pub const FP16_MAX: f32 = 65504.0;
+
+/// Decision returned by a scaler for the current step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleDecision {
+    /// Apply the full update.
+    Proceed,
+    /// Skip the whole update (global scaler saw Inf/NaN).
+    SkipStep,
+    /// Skip only these tensors (tensor-level scaler).
+    SkipTensors(Vec<bool>),
+}
+
+/// Would this tensor's fp16 gradient overflow at the given loss scale?
+pub fn tensor_overflows(grad: &[f32], scale: f32) -> bool {
+    grad.iter().any(|&g| !g.is_finite() || (g * scale).abs() > FP16_MAX)
+}
+
+/// PyTorch-style **dynamic global** scaler (§2.1): init 65536; on Inf/NaN
+/// skip the update and halve; after `growth_interval` clean steps, double.
+#[derive(Debug, Clone)]
+pub struct DynamicGlobalScaler {
+    pub scale: f32,
+    pub growth_interval: u64,
+    clean_steps: u64,
+    /// telemetry: how many times the scale dropped (Fig 11's bottom panel)
+    pub drops: u64,
+}
+
+impl DynamicGlobalScaler {
+    pub fn new() -> Self {
+        Self { scale: 65536.0, growth_interval: 2000, clean_steps: 0, drops: 0 }
+    }
+
+    pub fn inspect(&mut self, grads: &[Vec<f32>]) -> ScaleDecision {
+        let overflow = grads.iter().any(|g| tensor_overflows(g, self.scale));
+        if overflow {
+            self.scale *= 0.5;
+            self.clean_steps = 0;
+            self.drops += 1;
+            ScaleDecision::SkipStep
+        } else {
+            self.clean_steps += 1;
+            if self.clean_steps >= self.growth_interval {
+                self.scale *= 2.0;
+                self.clean_steps = 0;
+            }
+            ScaleDecision::Proceed
+        }
+    }
+}
+
+impl Default for DynamicGlobalScaler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The paper's **fixed tensor-level** scaler (§3.6): scale never changes;
+/// Inf/NaN is checked per tensor and only those tensors are skipped.  When
+/// overflows concentrate in the patch embedding (as the paper observes),
+/// this degenerates gracefully into Chen et al. [8]'s "freeze the embedding
+/// layer" — without freezing anything else.
+#[derive(Debug, Clone)]
+pub struct FixedTensorScaler {
+    pub scale: f32,
+    /// telemetry: per-tensor skip counts (which layers overflow — Fig 11)
+    pub skip_counts: Vec<u64>,
+}
+
+impl FixedTensorScaler {
+    pub fn new(scale: f32, n_tensors: usize) -> Self {
+        Self { scale, skip_counts: vec![0; n_tensors] }
+    }
+
+    pub fn inspect(&mut self, grads: &[Vec<f32>]) -> ScaleDecision {
+        let mask: Vec<bool> = grads
+            .iter()
+            .map(|g| tensor_overflows(g, self.scale))
+            .collect();
+        if mask.iter().any(|&b| b) {
+            for (c, &m) in self.skip_counts.iter_mut().zip(&mask) {
+                if m {
+                    *c += 1;
+                }
+            }
+            ScaleDecision::SkipTensors(mask)
+        } else {
+            ScaleDecision::Proceed
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_halves_on_overflow_and_recovers_slowly() {
+        let mut s = DynamicGlobalScaler::new();
+        s.growth_interval = 3;
+        let huge = vec![vec![10.0f32]]; // 10 * 65536 > 65504 → overflow
+        assert_eq!(s.inspect(&huge), ScaleDecision::SkipStep);
+        assert_eq!(s.scale, 32768.0);
+        assert_eq!(s.drops, 1);
+        let ok = vec![vec![1e-3f32]];
+        for _ in 0..3 {
+            assert_eq!(s.inspect(&ok), ScaleDecision::Proceed);
+        }
+        assert_eq!(s.scale, 65536.0, "doubles after growth_interval clean steps");
+    }
+
+    #[test]
+    fn dynamic_skips_on_nan_even_without_scale() {
+        let mut s = DynamicGlobalScaler::new();
+        let g = vec![vec![f32::NAN]];
+        assert_eq!(s.inspect(&g), ScaleDecision::SkipStep);
+    }
+
+    #[test]
+    fn tensor_level_skips_only_offenders() {
+        let mut s = FixedTensorScaler::new(65536.0, 3);
+        let grads = vec![vec![1e-3f32], vec![100.0], vec![1e-3]];
+        match s.inspect(&grads) {
+            ScaleDecision::SkipTensors(mask) => {
+                assert_eq!(mask, vec![false, true, false]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(s.skip_counts, vec![0, 1, 0]);
+        assert_eq!(s.scale, 65536.0, "scale stays fixed");
+    }
+
+    #[test]
+    fn tensor_level_proceeds_when_clean() {
+        let mut s = FixedTensorScaler::new(65536.0, 2);
+        let grads = vec![vec![1e-4f32], vec![1e-4]];
+        assert_eq!(s.inspect(&grads), ScaleDecision::Proceed);
+    }
+
+    #[test]
+    fn overflow_threshold_is_fp16_max() {
+        // just below: 65504/65536 ≈ 0.9995
+        assert!(!tensor_overflows(&[0.999], 65536.0));
+        assert!(tensor_overflows(&[1.1], 65536.0));
+    }
+}

@@ -1,0 +1,60 @@
+//! Learning-rate schedule: linear warmup then cosine decay (paper §2.2.2 /
+//! §3.2 — 5k warmup of 20k total in the paper; scaled by config here).
+
+/// Warmup + cosine decay to zero.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f32, warmup_steps: u64, total_steps: u64) -> Self {
+        assert!(warmup_steps <= total_steps);
+        Self { base_lr, warmup_steps, total_steps }
+    }
+
+    /// LR at (1-based) iteration `t`.
+    pub fn at(&self, t: u64) -> f32 {
+        if self.total_steps == 0 {
+            return self.base_lr;
+        }
+        if t <= self.warmup_steps && self.warmup_steps > 0 {
+            return self.base_lr * (t as f32) / (self.warmup_steps as f32);
+        }
+        let t = t.min(self.total_steps);
+        let progress = (t - self.warmup_steps) as f32
+            / (self.total_steps - self.warmup_steps).max(1) as f32;
+        0.5 * self.base_lr * (1.0 + (std::f32::consts::PI * progress).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = LrSchedule::new(1.0, 10, 100);
+        assert!((s.at(1) - 0.1).abs() < 1e-6);
+        assert!((s.at(5) - 0.5).abs() < 1e-6);
+        assert!((s.at(10) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = LrSchedule::new(2e-3, 5, 20);
+        assert!(s.at(20) < 1e-9);
+        assert!(s.at(12) < s.at(11));
+        // midpoint of decay ≈ half the base lr
+        let mid = s.at(5 + (20 - 5) / 2);
+        assert!((mid / 2e-3 - 0.5).abs() < 0.1, "mid {mid}");
+    }
+
+    #[test]
+    fn clamped_after_total() {
+        let s = LrSchedule::new(1.0, 0, 10);
+        assert_eq!(s.at(10), s.at(999));
+    }
+}

@@ -1,0 +1,138 @@
+//! Exact float8 value simulation (E4M3 / E5M2), mirroring
+//! `python/compile/kernels/fp8.py` (which is itself validated bit-exactly
+//! against ml_dtypes).  Round-to-nearest-even onto the fp8 grid, including
+//! subnormals and saturation — the paper's §2.2.1 "float8cast".
+
+/// A float8 format description (same fields as the python dataclass).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fp8Format {
+    pub name: &'static str,
+    pub mantissa_bits: i32,
+    pub min_normal_exp: i32,
+    pub max_value: f32,
+}
+
+/// E4M3 ("fn" flavour): max 448, min normal 2⁻⁶, subnormal quantum 2⁻⁹.
+pub const E4M3: Fp8Format = Fp8Format {
+    name: "e4m3",
+    mantissa_bits: 3,
+    min_normal_exp: -6,
+    max_value: 448.0,
+};
+
+/// E5M2: max finite 57344, min normal 2⁻¹⁴, subnormal quantum 2⁻¹⁶.
+pub const E5M2: Fp8Format = Fp8Format {
+    name: "e5m2",
+    mantissa_bits: 2,
+    min_normal_exp: -14,
+    max_value: 57344.0,
+};
+
+/// Round one f32 to the nearest fp8-representable value (saturating).
+pub fn fp8_round(x: f32, fmt: Fp8Format) -> f32 {
+    if x == 0.0 || !x.is_finite() {
+        // NaN propagates; ±inf saturates (fn-flavoured formats are finite).
+        if x.is_infinite() {
+            return x.signum() * fmt.max_value;
+        }
+        return x;
+    }
+    let a = x.abs();
+    // floor(log2(a)) via the exponent bits (exact, unlike log2f).
+    let bits = a.to_bits();
+    let mut e = ((bits >> 23) & 0xFF) as i32 - 127;
+    if (bits >> 23) & 0xFF == 0 {
+        // f32 subnormal input — far below fp8 min subnormal; clamp exponent.
+        e = -127;
+    }
+    let e = e.max(fmt.min_normal_exp);
+    let quantum = (2.0f32).powi(e - fmt.mantissa_bits);
+    let q = (a / quantum).round_ties_even() * quantum;
+    let q = q.min(fmt.max_value);
+    x.signum() * q
+}
+
+/// Round a slice in place.
+pub fn fp8_round_slice(xs: &mut [f32], fmt: Fp8Format) {
+    for v in xs.iter_mut() {
+        *v = fp8_round(*v, fmt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// All 126 positive finite E4M3 values by direct enumeration.
+    fn e4m3_grid() -> Vec<f32> {
+        let mut vals = vec![];
+        // subnormals: m * 2^-9, m in 1..8
+        for m in 1..8 {
+            vals.push(m as f32 * 2.0f32.powi(-9));
+        }
+        // normals: (1 + m/8) * 2^e, e in -6..=8, skipping codes above 448
+        for e in -6..=8 {
+            for m in 0..8 {
+                let v = (1.0 + m as f32 / 8.0) * 2.0f32.powi(e);
+                if v <= 448.0 {
+                    vals.push(v);
+                }
+            }
+        }
+        vals
+    }
+
+    #[test]
+    fn grid_points_are_fixed() {
+        for v in e4m3_grid() {
+            assert_eq!(fp8_round(v, E4M3), v, "grid point {v} must be exact");
+            assert_eq!(fp8_round(-v, E4M3), -v);
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_with_ties_even() {
+        // Between 1.0 and 1.125 the midpoint 1.0625 ties to even (1.0).
+        assert_eq!(fp8_round(1.0625, E4M3), 1.0);
+        // Between 1.125 and 1.25 midpoint 1.1875 ties to even (1.25).
+        assert_eq!(fp8_round(1.1875, E4M3), 1.25);
+        assert_eq!(fp8_round(1.06, E4M3), 1.0);
+        assert_eq!(fp8_round(1.07, E4M3), 1.125);
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(fp8_round(1e6, E4M3), 448.0);
+        assert_eq!(fp8_round(-1e6, E4M3), -448.0);
+        assert_eq!(fp8_round(f32::INFINITY, E4M3), 448.0);
+        assert_eq!(fp8_round(1e9, E5M2), 57344.0);
+    }
+
+    #[test]
+    fn subnormal_handling() {
+        let q = 2.0f32.powi(-9); // E4M3 subnormal quantum
+        assert_eq!(fp8_round(q, E4M3), q);
+        assert_eq!(fp8_round(q * 0.4, E4M3), 0.0); // rounds down to zero
+        assert_eq!(fp8_round(q * 0.6, E4M3), q);
+        assert_eq!(fp8_round(0.0, E4M3), 0.0);
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let mut prev = f32::NEG_INFINITY;
+        let mut x = -500.0f32;
+        while x < 500.0 {
+            let r = fp8_round(x, E4M3);
+            assert!(r >= prev, "non-monotone at {x}: {r} < {prev}");
+            prev = r;
+            x += 0.37;
+        }
+    }
+
+    #[test]
+    fn e5m2_normals() {
+        assert_eq!(fp8_round(3.0, E5M2), 3.0); // 1.5*2 representable with 2 bits
+        assert_eq!(fp8_round(3.1, E5M2), 3.0);
+        assert_eq!(fp8_round(3.3, E5M2), 3.5);
+    }
+}

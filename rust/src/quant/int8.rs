@@ -1,0 +1,199 @@
+//! int8 row-wise / tensor-wise / column-wise quantization (paper eqs. 1–3).
+
+use super::round_ties_even;
+use crate::tensor::{Matrix, MatrixI8};
+
+pub const INT8_MAX: f32 = 127.0;
+
+/// absmax with the all-zero floor (matches `ref._safe_absmax`).
+#[inline]
+fn safe(m: f32) -> f32 {
+    if m == 0.0 {
+        1.0
+    } else {
+        m
+    }
+}
+
+#[inline]
+fn quantize_one(v: f32, scale: f32) -> i8 {
+    round_ties_even(v * scale).clamp(-INT8_MAX, INT8_MAX) as i8
+}
+
+/// Row-wise quantized matrix: codes + per-row absmax state.
+#[derive(Debug, Clone)]
+pub struct QuantizedRow {
+    pub codes: MatrixI8,
+    pub state: Vec<f32>,
+}
+
+/// Tensor-wise quantized matrix: codes + scalar absmax state.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub codes: MatrixI8,
+    pub state: f32,
+}
+
+/// Column-wise quantized matrix: codes + per-column absmax state.
+#[derive(Debug, Clone)]
+pub struct QuantizedCol {
+    pub codes: MatrixI8,
+    pub state: Vec<f32>,
+}
+
+/// Row-wise int8 quantization (paper eq. 1).
+pub fn rowwise_quant(x: &Matrix) -> QuantizedRow {
+    let mut codes = MatrixI8::zeros(x.rows, x.cols);
+    let mut state = vec![0.0f32; x.rows];
+    rowwise_quant_into(x, &mut codes, &mut state);
+    QuantizedRow { codes, state }
+}
+
+/// In-place variant (the hot path reuses buffers; see EXPERIMENTS.md §Perf).
+pub fn rowwise_quant_into(x: &Matrix, codes: &mut MatrixI8, state: &mut [f32]) {
+    assert_eq!(codes.rows, x.rows);
+    assert_eq!(codes.cols, x.cols);
+    assert_eq!(state.len(), x.rows);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let m = safe(row.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+        state[r] = m;
+        let scale = INT8_MAX / m;
+        let crow = &mut codes.data[r * x.cols..(r + 1) * x.cols];
+        for (c, &v) in crow.iter_mut().zip(row) {
+            *c = quantize_one(v, scale);
+        }
+    }
+}
+
+/// Tensor-wise int8 quantization (paper eq. 2).
+pub fn tensorwise_quant(x: &Matrix) -> QuantizedTensor {
+    let m = safe(x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+    let scale = INT8_MAX / m;
+    let mut codes = MatrixI8::zeros(x.rows, x.cols);
+    for (c, &v) in codes.data.iter_mut().zip(&x.data) {
+        *c = quantize_one(v, scale);
+    }
+    QuantizedTensor { codes, state: m }
+}
+
+/// Fused tensor-wise quantize + transpose (the paper's
+/// `tensor-wise_quantize_transpose`, §2.2.1): output codes are `xᵀ`,
+/// quantized in one pass over the input so memory is touched once.
+pub fn tensorwise_quant_transpose(x: &Matrix) -> QuantizedTensor {
+    let m = safe(x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+    let scale = INT8_MAX / m;
+    let mut codes = MatrixI8::zeros(x.cols, x.rows);
+    // Block the transpose for cache locality (same idea as the Pallas
+    // kernel's VMEM-resident tile transpose).
+    const B: usize = 64;
+    for rb in (0..x.rows).step_by(B) {
+        for cb in (0..x.cols).step_by(B) {
+            for r in rb..(rb + B).min(x.rows) {
+                let row = &x.data[r * x.cols..(r + 1) * x.cols];
+                for c in cb..(cb + B).min(x.cols) {
+                    codes.data[c * x.rows + r] = quantize_one(row[c], scale);
+                }
+            }
+        }
+    }
+    QuantizedTensor { codes, state: m }
+}
+
+/// Column-wise int8 quantization (per-column state; LLM.int8() wgrad path).
+pub fn colwise_quant(x: &Matrix) -> QuantizedCol {
+    let mut maxes = vec![0.0f32; x.cols];
+    for r in 0..x.rows {
+        for (mx, &v) in maxes.iter_mut().zip(x.row(r)) {
+            *mx = mx.max(v.abs());
+        }
+    }
+    for m in maxes.iter_mut() {
+        *m = safe(*m);
+    }
+    let mut codes = MatrixI8::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let crow = &mut codes.data[r * x.cols..(r + 1) * x.cols];
+        for c in 0..x.cols {
+            crow[c] = quantize_one(row[c], INT8_MAX / maxes[c]);
+        }
+    }
+    QuantizedCol { codes, state: maxes }
+}
+
+/// Dequantize row-wise codes back to f32 (SwitchBackM backward path).
+pub fn dequant_rowwise(q: &QuantizedRow) -> Matrix {
+    let mut out = Matrix::zeros(q.codes.rows, q.codes.cols);
+    for r in 0..q.codes.rows {
+        let s = q.state[r] / INT8_MAX;
+        let crow = q.codes.row(r);
+        let orow = out.row_mut(r);
+        for (o, &c) in orow.iter_mut().zip(crow) {
+            *o = c as f32 * s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn rowwise_hits_full_range() {
+        let x = Matrix::from_vec(2, 3, vec![1.0, -2.0, 0.5, 10.0, 5.0, -10.0]);
+        let q = rowwise_quant(&x);
+        assert_eq!(q.state, vec![2.0, 10.0]);
+        // absmax element maps to ±127 exactly
+        assert_eq!(q.codes.row(0)[1], -127);
+        assert_eq!(q.codes.row(1)[0], 127);
+        assert_eq!(q.codes.row(1)[2], -127);
+    }
+
+    #[test]
+    fn zero_row_is_total() {
+        let x = Matrix::zeros(3, 4);
+        let q = rowwise_quant(&x);
+        assert!(q.codes.data.iter().all(|&c| c == 0));
+        assert!(q.state.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn dequant_error_bounded_by_half_step() {
+        let mut rng = Rng::seed(5);
+        let x = Matrix::randn(16, 32, 1.0, &mut rng);
+        let q = rowwise_quant(&x);
+        let back = dequant_rowwise(&q);
+        for r in 0..x.rows {
+            let step = q.state[r] / INT8_MAX;
+            for c in 0..x.cols {
+                assert!((x.at(r, c) - back.at(r, c)).abs() <= 0.5 * step + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn quant_transpose_matches_quant_then_transpose() {
+        let mut rng = Rng::seed(6);
+        let x = Matrix::randn(33, 65, 2.0, &mut rng);
+        let a = tensorwise_quant_transpose(&x);
+        let b = tensorwise_quant(&x);
+        assert_eq!(a.state, b.state);
+        for r in 0..x.rows {
+            for c in 0..x.cols {
+                assert_eq!(a.codes.data[c * x.rows + r], b.codes.data[r * x.cols + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn colwise_state_per_column() {
+        let x = Matrix::from_vec(2, 2, vec![1.0, 100.0, -3.0, 50.0]);
+        let q = colwise_quant(&x);
+        assert_eq!(q.state, vec![3.0, 100.0]);
+        assert_eq!(q.codes.row(1)[0], -127);
+        assert_eq!(q.codes.row(0)[1], 127);
+    }
+}

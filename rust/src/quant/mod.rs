@@ -1,0 +1,73 @@
+//! Quantization primitives — the rust mirror of the L1 kernels.
+//!
+//! Definitions match `python/compile/kernels/ref.py` bit-for-bit (int8
+//! codes) — cross-checked against golden vectors generated from the jnp
+//! oracles (`rust/tests/golden.rs`).  These primitives feed:
+//!
+//! * the native [`crate::gemm`] speed substrate (Fig 3/4/13),
+//! * the Appendix-C quantization-variance experiment,
+//! * property tests on quantization invariants.
+//!
+//! Paper conventions (§2.2.1): row-wise quantization (eq. 1) keeps a
+//! per-row absmax *state*; tensor-wise (eq. 2) keeps a scalar.  Dequantize
+//! multiplies by `state/127` per side (eq. 3).
+
+mod fp8;
+mod int8;
+
+pub use fp8::{fp8_round, fp8_round_slice, Fp8Format, E4M3, E5M2};
+pub use int8::{
+    colwise_quant, dequant_rowwise, rowwise_quant, rowwise_quant_into,
+    tensorwise_quant, tensorwise_quant_transpose, QuantizedCol, QuantizedRow,
+    QuantizedTensor, INT8_MAX,
+};
+
+/// Round-half-to-even for f32, matching `jnp.round` / IEEE
+/// round-to-nearest-even (std's `f32::round` rounds half away from zero,
+/// which would diverge from the oracle on exact .5 codes).
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    // `f32::round_ties_even` is stable since 1.77.
+    x.round_ties_even()
+}
+
+/// bf16 rounding (round-to-nearest-even on the top 16 bits) — used by the
+/// "16-bit baseline" bookkeeping and tests.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    crate::util::float::bf16_round(x)
+}
+
+/// fp16 rounding + range behaviour — used by the §3.6 loss-scaler
+/// simulation (values beyond ±65504 overflow to ±inf exactly as fp16 does).
+#[inline]
+pub fn fp16_round(x: f32) -> f32 {
+    crate::util::float::fp16_round(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ties_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), 0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+    }
+
+    #[test]
+    fn fp16_overflow_is_inf() {
+        assert!(fp16_round(70000.0).is_infinite());
+        assert!(fp16_round(65504.0).is_finite());
+    }
+
+    #[test]
+    fn bf16_roundtrip_coarse() {
+        // bf16 has 8 mantissa bits: 1.0 + 2^-9 rounds back to 1.0
+        assert_eq!(bf16_round(1.0 + 2.0_f32.powi(-9)), 1.0);
+        assert_eq!(bf16_round(1.0 + 2.0_f32.powi(-7)), 1.0 + 2.0_f32.powi(-7));
+    }
+}

@@ -1,0 +1,173 @@
+//! The artifact manifest emitted by `python/compile/aot.py`, parsed with
+//! the in-tree JSON module.
+
+use crate::util::json::{parse, Value};
+use anyhow::{anyhow, Context, Result};
+
+/// One parameter tensor's description.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+    /// offset (in floats) into params.bin
+    pub offset: usize,
+    /// weight decay applies
+    pub decay: bool,
+    /// "patch_embed" | "embedding" | "weight" | "norm" | "layer_scale" | ...
+    pub kind: String,
+    /// re-init spec: "zeros" | "ones" | "const:<v>" | "normal:<std>"
+    pub init: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct InputShapes {
+    /// [batch, patches, patch_dim]
+    pub images: Vec<usize>,
+    /// [batch, seq]
+    pub tokens: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelShape {
+    pub dim: usize,
+    pub vision_blocks: usize,
+    pub text_blocks: usize,
+    pub heads: usize,
+    pub patches: usize,
+    pub patch_dim: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub embed_dim: usize,
+    pub layer_scale: bool,
+    pub kq_norm: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub size: String,
+    pub variant: String,
+    pub batch: usize,
+    pub config: ModelShape,
+    pub n_tensors: usize,
+    pub n_params: usize,
+    pub inputs: InputShapes,
+    pub hlo: String,
+    pub encode_hlo: Option<String>,
+    pub params_bin: String,
+    pub tensors: Vec<TensorSpec>,
+}
+
+fn req<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key).ok_or_else(|| anyhow!("manifest missing key {key:?}"))
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    Ok(req(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{key} not a string"))?
+        .to_string())
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    req(v, key)?.as_usize().ok_or_else(|| anyhow!("{key} not a number"))
+}
+
+fn opt_bool(v: &Value, key: &str) -> bool {
+    v.get(key).and_then(|x| x.as_bool()).unwrap_or(false)
+}
+
+impl Manifest {
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let cfg = req(&v, "config")?;
+        let config = ModelShape {
+            dim: req_usize(cfg, "dim")?,
+            vision_blocks: req_usize(cfg, "vision_blocks")?,
+            text_blocks: req_usize(cfg, "text_blocks")?,
+            heads: req_usize(cfg, "heads")?,
+            patches: req_usize(cfg, "patches")?,
+            patch_dim: req_usize(cfg, "patch_dim")?,
+            seq: req_usize(cfg, "seq")?,
+            vocab: req_usize(cfg, "vocab")?,
+            embed_dim: req_usize(cfg, "embed_dim")?,
+            layer_scale: opt_bool(cfg, "layer_scale"),
+            kq_norm: opt_bool(cfg, "kq_norm"),
+        };
+        let ins = req(&v, "inputs")?;
+        let inputs = InputShapes {
+            images: req(ins, "images")?
+                .as_usize_vec()
+                .context("inputs.images")?,
+            tokens: req(ins, "tokens")?
+                .as_usize_vec()
+                .context("inputs.tokens")?,
+        };
+        let tensors = req(&v, "tensors")?
+            .as_arr()
+            .context("tensors not an array")?
+            .iter()
+            .map(|t| {
+                Ok(TensorSpec {
+                    name: req_str(t, "name")?,
+                    shape: req(t, "shape")?.as_usize_vec().context("shape")?,
+                    numel: req_usize(t, "numel")?,
+                    offset: req_usize(t, "offset")?,
+                    decay: opt_bool(t, "decay"),
+                    kind: req_str(t, "kind")?,
+                    init: req_str(t, "init")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let encode_hlo = match v.get("encode_hlo") {
+            Some(Value::Str(s)) => Some(s.clone()),
+            _ => None,
+        };
+        Ok(Self {
+            name: req_str(&v, "name")?,
+            size: req_str(&v, "size")?,
+            variant: req_str(&v, "variant")?,
+            batch: req_usize(&v, "batch")?,
+            config,
+            n_tensors: req_usize(&v, "n_tensors")?,
+            n_params: req_usize(&v, "n_params")?,
+            inputs,
+            hlo: req_str(&v, "hlo")?,
+            encode_hlo,
+            params_bin: req_str(&v, "params_bin")?,
+            tensors,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_real_manifest_shape() {
+        let json = r#"{
+          "name": "x", "size": "micro", "variant": "highprec", "batch": 4,
+          "config": {"dim": 64, "vision_blocks": 2, "text_blocks": 2,
+                     "heads": 4, "patches": 16, "patch_dim": 48, "seq": 16,
+                     "vocab": 512, "embed_dim": 64},
+          "n_tensors": 1, "n_params": 4,
+          "inputs": {"images": [4, 16, 48], "tokens": [4, 16]},
+          "hlo": "x.hlo.txt", "encode_hlo": null, "params_bin": "x.params.bin",
+          "tensors": [{"name": "t", "shape": [2, 2], "numel": 4, "offset": 0,
+                       "decay": true, "kind": "weight", "init": "normal:0.1"}]
+        }"#;
+        let m = Manifest::from_json(json).unwrap();
+        assert_eq!(m.config.dim, 64);
+        assert_eq!(m.tensors[0].numel, 4);
+        assert!(m.encode_hlo.is_none());
+        assert!(!m.config.layer_scale);
+        assert!(m.tensors[0].decay);
+    }
+
+    #[test]
+    fn missing_key_is_an_error() {
+        assert!(Manifest::from_json("{}").is_err());
+    }
+}

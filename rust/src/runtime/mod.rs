@@ -1,0 +1,236 @@
+//! PJRT runtime: load AOT artifacts (HLO text + manifest) and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): HLO text →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Text is the interchange format because jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects (see
+//! `/opt/xla-example/README.md`).
+//!
+//! One [`Artifact`] = one compiled train-step executable (+ optionally the
+//! encode executable) + the parameter manifest.  The train step's HLO
+//! signature is `(p_0..p_N, images, tokens) → (loss, mags, g_0..g_N)`;
+//! rust owns the parameters between steps (the optimizer lives here).
+
+mod manifest;
+
+pub use manifest::{Manifest, TensorSpec};
+
+use crate::optim::ParamMeta;
+use crate::tensor::{InitSpec, Rng};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The PJRT client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an artifact set by name from a directory.
+    pub fn load(&self, dir: impl AsRef<Path>, name: &str) -> Result<Artifact> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::from_json(
+            &std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {}", manifest_path.display()))?,
+        )?;
+        let exe = self.compile_hlo(&dir.join(&manifest.hlo))?;
+        let encode_exe = match &manifest.encode_hlo {
+            Some(rel) => Some(self.compile_hlo(&dir.join(rel))?),
+            None => None,
+        };
+        Ok(Artifact {
+            manifest,
+            dir: dir.to_path_buf(),
+            exe,
+            encode_exe,
+        })
+    }
+
+    fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// A loaded artifact: compiled executables + manifest.
+pub struct Artifact {
+    pub manifest: Manifest,
+    dir: PathBuf,
+    exe: xla::PjRtLoadedExecutable,
+    encode_exe: Option<xla::PjRtLoadedExecutable>,
+}
+
+/// Output of one train-step execution.
+pub struct StepOutput {
+    pub loss: f32,
+    /// per-block mean |features| (vision ++ text)
+    pub mags: Vec<f32>,
+    /// gradients, one per parameter tensor, in manifest order
+    pub grads: Vec<Vec<f32>>,
+}
+
+impl Artifact {
+    /// Initial parameters: the exact jax init from `params.bin` (seed 0), or
+    /// a fresh re-init from the manifest init specs for other seeds.
+    pub fn initial_params(&self, seed: u64, reinit: bool) -> Result<Vec<Vec<f32>>> {
+        if !reinit && seed == 0 {
+            return self.params_from_bin();
+        }
+        let base = Rng::seed(seed);
+        self.manifest
+            .tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let spec = InitSpec::parse(&t.init)
+                    .with_context(|| format!("bad init spec {:?}", t.init))?;
+                let mut buf = vec![0.0f32; t.numel];
+                spec.fill(&mut buf, &mut base.fork(i as u64));
+                Ok(buf)
+            })
+            .collect()
+    }
+
+    fn params_from_bin(&self) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(&self.manifest.params_bin);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != self.manifest.n_params * 4 {
+            bail!(
+                "params.bin size mismatch: {} bytes for {} params",
+                bytes.len(),
+                self.manifest.n_params
+            );
+        }
+        let all: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(self
+            .manifest
+            .tensors
+            .iter()
+            .map(|t| all[t.offset..t.offset + t.numel].to_vec())
+            .collect())
+    }
+
+    /// Optimizer metadata in manifest order.
+    pub fn param_metas(&self) -> Vec<ParamMeta> {
+        self.manifest
+            .tensors
+            .iter()
+            .map(|t| ParamMeta {
+                name: t.name.clone(),
+                decay: t.decay,
+                kind: t.kind.clone(),
+            })
+            .collect()
+    }
+
+    /// Index of the patch-embedding tensor (the Fig 9 probe target) and of
+    /// a mid-transformer control tensor (the Fig 21 control).
+    pub fn probe_indices(&self) -> (usize, usize) {
+        let pe = self
+            .manifest
+            .tensors
+            .iter()
+            .position(|t| t.kind == "patch_embed")
+            .unwrap_or(0);
+        // control: an attention weight roughly midway through the vision tower
+        let weights: Vec<usize> = self
+            .manifest
+            .tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.name.contains("attn.wq") && t.name.contains("visual"))
+            .map(|(i, _)| i)
+            .collect();
+        let mid = weights.get(weights.len() / 2).copied().unwrap_or(pe);
+        (pe, mid)
+    }
+
+    fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// Execute one training step.
+    pub fn train_step(
+        &self,
+        params: &[Vec<f32>],
+        images: &[f32],
+        tokens: &[i32],
+    ) -> Result<StepOutput> {
+        let m = &self.manifest;
+        if params.len() != m.tensors.len() {
+            bail!("expected {} param tensors, got {}", m.tensors.len(), params.len());
+        }
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 2);
+        for (p, t) in params.iter().zip(&m.tensors) {
+            inputs.push(Self::literal_f32(p, &t.shape)?);
+        }
+        inputs.push(Self::literal_f32(images, &m.inputs.images)?);
+        let tok_dims: Vec<i64> = m.inputs.tokens.iter().map(|&d| d as i64).collect();
+        inputs.push(xla::Literal::vec1(tokens).reshape(&tok_dims)?);
+
+        let result = self.exe.execute::<xla::Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        if outs.len() != m.tensors.len() + 2 {
+            bail!("expected {} outputs, got {}", m.tensors.len() + 2, outs.len());
+        }
+        let grads = outs
+            .split_off(2)
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect::<Result<Vec<_>>>()?;
+        let mags = outs[1].to_vec::<f32>()?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        Ok(StepOutput { loss, mags, grads })
+    }
+
+    /// Execute the encode (eval) function on one batch.  Returns
+    /// (image_embs, text_embs), each `[batch, embed_dim]` row-major.
+    pub fn encode(
+        &self,
+        params: &[Vec<f32>],
+        images: &[f32],
+        tokens: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self
+            .encode_exe
+            .as_ref()
+            .context("artifact has no encode executable")?;
+        let m = &self.manifest;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(params.len() + 2);
+        for (p, t) in params.iter().zip(&m.tensors) {
+            inputs.push(Self::literal_f32(p, &t.shape)?);
+        }
+        inputs.push(Self::literal_f32(images, &m.inputs.images)?);
+        let tok_dims: Vec<i64> = m.inputs.tokens.iter().map(|&d| d as i64).collect();
+        inputs.push(xla::Literal::vec1(tokens).reshape(&tok_dims)?);
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            bail!("encode: expected 2 outputs, got {}", outs.len());
+        }
+        Ok((outs[0].to_vec::<f32>()?, outs[1].to_vec::<f32>()?))
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.batch
+    }
+}

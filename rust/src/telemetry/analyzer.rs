@@ -1,0 +1,168 @@
+//! Lead–lag analysis: do RMS spikes *predict* loss spikes? (Fig 9, 16–21.)
+//!
+//! The paper's claim: 28/30 detected loss spikes follow an RMS spike in the
+//! patch embedding layer by **1–8 iterations**, while the chance of that
+//! happening randomly is ≈1%.  This module reproduces the computation:
+//!
+//! * a loss spike at `t` is *predicted* if some RMS spike occurred at
+//!   `t − 8 ≤ s ≤ t − 1`;
+//! * the **chance** baseline is the fraction of iterations covered by the
+//!   union of `[s+1, s+8]` windows over all RMS spikes — i.e. the
+//!   probability that a uniformly-random iteration is "predicted";
+//! * a binomial tail p-value for observing ≥ k predicted out of n loss
+//!   spikes under that chance probability.
+
+use super::spikes::{detect_loss_spikes, detect_rms_spikes, SpikeConfig};
+
+/// The paper's prediction window: RMS spike 1–8 iterations before the loss
+/// spike.
+pub const LEAD_MIN: u64 = 1;
+pub const LEAD_MAX: u64 = 8;
+
+#[derive(Debug, Clone)]
+pub struct LeadLagReport {
+    pub loss_spikes: Vec<u64>,
+    pub rms_spikes: Vec<u64>,
+    /// loss spikes with an RMS spike 1–8 iterations earlier
+    pub predicted: usize,
+    pub total_loss_spikes: usize,
+    /// P(uniformly random iteration is inside some prediction window)
+    pub chance_fraction: f64,
+    /// P(≥ predicted out of total by chance)  (binomial upper tail)
+    pub binom_pvalue: f64,
+}
+
+impl LeadLagReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{}/{} loss spikes follow an RMS spike by {}-{} iters \
+             (chance/spike {:.2}%, p = {:.2e}; {} RMS spikes)",
+            self.predicted,
+            self.total_loss_spikes,
+            LEAD_MIN,
+            LEAD_MAX,
+            100.0 * self.chance_fraction,
+            self.binom_pvalue,
+            self.rms_spikes.len(),
+        )
+    }
+}
+
+fn binom_upper_tail(n: usize, k: usize, p: f64) -> f64 {
+    // sum_{i=k..n} C(n,i) p^i (1-p)^(n-i), computed in log space for
+    // robustness on tiny p.
+    if k == 0 {
+        return 1.0;
+    }
+    let ln_fact = |m: usize| -> f64 { (1..=m).map(|v| (v as f64).ln()).sum() };
+    let lnp = p.max(1e-300).ln();
+    let lnq = (1.0 - p).max(1e-300).ln();
+    let mut total = 0.0f64;
+    for i in k..=n {
+        let lnc = ln_fact(n) - ln_fact(i) - ln_fact(n - i);
+        total += (lnc + i as f64 * lnp + (n - i) as f64 * lnq).exp();
+    }
+    total.min(1.0)
+}
+
+/// Is iteration `t` predicted by any RMS spike? (some s with t-8 ≤ s ≤ t-1)
+fn is_predicted(t: u64, rms_spikes: &[u64]) -> bool {
+    rms_spikes
+        .iter()
+        .any(|&s| s + LEAD_MIN <= t && t <= s + LEAD_MAX)
+}
+
+/// Full analysis from raw traces.
+pub fn lead_lag_analysis(
+    loss: &[f32],
+    rms: &[f32],
+    cfg: &SpikeConfig,
+) -> LeadLagReport {
+    let loss_spikes = detect_loss_spikes(loss, cfg);
+    let rms_spikes = detect_rms_spikes(rms, cfg);
+    lead_lag_from_events(&loss_spikes, &rms_spikes, loss.len() as u64)
+}
+
+/// Analysis from pre-detected spike events (used by sweep aggregation,
+/// where spikes from many runs pool into one report as in Fig 16/17).
+pub fn lead_lag_from_events(
+    loss_spikes: &[u64],
+    rms_spikes: &[u64],
+    trace_len: u64,
+) -> LeadLagReport {
+    let predicted = loss_spikes
+        .iter()
+        .filter(|&&t| is_predicted(t, rms_spikes))
+        .count();
+    // Union of prediction windows (events are sorted; windows are length 8).
+    let mut covered = 0u64;
+    let mut last_end = 0u64;
+    for &s in rms_spikes {
+        let start = (s + LEAD_MIN).max(last_end);
+        let end = (s + LEAD_MAX + 1).min(trace_len);
+        if end > start {
+            covered += end - start;
+        }
+        last_end = last_end.max(end);
+    }
+    let chance = if trace_len > 0 {
+        covered as f64 / trace_len as f64
+    } else {
+        0.0
+    };
+    let pval = binom_upper_tail(loss_spikes.len(), predicted, chance);
+    LeadLagReport {
+        loss_spikes: loss_spikes.to_vec(),
+        rms_spikes: rms_spikes.to_vec(),
+        predicted,
+        total_loss_spikes: loss_spikes.len(),
+        chance_fraction: chance,
+        binom_pvalue: pval,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction() {
+        // RMS spikes at 100, 200; loss spikes 3 iterations later.
+        let r = lead_lag_from_events(&[103, 203], &[100, 200], 1000);
+        assert_eq!(r.predicted, 2);
+        assert_eq!(r.total_loss_spikes, 2);
+        assert!((r.chance_fraction - 16.0 / 1000.0).abs() < 1e-9);
+        assert!(r.binom_pvalue < 1e-3, "p = {}", r.binom_pvalue);
+    }
+
+    #[test]
+    fn window_boundaries_are_1_to_8() {
+        assert_eq!(lead_lag_from_events(&[101], &[100], 1000).predicted, 1);
+        assert_eq!(lead_lag_from_events(&[108], &[100], 1000).predicted, 1);
+        assert_eq!(lead_lag_from_events(&[100], &[100], 1000).predicted, 0);
+        assert_eq!(lead_lag_from_events(&[109], &[100], 1000).predicted, 0);
+    }
+
+    #[test]
+    fn no_rms_spikes_means_nothing_predicted() {
+        let r = lead_lag_from_events(&[50, 60], &[], 100);
+        assert_eq!(r.predicted, 0);
+        assert_eq!(r.chance_fraction, 0.0);
+        assert_eq!(r.binom_pvalue, 1.0);
+    }
+
+    #[test]
+    fn overlapping_windows_counted_once() {
+        // spikes at 100 and 104: windows [101,108] and [105,112] overlap.
+        let r = lead_lag_from_events(&[], &[100, 104], 1000);
+        assert!((r.chance_fraction - 12.0 / 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn binomial_tail_sane() {
+        assert!((binom_upper_tail(10, 0, 0.5) - 1.0).abs() < 1e-12);
+        assert!((binom_upper_tail(1, 1, 0.5) - 0.5).abs() < 1e-12);
+        // 14/15 at 1% chance each: astronomically small
+        assert!(binom_upper_tail(15, 14, 0.01) < 1e-20);
+    }
+}

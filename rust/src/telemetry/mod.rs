@@ -1,0 +1,63 @@
+//! Stability telemetry (paper §3.3–3.4, Appendix D).
+//!
+//! * [`spikes`] — the paper's heuristics for detecting loss spikes
+//!   (running mean + 3.2σ, multi-deviation confirmation, 10-iteration
+//!   dedup) and RMS spikes (`RMS_t ≥ 2.3`).
+//! * [`analyzer`] — the lead–lag analysis behind Fig 9 & 16–21: do loss
+//!   spikes follow RMS spikes in the patch embedding by 1–8 iterations,
+//!   and what is the probability of that by chance?
+//! * [`sink`] — JSONL/CSV metrics output consumed by the experiment
+//!   harnesses (every figure regenerates from these logs).
+
+pub mod analyzer;
+pub mod sink;
+pub mod spikes;
+
+pub use analyzer::{lead_lag_analysis, lead_lag_from_events, LeadLagReport};
+pub use sink::{MetricsSink, StepRecord};
+pub use spikes::{
+    detect_loss_spikes, detect_rms_spikes, SpikeConfig, DEFAULT_LOSS_SIGMA,
+    DEFAULT_RMS_THRESHOLD,
+};
+
+/// Summary statistics of a gradient tensor for probes (Fig 11, Fig 14).
+#[derive(Debug, Clone, Default)]
+pub struct TensorProbe {
+    pub mean_abs: f32,
+    pub max_abs: f32,
+    pub nonfinite: bool,
+}
+
+impl TensorProbe {
+    pub fn of(data: &[f32]) -> Self {
+        if data.is_empty() {
+            return Self::default();
+        }
+        let mut sum = 0.0f64;
+        let mut max = 0.0f32;
+        let mut nonfinite = false;
+        for &v in data {
+            if !v.is_finite() {
+                nonfinite = true;
+                continue;
+            }
+            sum += v.abs() as f64;
+            max = max.max(v.abs());
+        }
+        Self { mean_abs: (sum / data.len() as f64) as f32, max_abs: max, nonfinite }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_stats() {
+        let p = TensorProbe::of(&[1.0, -2.0, 3.0, -4.0]);
+        assert!((p.mean_abs - 2.5).abs() < 1e-6);
+        assert_eq!(p.max_abs, 4.0);
+        assert!(!p.nonfinite);
+        assert!(TensorProbe::of(&[f32::INFINITY]).nonfinite);
+    }
+}

@@ -1,0 +1,277 @@
+//! Metrics output: one JSONL record per training step.
+//!
+//! Every experiment harness regenerates its figure from these logs (the
+//! `exp` subcommands print figure-shaped summaries from them), so the
+//! record carries everything the paper plots: loss, LR, grad norms, the
+//! per-probe RMS_t values, feature magnitudes, and loss-scaler activity.
+
+use crate::util::json::{self, ObjWriter, Value};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// One training step's telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub lr: f32,
+    /// global gradient norm (pre-clip)
+    pub grad_norm: f32,
+    /// RMS_t for probed tensors, keyed by tensor name (patch embed + a
+    /// mid-transformer control tensor, per Fig 9 vs Fig 21)
+    pub rms: BTreeMap<String, f32>,
+    /// per-block mean |features| (vision ++ text), logged every probe_every
+    pub feature_mags: Vec<f32>,
+    /// probes of selected gradient tensors (mean/max abs, Fig 11/14)
+    pub grad_probes: BTreeMap<String, super::TensorProbe>,
+    /// loss-scaler state
+    pub loss_scale: Option<f32>,
+    pub skipped_tensors: usize,
+    pub skipped_step: bool,
+}
+
+impl StepRecord {
+    /// Serialize to one JSON line.
+    pub fn to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_u64("step", self.step)
+            .field_f32("loss", self.loss)
+            .field_f32("lr", self.lr)
+            .field_f32("grad_norm", self.grad_norm);
+        if !self.rms.is_empty() {
+            let mut inner = ObjWriter::new();
+            for (k, v) in &self.rms {
+                inner.field_f32(k, *v);
+            }
+            w.field_raw("rms", &inner.finish());
+        }
+        if !self.feature_mags.is_empty() {
+            w.field_f32_arr("feature_mags", &self.feature_mags);
+        }
+        if !self.grad_probes.is_empty() {
+            let mut inner = ObjWriter::new();
+            for (k, p) in &self.grad_probes {
+                let mut pw = ObjWriter::new();
+                pw.field_f32("mean_abs", p.mean_abs)
+                    .field_f32("max_abs", p.max_abs)
+                    .field_bool("nonfinite", p.nonfinite);
+                inner.field_raw(k, &pw.finish());
+            }
+            w.field_raw("grad_probes", &inner.finish());
+        }
+        if let Some(s) = self.loss_scale {
+            w.field_f32("loss_scale", s);
+        }
+        if self.skipped_tensors > 0 {
+            w.field_u64("skipped_tensors", self.skipped_tensors as u64);
+        }
+        if self.skipped_step {
+            w.field_bool("skipped_step", true);
+        }
+        w.finish()
+    }
+
+    /// Parse back from one JSON line (offline analysis path).
+    pub fn from_json(line: &str) -> Option<Self> {
+        let v = json::parse(line).ok()?;
+        let f = |k: &str| v.get(k).and_then(Value::as_f64).unwrap_or(0.0) as f32;
+        let mut rec = StepRecord {
+            step: v.get("step").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            loss: f("loss"),
+            lr: f("lr"),
+            grad_norm: f("grad_norm"),
+            loss_scale: v.get("loss_scale").and_then(Value::as_f64).map(|x| x as f32),
+            skipped_tensors: v
+                .get("skipped_tensors")
+                .and_then(Value::as_usize)
+                .unwrap_or(0),
+            skipped_step: v
+                .get("skipped_step")
+                .and_then(Value::as_bool)
+                .unwrap_or(false),
+            ..Default::default()
+        };
+        if let Some(Value::Obj(m)) = v.get("rms") {
+            for (k, x) in m {
+                if let Some(x) = x.as_f64() {
+                    rec.rms.insert(k.clone(), x as f32);
+                }
+            }
+        }
+        if let Some(arr) = v.get("feature_mags").and_then(Value::as_arr) {
+            rec.feature_mags =
+                arr.iter().map(|x| x.as_f64().unwrap_or(0.0) as f32).collect();
+        }
+        if let Some(Value::Obj(m)) = v.get("grad_probes") {
+            for (k, p) in m {
+                rec.grad_probes.insert(
+                    k.clone(),
+                    super::TensorProbe {
+                        mean_abs: p.get("mean_abs").and_then(Value::as_f64).unwrap_or(0.0)
+                            as f32,
+                        max_abs: p.get("max_abs").and_then(Value::as_f64).unwrap_or(0.0)
+                            as f32,
+                        nonfinite: p
+                            .get("nonfinite")
+                            .and_then(Value::as_bool)
+                            .unwrap_or(false),
+                    },
+                );
+            }
+        }
+        Some(rec)
+    }
+}
+
+/// Buffered JSONL writer + in-memory trace (the analyzers read the trace
+/// directly; the file is for offline plotting).
+pub struct MetricsSink {
+    writer: Option<BufWriter<File>>,
+    pub records: Vec<StepRecord>,
+}
+
+impl MetricsSink {
+    /// In-memory only.
+    pub fn memory() -> Self {
+        Self { writer: None, records: vec![] }
+    }
+
+    /// Also append JSONL to `path`.
+    pub fn to_file(path: &Path) -> std::io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(Self {
+            writer: Some(BufWriter::new(File::create(path)?)),
+            records: vec![],
+        })
+    }
+
+    pub fn log(&mut self, rec: StepRecord) {
+        if let Some(w) = &mut self.writer {
+            // best-effort: metrics must never kill a training run
+            let _ = writeln!(w, "{}", rec.to_json());
+        }
+        self.records.push(rec);
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(w) = &mut self.writer {
+            let _ = w.flush();
+        }
+    }
+
+    /// Loss trace (for the spike detectors).
+    pub fn loss_trace(&self) -> Vec<f32> {
+        self.records.iter().map(|r| r.loss).collect()
+    }
+
+    /// RMS trace for one probed tensor name (missing entries become 1.0).
+    pub fn rms_trace(&self, tensor: &str) -> Vec<f32> {
+        self.records
+            .iter()
+            .map(|r| r.rms.get(tensor).copied().unwrap_or(1.0))
+            .collect()
+    }
+
+    /// Number of loss-scale drops observed across the run.
+    pub fn scale_drops(&self) -> usize {
+        let mut drops = 0;
+        let mut prev: Option<f32> = None;
+        for r in &self.records {
+            if let (Some(p), Some(s)) = (prev, r.loss_scale) {
+                if s < p {
+                    drops += 1;
+                }
+            }
+            prev = r.loss_scale.or(prev);
+        }
+        drops
+    }
+}
+
+impl Drop for MetricsSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("switchback_sink_test");
+        let path = dir.join("run.jsonl");
+        {
+            let mut sink = MetricsSink::to_file(&path).unwrap();
+            for step in 0..3 {
+                let mut rec = StepRecord {
+                    step,
+                    loss: step as f32,
+                    ..Default::default()
+                };
+                rec.rms.insert("pe".into(), 2.5);
+                rec.feature_mags = vec![1.0, 2.0];
+                sink.log(rec);
+            }
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let recs: Vec<StepRecord> = text
+            .lines()
+            .map(|l| StepRecord::from_json(l).unwrap())
+            .collect();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[2].loss, 2.0);
+        assert_eq!(recs[1].rms.get("pe"), Some(&2.5));
+        assert_eq!(recs[0].feature_mags, vec![1.0, 2.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn probe_roundtrip() {
+        let mut rec = StepRecord { step: 9, ..Default::default() };
+        rec.grad_probes.insert(
+            "visual.patch_embed".into(),
+            super::super::TensorProbe { mean_abs: 0.5, max_abs: 7.0, nonfinite: true },
+        );
+        rec.loss_scale = Some(65536.0);
+        rec.skipped_step = true;
+        let back = StepRecord::from_json(&rec.to_json()).unwrap();
+        let p = back.grad_probes.get("visual.patch_embed").unwrap();
+        assert_eq!(p.max_abs, 7.0);
+        assert!(p.nonfinite);
+        assert_eq!(back.loss_scale, Some(65536.0));
+        assert!(back.skipped_step);
+    }
+
+    #[test]
+    fn scale_drop_counting() {
+        let mut sink = MetricsSink::memory();
+        for (i, s) in [65536.0, 65536.0, 32768.0, 32768.0, 16384.0]
+            .iter()
+            .enumerate()
+        {
+            sink.log(StepRecord {
+                step: i as u64,
+                loss_scale: Some(*s),
+                ..Default::default()
+            });
+        }
+        assert_eq!(sink.scale_drops(), 2);
+    }
+
+    #[test]
+    fn traces() {
+        let mut sink = MetricsSink::memory();
+        let mut rms = BTreeMap::new();
+        rms.insert("pe".to_string(), 3.0f32);
+        sink.log(StepRecord { step: 0, loss: 1.0, rms, ..Default::default() });
+        sink.log(StepRecord { step: 1, loss: 2.0, ..Default::default() });
+        assert_eq!(sink.loss_trace(), vec![1.0, 2.0]);
+        assert_eq!(sink.rms_trace("pe"), vec![3.0, 1.0]);
+    }
+}

@@ -1,0 +1,174 @@
+//! Spike-detection heuristics, transcribed from paper Appendix D:
+//!
+//! * **RMS spike events**: `{t : RMS_t ≥ 2.3}`.
+//! * **Loss spike events**: loss at `t` exceeds the running mean by 3.2×
+//!   the running standard deviation; a spike only *counts* if there are
+//!   multiple deviations within an interval of 10 ("which indicates that
+//!   loss has meaningfully spiked").
+//! * Both kinds are deduplicated: multiple events within 10 iterations
+//!   count as one spike starting at the earliest time.
+//! * The first `burn_in` iterations are ignored (paper: 1000, when the LR
+//!   is still low; configurable because our runs are shorter).
+
+/// Paper's loss-spike threshold: 3.2 running standard deviations.
+pub const DEFAULT_LOSS_SIGMA: f32 = 3.2;
+/// Paper's RMS-spike threshold: RMS_t ≥ 2.3.
+pub const DEFAULT_RMS_THRESHOLD: f32 = 2.3;
+/// Paper's dedup / confirmation interval: 10 iterations.
+pub const DEDUP_WINDOW: u64 = 10;
+
+#[derive(Debug, Clone)]
+pub struct SpikeConfig {
+    pub loss_sigma: f32,
+    pub rms_threshold: f32,
+    /// trailing window for the running mean/std of the loss
+    pub stat_window: usize,
+    /// iterations to ignore at the start
+    pub burn_in: u64,
+}
+
+impl Default for SpikeConfig {
+    fn default() -> Self {
+        Self {
+            loss_sigma: DEFAULT_LOSS_SIGMA,
+            rms_threshold: DEFAULT_RMS_THRESHOLD,
+            stat_window: 100,
+            burn_in: 50,
+        }
+    }
+}
+
+/// Deduplicate raw event iterations: events within `DEDUP_WINDOW` of the
+/// previous *kept* event are merged into it (earliest time wins).
+fn dedup(events: &[u64]) -> Vec<u64> {
+    let mut out: Vec<u64> = vec![];
+    for &t in events {
+        match out.last() {
+            Some(&last) if t <= last + DEDUP_WINDOW => {}
+            _ => out.push(t),
+        }
+    }
+    out
+}
+
+/// Detect loss spikes in a loss trace (index = iteration, 0-based).
+///
+/// Running statistics use a trailing window of `cfg.stat_window` values
+/// *before* the current iteration, so a spike does not inflate its own
+/// baseline.
+pub fn detect_loss_spikes(loss: &[f32], cfg: &SpikeConfig) -> Vec<u64> {
+    let w = cfg.stat_window;
+    let mut deviations: Vec<u64> = vec![];
+    for t in 0..loss.len() {
+        if (t as u64) < cfg.burn_in || t < 5 {
+            continue;
+        }
+        let lo = t.saturating_sub(w);
+        let hist = &loss[lo..t];
+        let n = hist.len() as f64;
+        let mean: f64 = hist.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var: f64 =
+            hist.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        let std = var.sqrt().max(1e-12);
+        if (loss[t] as f64) > mean + cfg.loss_sigma as f64 * std {
+            deviations.push(t as u64);
+        }
+    }
+    // Confirmation: a deviation only seeds a spike if another deviation
+    // occurs within 10 iterations (Appendix D).
+    let confirmed: Vec<u64> = deviations
+        .iter()
+        .copied()
+        .filter(|&t| {
+            deviations
+                .iter()
+                .any(|&s| s != t && s.abs_diff(t) <= DEDUP_WINDOW)
+        })
+        .collect();
+    dedup(&confirmed)
+}
+
+/// Detect RMS spikes: `{t : RMS_t ≥ threshold}`, deduplicated.
+pub fn detect_rms_spikes(rms: &[f32], cfg: &SpikeConfig) -> Vec<u64> {
+    let raw: Vec<u64> = rms
+        .iter()
+        .enumerate()
+        .filter(|&(t, &v)| (t as u64) >= cfg.burn_in && v >= cfg.rms_threshold)
+        .map(|(t, _)| t as u64)
+        .collect();
+    dedup(&raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SpikeConfig {
+        SpikeConfig { burn_in: 10, stat_window: 50, ..Default::default() }
+    }
+
+    fn flat_with_spike(at: usize, width: usize) -> Vec<f32> {
+        let mut loss = vec![1.0f32; 300];
+        // small jitter so std > 0
+        for (i, v) in loss.iter_mut().enumerate() {
+            *v += ((i % 7) as f32 - 3.0) * 0.01;
+        }
+        for i in at..at + width {
+            loss[i] = 5.0;
+        }
+        loss
+    }
+
+    #[test]
+    fn detects_a_sustained_spike() {
+        let loss = flat_with_spike(100, 4);
+        let spikes = detect_loss_spikes(&loss, &cfg());
+        assert_eq!(spikes, vec![100]);
+    }
+
+    #[test]
+    fn single_outlier_is_not_confirmed() {
+        let loss = flat_with_spike(100, 1);
+        let spikes = detect_loss_spikes(&loss, &cfg());
+        assert!(spikes.is_empty(), "lone deviation must not count: {spikes:?}");
+    }
+
+    #[test]
+    fn nearby_spikes_are_deduplicated() {
+        let mut loss = flat_with_spike(100, 3);
+        for i in 105..108 {
+            loss[i] = 5.0;
+        }
+        let spikes = detect_loss_spikes(&loss, &cfg());
+        assert_eq!(spikes, vec![100], "within-10 events merge to earliest");
+    }
+
+    #[test]
+    fn separated_spikes_both_count() {
+        let mut loss = flat_with_spike(100, 3);
+        for i in 200..203 {
+            loss[i] = 5.0;
+        }
+        let spikes = detect_loss_spikes(&loss, &cfg());
+        assert_eq!(spikes, vec![100, 200]);
+    }
+
+    #[test]
+    fn burn_in_ignored() {
+        let mut loss = flat_with_spike(200, 3);
+        loss[5] = 50.0;
+        loss[6] = 50.0;
+        let spikes = detect_loss_spikes(&loss, &cfg());
+        assert_eq!(spikes, vec![200]);
+    }
+
+    #[test]
+    fn rms_threshold_and_dedup() {
+        let mut rms = vec![1.0f32; 100];
+        rms[40] = 3.0;
+        rms[45] = 2.5; // merged into 40
+        rms[80] = 2.3; // exactly at threshold counts
+        let spikes = detect_rms_spikes(&rms, &cfg());
+        assert_eq!(spikes, vec![40, 80]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal host-side tensor utilities.
+//!
+//! The training path keeps parameters, gradients and optimizer state as flat
+//! `Vec<f32>` buffers (one per named tensor, described by the artifact
+//! manifest); this module provides the shape bookkeeping, deterministic
+//! initialization, and a tiny RNG-backed `Matrix` used by the native
+//! [`crate::nn`] / [`crate::gemm`] substrate.
+
+mod matrix;
+mod rng;
+
+pub use matrix::{Matrix, MatrixI8};
+pub use rng::Rng;
+
+/// A named, shaped, flat f32 buffer (a parameter or gradient tensor).
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(name: impl Into<String>, shape: &[usize]) -> Self {
+        let numel = shape.iter().product();
+        Self { name: name.into(), shape: shape.to_vec(), data: vec![0.0; numel] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Root-mean-square of the entries (used by telemetry probes).
+    pub fn rms(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let ss: f64 = self.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        (ss / self.data.len() as f64).sqrt() as f32
+    }
+
+    /// Largest absolute entry.
+    pub fn absmax(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// True if any entry is non-finite (the loss-scaler Inf/NaN check, §3.6).
+    pub fn has_nonfinite(&self) -> bool {
+        self.data.iter().any(|v| !v.is_finite())
+    }
+}
+
+/// Initialization specs mirrored from the manifest (`aot.py::_init_spec`):
+/// `zeros`, `ones`, `const:<v>`, `normal:<std>`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InitSpec {
+    Zeros,
+    Ones,
+    Const(f32),
+    Normal(f32),
+}
+
+impl InitSpec {
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "zeros" {
+            Some(Self::Zeros)
+        } else if s == "ones" {
+            Some(Self::Ones)
+        } else if let Some(v) = s.strip_prefix("const:") {
+            v.parse().ok().map(Self::Const)
+        } else if let Some(v) = s.strip_prefix("normal:") {
+            v.parse().ok().map(Self::Normal)
+        } else {
+            None
+        }
+    }
+
+    /// Fill `buf` according to the spec with the given RNG.
+    pub fn fill(&self, buf: &mut [f32], rng: &mut Rng) {
+        match self {
+            Self::Zeros => buf.fill(0.0),
+            Self::Ones => buf.fill(1.0),
+            Self::Const(v) => buf.fill(*v),
+            Self::Normal(std) => {
+                for v in buf.iter_mut() {
+                    *v = rng.normal() * std;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_spec_roundtrip() {
+        assert_eq!(InitSpec::parse("zeros"), Some(InitSpec::Zeros));
+        assert_eq!(InitSpec::parse("ones"), Some(InitSpec::Ones));
+        assert_eq!(InitSpec::parse("const:2.5"), Some(InitSpec::Const(2.5)));
+        assert_eq!(InitSpec::parse("normal:0.02"), Some(InitSpec::Normal(0.02)));
+        assert_eq!(InitSpec::parse("bogus"), None);
+    }
+
+    #[test]
+    fn normal_fill_has_requested_std() {
+        let mut rng = Rng::seed(7);
+        let mut buf = vec![0.0f32; 20000];
+        InitSpec::Normal(0.5).fill(&mut buf, &mut rng);
+        let mean: f32 = buf.iter().sum::<f32>() / buf.len() as f32;
+        let var: f32 =
+            buf.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / buf.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var.sqrt() - 0.5).abs() < 0.02, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn tensor_stats() {
+        let t = HostTensor {
+            name: "t".into(),
+            shape: vec![2, 2],
+            data: vec![1.0, -3.0, 0.0, 2.0],
+        };
+        assert_eq!(t.absmax(), 3.0);
+        assert!((t.rms() - (14.0f32 / 4.0).sqrt()).abs() < 1e-6);
+        assert!(!t.has_nonfinite());
+        let t2 = HostTensor { data: vec![f32::NAN], ..t };
+        assert!(t2.has_nonfinite());
+    }
+}

@@ -1,0 +1,86 @@
+//! A tiny criterion-style benchmark harness (the `cargo bench` targets are
+//! `harness = false` binaries built on this).
+//!
+//! Methodology: warmup iterations, then `samples` timed batches; report
+//! median, min, and mean — medians are robust to scheduler noise, which
+//! matters because the figure benches compare *ratios* (SwitchBack vs
+//! baseline) rather than absolute numbers.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub mean_ns: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Benchmark `f`, auto-calibrating the per-sample iteration count so one
+/// sample takes ≳ `min_sample_ms`.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((5e-3 / once).ceil() as usize).clamp(1, 1000);
+    for _ in 0..2 {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        times.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let min = times[0];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        median_ns: median,
+        min_ns: min,
+        mean_ns: mean,
+        samples,
+    }
+}
+
+/// Print a result row (ms).
+pub fn report(r: &BenchResult) {
+    println!(
+        "  {:<44} median {:>10.3} ms   min {:>10.3} ms",
+        r.name,
+        r.median_ns / 1e6,
+        r.min_ns / 1e6
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", 5, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns);
+        // keep the accumulator alive
+        assert!(acc != 1);
+    }
+}

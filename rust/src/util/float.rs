@@ -1,0 +1,156 @@
+//! bf16 / fp16 rounding via bit manipulation (round-to-nearest-even),
+//! replacing the `half` crate.  Used by the quantization library and the
+//! §3.6 fp16 loss-scaler simulation.
+
+/// fp16 largest finite value.
+pub const F16_MAX: f32 = 65504.0;
+
+/// Round an f32 to the nearest bfloat16 value (returned as f32).
+/// bf16 is the top 16 bits of f32, so this is RNE on bit 16.
+pub fn bf16_round(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    // round half to even on the lower 16 bits
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb);
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// Round an f32 to the nearest IEEE fp16 value (returned as f32), with
+/// proper subnormals and overflow-to-infinity semantics.
+pub fn fp16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// f32 → fp16 bit pattern (RNE).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf / nan
+        return sign | 0x7C00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    // unbias, rebias for fp16
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1F {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if e16 <= 0 {
+        // subnormal fp16 (or underflow to zero)
+        if e16 < -10 {
+            return sign;
+        }
+        let full = mant | 0x0080_0000; // implicit bit
+        let shift = (14 - e16) as u32; // amount to reach fp16 subnormal scale
+        let sub = full >> shift;
+        // RNE on the shifted-out bits
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let rounded = if rem > half || (rem == half && (sub & 1) == 1) {
+            sub + 1
+        } else {
+            sub
+        };
+        return sign | rounded as u16;
+    }
+    // normal: keep 10 mantissa bits, RNE on the lower 13
+    let sub = mant >> 13;
+    let rem = mant & 0x1FFF;
+    let half = 0x1000;
+    let mut out = ((e16 as u32) << 10) | sub;
+    if rem > half || (rem == half && (out & 1) == 1) {
+        out += 1; // may carry into the exponent — that is correct behaviour
+    }
+    if out >= 0x7C00 {
+        return sign | 0x7C00;
+    }
+    sign | out as u16
+}
+
+/// fp16 bit pattern → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf/nan
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // subnormal: value = ±mant * 2^-24
+            let mag = (mant as f32) * 2.0f32.powi(-24);
+            return if h & 0x8000 != 0 { -mag } else { mag };
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_basics() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(0.0), 0.0);
+        assert_eq!(bf16_round(-2.5), -2.5);
+        // 8 mantissa bits: 1 + 2^-9 rounds to 1.0; 1 + 2^-7 is exact
+        assert_eq!(bf16_round(1.0 + 2.0f32.powi(-9)), 1.0);
+        assert_eq!(bf16_round(1.0 + 2.0f32.powi(-7)), 1.0 + 2.0f32.powi(-7));
+        assert!(bf16_round(f32::NAN).is_nan());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+    }
+
+    #[test]
+    fn bf16_ties_to_even() {
+        // exactly halfway between two bf16 values: 1 + 2^-8
+        let half = 1.0 + 2.0f32.powi(-8);
+        assert_eq!(bf16_round(half), 1.0, "ties to even (even mantissa is 1.0)");
+    }
+
+    #[test]
+    fn fp16_roundtrip_exact_values() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 65504.0, 6.1035156e-5, 2.0f32.powi(-24)] {
+            assert_eq!(fp16_round(v), v, "fp16-exact {v} must round-trip");
+        }
+    }
+
+    #[test]
+    fn fp16_overflow_and_underflow() {
+        assert_eq!(fp16_round(70000.0), f32::INFINITY);
+        assert_eq!(fp16_round(-70000.0), f32::NEG_INFINITY);
+        assert_eq!(fp16_round(1e-10), 0.0);
+        assert!(fp16_round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn fp16_subnormals() {
+        let min_sub = 2.0f32.powi(-24);
+        assert_eq!(fp16_round(min_sub), min_sub);
+        assert_eq!(fp16_round(min_sub * 0.4), 0.0);
+        assert_eq!(fp16_round(min_sub * 0.6), min_sub);
+        assert_eq!(fp16_round(-3.0 * min_sub), -3.0 * min_sub);
+    }
+
+    #[test]
+    fn fp16_rne_on_normals() {
+        // halfway between 2048 and 2050 (fp16 spacing at 2^11 is 2)
+        assert_eq!(fp16_round(2049.0), 2048.0, "tie to even");
+        assert_eq!(fp16_round(2051.0), 2052.0, "tie to even (upper)");
+        assert_eq!(fp16_round(2049.5), 2050.0);
+    }
+
+    #[test]
+    fn fp16_mantissa_carry_into_exponent() {
+        // largest mantissa rounding up carries exponent: 1.9995117*2^k
+        let v = 4095.8f32; // just below 4096
+        assert_eq!(fp16_round(v), 4096.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! In-tree substrates that would normally be crates (the build environment
+//! is offline, and the project mandate is to build every dependency):
+//!
+//! * [`json`]    — JSON parser + writer (manifests, JSONL metrics).
+//! * [`threads`] — data-parallel helper over row chunks (the GEMM pool).
+//! * [`float`]   — bf16 / fp16 rounding via bit manipulation.
+//! * [`bench`]   — a tiny criterion-style benchmark harness used by the
+//!   `cargo bench` targets (median-of-samples timing + throughput).
+
+pub mod bench;
+pub mod float;
+pub mod json;
+pub mod threads;

@@ -1,0 +1,119 @@
+//! Data-parallel helper: split a mutable slice into contiguous chunks and
+//! process them on scoped threads (the GEMM/optimizer thread pool).
+//!
+//! `std::thread::scope` keeps this dependency-free; threads are spawned per
+//! call, which costs ~10µs each — negligible against the ≥1ms GEMMs this
+//! parallelizes (measured in EXPERIMENTS.md §Perf).
+
+/// Number of worker threads (cores, capped; override with SWITCHBACK_THREADS).
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("SWITCHBACK_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+/// Process `data` in contiguous chunks of `chunk_rows * row_len` elements,
+/// calling `f(first_row_index, rows_chunk)` in parallel.
+///
+/// `f` must be pure per chunk (no cross-chunk communication).
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if row_len == 0 || data.is_empty() {
+        return;
+    }
+    let n_rows = data.len() / row_len;
+    let workers = num_threads().min(n_rows.max(1));
+    if workers <= 1 || n_rows <= 1 {
+        f(0, data);
+        return;
+    }
+    let rows_per = n_rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        let fref = &f;
+        while !rest.is_empty() {
+            let take = (rows_per * row_len).min(rest.len());
+            let (chunk, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let my_row0 = row0;
+            row0 += take / row_len;
+            s.spawn(move || fref(my_row0, chunk));
+        }
+    });
+}
+
+/// Parallel map over indices `0..n` collecting results in order.
+pub fn par_map<R: Send, F>(n: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        let fref = &f;
+        let mut rest: &mut [Option<R>] = &mut out;
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (chunk, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let my_start = start;
+            start += take;
+            s.spawn(move || {
+                for (i, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(fref(my_start + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_all_rows_once() {
+        let mut data = vec![0u32; 103 * 7];
+        par_chunks_mut(&mut data, 7, |row0, chunk| {
+            for (r, row) in chunk.chunks_mut(7).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (row0 + r) as u32;
+                }
+            }
+        });
+        for (r, row) in data.chunks(7).enumerate() {
+            assert!(row.iter().all(|&v| v == r as u32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(1000, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut e: Vec<u32> = vec![];
+        par_chunks_mut(&mut e, 4, |_, _| panic!("must not be called"));
+        let out: Vec<usize> = par_map(1, |i| i);
+        assert_eq!(out, vec![0]);
+    }
+}

@@ -1,0 +1,79 @@
+//! Cross-language golden tests: the rust `quant` module must agree
+//! bit-for-bit with the jnp oracles (`python/compile/kernels/ref.py`),
+//! via golden vectors emitted by `aot.py` into artifacts/quant_golden.json.
+
+use std::path::Path;
+use switchback::quant::{self, E4M3, E5M2};
+use switchback::tensor::Matrix;
+use switchback::util::json::{parse, Value};
+
+fn load_golden() -> Option<Value> {
+    let p = Path::new("artifacts/quant_golden.json");
+    if !p.exists() {
+        eprintln!("skipping: artifacts/quant_golden.json not built");
+        return None;
+    }
+    Some(parse(&std::fs::read_to_string(p).unwrap()).unwrap())
+}
+
+fn f32s(v: &Value, key: &str) -> Vec<f32> {
+    v.get(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn i8s(v: &Value, key: &str) -> Vec<i8> {
+    v.get(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i8)
+        .collect()
+}
+
+#[test]
+fn rowwise_quant_bit_exact_vs_jax() {
+    let Some(g) = load_golden() else { return };
+    let rows = g.get("rows").unwrap().as_usize().unwrap();
+    let cols = g.get("cols").unwrap().as_usize().unwrap();
+    let x = Matrix::from_vec(rows, cols, f32s(&g, "x"));
+    let q = quant::rowwise_quant(&x);
+    assert_eq!(q.codes.data, i8s(&g, "row_codes"), "row codes differ from jax");
+    let want_state = f32s(&g, "row_state");
+    for (a, b) in q.state.iter().zip(&want_state) {
+        assert!((a - b).abs() <= f32::EPSILON * a.abs(), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn tensorwise_quant_bit_exact_vs_jax() {
+    let Some(g) = load_golden() else { return };
+    let rows = g.get("rows").unwrap().as_usize().unwrap();
+    let cols = g.get("cols").unwrap().as_usize().unwrap();
+    let x = Matrix::from_vec(rows, cols, f32s(&g, "x"));
+    let q = quant::tensorwise_quant(&x);
+    assert_eq!(q.codes.data, i8s(&g, "tensor_codes"));
+    let want = g.get("tensor_state").unwrap().as_f64().unwrap() as f32;
+    assert!((q.state - want).abs() <= f32::EPSILON * want.abs());
+}
+
+#[test]
+fn fp8_rounding_bit_exact_vs_jax() {
+    let Some(g) = load_golden() else { return };
+    let x = f32s(&g, "x");
+    let want_e4 = f32s(&g, "fp8_e4m3");
+    for (i, want) in want_e4.iter().enumerate() {
+        let got = quant::fp8_round(x[i], E4M3);
+        assert_eq!(got, *want, "e4m3 idx {i}: input {}", x[i]);
+    }
+    let want_e5 = f32s(&g, "fp8_e5m2_x100");
+    for (i, want) in want_e5.iter().enumerate() {
+        let got = quant::fp8_round(x[i] * 100.0, E5M2);
+        assert_eq!(got, *want, "e5m2 idx {i}: input {}", x[i] * 100.0);
+    }
+}

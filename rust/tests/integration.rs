@@ -1,0 +1,204 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! These prove the full L1→L2→L3 composition: the HLO text that jax lowered
+//! loads, compiles, and reproduces jax's own numbers (golden check), and a
+//! short end-to-end training run learns.
+
+use std::path::Path;
+use switchback::config::{OptimizerKind, TrainConfig};
+use switchback::coordinator::Trainer;
+use switchback::runtime::Runtime;
+use switchback::util::json;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("highprec_micro_b32.manifest.json").exists() {
+        Some(p)
+    } else {
+        None
+    }
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn golden_step_matches_jax() {
+    let dir = need_artifacts!();
+    let golden_path = dir.join("highprec_micro_b32.golden.json");
+    let golden = json::parse(&std::fs::read_to_string(golden_path).unwrap()).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let art = runtime.load(dir, "highprec_micro_b32").unwrap();
+    let m = &art.manifest;
+    let params = art.initial_params(0, false).unwrap();
+    // the deterministic batch aot.py used for the golden record
+    let b = m.batch;
+    let n_img = b * m.config.patches * m.config.patch_dim;
+    let images: Vec<f32> = (0..n_img).map(|i| (i as f32).sin()).collect();
+    let tokens: Vec<i32> =
+        (0..(b * m.config.seq) as i32).map(|i| i % m.config.vocab as i32).collect();
+    let out = art.train_step(&params, &images, &tokens).unwrap();
+
+    let want_loss = golden.get("loss").unwrap().as_f64().unwrap() as f32;
+    assert!(
+        (out.loss - want_loss).abs() < 1e-4,
+        "loss {} vs jax golden {}",
+        out.loss,
+        want_loss
+    );
+    let want_mags: Vec<f32> = golden
+        .get("mags")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    assert_eq!(out.mags.len(), want_mags.len());
+    for (a, b) in out.mags.iter().zip(&want_mags) {
+        assert!((a - b).abs() < 1e-4, "mags {a} vs {b}");
+    }
+    let g0_l2: f32 = out.grads[0].iter().map(|v| v * v).sum::<f32>().sqrt();
+    let want_g0 = golden.get("grad0_l2").unwrap().as_f64().unwrap() as f32;
+    assert!(
+        (g0_l2 - want_g0).abs() / want_g0.max(1e-9) < 1e-3,
+        "grad0 l2 {g0_l2} vs {want_g0}"
+    );
+}
+
+#[test]
+fn params_bin_matches_manifest_layout() {
+    let dir = need_artifacts!();
+    let runtime = Runtime::cpu().unwrap();
+    let art = runtime.load(dir, "highprec_micro_b32").unwrap();
+    let params = art.initial_params(0, false).unwrap();
+    assert_eq!(params.len(), art.manifest.n_tensors);
+    let total: usize = params.iter().map(|p| p.len()).sum();
+    assert_eq!(total, art.manifest.n_params);
+    for (p, t) in params.iter().zip(&art.manifest.tensors) {
+        assert_eq!(p.len(), t.numel, "tensor {}", t.name);
+    }
+    // logit_scale is ln(1/0.07)
+    let ls = art
+        .manifest
+        .tensors
+        .iter()
+        .position(|t| t.kind == "logit_scale")
+        .unwrap();
+    assert!((params[ls][0] - (1.0f32 / 0.07).ln()).abs() < 1e-4);
+}
+
+#[test]
+fn reinit_respects_init_specs() {
+    let dir = need_artifacts!();
+    let runtime = Runtime::cpu().unwrap();
+    let art = runtime.load(dir, "highprec_micro_b32").unwrap();
+    let params = art.initial_params(7, true).unwrap();
+    for (p, t) in params.iter().zip(&art.manifest.tensors) {
+        match t.init.as_str() {
+            "zeros" => assert!(p.iter().all(|&v| v == 0.0), "{}", t.name),
+            "ones" => assert!(p.iter().all(|&v| v == 1.0), "{}", t.name),
+            s if s.starts_with("normal:") => {
+                let std: f32 = s[7..].parse().unwrap();
+                if p.len() > 500 {
+                    let mean: f32 = p.iter().sum::<f32>() / p.len() as f32;
+                    let var: f32 =
+                        p.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                            / p.len() as f32;
+                    assert!(
+                        (var.sqrt() - std).abs() < 0.25 * std,
+                        "{}: std {} vs {}",
+                        t.name,
+                        var.sqrt(),
+                        std
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+    // different seeds give different params
+    let params2 = art.initial_params(8, true).unwrap();
+    let pe = art.probe_indices().0;
+    assert_ne!(params[pe], params2[pe]);
+}
+
+#[test]
+fn micro_training_learns_and_evaluates() {
+    let dir = need_artifacts!();
+    let runtime = Runtime::cpu().unwrap();
+    let mut cfg = TrainConfig::preset("highprec_micro_b32", 60)
+        .with_optimizer(OptimizerKind::StableAdamw, 0.99);
+    cfg.artifact_dir = dir.to_str().unwrap().to_string();
+    cfg.lr = 3e-3;
+    let mut trainer = Trainer::new(&runtime, cfg).unwrap();
+    let res = trainer.run(false).unwrap();
+    let loss = res.loss_trace();
+    assert!(!res.diverged);
+    assert!(
+        res.tail_loss < loss[0] - 0.3,
+        "should learn: first {} tail {}",
+        loss[0],
+        res.tail_loss
+    );
+    // zero-shot accuracy should beat chance (1/32) clearly after training
+    let acc = res.zero_shot_acc.unwrap();
+    assert!(acc > 0.10, "acc {acc} not above chance");
+}
+
+#[test]
+fn pallas_artifact_composes_end_to_end() {
+    let dir = need_artifacts!();
+    if !dir.join("switchback_int8_pallas_micro_b8.manifest.json").exists() {
+        eprintln!("skipping: pallas artifact missing");
+        return;
+    }
+    let runtime = Runtime::cpu().unwrap();
+    let art = runtime.load(dir, "switchback_int8_pallas_micro_b8").unwrap();
+    let m = &art.manifest;
+    let params = art.initial_params(0, false).unwrap();
+    let b = m.batch;
+    let images = vec![0.5f32; b * m.config.patches * m.config.patch_dim];
+    let tokens = vec![1i32; b * m.config.seq];
+    let out = art.train_step(&params, &images, &tokens).unwrap();
+    assert!(out.loss.is_finite());
+    assert_eq!(out.grads.len(), m.n_tensors);
+    // compare against the jnp-path artifact with identical params/batch:
+    // the pallas kernels and the jnp reference implement the same math.
+    // (they share init because both were built from seed 0 at batch 8? the
+    // jnp artifact is b32, so just sanity-check magnitudes here.)
+    assert!(out.mags.iter().all(|v| v.is_finite() && *v > 0.0));
+}
+
+#[test]
+fn switchback_artifact_close_to_highprec_on_same_batch() {
+    let dir = need_artifacts!();
+    let runtime = Runtime::cpu().unwrap();
+    let hp = runtime.load(dir, "highprec_micro_b32").unwrap();
+    let sb = runtime.load(dir, "switchback_int8_micro_b32").unwrap();
+    let params = hp.initial_params(0, false).unwrap();
+    let m = &hp.manifest;
+    let b = m.batch;
+    let n_img = b * m.config.patches * m.config.patch_dim;
+    let images: Vec<f32> = (0..n_img).map(|i| (i as f32 * 0.37).cos()).collect();
+    let tokens: Vec<i32> =
+        (0..(b * m.config.seq) as i32).map(|i| (i * 7) % m.config.vocab as i32).collect();
+    let o1 = hp.train_step(&params, &images, &tokens).unwrap();
+    let o2 = sb.train_step(&params, &images, &tokens).unwrap();
+    // same init, same batch: int8 loss within quantization noise of f32 loss
+    assert!(
+        (o1.loss - o2.loss).abs() < 0.05,
+        "losses diverge: {} vs {}",
+        o1.loss,
+        o2.loss
+    );
+}

@@ -1,0 +1,239 @@
+//! Property-based tests (RNG-driven, in the proptest spirit — the offline
+//! build has no proptest crate) over the coordinator-side invariants:
+//! quantization, optimizers, spike detection, the data pipeline.
+
+use switchback::optim::{clip_global_norm, AdamW, AdamWConfig, Optimizer, ParamMeta};
+use switchback::quant;
+use switchback::telemetry::{detect_loss_spikes, lead_lag_from_events, SpikeConfig};
+use switchback::tensor::{Matrix, Rng};
+
+fn meta(n: usize) -> Vec<ParamMeta> {
+    (0..n)
+        .map(|i| ParamMeta { name: format!("p{i}"), decay: false, kind: "w".into() })
+        .collect()
+}
+
+/// Quantization invariants over 200 random matrices:
+/// codes in range, absmax maps to ±127, dequant error ≤ half a step,
+/// quantization is idempotent on its own grid.
+#[test]
+fn prop_rowwise_quant_invariants() {
+    let mut rng = Rng::seed(101);
+    for trial in 0..200 {
+        let rows = 1 + rng.below(40);
+        let cols = 1 + rng.below(60);
+        let scale = [1e-4f32, 1.0, 1e4][rng.below(3)];
+        let x = Matrix::randn(rows, cols, scale, &mut rng);
+        let q = quant::rowwise_quant(&x);
+        for r in 0..rows {
+            let row = x.row(r);
+            let absmax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if absmax > 0.0 {
+                assert_eq!(q.state[r], absmax, "trial {trial}");
+                let has_extreme = q.codes.row(r).iter().any(|&c| c == 127 || c == -127);
+                assert!(has_extreme, "absmax element must map to ±127");
+            }
+            let step = q.state[r] / 127.0;
+            for (&v, &c) in row.iter().zip(q.codes.row(r)) {
+                assert!((c as f32 * step - v).abs() <= 0.5 * step * 1.0001 + 1e-12);
+            }
+        }
+        // idempotence: dequantized values re-quantize to the same codes
+        let back = quant::dequant_rowwise(&q);
+        let q2 = quant::rowwise_quant(&back);
+        assert_eq!(q.codes.data, q2.codes.data, "trial {trial}: not idempotent");
+    }
+}
+
+/// fp8 invariants over random values: result is on the fp8 grid (its own
+/// round-trip fixed point), monotone, sign-symmetric, magnitude-bounded.
+#[test]
+fn prop_fp8_round_invariants() {
+    let mut rng = Rng::seed(102);
+    for fmt in [quant::E4M3, quant::E5M2] {
+        for _ in 0..5000 {
+            let v = rng.normal() * [1e-6f32, 1e-2, 1.0, 1e3][rng.below(4)];
+            let r = quant::fp8_round(v, fmt);
+            assert_eq!(quant::fp8_round(r, fmt), r, "fixed point: {v} {r}");
+            assert_eq!(quant::fp8_round(-v, fmt), -r, "odd symmetry");
+            assert!(r.abs() <= fmt.max_value);
+            // relative error bound for normals: half ULP = 2^-(m+1)
+            if v.abs() >= (2.0f32).powi(fmt.min_normal_exp) && v.abs() <= fmt.max_value {
+                let tol = v.abs() * (2.0f32).powi(-(fmt.mantissa_bits + 1)) * 1.0001;
+                assert!((r - v).abs() <= tol, "{v} -> {r} (fmt {})", fmt.name);
+            }
+        }
+    }
+}
+
+/// Gradient clipping: post-clip norm never exceeds the max, direction is
+/// preserved, and no-op when already inside the ball.
+#[test]
+fn prop_clip_global_norm() {
+    let mut rng = Rng::seed(103);
+    for _ in 0..100 {
+        let n_tensors = 1 + rng.below(5);
+        let mut grads: Vec<Vec<f32>> = (0..n_tensors)
+            .map(|_| {
+                let n = 1 + rng.below(50);
+                let mut v = vec![0.0; n];
+                rng.fill_normal(&mut v, 10.0);
+                v
+            })
+            .collect();
+        let orig = grads.clone();
+        let max = 0.5 + rng.uniform() * 5.0;
+        let pre = clip_global_norm(&mut grads, max);
+        let post: f32 = grads
+            .iter()
+            .flat_map(|g| g.iter().map(|v| v * v))
+            .sum::<f32>()
+            .sqrt();
+        assert!(post <= max * 1.0001, "post {post} max {max}");
+        if pre <= max {
+            assert_eq!(grads, orig, "no-op inside the ball");
+        } else {
+            // direction preserved: ratios constant
+            let k = post / pre;
+            for (g, o) in grads.iter().flatten().zip(orig.iter().flatten()) {
+                assert!((g - o * k).abs() < 1e-4);
+            }
+        }
+    }
+}
+
+/// StableAdamW invariant: the applied lr multiplier is always ≤ 1 and
+/// equals 1/max(1, RMS); plain AdamW always reports multiplier 1.
+#[test]
+fn prop_update_clipping_multiplier() {
+    let mut rng = Rng::seed(104);
+    for clip in [false, true] {
+        let mut opt = AdamW::new(
+            AdamWConfig { update_clipping: clip, ..AdamWConfig::plain(0.995) },
+            &meta(3),
+            &[8, 8, 8],
+        );
+        let mut params = vec![vec![0.0f32; 8]; 3];
+        for _ in 0..50 {
+            let grads: Vec<Vec<f32>> = (0..3)
+                .map(|_| {
+                    let mut g = vec![0.0f32; 8];
+                    let scale = (10.0f32).powi(rng.below(5) as i32 - 2);
+                    rng.fill_normal(&mut g, scale);
+                    g
+                })
+                .collect();
+            let stats = opt.step(&mut params, &grads, 1e-3, None);
+            for (rms, mult) in stats.rms.iter().zip(&stats.lr_mult) {
+                if clip {
+                    assert!((mult - 1.0 / rms.max(1.0)).abs() < 1e-6);
+                    assert!(*mult <= 1.0 + 1e-6);
+                } else {
+                    assert_eq!(*mult, 1.0);
+                }
+            }
+            for p in params.iter().flatten() {
+                assert!(p.is_finite());
+            }
+        }
+    }
+}
+
+/// Spike detector sanity under random walks: a flat-noise trace produces
+/// (almost) no confirmed spikes; injected plateaus are always found.
+#[test]
+fn prop_spike_detector_false_positive_rate() {
+    let mut rng = Rng::seed(105);
+    let cfg = SpikeConfig { burn_in: 20, ..Default::default() };
+    let mut total_fp = 0;
+    for _ in 0..20 {
+        let trace: Vec<f32> = (0..500).map(|_| 2.0 + 0.05 * rng.normal()).collect();
+        total_fp += detect_loss_spikes(&trace, &cfg).len();
+    }
+    assert!(total_fp <= 2, "too many false positives on pure noise: {total_fp}");
+
+    for trial in 0..20 {
+        let mut trace: Vec<f32> = (0..500).map(|_| 2.0 + 0.05 * rng.normal()).collect();
+        let at = 100 + rng.below(300);
+        for i in at..at + 4 {
+            trace[i] = 6.0;
+        }
+        let spikes = detect_loss_spikes(&trace, &cfg);
+        assert!(
+            spikes.iter().any(|&t| t.abs_diff(at as u64) <= 2),
+            "trial {trial}: missed injected spike at {at}: {spikes:?}"
+        );
+    }
+}
+
+/// Lead–lag analyzer: under random (unrelated) spike trains, the predicted
+/// fraction should be close to the chance fraction — no spurious causality.
+#[test]
+fn prop_lead_lag_no_spurious_causality() {
+    let mut rng = Rng::seed(106);
+    let len = 20000u64;
+    let mut total_pred = 0usize;
+    let mut total_expected = 0.0f64;
+    let mut total_spikes = 0usize;
+    for _ in 0..30 {
+        let loss_spikes: Vec<u64> = {
+            let mut v: Vec<u64> = (0..30).map(|_| rng.below(len as usize) as u64).collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        let rms_spikes: Vec<u64> = {
+            let mut v: Vec<u64> = (0..60).map(|_| rng.below(len as usize) as u64).collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        let rep = lead_lag_from_events(&loss_spikes, &rms_spikes, len);
+        total_pred += rep.predicted;
+        total_expected += rep.chance_fraction * rep.total_loss_spikes as f64;
+        total_spikes += rep.total_loss_spikes;
+    }
+    let rate = total_pred as f64 / total_spikes as f64;
+    let expected = total_expected / total_spikes as f64;
+    assert!(
+        (rate - expected).abs() < 0.03,
+        "random spikes predicted at {rate:.3} vs chance {expected:.3}"
+    );
+}
+
+/// Data pipeline: batches are finite, labelled, and learnable-by-construction
+/// (same-concept images are closer to each other than to other concepts).
+#[test]
+fn prop_data_concept_structure() {
+    use switchback::data::{DataConfig, SyntheticClip};
+    let mut d = SyntheticClip::new(DataConfig::for_model(16, 48, 16, 512, 3));
+    let b = d.next_batch(64);
+    assert!(b.images.iter().all(|v| v.is_finite()));
+    let dim = 16 * 48;
+    // mean intra-concept distance < mean inter-concept distance
+    let img = |i: usize| &b.images[i * dim..(i + 1) * dim];
+    let dist = |a: &[f32], c: &[f32]| -> f32 {
+        a.iter().zip(c).map(|(x, y)| (x - y) * (x - y)).sum::<f32>()
+    };
+    let (mut intra, mut inter, mut ni, mut nx) = (0.0f32, 0.0f32, 0, 0);
+    for i in 0..64 {
+        for j in (i + 1)..64 {
+            let e = dist(img(i), img(j));
+            if b.concepts[i] == b.concepts[j] {
+                intra += e;
+                ni += 1;
+            } else {
+                inter += e;
+                nx += 1;
+            }
+        }
+    }
+    if ni > 0 && nx > 0 {
+        assert!(
+            intra / ni as f32 * 1.5 < inter / nx as f32,
+            "concepts not separable: intra {} inter {}",
+            intra / ni as f32,
+            inter / nx as f32
+        );
+    }
+}
