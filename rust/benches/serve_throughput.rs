@@ -1,0 +1,109 @@
+//! Serving throughput: Standard (f32) vs SwitchBack vs LLM.int8() on the
+//! same weights, same batch policy, same closed-loop offered load.
+//!
+//! This is the serving analogue of Fig 13's end-to-end training speedup:
+//! forward-only, so SwitchBack's advantage is pure int8-GEMM time (no
+//! wgrad in sight) minus the activation-quantize overhead.  A second
+//! cache-focused pass measures the hit path, which must be orders of
+//! magnitude cheaper than any encode.
+//!
+//! Writes `results/serve_throughput.json` (same entry schema as
+//! BENCH_serve.json) so CI can track the trajectory.
+//!
+//! Usage: `cargo bench --bench serve_throughput [-- --quick]`
+
+use std::time::Duration;
+use switchback::nn::LinearKind;
+use switchback::serve::{
+    run_loadgen, write_bench_json, BatchPolicy, EncoderConfig, Engine,
+    LoadgenConfig, ServeConfig,
+};
+
+fn engine(kind: LinearKind, cache_capacity: usize, quick: bool) -> Engine {
+    let mut enc = EncoderConfig::demo(kind);
+    if quick {
+        enc.blocks = 1;
+        enc.dim = 64;
+    }
+    Engine::start(ServeConfig {
+        encoder: enc,
+        policy: BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_micros(2000),
+        },
+        workers: 0,
+        cache_capacity,
+        cache_shards: 0,
+    })
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let requests = if quick { 300 } else { 3000 };
+    let population = requests / 2;
+    println!("== serve throughput: precision kinds at equal batch policy ==");
+    println!("   {requests} requests, population {population}, concurrency 32\n");
+
+    let kinds = [
+        LinearKind::Standard,
+        LinearKind::SwitchBack,
+        LinearKind::LlmInt8,
+    ];
+    let mut reports = vec![];
+    for kind in kinds {
+        // 2× the population: per-shard caps + hash imbalance would evict
+        // live members at exactly-sized capacity
+        let eng = engine(kind, (population * 2).max(2), quick);
+        let report = run_loadgen(
+            &eng,
+            &LoadgenConfig {
+                requests,
+                concurrency: 32,
+                population,
+                image_fraction: 0.7,
+                seed: 77,
+            },
+        );
+        report.print();
+        reports.push(report);
+        eng.shutdown();
+    }
+
+    if let (Some(std_r), Some(sb_r)) = (
+        reports.iter().find(|r| r.kind == "standard"),
+        reports.iter().find(|r| r.kind == "switchback"),
+    ) {
+        println!(
+            "\nswitchback vs standard serving throughput: {:.2}×",
+            sb_r.requests_per_sec / std_r.requests_per_sec
+        );
+    }
+
+    // hit-path microcheck: repeats must be far cheaper than encodes
+    let eng = engine(LinearKind::SwitchBack, 64, true);
+    let report = run_loadgen(
+        &eng,
+        &LoadgenConfig {
+            requests: 2000,
+            concurrency: 8,
+            population: 8,
+            image_fraction: 1.0,
+            seed: 3,
+        },
+    );
+    println!(
+        "\nhit path: hit-rate {:.1}%  hit p50 {:.4} ms  vs encode p50 {:.3} ms",
+        100.0 * report.snapshot.hit_rate,
+        report.snapshot.hit_p50_ms,
+        report.snapshot.request_p50_ms,
+    );
+    reports.push(report);
+    eng.shutdown();
+
+    std::fs::create_dir_all("results").ok();
+    let out = "results/serve_throughput.json";
+    match write_bench_json(out, 32, 2000, &reports) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

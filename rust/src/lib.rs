@@ -18,19 +18,30 @@
 //!   - [`quant`]/[`gemm`]/[`nn`] are the *measured-speed substrate*: native
 //!     int8/f32 GEMMs and hand-written fwd/bwd linear-layer variants that
 //!     regenerate the paper's Fig 3/4/13 speed results on this hardware,
-//!   - [`coordinator`] orchestrates training runs and experiment sweeps.
+//!   - [`coordinator`] orchestrates training runs and experiment sweeps,
+//!   - [`serve`] is the first runtime subsystem *off* the training path: a
+//!     batched int8 embedding-serving engine (dynamic micro-batcher +
+//!     forward-only encoder + worker pool + sharded LRU cache) built on
+//!     the same measured-speed substrate.
 //!
 //! Python never runs on the training path: `make artifacts` lowers the
 //! model once; the `switchback` binary is then self-contained.
+//!
+//! The [`runtime`] and [`coordinator`] modules need the PJRT toolchain and
+//! are gated behind the `pjrt` cargo feature; everything else (including
+//! the serving engine and all benches) builds and tests without it.
 
 pub mod config;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod data;
 pub mod gemm;
 pub mod nn;
 pub mod optim;
 pub mod quant;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod telemetry;
 pub mod tensor;
 pub mod util;

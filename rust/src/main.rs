@@ -1,19 +1,37 @@
 //! `switchback` — CLI for the SwitchBack + StableAdamW reproduction.
 //!
 //! Subcommands:
-//! * `train <artifact> [--steps N --lr X --optimizer K ...]`
-//! * `exp <name> | --list | --all`   — regenerate a paper figure
-//! * `info <artifact>`               — inspect an artifact manifest
+//! * `train <artifact> [--steps N --lr X --optimizer K ...]`  (pjrt)
+//! * `exp <name> | --list | --all`   — regenerate a paper figure  (pjrt)
+//! * `info <artifact>`               — inspect an artifact manifest  (pjrt)
+//! * `serve [--kind K ...]`          — serving-engine smoke run
+//! * `loadgen [--requests N ...]`    — closed-loop serving benchmark,
+//!   writes BENCH_serve.json
+//!
+//! `train`/`exp`/`info` execute AOT artifacts and need the `pjrt` cargo
+//! feature; `serve`/`loadgen` run entirely on the native substrate.
 //!
 //! Argument parsing is hand-rolled (offline build: no clap) — see
 //! `rust/src/util` for the other in-tree substrates.
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use switchback::nn::LinearKind;
+use switchback::serve::{
+    run_loadgen, write_bench_json, BatchPolicy, EncodeInput, EncoderConfig, Engine,
+    LoadgenConfig, ServeConfig,
+};
+use switchback::tensor::Rng;
+
+#[cfg(feature = "pjrt")]
 use switchback::config::{OptimizerKind, ScalerKind, TrainConfig};
+#[cfg(feature = "pjrt")]
 use switchback::coordinator::experiments::{self, ExpCtx};
+#[cfg(feature = "pjrt")]
 use switchback::coordinator::Trainer;
+#[cfg(feature = "pjrt")]
 use switchback::data::Shift;
+#[cfg(feature = "pjrt")]
 use switchback::runtime::Runtime;
 
 const USAGE: &str = "\
@@ -21,11 +39,13 @@ switchback — Stable and low-precision training for large-scale vision-language
 models (NeurIPS 2023), rust+JAX+Pallas reproduction.
 
 USAGE:
-  switchback train <artifact> [OPTIONS]     one training run
-  switchback exp <name> [OPTIONS]           regenerate a paper figure
-  switchback exp --list                     list experiments
-  switchback exp --all [--steps N]          run every experiment
-  switchback info <artifact>                inspect an artifact manifest
+  switchback train <artifact> [OPTIONS]     one training run        [pjrt]
+  switchback exp <name> [OPTIONS]           regenerate a paper figure [pjrt]
+  switchback exp --list                     list experiments        [pjrt]
+  switchback exp --all [--steps N]          run every experiment    [pjrt]
+  switchback info <artifact>                inspect an artifact manifest [pjrt]
+  switchback serve [OPTIONS]                serving-engine smoke run
+  switchback loadgen [OPTIONS]              closed-loop serving benchmark
 
 TRAIN OPTIONS:
   --artifact-dir DIR     (default: artifacts)
@@ -46,7 +66,80 @@ EXP OPTIONS:
   --steps N              override per-experiment default step count
   --out-dir DIR          (default: results)
   --verbose
+
+SERVE / LOADGEN OPTIONS:
+  --kind K               standard | switchback | switchback_m | llmint8
+                         (serve; default: switchback)
+  --kinds A,B,...        precision kinds to sweep (loadgen;
+                         default: standard,switchback)
+  --requests N           total requests per run, k/m suffixes ok
+                         (default: 2000)
+  --concurrency A,B,...  closed-loop client counts to sweep (default: 32)
+  --population N         distinct inputs (default: requests/2)
+  --image-fraction X     image share of the population (default: 0.7)
+  --batch-max N          micro-batch cap (default: 32)
+  --wait-us N            micro-batch max wait, µs (default: 2000)
+  --workers N            batch workers (default: auto)
+  --cache-capacity N     embedding-cache entries (default: fits the
+                         loadgen population, min 8192)
+  --no-cache             disable the embedding cache
+  --out PATH             loadgen report path (default: BENCH_serve.json)
+  --dim N --heads N --blocks N --embed-dim N
+  --patches N --patch-dim N --text-seq N --vocab N
+                         serving model shape (defaults: 128/4/2/64,
+                         16/64/16/512)
+  --seed N               model + population seed (default: 42)
 ";
+
+/// Every `--key value` flag any subcommand accepts.  The parser rejects
+/// flags outside this list and [`BOOL_FLAGS`] instead of silently eating
+/// the next positional as a value (the classic `--quite` typo bug).
+const VALUE_FLAGS: &[&str] = &[
+    "--artifact-dir",
+    "--steps",
+    "--warmup",
+    "--lr",
+    "--weight-decay",
+    "--beta1",
+    "--beta2",
+    "--beta2-lambda",
+    "--optimizer",
+    "--grad-clip",
+    "--scaler",
+    "--seed",
+    "--metrics",
+    "--out-dir",
+    "--kind",
+    "--kinds",
+    "--requests",
+    "--concurrency",
+    "--population",
+    "--image-fraction",
+    "--batch-max",
+    "--wait-us",
+    "--workers",
+    "--cache-capacity",
+    "--out",
+    "--dim",
+    "--heads",
+    "--blocks",
+    "--embed-dim",
+    "--patches",
+    "--patch-dim",
+    "--text-seq",
+    "--vocab",
+];
+
+const BOOL_FLAGS: &[&str] = &[
+    "--list",
+    "--all",
+    "--verbose",
+    "--quiet",
+    "--with-shifts",
+    "--no-cache",
+    "-v",
+    "-q",
+];
 
 /// Tiny flag parser: positionals + `--key value` + boolean `--key`.
 struct Args {
@@ -54,9 +147,6 @@ struct Args {
     flags: HashMap<String, String>,
     bools: Vec<String>,
 }
-
-const BOOL_FLAGS: &[&str] =
-    &["--list", "--all", "--verbose", "--quiet", "--with-shifts", "-v", "-q"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
@@ -69,12 +159,14 @@ impl Args {
             if a.starts_with('-') {
                 if BOOL_FLAGS.contains(&a.as_str()) {
                     bools.push(a.clone());
-                } else {
+                } else if VALUE_FLAGS.contains(&a.as_str()) {
                     let Some(v) = argv.get(i + 1) else {
                         bail!("flag {a} expects a value");
                     };
                     flags.insert(a.trim_start_matches('-').to_string(), v.clone());
                     i += 1;
+                } else {
+                    bail!("unknown flag {a} (see `switchback help`)");
                 }
             } else {
                 positional.push(a.clone());
@@ -93,6 +185,7 @@ impl Args {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
         match self.flags.get(key) {
             None => Ok(None),
@@ -106,8 +199,29 @@ impl Args {
     fn has(&self, key: &str) -> bool {
         self.bools.iter().any(|b| b == key)
     }
+
+    /// A count flag accepting `k`/`m` suffixes (`--requests 10k`).
+    fn count(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => parse_count(v)
+                .ok_or_else(|| anyhow::anyhow!("bad value for --{key}: {v:?}")),
+        }
+    }
 }
 
+/// Parse a non-negative count with an optional `k`/`m` suffix.
+fn parse_count(s: &str) -> Option<usize> {
+    let t = s.trim();
+    let (digits, mult) = match t.chars().last() {
+        Some('k') | Some('K') => (&t[..t.len() - 1], 1000usize),
+        Some('m') | Some('M') => (&t[..t.len() - 1], 1_000_000),
+        _ => (t, 1),
+    };
+    digits.parse::<usize>().ok().and_then(|v| v.checked_mul(mult))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
     let Some(artifact) = args.positional.first() else {
         bail!("train: missing <artifact> (e.g. switchback_int8_small_b32)");
@@ -172,6 +286,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_exp(args: &Args) -> Result<()> {
     if args.has("--list") || (args.positional.is_empty() && !args.has("--all")) {
         println!("available experiments:");
@@ -197,6 +312,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_info(args: &Args) -> Result<()> {
     let Some(artifact) = args.positional.first() else {
         bail!("info: missing <artifact>");
@@ -221,6 +337,199 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_needs_pjrt(cmd: &str) -> Result<()> {
+    bail!(
+        "`{cmd}` executes AOT artifacts via PJRT, but this binary was built \
+         without the `pjrt` feature.\nRebuild with `cargo build --release \
+         --features pjrt` on a machine with the PJRT toolchain \
+         (rust/Cargo.toml explains the vendor/xla swap)."
+    )
+}
+
+/// Model-shape + engine flags shared by `serve` and `loadgen`.
+fn serve_config_from(args: &Args, kind: LinearKind) -> Result<ServeConfig> {
+    let requests: usize = args.count("requests", 2000)?;
+    let encoder = EncoderConfig {
+        kind,
+        dim: args.get("dim", 128)?,
+        heads: args.get("heads", 4)?,
+        blocks: args.get("blocks", 2)?,
+        embed_dim: args.get("embed-dim", 64)?,
+        patches: args.get("patches", 16)?,
+        patch_dim: args.get("patch-dim", 64)?,
+        text_seq: args.get("text-seq", 16)?,
+        vocab: args.get("vocab", 512)?,
+        seed: args.get("seed", 42)?,
+    };
+    if encoder.dim == 0 || encoder.heads == 0 || encoder.dim % encoder.heads != 0 {
+        bail!("--dim must be a positive multiple of --heads");
+    }
+    if encoder.vocab == 0
+        || encoder.text_seq == 0
+        || encoder.patches == 0
+        || encoder.patch_dim == 0
+        || encoder.embed_dim == 0
+    {
+        bail!("--vocab/--text-seq/--patches/--patch-dim/--embed-dim must be positive");
+    }
+    // Same resolution as cmd_loadgen; 2× headroom because ShardedLru
+    // splits capacity into per-shard caps and hash imbalance would
+    // otherwise evict live population members at exactly-sized capacity.
+    let population: usize = args.count("population", (requests / 2).max(1))?;
+    let cache_capacity = if args.has("--no-cache") {
+        0
+    } else {
+        args.count(
+            "cache-capacity",
+            8192.max(requests).max(population.saturating_mul(2)),
+        )?
+    };
+    let max_batch: usize = args.get("batch-max", 32)?;
+    if max_batch == 0 {
+        bail!("--batch-max must be at least 1");
+    }
+    Ok(ServeConfig {
+        encoder,
+        policy: BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(args.get("wait-us", 2000)?),
+        },
+        workers: args.get("workers", 0)?,
+        cache_capacity,
+        cache_shards: 0,
+    })
+}
+
+/// In-process smoke run of the serving engine (the network front-end is a
+/// future scaling PR; the engine API is the subsystem this PR lands).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let kind_s: String = args.get("kind", "switchback".to_string())?;
+    let Some(kind) = LinearKind::parse(&kind_s) else {
+        bail!("bad --kind {kind_s:?} (standard | switchback | switchback_m | llmint8)");
+    };
+    let cfg = serve_config_from(args, kind)?;
+    let image_len = cfg.encoder.image_len();
+    let text_seq = cfg.encoder.text_seq;
+    let vocab = cfg.encoder.vocab;
+    println!("starting engine: kind={} dim={} blocks={}", kind.label(), cfg.encoder.dim, cfg.encoder.blocks);
+    let engine = Engine::start(cfg);
+    println!(
+        "encoder resident weights: {:.1} KiB (pre-quantized at load)",
+        engine.weight_bytes() as f64 / 1024.0
+    );
+    let mut rng = Rng::seed(7);
+    let img: Vec<f32> = (0..image_len).map(|_| rng.normal()).collect();
+    let toks: Vec<i32> = (0..text_seq).map(|_| rng.below(vocab) as i32).collect();
+    let e1 = engine
+        .encode(EncodeInput::Image(img.clone()))
+        .map_err(|e| anyhow::anyhow!("image encode failed: {e}"))?;
+    let e2 = engine
+        .encode(EncodeInput::Text(toks))
+        .map_err(|e| anyhow::anyhow!("text encode failed: {e}"))?;
+    let e3 = engine
+        .encode(EncodeInput::Image(img))
+        .map_err(|e| anyhow::anyhow!("repeat encode failed: {e}"))?;
+    println!(
+        "image embedding: dim {} (first 4: {:?})",
+        e1.embedding.len(),
+        &e1.embedding[..4.min(e1.embedding.len())]
+    );
+    println!("text  embedding: dim {}", e2.embedding.len());
+    if engine.cache_stats().is_some() {
+        if !e3.cache_hit {
+            bail!("smoke failure: repeated input did not hit the cache");
+        }
+        if *e3.embedding != *e1.embedding {
+            bail!("smoke failure: cache returned a different embedding");
+        }
+        println!("repeat request served from cache (no GEMM work)");
+    }
+    let snap = engine.metrics().snapshot();
+    snap.print(kind.label());
+    engine.shutdown();
+    println!("serve smoke OK");
+    Ok(())
+}
+
+/// Parse a CSV list flag into typed values.
+fn csv_list<T: std::str::FromStr>(s: &str, what: &str) -> Result<Vec<T>> {
+    s.split(',')
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            p.trim()
+                .parse::<T>()
+                .map_err(|_| anyhow::anyhow!("bad {what} entry {p:?}"))
+        })
+        .collect()
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let kinds_s: String = args.get("kinds", "standard,switchback".to_string())?;
+    let kinds: Vec<LinearKind> = csv_list(&kinds_s, "--kinds")?;
+    if kinds.is_empty() {
+        bail!("--kinds must name at least one precision kind");
+    }
+    let requests: usize = args.count("requests", 2000)?;
+    let conc_s: String = args.get("concurrency", "32".to_string())?;
+    let concurrencies: Vec<usize> = csv_list(&conc_s, "--concurrency")?;
+    if concurrencies.is_empty() || concurrencies.contains(&0) {
+        bail!("--concurrency must list positive client counts");
+    }
+    let population: usize = args.count("population", (requests / 2).max(1))?;
+    if population == 0 {
+        bail!("--population must be positive");
+    }
+    let image_fraction: f32 = args.get("image-fraction", 0.7)?;
+    let out: String = args.get("out", "BENCH_serve.json".to_string())?;
+    let seed: u64 = args.get("seed", 42)?;
+
+    let mut reports = vec![];
+    let mut policy_echo = (0usize, 0u64);
+    for &kind in &kinds {
+        for &concurrency in &concurrencies {
+            // fresh engine per run: cold cache, clean metrics
+            let cfg = serve_config_from(args, kind)?;
+            policy_echo =
+                (cfg.policy.max_batch, cfg.policy.max_wait.as_micros() as u64);
+            let engine = Engine::start(cfg);
+            let lg = LoadgenConfig {
+                requests,
+                concurrency,
+                population,
+                image_fraction,
+                seed,
+            };
+            let report = run_loadgen(&engine, &lg);
+            report.print();
+            if report.errors > 0 {
+                bail!("loadgen: {} requests failed", report.errors);
+            }
+            reports.push(report);
+            engine.shutdown();
+        }
+    }
+
+    // the acceptance ratio: int8 serving vs the f32 baseline
+    for &concurrency in &concurrencies {
+        let rps = |label: &str| {
+            reports
+                .iter()
+                .find(|r| r.kind == label && r.concurrency == concurrency)
+                .map(|r| r.requests_per_sec)
+        };
+        if let (Some(std_rps), Some(sb_rps)) = (rps("standard"), rps("switchback")) {
+            println!(
+                "c={concurrency}: switchback/standard throughput ratio: {:.2}×",
+                sb_rps / std_rps
+            );
+        }
+    }
+    write_bench_json(&out, policy_echo.0, policy_echo.1, &reports)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
@@ -229,13 +538,119 @@ fn main() -> Result<()> {
     };
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
+        #[cfg(feature = "pjrt")]
         "train" => cmd_train(&args),
+        #[cfg(feature = "pjrt")]
         "exp" => cmd_exp(&args),
+        #[cfg(feature = "pjrt")]
         "info" => cmd_info(&args),
+        #[cfg(not(feature = "pjrt"))]
+        "train" | "exp" | "info" => cmd_needs_pjrt(&cmd),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
         }
         other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|v| v.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positionals_value_flags_and_bools_mixed() {
+        let a = Args::parse(&argv(&[
+            "my_artifact",
+            "--steps",
+            "50",
+            "--quiet",
+            "--lr",
+            "1e-3",
+            "second_pos",
+            "-v",
+        ]))
+        .unwrap();
+        assert_eq!(a.positional, vec!["my_artifact", "second_pos"]);
+        assert_eq!(a.get::<u64>("steps", 0).unwrap(), 50);
+        assert_eq!(a.get::<f32>("lr", 0.0).unwrap(), 1e-3);
+        assert!(a.has("--quiet"));
+        assert!(a.has("-v"));
+        assert!(!a.has("--all"));
+    }
+
+    #[test]
+    fn unknown_boolean_flag_is_rejected_not_swallowed() {
+        // the old parser treated `--quite` (typo) as a value flag and ate
+        // the following positional — it must be a hard error instead
+        let err = Args::parse(&argv(&["--quite", "my_artifact"])).unwrap_err();
+        assert!(err.to_string().contains("unknown flag --quite"), "{err}");
+        let err = Args::parse(&argv(&["--bogus"])).unwrap_err();
+        assert!(err.to_string().contains("unknown flag"), "{err}");
+    }
+
+    #[test]
+    fn value_flag_at_end_without_value_errors() {
+        let err = Args::parse(&argv(&["art", "--steps"])).unwrap_err();
+        assert!(err.to_string().contains("expects a value"), "{err}");
+    }
+
+    #[test]
+    fn value_flag_consumes_exactly_one_token() {
+        let a = Args::parse(&argv(&["--steps", "10", "pos"])).unwrap();
+        assert_eq!(a.positional, vec!["pos"]);
+        assert_eq!(a.flags.get("steps").map(String::as_str), Some("10"));
+    }
+
+    #[test]
+    fn bad_typed_value_reports_flag_name() {
+        let a = Args::parse(&argv(&["--steps", "abc"])).unwrap();
+        let err = a.get::<u64>("steps", 0).unwrap_err();
+        assert!(err.to_string().contains("--steps"), "{err}");
+    }
+
+    #[test]
+    fn count_suffixes() {
+        assert_eq!(parse_count("123"), Some(123));
+        assert_eq!(parse_count("10k"), Some(10_000));
+        assert_eq!(parse_count("2K"), Some(2_000));
+        assert_eq!(parse_count("1m"), Some(1_000_000));
+        assert_eq!(parse_count("x"), None);
+        assert_eq!(parse_count("10kk"), None);
+        let a = Args::parse(&argv(&["--requests", "10k"])).unwrap();
+        assert_eq!(a.count("requests", 0).unwrap(), 10_000);
+    }
+
+    #[test]
+    fn csv_list_parses_and_rejects() {
+        assert_eq!(csv_list::<usize>("8,32, 64", "c").unwrap(), vec![8, 32, 64]);
+        assert!(csv_list::<usize>("8,x", "c").is_err());
+        assert!(csv_list::<usize>("", "c").unwrap().is_empty());
+        let kinds = csv_list::<LinearKind>("standard, switchback", "k").unwrap();
+        assert_eq!(kinds, vec![LinearKind::Standard, LinearKind::SwitchBack]);
+        assert!(csv_list::<LinearKind>("standard,bogus", "k").is_err());
+    }
+
+    #[test]
+    fn serve_config_validates_shape() {
+        let a = Args::parse(&argv(&["--dim", "10", "--heads", "4"])).unwrap();
+        assert!(serve_config_from(&a, LinearKind::Standard).is_err());
+        let a = Args::parse(&argv(&["--dim", "32", "--heads", "4"])).unwrap();
+        let cfg = serve_config_from(&a, LinearKind::SwitchBack).unwrap();
+        assert_eq!(cfg.encoder.dim, 32);
+        assert_eq!(cfg.policy.max_batch, 32);
+    }
+
+    #[test]
+    fn no_cache_flag_disables_cache() {
+        let a = Args::parse(&argv(&["--no-cache"])).unwrap();
+        let cfg = serve_config_from(&a, LinearKind::SwitchBack).unwrap();
+        assert_eq!(cfg.cache_capacity, 0);
     }
 }

@@ -7,12 +7,13 @@
 //! is exact for the Standard variant (finite-difference tested) and uses
 //! each variant's quantized dgrad/wgrad rules otherwise.
 
-use super::linear::{Linear, LinearCache, LinearKind};
+use super::linear::{Linear, LinearCache, LinearKind, PreparedLinear};
 use super::{gelu, gelu_grad, softmax_backward_rows, softmax_rows};
 use crate::gemm::{gemm_f32_nn, gemm_f32_nt};
 use crate::tensor::{Matrix, Rng};
 
 /// LayerNorm over the last dim with affine params.
+#[derive(Clone)]
 struct LayerNorm {
     g: Vec<f32>,
     b: Vec<f32>,
@@ -47,6 +48,24 @@ impl LayerNorm {
             }
         }
         (out, LnCache { xhat, inv_std })
+    }
+
+    /// Inference-mode layernorm: no `xhat`/`inv_std` cache is built.
+    fn apply(&self, x: &Matrix) -> Matrix {
+        let d = x.cols;
+        let mut out = Matrix::zeros(x.rows, d);
+        for r in 0..x.rows {
+            let row = x.row(r);
+            let mean: f32 = row.iter().sum::<f32>() / d as f32;
+            let var: f32 =
+                row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let istd = 1.0 / (var + 1e-5).sqrt();
+            let orow = out.row_mut(r);
+            for c in 0..d {
+                orow[c] = (row[c] - mean) * istd * self.g[c] + self.b[c];
+            }
+        }
+        out
     }
 
     /// Returns dx (param grads are not tracked in the speed benches — the
@@ -281,6 +300,157 @@ impl TransformerBlock {
         // pretend upstream gradient = y (keeps magnitudes realistic)
         self.backward(&cache, &y)
     }
+
+    /// Inference-mode forward: numerically identical to [`Self::forward`]'s
+    /// output, but no [`BlockCache`] / [`LinearCache`] / softmax probs are
+    /// retained — the serving path's memory stays O(batch·dim).
+    pub fn forward_infer(&self, x: &Matrix) -> Matrix {
+        infer_body(self.dim, self.heads, self.seq, &self.ln1, &self.ln2, x, |p, h| {
+            match p {
+                Proj::Q => self.wq.forward_infer(h),
+                Proj::K => self.wk.forward_infer(h),
+                Proj::V => self.wv.forward_infer(h),
+                Proj::O => self.wo.forward_infer(h),
+                Proj::Up => self.w1.forward_infer(h),
+                Proj::Down => self.w2.forward_infer(h),
+            }
+        })
+    }
+
+    /// Quantize all six projection weights once for forward-only serving.
+    pub fn prepare(&self) -> PreparedBlock {
+        PreparedBlock {
+            dim: self.dim,
+            heads: self.heads,
+            seq: self.seq,
+            ln1: self.ln1.clone(),
+            ln2: self.ln2.clone(),
+            wq: self.wq.prepare(),
+            wk: self.wk.prepare(),
+            wv: self.wv.prepare(),
+            wo: self.wo.prepare(),
+            w1: self.w1.prepare(),
+            w2: self.w2.prepare(),
+        }
+    }
+}
+
+/// Which of the block's six projections to run (see [`infer_body`]).
+enum Proj {
+    Q,
+    K,
+    V,
+    O,
+    Up,
+    Down,
+}
+
+/// The forward-only block body shared by [`TransformerBlock::forward_infer`]
+/// and [`PreparedBlock::forward`]: pre-norm attention + MLP with residuals,
+/// allocating nothing beyond the live activations.
+fn infer_body<F>(
+    dim: usize,
+    heads: usize,
+    seq: usize,
+    ln1: &LayerNorm,
+    ln2: &LayerNorm,
+    x: &Matrix,
+    proj: F,
+) -> Matrix
+where
+    F: Fn(Proj, &Matrix) -> Matrix,
+{
+    let (t, d, h) = (seq, dim, heads);
+    let hd = d / h;
+    let batch = x.rows / t;
+    let xn = ln1.apply(x);
+    let q = proj(Proj::Q, &xn);
+    let k = proj(Proj::K, &xn);
+    let v = proj(Proj::V, &xn);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut concat = Matrix::zeros(x.rows, d);
+    for b in 0..batch {
+        for hh in 0..h {
+            let mut qh = Matrix::zeros(t, hd);
+            let mut kh = Matrix::zeros(t, hd);
+            let mut vh = Matrix::zeros(t, hd);
+            for i in 0..t {
+                let row = (b * t + i) * d + hh * hd;
+                qh.row_mut(i).copy_from_slice(&q.data[row..row + hd]);
+                kh.row_mut(i).copy_from_slice(&k.data[row..row + hd]);
+                vh.row_mut(i).copy_from_slice(&v.data[row..row + hd]);
+            }
+            let mut scores = gemm_f32_nt(&qh, &kh);
+            for s in scores.data.iter_mut() {
+                *s *= scale;
+            }
+            softmax_rows(&mut scores);
+            let out = gemm_f32_nn(&scores, &vh);
+            for i in 0..t {
+                let row = (b * t + i) * d + hh * hd;
+                concat.data[row..row + hd].copy_from_slice(out.row(i));
+            }
+        }
+    }
+    let attn_out = proj(Proj::O, &concat);
+    let mut x_mid = x.clone();
+    for (m, a) in x_mid.data.iter_mut().zip(&attn_out.data) {
+        *m += a;
+    }
+    let xn2 = ln2.apply(&x_mid);
+    let mut h_act = proj(Proj::Up, &xn2);
+    for v in h_act.data.iter_mut() {
+        *v = gelu(*v);
+    }
+    let mlp_out = proj(Proj::Down, &h_act);
+    let mut y = x_mid;
+    for (o, m) in y.data.iter_mut().zip(&mlp_out.data) {
+        *o += m;
+    }
+    y
+}
+
+/// A transformer block with every projection weight pre-quantized at load
+/// time — the serving engine's per-block unit (forward-only, no caches,
+/// per-call quantization limited to activations).
+pub struct PreparedBlock {
+    pub dim: usize,
+    pub heads: usize,
+    pub seq: usize,
+    ln1: LayerNorm,
+    ln2: LayerNorm,
+    wq: PreparedLinear,
+    wk: PreparedLinear,
+    wv: PreparedLinear,
+    wo: PreparedLinear,
+    w1: PreparedLinear,
+    w2: PreparedLinear,
+}
+
+impl PreparedBlock {
+    /// `x [B*T, d]` → `[B*T, d]` (T = `self.seq`), forward only.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        infer_body(self.dim, self.heads, self.seq, &self.ln1, &self.ln2, x, |p, h| {
+            match p {
+                Proj::Q => self.wq.forward(h),
+                Proj::K => self.wk.forward(h),
+                Proj::V => self.wv.forward(h),
+                Proj::O => self.wo.forward(h),
+                Proj::Up => self.w1.forward(h),
+                Proj::Down => self.w2.forward(h),
+            }
+        })
+    }
+
+    /// Resident weight bytes across all six projections.
+    pub fn weight_bytes(&self) -> usize {
+        self.wq.weight_bytes()
+            + self.wk.weight_bytes()
+            + self.wv.weight_bytes()
+            + self.wo.weight_bytes()
+            + self.w1.weight_bytes()
+            + self.w2.weight_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -347,6 +517,49 @@ mod tests {
                 "dw1[{i}]: {} vs {fd}",
                 grads.dw1.data[i]
             );
+        }
+    }
+
+    /// The cache-free inference path and the pre-quantized path must agree
+    /// bit-for-bit with the training forward for every precision kind.
+    #[test]
+    fn infer_paths_match_training_forward_all_kinds() {
+        for (i, kind) in [
+            LinearKind::Standard,
+            LinearKind::SwitchBack,
+            LinearKind::SwitchBackM,
+            LinearKind::LlmInt8,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let mut rng = Rng::seed(93 + i as u64);
+            let blk = TransformerBlock::new(16, 4, 4, kind, &mut rng);
+            let x = Matrix::randn(12, 16, 0.5, &mut rng); // batch 3 × seq 4
+            let (y_train, _) = blk.forward(&x);
+            let y_infer = blk.forward_infer(&x);
+            let y_prep = blk.prepare().forward(&x);
+            assert_eq!(y_train.max_abs_diff(&y_infer), 0.0, "{kind:?} infer");
+            assert_eq!(y_train.max_abs_diff(&y_prep), 0.0, "{kind:?} prepared");
+        }
+    }
+
+    /// Row independence across batch items: an item's embedding must not
+    /// depend on what else was micro-batched with it (the serving batcher
+    /// relies on this).
+    #[test]
+    fn forward_infer_is_batch_composition_invariant() {
+        let mut rng = Rng::seed(97);
+        let blk = TransformerBlock::new(8, 2, 3, LinearKind::Standard, &mut rng);
+        let a = Matrix::randn(3, 8, 0.5, &mut rng); // one item (seq 3)
+        let b = Matrix::randn(3, 8, 0.5, &mut rng);
+        let mut both = Matrix::zeros(6, 8);
+        both.data[..24].copy_from_slice(&a.data);
+        both.data[24..].copy_from_slice(&b.data);
+        let ya = blk.forward_infer(&a);
+        let y_both = blk.forward_infer(&both);
+        for i in 0..ya.data.len() {
+            assert_eq!(ya.data[i], y_both.data[i], "elem {i}");
         }
     }
 

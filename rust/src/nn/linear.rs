@@ -8,7 +8,8 @@ use crate::gemm::{
     SwitchBackOps,
 };
 use crate::quant::{
-    dequant_rowwise, rowwise_quant, tensorwise_quant_transpose, QuantizedRow,
+    dequant_rowwise, rowwise_quant, tensorwise_quant, tensorwise_quant_transpose,
+    QuantizedRow, QuantizedTensor,
 };
 use crate::tensor::{Matrix, Rng};
 
@@ -27,6 +28,17 @@ pub enum LinearKind {
 }
 
 impl LinearKind {
+    /// Inverse of [`Self::label`] (CLI / config parsing).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "standard" => Some(Self::Standard),
+            "switchback" => Some(Self::SwitchBack),
+            "switchback_m" => Some(Self::SwitchBackM),
+            "llmint8" => Some(Self::LlmInt8),
+            _ => None,
+        }
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             Self::Standard => "standard",
@@ -34,6 +46,14 @@ impl LinearKind {
             Self::SwitchBackM => "switchback_m",
             Self::LlmInt8 => "llmint8",
         }
+    }
+}
+
+impl std::str::FromStr for LinearKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s).ok_or_else(|| format!("unknown linear kind {s:?}"))
     }
 }
 
@@ -119,6 +139,86 @@ impl Linear {
                 (dx, dw)
             }
             _ => unreachable!("cache/kind mismatch"),
+        }
+    }
+
+    /// Inference-mode forward: identical numerics to [`Linear::forward`]'s
+    /// output but no [`LinearCache`] is materialized (serving never runs a
+    /// backward pass).  SwitchBackM shares SwitchBack's forward — the
+    /// variants only differ in what they *save*, which is nothing here.
+    pub fn forward_infer(&self, x: &Matrix) -> Matrix {
+        match self.kind {
+            LinearKind::Standard => StandardLinearOps::forward(x, &self.w),
+            LinearKind::SwitchBack | LinearKind::SwitchBackM => {
+                SwitchBackOps::forward(x, &self.w)
+            }
+            LinearKind::LlmInt8 => LlmInt8Ops::forward(x, &self.w),
+        }
+    }
+
+    /// Pre-quantize the weight once for forward-only serving (the serve
+    /// subsystem's quantize-on-load path).
+    pub fn prepare(&self) -> PreparedLinear {
+        let weight = match self.kind {
+            LinearKind::Standard => PreparedWeight::Full(self.w.clone()),
+            LinearKind::SwitchBack | LinearKind::SwitchBackM => {
+                PreparedWeight::Tensorwise(tensorwise_quant(&self.w))
+            }
+            LinearKind::LlmInt8 => PreparedWeight::Rowwise(rowwise_quant(&self.w)),
+        };
+        PreparedLinear {
+            kind: self.kind,
+            out_dim: self.w.rows,
+            in_dim: self.w.cols,
+            weight,
+        }
+    }
+}
+
+/// A weight stored in the form its forward matmul consumes, built once at
+/// load time instead of re-quantized per call (int8 kinds keep only codes
+/// + state: ≈4× less weight memory than f32).
+pub enum PreparedWeight {
+    /// f32 weight (Standard)
+    Full(Matrix),
+    /// tensor-wise int8 codes + scalar state (SwitchBack / SwitchBackM)
+    Tensorwise(QuantizedTensor),
+    /// row-wise-per-output int8 codes + per-row state (LLM.int8())
+    Rowwise(QuantizedRow),
+}
+
+/// A forward-only linear layer with its weight pre-quantized at load time.
+///
+/// Per call only the *activations* are quantized (row-wise, O(b·n) against
+/// the matmul's O(b·m·n)); the weight-side quantize — O(m·n), the dominant
+/// quantize cost in [`Linear::forward`] — is already paid.
+pub struct PreparedLinear {
+    pub kind: LinearKind,
+    pub out_dim: usize,
+    pub in_dim: usize,
+    weight: PreparedWeight,
+}
+
+impl PreparedLinear {
+    /// `x [b, in] → [b, out]`, no cache, weight already quantized.
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.in_dim, "input dim mismatch");
+        match &self.weight {
+            PreparedWeight::Full(w) => StandardLinearOps::forward(x, w),
+            PreparedWeight::Tensorwise(wq) => {
+                gemm_i8_nt_rowtensor(&rowwise_quant(x), wq)
+            }
+            PreparedWeight::Rowwise(wq) => gemm_i8_nt_rowcol(&rowwise_quant(x), wq),
+        }
+    }
+
+    /// Resident weight bytes (codes + state) — the serving-memory analogue
+    /// of [`LinearCache::retained_bytes`].
+    pub fn weight_bytes(&self) -> usize {
+        match &self.weight {
+            PreparedWeight::Full(w) => w.data.len() * 4,
+            PreparedWeight::Tensorwise(q) => q.codes.data.len() + 4,
+            PreparedWeight::Rowwise(q) => q.codes.data.len() + q.state.len() * 4,
         }
     }
 }
@@ -211,6 +311,47 @@ mod tests {
         assert_eq!(dxm.max_abs_diff(&dxf), 0.0);
         // wgrad differs only by the int8 round-trip of X
         assert!(rel_err(&dwm, &dwf) < 0.03);
+    }
+
+    /// The inference path must be bit-identical to the training forward for
+    /// every kind — serving reuses the exact same GEMM substrate.
+    #[test]
+    fn forward_infer_and_prepared_match_training_forward() {
+        let mut rng = Rng::seed(83);
+        for kind in [
+            LinearKind::Standard,
+            LinearKind::SwitchBack,
+            LinearKind::SwitchBackM,
+            LinearKind::LlmInt8,
+        ] {
+            let lin = Linear::new(24, 40, kind, &mut rng);
+            let x = Matrix::randn(16, 40, 1.0, &mut rng);
+            let (y_train, _) = lin.forward(&x);
+            let y_infer = lin.forward_infer(&x);
+            let y_prep = lin.prepare().forward(&x);
+            assert_eq!(
+                y_train.max_abs_diff(&y_infer),
+                0.0,
+                "{kind:?}: infer != train fwd"
+            );
+            assert_eq!(
+                y_train.max_abs_diff(&y_prep),
+                0.0,
+                "{kind:?}: prepared != train fwd"
+            );
+        }
+    }
+
+    /// Pre-quantized int8 weights hold ≈4× less memory than f32 weights.
+    #[test]
+    fn prepared_weight_bytes_quartered_for_int8_kinds() {
+        let mut rng = Rng::seed(84);
+        let std = Linear::new(64, 256, LinearKind::Standard, &mut rng).prepare();
+        let sb = Linear::new(64, 256, LinearKind::SwitchBack, &mut rng).prepare();
+        let llm = Linear::new(64, 256, LinearKind::LlmInt8, &mut rng).prepare();
+        assert_eq!(std.weight_bytes(), 64 * 256 * 4);
+        assert!(sb.weight_bytes() * 3 < std.weight_bytes());
+        assert!(llm.weight_bytes() * 3 < std.weight_bytes());
     }
 
     #[test]

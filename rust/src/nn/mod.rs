@@ -16,8 +16,8 @@
 mod block;
 mod linear;
 
-pub use block::{BlockGrads, TransformerBlock};
-pub use linear::{Linear, LinearCache, LinearKind};
+pub use block::{BlockGrads, PreparedBlock, TransformerBlock};
+pub use linear::{Linear, LinearCache, LinearKind, PreparedLinear, PreparedWeight};
 
 use crate::tensor::Matrix;
 

@@ -1,0 +1,221 @@
+//! Dynamic micro-batcher: a coalescing MPMC queue with a max-batch /
+//! max-wait policy.
+//!
+//! Workers call [`BatchQueue::pop_batch`], which returns as soon as either
+//! * `max_batch` items are queued (full batch, zero added latency), or
+//! * the *oldest* queued item has waited `max_wait` (partial batch — the
+//!   knob that bounds tail latency at low offered load).
+//!
+//! The queue is intentionally payload-generic so the policy logic is
+//! testable without spinning up the whole engine.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// The two-knob coalescing policy (max-batch / max-wait).
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Hard cap on items per batch (the encoder's micro-batch size).
+    pub max_batch: usize,
+    /// Longest the oldest item may wait before a partial batch is flushed.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct State<T> {
+    queue: VecDeque<(T, Instant)>,
+    closed: bool,
+}
+
+/// A blocking coalescing queue (multi-producer, multi-consumer).
+pub struct BatchQueue<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+    policy: BatchPolicy,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        Self {
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            policy,
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue an item; returns `false` (with the item dropped) if the
+    /// queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return false;
+        }
+        st.queue.push_back((item, Instant::now()));
+        drop(st);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Number of items currently waiting (diagnostics only).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Close the queue: pending items still drain; subsequent `push`es are
+    /// rejected; `pop_batch` returns `None` once empty.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until a batch is ready per the policy.  Returns `None` only
+    /// after [`Self::close`] once the queue has fully drained.
+    pub fn pop_batch(&self) -> Option<Vec<T>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.queue.len() >= self.policy.max_batch {
+                return Some(self.drain(&mut st));
+            }
+            if st.closed {
+                if st.queue.is_empty() {
+                    return None;
+                }
+                return Some(self.drain(&mut st));
+            }
+            if let Some(&(_, enqueued)) = st.queue.front() {
+                let deadline = enqueued + self.policy.max_wait;
+                let now = Instant::now();
+                if now >= deadline {
+                    return Some(self.drain(&mut st));
+                }
+                let (next, _timeout) =
+                    self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = next;
+                // loop around: the deadline is recomputed from the current
+                // front, so an item another worker drained mid-wait cannot
+                // cause a freshly-enqueued item to flush early
+            } else {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    fn drain(&self, st: &mut State<T>) -> Vec<T> {
+        let n = st.queue.len().min(self.policy.max_batch);
+        let batch: Vec<T> = st.queue.drain(..n).map(|(item, _)| item).collect();
+        if !st.queue.is_empty() {
+            // leftovers may already satisfy the policy for another worker
+            self.cv.notify_one();
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn full_batch_returns_without_waiting() {
+        let q = BatchQueue::new(policy(4, 10_000));
+        for i in 0..4 {
+            assert!(q.push(i));
+        }
+        let t0 = Instant::now();
+        let b = q.pop_batch().unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_millis(1000), "must not wait");
+    }
+
+    #[test]
+    fn partial_batch_flushes_after_max_wait() {
+        let q = Arc::new(BatchQueue::new(policy(8, 30)));
+        q.push(1u32);
+        q.push(2);
+        let t0 = Instant::now();
+        let b = q.pop_batch().unwrap();
+        assert_eq!(b, vec![1, 2]);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(5), "flushed too early: {waited:?}");
+    }
+
+    #[test]
+    fn oversize_backlog_splits_into_policy_batches() {
+        let q = BatchQueue::new(policy(3, 1));
+        for i in 0..7 {
+            q.push(i);
+        }
+        assert_eq!(q.pop_batch().unwrap(), vec![0, 1, 2]);
+        assert_eq!(q.pop_batch().unwrap(), vec![3, 4, 5]);
+        assert_eq!(q.pop_batch().unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn close_drains_then_returns_none() {
+        let q = BatchQueue::new(policy(10, 10_000));
+        q.push(7u8);
+        q.close();
+        assert!(!q.push(8), "push after close must be rejected");
+        assert_eq!(q.pop_batch().unwrap(), vec![7]);
+        assert!(q.pop_batch().is_none());
+        assert!(q.pop_batch().is_none(), "stays closed");
+    }
+
+    #[test]
+    fn producers_and_consumers_in_parallel_lose_nothing() {
+        let q = Arc::new(BatchQueue::new(policy(5, 2)));
+        let n_items = 500;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..n_items / 4 {
+                        q.push(p * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = vec![];
+                    while let Some(b) = q.pop_batch() {
+                        assert!(b.len() <= 5);
+                        got.extend(b);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all.len(), n_items as usize);
+        all.dedup();
+        assert_eq!(all.len(), n_items as usize, "no duplicates");
+    }
+}

@@ -1,0 +1,263 @@
+//! Sharded LRU embedding cache keyed by input content hash.
+//!
+//! * **Sharded**: the key's low bits pick one of N independently locked
+//!   shards, so cache traffic from the client threads never serializes on
+//!   a single mutex (hits are the common case at production traffic).
+//! * **Lazy LRU**: each shard keeps a `HashMap` plus a recency log of
+//!   `(key, stamp)` pairs.  Touches append; eviction pops stale log
+//!   entries until it finds one whose stamp is current.  O(1) amortized
+//!   with no intrusive linked list, and the log is compacted when it
+//!   outgrows the live set.
+//!
+//! Values are `Arc<Vec<f32>>` so a hit shares the embedding with every
+//! waiting client instead of copying it.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// FNV-1a 64-bit — stable across platforms/runs (unlike `DefaultHasher`),
+/// so cache keys are reproducible in tests and logs.
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(0xcbf29ce484222325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+struct Entry {
+    val: Arc<Vec<f32>>,
+    stamp: u64,
+}
+
+struct Shard {
+    map: HashMap<u64, Entry>,
+    /// recency log: (key, stamp at touch time); stale pairs are skipped
+    log: VecDeque<(u64, u64)>,
+    tick: u64,
+    cap: usize,
+}
+
+impl Shard {
+    fn touch(&mut self, key: u64) -> u64 {
+        self.tick += 1;
+        self.log.push_back((key, self.tick));
+        self.tick
+    }
+
+    fn maybe_compact(&mut self) {
+        if self.log.len() > self.map.len() * 4 + 64 {
+            let map = &self.map;
+            self.log.retain(|&(k, s)| map.get(&k).is_some_and(|e| e.stamp == s));
+        }
+    }
+
+    fn evict_one(&mut self) {
+        while let Some((k, s)) = self.log.pop_front() {
+            let stale = match self.map.get(&k) {
+                Some(e) => e.stamp != s,
+                None => true,
+            };
+            if !stale {
+                self.map.remove(&k);
+                return;
+            }
+        }
+    }
+}
+
+/// A sharded, thread-safe LRU mapping `u64` content hashes to embeddings.
+pub struct ShardedLru {
+    shards: Vec<Mutex<Shard>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ShardedLru {
+    /// `capacity` total entries spread over `n_shards` locks.
+    ///
+    /// Capacity is enforced *per shard* (`ceil(capacity / n_shards)`), so
+    /// with hash-imbalanced keys some shards fill before others; callers
+    /// that need "hold this working set" semantics should size capacity
+    /// with headroom (2× is plenty for FNV-distributed keys).
+    pub fn new(capacity: usize, n_shards: usize) -> Self {
+        let n = n_shards.max(1);
+        let per = capacity.div_ceil(n).max(1);
+        Self {
+            shards: (0..n)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        log: VecDeque::new(),
+                        tick: 0,
+                        cap: per,
+                    })
+                })
+                .collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        &self.shards[(key as usize) % self.shards.len()]
+    }
+
+    /// Look up an embedding, refreshing its recency on hit.
+    pub fn get(&self, key: u64) -> Option<Arc<Vec<f32>>> {
+        let mut sh = self.shard(key).lock().unwrap();
+        sh.tick += 1;
+        let tick = sh.tick;
+        match sh.map.get_mut(&key) {
+            Some(e) => {
+                e.stamp = tick;
+                let val = Arc::clone(&e.val);
+                sh.log.push_back((key, tick));
+                sh.maybe_compact();
+                drop(sh);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(val)
+            }
+            None => {
+                drop(sh);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an embedding, evicting the least recently used
+    /// entry if the shard is at capacity.
+    pub fn insert(&self, key: u64, val: Arc<Vec<f32>>) {
+        let mut sh = self.shard(key).lock().unwrap();
+        let stamp = sh.touch(key);
+        let existed = sh.map.insert(key, Entry { val, stamp }).is_some();
+        if !existed && sh.map.len() > sh.cap {
+            sh.evict_one();
+        }
+        sh.maybe_compact();
+    }
+
+    /// Total live entries across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses) counters since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lru(cap: usize) -> ShardedLru {
+        // single shard so eviction order is fully deterministic
+        ShardedLru::new(cap, 1)
+    }
+
+    fn val(v: f32) -> Arc<Vec<f32>> {
+        Arc::new(vec![v])
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let c = lru(3);
+        c.insert(1, val(1.0));
+        c.insert(2, val(2.0));
+        c.insert(3, val(3.0));
+        // touch 1 so 2 becomes the LRU
+        assert!(c.get(1).is_some());
+        c.insert(4, val(4.0));
+        assert_eq!(c.len(), 3);
+        assert!(c.get(2).is_none(), "2 was LRU and must be evicted");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        assert!(c.get(4).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_instead_of_growing() {
+        let c = lru(2);
+        c.insert(1, val(1.0));
+        c.insert(2, val(2.0));
+        c.insert(1, val(1.5)); // refresh, not growth
+        assert_eq!(c.len(), 2);
+        c.insert(3, val(3.0)); // evicts 2 (1 was refreshed later)
+        assert!(c.get(2).is_none());
+        assert_eq!(c.get(1).unwrap()[0], 1.5);
+    }
+
+    #[test]
+    fn hit_returns_shared_value_and_counts() {
+        let c = lru(4);
+        c.insert(9, val(9.0));
+        let a = c.get(9).unwrap();
+        let b = c.get(9).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hits share one allocation");
+        assert!(c.get(8).is_none());
+        assert_eq!(c.stats(), (2, 1));
+    }
+
+    #[test]
+    fn log_compaction_keeps_lru_correct_under_heavy_touching() {
+        let c = lru(4);
+        for k in 0..4u64 {
+            c.insert(k, val(k as f32));
+        }
+        // hammer one key so the log grows and compacts repeatedly
+        for _ in 0..10_000 {
+            assert!(c.get(2).is_some());
+        }
+        c.insert(99, val(99.0));
+        assert!(c.get(2).is_some(), "hot key must survive eviction");
+        assert_eq!(c.len(), 4);
+    }
+
+    #[test]
+    fn shards_partition_keys() {
+        let c = ShardedLru::new(64, 8);
+        for k in 0..64u64 {
+            c.insert(k, val(k as f32));
+        }
+        assert_eq!(c.len(), 64);
+        for k in 0..64u64 {
+            assert_eq!(c.get(k).unwrap()[0], k as f32);
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable_and_sensitive() {
+        let mut h = Fnv1a::new();
+        h.update(b"abc");
+        // reference FNV-1a 64 of "abc"
+        assert_eq!(h.finish(), 0xe71fa2190541574b);
+        let mut h2 = Fnv1a::new();
+        h2.update(b"abd");
+        assert_ne!(h.finish(), h2.finish());
+    }
+}

@@ -1,0 +1,295 @@
+//! Forward-only dual-tower CLIP encoder for serving.
+//!
+//! Built once at load time from [`crate::nn::TransformerBlock`]s whose
+//! projection weights are immediately pre-quantized
+//! ([`TransformerBlock::prepare`]) — serving never pays the per-call
+//! weight quantize that the training forward does, and never allocates a
+//! backward cache.  Precision is pluggable exactly like training
+//! ([`LinearKind`]), so the `loadgen` sweep compares Standard (f32),
+//! SwitchBack and LLM.int8() serving on identical weights: seeding is
+//! kind-independent, so every kind encodes the *same* underlying f32
+//! model.
+//!
+//! Tower shape (both towers): input projection / token embedding → N
+//! pre-norm transformer blocks → mean-pool over the sequence → output
+//! projection → L2 normalize.  This mirrors `python/compile/model.py`'s
+//! dual tower at serving-friendly scale.
+
+use crate::nn::{LinearKind, PreparedBlock, PreparedLinear, TransformerBlock};
+use crate::nn::Linear;
+use crate::tensor::{Matrix, Rng};
+
+/// Model shape + precision for the serving encoder.
+#[derive(Debug, Clone)]
+pub struct EncoderConfig {
+    pub kind: LinearKind,
+    /// transformer width (divisible by `heads`)
+    pub dim: usize,
+    pub heads: usize,
+    /// blocks per tower
+    pub blocks: usize,
+    /// output embedding dimension
+    pub embed_dim: usize,
+    /// image tower: patches per image and raw patch width
+    pub patches: usize,
+    pub patch_dim: usize,
+    /// text tower: tokens per caption and vocabulary size
+    pub text_seq: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl EncoderConfig {
+    /// The default serving model: big enough that int8 vs f32 GEMM time
+    /// dominates per-request overheads, small enough for CPU loadgen.
+    pub fn demo(kind: LinearKind) -> Self {
+        Self {
+            kind,
+            dim: 128,
+            heads: 4,
+            blocks: 2,
+            embed_dim: 64,
+            patches: 16,
+            patch_dim: 64,
+            text_seq: 16,
+            vocab: 512,
+            seed: 42,
+        }
+    }
+
+    /// Expected `EncodeInput::Image` payload length.
+    pub fn image_len(&self) -> usize {
+        self.patches * self.patch_dim
+    }
+}
+
+/// One tower: input embedding → blocks → pooled output projection.
+struct Tower {
+    /// tokens per item this tower was built for
+    seq: usize,
+    blocks: Vec<PreparedBlock>,
+    out_proj: PreparedLinear,
+}
+
+impl Tower {
+    /// `x [B*seq, dim]` → L2-normalized `[B, embed_dim]`.
+    fn encode(&self, mut x: Matrix, dim: usize) -> Matrix {
+        for blk in &self.blocks {
+            x = blk.forward(&x);
+        }
+        let b = x.rows / self.seq;
+        // mean-pool each item's seq rows
+        let mut pooled = Matrix::zeros(b, dim);
+        let inv = 1.0 / self.seq as f32;
+        for i in 0..b {
+            let prow = pooled.row_mut(i);
+            for t in 0..self.seq {
+                let xrow = x.row(i * self.seq + t);
+                for (p, &v) in prow.iter_mut().zip(xrow) {
+                    *p += v * inv;
+                }
+            }
+        }
+        let mut emb = self.out_proj.forward(&pooled);
+        // L2 normalize rows (CLIP's unit-sphere embeddings)
+        for r in 0..emb.rows {
+            let row = emb.row_mut(r);
+            let norm =
+                row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt() as f32;
+            if norm > 0.0 {
+                let inv = 1.0 / norm;
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+        emb
+    }
+}
+
+/// The serving encoder: image + text towers with pre-quantized weights.
+pub struct ClipEncoder {
+    cfg: EncoderConfig,
+    patch_embed: PreparedLinear,
+    /// `[vocab, dim]` f32 token-embedding table (a lookup, not a matmul —
+    /// quantizing it would buy nothing)
+    tok_embed: Matrix,
+    image_tower: Tower,
+    text_tower: Tower,
+}
+
+impl ClipEncoder {
+    /// Deterministic init from `cfg.seed`; weights are identical across
+    /// precision kinds (the RNG stream does not depend on `kind`).
+    pub fn new(cfg: EncoderConfig) -> Self {
+        assert_eq!(cfg.dim % cfg.heads, 0, "dim must divide by heads");
+        let mut rng = Rng::seed(cfg.seed);
+        let patch_embed =
+            Linear::new(cfg.dim, cfg.patch_dim, cfg.kind, &mut rng).prepare();
+        let tok_embed = Matrix::randn(cfg.vocab, cfg.dim, 0.02, &mut rng);
+        let build_tower = |seq: usize, rng: &mut Rng| -> Tower {
+            let blocks = (0..cfg.blocks)
+                .map(|_| {
+                    TransformerBlock::new(cfg.dim, cfg.heads, seq, cfg.kind, rng)
+                        .prepare()
+                })
+                .collect();
+            let out_proj =
+                Linear::new(cfg.embed_dim, cfg.dim, cfg.kind, rng).prepare();
+            Tower { seq, blocks, out_proj }
+        };
+        let image_tower = build_tower(cfg.patches, &mut rng);
+        let text_tower = build_tower(cfg.text_seq, &mut rng);
+        Self { cfg, patch_embed, tok_embed, image_tower, text_tower }
+    }
+
+    pub fn config(&self) -> &EncoderConfig {
+        &self.cfg
+    }
+
+    /// Total resident weight bytes (int8 kinds ≈ 4× smaller than f32).
+    pub fn weight_bytes(&self) -> usize {
+        let towers: usize = self
+            .image_tower
+            .blocks
+            .iter()
+            .chain(&self.text_tower.blocks)
+            .map(|b| b.weight_bytes())
+            .sum();
+        towers
+            + self.patch_embed.weight_bytes()
+            + self.image_tower.out_proj.weight_bytes()
+            + self.text_tower.out_proj.weight_bytes()
+            + self.tok_embed.data.len() * 4
+    }
+
+    /// Encode a micro-batch of images; each slice is `patches×patch_dim`
+    /// floats.  Returns one L2-normalized `embed_dim` vector per image.
+    pub fn encode_images(&self, batch: &[&[f32]]) -> Vec<Vec<f32>> {
+        if batch.is_empty() {
+            return vec![];
+        }
+        let (p, pd) = (self.cfg.patches, self.cfg.patch_dim);
+        let mut x = Matrix::zeros(batch.len() * p, pd);
+        for (i, img) in batch.iter().enumerate() {
+            assert_eq!(img.len(), p * pd, "image payload length");
+            x.data[i * p * pd..(i + 1) * p * pd].copy_from_slice(img);
+        }
+        let h = self.patch_embed.forward(&x);
+        let emb = self.image_tower.encode(h, self.cfg.dim);
+        split_rows(emb)
+    }
+
+    /// Encode a micro-batch of captions; each slice is `text_seq` token
+    /// ids.  Returns one L2-normalized `embed_dim` vector per caption.
+    pub fn encode_texts(&self, batch: &[&[i32]]) -> Vec<Vec<f32>> {
+        if batch.is_empty() {
+            return vec![];
+        }
+        let (t, d) = (self.cfg.text_seq, self.cfg.dim);
+        let mut x = Matrix::zeros(batch.len() * t, d);
+        for (i, toks) in batch.iter().enumerate() {
+            assert_eq!(toks.len(), t, "caption token length");
+            for (j, &tok) in toks.iter().enumerate() {
+                let tok = tok.rem_euclid(self.cfg.vocab as i32) as usize;
+                x.row_mut(i * t + j).copy_from_slice(self.tok_embed.row(tok));
+            }
+        }
+        let emb = self.text_tower.encode(x, d);
+        split_rows(emb)
+    }
+}
+
+fn split_rows(m: Matrix) -> Vec<Vec<f32>> {
+    (0..m.rows).map(|r| m.row(r).to_vec()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(kind: LinearKind) -> EncoderConfig {
+        EncoderConfig {
+            kind,
+            dim: 16,
+            heads: 2,
+            blocks: 2,
+            embed_dim: 8,
+            patches: 4,
+            patch_dim: 12,
+            text_seq: 5,
+            vocab: 64,
+            seed: 7,
+        }
+    }
+
+    fn cosine(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn embeddings_are_unit_norm_and_deterministic() {
+        let enc = ClipEncoder::new(tiny(LinearKind::SwitchBack));
+        let mut rng = Rng::seed(1);
+        let img: Vec<f32> = (0..48).map(|_| rng.normal()).collect();
+        let toks: Vec<i32> = (0..5).map(|i| i * 3).collect();
+        let e1 = enc.encode_images(&[&img]);
+        let e2 = enc.encode_images(&[&img]);
+        assert_eq!(e1, e2, "deterministic");
+        let n: f32 = e1[0].iter().map(|v| v * v).sum::<f32>();
+        assert!((n - 1.0).abs() < 1e-4, "unit norm, got {n}");
+        let t = enc.encode_texts(&[&toks]);
+        assert_eq!(t[0].len(), 8);
+        let nt: f32 = t[0].iter().map(|v| v * v).sum::<f32>();
+        assert!((nt - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn batch_composition_does_not_change_embeddings() {
+        let enc = ClipEncoder::new(tiny(LinearKind::SwitchBack));
+        let mut rng = Rng::seed(2);
+        let a: Vec<f32> = (0..48).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..48).map(|_| rng.normal()).collect();
+        let solo = enc.encode_images(&[&a]);
+        let both = enc.encode_images(&[&a, &b]);
+        assert_eq!(solo[0], both[0], "item embedding independent of batch");
+    }
+
+    #[test]
+    fn int8_kinds_track_the_f32_model() {
+        // identical seed → identical underlying weights, so the embedding
+        // difference is pure quantization noise (the paper's 0.1pp story).
+        let std_enc = ClipEncoder::new(tiny(LinearKind::Standard));
+        let sb_enc = ClipEncoder::new(tiny(LinearKind::SwitchBack));
+        let llm_enc = ClipEncoder::new(tiny(LinearKind::LlmInt8));
+        let mut rng = Rng::seed(3);
+        for _ in 0..8 {
+            let img: Vec<f32> = (0..48).map(|_| rng.normal()).collect();
+            let e_std = &std_enc.encode_images(&[&img])[0];
+            let e_sb = &sb_enc.encode_images(&[&img])[0];
+            let e_llm = &llm_enc.encode_images(&[&img])[0];
+            assert!(cosine(e_std, e_sb) > 0.98, "switchback drifted");
+            assert!(cosine(e_std, e_llm) > 0.95, "llmint8 drifted");
+        }
+    }
+
+    #[test]
+    fn int8_weights_are_quartered() {
+        let std_b = ClipEncoder::new(tiny(LinearKind::Standard)).weight_bytes();
+        let sb_b = ClipEncoder::new(tiny(LinearKind::SwitchBack)).weight_bytes();
+        assert!(sb_b < std_b, "int8 must be smaller ({sb_b} vs {std_b})");
+        // block weights dominate; the f32 token table is shared overhead
+        let table = 64 * 16 * 4;
+        assert!((std_b - table) > 3 * (sb_b - table), "≈4× on the matmul weights");
+    }
+
+    #[test]
+    fn text_tokens_wrap_into_vocab() {
+        let enc = ClipEncoder::new(tiny(LinearKind::Standard));
+        let toks_a: Vec<i32> = vec![0, 1, 2, 3, 4];
+        let toks_b: Vec<i32> = vec![64, 65, 66, 67, 68]; // same mod vocab
+        let ea = enc.encode_texts(&[&toks_a]);
+        let eb = enc.encode_texts(&[&toks_b]);
+        assert_eq!(ea, eb);
+    }
+}

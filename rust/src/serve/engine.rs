@@ -1,0 +1,419 @@
+//! The serving engine: cache front, micro-batcher, worker pool.
+//!
+//! `Engine::encode` is the (blocking) request path:
+//!
+//! 1. validate the payload shape against the encoder config,
+//! 2. probe the sharded LRU — a hit replies immediately *without touching
+//!    the GEMM substrate* (no quantize, no matmul, no queue),
+//! 3. on miss, enqueue into the [`BatchQueue`] and wait for a worker.
+//!
+//! Workers loop on `pop_batch`, partition each micro-batch by modality,
+//! run the forward-only encoder once per modality, fill the cache, and
+//! reply through each request's single-slot channel.  Worker count
+//! defaults to a fraction of [`crate::util::threads::num_threads`]: the
+//! GEMMs inside the encoder already fan out over the same pool helper, so
+//! a few batch-level workers keep the cores busy without oversubscribing.
+//!
+//! Identical concurrent misses may both be encoded (no in-flight dedup);
+//! both land on the same cache key, so the window is one batch wide.
+
+use super::batcher::{BatchPolicy, BatchQueue};
+use super::cache::ShardedLru;
+use super::encoder::{ClipEncoder, EncoderConfig};
+use super::metrics::ServeMetrics;
+use super::EncodeInput;
+use crate::util::threads::num_threads;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Engine construction knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub encoder: EncoderConfig,
+    pub policy: BatchPolicy,
+    /// batch-level worker threads (0 = auto: cores/4, at least 1)
+    pub workers: usize,
+    /// total embedding-cache entries (0 disables the cache)
+    pub cache_capacity: usize,
+    /// lock shards for the cache (0 = auto)
+    pub cache_shards: usize,
+}
+
+impl ServeConfig {
+    pub fn demo(kind: crate::nn::LinearKind) -> Self {
+        Self {
+            encoder: EncoderConfig::demo(kind),
+            policy: BatchPolicy::default(),
+            workers: 0,
+            cache_capacity: 8192,
+            cache_shards: 0,
+        }
+    }
+}
+
+/// A served embedding.
+#[derive(Debug, Clone)]
+pub struct EncodeResponse {
+    /// L2-normalized `embed_dim` vector (shared with the cache)
+    pub embedding: Arc<Vec<f32>>,
+    pub cache_hit: bool,
+}
+
+/// Errors are plain strings (the CLI boundary stringifies anyway).
+pub type EncodeResult = Result<EncodeResponse, String>;
+
+/// One queued unit of work.
+struct Job {
+    input: EncodeInput,
+    key: u64,
+    enqueued: Instant,
+    reply: SyncSender<EncodeResult>,
+}
+
+struct Shared {
+    encoder: ClipEncoder,
+    queue: BatchQueue<Job>,
+    cache: Option<ShardedLru>,
+    metrics: ServeMetrics,
+}
+
+/// The running engine (workers live until [`Engine::shutdown`] / drop).
+pub struct Engine {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Build the encoder (pre-quantizing all weights once) and start the
+    /// worker pool.
+    pub fn start(cfg: ServeConfig) -> Engine {
+        let workers = if cfg.workers > 0 {
+            cfg.workers
+        } else {
+            (num_threads() / 4).max(1)
+        };
+        let cache = if cfg.cache_capacity > 0 {
+            let shards = if cfg.cache_shards > 0 {
+                cfg.cache_shards
+            } else {
+                16.min(cfg.cache_capacity.max(1))
+            };
+            Some(ShardedLru::new(cfg.cache_capacity, shards))
+        } else {
+            None
+        };
+        let shared = Arc::new(Shared {
+            encoder: ClipEncoder::new(cfg.encoder),
+            queue: BatchQueue::new(cfg.policy),
+            cache,
+            metrics: ServeMetrics::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        Engine { shared, workers: handles }
+    }
+
+    /// Blocking encode of one input.  Thread-safe; call from any number of
+    /// client threads.
+    pub fn encode(&self, input: EncodeInput) -> EncodeResult {
+        let sh = &self.shared;
+        if let Err(e) = self.validate(&input) {
+            sh.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
+        // counted after validation so hit_rate's denominator is accepted
+        // requests only
+        sh.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let key = input.content_hash();
+        let t0 = Instant::now();
+        if let Some(cache) = &sh.cache {
+            if let Some(emb) = cache.get(key) {
+                sh.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                sh.metrics.hit_ns.record(t0.elapsed().as_nanos() as u64);
+                return Ok(EncodeResponse { embedding: emb, cache_hit: true });
+            }
+        }
+        let (tx, rx) = sync_channel(1);
+        let job = Job { input, key, enqueued: t0, reply: tx };
+        if !sh.queue.push(job) {
+            sh.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err("engine is shut down".into());
+        }
+        // counted only once actually enqueued, so misses == batched work
+        sh.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+        match rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err("worker dropped the request (engine shutting down)".into()),
+        }
+    }
+
+    fn validate(&self, input: &EncodeInput) -> Result<(), String> {
+        let cfg = self.shared.encoder.config();
+        match input {
+            EncodeInput::Image(px) => {
+                if px.len() != cfg.image_len() {
+                    return Err(format!(
+                        "image payload must be patches×patch_dim = {} floats, got {}",
+                        cfg.image_len(),
+                        px.len()
+                    ));
+                }
+                if px.iter().any(|v| !v.is_finite()) {
+                    return Err("image payload contains non-finite values".into());
+                }
+            }
+            EncodeInput::Text(toks) => {
+                if toks.len() != cfg.text_seq {
+                    return Err(format!(
+                        "caption must be text_seq = {} tokens, got {}",
+                        cfg.text_seq,
+                        toks.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Live metrics handle (snapshot whenever needed).
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.shared.metrics
+    }
+
+    /// The encoder's model shape (loadgen builds matching inputs from it).
+    pub fn encoder_config(&self) -> &EncoderConfig {
+        self.shared.encoder.config()
+    }
+
+    /// Precision label of the serving encoder ("standard", "switchback", …).
+    pub fn kind_label(&self) -> &'static str {
+        self.shared.encoder.config().kind.label()
+    }
+
+    /// (hits, misses) seen by the embedding cache, if enabled.
+    pub fn cache_stats(&self) -> Option<(u64, u64)> {
+        self.shared.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Resident encoder weight bytes (pre-quantized form).
+    pub fn weight_bytes(&self) -> usize {
+        self.shared.encoder.weight_bytes()
+    }
+
+    /// Stop accepting work, drain the queue, and join the workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shared.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Worker: pull micro-batches until the queue closes and drains.
+fn worker_loop(sh: &Shared) {
+    while let Some(batch) = sh.queue.pop_batch() {
+        let t0 = Instant::now();
+        let n = batch.len();
+        // partition by modality, remembering original slots
+        let mut img_idx = vec![];
+        let mut txt_idx = vec![];
+        for (i, job) in batch.iter().enumerate() {
+            if job.input.is_image() {
+                img_idx.push(i);
+            } else {
+                txt_idx.push(i);
+            }
+        }
+        let imgs: Vec<&[f32]> = img_idx
+            .iter()
+            .map(|&i| match &batch[i].input {
+                EncodeInput::Image(px) => px.as_slice(),
+                EncodeInput::Text(_) => unreachable!(),
+            })
+            .collect();
+        let txts: Vec<&[i32]> = txt_idx
+            .iter()
+            .map(|&i| match &batch[i].input {
+                EncodeInput::Text(t) => t.as_slice(),
+                EncodeInput::Image(_) => unreachable!(),
+            })
+            .collect();
+        let img_embs = sh.encoder.encode_images(&imgs);
+        let txt_embs = sh.encoder.encode_texts(&txts);
+        let mut out: Vec<Option<Arc<Vec<f32>>>> = vec![None; n];
+        for (slot, emb) in img_idx.iter().zip(img_embs) {
+            out[*slot] = Some(Arc::new(emb));
+        }
+        for (slot, emb) in txt_idx.iter().zip(txt_embs) {
+            out[*slot] = Some(Arc::new(emb));
+        }
+        for (job, emb) in batch.iter().zip(out) {
+            let emb = emb.expect("every slot encoded");
+            if let Some(cache) = &sh.cache {
+                cache.insert(job.key, Arc::clone(&emb));
+            }
+            sh.metrics
+                .request_ns
+                .record(job.enqueued.elapsed().as_nanos() as u64);
+            // the client may have vanished; ignore send failures
+            let _ = job
+                .reply
+                .send(Ok(EncodeResponse { embedding: emb, cache_hit: false }));
+        }
+        sh.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        sh.metrics.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+        sh.metrics.batch_ns.record(t0.elapsed().as_nanos() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LinearKind;
+    use crate::tensor::Rng;
+    use std::time::Duration;
+
+    fn tiny_cfg(kind: LinearKind, cache: usize) -> ServeConfig {
+        ServeConfig {
+            encoder: EncoderConfig {
+                kind,
+                dim: 16,
+                heads: 2,
+                blocks: 1,
+                embed_dim: 8,
+                patches: 4,
+                patch_dim: 12,
+                text_seq: 5,
+                vocab: 64,
+                seed: 11,
+            },
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 2,
+            cache_capacity: cache,
+            cache_shards: 2,
+        }
+    }
+
+    fn random_image(rng: &mut Rng) -> EncodeInput {
+        EncodeInput::Image((0..48).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn miss_then_hit_shares_the_embedding() {
+        let eng = Engine::start(tiny_cfg(LinearKind::SwitchBack, 64));
+        let mut rng = Rng::seed(1);
+        let img = random_image(&mut rng);
+        let first = eng.encode(img.clone()).unwrap();
+        assert!(!first.cache_hit);
+        let second = eng.encode(img).unwrap();
+        assert!(second.cache_hit, "second request must hit the cache");
+        assert!(Arc::ptr_eq(&first.embedding, &second.embedding));
+        let snap = eng.metrics().snapshot();
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.cache_misses, 1);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_get_correct_embeddings() {
+        let eng = Arc::new(Engine::start(tiny_cfg(LinearKind::SwitchBack, 0)));
+        let solo = {
+            let mut rng = Rng::seed(5);
+            let img = random_image(&mut rng);
+            (img.clone(), eng.encode(img).unwrap().embedding)
+        };
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let eng = Arc::clone(&eng);
+                let reference = solo.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::seed(100 + t);
+                    for _ in 0..10 {
+                        // mix of the shared image and fresh ones + texts
+                        let r = eng.encode(reference.0.clone()).unwrap();
+                        assert_eq!(*r.embedding, *reference.1, "batching changed numerics");
+                        let fresh = eng.encode(random_image(&mut rng)).unwrap();
+                        assert_eq!(fresh.embedding.len(), 8);
+                        let toks: Vec<i32> =
+                            (0..5).map(|_| rng.below(64) as i32).collect();
+                        let te = eng.encode(EncodeInput::Text(toks)).unwrap();
+                        assert_eq!(te.embedding.len(), 8);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = eng.metrics().snapshot();
+        assert_eq!(snap.requests, 241);
+        assert_eq!(snap.cache_hits, 0, "cache disabled");
+        assert!(snap.batches >= 1);
+        assert!(snap.mean_batch_occupancy >= 1.0);
+    }
+
+    #[test]
+    fn invalid_payloads_are_rejected_not_encoded() {
+        let eng = Engine::start(tiny_cfg(LinearKind::Standard, 16));
+        let err = eng.encode(EncodeInput::Image(vec![1.0; 7])).unwrap_err();
+        assert!(err.contains("patches×patch_dim"), "{err}");
+        let err = eng.encode(EncodeInput::Text(vec![1, 2])).unwrap_err();
+        assert!(err.contains("text_seq"), "{err}");
+        let err = eng
+            .encode(EncodeInput::Image(vec![f32::NAN; 48]))
+            .unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+        let snap = eng.metrics().snapshot();
+        assert_eq!(snap.rejected, 3);
+        assert_eq!(snap.cache_misses, 0);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work() {
+        let cfg = tiny_cfg(LinearKind::Standard, 16);
+        let eng = Engine::start(cfg);
+        let shared = Arc::clone(&eng.shared);
+        eng.shutdown();
+        // the queue is closed now; a late push is rejected
+        assert_eq!(shared.queue.depth(), 0);
+    }
+
+    #[test]
+    fn hit_path_never_touches_the_queue() {
+        let eng = Engine::start(tiny_cfg(LinearKind::SwitchBack, 64));
+        let mut rng = Rng::seed(9);
+        let img = random_image(&mut rng);
+        eng.encode(img.clone()).unwrap();
+        let batches_before = eng.metrics().snapshot().batches;
+        for _ in 0..20 {
+            assert!(eng.encode(img.clone()).unwrap().cache_hit);
+        }
+        let snap = eng.metrics().snapshot();
+        assert_eq!(
+            snap.batches, batches_before,
+            "hits must not reach the worker pool"
+        );
+        eng.shutdown();
+    }
+}

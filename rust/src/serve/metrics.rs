@@ -1,0 +1,173 @@
+//! Serving telemetry: atomic counters + latency histograms, snapshotted
+//! into a JSON-serializable report.
+//!
+//! Everything here is recorded from hot paths (client threads on hits,
+//! workers per batch), so it is all relaxed atomics — no locks, no
+//! allocation.  `loadgen` and the `serve` smoke subcommand read one
+//! [`ServeSnapshot`] at the end; BENCH_serve.json is built from these.
+
+use crate::telemetry::Histogram;
+use crate::util::json::ObjWriter;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live serving metrics (shared by the engine, its workers and clients).
+#[derive(Default)]
+pub struct ServeMetrics {
+    /// requests accepted by `Engine::encode` (rejects are counted only in
+    /// `rejected`, so `hit_rate = hits / requests` is over accepted work)
+    pub requests: AtomicU64,
+    /// served straight from the embedding cache (no GEMM work at all)
+    pub cache_hits: AtomicU64,
+    /// enqueued for encoding
+    pub cache_misses: AtomicU64,
+    /// rejected before enqueue (bad shape / shutdown)
+    pub rejected: AtomicU64,
+    /// batches executed by the worker pool
+    pub batches: AtomicU64,
+    /// requests carried by those batches (occupancy = this / batches)
+    pub batched_requests: AtomicU64,
+    /// end-to-end latency of encode-path requests (enqueue → reply), ns
+    pub request_ns: Histogram,
+    /// latency of cache hits (lookup only), ns
+    pub hit_ns: Histogram,
+    /// worker time per batch (forward pass + bookkeeping), ns
+    pub batch_ns: Histogram,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Point-in-time copy of everything a report needs.
+    pub fn snapshot(&self) -> ServeSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let hits = self.cache_hits.load(Ordering::Relaxed);
+        let misses = self.cache_misses.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched = self.batched_requests.load(Ordering::Relaxed);
+        let (p50, p95, p99) = self.request_ns.percentiles();
+        let (h50, h95, h99) = self.hit_ns.percentiles();
+        let (b50, b95, b99) = self.batch_ns.percentiles();
+        ServeSnapshot {
+            requests,
+            cache_hits: hits,
+            cache_misses: misses,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            batches,
+            hit_rate: if requests > 0 { hits as f64 / requests as f64 } else { 0.0 },
+            mean_batch_occupancy: if batches > 0 {
+                batched as f64 / batches as f64
+            } else {
+                0.0
+            },
+            request_p50_ms: ns_to_ms(p50),
+            request_p95_ms: ns_to_ms(p95),
+            request_p99_ms: ns_to_ms(p99),
+            hit_p50_ms: ns_to_ms(h50),
+            hit_p95_ms: ns_to_ms(h95),
+            hit_p99_ms: ns_to_ms(h99),
+            batch_p50_ms: ns_to_ms(b50),
+            batch_p95_ms: ns_to_ms(b95),
+            batch_p99_ms: ns_to_ms(b99),
+        }
+    }
+}
+
+fn ns_to_ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+/// A point-in-time serving report (all latencies in milliseconds).
+#[derive(Debug, Clone)]
+pub struct ServeSnapshot {
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub hit_rate: f64,
+    pub mean_batch_occupancy: f64,
+    pub request_p50_ms: f64,
+    pub request_p95_ms: f64,
+    pub request_p99_ms: f64,
+    pub hit_p50_ms: f64,
+    pub hit_p95_ms: f64,
+    pub hit_p99_ms: f64,
+    pub batch_p50_ms: f64,
+    pub batch_p95_ms: f64,
+    pub batch_p99_ms: f64,
+}
+
+impl ServeSnapshot {
+    /// JSON object (nested inside BENCH_serve.json result entries).
+    pub fn to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_u64("requests", self.requests)
+            .field_u64("cache_hits", self.cache_hits)
+            .field_u64("cache_misses", self.cache_misses)
+            .field_u64("rejected", self.rejected)
+            .field_u64("batches", self.batches)
+            .field_f32("hit_rate", self.hit_rate as f32)
+            .field_f32("mean_batch_occupancy", self.mean_batch_occupancy as f32)
+            .field_f32("request_p50_ms", self.request_p50_ms as f32)
+            .field_f32("request_p95_ms", self.request_p95_ms as f32)
+            .field_f32("request_p99_ms", self.request_p99_ms as f32)
+            .field_f32("hit_p50_ms", self.hit_p50_ms as f32)
+            .field_f32("hit_p95_ms", self.hit_p95_ms as f32)
+            .field_f32("hit_p99_ms", self.hit_p99_ms as f32)
+            .field_f32("batch_p50_ms", self.batch_p50_ms as f32)
+            .field_f32("batch_p95_ms", self.batch_p95_ms as f32)
+            .field_f32("batch_p99_ms", self.batch_p99_ms as f32);
+        w.finish()
+    }
+
+    /// Human-readable one-screen summary.
+    pub fn print(&self, label: &str) {
+        println!(
+            "  [{label}] {} reqs  hit-rate {:.1}%  occupancy {:.1}  \
+             p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  (hit p50 {:.3} ms)",
+            self.requests,
+            100.0 * self.hit_rate,
+            self.mean_batch_occupancy,
+            self.request_p50_ms,
+            self.request_p95_ms,
+            self.request_p99_ms,
+            self.hit_p50_ms,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn snapshot_math_and_json() {
+        let m = ServeMetrics::new();
+        m.requests.store(10, Ordering::Relaxed);
+        m.cache_hits.store(4, Ordering::Relaxed);
+        m.cache_misses.store(6, Ordering::Relaxed);
+        m.batches.store(3, Ordering::Relaxed);
+        m.batched_requests.store(6, Ordering::Relaxed);
+        m.request_ns.record(1_000_000);
+        m.request_ns.record(3_000_000);
+        let s = m.snapshot();
+        assert!((s.hit_rate - 0.4).abs() < 1e-9);
+        assert!((s.mean_batch_occupancy - 2.0).abs() < 1e-9);
+        assert!(s.request_p50_ms > 0.5 && s.request_p50_ms < 3.5);
+        let v = parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("requests").unwrap().as_usize(), Some(10));
+        assert!(v.get("hit_rate").unwrap().as_f64().unwrap() > 0.39);
+    }
+
+    #[test]
+    fn empty_snapshot_is_all_zero() {
+        let s = ServeMetrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.hit_rate, 0.0);
+        assert_eq!(s.mean_batch_occupancy, 0.0);
+        assert_eq!(s.request_p50_ms, 0.0);
+    }
+}

@@ -1,0 +1,104 @@
+//! `serve` — a batched int8 CLIP-embedding serving engine on the native
+//! SwitchBack substrate (the first runtime subsystem off the training
+//! path; DESIGN.md §Serve).
+//!
+//! The paper's result that int8 matmuls track bf16 within 0.1 pp is
+//! exactly the property that makes a high-throughput embedding service
+//! cheap: serving is forward-only, so the one numerically delicate matmul
+//! (the wgrad with its batch×seq inner dimension, Appendix C) never runs.
+//! Row-wise activation quant + tensor-wise weight quant — the same scheme
+//! [`crate::gemm`] benchmarks for Fig 3 — is all the precision machinery
+//! the encoder needs.
+//!
+//! Architecture (request flow left to right):
+//!
+//! ```text
+//!  clients ──▶ Engine::encode ──▶ sharded LRU cache ──(hit)──▶ reply
+//!                   │ miss
+//!                   ▼
+//!            BatchQueue (dynamic micro-batcher: max-batch / max-wait)
+//!                   │ batches
+//!                   ▼
+//!            worker pool ──▶ ClipEncoder (forward-only, pre-quantized
+//!                   │         weights, no LinearCache allocation)
+//!                   ▼
+//!            fill cache + reply + record telemetry (p50/p95/p99,
+//!            batch occupancy, hit rate → telemetry::Histogram)
+//! ```
+//!
+//! * [`batcher`] — the generic max-batch/max-wait coalescing queue.
+//! * [`cache`] — sharded LRU keyed by an FNV-1a hash of the raw input;
+//!   hits are served without touching the GEMM substrate at all.
+//! * [`encoder`] — dual-tower forward-only CLIP encoder built from
+//!   [`crate::nn::PreparedBlock`]s (weights quantized once at load).
+//! * [`engine`] — worker pool wiring the above together.
+//! * [`metrics`] — atomic serving telemetry + JSON snapshot.
+//! * [`loadgen`] — closed-loop load generator (the `loadgen` subcommand),
+//!   emits `BENCH_serve.json` so the perf trajectory is tracked per PR.
+
+pub mod batcher;
+pub mod cache;
+pub mod encoder;
+pub mod engine;
+pub mod loadgen;
+pub mod metrics;
+
+pub use batcher::{BatchPolicy, BatchQueue};
+pub use cache::ShardedLru;
+pub use encoder::{ClipEncoder, EncoderConfig};
+pub use engine::{EncodeResponse, Engine, ServeConfig};
+pub use loadgen::{run_loadgen, write_bench_json, LoadgenConfig, LoadgenReport};
+pub use metrics::{ServeMetrics, ServeSnapshot};
+
+/// One encode request's payload: a patchified image or a token sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EncodeInput {
+    /// `patches × patch_dim` floats, row-major (the training data layout).
+    Image(Vec<f32>),
+    /// `seq` token ids in `[0, vocab)`.
+    Text(Vec<i32>),
+}
+
+impl EncodeInput {
+    pub fn is_image(&self) -> bool {
+        matches!(self, Self::Image(_))
+    }
+
+    /// Stable 64-bit content hash (FNV-1a over a modality tag + raw bytes)
+    /// — the embedding-cache key.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = cache::Fnv1a::new();
+        match self {
+            Self::Image(px) => {
+                h.update(b"img");
+                for v in px {
+                    h.update(&v.to_le_bytes());
+                }
+            }
+            Self::Text(toks) => {
+                h.update(b"txt");
+                for t in toks {
+                    h.update(&t.to_le_bytes());
+                }
+            }
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn content_hash_distinguishes_inputs_and_modalities() {
+        let a = EncodeInput::Image(vec![1.0, 2.0]);
+        let b = EncodeInput::Image(vec![1.0, 2.5]);
+        assert_ne!(a.content_hash(), b.content_hash());
+        assert_eq!(a.content_hash(), a.clone().content_hash());
+        // same bytes, different modality must not collide
+        let img = EncodeInput::Image(vec![0.0]);
+        let txt = EncodeInput::Text(vec![0]);
+        assert_ne!(img.content_hash(), txt.content_hash());
+    }
+}

@@ -1,0 +1,172 @@
+//! Lock-free latency histogram for the serving path (p50/p95/p99).
+//!
+//! Log-bucketed with 16 linear sub-buckets per power of two, the classic
+//! HdrHistogram layout: worst-case quantile error is one sub-bucket width,
+//! ≤ 1/16 ≈ 6% relative — plenty for serving dashboards, and recording is
+//! a single relaxed atomic increment so worker threads never contend.
+//!
+//! Values are `u64` (the serve engine records nanoseconds); 0 is clamped
+//! to 1 so everything lands in a bucket.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// 16 sub-buckets per octave.
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS; // 16
+/// Values < 16 get exact buckets; octaves above cover up to u64::MAX.
+const OCTAVES: usize = 61; // (63 - SUB_BITS) octaves + the exact range
+const BUCKETS: usize = SUB + OCTAVES * SUB;
+
+/// A fixed-size, lock-free histogram of `u64` samples.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index for a value (see module docs for the layout).
+fn index_of(v: u64) -> usize {
+    let v = v.max(1);
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    // highest set bit position; v >= 16 so msb >= 4
+    let msb = 63 - v.leading_zeros();
+    let sub = ((v >> (msb - SUB_BITS)) as usize) & (SUB - 1);
+    let octave = (msb - SUB_BITS) as usize + 1; // v in [16,32) -> octave 1
+    (octave * SUB + sub).min(BUCKETS - 1)
+}
+
+/// Representative (midpoint) value of a bucket.
+fn value_of(idx: usize) -> u64 {
+    if idx < SUB {
+        return idx as u64;
+    }
+    let octave = (idx / SUB - 1) as u32 + SUB_BITS; // lower bound msb
+    let sub = (idx % SUB) as u64;
+    let lower = (1u64 << octave) + (sub << (octave - SUB_BITS));
+    let width = 1u64 << (octave - SUB_BITS);
+    lower + width / 2
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (relaxed atomics — safe from any thread).
+    pub fn record(&self, v: u64) {
+        self.buckets[index_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Quantile estimate, `q` in [0, 1].  Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return value_of(i);
+            }
+        }
+        self.max()
+    }
+
+    /// (p50, p95, p99) in one walk-friendly call.
+    pub fn percentiles(&self) -> (u64, u64, u64) {
+        (self.quantile(0.50), self.quantile(0.95), self.quantile(0.99))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 5, 15] {
+            h.record(v);
+        }
+        // 0 clamps to 1
+        assert_eq!(h.quantile(0.01), 1);
+        assert_eq!(h.max(), 15);
+        assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn quantiles_within_subbucket_error() {
+        let h = Histogram::new();
+        // 1..=10_000 uniformly: p50 ≈ 5000, p95 ≈ 9500, p99 ≈ 9900
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let (p50, p95, p99) = h.percentiles();
+        let close = |got: u64, want: f64| {
+            let rel = (got as f64 - want).abs() / want;
+            assert!(rel < 0.10, "got {got}, want ≈{want}");
+        };
+        close(p50, 5000.0);
+        close(p95, 9500.0);
+        close(p99, 9900.0);
+        assert!((h.mean() - 5000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn large_values_do_not_overflow_buckets() {
+        let h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(1 << 40);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.5) >= 1 << 40);
+    }
+
+    #[test]
+    fn index_value_roundtrip_is_monotone() {
+        let mut last = 0usize;
+        for shift in 4..40 {
+            let v = 1u64 << shift;
+            let i = index_of(v);
+            assert!(i >= last, "index must be monotone in value");
+            last = i;
+            // representative value lands in the right octave
+            let rep = value_of(i);
+            assert!(rep >= v && rep < v * 2, "v={v} rep={rep}");
+        }
+    }
+}

@@ -8,12 +8,16 @@
 //!   and what is the probability of that by chance?
 //! * [`sink`] — JSONL/CSV metrics output consumed by the experiment
 //!   harnesses (every figure regenerates from these logs).
+//! * [`histogram`] — lock-free log-bucketed latency histograms
+//!   (p50/p95/p99) backing the serve engine's request/batch telemetry.
 
 pub mod analyzer;
+pub mod histogram;
 pub mod sink;
 pub mod spikes;
 
 pub use analyzer::{lead_lag_analysis, lead_lag_from_events, LeadLagReport};
+pub use histogram::Histogram;
 pub use sink::{MetricsSink, StepRecord};
 pub use spikes::{
     detect_loss_spikes, detect_rms_spikes, SpikeConfig, DEFAULT_LOSS_SIGMA,

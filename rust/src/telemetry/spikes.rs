@@ -171,4 +171,69 @@ mod tests {
         let spikes = detect_rms_spikes(&rms, &cfg());
         assert_eq!(spikes, vec![40, 80]);
     }
+
+    /// Dedup window boundary: an event exactly `DEDUP_WINDOW` after the
+    /// last *kept* event still merges; one iteration later starts a new
+    /// spike (Appendix D's "interval of 10" is inclusive).
+    #[test]
+    fn dedup_window_boundary_is_inclusive() {
+        let mut rms = vec![1.0f32; 120];
+        rms[40] = 3.0;
+        rms[50] = 3.0; // 40 + 10: inclusive → merged
+        let spikes = detect_rms_spikes(&rms, &cfg());
+        assert_eq!(spikes, vec![40]);
+
+        let mut rms = vec![1.0f32; 120];
+        rms[40] = 3.0;
+        rms[51] = 3.0; // 40 + 11: outside → separate spike
+        let spikes = detect_rms_spikes(&rms, &cfg());
+        assert_eq!(spikes, vec![40, 51]);
+    }
+
+    /// Dedup anchors on the earliest *kept* event, not on the previous raw
+    /// event: a chain 40,50,60 does NOT merge transitively into one spike —
+    /// 50 merges into 40, but 60 is 20 past the kept event and stands alone.
+    #[test]
+    fn dedup_chain_does_not_merge_transitively() {
+        let mut rms = vec![1.0f32; 120];
+        rms[40] = 3.0;
+        rms[50] = 3.0;
+        rms[60] = 3.0;
+        let spikes = detect_rms_spikes(&rms, &cfg());
+        assert_eq!(spikes, vec![40, 60]);
+    }
+
+    /// An event exactly at `burn_in` counts; one before it does not.
+    #[test]
+    fn burn_in_boundary() {
+        let c = cfg(); // burn_in = 10
+        let mut rms = vec![1.0f32; 60];
+        rms[9] = 5.0;
+        assert!(detect_rms_spikes(&rms, &c).is_empty());
+        rms[10] = 5.0;
+        assert_eq!(detect_rms_spikes(&rms, &c), vec![10]);
+    }
+
+    /// Loss-spike confirmation straddling the dedup window: two deviations
+    /// exactly 10 apart confirm each other and merge into one spike.
+    #[test]
+    fn loss_confirmation_at_window_edge() {
+        let mut loss = vec![1.0f32; 300];
+        for (i, v) in loss.iter_mut().enumerate() {
+            *v += ((i % 7) as f32 - 3.0) * 0.01;
+        }
+        loss[100] = 5.0;
+        loss[110] = 5.0; // distance exactly DEDUP_WINDOW
+        let spikes = detect_loss_spikes(&loss, &cfg());
+        assert_eq!(spikes, vec![100]);
+        // distance 11: neither deviation is confirmed → no spikes at all
+        let mut loss = vec![1.0f32; 300];
+        for (i, v) in loss.iter_mut().enumerate() {
+            *v += ((i % 7) as f32 - 3.0) * 0.01;
+        }
+        loss[100] = 5.0;
+        loss[111] = 5.0;
+        let spikes = detect_loss_spikes(&loss, &cfg());
+        assert!(spikes.is_empty(), "unconfirmed deviations: {spikes:?}");
+    }
 }

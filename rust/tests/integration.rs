@@ -4,6 +4,9 @@
 //! loads, compiles, and reproduces jax's own numbers (golden check), and a
 //! short end-to-end training run learns.
 
+// The whole suite needs the PJRT runtime (gated `pjrt` feature).
+#![cfg(feature = "pjrt")]
+
 use std::path::Path;
 use switchback::config::{OptimizerKind, TrainConfig};
 use switchback::coordinator::Trainer;

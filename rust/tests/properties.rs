@@ -237,3 +237,63 @@ fn prop_data_concept_structure() {
         );
     }
 }
+
+/// Quant round-trip (`rowwise_quant` → `dequant_rowwise`): the max-abs
+/// reconstruction error over a whole matrix is bounded by half a quant
+/// step of its worst row, across benign and adversarial distributions
+/// (outlier rows, near-zero rows, extreme scales).
+#[test]
+fn prop_quant_roundtrip_max_abs_error_bound() {
+    let mut rng = Rng::seed(404);
+    for trial in 0..50 {
+        let rows = 1 + rng.below(24);
+        let cols = 1 + rng.below(48);
+        let scale = [1e-6f32, 1e-2, 1.0, 1e4][rng.below(4)];
+        let mut x = Matrix::randn(rows, cols, scale, &mut rng);
+        // adversarial structure: one outlier row, one all-zero row
+        if rows >= 2 {
+            let c = rng.below(cols);
+            x.row_mut(0)[c] = 1e6;
+            for v in x.row_mut(rows - 1) {
+                *v = 0.0;
+            }
+        }
+        let q = quant::rowwise_quant(&x);
+        let back = quant::dequant_rowwise(&q);
+        let max_err = x.max_abs_diff(&back);
+        let worst_half_step =
+            q.state.iter().fold(0.0f32, |m, &s| m.max(s)) / quant::INT8_MAX / 2.0;
+        assert!(
+            max_err <= worst_half_step * 1.0001 + 1e-12,
+            "trial {trial}: max-abs err {max_err} exceeds half-step {worst_half_step}"
+        );
+        // the all-zero row must reconstruct exactly
+        if rows >= 2 {
+            assert!(back.row(rows - 1).iter().all(|&v| v == 0.0));
+        }
+    }
+}
+
+/// `LinearCache::retained_bytes`: SwitchBackM's int8 activation cache is
+/// ≈4× smaller than the f32 cache every other kind keeps (Algorithm 3's
+/// selling point), and both report exact byte counts.
+#[test]
+fn prop_linear_cache_retained_bytes() {
+    use switchback::nn::{Linear, LinearKind};
+    let mut rng = Rng::seed(405);
+    for &(rows, cols) in &[(8usize, 256usize), (64, 64), (3, 1024)] {
+        let x = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let full = Linear::new(16, cols, LinearKind::SwitchBack, &mut rng);
+        let mem = Linear::new(16, cols, LinearKind::SwitchBackM, &mut rng);
+        let (_, c_full) = full.forward(&x);
+        let (_, c_mem) = mem.forward(&x);
+        // exact accounting: f32 = 4 bytes/elt; int8 = 1 byte/elt + 4/row
+        assert_eq!(c_full.retained_bytes(), rows * cols * 4);
+        assert_eq!(c_mem.retained_bytes(), rows * cols + rows * 4);
+        let ratio = c_full.retained_bytes() as f64 / c_mem.retained_bytes() as f64;
+        assert!(
+            ratio > 3.5 && ratio <= 4.0,
+            "{rows}x{cols}: expected ≈4× cache saving, got {ratio:.2}×"
+        );
+    }
+}

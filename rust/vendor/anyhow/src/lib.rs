@@ -1,0 +1,221 @@
+//! In-tree reimplementation of the `anyhow` API surface this project uses
+//! (the build environment is offline — DESIGN.md §Substitutions lists the
+//! vendored substrates).  Semantics match the real crate for everything we
+//! call: `Result<T>`, `Error` with a blanket `From<E: std::error::Error>`,
+//! the `anyhow!` / `bail!` macros, and `Context` on both `Result` and
+//! `Option`.
+//!
+//! Like the real anyhow, [`Error`] deliberately does NOT implement
+//! `std::error::Error` — that is what makes the blanket `From` impl legal.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: boxed cause + optional chain of context messages.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Build an error from a printable message (`anyhow!` expands to this).
+    pub fn msg<M: fmt::Display + Send + Sync + 'static>(message: M) -> Self {
+        Self { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Wrap an existing error with a context message, preserving the chain.
+    fn context_of<C: fmt::Display>(self, context: C) -> Self {
+        Self {
+            inner: Box::new(ContextError {
+                context: context.to_string(),
+                source: self.inner,
+            }),
+        }
+    }
+
+    /// The root cause's message chain, outermost first.
+    pub fn chain(&self) -> Vec<String> {
+        let mut out = vec![self.inner.to_string()];
+        let mut cur: Option<&(dyn StdError + 'static)> = self.inner.source();
+        while let Some(e) = cur {
+            out.push(e.to_string());
+            cur = e.source();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)
+    }
+}
+
+impl fmt::Debug for Error {
+    /// Mirrors anyhow's report format: message, then the cause chain.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut cur: Option<&(dyn StdError + 'static)> = self.inner.source();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { inner: Box::new(e) }
+    }
+}
+
+/// A plain-message error (no cause).
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// A context layer over an underlying error.
+struct ContextError {
+    context: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.context)
+    }
+}
+
+impl fmt::Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {:?}", self.context, self.source)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(self.source.as_ref())
+    }
+}
+
+/// Attach context to errors (`Result`) or turn `None` into an error.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error>;
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context_of(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context_of(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// `anyhow!("...{}...", args)` — construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = io_fail().context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        let chain = e.chain();
+        assert_eq!(chain, vec!["reading manifest".to_string(), "gone".to_string()]);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+
+        fn bails(trigger: bool) -> Result<u32> {
+            if trigger {
+                bail!("bad value {:?}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(bails(false).unwrap(), 1);
+        assert_eq!(bails(true).unwrap_err().to_string(), "bad value 7");
+        let e = anyhow!("plain {}", "msg");
+        assert_eq!(e.to_string(), "plain msg");
+    }
+}

@@ -1,0 +1,132 @@
+//! Compile-only stub of the `xla` crate's PJRT surface used by
+//! [`switchback::runtime`].
+//!
+//! The offline build image does not ship the PJRT toolchain
+//! (`xla_extension` + its C API shared objects), so this stub provides the
+//! exact types and signatures the runtime layer compiles against, with
+//! every entry point failing at *runtime* with a clear message.  On a
+//! machine with the real toolchain, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the actual bindings (see `/opt/xla-example`) — no
+//! source change needed, the API surface matches xla_extension 0.5.1.
+
+use std::fmt;
+
+/// Error for every stubbed entry point.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Self(format!(
+            "{what}: PJRT toolchain not available in this build \
+             (vendor/xla is a compile-only stub; see rust/Cargo.toml)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types accepted by [`Literal::vec1`] / [`Literal::to_vec`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Matches the real signature: returns per-device, per-output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<Literal>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loud_and_typed() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT toolchain not available"));
+        // the literal builders are infallible (runtime constructs inputs
+        // before executing), only execution paths error
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}

@@ -1,0 +1,43 @@
+#!/usr/bin/env bash
+# Tier-1 verification + serve smoke + perf-trajectory artifact.
+#
+# Usage: scripts/verify.sh [--full]
+#   default: tier-1 (build + tests) + serve smoke + a small loadgen run
+#   --full : also the 10k-request acceptance sweep (slower)
+#
+# Emits BENCH_serve.json at the repo root so the serving perf trajectory
+# (requests/sec, p99, hit rate per precision kind) is tracked across PRs
+# (schema: EXPERIMENTS.md §Serve).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+REPO_ROOT="$(pwd)"
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cd rust
+cargo build --release
+cargo test -q
+
+BIN=target/release/switchback
+
+echo
+echo "== serve smoke =="
+"$BIN" serve --kind switchback --requests 64
+
+echo
+echo "== loadgen (BENCH_serve.json) =="
+if [[ "${1:-}" == "--full" ]]; then
+    REQUESTS=10000
+    CONCURRENCY=32
+else
+    REQUESTS=1000
+    CONCURRENCY=16
+fi
+"$BIN" loadgen \
+    --requests "$REQUESTS" \
+    --concurrency "$CONCURRENCY" \
+    --kinds standard,switchback \
+    --out "$REPO_ROOT/BENCH_serve.json"
+
+echo
+echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json"
