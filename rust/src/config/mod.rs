@@ -35,6 +35,14 @@ impl OptimizerKind {
     }
 }
 
+impl std::str::FromStr for OptimizerKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s).ok_or_else(|| format!("unknown optimizer {s:?}"))
+    }
+}
+
 /// Loss-scaler policy (§3.6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ScalerKind {
@@ -62,6 +70,67 @@ impl ScalerKind {
             Self::None => "none",
             Self::DynamicGlobal => "dynamic_global",
             Self::FixedTensor => "fixed_tensor",
+        }
+    }
+}
+
+/// The optimizer/schedule hyperparameters every training path shares.
+///
+/// Both trainers — the PJRT artifact path ([`TrainConfig`] →
+/// `coordinator::Trainer`) and the native path (`train::NativeTrainer`) —
+/// consume exactly this struct, so the optimizer construction and LR
+/// schedule logic live in one place (`coordinator::common`) instead of
+/// being duplicated per path.
+#[derive(Debug, Clone)]
+pub struct TrainHyper {
+    pub steps: u64,
+    /// linear-warmup steps (paper: 25% of the run)
+    pub warmup: u64,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub optimizer: OptimizerKind,
+    /// β₂ schedule 1 − t^{−λ} (Fig 15); overrides beta2 when set
+    pub beta2_lambda: Option<f32>,
+    /// global-norm gradient clipping (Fig 10 baseline); None = off
+    pub grad_clip: Option<f32>,
+    pub seed: u64,
+}
+
+impl TrainHyper {
+    /// Paper-shaped defaults (lr 2e-3, wd 0.2, 25% warmup, StableAdamW)
+    /// scaled to a short run.
+    pub fn preset(steps: u64) -> Self {
+        Self {
+            steps,
+            warmup: steps / 4,
+            lr: 2e-3,
+            weight_decay: 0.2,
+            beta1: 0.9,
+            beta2: 0.999,
+            optimizer: OptimizerKind::StableAdamw,
+            beta2_lambda: None,
+            grad_clip: None,
+            seed: 0,
+        }
+    }
+
+    /// JSON summary fragment (shared by both paths' run logs).
+    pub fn write_json(&self, w: &mut ObjWriter) {
+        w.field_u64("steps", self.steps)
+            .field_u64("warmup", self.warmup)
+            .field_f32("lr", self.lr)
+            .field_f32("weight_decay", self.weight_decay)
+            .field_f32("beta1", self.beta1)
+            .field_f32("beta2", self.beta2)
+            .field_str("optimizer", self.optimizer.label())
+            .field_u64("seed", self.seed);
+        if let Some(l) = self.beta2_lambda {
+            w.field_f32("beta2_lambda", l);
+        }
+        if let Some(c) = self.grad_clip {
+            w.field_f32("grad_clip", c);
         }
     }
 }
@@ -134,26 +203,31 @@ impl TrainConfig {
         self
     }
 
+    /// The shared optimizer/schedule hyperparameters of this run — the
+    /// slice of the config that `coordinator::common::build_optimizer`
+    /// and the LR schedule consume (identical for the native path).
+    pub fn hyper(&self) -> TrainHyper {
+        TrainHyper {
+            steps: self.steps,
+            warmup: self.warmup,
+            lr: self.lr,
+            weight_decay: self.weight_decay,
+            beta1: self.beta1,
+            beta2: self.beta2,
+            optimizer: self.optimizer,
+            beta2_lambda: self.beta2_lambda,
+            grad_clip: self.grad_clip,
+            seed: self.seed,
+        }
+    }
+
     /// JSON summary for run logs (records the exact knob settings).
     pub fn to_json(&self) -> String {
         let mut w = ObjWriter::new();
-        w.field_str("artifact", &self.artifact)
-            .field_u64("steps", self.steps)
-            .field_u64("warmup", self.warmup)
-            .field_f32("lr", self.lr)
-            .field_f32("weight_decay", self.weight_decay)
-            .field_f32("beta1", self.beta1)
-            .field_f32("beta2", self.beta2)
-            .field_str("optimizer", self.optimizer.label())
-            .field_str("scaler", self.scaler.label())
-            .field_u64("seed", self.seed)
+        w.field_str("artifact", &self.artifact);
+        self.hyper().write_json(&mut w);
+        w.field_str("scaler", self.scaler.label())
             .field_bool("reinit", self.reinit);
-        if let Some(l) = self.beta2_lambda {
-            w.field_f32("beta2_lambda", l);
-        }
-        if let Some(c) = self.grad_clip {
-            w.field_f32("grad_clip", c);
-        }
         if !self.shifts.is_empty() {
             w.field_u64("n_shifts", self.shifts.len() as u64);
         }
@@ -184,6 +258,20 @@ mod tests {
             assert_eq!(ScalerKind::parse(s.label()), Some(s));
         }
         assert_eq!(OptimizerKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn hyper_slice_matches_config() {
+        let mut cfg = TrainConfig::preset("a", 120);
+        cfg.grad_clip = Some(1.0);
+        let h = cfg.hyper();
+        assert_eq!(h.steps, 120);
+        assert_eq!(h.warmup, 30);
+        assert_eq!(h.optimizer, OptimizerKind::StableAdamw);
+        assert_eq!(h.grad_clip, Some(1.0));
+        let preset = TrainHyper::preset(120);
+        assert_eq!(preset.lr, cfg.lr);
+        assert_eq!(preset.weight_decay, cfg.weight_decay);
     }
 
     #[test]

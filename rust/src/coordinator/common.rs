@@ -1,0 +1,138 @@
+//! Pieces shared by the two training paths.
+//!
+//! The PJRT artifact trainer (`coordinator::trainer`, feature `pjrt`) and
+//! the native trainer (`crate::train`) drive different forward/backward
+//! engines but identical *training policy*: the same optimizer zoo, the
+//! same warmup+cosine schedule, and the same deterministic spike-trigger
+//! shift schedule.  That policy lives here, un-gated, so neither path
+//! duplicates it.
+
+use crate::config::{OptimizerKind, TrainHyper};
+use crate::data::Shift;
+use crate::optim::{AdamW, AdamWConfig, Lion, LionConfig, Optimizer, ParamMeta};
+use crate::telemetry::SpikeConfig;
+
+/// Build the configured optimizer over `sizes`-shaped flat tensors.
+///
+/// This is the single place the `OptimizerKind` → implementation mapping
+/// exists (both trainers call it).
+pub fn build_optimizer(
+    h: &TrainHyper,
+    metas: &[ParamMeta],
+    sizes: &[usize],
+) -> Box<dyn Optimizer> {
+    match h.optimizer {
+        OptimizerKind::Adamw | OptimizerKind::StableAdamw => {
+            let acfg = AdamWConfig {
+                beta1: h.beta1,
+                beta2: h.beta2,
+                eps: 1e-6,
+                weight_decay: h.weight_decay,
+                update_clipping: h.optimizer == OptimizerKind::StableAdamw,
+                beta2_schedule_lambda: h.beta2_lambda,
+            };
+            Box::new(AdamW::new(acfg, metas, sizes))
+        }
+        OptimizerKind::Lion => Box::new(Lion::new(
+            LionConfig {
+                beta1: h.beta1,
+                beta2: h.beta2,
+                weight_decay: h.weight_decay,
+            },
+            metas,
+            sizes,
+        )),
+    }
+}
+
+/// The stuck-in-the-past trigger schedule: abrupt input-gain changes late
+/// in the run (post-warmup), when β₂ history is long and LR is still high.
+pub fn spike_shifts(steps: u64) -> Vec<Shift> {
+    let s1 = steps * 55 / 100;
+    let s2 = steps * 70 / 100;
+    let s3 = steps * 85 / 100;
+    vec![
+        Shift { at_step: s1, image_gain: 6.0, remap_concepts: false },
+        Shift { at_step: s2, image_gain: 1.0 / 6.0, remap_concepts: true },
+        Shift { at_step: s3, image_gain: 8.0, remap_concepts: false },
+    ]
+}
+
+/// Spike-detection config scaled to a run length (paper burn-in is 1000 of
+/// 20k iterations; ours keeps the same 1/8 proportion, floored at 20).
+pub fn spike_cfg(steps: u64) -> SpikeConfig {
+    SpikeConfig { burn_in: (steps / 8).max(20), ..Default::default() }
+}
+
+/// Mean loss over the last 10% of steps (min 1), counting only finite
+/// values — the robust curve endpoint both trainers report.  A NaN step
+/// must not bias the mean low by inflating the divisor; NaN when the
+/// trace is empty or the whole tail is nonfinite.
+pub fn tail_mean_loss(losses: &[f32]) -> f32 {
+    if losses.is_empty() {
+        return f32::NAN;
+    }
+    let tail_n = (losses.len() / 10).max(1);
+    let finite: Vec<f32> = losses[losses.len() - tail_n..]
+        .iter()
+        .copied()
+        .filter(|v| v.is_finite())
+        .collect();
+    if finite.is_empty() {
+        f32::NAN
+    } else {
+        finite.iter().sum::<f32>() / finite.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metas(n: usize) -> Vec<ParamMeta> {
+        (0..n).map(|i| ParamMeta::weight(&format!("p{i}"))).collect()
+    }
+
+    #[test]
+    fn builds_every_kind() {
+        for (kind, name) in [
+            (OptimizerKind::Adamw, "adamw"),
+            (OptimizerKind::StableAdamw, "stable_adamw"),
+            (OptimizerKind::Lion, "lion"),
+        ] {
+            let h = TrainHyper { optimizer: kind, ..TrainHyper::preset(10) };
+            let opt = build_optimizer(&h, &metas(2), &[3, 4]);
+            assert_eq!(opt.name(), name);
+        }
+    }
+
+    #[test]
+    fn shift_schedule_is_post_warmup_and_ordered() {
+        let shifts = spike_shifts(200);
+        assert_eq!(shifts.len(), 3);
+        assert!(shifts[0].at_step > 200 / 4, "shifts must land after warmup");
+        assert!(shifts.windows(2).all(|w| w[0].at_step < w[1].at_step));
+        assert!(shifts.iter().any(|s| s.remap_concepts));
+    }
+
+    #[test]
+    fn spike_cfg_scales_burn_in() {
+        assert_eq!(spike_cfg(50).burn_in, 20);
+        assert_eq!(spike_cfg(400).burn_in, 50);
+    }
+
+    #[test]
+    fn tail_mean_ignores_nonfinite_without_biasing() {
+        assert!(tail_mean_loss(&[]).is_nan());
+        // 20 steps → tail is the last 2; a NaN in the tail must not halve
+        // the mean (divide by finite count, not tail length)
+        let mut losses = vec![5.0f32; 18];
+        losses.push(f32::NAN);
+        losses.push(2.0);
+        assert_eq!(tail_mean_loss(&losses), 2.0);
+        // all-nonfinite tail → NaN, short traces use the last step
+        losses[19] = f32::INFINITY;
+        assert!(tail_mean_loss(&losses).is_nan());
+        assert_eq!(tail_mean_loss(&[3.0]), 3.0);
+    }
+}

@@ -4,18 +4,59 @@
 //! embed every canonical caption once, embed held-out images, and classify
 //! each image to the nearest caption embedding (cosine).  Accuracy over
 //! concepts is the headline metric of Fig 1 / Fig 10.
+//!
+//! The classification core ([`nearest_class_accuracy`]) is embedding-space
+//! only and un-gated: the PJRT path feeds it artifact-encoded embeddings
+//! ([`zero_shot_accuracy`]), the native path feeds it
+//! `train::ClipTrainModel` embeddings.
 
-use crate::data::SyntheticClip;
-use crate::runtime::Artifact;
-use anyhow::Result;
+/// Cosine-similarity argmax classification over flat embedding buffers.
+///
+/// `img_embs` is `[n_eval, edim]` row-major, `class_embs` is
+/// `[n_classes, edim]` row-major, `labels[i]` is the true class of eval
+/// row `i`.  Embeddings are assumed L2-normalized (dot = cosine).
+pub fn nearest_class_accuracy(
+    img_embs: &[f32],
+    class_embs: &[f32],
+    edim: usize,
+    labels: &[usize],
+) -> f32 {
+    assert!(edim > 0, "embedding dim must be positive");
+    assert_eq!(img_embs.len(), labels.len() * edim, "eval embedding shape");
+    assert_eq!(class_embs.len() % edim, 0, "class embedding shape");
+    let n_classes = class_embs.len() / edim;
+    if labels.is_empty() || n_classes == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let emb = &img_embs[i * edim..(i + 1) * edim];
+        let mut best = 0usize;
+        let mut best_sim = f32::NEG_INFINITY;
+        for k in 0..n_classes {
+            let ce = &class_embs[k * edim..(k + 1) * edim];
+            let sim: f32 = emb.iter().zip(ce).map(|(a, b)| a * b).sum();
+            if sim > best_sim {
+                best_sim = sim;
+                best = k;
+            }
+        }
+        if best == label {
+            correct += 1;
+        }
+    }
+    correct as f32 / labels.len() as f32
+}
 
-/// Cosine-similarity argmax classification accuracy.
+/// PJRT-path zero-shot accuracy: encode canonical captions + eval images
+/// through the AOT artifact, then classify with the shared core.
+#[cfg(feature = "pjrt")]
 pub fn zero_shot_accuracy(
-    artifact: &Artifact,
+    artifact: &crate::runtime::Artifact,
     params: &[Vec<f32>],
-    data: &SyntheticClip,
+    data: &crate::data::SyntheticClip,
     per_concept: usize,
-) -> Result<f32> {
+) -> anyhow::Result<f32> {
     let m = &artifact.manifest;
     let batch = m.batch;
     let edim = m.config.embed_dim;
@@ -35,47 +76,59 @@ pub fn zero_shot_accuracy(
             tokens.extend(data.canonical_caption(concept));
         }
         let (_, txt) = artifact.encode(params, &dummy_images, &tokens)?;
-        for i in 0..take {
-            class_embs[(c + i) * edim..(c + i + 1) * edim]
-                .copy_from_slice(&txt[i * edim..(i + 1) * edim]);
-        }
+        class_embs[c * edim..(c + take) * edim].copy_from_slice(&txt[..take * edim]);
         c += take;
     }
 
-    // 2) eval images, batched + padded.
+    // 2) eval images, batched + padded, gathered into one flat buffer.
     let eval = data.eval_set(per_concept);
     let n_eval = eval.concepts.len();
-    let mut correct = 0usize;
+    let mut eval_embs = vec![0.0f32; n_eval * edim];
     let mut idx = 0;
     while idx < n_eval {
         let take = batch.min(n_eval - idx);
         let mut images = vec![0.0f32; batch * img_len];
         let mut tokens = vec![0i32; batch * m.config.seq];
         for i in 0..take {
-            images[i * img_len..(i + 1) * img_len]
-                .copy_from_slice(&eval.images[(idx + i) * img_len..(idx + i + 1) * img_len]);
+            images[i * img_len..(i + 1) * img_len].copy_from_slice(
+                &eval.images[(idx + i) * img_len..(idx + i + 1) * img_len],
+            );
             tokens[i * m.config.seq..(i + 1) * m.config.seq].copy_from_slice(
                 &eval.tokens[(idx + i) * m.config.seq..(idx + i + 1) * m.config.seq],
             );
         }
         let (img_embs, _) = artifact.encode(params, &images, &tokens)?;
-        for i in 0..take {
-            let emb = &img_embs[i * edim..(i + 1) * edim];
-            let mut best = 0usize;
-            let mut best_sim = f32::NEG_INFINITY;
-            for k in 0..n_concepts {
-                let ce = &class_embs[k * edim..(k + 1) * edim];
-                let sim: f32 = emb.iter().zip(ce).map(|(a, b)| a * b).sum();
-                if sim > best_sim {
-                    best_sim = sim;
-                    best = k;
-                }
-            }
-            if best == eval.concepts[idx + i] {
-                correct += 1;
-            }
-        }
+        eval_embs[idx * edim..(idx + take) * edim].copy_from_slice(&img_embs[..take * edim]);
         idx += take;
     }
-    Ok(correct as f32 / n_eval as f32)
+
+    Ok(nearest_class_accuracy(&eval_embs, &class_embs, edim, &eval.concepts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifies_by_cosine_argmax() {
+        // 3 orthogonal classes in 3-d; eval rows slightly noisy copies
+        let class_embs = vec![
+            1.0, 0.0, 0.0, //
+            0.0, 1.0, 0.0, //
+            0.0, 0.0, 1.0,
+        ];
+        let img_embs = vec![
+            0.9, 0.1, 0.0, // class 0
+            0.1, 0.9, 0.1, // class 1
+            0.0, 0.2, 0.9, // class 2
+            0.9, 0.0, 0.1, // class 0 again, mislabeled as 1 below
+        ];
+        let acc = nearest_class_accuracy(&img_embs, &class_embs, 3, &[0, 1, 2, 1]);
+        assert!((acc - 0.75).abs() < 1e-6, "3 of 4 correct, got {acc}");
+    }
+
+    #[test]
+    fn empty_eval_is_zero() {
+        assert_eq!(nearest_class_accuracy(&[], &[1.0, 0.0], 2, &[]), 0.0);
+    }
 }

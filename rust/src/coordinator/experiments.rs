@@ -8,13 +8,11 @@
 //! EXPERIMENTS.md for recorded paper-vs-measured outcomes.
 
 use crate::config::{OptimizerKind, ScalerKind, TrainConfig};
+use crate::coordinator::common::{spike_cfg, spike_shifts};
 use crate::coordinator::trainer::{RunResult, Trainer};
-use crate::data::Shift;
 use crate::quant;
 use crate::runtime::Runtime;
-use crate::telemetry::{
-    detect_loss_spikes, detect_rms_spikes, lead_lag_from_events, SpikeConfig,
-};
+use crate::telemetry::{detect_loss_spikes, detect_rms_spikes, lead_lag_from_events};
 use crate::tensor::Rng;
 use anyhow::{bail, Result};
 
@@ -73,47 +71,16 @@ impl ExpCtx {
     }
 }
 
-/// The stuck-in-the-past trigger schedule: abrupt input-gain changes late
-/// in the run (post-warmup), when β₂ history is long and LR is still high.
-fn spike_shifts(steps: u64) -> Vec<Shift> {
-    let s1 = steps * 55 / 100;
-    let s2 = steps * 70 / 100;
-    let s3 = steps * 85 / 100;
-    vec![
-        Shift { at_step: s1, image_gain: 6.0, remap_concepts: false },
-        Shift { at_step: s2, image_gain: 1.0 / 6.0, remap_concepts: true },
-        Shift { at_step: s3, image_gain: 8.0, remap_concepts: false },
-    ]
-}
-
-fn spike_cfg(steps: u64) -> SpikeConfig {
-    SpikeConfig { burn_in: (steps / 8).max(20), ..Default::default() }
-}
-
 fn count_spikes(res: &RunResult, steps: u64) -> usize {
     detect_loss_spikes(&res.sink.loss_trace(), &spike_cfg(steps)).len()
 }
 
+/// The figure-experiment listing (delegates to the shared registry).
 pub fn list() -> Vec<(&'static str, &'static str)> {
-    vec![
-        ("fig1-int8", "zero-shot acc vs scale: bf16 vs LLM.int8 vs SwitchBack (int8)"),
-        ("fig1-fp8", "zero-shot acc vs scale: bf16 vs tensor-wise fp8 vs SwitchBack (fp8)"),
-        ("fig2", "loss curves for the fig1 runs (reads fig1 logs)"),
-        ("fig5-divergence", "fp8 tensor-wise rescue attempts: gradclip / kq-norm / zero-init layer-scale"),
-        ("fig5-magnitude", "per-block feature magnitudes, init vs end, ± layer-scale"),
-        ("fig6", "loss spikes vs MODEL SIZE × β2"),
-        ("fig7", "loss spikes vs BATCH SIZE × β2"),
-        ("fig8", "loss spikes vs LEARNING RATE × β2"),
-        ("fig9", "RMS_t spikes precede loss spikes (patch embedding)"),
-        ("fig10", "StableAdamW vs gradient clipping vs β2 (loss + accuracy)"),
-        ("fig11", "loss spikes co-occur with activation/grad spikes + scaler drops"),
-        ("fig14", "gradient/activation mean+max through training, ± layer-scale"),
-        ("fig15", "β2 warmup schedule 1−t^−λ does not help"),
-        ("fig16", "lead-lag statistics pooled over β2 (larger model)"),
-        ("fig17", "lead-lag statistics pooled over β2 (smaller model)"),
-        ("fig21", "control: mid-transformer RMS does NOT predict loss spikes"),
-        ("appc-variance", "quantization noise variance grows ∝ inner dim k (eq. 14)"),
-    ]
+    crate::coordinator::registry::figure_experiments()
+        .into_iter()
+        .map(|e| (e.name, e.desc))
+        .collect()
 }
 
 pub fn run_experiment(ctx: &ExpCtx, name: &str) -> Result<()> {
@@ -373,7 +340,11 @@ fn fig9(ctx: &ExpCtx) -> Result<()> {
 
 fn fig16_like(ctx: &ExpCtx, exp: &str, size: &str, use_mid_control: bool) -> Result<()> {
     let steps = ctx.steps_or(260);
-    let which = if use_mid_control { "mid-transformer control tensor (Fig 21)" } else { "patch embedding" };
+    let which = if use_mid_control {
+        "mid-transformer control tensor (Fig 21)"
+    } else {
+        "patch embedding"
+    };
     println!("== {exp}: pooled lead-lag statistics over β2 sweeps — probe: {which} ==");
     let betas = [0.999f32, 0.998, 0.995];
     let mut all_loss_spikes = vec![];

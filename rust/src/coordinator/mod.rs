@@ -1,16 +1,27 @@
 //! The L3 coordinator: training-loop orchestration + experiment sweeps.
 //!
-//! * [`trainer`] — the full training loop over an AOT artifact: data →
-//!   PJRT step → (optional loss-scaler) → (optional grad clip) →
-//!   optimizer → telemetry.
-//! * [`eval`] — zero-shot-style evaluation (classify eval images against
-//!   each concept's canonical caption embedding — the ImageNet-80-prompt
-//!   analogue).
-//! * [`experiments`] — the registry mapping every paper figure to a set of
-//!   runs and a printed summary (DESIGN.md experiment index).
+//! * [`common`] — training policy shared by *both* training paths (PJRT
+//!   artifact runs and the native `crate::train` subsystem): optimizer
+//!   construction from [`crate::config::TrainHyper`], the deterministic
+//!   spike-trigger shift schedule, and run-scaled spike detection.
+//! * [`registry`] — the experiment/scenario registry (un-gated listing).
+//! * [`eval`] — zero-shot-style evaluation; the nearest-class core is
+//!   un-gated and shared with the native path.
+//! * [`trainer`] (feature `pjrt`) — the full training loop over an AOT
+//!   artifact: data → PJRT step → (optional loss-scaler) → (optional grad
+//!   clip) → optimizer → telemetry.
+//! * [`experiments`] (feature `pjrt`) — the runners mapping every paper
+//!   figure to a set of runs and a printed summary (DESIGN.md experiment
+//!   index).
 
+pub mod common;
 pub mod eval;
+pub mod registry;
+
+#[cfg(feature = "pjrt")]
 pub mod experiments;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
+#[cfg(feature = "pjrt")]
 pub use trainer::{RunResult, Trainer};

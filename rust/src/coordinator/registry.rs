@@ -1,0 +1,85 @@
+//! The experiment registry, shared between the PJRT figure experiments
+//! (`coordinator::experiments`, feature `pjrt`) and the native training
+//! scenarios (`crate::train`, no feature).
+//!
+//! Keeping the *listing* un-gated means `switchback help`-adjacent
+//! surfaces (and docs generated from them) show the full experiment
+//! catalogue even in offline builds, and the two paths cannot drift into
+//! separately-maintained name tables.
+
+/// One registry entry: a runnable experiment or scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExpEntry {
+    pub name: &'static str,
+    pub desc: &'static str,
+    /// true ⇒ needs the PJRT runtime + AOT artifacts (`exp` subcommand);
+    /// false ⇒ runs on the native substrate (`train` subcommand).
+    pub needs_pjrt: bool,
+}
+
+/// The paper-figure experiments (run via `switchback exp`, feature `pjrt`).
+pub fn figure_experiments() -> Vec<ExpEntry> {
+    let f = |name, desc| ExpEntry { name, desc, needs_pjrt: true };
+    vec![
+        f("fig1-int8", "zero-shot acc vs scale: bf16 vs LLM.int8 vs SwitchBack (int8)"),
+        f("fig1-fp8", "zero-shot acc vs scale: bf16 vs tensor-wise fp8 vs SwitchBack (fp8)"),
+        f("fig2", "loss curves for the fig1 runs (reads fig1 logs)"),
+        f(
+            "fig5-divergence",
+            "fp8 tensor-wise rescue attempts: gradclip / kq-norm / zero-init layer-scale",
+        ),
+        f("fig5-magnitude", "per-block feature magnitudes, init vs end, ± layer-scale"),
+        f("fig6", "loss spikes vs MODEL SIZE × β2"),
+        f("fig7", "loss spikes vs BATCH SIZE × β2"),
+        f("fig8", "loss spikes vs LEARNING RATE × β2"),
+        f("fig9", "RMS_t spikes precede loss spikes (patch embedding)"),
+        f("fig10", "StableAdamW vs gradient clipping vs β2 (loss + accuracy)"),
+        f("fig11", "loss spikes co-occur with activation/grad spikes + scaler drops"),
+        f("fig14", "gradient/activation mean+max through training, ± layer-scale"),
+        f("fig15", "β2 warmup schedule 1−t^−λ does not help"),
+        f("fig16", "lead-lag statistics pooled over β2 (larger model)"),
+        f("fig17", "lead-lag statistics pooled over β2 (smaller model)"),
+        f("fig21", "control: mid-transformer RMS does NOT predict loss spikes"),
+        f("appc-variance", "quantization noise variance grows ∝ inner dim k (eq. 14)"),
+    ]
+}
+
+/// The native training scenarios (run via `switchback train`, no PJRT).
+pub fn native_scenarios() -> Vec<ExpEntry> {
+    let n = |name, desc| ExpEntry { name, desc, needs_pjrt: false };
+    vec![
+        n(
+            "train-smoke",
+            "short native CLIP run per precision kind; asserts the loss decreases",
+        ),
+        n(
+            "train-spikes",
+            "shift-schedule spike scenario: AdamW vs StableAdamW spike counts \
+             (SwitchBack vs Standard kinds), BENCH_train.json",
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_across_both_paths() {
+        let mut names: Vec<&str> = figure_experiments()
+            .iter()
+            .chain(native_scenarios().iter())
+            .map(|e| e.name)
+            .collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate experiment names");
+    }
+
+    #[test]
+    fn gating_is_recorded() {
+        assert!(figure_experiments().iter().all(|e| e.needs_pjrt));
+        assert!(native_scenarios().iter().all(|e| !e.needs_pjrt));
+    }
+}

@@ -12,12 +12,13 @@
 //! 6. log everything to the metrics sink (the figures regenerate from
 //!    these logs).
 
-use crate::config::{OptimizerKind, ScalerKind, TrainConfig};
+use crate::config::{ScalerKind, TrainConfig};
+use crate::coordinator::common::{build_optimizer, tail_mean_loss};
 use crate::coordinator::eval::zero_shot_accuracy;
 use crate::data::{DataConfig, SyntheticClip};
 use crate::optim::scaler::{DynamicGlobalScaler, FixedTensorScaler, ScaleDecision};
 use crate::optim::schedules::LrSchedule;
-use crate::optim::{clip_global_norm, AdamW, AdamWConfig, Lion, LionConfig, Optimizer};
+use crate::optim::{clip_global_norm, Optimizer};
 use crate::runtime::{Artifact, Runtime};
 use crate::telemetry::{MetricsSink, StepRecord, TensorProbe};
 use anyhow::Result;
@@ -79,28 +80,7 @@ impl<'rt> Trainer<'rt> {
 
     fn build_optimizer(&self, sizes: &[usize]) -> Box<dyn Optimizer> {
         let metas = self.artifact.param_metas();
-        match self.cfg.optimizer {
-            OptimizerKind::Adamw | OptimizerKind::StableAdamw => {
-                let acfg = AdamWConfig {
-                    beta1: self.cfg.beta1,
-                    beta2: self.cfg.beta2,
-                    eps: 1e-6,
-                    weight_decay: self.cfg.weight_decay,
-                    update_clipping: self.cfg.optimizer == OptimizerKind::StableAdamw,
-                    beta2_schedule_lambda: self.cfg.beta2_lambda,
-                };
-                Box::new(AdamW::new(acfg, &metas, sizes))
-            }
-            OptimizerKind::Lion => Box::new(Lion::new(
-                LionConfig {
-                    beta1: self.cfg.beta1,
-                    beta2: self.cfg.beta2,
-                    weight_decay: self.cfg.weight_decay,
-                },
-                &metas,
-                sizes,
-            )),
-        }
+        build_optimizer(&self.cfg.hyper(), &metas, sizes)
     }
 
     /// Run the configured number of steps.  `verbose` prints a progress
@@ -235,12 +215,7 @@ impl<'rt> Trainer<'rt> {
         };
 
         let losses = sink.loss_trace();
-        let tail_n = (losses.len() / 10).max(1);
-        let tail_loss = losses[losses.len() - tail_n..]
-            .iter()
-            .filter(|v| v.is_finite())
-            .sum::<f32>()
-            / tail_n as f32;
+        let tail_loss = tail_mean_loss(&losses);
         Ok(RunResult {
             config: self.cfg.clone(),
             final_loss: *losses.last().unwrap_or(&f32::NAN),

@@ -20,7 +20,7 @@
 //! spike trigger on a short schedule (the paper's runs are 20k iterations;
 //! ours are hundreds).
 
-use crate::tensor::Rng;
+use crate::tensor::{Matrix, Rng};
 
 /// One scheduled distribution shift.
 #[derive(Debug, Clone)]
@@ -82,6 +82,25 @@ pub struct Batch {
     pub tokens: Vec<i32>,
     /// concept id per example (for eval bookkeeping)
     pub concepts: Vec<usize>,
+}
+
+impl Batch {
+    /// Number of examples in the batch.
+    pub fn len(&self) -> usize {
+        self.concepts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.concepts.is_empty()
+    }
+
+    /// The images as a `[len·patches, patch_dim]` matrix — exactly the
+    /// layout the patch-embedding linear consumes (native training path).
+    pub fn images_matrix(&self, patch_dim: usize) -> Matrix {
+        assert!(patch_dim > 0, "patch_dim must be positive");
+        assert_eq!(self.images.len() % patch_dim, 0, "patch_dim mismatch");
+        Matrix::from_vec(self.images.len() / patch_dim, patch_dim, self.images.clone())
+    }
 }
 
 /// The synthetic corpus stream.
@@ -247,6 +266,11 @@ mod tests {
         assert_eq!(b.tokens.len(), 5 * 16);
         assert_eq!(b.concepts.len(), 5);
         assert!(b.tokens.iter().all(|&t| (0..512).contains(&t)));
+        assert_eq!(b.len(), 5);
+        assert!(!b.is_empty());
+        let m = b.images_matrix(48);
+        assert_eq!((m.rows, m.cols), (5 * 16, 48));
+        assert_eq!(m.data, b.images);
     }
 
     #[test]

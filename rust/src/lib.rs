@@ -18,7 +18,12 @@
 //!   - [`quant`]/[`gemm`]/[`nn`] are the *measured-speed substrate*: native
 //!     int8/f32 GEMMs and hand-written fwd/bwd linear-layer variants that
 //!     regenerate the paper's Fig 3/4/13 speed results on this hardware,
-//!   - [`coordinator`] orchestrates training runs and experiment sweeps,
+//!   - [`coordinator`] orchestrates training runs and experiment sweeps
+//!     and holds the training policy shared by both training paths,
+//!   - [`train`] is the **native end-to-end training subsystem**: a
+//!     dual-tower CLIP model on the measured-speed substrate with a
+//!     hand-written InfoNCE gradient, data-parallel gradient
+//!     accumulation, and the full optimizer/telemetry stack — no PJRT,
 //!   - [`serve`] is the first runtime subsystem *off* the training path: a
 //!     batched int8 embedding-serving engine (dynamic micro-batcher +
 //!     forward-only encoder + worker pool + sharded LRU cache) built on
@@ -27,12 +32,12 @@
 //! Python never runs on the training path: `make artifacts` lowers the
 //! model once; the `switchback` binary is then self-contained.
 //!
-//! The [`runtime`] and [`coordinator`] modules need the PJRT toolchain and
-//! are gated behind the `pjrt` cargo feature; everything else (including
+//! The [`runtime`] module and the artifact-driven parts of
+//! [`coordinator`] need the PJRT toolchain and are gated behind the
+//! `pjrt` cargo feature; everything else (including the native trainer,
 //! the serving engine and all benches) builds and tests without it.
 
 pub mod config;
-#[cfg(feature = "pjrt")]
 pub mod coordinator;
 pub mod data;
 pub mod gemm;
@@ -44,6 +49,7 @@ pub mod runtime;
 pub mod serve;
 pub mod telemetry;
 pub mod tensor;
+pub mod train;
 pub mod util;
 
 pub use config::{OptimizerKind, TrainConfig};

@@ -1,30 +1,40 @@
 //! `switchback` — CLI for the SwitchBack + StableAdamW reproduction.
 //!
 //! Subcommands:
-//! * `train <artifact> [--steps N --lr X --optimizer K ...]`  (pjrt)
+//! * `train [--kinds A,B --optimizers X,Y ...]` — native end-to-end CLIP
+//!   training on the measured-speed substrate; writes BENCH_train.json
+//! * `train-aot <artifact> [...]`    — one AOT training run  (pjrt)
 //! * `exp <name> | --list | --all`   — regenerate a paper figure  (pjrt)
 //! * `info <artifact>`               — inspect an artifact manifest  (pjrt)
 //! * `serve [--kind K ...]`          — serving-engine smoke run
 //! * `loadgen [--requests N ...]`    — closed-loop serving benchmark,
 //!   writes BENCH_serve.json
+//! * `benchdiff <baseline> <new>`    — bench-regression gate over the
+//!   BENCH_*.json artifacts (the CI gate behind scripts/check_bench.sh)
 //!
-//! `train`/`exp`/`info` execute AOT artifacts and need the `pjrt` cargo
-//! feature; `serve`/`loadgen` run entirely on the native substrate.
+//! `train-aot`/`exp`/`info` execute AOT artifacts and need the `pjrt`
+//! cargo feature; everything else runs entirely on the native substrate.
 //!
 //! Argument parsing is hand-rolled (offline build: no clap) — see
 //! `rust/src/util` for the other in-tree substrates.
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use switchback::config::OptimizerKind;
+use switchback::coordinator::common::spike_shifts;
+use switchback::coordinator::registry;
 use switchback::nn::LinearKind;
 use switchback::serve::{
     run_loadgen, write_bench_json, BatchPolicy, EncodeInput, EncoderConfig, Engine,
     LoadgenConfig, ServeConfig,
 };
 use switchback::tensor::Rng;
+use switchback::train::{write_bench_train_json, NativeTrainConfig, NativeTrainer};
+use switchback::util::json;
+use switchback::util::regression::{compare_bench, DEFAULT_TOLERANCE};
 
 #[cfg(feature = "pjrt")]
-use switchback::config::{OptimizerKind, ScalerKind, TrainConfig};
+use switchback::config::{ScalerKind, TrainConfig};
 #[cfg(feature = "pjrt")]
 use switchback::coordinator::experiments::{self, ExpCtx};
 #[cfg(feature = "pjrt")]
@@ -39,15 +49,48 @@ switchback — Stable and low-precision training for large-scale vision-language
 models (NeurIPS 2023), rust+JAX+Pallas reproduction.
 
 USAGE:
-  switchback train <artifact> [OPTIONS]     one training run        [pjrt]
+  switchback train [scenario] [OPTIONS]     native end-to-end CLIP training
+                                            (kinds × optimizers matrix,
+                                            writes BENCH_train.json)
+  switchback train --list                   list native scenarios
+  switchback train-aot <artifact> [OPTIONS] one AOT training run    [pjrt]
   switchback exp <name> [OPTIONS]           regenerate a paper figure [pjrt]
   switchback exp --list                     list experiments        [pjrt]
   switchback exp --all [--steps N]          run every experiment    [pjrt]
   switchback info <artifact>                inspect an artifact manifest [pjrt]
   switchback serve [OPTIONS]                serving-engine smoke run
   switchback loadgen [OPTIONS]              closed-loop serving benchmark
+  switchback benchdiff <baseline> <new>     bench-regression gate
+                                            [--tol X --strict]
 
-TRAIN OPTIONS:
+TRAIN OPTIONS (native):
+  --steps N              (default: 200)
+  --batch N              examples per step (default: 32)
+  --kinds A,B,...        precision kinds to run (default:
+                         switchback,standard)
+  --optimizers A,B,...   adamw | stable_adamw | lion
+                         (default: stable_adamw)
+  --shards N             data-parallel gradient-accumulation shards
+                         (default: 4; partition is thread-count
+                         independent — workers via SWITCHBACK_THREADS)
+  --warmup N             (default: steps/4)
+  --lr X                 (default: 1e-3)
+  --weight-decay X       (default: 0.1)
+  --beta1 X --beta2 X    (defaults: 0.9, 0.999)
+  --beta2-lambda X       β₂ schedule 1−t^−λ (off by default)
+  --grad-clip X          global-norm clipping (off by default)
+  --seed N               (default: 42)
+  --with-shifts          inject the stuck-in-the-past shift schedule
+                         (the spike scenario)
+  --eval-per-concept N   final zero-shot eval size (default: 2, 0=off)
+  --metrics PATH         write per-run JSONL metrics
+  --out PATH             report path (default: BENCH_train.json)
+  --assert-improves      exit nonzero unless every run's loss decreased
+  --dim/--heads/--blocks/--embed-dim/--patches/--patch-dim/--text-seq/--vocab
+                         model shape (defaults: 64/4/2/32, 8/32/8/256)
+  --quiet
+
+TRAIN-AOT OPTIONS:
   --artifact-dir DIR     (default: artifacts)
   --steps N              (default: 300)
   --warmup N             (default: steps/4)
@@ -97,6 +140,8 @@ SERVE / LOADGEN OPTIONS:
 const VALUE_FLAGS: &[&str] = &[
     "--artifact-dir",
     "--steps",
+    "--batch",
+    "--shards",
     "--warmup",
     "--lr",
     "--weight-decay",
@@ -104,10 +149,12 @@ const VALUE_FLAGS: &[&str] = &[
     "--beta2",
     "--beta2-lambda",
     "--optimizer",
+    "--optimizers",
     "--grad-clip",
     "--scaler",
     "--seed",
     "--metrics",
+    "--eval-per-concept",
     "--out-dir",
     "--kind",
     "--kinds",
@@ -120,6 +167,7 @@ const VALUE_FLAGS: &[&str] = &[
     "--workers",
     "--cache-capacity",
     "--out",
+    "--tol",
     "--dim",
     "--heads",
     "--blocks",
@@ -137,6 +185,8 @@ const BOOL_FLAGS: &[&str] = &[
     "--quiet",
     "--with-shifts",
     "--no-cache",
+    "--assert-improves",
+    "--strict",
     "-v",
     "-q",
 ];
@@ -185,7 +235,6 @@ impl Args {
         }
     }
 
-    #[cfg(feature = "pjrt")]
     fn opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
         match self.flags.get(key) {
             None => Ok(None),
@@ -222,9 +271,9 @@ fn parse_count(s: &str) -> Option<usize> {
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_train(args: &Args) -> Result<()> {
+fn cmd_train_aot(args: &Args) -> Result<()> {
     let Some(artifact) = args.positional.first() else {
-        bail!("train: missing <artifact> (e.g. switchback_int8_small_b32)");
+        bail!("train-aot: missing <artifact> (e.g. switchback_int8_small_b32)");
     };
     let steps: u64 = args.get("steps", 300)?;
     let seed: u64 = args.get("seed", 0)?;
@@ -337,13 +386,254 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Native end-to-end training: the kinds × optimizers scenario on the
+/// measured-speed substrate (no PJRT).  The default run is the paper's
+/// acceptance story — SwitchBack vs Standard under StableAdamW; add
+/// `--with-shifts --optimizers adamw,stable_adamw` for the spike
+/// comparison.  Writes BENCH_train.json.
+fn cmd_train(args: &Args) -> Result<()> {
+    if args.has("--list") {
+        println!("native training scenarios (no pjrt; `switchback train <name>`):");
+        for e in registry::native_scenarios() {
+            println!("  {:<14} {}", e.name, e.desc);
+        }
+        println!("\n(`switchback exp --list` shows the PJRT figure experiments)");
+        return Ok(());
+    }
+    // an optional scenario name (from coordinator::registry) presets the
+    // run matrix; explicit flags still override
+    let scenario = match args.positional.first().map(String::as_str) {
+        None => None,
+        Some(name) => {
+            if !registry::native_scenarios().iter().any(|e| e.name == name) {
+                bail!("unknown scenario {name:?} — see `switchback train --list`");
+            }
+            Some(name)
+        }
+    };
+    let steps: u64 =
+        args.get("steps", if scenario == Some("train-smoke") { 50 } else { 200 })?;
+    if steps == 0 {
+        bail!("--steps must be at least 1");
+    }
+    let kinds: Vec<LinearKind> = match args.flags.get("kind") {
+        Some(k) => vec![k.parse().map_err(|e: String| anyhow::anyhow!("{e}"))?],
+        None => {
+            let s: String = args.get("kinds", "switchback,standard".to_string())?;
+            csv_list(&s, "--kinds")?
+        }
+    };
+    if kinds.is_empty() {
+        bail!("--kinds must name at least one precision kind");
+    }
+    let opts_s: String = args.get("optimizers", String::new())?;
+    let optimizers: Vec<OptimizerKind> = if !opts_s.is_empty() {
+        csv_list(&opts_s, "--optimizers")?
+    } else if let Some(o) = args.flags.get("optimizer") {
+        vec![o.parse().map_err(|e: String| anyhow::anyhow!("{e}"))?]
+    } else if scenario == Some("train-spikes") {
+        vec![OptimizerKind::Adamw, OptimizerKind::StableAdamw]
+    } else {
+        vec![OptimizerKind::StableAdamw]
+    };
+    if optimizers.is_empty() {
+        bail!("--optimizers must name at least one optimizer");
+    }
+    let with_shifts = args.has("--with-shifts") || scenario == Some("train-spikes");
+    let assert_improves =
+        args.has("--assert-improves") || scenario == Some("train-smoke");
+    let out: String = args.get("out", "BENCH_train.json".to_string())?;
+    let verbose = !args.has("--quiet") && !args.has("-q");
+    let multi = kinds.len() * optimizers.len() > 1;
+
+    let build_cfg = |kind: LinearKind, optimizer: OptimizerKind| -> Result<NativeTrainConfig> {
+        let mut cfg = NativeTrainConfig::preset(kind, steps);
+        if scenario == Some("train-smoke") {
+            // the verify.sh smoke shape: small dims, seconds not minutes
+            cfg.batch = 16;
+            cfg.encoder.dim = 32;
+            cfg.encoder.blocks = 1;
+            cfg.encoder.embed_dim = 16;
+            cfg.encoder.patch_dim = 16;
+            cfg.encoder.vocab = 128;
+        }
+        cfg.hyper.warmup = args.get("warmup", steps / 4)?;
+        if cfg.hyper.warmup > steps {
+            bail!("--warmup must not exceed --steps");
+        }
+        cfg.hyper.lr = args.get("lr", cfg.hyper.lr)?;
+        cfg.hyper.weight_decay = args.get("weight-decay", cfg.hyper.weight_decay)?;
+        cfg.hyper.beta1 = args.get("beta1", cfg.hyper.beta1)?;
+        cfg.hyper.beta2 = args.get("beta2", cfg.hyper.beta2)?;
+        cfg.hyper.beta2_lambda = args.opt("beta2-lambda")?;
+        cfg.hyper.grad_clip = args.opt("grad-clip")?;
+        cfg.hyper.optimizer = optimizer;
+        cfg.hyper.seed = args.get("seed", cfg.hyper.seed)?;
+        cfg.encoder.seed = cfg.hyper.seed;
+        cfg.encoder.dim = args.get("dim", cfg.encoder.dim)?;
+        cfg.encoder.heads = args.get("heads", cfg.encoder.heads)?;
+        cfg.encoder.blocks = args.get("blocks", cfg.encoder.blocks)?;
+        cfg.encoder.embed_dim = args.get("embed-dim", cfg.encoder.embed_dim)?;
+        cfg.encoder.patches = args.get("patches", cfg.encoder.patches)?;
+        cfg.encoder.patch_dim = args.get("patch-dim", cfg.encoder.patch_dim)?;
+        cfg.encoder.text_seq = args.get("text-seq", cfg.encoder.text_seq)?;
+        cfg.encoder.vocab = args.get("vocab", cfg.encoder.vocab)?;
+        if cfg.encoder.dim == 0
+            || cfg.encoder.heads == 0
+            || cfg.encoder.dim % cfg.encoder.heads != 0
+        {
+            bail!("--dim must be a positive multiple of --heads");
+        }
+        if cfg.encoder.vocab == 0
+            || cfg.encoder.text_seq == 0
+            || cfg.encoder.patches == 0
+            || cfg.encoder.patch_dim == 0
+            || cfg.encoder.embed_dim == 0
+            || cfg.encoder.blocks == 0
+        {
+            bail!(
+                "--vocab/--text-seq/--patches/--patch-dim/--embed-dim/--blocks \
+                 must be positive"
+            );
+        }
+        cfg.batch = args.get("batch", cfg.batch)?;
+        if cfg.batch == 0 {
+            bail!("--batch must be at least 1");
+        }
+        cfg.grad_shards = args.get("shards", cfg.grad_shards)?;
+        if cfg.grad_shards == 0 {
+            bail!("--shards must be at least 1");
+        }
+        cfg.eval_per_concept = args.get("eval-per-concept", cfg.eval_per_concept)?;
+        cfg.shifts = if with_shifts { spike_shifts(steps) } else { vec![] };
+        cfg.metrics_path = args.flags.get("metrics").map(|base| {
+            if multi {
+                format!("{base}.{}_{}.jsonl", kind.label(), optimizer.label())
+            } else {
+                base.clone()
+            }
+        });
+        Ok(cfg)
+    };
+
+    let mut results = vec![];
+    let mut echo_cfg = None;
+    for &kind in &kinds {
+        for &optimizer in &optimizers {
+            let cfg = build_cfg(kind, optimizer)?;
+            if verbose {
+                println!(
+                    "== train: kind={} optimizer={} ==",
+                    kind.label(),
+                    optimizer.label()
+                );
+                println!("config: {}", cfg.to_json());
+            }
+            echo_cfg.get_or_insert_with(|| cfg.clone());
+            let mut trainer = NativeTrainer::new(cfg);
+            let res = trainer.run(verbose)?;
+            res.print();
+            results.push(res);
+        }
+    }
+
+    // scenario summaries across the matrix
+    for &optimizer in &optimizers {
+        let by = |k: &str| {
+            results
+                .iter()
+                .find(|r| r.kind == k && r.optimizer == optimizer.label())
+        };
+        if let (Some(sb), Some(std_r)) = (by("switchback"), by("standard")) {
+            println!(
+                "{}: switchback/standard steps/s ratio {:.2}×, tail-loss gap {:+.4}",
+                optimizer.label(),
+                sb.steps_per_sec / std_r.steps_per_sec.max(1e-9),
+                sb.tail_loss - std_r.tail_loss,
+            );
+        }
+    }
+    for &kind in &kinds {
+        let by = |o: &str| {
+            results.iter().find(|r| r.optimizer == o && r.kind == kind.label())
+        };
+        if let (Some(plain), Some(stable)) = (by("adamw"), by("stable_adamw")) {
+            println!(
+                "{}: loss spikes adamw {} vs stable_adamw {} (paper: StableAdamW \
+                 suppresses them)",
+                kind.label(),
+                plain.loss_spikes,
+                stable.loss_spikes,
+            );
+        }
+    }
+
+    write_bench_train_json(&out, echo_cfg.as_ref().expect("≥1 run"), &results)?;
+    println!("wrote {out}");
+
+    if assert_improves {
+        for r in &results {
+            if r.diverged {
+                bail!("train: {}/{} diverged", r.kind, r.optimizer);
+            }
+            if r.final_loss.is_nan() || r.final_loss >= r.first_loss {
+                bail!(
+                    "train: {}/{} loss did not decrease ({:.4} → {:.4})",
+                    r.kind,
+                    r.optimizer,
+                    r.first_loss,
+                    r.final_loss
+                );
+            }
+        }
+        println!("train smoke OK — loss decreased in every run");
+    }
+    Ok(())
+}
+
+/// Bench-regression gate: compare a fresh BENCH_*.json against a committed
+/// baseline (see scripts/check_bench.sh and DESIGN.md §CI).
+fn cmd_benchdiff(args: &Args) -> Result<()> {
+    let [old_path, new_path] = args.positional.as_slice() else {
+        bail!("benchdiff: expected exactly two paths: <baseline.json> <new.json>");
+    };
+    let tol: f64 = args.get("tol", DEFAULT_TOLERANCE)?;
+    if !(0.0..1.0).contains(&tol) {
+        bail!("--tol must be in [0, 1)");
+    }
+    let strict = args.has("--strict");
+    let load = |p: &str| -> Result<json::Value> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
+        json::parse(&text).map_err(|e| anyhow::anyhow!("cannot parse {p}: {e}"))
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    let regs = compare_bench(&old, &new, tol, strict)
+        .map_err(|e| anyhow::anyhow!("benchdiff: {e}"))?;
+    if regs.is_empty() {
+        println!(
+            "benchdiff OK — no regressions vs {old_path} (tol {:.0}%{})",
+            tol * 100.0,
+            if strict { ", strict" } else { "" }
+        );
+        Ok(())
+    } else {
+        for r in &regs {
+            eprintln!("REGRESSION: {r}");
+        }
+        bail!("benchdiff: {} regression(s) vs {old_path}", regs.len());
+    }
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn cmd_needs_pjrt(cmd: &str) -> Result<()> {
     bail!(
         "`{cmd}` executes AOT artifacts via PJRT, but this binary was built \
          without the `pjrt` feature.\nRebuild with `cargo build --release \
          --features pjrt` on a machine with the PJRT toolchain \
-         (rust/Cargo.toml explains the vendor/xla swap)."
+         (rust/Cargo.toml explains the vendor/xla swap).\nFor PJRT-free \
+         end-to-end training on the native substrate, use `switchback train`."
     )
 }
 
@@ -412,7 +702,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let image_len = cfg.encoder.image_len();
     let text_seq = cfg.encoder.text_seq;
     let vocab = cfg.encoder.vocab;
-    println!("starting engine: kind={} dim={} blocks={}", kind.label(), cfg.encoder.dim, cfg.encoder.blocks);
+    println!(
+        "starting engine: kind={} dim={} blocks={}",
+        kind.label(),
+        cfg.encoder.dim,
+        cfg.encoder.blocks
+    );
     let engine = Engine::start(cfg);
     println!(
         "encoder resident weights: {:.1} KiB (pre-quantized at load)",
@@ -538,16 +833,18 @@ fn main() -> Result<()> {
     };
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
-        #[cfg(feature = "pjrt")]
         "train" => cmd_train(&args),
+        #[cfg(feature = "pjrt")]
+        "train-aot" => cmd_train_aot(&args),
         #[cfg(feature = "pjrt")]
         "exp" => cmd_exp(&args),
         #[cfg(feature = "pjrt")]
         "info" => cmd_info(&args),
         #[cfg(not(feature = "pjrt"))]
-        "train" | "exp" | "info" => cmd_needs_pjrt(&cmd),
+        "train-aot" | "exp" | "info" => cmd_needs_pjrt(&cmd),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "benchdiff" => cmd_benchdiff(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -652,5 +949,37 @@ mod tests {
         let a = Args::parse(&argv(&["--no-cache"])).unwrap();
         let cfg = serve_config_from(&a, LinearKind::SwitchBack).unwrap();
         assert_eq!(cfg.cache_capacity, 0);
+    }
+
+    #[test]
+    fn optimizer_csv_parses_and_rejects() {
+        let opts = csv_list::<OptimizerKind>("adamw, stable_adamw", "o").unwrap();
+        assert_eq!(opts, vec![OptimizerKind::Adamw, OptimizerKind::StableAdamw]);
+        assert!(csv_list::<OptimizerKind>("adamw,bogus", "o").is_err());
+    }
+
+    #[test]
+    fn benchdiff_requires_two_paths() {
+        let a = Args::parse(&argv(&["only_one.json"])).unwrap();
+        let err = cmd_benchdiff(&a).unwrap_err();
+        assert!(err.to_string().contains("two paths"), "{err}");
+        let a = Args::parse(&argv(&["a.json", "b.json", "--tol", "2.0"])).unwrap();
+        let err = cmd_benchdiff(&a).unwrap_err();
+        assert!(err.to_string().contains("--tol"), "{err}");
+    }
+
+    #[test]
+    fn train_rejects_unknown_scenario() {
+        let a = Args::parse(&argv(&["bogus-scenario"])).unwrap();
+        let err = cmd_train(&a).unwrap_err();
+        assert!(err.to_string().contains("unknown scenario"), "{err}");
+    }
+
+    #[test]
+    fn train_bool_flags_are_known() {
+        let a = Args::parse(&argv(&["--assert-improves", "--strict", "--with-shifts"]))
+            .unwrap();
+        assert!(a.has("--assert-improves"));
+        assert!(a.has("--strict"));
     }
 }

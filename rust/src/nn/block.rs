@@ -133,6 +133,14 @@ pub struct BlockGrads {
     pub dw2: Matrix,
 }
 
+impl BlockGrads {
+    /// The six weight gradients in the same canonical order as
+    /// [`TransformerBlock::projections`].
+    pub fn into_array(self) -> [Matrix; 6] {
+        [self.dwq, self.dwk, self.dwv, self.dwo, self.dw1, self.dw2]
+    }
+}
+
 pub struct BlockCache {
     x: Matrix,
     ln1c: LnCache,
@@ -315,6 +323,24 @@ impl TransformerBlock {
                 Proj::Down => self.w2.forward_infer(h),
             }
         })
+    }
+
+    /// The six projection layers in canonical (q, k, v, o, up, down)
+    /// order — the order [`BlockGrads::into_array`] mirrors, so the
+    /// native trainer's parameter registry stays index-aligned.
+    pub fn projections(&self) -> [&Linear; 6] {
+        [&self.wq, &self.wk, &self.wv, &self.wo, &self.w1, &self.w2]
+    }
+
+    pub fn projections_mut(&mut self) -> [&mut Linear; 6] {
+        [
+            &mut self.wq,
+            &mut self.wk,
+            &mut self.wv,
+            &mut self.wo,
+            &mut self.w1,
+            &mut self.w2,
+        ]
     }
 
     /// Quantize all six projection weights once for forward-only serving.
@@ -567,7 +593,8 @@ mod tests {
     fn quantized_block_close_to_standard() {
         let mut rng = Rng::seed(92);
         let std_blk = TransformerBlock::new(16, 4, 4, LinearKind::Standard, &mut rng);
-        let mut sb_blk = TransformerBlock::new(16, 4, 4, LinearKind::SwitchBack, &mut Rng::seed(92));
+        let mut sb_blk =
+            TransformerBlock::new(16, 4, 4, LinearKind::SwitchBack, &mut Rng::seed(92));
         // share weights
         sb_blk.wq.w = std_blk.wq.w.clone();
         sb_blk.wk.w = std_blk.wk.w.clone();

@@ -16,7 +16,7 @@
 mod block;
 mod linear;
 
-pub use block::{BlockGrads, PreparedBlock, TransformerBlock};
+pub use block::{BlockCache, BlockGrads, PreparedBlock, TransformerBlock};
 pub use linear::{Linear, LinearCache, LinearKind, PreparedLinear, PreparedWeight};
 
 use crate::tensor::Matrix;
@@ -53,6 +53,45 @@ pub fn softmax_rows(m: &mut Matrix) {
     }
 }
 
+/// Mean-pool each item's `seq` consecutive rows: `[b·seq, dim]` →
+/// `[b, dim]`.  The single implementation behind the train model's
+/// forward/infer paths and the serving encoder — the bit-identical
+/// train/serve encoding contract depends on these sharing one body.
+pub fn mean_pool_rows(x: &Matrix, seq: usize, dim: usize) -> Matrix {
+    let b = x.rows / seq;
+    let mut pooled = Matrix::zeros(b, dim);
+    let inv = 1.0 / seq as f32;
+    for i in 0..b {
+        let prow = pooled.row_mut(i);
+        for t in 0..seq {
+            let xrow = x.row(i * seq + t);
+            for (p, &v) in prow.iter_mut().zip(xrow) {
+                *p += v * inv;
+            }
+        }
+    }
+    pooled
+}
+
+/// L2-normalize rows in place (f64 norm accumulation, CLIP's unit-sphere
+/// embeddings); returns each row's pre-normalization norm.  All-zero rows
+/// are left untouched (their recorded norm is 0).
+pub fn l2_normalize_rows(m: &mut Matrix) -> Vec<f32> {
+    let mut norms = vec![0.0f32; m.rows];
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let norm = row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt() as f32;
+        norms[r] = norm;
+        if norm > 0.0 {
+            let inv = 1.0 / norm;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+    norms
+}
+
 /// Softmax backward: given `s = softmax(z)` and upstream `ds`, returns
 /// `dz = s ⊙ (ds − ⟨ds, s⟩)` row-wise, in place over `ds`.
 pub fn softmax_backward_rows(s: &Matrix, ds: &mut Matrix) {
@@ -84,6 +123,23 @@ mod tests {
             let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
             assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}");
         }
+    }
+
+    #[test]
+    fn mean_pool_and_l2_normalize() {
+        // 2 items × seq 2, dim 3
+        let x = Matrix::from_vec(
+            4,
+            3,
+            vec![1.0, 2.0, 3.0, 3.0, 2.0, 1.0, 0.0, 0.0, 0.0, 4.0, 0.0, 0.0],
+        );
+        let pooled = mean_pool_rows(&x, 2, 3);
+        assert_eq!(pooled.data, vec![2.0, 2.0, 2.0, 2.0, 0.0, 0.0]);
+        let mut m = Matrix::from_vec(2, 2, vec![3.0, 4.0, 0.0, 0.0]);
+        let norms = l2_normalize_rows(&mut m);
+        assert_eq!(norms, vec![5.0, 0.0]);
+        assert_eq!(m.row(0), &[0.6, 0.8]);
+        assert_eq!(m.row(1), &[0.0, 0.0], "zero row untouched");
     }
 
     #[test]

@@ -254,12 +254,13 @@ mod tests {
         let run = |mut opt: AdamW| {
             let mut p = vec![vec![0.0f32]];
             // quiet phase: tiny gradients
+            let quiet = [vec![1e-4f32]];
             for _ in 0..300 {
-                opt.step(&mut p, &vec![vec![1e-4]], 1e-3, None);
+                opt.step(&mut p, &quiet, 1e-3, None);
             }
             let before = p[0][0];
             // signal change: gradient jumps 4 orders of magnitude
-            let stats = opt.step(&mut p, &vec![vec![1.0f32]], 1e-3, None);
+            let stats = opt.step(&mut p, &[vec![1.0f32]], 1e-3, None);
             ((p[0][0] - before).abs(), stats.rms[0])
         };
         let (jump_plain, rms_plain) = run(mk(false));
@@ -282,7 +283,7 @@ mod tests {
         for _ in 0..200 {
             let mut g = vec![0.0f32; 64];
             rng.fill_normal(&mut g, 1.0);
-            let stats = opt.step(&mut p, &vec![g], 1e-4, None);
+            let stats = opt.step(&mut p, &[g], 1e-4, None);
             last = stats.rms[0];
         }
         assert!(last > 0.5 && last < 2.3, "stationary RMS should hover near 1: {last}");
@@ -301,7 +302,7 @@ mod tests {
         );
         let mut p = vec![vec![1.0f32], vec![1.0f32]];
         // zero gradient: only decay should act
-        opt.step(&mut p, &vec![vec![0.0], vec![0.0]], 0.1, None);
+        opt.step(&mut p, &[vec![0.0], vec![0.0]], 0.1, None);
         assert!(p[0][0] < 1.0, "decayed tensor should shrink");
         assert_eq!(p[1][0], 1.0, "no-decay tensor must not shrink");
     }

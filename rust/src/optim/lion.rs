@@ -92,7 +92,7 @@ mod tests {
         let mut opt = Lion::new(LionConfig::default(), &meta(1), &[2]);
         let mut p = vec![vec![0.0f32, 0.0]];
         // enormous gradient — update magnitude must still be exactly lr
-        opt.step(&mut p, &vec![vec![1e8, -1e8]], 0.01, None);
+        opt.step(&mut p, &[vec![1e8, -1e8]], 0.01, None);
         assert!((p[0][0] + 0.01).abs() < 1e-7);
         assert!((p[0][1] - 0.01).abs() < 1e-7);
     }
@@ -103,11 +103,12 @@ mod tests {
         // signal change is the same size as any other step.
         let mut opt = Lion::new(LionConfig::default(), &meta(1), &[1]);
         let mut p = vec![vec![0.0f32]];
+        let quiet = [vec![1e-4f32]];
         for _ in 0..300 {
-            opt.step(&mut p, &vec![vec![1e-4]], 1e-3, None);
+            opt.step(&mut p, &quiet, 1e-3, None);
         }
         let before = p[0][0];
-        opt.step(&mut p, &vec![vec![1.0]], 1e-3, None);
+        opt.step(&mut p, &[vec![1.0]], 1e-3, None);
         assert!((p[0][0] - before).abs() <= 1e-3 + 1e-7);
     }
 

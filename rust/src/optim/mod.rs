@@ -26,7 +26,8 @@ pub mod schedules;
 pub use adamw::{AdamW, AdamWConfig};
 pub use lion::{Lion, LionConfig};
 
-/// Per-tensor optimizer metadata (from the artifact manifest).
+/// Per-tensor optimizer metadata (from the artifact manifest, or built by
+/// the native trainer's parameter registry).
 #[derive(Debug, Clone)]
 pub struct ParamMeta {
     pub name: String,
@@ -34,6 +35,18 @@ pub struct ParamMeta {
     pub decay: bool,
     /// "patch_embed" | "embedding" | "weight" | "norm" | ... (telemetry tag)
     pub kind: String,
+}
+
+impl ParamMeta {
+    /// A decayed weight matrix.
+    pub fn weight(name: &str) -> Self {
+        Self { name: name.to_string(), decay: true, kind: "weight".into() }
+    }
+
+    /// A non-decayed tensor tagged `kind` (embeddings, norms, scalars).
+    pub fn no_decay(name: &str, kind: &str) -> Self {
+        Self { name: name.to_string(), decay: false, kind: kind.into() }
+    }
 }
 
 /// What a step reports back to telemetry.

@@ -15,8 +15,11 @@
 //! projection → L2 normalize.  This mirrors `python/compile/model.py`'s
 //! dual tower at serving-friendly scale.
 
-use crate::nn::{LinearKind, PreparedBlock, PreparedLinear, TransformerBlock};
 use crate::nn::Linear;
+use crate::nn::{
+    l2_normalize_rows, mean_pool_rows, LinearKind, PreparedBlock, PreparedLinear,
+    TransformerBlock,
+};
 use crate::tensor::{Matrix, Rng};
 
 /// Model shape + precision for the serving encoder.
@@ -72,37 +75,16 @@ struct Tower {
 }
 
 impl Tower {
-    /// `x [B*seq, dim]` → L2-normalized `[B, embed_dim]`.
+    /// `x [B*seq, dim]` → L2-normalized `[B, embed_dim]` (pool + normalize
+    /// via the shared `nn` helpers — the train model uses the same ones,
+    /// which is what keeps train/serve encodings bit-identical).
     fn encode(&self, mut x: Matrix, dim: usize) -> Matrix {
         for blk in &self.blocks {
             x = blk.forward(&x);
         }
-        let b = x.rows / self.seq;
-        // mean-pool each item's seq rows
-        let mut pooled = Matrix::zeros(b, dim);
-        let inv = 1.0 / self.seq as f32;
-        for i in 0..b {
-            let prow = pooled.row_mut(i);
-            for t in 0..self.seq {
-                let xrow = x.row(i * self.seq + t);
-                for (p, &v) in prow.iter_mut().zip(xrow) {
-                    *p += v * inv;
-                }
-            }
-        }
+        let pooled = mean_pool_rows(&x, self.seq, dim);
         let mut emb = self.out_proj.forward(&pooled);
-        // L2 normalize rows (CLIP's unit-sphere embeddings)
-        for r in 0..emb.rows {
-            let row = emb.row_mut(r);
-            let norm =
-                row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt() as f32;
-            if norm > 0.0 {
-                let inv = 1.0 / norm;
-                for v in row.iter_mut() {
-                    *v *= inv;
-                }
-            }
-        }
+        l2_normalize_rows(&mut emb);
         emb
     }
 }

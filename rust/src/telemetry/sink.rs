@@ -30,6 +30,9 @@ pub struct StepRecord {
     pub loss_scale: Option<f32>,
     pub skipped_tensors: usize,
     pub skipped_step: bool,
+    /// wall time of this step, ms (native trainer's per-step breakdown
+    /// lives in BENCH_train.json; this is the per-step total)
+    pub step_ms: Option<f32>,
 }
 
 impl StepRecord {
@@ -70,6 +73,9 @@ impl StepRecord {
         if self.skipped_step {
             w.field_bool("skipped_step", true);
         }
+        if let Some(ms) = self.step_ms {
+            w.field_f32("step_ms", ms);
+        }
         w.finish()
     }
 
@@ -91,6 +97,7 @@ impl StepRecord {
                 .get("skipped_step")
                 .and_then(Value::as_bool)
                 .unwrap_or(false),
+            step_ms: v.get("step_ms").and_then(Value::as_f64).map(|x| x as f32),
             ..Default::default()
         };
         if let Some(Value::Obj(m)) = v.get("rms") {
@@ -240,12 +247,14 @@ mod tests {
         );
         rec.loss_scale = Some(65536.0);
         rec.skipped_step = true;
+        rec.step_ms = Some(12.5);
         let back = StepRecord::from_json(&rec.to_json()).unwrap();
         let p = back.grad_probes.get("visual.patch_embed").unwrap();
         assert_eq!(p.max_abs, 7.0);
         assert!(p.nonfinite);
         assert_eq!(back.loss_scale, Some(65536.0));
         assert!(back.skipped_step);
+        assert_eq!(back.step_ms, Some(12.5));
     }
 
     #[test]

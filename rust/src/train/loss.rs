@@ -1,0 +1,251 @@
+//! The symmetric InfoNCE contrastive loss (CLIP's objective) with a
+//! hand-written gradient.
+//!
+//! Given L2-normalized image embeddings `I [B, e]`, text embeddings
+//! `T [B, e]` and a learnable log temperature `log_scale`, the logits are
+//! `L = s · I Tᵀ` with `s = min(exp(log_scale), 100)` (CLIP clamps the
+//! scale at 100).  The loss averages cross-entropy over rows
+//! (image → text retrieval) and over columns (text → image):
+//!
+//! ```text
+//! loss = 1/(2B) Σ_i [ −log softmax_row(L)_ii − log softmax_col(L)_ii ]
+//! ```
+//!
+//! Gradient (derived once, finite-difference tested below):
+//!
+//! ```text
+//! dL_ij   = ((P_ij − δ_ij) + (Q_ij − δ_ij)) / 2B      P = row softmax,
+//! d_img   = s · dL  T                                  Q = col softmax
+//! d_txt   = s · dLᵀ I
+//! d_logs  = s · Σ_ij dL_ij · (I Tᵀ)_ij   (0 when the clamp is active)
+//! ```
+
+use crate::gemm::{gemm_f32_nn, gemm_f32_nt};
+use crate::tensor::Matrix;
+
+/// CLIP's cap on the learned logit scale.
+pub const MAX_LOGIT_SCALE: f32 = 100.0;
+
+/// CLIP's logit-scale init: ln(1/0.07).
+pub fn init_log_scale() -> f32 {
+    (1.0f32 / 0.07).ln()
+}
+
+/// Loss value + gradients w.r.t. both embedding matrices and the log
+/// temperature.
+pub struct ContrastiveOut {
+    pub loss: f32,
+    /// in-batch image→text retrieval accuracy (argmax of each row hits
+    /// the diagonal) — the cheap per-step learning signal
+    pub acc: f32,
+    pub d_img: Matrix,
+    pub d_txt: Matrix,
+    pub d_log_scale: f32,
+}
+
+/// Row-wise `logsumexp` of `m` (numerically stable).
+fn logsumexp_rows(m: &Matrix) -> Vec<f32> {
+    (0..m.rows)
+        .map(|r| {
+            let row = m.row(r);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+            mx + sum.ln()
+        })
+        .collect()
+}
+
+/// Symmetric InfoNCE over a square in-batch similarity matrix.
+///
+/// `img` and `txt` must both be `[B, e]`; rows are expected (not
+/// required) to be L2-normalized.  Deterministic: every reduction runs
+/// in a fixed sequential order (the GEMMs parallelize only across
+/// independent output rows), so the result is identical under any
+/// `SWITCHBACK_THREADS` setting.
+pub fn clip_contrastive(img: &Matrix, txt: &Matrix, log_scale: f32) -> ContrastiveOut {
+    assert_eq!(img.rows, txt.rows, "towers disagree on batch size");
+    assert_eq!(img.cols, txt.cols, "towers disagree on embed dim");
+    let b = img.rows;
+    assert!(b > 0, "empty batch");
+    let clamped = log_scale.exp() > MAX_LOGIT_SCALE;
+    let s = log_scale.exp().min(MAX_LOGIT_SCALE);
+
+    // cosine similarities and logits
+    let sim = gemm_f32_nt(img, txt); // [B, B]
+    let mut logits = sim.clone();
+    for v in logits.data.iter_mut() {
+        *v *= s;
+    }
+    let lse_rows = logsumexp_rows(&logits);
+    let logits_t = logits.transpose();
+    let lse_cols = logsumexp_rows(&logits_t);
+
+    // loss + in-batch accuracy off the diagonal
+    let mut loss = 0.0f64;
+    let mut hits = 0usize;
+    for i in 0..b {
+        let diag = logits.at(i, i);
+        loss += 0.5 * ((lse_rows[i] - diag) as f64 + (lse_cols[i] - diag) as f64);
+        let row = logits.row(i);
+        let best = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        if row[i] == best {
+            hits += 1;
+        }
+    }
+    let loss = (loss / b as f64) as f32;
+
+    // dL = ((P − I) + (Q − I)) / 2B, built row/col softmaxes in place
+    let inv2b = 0.5 / b as f32;
+    let mut dlogits = Matrix::zeros(b, b);
+    for i in 0..b {
+        for j in 0..b {
+            let p = (logits.at(i, j) - lse_rows[i]).exp(); // row softmax
+            let q = (logits.at(i, j) - lse_cols[j]).exp(); // col softmax
+            let delta = if i == j { 2.0 } else { 0.0 };
+            dlogits.data[i * b + j] = (p + q - delta) * inv2b;
+        }
+    }
+
+    // chain rule through logits = s · I Tᵀ
+    let mut d_img = gemm_f32_nn(&dlogits, txt); // [B, e]
+    for v in d_img.data.iter_mut() {
+        *v *= s;
+    }
+    let mut d_txt = gemm_f32_nn(&dlogits.transpose(), img);
+    for v in d_txt.data.iter_mut() {
+        *v *= s;
+    }
+    let d_log_scale = if clamped {
+        0.0
+    } else {
+        let ds: f64 = dlogits
+            .data
+            .iter()
+            .zip(&sim.data)
+            .map(|(&d, &c)| d as f64 * c as f64)
+            .sum();
+        (ds * s as f64) as f32
+    };
+
+    ContrastiveOut { loss, acc: hits as f32 / b as f32, d_img, d_txt, d_log_scale }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn unit_rows(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        let mut m = Matrix::randn(rows, cols, 1.0, &mut rng);
+        for r in 0..rows {
+            let row = m.row_mut(r);
+            let n: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+            for v in row.iter_mut() {
+                *v /= n;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn perfect_alignment_beats_random() {
+        let img = unit_rows(8, 16, 1);
+        let txt = unit_rows(8, 16, 2);
+        let random = clip_contrastive(&img, &txt, 0.0).loss;
+        let aligned = clip_contrastive(&img, &img.clone(), 0.0).loss;
+        assert!(
+            aligned < random,
+            "aligned pairs must score lower loss: {aligned} vs {random}"
+        );
+        let hot = clip_contrastive(&img, &img.clone(), init_log_scale());
+        assert!(hot.loss < aligned, "sharper temperature separates further");
+        assert_eq!(hot.acc, 1.0);
+    }
+
+    #[test]
+    fn loss_is_near_log_b_for_orthogonal_embeddings() {
+        // embed dim ≫ batch: random unit rows are nearly orthogonal, so at
+        // scale 1 the logits are nearly uniform and loss ≈ ln(B)
+        let img = unit_rows(4, 512, 3);
+        let txt = unit_rows(4, 512, 4);
+        let out = clip_contrastive(&img, &txt, 0.0);
+        assert!((out.loss - (4.0f32).ln()).abs() < 0.15, "loss {}", out.loss);
+    }
+
+    /// Full finite-difference check of all three gradients.
+    #[test]
+    fn gradients_match_finite_difference() {
+        let img = unit_rows(5, 7, 10);
+        let txt = unit_rows(5, 7, 11);
+        let ls = 1.2f32;
+        let out = clip_contrastive(&img, &txt, ls);
+        let h = 1e-3;
+        for i in 0..img.data.len() {
+            let mut p = img.clone();
+            p.data[i] += h;
+            let mut m = img.clone();
+            m.data[i] -= h;
+            let fd = (clip_contrastive(&p, &txt, ls).loss
+                - clip_contrastive(&m, &txt, ls).loss)
+                / (2.0 * h);
+            assert!(
+                (out.d_img.data[i] - fd).abs() < 2e-3,
+                "d_img[{i}]: {} vs {fd}",
+                out.d_img.data[i]
+            );
+        }
+        for i in 0..txt.data.len() {
+            let mut p = txt.clone();
+            p.data[i] += h;
+            let mut m = txt.clone();
+            m.data[i] -= h;
+            let fd = (clip_contrastive(&img, &p, ls).loss
+                - clip_contrastive(&img, &m, ls).loss)
+                / (2.0 * h);
+            assert!(
+                (out.d_txt.data[i] - fd).abs() < 2e-3,
+                "d_txt[{i}]: {} vs {fd}",
+                out.d_txt.data[i]
+            );
+        }
+        let fd = (clip_contrastive(&img, &txt, ls + h).loss
+            - clip_contrastive(&img, &txt, ls - h).loss)
+            / (2.0 * h);
+        assert!(
+            (out.d_log_scale - fd).abs() < 2e-3,
+            "d_log_scale {} vs {fd}",
+            out.d_log_scale
+        );
+    }
+
+    #[test]
+    fn scale_clamp_zeroes_its_gradient() {
+        let img = unit_rows(3, 8, 20);
+        let txt = unit_rows(3, 8, 21);
+        let out = clip_contrastive(&img, &txt, 6.0); // exp(6) > 100
+        assert_eq!(out.d_log_scale, 0.0);
+        assert!(out.loss.is_finite());
+    }
+
+    /// Structural invariant: `Σ_ij dL_ij = 0` (each row of P and each
+    /// column of Q sums to 1, against the 2B identity subtractions).
+    /// With every text row identical (= t), row i of `d_img` is
+    /// `s·(Σ_j dL_ij)·t`, so the sum over all `d_img` rows equals
+    /// `s·(Σ_ij dL_ij)·t` — it must vanish per column.  A wrong delta
+    /// constant in the dlogits loop breaks this immediately.
+    #[test]
+    fn gradient_sums_vanish() {
+        let img = unit_rows(6, 12, 30);
+        let t_row = unit_rows(1, 12, 31);
+        let mut txt = Matrix::zeros(6, 12);
+        for r in 0..6 {
+            txt.row_mut(r).copy_from_slice(t_row.row(0));
+        }
+        let out = clip_contrastive(&img, &txt, 1.0);
+        for c in 0..12 {
+            let col_sum: f32 = (0..6).map(|r| out.d_img.at(r, c)).sum();
+            assert!(col_sum.abs() < 1e-4, "d_img column {c} sums to {col_sum}");
+        }
+    }
+}

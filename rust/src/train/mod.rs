@@ -1,0 +1,42 @@
+//! `train` — the native, PJRT-free end-to-end CLIP training subsystem
+//! (DESIGN.md §Train).
+//!
+//! The paper's headline results are *training* results: SwitchBack int8
+//! training matches bf16 within 0.1 pp, and StableAdamW suppresses the
+//! loss spikes AdamW suffers under distribution shift.  The PJRT path
+//! (`coordinator`, feature `pjrt`) validates those claims through the
+//! AOT'd JAX model, but needs a toolchain the offline tier-1 environment
+//! lacks.  This module closes the loop natively: the nn layer already has
+//! full hand-written backward passes for all four linear variants, so a
+//! dual-tower CLIP model built from [`crate::nn::TransformerBlock`]s can
+//! train end-to-end on the measured-speed substrate and *show* the
+//! loss/spike trajectories instead of only timing kernels.
+//!
+//! Composition (step loop in [`trainer`]):
+//!
+//! ```text
+//!  data (shift schedule) ──▶ sharded fwd ──▶ global InfoNCE ──▶ sharded
+//!  bwd ──▶ ordered grad accumulation ──▶ (grad clip) ──▶ optimizer
+//!  (AdamW / StableAdamW / Lion via coordinator::common) ──▶ telemetry
+//!  (RMS probes + spike detection + JSONL sink)
+//! ```
+//!
+//! * [`model`] — the trainable dual tower, seeded identically to
+//!   `serve::ClipEncoder` (a trained parameter vector drops straight into
+//!   the serving engine's world).
+//! * [`loss`] — symmetric InfoNCE with a hand-written, finite-difference
+//!   tested gradient.
+//! * [`trainer`] — the step loop, determinism guarantees, zero-shot eval
+//!   through the shared `coordinator::eval` core, and the
+//!   `BENCH_train.json` writer.
+
+pub mod loss;
+pub mod model;
+pub mod trainer;
+
+pub use loss::{clip_contrastive, ContrastiveOut};
+pub use model::ClipTrainModel;
+pub use trainer::{
+    forward_backward, write_bench_train_json, NativeRunResult, NativeTrainConfig,
+    NativeTrainer, StepOutput,
+};

@@ -1,0 +1,563 @@
+//! The trainable dual-tower CLIP model on the native substrate.
+//!
+//! Same architecture — and the *same seeding* — as the serving encoder
+//! (`serve::encoder::ClipEncoder`): input projection / token embedding →
+//! N pre-norm [`TransformerBlock`]s → mean-pool → output projection → L2
+//! normalize, with every projection routed through the precision-pluggable
+//! [`crate::nn::Linear`].  A freshly constructed `ClipTrainModel` and a
+//! `ClipEncoder` built from the same [`EncoderConfig`] encode identically
+//! (bit-for-bit; tested below), so a trained parameter vector drops
+//! straight into the serving engine's world.
+//!
+//! Trainable parameters are the projections, the token-embedding table
+//! and the logit scale; layernorm affine params stay at identity like the
+//! speed benches (`nn::block` does not emit LN grads — the projections
+//! dominate, and this keeps the backward exactly the Fig 4/13 workload).
+
+use crate::nn::{
+    l2_normalize_rows, mean_pool_rows, BlockCache, Linear, LinearCache,
+    TransformerBlock,
+};
+use crate::optim::ParamMeta;
+use crate::serve::EncoderConfig;
+use crate::tensor::{Matrix, Rng};
+
+/// Canonical per-block projection names (order of
+/// [`TransformerBlock::projections`]).
+pub const PROJ_NAMES: [&str; 6] = ["wq", "wk", "wv", "wo", "w1", "w2"];
+
+/// One tower's forward bookkeeping.
+struct TowerCache {
+    blocks: Vec<BlockCache>,
+    out: LinearCache,
+    /// pre-normalization row norms of the projected embeddings
+    norms: Vec<f32>,
+    /// normalized embeddings `[n, embed_dim]` (the tower output)
+    z: Matrix,
+}
+
+/// Everything one forward pass saves for the backward pass.
+pub struct FwdCache {
+    img_pe: LinearCache,
+    img_tower: TowerCache,
+    /// vocab-wrapped token ids, one per text-input row
+    txt_tokens: Vec<usize>,
+    txt_tower: TowerCache,
+}
+
+impl FwdCache {
+    /// Normalized image embeddings `[n, embed_dim]`.
+    pub fn img_z(&self) -> &Matrix {
+        &self.img_tower.z
+    }
+
+    /// Normalized text embeddings `[n, embed_dim]`.
+    pub fn txt_z(&self) -> &Matrix {
+        &self.txt_tower.z
+    }
+}
+
+/// The trainable dual-tower CLIP model.
+pub struct ClipTrainModel {
+    pub cfg: EncoderConfig,
+    pub patch_embed: Linear,
+    /// `[vocab, dim]` token-embedding table (lookup, not a matmul)
+    pub tok_embed: Matrix,
+    pub image_blocks: Vec<TransformerBlock>,
+    pub image_out: Linear,
+    pub text_blocks: Vec<TransformerBlock>,
+    pub text_out: Linear,
+    /// learnable log temperature (CLIP's logit scale)
+    pub log_scale: f32,
+}
+
+impl ClipTrainModel {
+    /// Deterministic init from `cfg.seed`, drawing the RNG streams in the
+    /// exact order `serve::ClipEncoder::new` does, so both construct the
+    /// same underlying f32 model (kind-independent, like serving).
+    pub fn new(cfg: EncoderConfig) -> Self {
+        assert_eq!(cfg.dim % cfg.heads, 0, "dim must divide by heads");
+        let mut rng = Rng::seed(cfg.seed);
+        let patch_embed = Linear::new(cfg.dim, cfg.patch_dim, cfg.kind, &mut rng);
+        let tok_embed = Matrix::randn(cfg.vocab, cfg.dim, 0.02, &mut rng);
+        let build_tower = |seq: usize, rng: &mut Rng| {
+            let blocks: Vec<TransformerBlock> = (0..cfg.blocks)
+                .map(|_| TransformerBlock::new(cfg.dim, cfg.heads, seq, cfg.kind, rng))
+                .collect();
+            let out = Linear::new(cfg.embed_dim, cfg.dim, cfg.kind, rng);
+            (blocks, out)
+        };
+        let (image_blocks, image_out) = build_tower(cfg.patches, &mut rng);
+        let (text_blocks, text_out) = build_tower(cfg.text_seq, &mut rng);
+        Self {
+            cfg,
+            patch_embed,
+            tok_embed,
+            image_blocks,
+            image_out,
+            text_blocks,
+            text_out,
+            log_scale: super::loss::init_log_scale(),
+        }
+    }
+
+    // ----- forward ----------------------------------------------------
+
+    /// Tower forward with caches: blocks → mean-pool → out-proj → L2
+    /// normalize.  Pooling and normalization use the shared `nn` helpers
+    /// that `serve::encoder::Tower::encode` also calls (bit-equality at
+    /// init is structural, not mirrored by hand).
+    fn tower_forward(
+        blocks: &[TransformerBlock],
+        out_proj: &Linear,
+        seq: usize,
+        dim: usize,
+        mut x: Matrix,
+    ) -> TowerCache {
+        let mut caches = Vec::with_capacity(blocks.len());
+        for blk in blocks {
+            let (y, c) = blk.forward(&x);
+            caches.push(c);
+            x = y;
+        }
+        let pooled = mean_pool_rows(&x, seq, dim);
+        let (emb, out_cache) = out_proj.forward(&pooled);
+        let mut z = emb;
+        let norms = l2_normalize_rows(&mut z);
+        TowerCache { blocks: caches, out: out_cache, norms, z }
+    }
+
+    /// Full forward over a sub-batch: `images` is `[n·patches, patch_dim]`
+    /// (see `data::Batch::images_matrix`), `tokens` is `n·text_seq` ids.
+    pub fn forward(&self, images: &Matrix, tokens: &[i32]) -> FwdCache {
+        let c = &self.cfg;
+        assert_eq!(images.cols, c.patch_dim, "image patch width");
+        assert_eq!(images.rows % c.patches, 0, "image row count");
+        assert_eq!(tokens.len() % c.text_seq, 0, "token count");
+        assert_eq!(
+            images.rows / c.patches,
+            tokens.len() / c.text_seq,
+            "towers disagree on batch size"
+        );
+        let (h, img_pe) = self.patch_embed.forward(images);
+        let img_tower =
+            Self::tower_forward(&self.image_blocks, &self.image_out, c.patches, c.dim, h);
+        let mut x = Matrix::zeros(tokens.len(), c.dim);
+        let mut txt_tokens = Vec::with_capacity(tokens.len());
+        for (j, &tok) in tokens.iter().enumerate() {
+            let tok = tok.rem_euclid(c.vocab as i32) as usize;
+            txt_tokens.push(tok);
+            x.row_mut(j).copy_from_slice(self.tok_embed.row(tok));
+        }
+        let txt_tower =
+            Self::tower_forward(&self.text_blocks, &self.text_out, c.text_seq, c.dim, x);
+        FwdCache { img_pe, img_tower, txt_tokens, txt_tower }
+    }
+
+    // ----- backward ---------------------------------------------------
+
+    /// Backward through L2-normalize: `z = e/‖e‖` ⇒
+    /// `de = (dz − z ⟨z, dz⟩) / ‖e‖` per row.
+    fn norm_backward(cache: &TowerCache, dz: &Matrix) -> Matrix {
+        let mut de = dz.clone();
+        for r in 0..dz.rows {
+            let n = cache.norms[r];
+            if n <= 0.0 {
+                continue; // forward left the row untouched
+            }
+            let zrow = cache.z.row(r);
+            let drow = de.row_mut(r);
+            let dot: f32 = zrow.iter().zip(drow.iter()).map(|(a, b)| a * b).sum();
+            for (d, &zv) in drow.iter_mut().zip(zrow) {
+                *d = (*d - zv * dot) / n;
+            }
+        }
+        de
+    }
+
+    /// Backward through one tower; returns `(d_input, per-block grads in
+    /// forward order, out-proj grad)`.
+    fn tower_backward(
+        blocks: &[TransformerBlock],
+        out_proj: &Linear,
+        cache: &TowerCache,
+        seq: usize,
+        dim: usize,
+        dz: &Matrix,
+    ) -> (Matrix, Vec<[Matrix; 6]>, Matrix) {
+        let de = Self::norm_backward(cache, dz);
+        let (dpooled, dw_out) = out_proj.backward(&cache.out, &de);
+        // un-pool: each of an item's seq rows receives dpooled/seq
+        let b = dpooled.rows;
+        let mut dx = Matrix::zeros(b * seq, dim);
+        let inv = 1.0 / seq as f32;
+        for i in 0..b {
+            let prow = dpooled.row(i);
+            for t in 0..seq {
+                let xrow = dx.row_mut(i * seq + t);
+                for (x, &p) in xrow.iter_mut().zip(prow) {
+                    *x = p * inv;
+                }
+            }
+        }
+        let mut block_grads: Vec<[Matrix; 6]> = Vec::with_capacity(blocks.len());
+        for (blk, bc) in blocks.iter().zip(&cache.blocks).rev() {
+            let (dxi, grads) = blk.backward(bc, &dx);
+            dx = dxi;
+            block_grads.push(grads.into_array());
+        }
+        block_grads.reverse(); // forward order, matching the param layout
+        (dx, block_grads, dw_out)
+    }
+
+    /// Full backward: upstream gradients on the *normalized* embeddings →
+    /// flat per-tensor gradients aligned with [`Self::param_metas`].  The
+    /// logit-scale slot (last) is left at zero — the loss's `d_log_scale`
+    /// is global, so the trainer adds it once after summing shard grads.
+    pub fn backward(&self, cache: &FwdCache, d_img: &Matrix, d_txt: &Matrix) -> Vec<Vec<f32>> {
+        let c = &self.cfg;
+        let (dh, img_blocks, dw_img_out) = Self::tower_backward(
+            &self.image_blocks,
+            &self.image_out,
+            &cache.img_tower,
+            c.patches,
+            c.dim,
+            d_img,
+        );
+        let (_, dw_pe) = self.patch_embed.backward(&cache.img_pe, &dh);
+        let (dx_txt, txt_blocks, dw_txt_out) = Self::tower_backward(
+            &self.text_blocks,
+            &self.text_out,
+            &cache.txt_tower,
+            c.text_seq,
+            c.dim,
+            d_txt,
+        );
+        let mut dtok = Matrix::zeros(c.vocab, c.dim);
+        for (r, &tok) in cache.txt_tokens.iter().enumerate() {
+            let src = dx_txt.row(r);
+            let dst = dtok.row_mut(tok);
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.n_params());
+        grads.push(dw_pe.data);
+        grads.push(dtok.data);
+        for blk in img_blocks {
+            for g in blk {
+                grads.push(g.data);
+            }
+        }
+        grads.push(dw_img_out.data);
+        for blk in txt_blocks {
+            for g in blk {
+                grads.push(g.data);
+            }
+        }
+        grads.push(dw_txt_out.data);
+        grads.push(vec![0.0]); // logit scale: filled in by the trainer
+        grads
+    }
+
+    // ----- inference (eval path) --------------------------------------
+
+    fn tower_infer(
+        blocks: &[TransformerBlock],
+        out_proj: &Linear,
+        seq: usize,
+        dim: usize,
+        mut x: Matrix,
+    ) -> Matrix {
+        for blk in blocks {
+            x = blk.forward_infer(&x);
+        }
+        let pooled = mean_pool_rows(&x, seq, dim);
+        let mut z = out_proj.forward_infer(&pooled);
+        l2_normalize_rows(&mut z);
+        z
+    }
+
+    /// Cache-free image encode (eval path): `[n·patches, patch_dim]` →
+    /// L2-normalized `[n, embed_dim]`.
+    pub fn encode_images_infer(&self, images: &Matrix) -> Matrix {
+        let c = &self.cfg;
+        let h = self.patch_embed.forward_infer(images);
+        Self::tower_infer(&self.image_blocks, &self.image_out, c.patches, c.dim, h)
+    }
+
+    /// Cache-free text encode (eval path): `n·text_seq` token ids →
+    /// L2-normalized `[n, embed_dim]`.
+    pub fn encode_texts_infer(&self, tokens: &[i32]) -> Matrix {
+        let c = &self.cfg;
+        let mut x = Matrix::zeros(tokens.len(), c.dim);
+        for (j, &tok) in tokens.iter().enumerate() {
+            let tok = tok.rem_euclid(c.vocab as i32) as usize;
+            x.row_mut(j).copy_from_slice(self.tok_embed.row(tok));
+        }
+        Self::tower_infer(&self.text_blocks, &self.text_out, c.text_seq, c.dim, x)
+    }
+
+    // ----- parameter registry -----------------------------------------
+
+    /// Optimizer metadata, index-aligned with [`Self::collect_params`] and
+    /// [`Self::backward`]'s gradient layout.
+    pub fn param_metas(&self) -> Vec<ParamMeta> {
+        let mut metas = vec![
+            ParamMeta {
+                name: "patch_embed".into(),
+                decay: true,
+                kind: "patch_embed".into(),
+            },
+            ParamMeta::no_decay("tok_embed", "embedding"),
+        ];
+        for (tower, n_blocks) in
+            [("img", self.image_blocks.len()), ("txt", self.text_blocks.len())]
+        {
+            for b in 0..n_blocks {
+                for p in PROJ_NAMES {
+                    metas.push(ParamMeta::weight(&format!("{tower}.block{b}.{p}")));
+                }
+            }
+            metas.push(ParamMeta::weight(&format!("{tower}.out_proj")));
+        }
+        metas.push(ParamMeta::no_decay("logit_scale", "temperature"));
+        metas
+    }
+
+    pub fn n_params(&self) -> usize {
+        2 + 6 * (self.image_blocks.len() + self.text_blocks.len()) + 2 + 1
+    }
+
+    /// Copy all trainable tensors into flat per-tensor buffers (the
+    /// optimizer's working set).
+    pub fn collect_params(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.n_params());
+        out.push(self.patch_embed.w.data.clone());
+        out.push(self.tok_embed.data.clone());
+        for (blocks, out_proj) in [
+            (&self.image_blocks, &self.image_out),
+            (&self.text_blocks, &self.text_out),
+        ] {
+            for blk in blocks.iter() {
+                for lin in blk.projections() {
+                    out.push(lin.w.data.clone());
+                }
+            }
+            out.push(out_proj.w.data.clone());
+        }
+        out.push(vec![self.log_scale]);
+        out
+    }
+
+    /// Write updated flat buffers back into the model tensors.
+    pub fn load_params(&mut self, params: &[Vec<f32>]) {
+        assert_eq!(params.len(), self.n_params(), "param layout mismatch");
+        let mut it = params.iter();
+        let mut next = |dst: &mut [f32]| {
+            let src = it.next().expect("param layout");
+            dst.copy_from_slice(src);
+        };
+        next(&mut self.patch_embed.w.data);
+        next(&mut self.tok_embed.data);
+        for blocks_out in [
+            (&mut self.image_blocks, &mut self.image_out),
+            (&mut self.text_blocks, &mut self.text_out),
+        ] {
+            let (blocks, out_proj) = blocks_out;
+            for blk in blocks.iter_mut() {
+                for lin in blk.projections_mut() {
+                    next(&mut lin.w.data);
+                }
+            }
+            next(&mut out_proj.w.data);
+        }
+        let last = it.next().expect("param layout");
+        self.log_scale = last[0];
+        assert!(it.next().is_none(), "param layout mismatch");
+    }
+
+    /// `(patch_embed, mid-transformer control)` probe indices into the
+    /// param layout — the same pair the PJRT trainer probes (Fig 9 vs the
+    /// Fig 21 control).  With no blocks (degenerate configs) the image
+    /// out-projection stands in as the control tensor.
+    pub fn probe_indices(&self) -> (usize, usize) {
+        if self.image_blocks.is_empty() {
+            return (0, 2); // img.out_proj
+        }
+        let mid_block = self.image_blocks.len() / 2;
+        (0, 2 + mid_block * 6 + 4) // w1 (mlp up) of the middle image block
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LinearKind;
+    use crate::serve::ClipEncoder;
+
+    fn tiny(kind: LinearKind) -> EncoderConfig {
+        EncoderConfig {
+            kind,
+            dim: 16,
+            heads: 2,
+            blocks: 2,
+            embed_dim: 8,
+            patches: 4,
+            patch_dim: 12,
+            text_seq: 5,
+            vocab: 64,
+            seed: 7,
+        }
+    }
+
+    /// The shared-seeding contract: a fresh train model and the serving
+    /// encoder built from the same config encode bit-identically.
+    #[test]
+    fn init_matches_serving_encoder_bit_for_bit() {
+        for kind in [LinearKind::Standard, LinearKind::SwitchBack] {
+            let cfg = tiny(kind);
+            let model = ClipTrainModel::new(cfg.clone());
+            let enc = ClipEncoder::new(cfg.clone());
+            let mut rng = Rng::seed(5);
+            let img: Vec<f32> = (0..cfg.image_len()).map(|_| rng.normal()).collect();
+            let toks: Vec<i32> =
+                (0..cfg.text_seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+            let m_img = model.encode_images_infer(&Matrix::from_vec(
+                cfg.patches,
+                cfg.patch_dim,
+                img.clone(),
+            ));
+            let e_img = &enc.encode_images(&[&img])[0];
+            assert_eq!(m_img.row(0), &e_img[..], "{kind:?} image tower drifted");
+            let m_txt = model.encode_texts_infer(&toks);
+            let e_txt = &enc.encode_texts(&[&toks])[0];
+            assert_eq!(m_txt.row(0), &e_txt[..], "{kind:?} text tower drifted");
+        }
+    }
+
+    #[test]
+    fn param_roundtrip_and_layout() {
+        let mut model = ClipTrainModel::new(tiny(LinearKind::Standard));
+        let metas = model.param_metas();
+        let mut params = model.collect_params();
+        assert_eq!(metas.len(), params.len());
+        assert_eq!(metas.len(), model.n_params());
+        assert_eq!(metas[0].name, "patch_embed");
+        assert_eq!(metas.last().unwrap().name, "logit_scale");
+        assert_eq!(params.last().unwrap().len(), 1);
+        // perturb, load, re-collect: identical
+        for p in params.iter_mut() {
+            for v in p.iter_mut() {
+                *v += 0.125;
+            }
+        }
+        model.load_params(&params);
+        assert_eq!(model.collect_params(), params);
+        let (pe, mid) = model.probe_indices();
+        assert_eq!(pe, 0);
+        assert!(metas[mid].name.contains("block"), "{}", metas[mid].name);
+    }
+
+    /// Gradient shapes line up with parameter shapes.
+    #[test]
+    fn backward_layout_matches_params() {
+        let model = ClipTrainModel::new(tiny(LinearKind::Standard));
+        let cfg = &model.cfg;
+        let mut rng = Rng::seed(9);
+        let n = 3;
+        let images = Matrix::randn(n * cfg.patches, cfg.patch_dim, 0.5, &mut rng);
+        let tokens: Vec<i32> =
+            (0..n * cfg.text_seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let cache = model.forward(&images, &tokens);
+        assert_eq!(cache.img_z().rows, n);
+        assert_eq!(cache.txt_z().cols, cfg.embed_dim);
+        let dz_i = Matrix::randn(n, cfg.embed_dim, 1.0, &mut rng);
+        let dz_t = Matrix::randn(n, cfg.embed_dim, 1.0, &mut rng);
+        let grads = model.backward(&cache, &dz_i, &dz_t);
+        let params = model.collect_params();
+        assert_eq!(grads.len(), params.len());
+        for (g, p) in grads.iter().zip(&params) {
+            assert_eq!(g.len(), p.len());
+        }
+        // token rows that never appeared get zero embedding grads
+        let used: std::collections::HashSet<usize> =
+            tokens.iter().map(|&t| t as usize).collect();
+        for tok in 0..cfg.vocab {
+            let row = &grads[1][tok * cfg.dim..(tok + 1) * cfg.dim];
+            let zero = row.iter().all(|&v| v == 0.0);
+            if !used.contains(&tok) {
+                assert!(zero, "unused token {tok} has gradient");
+            }
+        }
+    }
+
+    /// End-to-end finite-difference spot-check through the whole chain:
+    /// contrastive loss → normalize → out-proj → pool → blocks → embeds.
+    #[test]
+    fn end_to_end_gradients_match_finite_difference() {
+        use crate::train::loss::clip_contrastive;
+        let cfg = EncoderConfig {
+            kind: LinearKind::Standard,
+            dim: 8,
+            heads: 2,
+            blocks: 1,
+            embed_dim: 4,
+            patches: 3,
+            patch_dim: 5,
+            text_seq: 3,
+            vocab: 16,
+            seed: 11,
+        };
+        let mut model = ClipTrainModel::new(cfg.clone());
+        let mut rng = Rng::seed(12);
+        let n = 3;
+        let images = Matrix::randn(n * cfg.patches, cfg.patch_dim, 0.7, &mut rng);
+        let tokens: Vec<i32> =
+            (0..n * cfg.text_seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+        let loss_of = |model: &ClipTrainModel| -> f32 {
+            let cache = model.forward(&images, &tokens);
+            clip_contrastive(cache.img_z(), cache.txt_z(), model.log_scale).loss
+        };
+        let cache = model.forward(&images, &tokens);
+        let out = clip_contrastive(cache.img_z(), cache.txt_z(), model.log_scale);
+        let mut grads = model.backward(&cache, &out.d_img, &out.d_txt);
+        let last = grads.len() - 1;
+        grads[last][0] = out.d_log_scale;
+
+        let h = 1e-3;
+        let check = |idx: usize, elems: &[usize], model: &mut ClipTrainModel| {
+            let mut params = model.collect_params();
+            for &e in elems {
+                let orig = params[idx][e];
+                params[idx][e] = orig + h;
+                model.load_params(&params);
+                let lp = loss_of(model);
+                params[idx][e] = orig - h;
+                model.load_params(&params);
+                let lm = loss_of(model);
+                params[idx][e] = orig;
+                model.load_params(&params);
+                let fd = (lp - lm) / (2.0 * h);
+                let got = grads[idx][e];
+                assert!(
+                    (got - fd).abs() < 2e-2,
+                    "param {idx} elem {e}: {got} vs fd {fd}"
+                );
+            }
+        };
+        // patch embed, token embed, a q-projection, out-projs, logit scale
+        check(0, &[0, 7, 19], &mut model);
+        let used_tok = tokens[0] as usize * cfg.dim;
+        check(1, &[used_tok, used_tok + 3], &mut model);
+        check(2, &[1, 30], &mut model); // img.block0.wq
+        let metas = model.param_metas();
+        let img_out = metas.iter().position(|m| m.name == "img.out_proj").unwrap();
+        let txt_out = metas.iter().position(|m| m.name == "txt.out_proj").unwrap();
+        check(img_out, &[0, 5], &mut model);
+        check(txt_out, &[0, 5], &mut model);
+        check(last, &[0], &mut model);
+    }
+}

@@ -1,0 +1,688 @@
+//! The native training loop — the PJRT-free end-to-end path.
+//!
+//! Per step:
+//! 1. synthesize the next batch ([`crate::data`], honouring the shift
+//!    schedule — the same spike trigger the PJRT path uses),
+//! 2. forward both towers over `grad_shards` fixed batch shards on
+//!    [`crate::util::threads::par_map`] workers,
+//! 3. compute the symmetric InfoNCE loss *globally* (full-batch in-batch
+//!    negatives — sharding never changes the math),
+//! 4. backward each shard in parallel, then sum shard gradients in shard
+//!    order,
+//! 5. optionally clip the global gradient norm,
+//! 6. step the optimizer (AdamW / StableAdamW / Lion via
+//!    `coordinator::common::build_optimizer`) with the warmup+cosine LR,
+//!    collecting per-tensor `RMS_t`,
+//! 7. log to the metrics sink (JSONL) with per-step RMS probes.
+//!
+//! **Determinism**: the shard partition depends only on `batch` and
+//! `grad_shards` (never on the worker count), every per-element reduction
+//! in the substrate runs sequentially inside one worker, and shard
+//! gradients are summed in shard order — so a step's gradients are
+//! bit-identical under any `SWITCHBACK_THREADS` setting (tested below).
+
+use super::loss::clip_contrastive;
+use super::model::ClipTrainModel;
+use crate::config::TrainHyper;
+use crate::coordinator::common::{build_optimizer, spike_cfg, tail_mean_loss};
+use crate::coordinator::eval::nearest_class_accuracy;
+use crate::data::{Batch, DataConfig, Shift, SyntheticClip};
+use crate::optim::clip_global_norm;
+use crate::optim::schedules::LrSchedule;
+use crate::serve::EncoderConfig;
+use crate::telemetry::{
+    detect_loss_spikes, detect_rms_spikes, MetricsSink, StepRecord, TensorProbe,
+};
+use crate::tensor::Matrix;
+use crate::util::json::ObjWriter;
+use crate::util::threads::par_map;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// One native training run's knobs.
+#[derive(Debug, Clone)]
+pub struct NativeTrainConfig {
+    /// optimizer/schedule hyperparameters (shared with the PJRT path)
+    pub hyper: TrainHyper,
+    /// model shape + precision kind (shared with the serving encoder)
+    pub encoder: EncoderConfig,
+    pub batch: usize,
+    /// fixed data-parallel shard count for gradient accumulation (the
+    /// partition is thread-count independent; workers come from
+    /// `SWITCHBACK_THREADS`)
+    pub grad_shards: usize,
+    /// scheduled distribution shifts (the spike trigger)
+    pub shifts: Vec<Shift>,
+    /// log grad probes every N steps (0 = never)
+    pub probe_every: u64,
+    /// JSONL metrics path (None = in-memory only)
+    pub metrics_path: Option<String>,
+    /// examples per concept for the final zero-shot eval (0 = skip)
+    pub eval_per_concept: usize,
+}
+
+impl NativeTrainConfig {
+    /// Small-model defaults: big enough that SwitchBack's int8 GEMMs do
+    /// real work, small enough that a 50-step smoke runs in seconds.
+    pub fn preset(kind: crate::nn::LinearKind, steps: u64) -> Self {
+        let hyper = TrainHyper {
+            lr: 1e-3,
+            weight_decay: 0.1,
+            seed: 42,
+            ..TrainHyper::preset(steps)
+        };
+        Self {
+            hyper,
+            encoder: EncoderConfig {
+                kind,
+                dim: 64,
+                heads: 4,
+                blocks: 2,
+                embed_dim: 32,
+                patches: 8,
+                patch_dim: 32,
+                text_seq: 8,
+                vocab: 256,
+                seed: 42,
+            },
+            batch: 32,
+            grad_shards: 4,
+            shifts: vec![],
+            probe_every: 1,
+            metrics_path: None,
+            eval_per_concept: 2,
+        }
+    }
+
+    /// JSON echo of one run's config (per-run logs: includes this run's
+    /// kind and optimizer).
+    pub fn to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_str("kind", self.encoder.kind.label());
+        self.hyper.write_json(&mut w);
+        self.write_shape_json(&mut w);
+        w.finish()
+    }
+
+    /// JSON echo of the run-matrix-invariant slice (BENCH_train.json's
+    /// `config` block): shape + schedule only.  Kind and optimizer vary
+    /// across the matrix and live on each `results` entry instead.
+    pub fn shared_to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_u64("steps", self.hyper.steps)
+            .field_u64("warmup", self.hyper.warmup)
+            .field_f32("lr", self.hyper.lr)
+            .field_f32("weight_decay", self.hyper.weight_decay)
+            .field_f32("beta1", self.hyper.beta1)
+            .field_f32("beta2", self.hyper.beta2)
+            .field_u64("seed", self.hyper.seed);
+        if let Some(l) = self.hyper.beta2_lambda {
+            w.field_f32("beta2_lambda", l);
+        }
+        if let Some(c) = self.hyper.grad_clip {
+            w.field_f32("grad_clip", c);
+        }
+        self.write_shape_json(&mut w);
+        w.finish()
+    }
+
+    fn write_shape_json(&self, w: &mut ObjWriter) {
+        w.field_u64("batch", self.batch as u64)
+            .field_u64("grad_shards", self.grad_shards as u64)
+            .field_u64("dim", self.encoder.dim as u64)
+            .field_u64("heads", self.encoder.heads as u64)
+            .field_u64("blocks", self.encoder.blocks as u64)
+            .field_u64("embed_dim", self.encoder.embed_dim as u64)
+            .field_u64("patches", self.encoder.patches as u64)
+            .field_u64("patch_dim", self.encoder.patch_dim as u64)
+            .field_u64("text_seq", self.encoder.text_seq as u64)
+            .field_u64("vocab", self.encoder.vocab as u64);
+        if !self.shifts.is_empty() {
+            w.field_u64("n_shifts", self.shifts.len() as u64);
+        }
+    }
+}
+
+/// Output of one fused forward + loss + backward pass.
+pub struct StepOutput {
+    pub loss: f32,
+    /// in-batch image→text retrieval accuracy
+    pub acc: f32,
+    /// flat per-tensor gradients aligned with the model's param layout
+    pub grads: Vec<Vec<f32>>,
+    pub forward_ms: f64,
+    pub loss_ms: f64,
+    pub backward_ms: f64,
+}
+
+/// Contiguous shard ranges over `batch` examples — a pure function of
+/// `(batch, shards)`, never of the worker count (the determinism anchor).
+fn shard_ranges(batch: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.clamp(1, batch.max(1));
+    let per = batch.div_ceil(shards);
+    (0..shards)
+        .map(|s| (s * per, ((s + 1) * per).min(batch)))
+        .filter(|(lo, hi)| lo < hi)
+        .collect()
+}
+
+/// One training step's compute: sharded forward, global contrastive loss,
+/// sharded backward, ordered gradient accumulation.
+pub fn forward_backward(
+    model: &ClipTrainModel,
+    batch: &Batch,
+    grad_shards: usize,
+) -> StepOutput {
+    let c = &model.cfg;
+    let n = batch.len();
+    assert!(n > 0, "empty batch");
+    let ranges = shard_ranges(n, grad_shards);
+    let img_row = c.patches * c.patch_dim;
+    assert_eq!(batch.images.len(), n * img_row, "image payload shape");
+
+    // 1) sharded forward (shard slices come straight from the batch — no
+    //    full-batch intermediate copy on the hot path)
+    let t0 = Instant::now();
+    let caches = par_map(ranges.len(), |s| {
+        let (lo, hi) = ranges[s];
+        let rows = (hi - lo) * c.patches;
+        let sub = Matrix::from_vec(
+            rows,
+            c.patch_dim,
+            batch.images[lo * img_row..hi * img_row].to_vec(),
+        );
+        let toks = &batch.tokens[lo * c.text_seq..hi * c.text_seq];
+        model.forward(&sub, toks)
+    });
+    let forward_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // 2) global loss over the assembled full-batch embeddings
+    let t1 = Instant::now();
+    let e = c.embed_dim;
+    let mut img_z = Matrix::zeros(n, e);
+    let mut txt_z = Matrix::zeros(n, e);
+    for (cache, &(lo, hi)) in caches.iter().zip(&ranges) {
+        img_z.data[lo * e..hi * e].copy_from_slice(&cache.img_z().data);
+        txt_z.data[lo * e..hi * e].copy_from_slice(&cache.txt_z().data);
+    }
+    let out = clip_contrastive(&img_z, &txt_z, model.log_scale);
+    let loss_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    // 3) sharded backward + ordered accumulation
+    let t2 = Instant::now();
+    let shard_grads = par_map(ranges.len(), |s| {
+        let (lo, hi) = ranges[s];
+        let rows = hi - lo;
+        let d_img = Matrix::from_vec(rows, e, out.d_img.data[lo * e..hi * e].to_vec());
+        let d_txt = Matrix::from_vec(rows, e, out.d_txt.data[lo * e..hi * e].to_vec());
+        model.backward(&caches[s], &d_img, &d_txt)
+    });
+    let mut grads: Vec<Vec<f32>> = shard_grads
+        .into_iter()
+        .reduce(|mut acc, shard| {
+            for (a, s) in acc.iter_mut().zip(&shard) {
+                for (av, &sv) in a.iter_mut().zip(s) {
+                    *av += sv;
+                }
+            }
+            acc
+        })
+        .expect("at least one shard");
+    let last = grads.len() - 1;
+    grads[last][0] = out.d_log_scale; // global, not per-shard
+    let backward_ms = t2.elapsed().as_secs_f64() * 1e3;
+
+    StepOutput {
+        loss: out.loss,
+        acc: out.acc,
+        grads,
+        forward_ms,
+        loss_ms,
+        backward_ms,
+    }
+}
+
+/// Accumulated wall-time breakdown over a run (milliseconds).
+#[derive(Debug, Clone, Default)]
+pub struct StepTiming {
+    pub data_ms: f64,
+    pub forward_ms: f64,
+    pub loss_ms: f64,
+    pub backward_ms: f64,
+    pub optim_ms: f64,
+    pub total_ms: f64,
+}
+
+impl StepTiming {
+    fn to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_f32("data", self.data_ms as f32)
+            .field_f32("forward", self.forward_ms as f32)
+            .field_f32("loss", self.loss_ms as f32)
+            .field_f32("backward", self.backward_ms as f32)
+            .field_f32("optim", self.optim_ms as f32)
+            .field_f32("total", self.total_ms as f32);
+        w.finish()
+    }
+}
+
+/// Outcome of one native run.
+pub struct NativeRunResult {
+    pub kind: &'static str,
+    pub optimizer: &'static str,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    /// mean loss over the last 10% of steps (robust curve endpoint)
+    pub tail_loss: f32,
+    /// in-batch retrieval accuracy at the final step
+    pub final_acc: f32,
+    pub steps_per_sec: f32,
+    pub loss_spikes: usize,
+    pub rms_spikes: usize,
+    pub diverged: bool,
+    pub zero_shot_acc: Option<f32>,
+    pub timing: StepTiming,
+    pub sink: MetricsSink,
+}
+
+impl NativeRunResult {
+    pub fn print(&self) {
+        println!(
+            "[{:<12}/{:<13}] loss {:.4} → {:.4} (tail {:.4})  acc {:4.0}%  \
+             {:5.1} steps/s  spikes {}/{}{}",
+            self.kind,
+            self.optimizer,
+            self.first_loss,
+            self.final_loss,
+            self.tail_loss,
+            100.0 * self.final_acc,
+            self.steps_per_sec,
+            self.loss_spikes,
+            self.rms_spikes,
+            if self.diverged { "  [DIVERGED]" } else { "" },
+        );
+        if let Some(acc) = self.zero_shot_acc {
+            println!("               zero-shot acc {:.1}%", 100.0 * acc);
+        }
+    }
+
+    fn to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_str("kind", self.kind)
+            .field_str("optimizer", self.optimizer)
+            .field_f32("first_loss", self.first_loss)
+            .field_f32("final_loss", self.final_loss)
+            .field_f32("tail_loss", self.tail_loss)
+            .field_f32("final_acc", self.final_acc)
+            .field_f32("steps_per_sec", self.steps_per_sec)
+            .field_u64("loss_spikes", self.loss_spikes as u64)
+            .field_u64("rms_spikes", self.rms_spikes as u64)
+            .field_bool("diverged", self.diverged)
+            .field_raw("time_ms", &self.timing.to_json());
+        if let Some(acc) = self.zero_shot_acc {
+            w.field_f32("zero_shot_acc", acc);
+        }
+        w.finish()
+    }
+}
+
+/// The native trainer: owns the model, the data stream and the config.
+pub struct NativeTrainer {
+    cfg: NativeTrainConfig,
+    model: ClipTrainModel,
+    data: SyntheticClip,
+}
+
+impl NativeTrainer {
+    pub fn new(cfg: NativeTrainConfig) -> Self {
+        let e = &cfg.encoder;
+        let data = SyntheticClip::new(DataConfig {
+            shifts: cfg.shifts.clone(),
+            ..DataConfig::for_model(
+                e.patches,
+                e.patch_dim,
+                e.text_seq,
+                e.vocab,
+                cfg.hyper.seed.wrapping_add(0x5EED),
+            )
+        });
+        let model = ClipTrainModel::new(e.clone());
+        Self { cfg, model, data }
+    }
+
+    pub fn model(&self) -> &ClipTrainModel {
+        &self.model
+    }
+
+    /// Run the configured number of steps.
+    pub fn run(&mut self, verbose: bool) -> Result<NativeRunResult> {
+        let h = self.cfg.hyper.clone();
+        let metas = self.model.param_metas();
+        let mut params = self.model.collect_params();
+        let sizes: Vec<usize> = params.iter().map(|p| p.len()).collect();
+        let mut opt = build_optimizer(&h, &metas, &sizes);
+        let schedule = LrSchedule::new(h.lr, h.warmup, h.steps);
+        let (pe_idx, mid_idx) = self.model.probe_indices();
+        let pe_name = metas[pe_idx].name.clone();
+        let mid_name = metas[mid_idx].name.clone();
+
+        let mut sink = match &self.cfg.metrics_path {
+            Some(p) => MetricsSink::to_file(Path::new(p))?,
+            None => MetricsSink::memory(),
+        };
+        let mut timing = StepTiming::default();
+        let mut first_loss = f32::NAN;
+        let mut final_acc = 0.0f32;
+        let mut diverged = false;
+        let run_t0 = Instant::now();
+
+        for step in 1..=h.steps {
+            let step_t0 = Instant::now();
+            let batch = self.data.next_batch(self.cfg.batch);
+            timing.data_ms += step_t0.elapsed().as_secs_f64() * 1e3;
+
+            let out = forward_backward(&self.model, &batch, self.cfg.grad_shards);
+            timing.forward_ms += out.forward_ms;
+            timing.loss_ms += out.loss_ms;
+            timing.backward_ms += out.backward_ms;
+            if step == 1 {
+                first_loss = out.loss;
+            }
+            final_acc = out.acc;
+            if !out.loss.is_finite() || out.loss > 50.0 {
+                diverged = true;
+            }
+
+            let mut grads = out.grads;
+            let grad_norm = {
+                let mut ss = 0.0f64;
+                for g in &grads {
+                    for &v in g {
+                        if v.is_finite() {
+                            ss += (v as f64) * (v as f64);
+                        }
+                    }
+                }
+                ss.sqrt() as f32
+            };
+            if let Some(max_norm) = h.grad_clip {
+                clip_global_norm(&mut grads, max_norm);
+            }
+
+            let t_opt = Instant::now();
+            let lr = schedule.at(step);
+            let stats = opt.step(&mut params, &grads, lr, None);
+            self.model.load_params(&params);
+            timing.optim_ms += t_opt.elapsed().as_secs_f64() * 1e3;
+
+            let step_ms = step_t0.elapsed().as_secs_f64() * 1e3;
+            timing.total_ms += step_ms;
+            let mut rec = StepRecord {
+                step,
+                loss: out.loss,
+                lr,
+                grad_norm,
+                step_ms: Some(step_ms as f32),
+                ..Default::default()
+            };
+            rec.rms.insert(pe_name.clone(), stats.rms[pe_idx]);
+            rec.rms.insert(mid_name.clone(), stats.rms[mid_idx]);
+            if self.cfg.probe_every > 0 && step % self.cfg.probe_every == 0 {
+                let mut probes = BTreeMap::new();
+                probes.insert(pe_name.clone(), TensorProbe::of(&grads[pe_idx]));
+                probes.insert(mid_name.clone(), TensorProbe::of(&grads[mid_idx]));
+                rec.grad_probes = probes;
+            }
+            if verbose && (step % 10 == 0 || step == 1) {
+                println!(
+                    "  step {step:>5}  loss {:8.4}  acc {:4.0}%  lr {:.2e}  |g| {:8.3}",
+                    out.loss,
+                    100.0 * out.acc,
+                    lr,
+                    grad_norm
+                );
+            }
+            sink.log(rec);
+        }
+        let elapsed = run_t0.elapsed().as_secs_f32();
+
+        let zero_shot_acc = if self.cfg.eval_per_concept > 0 {
+            Some(self.zero_shot_eval(self.cfg.eval_per_concept))
+        } else {
+            None
+        };
+
+        let losses = sink.loss_trace();
+        let sc = spike_cfg(h.steps);
+        let loss_spikes = detect_loss_spikes(&losses, &sc).len();
+        let rms_spikes = detect_rms_spikes(&sink.rms_trace(&pe_name), &sc).len();
+        let tail_loss = tail_mean_loss(&losses);
+        Ok(NativeRunResult {
+            kind: self.cfg.encoder.kind.label(),
+            optimizer: opt.name(),
+            first_loss,
+            final_loss: *losses.last().unwrap_or(&f32::NAN),
+            tail_loss,
+            final_acc,
+            steps_per_sec: h.steps as f32 / elapsed.max(1e-9),
+            loss_spikes,
+            rms_spikes,
+            diverged,
+            zero_shot_acc,
+            timing,
+            sink,
+        })
+    }
+
+    /// Zero-shot-style eval through the shared nearest-class core: each
+    /// concept's canonical caption is the class prompt.
+    fn zero_shot_eval(&self, per_concept: usize) -> f32 {
+        let n_concepts = self.data.config().n_concepts;
+        let mut class_tokens = Vec::with_capacity(n_concepts * self.cfg.encoder.text_seq);
+        for c in 0..n_concepts {
+            class_tokens.extend(self.data.canonical_caption(c));
+        }
+        let class_embs = self.model.encode_texts_infer(&class_tokens);
+        let eval = self.data.eval_set(per_concept);
+        let images = eval.images_matrix(self.cfg.encoder.patch_dim);
+        let img_embs = self.model.encode_images_infer(&images);
+        nearest_class_accuracy(
+            &img_embs.data,
+            &class_embs.data,
+            self.cfg.encoder.embed_dim,
+            &eval.concepts,
+        )
+    }
+}
+
+/// Write `BENCH_train.json`: the native-training perf/stability artifact
+/// (schema: EXPERIMENTS.md §Train).
+pub fn write_bench_train_json(
+    path: &str,
+    cfg: &NativeTrainConfig,
+    results: &[NativeRunResult],
+) -> std::io::Result<()> {
+    let entries: Vec<String> = results.iter().map(|r| r.to_json()).collect();
+    let mut top = ObjWriter::new();
+    top.field_str("bench", "train_native")
+        .field_raw("config", &cfg.shared_to_json())
+        .field_raw("results", &format!("[{}]", entries.join(",")));
+    let doc = top.finish();
+    debug_assert!(crate::util::json::parse(&doc).is_ok(), "invalid BENCH_train doc");
+    std::fs::write(path, doc + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LinearKind;
+    use crate::util::json::parse;
+
+    fn tiny_cfg(kind: LinearKind, steps: u64) -> NativeTrainConfig {
+        let mut cfg = NativeTrainConfig::preset(kind, steps);
+        cfg.encoder.dim = 16;
+        cfg.encoder.heads = 2;
+        cfg.encoder.blocks = 1;
+        cfg.encoder.embed_dim = 8;
+        cfg.encoder.patches = 4;
+        cfg.encoder.patch_dim = 12;
+        cfg.encoder.text_seq = 5;
+        cfg.encoder.vocab = 64;
+        cfg.batch = 8;
+        cfg.grad_shards = 3;
+        cfg.eval_per_concept = 0;
+        cfg
+    }
+
+    #[test]
+    fn shard_ranges_cover_batch_exactly() {
+        for (b, s) in [(8, 3), (8, 1), (8, 8), (8, 100), (1, 4), (7, 2)] {
+            let ranges = shard_ranges(b, s);
+            assert_eq!(ranges[0].0, 0);
+            assert_eq!(ranges.last().unwrap().1, b);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            assert!(ranges.iter().all(|(lo, hi)| lo < hi));
+        }
+    }
+
+    /// Restores `SWITCHBACK_THREADS` to "unset" even if the test panics
+    /// mid-run, so a failure cannot leak the override into other tests.
+    /// (No other test writes this var; all in-process readers go through
+    /// `std::env`, which serializes access internally.)
+    struct ThreadsEnvGuard;
+
+    impl ThreadsEnvGuard {
+        fn set(threads: &str) -> Self {
+            std::env::set_var("SWITCHBACK_THREADS", threads);
+            Self
+        }
+    }
+
+    impl Drop for ThreadsEnvGuard {
+        fn drop(&mut self) {
+            std::env::remove_var("SWITCHBACK_THREADS");
+        }
+    }
+
+    /// Same seed + SWITCHBACK_THREADS=1 vs N ⇒ identical first-step
+    /// gradients: the shard partition and every reduction order are
+    /// thread-count independent.
+    #[test]
+    fn first_step_grads_identical_across_thread_counts() {
+        let cfg = tiny_cfg(LinearKind::SwitchBack, 1);
+        let grads_with = |threads: &str| {
+            let _guard = ThreadsEnvGuard::set(threads);
+            let mut trainer = NativeTrainer::new(cfg.clone());
+            let batch = trainer.data.next_batch(cfg.batch);
+            let out = forward_backward(&trainer.model, &batch, cfg.grad_shards);
+            // exercise the full param plumbing too
+            let params = trainer.model.collect_params();
+            trainer.model.load_params(&params);
+            (out.loss, out.grads)
+        };
+        let (loss1, g1) = grads_with("1");
+        let (loss4, g4) = grads_with("4");
+        assert_eq!(loss1, loss4, "loss must be bit-identical");
+        assert_eq!(g1.len(), g4.len());
+        for (i, (a, b)) in g1.iter().zip(&g4).enumerate() {
+            assert_eq!(a, b, "grads for tensor {i} differ across thread counts");
+        }
+    }
+
+    /// Shard count is a *math-preserving* knob: loss is identical, and
+    /// gradients agree to f32 summation-order noise.
+    #[test]
+    fn shard_count_preserves_loss_exactly() {
+        let cfg = tiny_cfg(LinearKind::Standard, 1);
+        let trainer = NativeTrainer::new(cfg.clone());
+        let mut data = SyntheticClip::new(DataConfig {
+            shifts: vec![],
+            ..DataConfig::for_model(4, 12, 5, 64, cfg.hyper.seed.wrapping_add(0x5EED))
+        });
+        let batch = data.next_batch(cfg.batch);
+        let a = forward_backward(&trainer.model, &batch, 1);
+        let b = forward_backward(&trainer.model, &batch, 4);
+        assert_eq!(a.loss, b.loss, "full-batch negatives regardless of shards");
+        for (ga, gb) in a.grads.iter().zip(&b.grads) {
+            for (&x, &y) in ga.iter().zip(gb) {
+                assert!((x - y).abs() < 1e-4, "shard-order noise only: {x} vs {y}");
+            }
+        }
+    }
+
+    /// The 30-step smoke: loss decreases for both kinds, SwitchBack
+    /// tracks Standard within tolerance (the paper's core claim on the
+    /// native substrate), and telemetry/bench plumbing holds together.
+    #[test]
+    fn switchback_tracks_standard_over_30_steps() {
+        let run = |kind| {
+            let cfg = tiny_cfg(kind, 30);
+            NativeTrainer::new(cfg).run(false).unwrap()
+        };
+        let std_res = run(LinearKind::Standard);
+        let sb_res = run(LinearKind::SwitchBack);
+        for r in [&std_res, &sb_res] {
+            assert!(!r.diverged, "{} diverged", r.kind);
+            assert!(
+                r.tail_loss < r.first_loss,
+                "{}: loss did not decrease ({} → {})",
+                r.kind,
+                r.first_loss,
+                r.tail_loss
+            );
+            assert_eq!(r.sink.records.len(), 30);
+            assert!(r.steps_per_sec > 0.0);
+            assert!(r.timing.total_ms > 0.0);
+        }
+        // identical seeds ⇒ identical underlying f32 model; int8 noise
+        // must not change where training lands within a loose band
+        assert!(
+            (sb_res.tail_loss - std_res.tail_loss).abs() < 0.5,
+            "switchback tail {} vs standard tail {}",
+            sb_res.tail_loss,
+            std_res.tail_loss
+        );
+    }
+
+    #[test]
+    fn bench_train_json_is_parseable_and_complete() {
+        let cfg = tiny_cfg(LinearKind::SwitchBack, 5);
+        let mut trainer = NativeTrainer::new(cfg.clone());
+        let res = trainer.run(false).unwrap();
+        let path = std::env::temp_dir().join("bench_train_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_bench_train_json(&path, &cfg, &[res]).unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let v = parse(&doc).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("train_native"));
+        let config = v.get("config").unwrap();
+        assert_eq!(config.get("steps").unwrap().as_usize(), Some(5));
+        assert!(
+            config.get("optimizer").is_none() && config.get("kind").is_none(),
+            "per-run fields must live on results entries, not the shared config"
+        );
+        let results = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.get("kind").unwrap().as_str(), Some("switchback"));
+        assert!(r.get("steps_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("loss_spikes").is_some());
+        assert!(r.get("time_ms").unwrap().get("forward").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Zero-shot eval runs and returns a sane range after a short run.
+    #[test]
+    fn zero_shot_eval_is_in_range() {
+        let mut cfg = tiny_cfg(LinearKind::Standard, 8);
+        cfg.eval_per_concept = 1;
+        let mut trainer = NativeTrainer::new(cfg);
+        let res = trainer.run(false).unwrap();
+        let acc = res.zero_shot_acc.unwrap();
+        assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+    }
+}

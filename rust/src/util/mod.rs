@@ -6,8 +6,11 @@
 //! * [`float`]   — bf16 / fp16 rounding via bit manipulation.
 //! * [`bench`]   — a tiny criterion-style benchmark harness used by the
 //!   `cargo bench` targets (median-of-samples timing + throughput).
+//! * [`regression`] — BENCH_*.json baseline comparison (the
+//!   `switchback benchdiff` CI gate).
 
 pub mod bench;
 pub mod float;
 pub mod json;
+pub mod regression;
 pub mod threads;

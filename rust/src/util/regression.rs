@@ -1,0 +1,376 @@
+//! Bench-regression gating: compare a freshly emitted `BENCH_serve.json`
+//! / `BENCH_train.json` against a committed baseline and report what got
+//! worse (the `switchback benchdiff` subcommand, wired into CI by
+//! `scripts/check_bench.sh`).
+//!
+//! Two comparison modes, because absolute throughput is machine-relative:
+//!
+//! * **portable** (default): gates only machine-independent quantities —
+//!   the SwitchBack-vs-Standard throughput *ratio* and p99 *ratio* for
+//!   serve, and the learning invariants (loss decreased, no divergence,
+//!   spike counts) for train.  This is what CI runs against the committed
+//!   baseline, which was measured on different hardware.
+//! * **strict**: additionally gates absolute requests/sec, p99 and
+//!   steps/sec entry-by-entry.  Use when old and new were measured on the
+//!   same machine (e.g. bisecting a local regression).
+
+use crate::util::json::Value;
+
+/// Default allowed regression: 15% (throughput may drop, p99 may rise, by
+/// at most this fraction).
+pub const DEFAULT_TOLERANCE: f64 = 0.15;
+
+/// Compare `new` against the `old` baseline; returns human-readable
+/// regression descriptions (empty ⇒ gate passes).  Errors on documents
+/// that are not comparable (different/unknown `bench` kinds, missing
+/// `results`).
+pub fn compare_bench(
+    old: &Value,
+    new: &Value,
+    tol: f64,
+    strict: bool,
+) -> Result<Vec<String>, String> {
+    let kind = |v: &Value| -> Result<String, String> {
+        v.get("bench")
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| "document has no \"bench\" field".into())
+    };
+    let (ok, nk) = (kind(old)?, kind(new)?);
+    if ok != nk {
+        return Err(format!("bench kinds differ: baseline {ok:?} vs new {nk:?}"));
+    }
+    match ok.as_str() {
+        "serve_throughput" => Ok(compare_serve(old, new, tol, strict)?),
+        "train_native" => Ok(compare_train(old, new, tol, strict)?),
+        other => Err(format!("unknown bench kind {other:?}")),
+    }
+}
+
+fn results(v: &Value) -> Result<&[Value], String> {
+    v.get("results")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| "document has no \"results\" array".into())
+}
+
+fn f(entry: &Value, key: &str) -> Option<f64> {
+    entry.get(key).and_then(Value::as_f64)
+}
+
+fn s<'a>(entry: &'a Value, key: &str) -> &'a str {
+    entry.get(key).and_then(Value::as_str).unwrap_or("?")
+}
+
+// ----- serve ----------------------------------------------------------
+
+/// `(kind, concurrency)` → (requests_per_sec, p99_ms)
+fn serve_index(v: &Value) -> Result<Vec<(String, u64, f64, f64)>, String> {
+    results(v)?
+        .iter()
+        .map(|r| {
+            let kind = s(r, "kind").to_string();
+            let conc = f(r, "concurrency").unwrap_or(0.0) as u64;
+            let rps = f(r, "requests_per_sec")
+                .ok_or("serve entry missing requests_per_sec")?;
+            let p99 = r
+                .get("metrics")
+                .and_then(|m| m.get("request_p99_ms"))
+                .and_then(Value::as_f64)
+                .ok_or("serve entry missing metrics.request_p99_ms")?;
+            Ok((kind, conc, rps, p99))
+        })
+        .collect()
+}
+
+/// The Standard-vs-SwitchBack ratios per concurrency (machine-portable).
+fn serve_ratios(idx: &[(String, u64, f64, f64)]) -> Vec<(u64, f64, f64)> {
+    let mut out = vec![];
+    for (kind, conc, rps, p99) in idx {
+        let (conc, rps, p99) = (*conc, *rps, *p99);
+        if kind != "switchback" {
+            continue;
+        }
+        if let Some(&(_, _, std_rps, std_p99)) =
+            idx.iter().find(|(k, c, _, _)| k == "standard" && *c == conc)
+        {
+            if std_rps > 0.0 && p99 > 0.0 {
+                out.push((conc, rps / std_rps, std_p99 / p99));
+            }
+        }
+    }
+    out
+}
+
+fn compare_serve(
+    old: &Value,
+    new: &Value,
+    tol: f64,
+    strict: bool,
+) -> Result<Vec<String>, String> {
+    let oi = serve_index(old)?;
+    let ni = serve_index(new)?;
+    let mut regs = vec![];
+    let mut compared = 0usize;
+    // portable: the int8-vs-f32 ratios must not regress
+    let old_ratios = serve_ratios(&oi);
+    for (conc, new_tput_ratio, new_p99_ratio) in serve_ratios(&ni) {
+        let Some(&(_, old_tput_ratio, old_p99_ratio)) =
+            old_ratios.iter().find(|(c, _, _)| *c == conc)
+        else {
+            continue;
+        };
+        compared += 1;
+        if new_tput_ratio < old_tput_ratio * (1.0 - tol) {
+            regs.push(format!(
+                "serve c={conc}: switchback/standard throughput ratio fell \
+                 {old_tput_ratio:.2}× → {new_tput_ratio:.2}× (> {:.0}% drop)",
+                tol * 100.0
+            ));
+        }
+        if new_p99_ratio < old_p99_ratio * (1.0 - tol) {
+            regs.push(format!(
+                "serve c={conc}: standard/switchback p99 ratio fell \
+                 {old_p99_ratio:.2} → {new_p99_ratio:.2} (switchback p99 regressed)"
+            ));
+        }
+    }
+    if strict {
+        for (kind, conc, nrps, np99) in &ni {
+            let (conc, nrps, np99) = (*conc, *nrps, *np99);
+            let Some(&(_, _, orps, op99)) =
+                oi.iter().find(|(k, c, _, _)| k == kind && *c == conc)
+            else {
+                continue;
+            };
+            compared += 1;
+            if nrps < orps * (1.0 - tol) {
+                regs.push(format!(
+                    "serve {kind} c={conc}: throughput {orps:.0} → {nrps:.0} req/s \
+                     (> {:.0}% drop)",
+                    tol * 100.0
+                ));
+            }
+            if np99 > op99 * (1.0 + tol) {
+                regs.push(format!(
+                    "serve {kind} c={conc}: p99 {op99:.2} → {np99:.2} ms \
+                     (> {:.0}% rise)",
+                    tol * 100.0
+                ));
+            }
+        }
+    }
+    // the gate must never pass vacuously: if nothing lined up between the
+    // two documents, that is itself a failure of the comparison
+    if compared == 0 {
+        return Err(
+            "nothing comparable between baseline and new serve results \
+             (no standard/switchback pair or matching (kind, concurrency) \
+             entries)"
+                .into(),
+        );
+    }
+    Ok(regs)
+}
+
+// ----- train ----------------------------------------------------------
+
+fn compare_train(
+    old: &Value,
+    new: &Value,
+    tol: f64,
+    strict: bool,
+) -> Result<Vec<String>, String> {
+    let on = results(old)?;
+    let nn = results(new)?;
+    if nn.is_empty() {
+        return Err("new train document has no results".into());
+    }
+    let mut regs = vec![];
+    let mut matched = 0usize;
+    for r in nn {
+        let key = (s(r, "kind").to_string(), s(r, "optimizer").to_string());
+        let first = f(r, "first_loss").ok_or("train entry missing first_loss")?;
+        let fin = f(r, "final_loss").ok_or("train entry missing final_loss")?;
+        let tag = format!("train {}/{}", key.0, key.1);
+        // portable learning invariants: the run must still learn
+        if r.get("diverged").and_then(Value::as_bool).unwrap_or(false) {
+            regs.push(format!("{tag}: run diverged"));
+        }
+        if fin.is_nan() || first.is_nan() || fin >= first {
+            regs.push(format!(
+                "{tag}: loss no longer decreases ({first:.4} → {fin:.4})"
+            ));
+        }
+        let Some(o) = on
+            .iter()
+            .find(|o| s(o, "kind") == key.0 && s(o, "optimizer") == key.1)
+        else {
+            continue;
+        };
+        matched += 1;
+        let (ospikes, nspikes) = (
+            f(o, "loss_spikes").unwrap_or(0.0),
+            f(r, "loss_spikes").unwrap_or(0.0),
+        );
+        if nspikes > ospikes + 1.0 {
+            regs.push(format!(
+                "{tag}: loss spikes {ospikes:.0} → {nspikes:.0} (stability regressed)"
+            ));
+        }
+        if strict {
+            let (osps, nsps) = (
+                f(o, "steps_per_sec").unwrap_or(0.0),
+                f(r, "steps_per_sec").unwrap_or(0.0),
+            );
+            if osps > 0.0 && nsps < osps * (1.0 - tol) {
+                regs.push(format!(
+                    "{tag}: throughput {osps:.2} → {nsps:.2} steps/s (> {:.0}% drop)",
+                    tol * 100.0
+                ));
+            }
+            let ofin = f(o, "final_loss").unwrap_or(f64::NAN);
+            if ofin.is_finite() && fin > ofin * (1.0 + tol) {
+                regs.push(format!(
+                    "{tag}: final loss {ofin:.4} → {fin:.4} (> {:.0}% rise)",
+                    tol * 100.0
+                ));
+            }
+        }
+    }
+    if matched == 0 {
+        return Err(
+            "no (kind, optimizer) pairs matched between baseline and new \
+             train results"
+                .into(),
+        );
+    }
+    Ok(regs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn serve_doc(std_rps: f64, sb_rps: f64, std_p99: f64, sb_p99: f64) -> Value {
+        parse(&format!(
+            r#"{{"bench":"serve_throughput","policy":{{}},"results":[
+                {{"kind":"standard","concurrency":16,"requests_per_sec":{std_rps},
+                  "metrics":{{"request_p99_ms":{std_p99}}}}},
+                {{"kind":"switchback","concurrency":16,"requests_per_sec":{sb_rps},
+                  "metrics":{{"request_p99_ms":{sb_p99}}}}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    fn train_doc(first: f64, fin: f64, sps: f64, spikes: u64, diverged: bool) -> Value {
+        parse(&format!(
+            r#"{{"bench":"train_native","config":{{}},"results":[
+                {{"kind":"switchback","optimizer":"stable_adamw",
+                  "first_loss":{first},"final_loss":{fin},
+                  "steps_per_sec":{sps},"loss_spikes":{spikes},
+                  "diverged":{diverged}}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn portable_serve_passes_across_machines() {
+        // same 1.5× ratio at wildly different absolute speeds: no regression
+        let old = serve_doc(1000.0, 1500.0, 10.0, 8.0);
+        let new = serve_doc(200.0, 300.0, 50.0, 40.0);
+        let regs = compare_bench(&old, &new, 0.15, false).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+        // strict mode *does* flag the absolute collapse
+        let regs = compare_bench(&old, &new, 0.15, true).unwrap();
+        assert!(!regs.is_empty());
+    }
+
+    #[test]
+    fn serve_ratio_regression_is_caught() {
+        let old = serve_doc(1000.0, 1500.0, 10.0, 8.0); // 1.5×
+        let new = serve_doc(1000.0, 1100.0, 10.0, 8.0); // 1.1× < 1.5·0.85
+        let regs = compare_bench(&old, &new, 0.15, false).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].contains("throughput ratio"), "{}", regs[0]);
+    }
+
+    #[test]
+    fn serve_p99_ratio_regression_is_caught() {
+        let old = serve_doc(1000.0, 1500.0, 10.0, 8.0);
+        let new = serve_doc(1000.0, 1500.0, 10.0, 20.0); // sb p99 doubled
+        let regs = compare_bench(&old, &new, 0.15, false).unwrap();
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].contains("p99"), "{}", regs[0]);
+    }
+
+    #[test]
+    fn train_learning_invariants() {
+        let old = train_doc(3.4, 2.1, 12.0, 0, false);
+        // still learns, slightly different loss: fine
+        let new = train_doc(3.4, 2.3, 6.0, 0, false);
+        assert!(compare_bench(&old, &new, 0.15, false).unwrap().is_empty());
+        // loss stopped decreasing: caught
+        let bad = train_doc(3.4, 3.6, 12.0, 0, false);
+        let regs = compare_bench(&old, &bad, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("no longer decreases")), "{regs:?}");
+        // divergence: caught
+        let div = train_doc(3.4, 2.0, 12.0, 0, true);
+        let regs = compare_bench(&old, &div, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("diverged")), "{regs:?}");
+        // new spikes: caught
+        let spiky = train_doc(3.4, 2.1, 12.0, 3, false);
+        let regs = compare_bench(&old, &spiky, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("spikes")), "{regs:?}");
+        // strict flags the 2× slowdown
+        let regs = compare_bench(&old, &new, 0.15, true).unwrap();
+        assert!(regs.iter().any(|r| r.contains("steps/s")), "{regs:?}");
+    }
+
+    #[test]
+    fn vacuous_comparisons_fail_closed() {
+        // same bench kind but nothing lines up (different concurrency):
+        // must error, not silently pass
+        let old = serve_doc(1000.0, 1500.0, 10.0, 8.0);
+        let mut other = serve_doc(1000.0, 1500.0, 10.0, 8.0);
+        if let Value::Obj(m) = &mut other {
+            if let Some(Value::Arr(rs)) = m.get_mut("results") {
+                for r in rs {
+                    if let Value::Obj(e) = r {
+                        e.insert("concurrency".into(), Value::Num(32.0));
+                    }
+                }
+            }
+        }
+        assert!(compare_bench(&old, &other, 0.15, false).is_err());
+        // train: empty new results must error
+        let tr = train_doc(3.4, 2.1, 12.0, 0, false);
+        let empty = parse(r#"{"bench":"train_native","results":[]}"#).unwrap();
+        assert!(compare_bench(&tr, &empty, 0.15, false).is_err());
+        // train: no matching (kind, optimizer) must error
+        let mut lion = train_doc(3.4, 2.1, 12.0, 0, false);
+        if let Value::Obj(m) = &mut lion {
+            if let Some(Value::Arr(rs)) = m.get_mut("results") {
+                for r in rs {
+                    if let Value::Obj(e) = r {
+                        e.insert("optimizer".into(), Value::Str("lion".into()));
+                    }
+                }
+            }
+        }
+        assert!(compare_bench(&tr, &lion, 0.15, false).is_err());
+    }
+
+    #[test]
+    fn mismatched_and_malformed_docs_error() {
+        let serve = serve_doc(1.0, 1.0, 1.0, 1.0);
+        let train = train_doc(3.0, 2.0, 1.0, 0, false);
+        assert!(compare_bench(&serve, &train, 0.15, false).is_err());
+        let junk = parse(r#"{"bench":"nope","results":[]}"#).unwrap();
+        assert!(compare_bench(&junk, &junk, 0.15, false).is_err());
+        let nores = parse(r#"{"bench":"train_native"}"#).unwrap();
+        assert!(compare_bench(&nores, &nores, 0.15, false).is_err());
+    }
+}

@@ -1,0 +1,58 @@
+#!/usr/bin/env bash
+# Bench-regression gate: compare freshly emitted BENCH_serve.json /
+# BENCH_train.json against the committed baselines in benchmarks/ and fail
+# on regressions beyond the tolerance (default 15%).
+#
+# The comparison itself lives in the binary (`switchback benchdiff`,
+# rust/src/util/regression.rs) so it is unit-tested and reuses the
+# in-tree JSON parser.  Default mode gates only machine-portable
+# quantities (the SwitchBack/Standard throughput + p99 ratios, and the
+# train-path learning invariants); pass --strict when both files were
+# measured on the same machine to also gate absolutes.
+#
+# Usage: scripts/check_bench.sh [--strict] [--tol 0.15]
+#   Run scripts/verify.sh first (it emits both BENCH files), or any
+#   equivalent `switchback loadgen` / `switchback train` invocation.
+#
+# Refreshing baselines after an intentional perf change:
+#   cp BENCH_serve.json benchmarks/BENCH_serve.baseline.json
+#   cp BENCH_train.json benchmarks/BENCH_train.baseline.json
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=rust/target/release/switchback
+if [[ ! -x "$BIN" ]]; then
+    echo "check_bench: $BIN not built — run scripts/verify.sh first" >&2
+    exit 1
+fi
+
+EXTRA_ARGS=("$@")
+FAILED=0
+
+check() {
+    local baseline=$1 fresh=$2
+    if [[ ! -f "$baseline" ]]; then
+        echo "check_bench: missing baseline $baseline" >&2
+        FAILED=1
+        return
+    fi
+    if [[ ! -f "$fresh" ]]; then
+        echo "check_bench: missing $fresh — run scripts/verify.sh first" >&2
+        FAILED=1
+        return
+    fi
+    echo "== benchdiff: $fresh vs $baseline =="
+    if ! "$BIN" benchdiff "$baseline" "$fresh" "${EXTRA_ARGS[@]+"${EXTRA_ARGS[@]}"}"; then
+        FAILED=1
+    fi
+}
+
+check benchmarks/BENCH_serve.baseline.json BENCH_serve.json
+check benchmarks/BENCH_train.baseline.json BENCH_train.json
+
+if [[ "$FAILED" -ne 0 ]]; then
+    echo "check_bench: FAILED (see regressions above)" >&2
+    exit 1
+fi
+echo "check_bench OK — no regressions beyond tolerance"

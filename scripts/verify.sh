@@ -1,22 +1,33 @@
 #!/usr/bin/env bash
-# Tier-1 verification + serve smoke + perf-trajectory artifact.
+# Tier-1 verification + serve/train smokes + perf-trajectory artifacts.
 #
-# Usage: scripts/verify.sh [--full]
+# Usage: scripts/verify.sh [--full|--smoke]
 #   default: tier-1 (build + tests) + serve smoke + a small loadgen run
-#   --full : also the 10k-request acceptance sweep (slower)
+#            + a 50-step native train smoke (loss must decrease)
+#   --full : the 10k-request acceptance sweep + a 150-step train run
+#   --smoke: skip `cargo test` (CI's bench-gate job runs after the
+#            dedicated test job; the release build is incremental
+#            against the restored cargo cache)
 #
-# Emits BENCH_serve.json at the repo root so the serving perf trajectory
-# (requests/sec, p99, hit rate per precision kind) is tracked across PRs
-# (schema: EXPERIMENTS.md §Serve).
+# Emits BENCH_serve.json and BENCH_train.json at the repo root so the
+# serving and training perf trajectories are tracked across PRs (schemas:
+# EXPERIMENTS.md §Serve / §Train).  scripts/check_bench.sh gates both
+# against the committed baselines in benchmarks/.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 REPO_ROOT="$(pwd)"
 
-echo "== tier-1: cargo build --release && cargo test -q =="
+MODE="${1:-}"
 cd rust
-cargo build --release
-cargo test -q
+if [[ "$MODE" == "--smoke" ]]; then
+    echo "== build only (smoke mode): cargo build --release =="
+    cargo build --release
+else
+    echo "== tier-1: cargo build --release && cargo test -q =="
+    cargo build --release
+    cargo test -q
+fi
 
 BIN=target/release/switchback
 
@@ -26,12 +37,14 @@ echo "== serve smoke =="
 
 echo
 echo "== loadgen (BENCH_serve.json) =="
-if [[ "${1:-}" == "--full" ]]; then
+if [[ "$MODE" == "--full" ]]; then
     REQUESTS=10000
     CONCURRENCY=32
+    TRAIN_STEPS=150
 else
     REQUESTS=1000
     CONCURRENCY=16
+    TRAIN_STEPS=50
 fi
 "$BIN" loadgen \
     --requests "$REQUESTS" \
@@ -40,4 +53,14 @@ fi
     --out "$REPO_ROOT/BENCH_serve.json"
 
 echo
-echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json"
+echo "== train smoke (BENCH_train.json) =="
+# The train-smoke scenario (see `switchback train --list`) presets the
+# small dims and implies --assert-improves: the command fails unless
+# every kind's loss strictly decreased over the run.
+"$BIN" train train-smoke \
+    --steps "$TRAIN_STEPS" \
+    --kinds switchback,standard \
+    --out "$REPO_ROOT/BENCH_train.json"
+
+echo
+echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json + $REPO_ROOT/BENCH_train.json"
