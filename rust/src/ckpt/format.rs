@@ -1,0 +1,587 @@
+//! The on-disk checkpoint format (version 1).
+//!
+//! ```text
+//! bytes 0..4   magic  b"SBCK"
+//! bytes 4..8   format version, u32 LE  (currently 1)
+//! bytes 8..16  manifest length M, u64 LE
+//! bytes 16..16+M  JSON manifest (util::json writer; human-inspectable)
+//! then         raw tensor blobs: little-endian f32, contiguous, at the
+//!              offsets recorded in the manifest (relative to blob base),
+//!              each CRC-32-checked on load
+//! ```
+//!
+//! Blob order: the model parameters in `ClipTrainModel::collect_params`
+//! layout order, then one run of per-tensor buffers per optimizer slot
+//! (`opt.<slot>.<tensor>`).  Exactness rules: full-range integers (seeds,
+//! RNG words, step counters) are serialized as decimal *strings* — JSON
+//! numbers are f64 and silently lose u64 precision; scalar f32 state the
+//! resume math depends on (data gain, Box–Muller spare, hyper floats) is
+//! serialized twice, display value for humans plus `*_bits` (the IEEE bit
+//! pattern) for exact reload.
+//!
+//! Saves write `<path>.tmp` then rename, so an interrupted snapshot never
+//! corrupts an existing file.
+
+use crate::config::{OptimizerKind, TrainHyper};
+use crate::data::{DataCursor, Shift};
+use crate::nn::LinearKind;
+use crate::optim::OptimizerState;
+use crate::serve::EncoderConfig;
+use crate::util::crc32::crc32;
+use crate::util::json::{self, ObjWriter, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+pub const MAGIC: &[u8; 4] = b"SBCK";
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Everything a resumed run needs to continue bit-identically (see the
+/// module docs of [`crate::ckpt`] for the inventory).
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    /// training step this snapshot was taken *after* (0 = pre-training)
+    pub step: u64,
+    /// model shape + precision kind + init seed
+    pub encoder: EncoderConfig,
+    /// optimizer/schedule hyperparameters of the run being snapshotted
+    pub hyper: TrainHyper,
+    /// the run's scheduled distribution shifts (the un-fired tail matters)
+    pub shifts: Vec<Shift>,
+    /// examples per step — changes the data draws, so resume validates it
+    pub batch: usize,
+    /// gradient-accumulation shard count — changes summation order ditto
+    pub grad_shards: usize,
+    /// tensor names, index-aligned with `params` (the train model layout)
+    pub param_names: Vec<String>,
+    pub params: Vec<Vec<f32>>,
+    pub opt: OptimizerState,
+    pub data: DataCursor,
+}
+
+/// Bytes moved and wall time of one save/load (the BENCH_ckpt numbers).
+#[derive(Debug, Clone, Copy)]
+pub struct IoStats {
+    pub bytes: u64,
+    pub secs: f64,
+}
+
+impl IoStats {
+    pub fn mb_per_s(&self) -> f64 {
+        self.bytes as f64 / 1e6 / self.secs.max(1e-9)
+    }
+}
+
+fn write_f32_exact(w: &mut ObjWriter, key: &str, v: f32) {
+    w.field_f32(key, v);
+    w.field_u64(&format!("{key}_bits"), v.to_bits() as u64);
+}
+
+fn read_f32_exact(v: &Value, key: &str) -> Result<f32> {
+    if let Some(b) = v.get(&format!("{key}_bits")).and_then(Value::as_f64) {
+        return Ok(f32::from_bits(b as u32));
+    }
+    v.get(key)
+        .and_then(Value::as_f64)
+        .map(|x| x as f32)
+        .ok_or_else(|| anyhow!("manifest missing {key}"))
+}
+
+fn read_opt_f32_exact(v: &Value, key: &str) -> Result<Option<f32>> {
+    match v.get(key) {
+        None | Some(Value::Null) => Ok(None),
+        Some(_) => read_f32_exact(v, key).map(Some),
+    }
+}
+
+fn write_u64_str(w: &mut ObjWriter, key: &str, v: u64) {
+    w.field_str(key, &v.to_string());
+}
+
+fn read_u64_str(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("manifest missing {key}"))?
+        .parse::<u64>()
+        .map_err(|_| anyhow!("manifest {key} is not a u64"))
+}
+
+fn read_u64_num(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .map(|x| x as u64)
+        .ok_or_else(|| anyhow!("manifest missing {key}"))
+}
+
+fn read_usize(v: &Value, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Value::as_usize)
+        .ok_or_else(|| anyhow!("manifest missing {key}"))
+}
+
+fn read_str<'a>(v: &'a Value, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("manifest missing {key}"))
+}
+
+fn manifest_json(ck: &TrainCheckpoint, blobs: &[(String, usize, u64, u32)]) -> String {
+    let e = &ck.encoder;
+    let mut model = ObjWriter::new();
+    model
+        .field_str("kind", e.kind.label())
+        .field_u64("dim", e.dim as u64)
+        .field_u64("heads", e.heads as u64)
+        .field_u64("blocks", e.blocks as u64)
+        .field_u64("embed_dim", e.embed_dim as u64)
+        .field_u64("patches", e.patches as u64)
+        .field_u64("patch_dim", e.patch_dim as u64)
+        .field_u64("text_seq", e.text_seq as u64)
+        .field_u64("vocab", e.vocab as u64);
+    write_u64_str(&mut model, "seed", e.seed);
+
+    let h = &ck.hyper;
+    let mut hyper = ObjWriter::new();
+    hyper.field_u64("steps", h.steps).field_u64("warmup", h.warmup);
+    write_f32_exact(&mut hyper, "lr", h.lr);
+    write_f32_exact(&mut hyper, "weight_decay", h.weight_decay);
+    write_f32_exact(&mut hyper, "beta1", h.beta1);
+    write_f32_exact(&mut hyper, "beta2", h.beta2);
+    hyper.field_str("optimizer", h.optimizer.label());
+    if let Some(l) = h.beta2_lambda {
+        write_f32_exact(&mut hyper, "beta2_lambda", l);
+    }
+    if let Some(c) = h.grad_clip {
+        write_f32_exact(&mut hyper, "grad_clip", c);
+    }
+    write_u64_str(&mut hyper, "seed", h.seed);
+
+    let shifts: Vec<String> = ck
+        .shifts
+        .iter()
+        .map(|s| {
+            let mut w = ObjWriter::new();
+            w.field_u64("at_step", s.at_step);
+            write_f32_exact(&mut w, "image_gain", s.image_gain);
+            w.field_bool("remap_concepts", s.remap_concepts);
+            w.finish()
+        })
+        .collect();
+
+    let d = &ck.data;
+    let mut data = ObjWriter::new();
+    write_u64_str(&mut data, "step", d.step);
+    write_f32_exact(&mut data, "gain", d.gain);
+    let mapping: Vec<String> = d.mapping.iter().map(|m| m.to_string()).collect();
+    data.field_raw("mapping", &format!("[{}]", mapping.join(",")));
+    let rng: Vec<String> = d.rng.iter().map(|w| json::quote(&w.to_string())).collect();
+    data.field_raw("rng", &format!("[{}]", rng.join(",")));
+    if let Some(s) = d.rng_spare {
+        write_f32_exact(&mut data, "rng_spare", s);
+    } else {
+        data.field_raw("rng_spare", "null");
+    }
+
+    let mut opt = ObjWriter::new();
+    opt.field_str("name", &ck.opt.name);
+    write_u64_str(&mut opt, "t", ck.opt.t);
+    let slots: Vec<String> =
+        ck.opt.slots.iter().map(|(label, _)| json::quote(label)).collect();
+    opt.field_raw("slots", &format!("[{}]", slots.join(",")));
+
+    let tensors: Vec<String> = blobs
+        .iter()
+        .map(|(name, len, offset, crc)| {
+            let mut w = ObjWriter::new();
+            w.field_str("name", name)
+                .field_u64("len", *len as u64)
+                .field_u64("offset", *offset)
+                .field_u64("crc", *crc as u64);
+            w.finish()
+        })
+        .collect();
+
+    let mut top = ObjWriter::new();
+    top.field_str("format", "switchback-ckpt")
+        .field_u64("version", FORMAT_VERSION as u64)
+        .field_u64("step", ck.step)
+        .field_u64("batch", ck.batch as u64)
+        .field_u64("grad_shards", ck.grad_shards as u64)
+        .field_raw("model", &model.finish())
+        .field_raw("hyper", &hyper.finish())
+        .field_raw("shifts", &format!("[{}]", shifts.join(",")))
+        .field_raw("data", &data.finish())
+        .field_raw("opt", &opt.finish())
+        .field_u64("n_params", ck.params.len() as u64)
+        .field_raw("tensors", &format!("[{}]", tensors.join(",")));
+    top.finish()
+}
+
+fn f32s_to_le_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; data.len() * 4];
+    for (chunk, v) in out.chunks_exact_mut(4).zip(data) {
+        chunk.copy_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn le_bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Serialize `ck` to `path` (atomic: temp file + rename).  Returns bytes
+/// written and wall time (save MB/s in BENCH_ckpt.json).
+pub fn save(path: &Path, ck: &TrainCheckpoint) -> Result<IoStats> {
+    if ck.param_names.len() != ck.params.len() {
+        bail!(
+            "param_names ({}) and params ({}) disagree",
+            ck.param_names.len(),
+            ck.params.len()
+        );
+    }
+    for (label, bufs) in &ck.opt.slots {
+        if bufs.len() != ck.params.len() {
+            bail!("opt slot {label:?} has {} tensors, model has {}", bufs.len(), ck.params.len());
+        }
+    }
+    let t0 = Instant::now();
+    // encode every blob once; offsets/crcs feed the manifest, bytes the file
+    let mut blob_meta: Vec<(String, usize, u64, u32)> = vec![];
+    let mut blob_bytes: Vec<Vec<u8>> = vec![];
+    let mut offset = 0u64;
+    let mut push = |name: String, data: &[f32], meta: &mut Vec<_>, bytes: &mut Vec<Vec<u8>>| {
+        let b = f32s_to_le_bytes(data);
+        meta.push((name, data.len(), offset, crc32(&b)));
+        offset += b.len() as u64;
+        bytes.push(b);
+    };
+    for (name, p) in ck.param_names.iter().zip(&ck.params) {
+        push(name.clone(), p, &mut blob_meta, &mut blob_bytes);
+    }
+    for (label, bufs) in &ck.opt.slots {
+        for (name, b) in ck.param_names.iter().zip(bufs) {
+            push(format!("opt.{label}.{name}"), b, &mut blob_meta, &mut blob_bytes);
+        }
+    }
+    let manifest = manifest_json(ck, &blob_meta);
+    debug_assert!(json::parse(&manifest).is_ok(), "invalid ckpt manifest");
+
+    let mut out: Vec<u8> =
+        Vec::with_capacity(16 + manifest.len() + offset as usize);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+    out.extend_from_slice(manifest.as_bytes());
+    for b in &blob_bytes {
+        out.extend_from_slice(b);
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {dir:?}"))?;
+        }
+    }
+    let tmp = path.with_extension("sbck.tmp");
+    std::fs::write(&tmp, &out).with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming to {path:?}"))?;
+    Ok(IoStats { bytes: out.len() as u64, secs: t0.elapsed().as_secs_f64() })
+}
+
+/// Deserialize and integrity-check a checkpoint.  Fails closed on a bad
+/// magic/version, a truncated file, or any blob whose CRC-32 disagrees
+/// with the manifest.
+pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
+    let t0 = Instant::now();
+    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let bytes = raw.len() as u64;
+    if raw.len() < 16 || &raw[0..4] != MAGIC {
+        bail!("{path:?} is not a switchback checkpoint (bad magic)");
+    }
+    let version = u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]);
+    if version != FORMAT_VERSION {
+        bail!("{path:?} has format version {version}, this build reads {FORMAT_VERSION}");
+    }
+    let mlen = u64::from_le_bytes(raw[8..16].try_into().unwrap()) as usize;
+    let blob_base = 16 + mlen;
+    if raw.len() < blob_base {
+        bail!("{path:?} is truncated inside the manifest");
+    }
+    let manifest = std::str::from_utf8(&raw[16..blob_base])
+        .map_err(|_| anyhow!("manifest is not UTF-8"))?;
+    let m = json::parse(manifest).map_err(|e| anyhow!("bad manifest JSON: {e}"))?;
+
+    let model = m.get("model").ok_or_else(|| anyhow!("manifest missing model"))?;
+    let kind_s = read_str(model, "kind")?;
+    let kind = LinearKind::parse(kind_s)
+        .ok_or_else(|| anyhow!("unknown precision kind {kind_s:?}"))?;
+    let encoder = EncoderConfig {
+        kind,
+        dim: read_usize(model, "dim")?,
+        heads: read_usize(model, "heads")?,
+        blocks: read_usize(model, "blocks")?,
+        embed_dim: read_usize(model, "embed_dim")?,
+        patches: read_usize(model, "patches")?,
+        patch_dim: read_usize(model, "patch_dim")?,
+        text_seq: read_usize(model, "text_seq")?,
+        vocab: read_usize(model, "vocab")?,
+        seed: read_u64_str(model, "seed")?,
+    };
+
+    let hv = m.get("hyper").ok_or_else(|| anyhow!("manifest missing hyper"))?;
+    let opt_s = read_str(hv, "optimizer")?;
+    let hyper = TrainHyper {
+        steps: read_u64_num(hv, "steps")?,
+        warmup: read_u64_num(hv, "warmup")?,
+        lr: read_f32_exact(hv, "lr")?,
+        weight_decay: read_f32_exact(hv, "weight_decay")?,
+        beta1: read_f32_exact(hv, "beta1")?,
+        beta2: read_f32_exact(hv, "beta2")?,
+        optimizer: OptimizerKind::parse(opt_s)
+            .ok_or_else(|| anyhow!("unknown optimizer {opt_s:?}"))?,
+        beta2_lambda: read_opt_f32_exact(hv, "beta2_lambda")?,
+        grad_clip: read_opt_f32_exact(hv, "grad_clip")?,
+        seed: read_u64_str(hv, "seed")?,
+    };
+
+    let shifts = m
+        .get("shifts")
+        .and_then(Value::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .map(|s| {
+            Ok(Shift {
+                at_step: read_u64_num(s, "at_step")?,
+                image_gain: read_f32_exact(s, "image_gain")?,
+                remap_concepts: s
+                    .get("remap_concepts")
+                    .and_then(Value::as_bool)
+                    .unwrap_or(false),
+            })
+        })
+        .collect::<Result<Vec<Shift>>>()?;
+
+    let dv = m.get("data").ok_or_else(|| anyhow!("manifest missing data"))?;
+    let rng_words = dv
+        .get("rng")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing data.rng"))?;
+    if rng_words.len() != 4 {
+        bail!("data.rng must have 4 words, got {}", rng_words.len());
+    }
+    let mut rng = [0u64; 4];
+    for (dst, w) in rng.iter_mut().zip(rng_words) {
+        *dst = w
+            .as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| anyhow!("data.rng word is not a u64 string"))?;
+    }
+    let data = DataCursor {
+        step: read_u64_str(dv, "step")?,
+        gain: read_f32_exact(dv, "gain")?,
+        mapping: dv
+            .get("mapping")
+            .and_then(Value::as_usize_vec)
+            .ok_or_else(|| anyhow!("manifest missing data.mapping"))?,
+        rng,
+        rng_spare: read_opt_f32_exact(dv, "rng_spare")?,
+    };
+
+    let ov = m.get("opt").ok_or_else(|| anyhow!("manifest missing opt"))?;
+    let opt_name = read_str(ov, "name")?.to_string();
+    let opt_t = read_u64_str(ov, "t")?;
+    let slot_labels: Vec<String> = ov
+        .get("slots")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing opt.slots"))?
+        .iter()
+        .map(|s| s.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad slot label")))
+        .collect::<Result<_>>()?;
+
+    let n_params = read_usize(&m, "n_params")?;
+    let tensors = m
+        .get("tensors")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing tensors"))?;
+    let expected = n_params * (1 + slot_labels.len());
+    if tensors.len() != expected {
+        bail!("manifest lists {} tensors, expected {expected}", tensors.len());
+    }
+
+    let mut names = Vec::with_capacity(tensors.len());
+    let mut blobs: Vec<Vec<f32>> = Vec::with_capacity(tensors.len());
+    for t in tensors {
+        let name = read_str(t, "name")?;
+        let len = read_usize(t, "len")?;
+        let off = read_usize(t, "offset")?;
+        let crc = read_u64_num(t, "crc")? as u32;
+        let lo = blob_base + off;
+        let hi = lo + len * 4;
+        if hi > raw.len() {
+            bail!("tensor {name:?} extends past end of file (truncated?)");
+        }
+        let chunk = &raw[lo..hi];
+        let got = crc32(chunk);
+        if got != crc {
+            bail!(
+                "tensor {name:?} failed its CRC-32 check \
+                 (stored {crc:#010x}, computed {got:#010x}) — corrupt checkpoint"
+            );
+        }
+        names.push(name.to_string());
+        blobs.push(le_bytes_to_f32s(chunk));
+    }
+
+    let params: Vec<Vec<f32>> = blobs.drain(..n_params).collect();
+    let param_names: Vec<String> = names[..n_params].to_vec();
+    let mut slots = Vec::with_capacity(slot_labels.len());
+    for label in slot_labels {
+        let bufs: Vec<Vec<f32>> = blobs.drain(..n_params).collect();
+        slots.push((label, bufs));
+    }
+
+    let ck = TrainCheckpoint {
+        step: read_u64_num(&m, "step")?,
+        encoder,
+        hyper,
+        shifts,
+        batch: read_usize(&m, "batch")?,
+        grad_shards: read_usize(&m, "grad_shards")?,
+        param_names,
+        params,
+        opt: OptimizerState { name: opt_name, t: opt_t, slots },
+        data,
+    };
+    Ok((ck, IoStats { bytes, secs: t0.elapsed().as_secs_f64() }))
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::nn::LinearKind;
+
+    pub(crate) fn sample_ckpt() -> TrainCheckpoint {
+        let mut hyper = TrainHyper::preset(40);
+        hyper.seed = u64::MAX - 3; // exercise full-range u64 round-trip
+        hyper.lr = 0.1; // not exactly representable — exercises *_bits
+        hyper.grad_clip = Some(1.0);
+        TrainCheckpoint {
+            step: 17,
+            encoder: EncoderConfig {
+                kind: LinearKind::SwitchBack,
+                dim: 8,
+                heads: 2,
+                blocks: 1,
+                embed_dim: 4,
+                patches: 3,
+                patch_dim: 5,
+                text_seq: 3,
+                vocab: 16,
+                seed: 0xDEAD_BEEF_CAFE_F00D,
+            },
+            hyper,
+            shifts: vec![Shift { at_step: 22, image_gain: 6.0, remap_concepts: true }],
+            batch: 8,
+            grad_shards: 3,
+            param_names: vec!["a".into(), "b".into()],
+            params: vec![vec![1.0, -2.5, 3.25], vec![0.5]],
+            opt: OptimizerState {
+                name: "stable_adamw".into(),
+                t: 17,
+                slots: vec![
+                    ("v".into(), vec![vec![0.1, 0.2, 0.3], vec![0.4]]),
+                    ("u".into(), vec![vec![1e-9, 2e-9, 3e-9], vec![4e-9]]),
+                ],
+            },
+            data: DataCursor {
+                step: 17,
+                gain: 6.0,
+                mapping: vec![2, 0, 1],
+                rng: [u64::MAX, 1, 0x0123_4567_89AB_CDEF, 42],
+                rng_spare: Some(0.123_456_79),
+            },
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let dir = std::env::temp_dir().join("sbck_fmt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.sbck");
+        let ck = sample_ckpt();
+        let saved = save(&path, &ck).unwrap();
+        assert!(saved.bytes > 0 && saved.secs >= 0.0);
+        let (back, loaded) = load(&path).unwrap();
+        assert_eq!(loaded.bytes, saved.bytes);
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.encoder.kind, ck.encoder.kind);
+        assert_eq!(back.encoder.seed, ck.encoder.seed);
+        assert_eq!(back.hyper.seed, ck.hyper.seed);
+        assert_eq!(back.hyper.lr.to_bits(), ck.hyper.lr.to_bits());
+        assert_eq!(back.hyper.grad_clip, ck.hyper.grad_clip);
+        assert_eq!(back.hyper.optimizer, ck.hyper.optimizer);
+        assert_eq!(back.shifts.len(), 1);
+        assert_eq!(back.shifts[0].at_step, 22);
+        assert_eq!((back.batch, back.grad_shards), (8, 3));
+        assert_eq!(back.param_names, ck.param_names);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.opt, ck.opt);
+        assert_eq!(back.data, ck.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_and_bad_headers_fail_closed() {
+        let dir = std::env::temp_dir().join("sbck_fmt_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.sbck");
+        let ck = sample_ckpt();
+        save(&path, &ck).unwrap();
+
+        // flip one bit inside the last tensor blob
+        let mut raw = std::fs::read(&path).unwrap();
+        let n = raw.len();
+        raw[n - 2] ^= 0x40;
+        let bad = dir.join("bitflip.sbck");
+        std::fs::write(&bad, &raw).unwrap();
+        let err = load(&bad).unwrap_err().to_string();
+        assert!(err.contains("CRC-32"), "{err}");
+
+        // truncation inside the blobs
+        let trunc = dir.join("trunc.sbck");
+        std::fs::write(&trunc, &std::fs::read(&path).unwrap()[..n - 3]).unwrap();
+        assert!(load(&trunc).is_err());
+
+        // wrong magic
+        let junk = dir.join("junk.sbck");
+        std::fs::write(&junk, b"NOPE....rest").unwrap();
+        let err = load(&junk).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        // future version
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[4] = 99;
+        let vfile = dir.join("v99.sbck");
+        std::fs::write(&vfile, &raw).unwrap();
+        let err = load(&vfile).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left_behind() {
+        let dir = std::env::temp_dir().join("sbck_fmt_atomic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.sbck");
+        save(&path, &sample_ckpt()).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp file left behind");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,177 @@
+//! `ckpt inspect` / `ckpt diff` — human-readable views over checkpoint
+//! files.  Both go through [`super::format::load`], so every inspection is
+//! also a full integrity check (magic, version, per-blob CRC-32).
+
+use super::format::{load, TrainCheckpoint};
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::path::Path;
+
+fn total_floats(ck: &TrainCheckpoint) -> usize {
+    ck.params.iter().map(Vec::len).sum()
+}
+
+/// One-screen summary of a checkpoint (the `ckpt inspect` output).
+pub fn inspect(path: &Path) -> Result<String> {
+    let (ck, io) = load(path)?;
+    let e = &ck.encoder;
+    let h = &ck.hyper;
+    let mut s = String::new();
+    let _ = writeln!(s, "checkpoint : {}", path.display());
+    let _ = writeln!(
+        s,
+        "format     : switchback-ckpt v{}   {} bytes   (all CRCs OK)",
+        super::FORMAT_VERSION,
+        io.bytes
+    );
+    let _ = writeln!(s, "step       : {} / {} (warmup {})", ck.step, h.steps, h.warmup);
+    let _ = writeln!(
+        s,
+        "model      : kind {}  dim {}  heads {}  blocks {}  embed {}  \
+         patches {}x{}  text {}x{} vocab  seed {}",
+        e.kind.label(),
+        e.dim,
+        e.heads,
+        e.blocks,
+        e.embed_dim,
+        e.patches,
+        e.patch_dim,
+        e.text_seq,
+        e.vocab,
+        e.seed
+    );
+    let _ = writeln!(
+        s,
+        "optimizer  : {} (t={})  lr {:e}  wd {}  betas ({}, {})",
+        ck.opt.name, ck.opt.t, h.lr, h.weight_decay, h.beta1, h.beta2
+    );
+    let _ = writeln!(
+        s,
+        "data       : step {}  gain {}  {} concepts  {} scheduled shift(s)",
+        ck.data.step,
+        ck.data.gain,
+        ck.data.mapping.len(),
+        ck.shifts.len()
+    );
+    let slot_names: Vec<&str> = ck.opt.slots.iter().map(|(l, _)| l.as_str()).collect();
+    let _ = writeln!(
+        s,
+        "tensors    : {} params ({} floats) + {} opt slot(s) [{}]",
+        ck.params.len(),
+        total_floats(&ck),
+        ck.opt.slots.len(),
+        slot_names.join(", ")
+    );
+    if let Some(ls) = super::log_scale(&ck.params) {
+        let _ = writeln!(s, "logit scale: {ls}  (temperature {})", ls.exp());
+    }
+    let _ = writeln!(s, "--- parameter tensors ---");
+    for (name, p) in ck.param_names.iter().zip(&ck.params) {
+        let rms = (p.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            / p.len().max(1) as f64)
+            .sqrt();
+        let _ = writeln!(s, "  {name:<24} {:>9} floats   rms {rms:.5}", p.len());
+    }
+    Ok(s)
+}
+
+/// Tensor-by-tensor comparison of two checkpoints (the `ckpt diff`
+/// output).  Returns the report and whether the *parameters* are
+/// bit-identical (optimizer state and cursors are reported separately).
+pub fn diff(a: &Path, b: &Path) -> Result<(String, bool)> {
+    let (ca, _) = load(a)?;
+    let (cb, _) = load(b)?;
+    let mut s = String::new();
+    let _ = writeln!(s, "a: {} (step {})", a.display(), ca.step);
+    let _ = writeln!(s, "b: {} (step {})", b.display(), cb.step);
+    if ca.param_names != cb.param_names {
+        let _ = writeln!(
+            s,
+            "LAYOUT MISMATCH: {} vs {} tensors — not comparable further",
+            ca.param_names.len(),
+            cb.param_names.len()
+        );
+        return Ok((s, false));
+    }
+    let mut identical = true;
+    let mut changed = 0usize;
+    for (name, (pa, pb)) in ca.param_names.iter().zip(ca.params.iter().zip(&cb.params)) {
+        if pa == pb {
+            continue;
+        }
+        identical = false;
+        changed += 1;
+        let n_diff = pa.iter().zip(pb).filter(|(x, y)| x != y).count();
+        let max_abs = pa
+            .iter()
+            .zip(pb)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        let _ = writeln!(
+            s,
+            "  {name:<24} {n_diff:>9}/{} elems differ   max |Δ| {max_abs:.6}",
+            pa.len()
+        );
+    }
+    if identical {
+        let _ = writeln!(s, "parameters: bit-identical ({} tensors)", ca.params.len());
+    } else {
+        let _ = writeln!(
+            s,
+            "parameters: {changed}/{} tensors differ",
+            ca.params.len()
+        );
+    }
+    let _ = writeln!(
+        s,
+        "optimizer : {} (t={}) vs {} (t={}) — state {}",
+        ca.opt.name,
+        ca.opt.t,
+        cb.opt.name,
+        cb.opt.t,
+        if ca.opt == cb.opt { "identical" } else { "differs" }
+    );
+    let _ = writeln!(
+        s,
+        "data      : step {} vs {} — cursor {}",
+        ca.data.step,
+        cb.data.step,
+        if ca.data == cb.data { "identical" } else { "differs" }
+    );
+    Ok((s, identical))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::{save, tests::sample_ckpt};
+    use super::*;
+
+    #[test]
+    fn inspect_and_diff_report() {
+        let dir = std::env::temp_dir().join("sbck_inspect_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let pa = dir.join("a.sbck");
+        let pb = dir.join("b.sbck");
+        let ck = sample_ckpt();
+        save(&pa, &ck).unwrap();
+        let mut ck2 = ck.clone();
+        ck2.params[0][1] += 0.5;
+        ck2.step = 18;
+        save(&pb, &ck2).unwrap();
+
+        let report = inspect(&pa).unwrap();
+        assert!(report.contains("switchback-ckpt v1"), "{report}");
+        assert!(report.contains("step       : 17"), "{report}");
+        assert!(report.contains("stable_adamw"), "{report}");
+        assert!(report.contains("logit scale"), "{report}");
+
+        let (d, same) = diff(&pa, &pa).unwrap();
+        assert!(same, "{d}");
+        assert!(d.contains("bit-identical"), "{d}");
+        let (d, same) = diff(&pa, &pb).unwrap();
+        assert!(!same, "{d}");
+        assert!(d.contains("1/3 elems differ") || d.contains("elems differ"), "{d}");
+        assert!(d.contains("1/2 tensors differ"), "{d}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

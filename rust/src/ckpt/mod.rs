@@ -1,0 +1,258 @@
+//! `ckpt` — versioned checkpoint/restore for the native training path
+//! (DESIGN.md §Checkpoint).
+//!
+//! A checkpoint captures *everything* a training step's math depends on,
+//! so `train --resume` continues **bit-identically** with an uninterrupted
+//! run (tested in [`crate::train`]):
+//!
+//! * model parameters (the [`crate::train::ClipTrainModel`] flat layout,
+//!   including the logit scale),
+//! * optimizer state ([`crate::optim::OptimizerState`]: AdamW/StableAdamW
+//!   first+second moments and the debiasing counter, Lion momentum),
+//! * the data-stream cursor ([`crate::data::DataCursor`]: RNG words,
+//!   Box–Muller spare, applied shift effects, step counter),
+//! * the run's schedule/hyper echo (steps, warmup, lr, optimizer, seed,
+//!   shift schedule) so a resume can rebuild the exact LR cosine and the
+//!   un-fired tail of the shift schedule — and fail closed on mismatch.
+//!
+//! On-disk format ([`format`]): magic + version, a JSON manifest (via the
+//! in-tree [`crate::util::json`] writer — human-inspectable with any JSON
+//! tool), then raw little-endian f32 tensor blobs, each CRC-32-checked
+//! ([`crate::util::crc32`]).  Writes go through a temp file + rename, so a
+//! crash mid-snapshot never corrupts an existing checkpoint.
+//!
+//! The same artifact feeds the serving path: [`encoder_weights`] reshapes
+//! a checkpoint's parameter vector into [`crate::serve::EncoderWeights`],
+//! which `serve --weights` loads at boot and the engine's
+//! `install_encoder` hot-swaps live (re-quantized for whatever
+//! [`crate::nn::LinearKind`] serving runs at).
+//!
+//! Consumers:
+//! * `train --ckpt-every/--ckpt-dir/--resume` — periodic snapshots with
+//!   retention + bit-identical resume (`crate::train::NativeTrainer`),
+//! * the trainer's **spike-rollback guard** (`--rollback-on-spike`),
+//!   which restores the last in-memory snapshot when the loss spikes and
+//!   skips the offending shard window,
+//! * `serve --weights` / `switchback pipeline` — load-at-boot + live
+//!   hot-swap, benchmarked in `BENCH_ckpt.json`,
+//! * `ckpt inspect` / `ckpt diff` ([`inspect`]).
+
+pub mod format;
+pub mod inspect;
+
+pub use format::{load, save, IoStats, TrainCheckpoint, FORMAT_VERSION};
+
+use crate::serve::{EncoderConfig, EncoderWeights};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Canonical snapshot filename inside a checkpoint directory.
+pub fn snapshot_filename(step: u64) -> String {
+    format!("ckpt-{step:08}.sbck")
+}
+
+/// `dir/ckpt-<step>.sbck`.
+pub fn snapshot_path(dir: &Path, step: u64) -> PathBuf {
+    dir.join(snapshot_filename(step))
+}
+
+/// All snapshots in `dir`, sorted by step ascending.
+pub fn list_snapshots(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return vec![];
+    };
+    let mut out: Vec<(u64, PathBuf)> = entries
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name().into_string().ok()?;
+            let step = name
+                .strip_prefix("ckpt-")?
+                .strip_suffix(".sbck")?
+                .parse::<u64>()
+                .ok()?;
+            Some((step, e.path()))
+        })
+        .collect();
+    out.sort_unstable_by_key(|(s, _)| *s);
+    out
+}
+
+/// Newest snapshot in `dir`, if any.
+pub fn latest_snapshot(dir: &Path) -> Option<(u64, PathBuf)> {
+    list_snapshots(dir).pop()
+}
+
+/// Delete all but the newest `keep` snapshots; returns how many were
+/// removed (best-effort: an unremovable file is skipped, not fatal).
+pub fn prune_snapshots(dir: &Path, keep: usize) -> usize {
+    let snaps = list_snapshots(dir);
+    let excess = snaps.len().saturating_sub(keep.max(1));
+    snaps[..excess]
+        .iter()
+        .filter(|(_, p)| std::fs::remove_file(p).is_ok())
+        .count()
+}
+
+/// Resolve a CLI checkpoint argument: a `.sbck` file is used as-is, a
+/// directory resolves to its newest snapshot.
+pub fn resolve(path: &str) -> Result<PathBuf> {
+    let p = Path::new(path);
+    if p.is_file() {
+        return Ok(p.to_path_buf());
+    }
+    if p.is_dir() {
+        return latest_snapshot(p)
+            .map(|(_, f)| f)
+            .ok_or_else(|| anyhow!("no ckpt-*.sbck snapshots in {path:?}"));
+    }
+    bail!("checkpoint path {path:?} does not exist");
+}
+
+/// Reshape a checkpoint's flat parameter vector into the serving-encoder
+/// weight layout.  The layout contract is `ClipTrainModel::collect_params`
+/// order: patch_embed, tok_embed, image blocks (6 projections each),
+/// image out-proj, text blocks, text out-proj, logit scale.
+pub fn encoder_weights(cfg: &EncoderConfig, params: &[Vec<f32>]) -> Result<EncoderWeights> {
+    let expected = 2 + 6 * (cfg.blocks * 2) + 2 + 1;
+    if params.len() != expected {
+        bail!(
+            "checkpoint has {} tensors, a {}-block model needs {expected}",
+            params.len(),
+            cfg.blocks
+        );
+    }
+    let d = cfg.dim;
+    // (rows, cols) of the six block projections, canonical order
+    let proj_shapes = [(d, d), (d, d), (d, d), (d, d), (4 * d, d), (d, 4 * d)];
+    let mat = |data: &Vec<f32>, rows: usize, cols: usize, what: &str| -> Result<Matrix> {
+        if data.len() != rows * cols {
+            bail!("{what}: {} floats, expected {rows}×{cols}", data.len());
+        }
+        Ok(Matrix::from_vec(rows, cols, data.clone()))
+    };
+    let mut it = params.iter();
+    let mut next = |rows: usize, cols: usize, what: &str| -> Result<Matrix> {
+        mat(it.next().expect("count checked above"), rows, cols, what)
+    };
+    let patch_embed = next(d, cfg.patch_dim, "patch_embed")?;
+    let tok_embed = next(cfg.vocab, d, "tok_embed")?;
+    let mut tower = |label: &str| -> Result<(Vec<[Matrix; 6]>, Matrix)> {
+        let mut blocks = Vec::with_capacity(cfg.blocks);
+        for b in 0..cfg.blocks {
+            let mut mats = Vec::with_capacity(6);
+            for (p, &(r, c)) in proj_shapes.iter().enumerate() {
+                mats.push(next(r, c, &format!("{label}.block{b}.proj{p}"))?);
+            }
+            let arr: [Matrix; 6] = mats.try_into().map_err(|_| anyhow!("6 projections"))?;
+            blocks.push(arr);
+        }
+        let out = next(cfg.embed_dim, d, &format!("{label}.out_proj"))?;
+        Ok((blocks, out))
+    };
+    let (image_blocks, image_out) = tower("img")?;
+    let (text_blocks, text_out) = tower("txt")?;
+    Ok(EncoderWeights {
+        patch_embed,
+        tok_embed,
+        image_blocks,
+        image_out,
+        text_blocks,
+        text_out,
+    })
+}
+
+/// The checkpoint's logit scale (last tensor in the layout).
+pub fn log_scale(params: &[Vec<f32>]) -> Option<f32> {
+    params.last().and_then(|t| t.first()).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LinearKind;
+    use crate::serve::ClipEncoder;
+    use crate::tensor::Rng;
+    use crate::train::ClipTrainModel;
+
+    fn tiny(kind: LinearKind) -> EncoderConfig {
+        EncoderConfig {
+            kind,
+            dim: 16,
+            heads: 2,
+            blocks: 2,
+            embed_dim: 8,
+            patches: 4,
+            patch_dim: 12,
+            text_seq: 5,
+            vocab: 64,
+            seed: 7,
+        }
+    }
+
+    /// The ckpt → serve contract: an encoder rebuilt from a train model's
+    /// parameter vector encodes bit-identically to that model, for every
+    /// precision kind (the weights are the same f32 master; serving only
+    /// re-quantizes them).
+    #[test]
+    fn encoder_from_params_matches_train_model_bit_for_bit() {
+        for kind in [LinearKind::Standard, LinearKind::SwitchBack, LinearKind::LlmInt8] {
+            let cfg = tiny(kind);
+            let model = ClipTrainModel::new(cfg.clone());
+            let params = model.collect_params();
+            let w = encoder_weights(&cfg, &params).unwrap();
+            let enc = ClipEncoder::from_weights(cfg.clone(), w);
+            let mut rng = Rng::seed(31);
+            let img: Vec<f32> = (0..cfg.image_len()).map(|_| rng.normal()).collect();
+            let toks: Vec<i32> =
+                (0..cfg.text_seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+            let m_img = model.encode_images_infer(&Matrix::from_vec(
+                cfg.patches,
+                cfg.patch_dim,
+                img.clone(),
+            ));
+            let e_img = &enc.encode_images(&[&img])[0];
+            assert_eq!(m_img.row(0), &e_img[..], "{kind:?} image tower drifted");
+            let m_txt = model.encode_texts_infer(&toks);
+            let e_txt = &enc.encode_texts(&[&toks])[0];
+            assert_eq!(m_txt.row(0), &e_txt[..], "{kind:?} text tower drifted");
+        }
+    }
+
+    #[test]
+    fn encoder_weights_rejects_bad_layouts() {
+        let cfg = tiny(LinearKind::Standard);
+        let model = ClipTrainModel::new(cfg.clone());
+        let mut params = model.collect_params();
+        params.pop();
+        assert!(encoder_weights(&cfg, &params).is_err(), "missing tensor");
+        let mut params = model.collect_params();
+        params[0].pop();
+        assert!(encoder_weights(&cfg, &params).is_err(), "mis-sized tensor");
+        assert_eq!(log_scale(&model.collect_params()), Some(model.log_scale));
+    }
+
+    #[test]
+    fn snapshot_dir_listing_and_retention() {
+        let dir = std::env::temp_dir().join("sbck_dir_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for step in [5u64, 30, 10, 20] {
+            std::fs::write(snapshot_path(&dir, step), b"stub").unwrap();
+        }
+        std::fs::write(dir.join("not-a-ckpt.txt"), b"x").unwrap();
+        let steps: Vec<u64> = list_snapshots(&dir).iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![5, 10, 20, 30]);
+        assert_eq!(latest_snapshot(&dir).unwrap().0, 30);
+        assert_eq!(prune_snapshots(&dir, 2), 2);
+        let steps: Vec<u64> = list_snapshots(&dir).iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, vec![20, 30]);
+        // resolve: dir → latest, file → itself, bogus → error
+        let latest = resolve(dir.to_str().unwrap()).unwrap();
+        assert!(latest.ends_with(snapshot_filename(30)));
+        let file = snapshot_path(&dir, 20);
+        assert_eq!(resolve(file.to_str().unwrap()).unwrap(), file);
+        assert!(resolve("/nonexistent/nowhere").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -103,6 +103,18 @@ impl Batch {
     }
 }
 
+/// A snapshot of [`SyntheticClip`]'s mutable state (checkpoint payload):
+/// the live RNG words, the shift-schedule effects applied so far, and the
+/// step counter that triggers future shifts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataCursor {
+    pub step: u64,
+    pub gain: f32,
+    pub mapping: Vec<usize>,
+    pub rng: [u64; 4],
+    pub rng_spare: Option<f32>,
+}
+
 /// The synthetic corpus stream.
 pub struct SyntheticClip {
     cfg: DataConfig,
@@ -218,6 +230,38 @@ impl SyntheticClip {
         Batch { images, tokens, concepts }
     }
 
+    /// The stream's full mutable cursor — everything `next_batch` depends
+    /// on besides the (reconstructable) config and prototypes.  Saved into
+    /// checkpoints so a resumed run draws the exact same batches.
+    pub fn cursor(&self) -> DataCursor {
+        let (rng, spare) = self.rng.state();
+        DataCursor {
+            step: self.step,
+            gain: self.gain,
+            mapping: self.mapping.clone(),
+            rng,
+            rng_spare: spare,
+        }
+    }
+
+    /// Restore a cursor captured by [`Self::cursor`].  The stream must
+    /// have been built from the same `DataConfig` (prototypes are derived
+    /// from the config seed, not part of the cursor).
+    pub fn restore(&mut self, c: &DataCursor) -> Result<(), String> {
+        if c.mapping.len() != self.mapping.len() {
+            return Err(format!(
+                "data cursor mapping has {} concepts, stream has {}",
+                c.mapping.len(),
+                self.mapping.len()
+            ));
+        }
+        self.step = c.step;
+        self.gain = c.gain;
+        self.mapping = c.mapping.clone();
+        self.rng = Rng::from_state(c.rng, c.rng_spare);
+        Ok(())
+    }
+
     /// Deterministic eval set: `per_concept` images per concept, fixed seed
     /// independent of training progress (but honouring the current gain /
     /// mapping so eval matches the live distribution).
@@ -305,6 +349,40 @@ mod tests {
         };
         assert!((rms(&b2.images) - rms(&b3.images)).abs() < 0.2);
         assert!(rms(&b_shift.images) > 4.0 * rms(&b3.images));
+    }
+
+    /// Capture mid-stream (after a shift fired), restore into a fresh
+    /// stream: subsequent batches are bit-identical, including the shift
+    /// state (gain, concept remap) and the un-fired tail of the schedule.
+    #[test]
+    fn cursor_roundtrip_resumes_exact_stream() {
+        let mut c = cfg();
+        c.shifts = vec![
+            Shift { at_step: 2, image_gain: 4.0, remap_concepts: true },
+            Shift { at_step: 5, image_gain: 0.25, remap_concepts: false },
+        ];
+        let mut a = SyntheticClip::new(c.clone());
+        for _ in 0..3 {
+            a.next_batch(6); // steps 1..3 — first shift fired, second pending
+        }
+        let cur = a.cursor();
+        assert_eq!(cur.step, 3);
+        assert_eq!(cur.gain, 4.0);
+        let mut b = SyntheticClip::new(c);
+        b.restore(&cur).unwrap();
+        for _ in 0..4 {
+            // crosses the pending at_step=5 shift on both streams
+            let ba = a.next_batch(6);
+            let bb = b.next_batch(6);
+            assert_eq!(ba.images, bb.images);
+            assert_eq!(ba.tokens, bb.tokens);
+            assert_eq!(ba.concepts, bb.concepts);
+        }
+        // mismatched concept count fails closed
+        let mut tiny = cfg();
+        tiny.n_concepts = 3;
+        let mut other = SyntheticClip::new(tiny);
+        assert!(other.restore(&cur).is_err());
     }
 
     #[test]

@@ -27,7 +27,11 @@
 //!   - [`serve`] is the first runtime subsystem *off* the training path: a
 //!     batched int8 embedding-serving engine (dynamic micro-batcher +
 //!     forward-only encoder + worker pool + sharded LRU cache) built on
-//!     the same measured-speed substrate.
+//!     the same measured-speed substrate,
+//!   - [`ckpt`] is the subsystem that joins the two: versioned, CRC-checked
+//!     binary checkpoints of model + optimizer + RNG/schedule state, giving
+//!     the trainer bit-identical `--resume` and spike-rollback, and the
+//!     serving engine `--weights` load-at-boot plus live weight hot-swap.
 //!
 //! Python never runs on the training path: `make artifacts` lowers the
 //! model once; the `switchback` binary is then self-contained.
@@ -37,6 +41,7 @@
 //! `pjrt` cargo feature; everything else (including the native trainer,
 //! the serving engine and all benches) builds and tests without it.
 
+pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod data;

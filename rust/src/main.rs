@@ -20,17 +20,22 @@
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use switchback::ckpt;
 use switchback::config::OptimizerKind;
 use switchback::coordinator::common::spike_shifts;
+use switchback::coordinator::eval::nearest_class_accuracy;
 use switchback::coordinator::registry;
+use switchback::data::SyntheticClip;
 use switchback::nn::LinearKind;
 use switchback::serve::{
-    run_loadgen, write_bench_json, BatchPolicy, EncodeInput, EncoderConfig, Engine,
-    LoadgenConfig, ServeConfig,
+    run_loadgen, write_bench_json, BatchPolicy, ClipEncoder, EncodeInput,
+    EncoderConfig, Engine, LoadgenConfig, ServeConfig,
 };
 use switchback::tensor::Rng;
-use switchback::train::{write_bench_train_json, NativeTrainConfig, NativeTrainer};
-use switchback::util::json;
+use switchback::train::{
+    write_bench_train_json, ClipTrainModel, NativeTrainConfig, NativeTrainer,
+};
+use switchback::util::json::{self, ObjWriter};
 use switchback::util::regression::{compare_bench, DEFAULT_TOLERANCE};
 
 #[cfg(feature = "pjrt")]
@@ -59,7 +64,14 @@ USAGE:
   switchback exp --all [--steps N]          run every experiment    [pjrt]
   switchback info <artifact>                inspect an artifact manifest [pjrt]
   switchback serve [OPTIONS]                serving-engine smoke run
+                                            (--weights CKPT loads trained
+                                            weights at boot)
   switchback loadgen [OPTIONS]              closed-loop serving benchmark
+  switchback pipeline [OPTIONS]             train → snapshot → serve →
+                                            hot-swap → eval end-to-end,
+                                            writes BENCH_ckpt.json
+  switchback ckpt inspect <path>            checkpoint manifest + CRC check
+  switchback ckpt diff <a> <b>              tensor-by-tensor comparison
   switchback benchdiff <baseline> <new>     bench-regression gate
                                             [--tol X --strict]
 
@@ -86,8 +98,29 @@ TRAIN OPTIONS (native):
   --metrics PATH         write per-run JSONL metrics
   --out PATH             report path (default: BENCH_train.json)
   --assert-improves      exit nonzero unless every run's loss decreased
+  --ckpt-every N         write a snapshot every N steps (needs --ckpt-dir)
+  --ckpt-dir DIR         snapshot directory (ckpt-<step>.sbck files)
+  --ckpt-keep K          snapshot retention (default: 3)
+  --rollback-on-spike    restore the last snapshot when the loss spikes
+                         and skip the offending shard window
+  --resume PATH          continue bit-identically from a checkpoint file
+                         or directory; shape/schedule/optimizer flags
+                         conflict (the checkpoint's values apply) and
+                         only run-control flags (--out, --metrics,
+                         --ckpt-*, --quiet) are accepted
   --dim/--heads/--blocks/--embed-dim/--patches/--patch-dim/--text-seq/--vocab
                          model shape (defaults: 64/4/2/32, 8/32/8/256)
+  --quiet
+
+PIPELINE OPTIONS:
+  --steps N              training steps (default: 80; snapshots at N/2, N)
+  --kind K               precision kind end to end (default: switchback)
+  --optimizer K          adamw | stable_adamw | lion (default: stable_adamw)
+  --requests N           serving requests around the hot-swap (default: 512)
+  --concurrency N        client threads (default: 8)
+  --ckpt-dir DIR         snapshot directory (default: ckpts_pipeline)
+  --seed N               (default: 42)
+  --out PATH             report path (default: BENCH_ckpt.json)
   --quiet
 
 TRAIN-AOT OPTIONS:
@@ -132,6 +165,9 @@ SERVE / LOADGEN OPTIONS:
                          serving model shape (defaults: 128/4/2/64,
                          16/64/16/512)
   --seed N               model + population seed (default: 42)
+  --weights PATH         serve: boot from a training checkpoint (file or
+                         snapshot dir; shape comes from the checkpoint,
+                         --kind picks the serving quantization)
 ";
 
 /// Every `--key value` flag any subcommand accepts.  The parser rejects
@@ -168,6 +204,11 @@ const VALUE_FLAGS: &[&str] = &[
     "--cache-capacity",
     "--out",
     "--tol",
+    "--weights",
+    "--resume",
+    "--ckpt-every",
+    "--ckpt-dir",
+    "--ckpt-keep",
     "--dim",
     "--heads",
     "--blocks",
@@ -187,6 +228,7 @@ const BOOL_FLAGS: &[&str] = &[
     "--no-cache",
     "--assert-improves",
     "--strict",
+    "--rollback-on-spike",
     "-v",
     "-q",
 ];
@@ -400,6 +442,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("\n(`switchback exp --list` shows the PJRT figure experiments)");
         return Ok(());
     }
+    if let Some(resume) = args.flags.get("resume") {
+        return cmd_train_resume(args, resume);
+    }
     // an optional scenario name (from coordinator::registry) presets the
     // run matrix; explicit flags still override
     let scenario = match args.positional.first().map(String::as_str) {
@@ -445,6 +490,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out: String = args.get("out", "BENCH_train.json".to_string())?;
     let verbose = !args.has("--quiet") && !args.has("-q");
     let multi = kinds.len() * optimizers.len() > 1;
+    if multi && args.get::<u64>("ckpt-every", 0)? > 0 {
+        bail!(
+            "--ckpt-every snapshots one run — narrow the matrix to a single \
+             kind and optimizer (e.g. --kind switchback --optimizer stable_adamw)"
+        );
+    }
 
     let build_cfg = |kind: LinearKind, optimizer: OptimizerKind| -> Result<NativeTrainConfig> {
         let mut cfg = NativeTrainConfig::preset(kind, steps);
@@ -506,6 +557,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         cfg.eval_per_concept = args.get("eval-per-concept", cfg.eval_per_concept)?;
         cfg.shifts = if with_shifts { spike_shifts(steps) } else { vec![] };
+        cfg.ckpt_every = args.get("ckpt-every", 0)?;
+        cfg.ckpt_dir = args.flags.get("ckpt-dir").cloned();
+        cfg.ckpt_keep = args.get("ckpt-keep", 3)?;
+        if cfg.ckpt_keep == 0 {
+            bail!("--ckpt-keep must be at least 1");
+        }
+        if cfg.ckpt_every > 0 && cfg.ckpt_dir.is_none() {
+            bail!("--ckpt-every needs --ckpt-dir");
+        }
+        cfg.rollback_on_spike = args.has("--rollback-on-spike");
         cfg.metrics_path = args.flags.get("metrics").map(|base| {
             if multi {
                 format!("{base}.{}_{}.jsonl", kind.label(), optimizer.label())
@@ -588,6 +649,368 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         println!("train smoke OK — loss decreased in every run");
     }
+    Ok(())
+}
+
+/// `train --resume <path>`: continue a checkpointed run bit-identically.
+/// Shape, hyperparameters, batch/shard geometry and the shift schedule are
+/// adopted from the checkpoint (anything else would silently diverge from
+/// the original run — see DESIGN.md §Checkpoint); only run-control flags
+/// (--out, --metrics, --ckpt-*, --quiet) apply.
+fn cmd_train_resume(args: &Args, resume: &str) -> Result<()> {
+    // everything the resumed math depends on comes from the checkpoint;
+    // accepting one of these flags and silently dropping it would let a
+    // user believe they extended/retuned the run when nothing changed
+    const RESUME_FIXED: &[&str] = &[
+        "steps", "warmup", "lr", "weight-decay", "beta1", "beta2",
+        "beta2-lambda", "grad-clip", "optimizer", "optimizers", "kind",
+        "kinds", "seed", "batch", "shards", "dim", "heads", "blocks",
+        "embed-dim", "patches", "patch-dim", "text-seq", "vocab",
+    ];
+    for key in RESUME_FIXED {
+        if args.flags.contains_key(*key) {
+            bail!(
+                "--{key} conflicts with --resume: the value is adopted from \
+                 the checkpoint (resume must replay the original run's math)"
+            );
+        }
+    }
+    if args.has("--with-shifts") {
+        bail!("--with-shifts conflicts with --resume: the shift schedule is \
+               adopted from the checkpoint");
+    }
+    let file = ckpt::resolve(resume)?;
+    let (ck, io) = ckpt::load(&file)?;
+    println!(
+        "resuming from {} (step {}/{}, {:.1} MB/s load)",
+        file.display(),
+        ck.step,
+        ck.hyper.steps,
+        io.mb_per_s()
+    );
+    let mut cfg = NativeTrainConfig::preset(ck.encoder.kind, ck.hyper.steps);
+    cfg.hyper = ck.hyper.clone();
+    cfg.encoder = ck.encoder.clone();
+    cfg.shifts = ck.shifts.clone();
+    cfg.batch = ck.batch;
+    cfg.grad_shards = ck.grad_shards;
+    cfg.eval_per_concept = args.get("eval-per-concept", cfg.eval_per_concept)?;
+    cfg.metrics_path = args.flags.get("metrics").cloned();
+    cfg.ckpt_every = args.get("ckpt-every", 0)?;
+    cfg.ckpt_dir = args.flags.get("ckpt-dir").cloned();
+    cfg.ckpt_keep = args.get("ckpt-keep", 3)?;
+    if cfg.ckpt_keep == 0 {
+        bail!("--ckpt-keep must be at least 1");
+    }
+    if cfg.ckpt_every > 0 && cfg.ckpt_dir.is_none() {
+        // default to snapshotting back into the directory we resumed from
+        if let Some(dir) = file.parent() {
+            cfg.ckpt_dir = Some(dir.to_string_lossy().into_owned());
+        }
+    }
+    cfg.rollback_on_spike = args.has("--rollback-on-spike");
+    if cfg.rollback_on_spike {
+        // the guard's online loss-history/cooldown state is deliberately
+        // not part of the checkpoint (DESIGN.md §Checkpoint): the
+        // *training math* resumes bit-identically, but the detector
+        // restarts cold, so a run that ROLLED BACK near the snapshot may
+        // not be reproduced by resuming across that window
+        println!(
+            "note: --rollback-on-spike restarts the spike detector with an \
+             empty loss history; guard decisions near the resume point may \
+             differ from the uninterrupted run"
+        );
+    }
+    let verbose = !args.has("--quiet") && !args.has("-q");
+    let echo = cfg.clone();
+    let mut trainer = NativeTrainer::new(cfg);
+    trainer.restore(&ck)?;
+    let res = trainer.run(verbose)?;
+    res.print();
+    let out: String = args.get("out", "BENCH_train.json".to_string())?;
+    write_bench_train_json(&out, &echo, &[res])?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// `ckpt inspect <path>` / `ckpt diff <a> <b>` — every inspection is also
+/// a full CRC-32 integrity check.
+fn cmd_ckpt(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("inspect") => {
+            let Some(path) = args.positional.get(1) else {
+                bail!("ckpt inspect: missing <path> (file or snapshot dir)");
+            };
+            let file = ckpt::resolve(path)?;
+            print!("{}", ckpt::inspect::inspect(&file)?);
+            Ok(())
+        }
+        Some("diff") => {
+            let (Some(a), Some(b)) = (args.positional.get(1), args.positional.get(2))
+            else {
+                bail!("ckpt diff: expected two paths");
+            };
+            let (report, _identical) =
+                ckpt::inspect::diff(&ckpt::resolve(a)?, &ckpt::resolve(b)?)?;
+            print!("{report}");
+            Ok(())
+        }
+        _ => bail!("usage: switchback ckpt <inspect|diff> <path> [path2]"),
+    }
+}
+
+/// The end-to-end `pipeline` scenario: train with snapshots → verify the
+/// round trip → serve the mid-run weights → hot-swap to the final weights
+/// under live traffic (zero dropped requests) → eval the served weights
+/// against the train model (bit-identical encodes).  Emits
+/// BENCH_ckpt.json (schema: EXPERIMENTS.md §Ckpt).
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let steps: u64 = args.get("steps", 80)?;
+    if steps < 4 {
+        bail!("--steps must be at least 4 (snapshots at N/2 and N)");
+    }
+    let kind_s: String = args.get("kind", "switchback".to_string())?;
+    let Some(kind) = LinearKind::parse(&kind_s) else {
+        bail!("bad --kind {kind_s:?} (standard | switchback | switchback_m | llmint8)");
+    };
+    let optimizer = args
+        .flags
+        .get("optimizer")
+        .map(|s| OptimizerKind::parse(s).ok_or_else(|| anyhow::anyhow!("bad optimizer {s}")))
+        .transpose()?
+        .unwrap_or(OptimizerKind::StableAdamw);
+    let requests: usize = args.count("requests", 512)?;
+    let concurrency: usize = args.get("concurrency", 8)?;
+    if requests == 0 || concurrency == 0 {
+        bail!("--requests and --concurrency must be positive");
+    }
+    let seed: u64 = args.get("seed", 42)?;
+    let dir: String = args.get("ckpt-dir", "ckpts_pipeline".to_string())?;
+    let out: String = args.get("out", "BENCH_ckpt.json".to_string())?;
+    let verbose = !args.has("--quiet") && !args.has("-q");
+
+    // ---- 1) train, snapshotting at N/2 and N -------------------------
+    let mut cfg = NativeTrainConfig::preset(kind, steps);
+    cfg.hyper.optimizer = optimizer;
+    cfg.hyper.seed = seed;
+    cfg.encoder.seed = seed;
+    cfg.ckpt_every = (steps / 2).max(1);
+    cfg.ckpt_dir = Some(dir.clone());
+    cfg.ckpt_keep = 4;
+    println!("== pipeline 1/4: train {} steps (snapshots every {}) ==", steps, cfg.ckpt_every);
+    let mid_step = cfg.ckpt_every;
+    let mut trainer = NativeTrainer::new(cfg);
+    let train_res = trainer.run(verbose)?;
+    train_res.print();
+    let save_mb_s =
+        train_res.ckpt_bytes as f64 / 1e6 / train_res.ckpt_save_secs.max(1e-9);
+
+    // ---- 2) load both snapshots back, verify the round trip ----------
+    let dir_path = std::path::Path::new(&dir);
+    let (mid_ck, _) = ckpt::load(&ckpt::snapshot_path(dir_path, mid_step))?;
+    let (final_ck, load_io) = ckpt::load(&ckpt::snapshot_path(dir_path, steps))?;
+    let live = trainer.final_checkpoint().expect("run just completed");
+    let round_trip_ok = final_ck.params == live.params
+        && final_ck.opt == live.opt
+        && final_ck.data == live.data;
+    if !round_trip_ok {
+        bail!("checkpoint round trip is not bit-identical to the live trainer state");
+    }
+    println!(
+        "== pipeline 2/4: round trip OK — save {:.1} MB/s, load {:.1} MB/s, {} bytes ==",
+        save_mb_s,
+        load_io.mb_per_s(),
+        load_io.bytes
+    );
+
+    // ---- 3) serve the mid-run weights, hot-swap to final mid-traffic --
+    let enc_cfg = mid_ck.encoder.clone();
+    let image_len = enc_cfg.image_len();
+    let (text_seq, vocab) = (enc_cfg.text_seq, enc_cfg.vocab);
+    let serve_cfg = ServeConfig {
+        encoder: enc_cfg.clone(),
+        policy: BatchPolicy {
+            max_batch: 16,
+            max_wait: std::time::Duration::from_micros(500),
+        },
+        workers: 0,
+        cache_capacity: 8192.max(requests * 2),
+        cache_shards: 0,
+    };
+    let mid_enc = ClipEncoder::from_weights(
+        enc_cfg.clone(),
+        ckpt::encoder_weights(&enc_cfg, &mid_ck.params)?,
+    );
+    let engine = Engine::start_with_encoder(serve_cfg, mid_enc);
+    let mut rng = Rng::seed(seed ^ 0x51BE);
+    let probe: Vec<f32> = (0..image_len).map(|_| rng.normal()).collect();
+    let pre = engine
+        .encode(EncodeInput::Image(probe.clone()))
+        .map_err(|e| anyhow::anyhow!("probe encode failed: {e}"))?;
+    if !engine
+        .encode(EncodeInput::Image(probe.clone()))
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .cache_hit
+    {
+        bail!("probe did not warm the cache");
+    }
+
+    // build the new encoder *before* the swap — preparation (quantize) is
+    // the expensive part and happens outside the engine entirely
+    let final_enc = ClipEncoder::from_weights(
+        enc_cfg.clone(),
+        ckpt::encoder_weights(&enc_cfg, &final_ck.params)?,
+    );
+    println!(
+        "== pipeline 3/4: {requests} requests × {concurrency} clients with a \
+         mid-traffic hot-swap =="
+    );
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+    let next = AtomicUsize::new(0);
+    let errors = AtomicU64::new(0);
+    let mut swap_pause = std::time::Duration::ZERO;
+    std::thread::scope(|s| -> Result<()> {
+        for c in 0..concurrency {
+            let engine = &engine;
+            let next = &next;
+            let errors = &errors;
+            s.spawn(move || {
+                let mut rng = Rng::seed(0xC11E07 + c as u64);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= requests {
+                        return;
+                    }
+                    let input = if rng.uniform() < 0.7 {
+                        EncodeInput::Image((0..image_len).map(|_| rng.normal()).collect())
+                    } else {
+                        EncodeInput::Text(
+                            (0..text_seq).map(|_| rng.below(vocab) as i32).collect(),
+                        )
+                    };
+                    if engine.encode(input).is_err() {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        // install the new weights once traffic is in full flight
+        while next.load(Ordering::Relaxed) < requests / 2 {
+            std::thread::yield_now();
+        }
+        swap_pause = engine
+            .install_encoder(final_enc)
+            .map_err(|e| anyhow::anyhow!("hot-swap failed: {e}"))?;
+        Ok(())
+    })?;
+    let dropped = errors.load(Ordering::Relaxed);
+    if dropped > 0 {
+        bail!("hot-swap dropped {dropped} in-flight requests");
+    }
+    let post = engine
+        .encode(EncodeInput::Image(probe.clone()))
+        .map_err(|e| anyhow::anyhow!("post-swap probe failed: {e}"))?;
+    let cache_invalidated = !post.cache_hit;
+    let weights_changed = *post.embedding != *pre.embedding;
+    let snap = engine.metrics().snapshot();
+    println!(
+        "   hot-swap pause {:.1} µs  (generation {}, cache invalidated: \
+         {cache_invalidated}, weights changed: {weights_changed})",
+        swap_pause.as_secs_f64() * 1e6,
+        engine.generation(),
+    );
+    snap.print(engine.kind_label());
+
+    // ---- 4) eval: the served weights must encode exactly like the model
+    println!("== pipeline 4/4: zero-shot eval through the serving engine ==");
+    let mut model = ClipTrainModel::new(final_ck.encoder.clone());
+    model.load_params(&final_ck.params);
+    // rebuild the training corpus through the trainer's own constructor so
+    // the eval distribution can never drift from what the model trained on
+    let mut eval_train_cfg = NativeTrainConfig::preset(kind, steps);
+    eval_train_cfg.hyper = final_ck.hyper.clone();
+    eval_train_cfg.encoder = final_ck.encoder.clone();
+    eval_train_cfg.shifts = final_ck.shifts.clone();
+    let mut data = SyntheticClip::new(eval_train_cfg.data_config());
+    data.restore(&final_ck.data)
+        .map_err(|e| anyhow::anyhow!("eval data cursor: {e}"))?;
+    let n_concepts = data.config().n_concepts;
+    let embed_dim = enc_cfg.embed_dim;
+    let mut class_embs: Vec<f32> = Vec::with_capacity(n_concepts * embed_dim);
+    for c in 0..n_concepts {
+        let caption = data.canonical_caption(c);
+        let e = engine
+            .encode(EncodeInput::Text(caption))
+            .map_err(|e| anyhow::anyhow!("class encode failed: {e}"))?;
+        class_embs.extend(e.embedding.iter());
+    }
+    let eval = data.eval_set(2);
+    let mut img_embs: Vec<f32> = Vec::with_capacity(eval.concepts.len() * embed_dim);
+    let mut eval_matches_model = true;
+    for i in 0..eval.concepts.len() {
+        let img = eval.images[i * image_len..(i + 1) * image_len].to_vec();
+        let served = engine
+            .encode(EncodeInput::Image(img.clone()))
+            .map_err(|e| anyhow::anyhow!("eval encode failed: {e}"))?;
+        let modeled = model.encode_images_infer(&switchback::tensor::Matrix::from_vec(
+            enc_cfg.patches,
+            enc_cfg.patch_dim,
+            img,
+        ));
+        if modeled.row(0) != &served.embedding[..] {
+            eval_matches_model = false;
+        }
+        img_embs.extend(served.embedding.iter());
+    }
+    let eval_acc =
+        nearest_class_accuracy(&img_embs, &class_embs, embed_dim, &eval.concepts);
+    println!(
+        "   zero-shot acc {:.1}% over {} images ({} concepts) — engine/model \
+         encodes {}",
+        100.0 * eval_acc,
+        eval.concepts.len(),
+        n_concepts,
+        if eval_matches_model { "bit-identical" } else { "DIVERGED" }
+    );
+    if !eval_matches_model {
+        bail!("serving engine and train model disagree on the same weights");
+    }
+    engine.shutdown();
+
+    // ---- BENCH_ckpt.json ---------------------------------------------
+    let mut config = ObjWriter::new();
+    config
+        .field_u64("steps", steps)
+        .field_str("optimizer", optimizer.label())
+        .field_u64("requests", requests as u64)
+        .field_u64("concurrency", concurrency as u64)
+        .field_u64("seed", seed)
+        .field_u64("dim", enc_cfg.dim as u64)
+        .field_u64("blocks", enc_cfg.blocks as u64);
+    let mut entry = ObjWriter::new();
+    entry
+        .field_str("kind", kind.label())
+        .field_f32("train_final_loss", train_res.final_loss)
+        .field_f32("train_tail_loss", train_res.tail_loss)
+        .field_u64("snapshots", train_res.snapshots as u64)
+        .field_u64("ckpt_bytes", load_io.bytes)
+        .field_f32("save_mb_s", save_mb_s as f32)
+        .field_f32("load_mb_s", load_io.mb_per_s() as f32)
+        .field_bool("round_trip_ok", round_trip_ok)
+        .field_f32("hot_swap_pause_us", (swap_pause.as_secs_f64() * 1e6) as f32)
+        .field_u64("hot_swaps", snap.hot_swaps)
+        .field_u64("swap_requests", requests as u64)
+        .field_u64("dropped_requests", dropped)
+        .field_bool("cache_invalidated", cache_invalidated)
+        .field_bool("weights_changed", weights_changed)
+        .field_f32("eval_acc", eval_acc)
+        .field_bool("eval_matches_model", eval_matches_model);
+    let mut top = ObjWriter::new();
+    top.field_str("bench", "ckpt_pipeline")
+        .field_raw("config", &config.finish())
+        .field_raw("results", &format!("[{}]", entry.finish()));
+    std::fs::write(&out, top.finish() + "\n")?;
+    println!("wrote {out}");
     Ok(())
 }
 
@@ -698,17 +1121,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let Some(kind) = LinearKind::parse(&kind_s) else {
         bail!("bad --kind {kind_s:?} (standard | switchback | switchback_m | llmint8)");
     };
-    let cfg = serve_config_from(args, kind)?;
+    let mut cfg = serve_config_from(args, kind)?;
+    // --weights: boot from a training checkpoint — shape and f32 master
+    // weights come from the file, --kind picks the serving quantization
+    let loaded = match args.flags.get("weights") {
+        Some(wpath) => {
+            let file = ckpt::resolve(wpath)?;
+            let (ck, io) = ckpt::load(&file)?;
+            cfg.encoder = EncoderConfig { kind, ..ck.encoder.clone() };
+            println!(
+                "loaded {} (step {}/{}, {} bytes, {:.1} MB/s) — serving as {}",
+                file.display(),
+                ck.step,
+                ck.hyper.steps,
+                io.bytes,
+                io.mb_per_s(),
+                kind.label()
+            );
+            let weights = ckpt::encoder_weights(&cfg.encoder, &ck.params)?;
+            Some(ClipEncoder::from_weights(cfg.encoder.clone(), weights))
+        }
+        None => None,
+    };
     let image_len = cfg.encoder.image_len();
     let text_seq = cfg.encoder.text_seq;
     let vocab = cfg.encoder.vocab;
     println!(
-        "starting engine: kind={} dim={} blocks={}",
+        "starting engine: kind={} dim={} blocks={} weights={}",
         kind.label(),
         cfg.encoder.dim,
-        cfg.encoder.blocks
+        cfg.encoder.blocks,
+        if loaded.is_some() { "checkpoint" } else { "seeded" }
     );
-    let engine = Engine::start(cfg);
+    let engine = match loaded {
+        Some(enc) => Engine::start_with_encoder(cfg, enc),
+        None => Engine::start(cfg),
+    };
     println!(
         "encoder resident weights: {:.1} KiB (pre-quantized at load)",
         engine.weight_bytes() as f64 / 1024.0
@@ -844,6 +1292,8 @@ fn main() -> Result<()> {
         "train-aot" | "exp" | "info" => cmd_needs_pjrt(&cmd),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "ckpt" => cmd_ckpt(&args),
         "benchdiff" => cmd_benchdiff(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -981,5 +1431,79 @@ mod tests {
             .unwrap();
         assert!(a.has("--assert-improves"));
         assert!(a.has("--strict"));
+    }
+
+    #[test]
+    fn ckpt_flags_validate() {
+        // --ckpt-every without --ckpt-dir is a hard error
+        let a = Args::parse(&argv(&[
+            "--ckpt-every",
+            "10",
+            "--kind",
+            "switchback",
+            "--steps",
+            "2",
+        ]))
+        .unwrap();
+        let err = cmd_train(&a).unwrap_err();
+        assert!(err.to_string().contains("--ckpt-dir"), "{err}");
+        // snapshotting a multi-run matrix is rejected up front
+        let a = Args::parse(&argv(&[
+            "--ckpt-every",
+            "10",
+            "--ckpt-dir",
+            "/tmp/nowhere",
+            "--kinds",
+            "standard,switchback",
+            "--steps",
+            "2",
+        ]))
+        .unwrap();
+        let err = cmd_train(&a).unwrap_err();
+        assert!(err.to_string().contains("single"), "{err}");
+        // resume from a nonexistent path fails with a clear message
+        let a = Args::parse(&argv(&["--resume", "/nonexistent/ckpts"])).unwrap();
+        let err = cmd_train(&a).unwrap_err();
+        assert!(err.to_string().contains("does not exist"), "{err}");
+        // flags the checkpoint fixes are rejected, not silently dropped
+        let a = Args::parse(&argv(&[
+            "--resume",
+            "/nonexistent/ckpts",
+            "--steps",
+            "200",
+        ]))
+        .unwrap();
+        let err = cmd_train(&a).unwrap_err();
+        assert!(err.to_string().contains("--steps conflicts"), "{err}");
+        let a = Args::parse(&argv(&[
+            "--resume",
+            "/nonexistent/ckpts",
+            "--with-shifts",
+        ]))
+        .unwrap();
+        let err = cmd_train(&a).unwrap_err();
+        assert!(err.to_string().contains("--with-shifts conflicts"), "{err}");
+    }
+
+    #[test]
+    fn ckpt_subcommand_usage_errors() {
+        let a = Args::parse(&argv(&[])).unwrap();
+        assert!(cmd_ckpt(&a).unwrap_err().to_string().contains("usage"));
+        let a = Args::parse(&argv(&["inspect"])).unwrap();
+        assert!(cmd_ckpt(&a).unwrap_err().to_string().contains("missing"));
+        let a = Args::parse(&argv(&["diff", "only_one"])).unwrap();
+        assert!(cmd_ckpt(&a).unwrap_err().to_string().contains("two paths"));
+    }
+
+    #[test]
+    fn pipeline_validates_args() {
+        let a = Args::parse(&argv(&["--steps", "2"])).unwrap();
+        let err = cmd_pipeline(&a).unwrap_err();
+        assert!(err.to_string().contains("--steps"), "{err}");
+        let a = Args::parse(&argv(&["--kind", "bogus"])).unwrap();
+        assert!(cmd_pipeline(&a).is_err());
+        let a = Args::parse(&argv(&["--requests", "0"])).unwrap();
+        let err = cmd_pipeline(&a).unwrap_err();
+        assert!(err.to_string().contains("--requests"), "{err}");
     }
 }

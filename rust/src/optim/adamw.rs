@@ -13,7 +13,7 @@
 //! The ε inside the max follows Appendix E.2 exactly (divide-by-zero
 //! guard: `g²/maximum(u, ε²)`).
 
-use super::{Optimizer, ParamMeta, StepStats};
+use super::{Optimizer, OptimizerState, ParamMeta, StepStats};
 use crate::util::threads::num_threads;
 
 /// Hyperparameters for [`AdamW`] / StableAdamW.
@@ -199,6 +199,30 @@ impl Optimizer for AdamW {
         } else {
             "adamw"
         }
+    }
+
+    fn export_state(&self) -> OptimizerState {
+        OptimizerState {
+            name: self.name().to_string(),
+            t: self.t,
+            slots: vec![
+                ("v".into(), self.state.iter().map(|s| s.v.clone()).collect()),
+                ("u".into(), self.state.iter().map(|s| s.u.clone()).collect()),
+            ],
+        }
+    }
+
+    fn import_state(&mut self, st: &OptimizerState) -> Result<(), String> {
+        let sizes: Vec<usize> = self.state.iter().map(|s| s.v.len()).collect();
+        st.check_shape(self.name(), &["v", "u"], &sizes)?;
+        self.t = st.t;
+        for (dst, src) in self.state.iter_mut().zip(&st.slots[0].1) {
+            dst.v.copy_from_slice(src);
+        }
+        for (dst, src) in self.state.iter_mut().zip(&st.slots[1].1) {
+            dst.u.copy_from_slice(src);
+        }
+        Ok(())
     }
 }
 

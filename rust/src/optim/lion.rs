@@ -5,7 +5,7 @@
 //! under-performs AdamW at ViT-Huge scale.  Included as a comparison
 //! baseline for the stability experiments.
 
-use super::{Optimizer, ParamMeta, StepStats};
+use super::{Optimizer, OptimizerState, ParamMeta, StepStats};
 
 #[derive(Debug, Clone)]
 pub struct LionConfig {
@@ -74,6 +74,23 @@ impl Optimizer for Lion {
 
     fn name(&self) -> &'static str {
         "lion"
+    }
+
+    fn export_state(&self) -> OptimizerState {
+        OptimizerState {
+            name: self.name().to_string(),
+            t: 0, // Lion carries no debiasing counter
+            slots: vec![("m".into(), self.m.clone())],
+        }
+    }
+
+    fn import_state(&mut self, st: &OptimizerState) -> Result<(), String> {
+        let sizes: Vec<usize> = self.m.iter().map(Vec::len).collect();
+        st.check_shape(self.name(), &["m"], &sizes)?;
+        for (dst, src) in self.m.iter_mut().zip(&st.slots[0].1) {
+            dst.copy_from_slice(src);
+        }
+        Ok(())
     }
 }
 

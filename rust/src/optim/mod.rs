@@ -75,6 +75,61 @@ impl StepStats {
     }
 }
 
+/// A snapshot of an optimizer's mutable state — the checkpoint payload
+/// that makes `train --resume` bit-identical ([`crate::ckpt`]).  Slots are
+/// the optimizer's moment buffers (AdamW: `v`+`u`; Lion: `m`), each a
+/// per-tensor list index-aligned with the parameter layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimizerState {
+    /// [`Optimizer::name`] of the exporter (validated on import)
+    pub name: String,
+    /// debiasing step counter (0 for optimizers without one)
+    pub t: u64,
+    /// `(slot label, per-tensor flat buffers)`
+    pub slots: Vec<(String, Vec<Vec<f32>>)>,
+}
+
+impl OptimizerState {
+    /// Validate that `slots` matches the expected labels and per-tensor
+    /// buffer sizes (shared import precondition of every optimizer).
+    fn check_shape(&self, name: &str, labels: &[&str], sizes: &[usize]) -> Result<(), String> {
+        if self.name != name {
+            return Err(format!(
+                "optimizer state is for {:?}, cannot import into {name:?}",
+                self.name
+            ));
+        }
+        if self.slots.len() != labels.len() {
+            return Err(format!(
+                "{name}: expected {} state slots, got {}",
+                labels.len(),
+                self.slots.len()
+            ));
+        }
+        for ((slot, bufs), &label) in self.slots.iter().zip(labels) {
+            if slot != label {
+                return Err(format!("{name}: expected slot {label:?}, got {slot:?}"));
+            }
+            if bufs.len() != sizes.len() {
+                return Err(format!(
+                    "{name}.{label}: {} tensors, optimizer has {}",
+                    bufs.len(),
+                    sizes.len()
+                ));
+            }
+            for (i, (b, &n)) in bufs.iter().zip(sizes).enumerate() {
+                if b.len() != n {
+                    return Err(format!(
+                        "{name}.{label}[{i}]: {} floats, tensor has {n}",
+                        b.len()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// A first-order optimizer over flat per-tensor f32 buffers.
 pub trait Optimizer: Send {
     /// One update step.  `lr` is the *scheduled* learning rate for this
@@ -94,6 +149,15 @@ pub trait Optimizer: Send {
     fn state_floats_per_param(&self) -> usize;
 
     fn name(&self) -> &'static str;
+
+    /// Snapshot the mutable state (moments + step counter) for a
+    /// checkpoint.
+    fn export_state(&self) -> OptimizerState;
+
+    /// Restore a snapshot taken by [`Self::export_state`].  Fails closed
+    /// on optimizer/slot/shape mismatch — a silently mis-shaped import
+    /// would corrupt the resumed run.
+    fn import_state(&mut self, st: &OptimizerState) -> Result<(), String>;
 }
 
 /// Global-norm gradient clipping (the Fig 10 comparison baseline; the paper
@@ -142,5 +206,68 @@ mod tests {
         let mut grads = vec![vec![0.0; 4]];
         let pre = clip_global_norm(&mut grads, 1.0);
         assert_eq!(pre, 0.0);
+    }
+
+    fn metas(n: usize) -> Vec<ParamMeta> {
+        (0..n).map(|i| ParamMeta::weight(&format!("p{i}"))).collect()
+    }
+
+    /// Export mid-run, import into a fresh optimizer, continue both:
+    /// every subsequent update is bit-identical (the resume contract).
+    #[test]
+    fn state_roundtrip_continues_bit_identically() {
+        let sizes = [3usize, 5];
+        let grad_at = |t: u64| -> Vec<Vec<f32>> {
+            let elem = |i: usize, j: usize| {
+                ((t + 1) as f32) * 0.1 + i as f32 + j as f32 * 0.01
+            };
+            sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| (0..n).map(|j| elem(i, j)).collect())
+                .collect()
+        };
+        for kind in ["adamw", "stable_adamw", "lion"] {
+            let mk = || -> Box<dyn Optimizer> {
+                match kind {
+                    "adamw" => Box::new(AdamW::new(AdamWConfig::plain(0.99), &metas(2), &sizes)),
+                    "stable_adamw" => {
+                        Box::new(AdamW::new(AdamWConfig::stable(0.99), &metas(2), &sizes))
+                    }
+                    _ => Box::new(Lion::new(LionConfig::default(), &metas(2), &sizes)),
+                }
+            };
+            let mut a = mk();
+            let mut pa: Vec<Vec<f32>> = sizes.iter().map(|&n| vec![1.0; n]).collect();
+            for t in 0..7 {
+                a.step(&mut pa, &grad_at(t), 1e-2, None);
+            }
+            let st = a.export_state();
+            assert_eq!(st.name, kind);
+            let mut b = mk();
+            let mut pb = pa.clone();
+            b.import_state(&st).unwrap();
+            for t in 7..14 {
+                a.step(&mut pa, &grad_at(t), 1e-2, None);
+                b.step(&mut pb, &grad_at(t), 1e-2, None);
+            }
+            assert_eq!(pa, pb, "{kind}: resumed updates diverged");
+            assert_eq!(a.export_state(), b.export_state(), "{kind}: moments diverged");
+        }
+    }
+
+    /// Mis-shaped or cross-optimizer imports fail closed.
+    #[test]
+    fn state_import_rejects_mismatch() {
+        let mut adam = AdamW::new(AdamWConfig::plain(0.99), &metas(1), &[4]);
+        let lion = Lion::new(LionConfig::default(), &metas(1), &[4]);
+        let err = adam.import_state(&lion.export_state()).unwrap_err();
+        assert!(err.contains("lion"), "{err}");
+        let mut st = adam.export_state();
+        st.slots[1].1[0].pop(); // wrong buffer length
+        assert!(adam.import_state(&st).is_err());
+        let mut st = adam.export_state();
+        st.slots.swap(0, 1); // wrong slot order
+        assert!(adam.import_state(&st).is_err());
     }
 }

@@ -135,4 +135,97 @@ mod tests {
         assert_eq!(fp8_round(3.1, E5M2), 3.0);
         assert_eq!(fp8_round(3.3, E5M2), 3.5);
     }
+
+    /// NaN propagates through the cast (the paper's float8 simulation must
+    /// surface divergence, not mask it), for both formats and both sign
+    /// bits of the payload.
+    #[test]
+    fn nan_propagates() {
+        for fmt in [E4M3, E5M2] {
+            assert!(fp8_round(f32::NAN, fmt).is_nan(), "{}", fmt.name);
+            assert!(fp8_round(-f32::NAN, fmt).is_nan(), "{}", fmt.name);
+        }
+        // and through the slice path, leaving neighbours untouched
+        let mut xs = [1.0f32, f32::NAN, -2.0];
+        fp8_round_slice(&mut xs, E4M3);
+        assert_eq!(xs[0], 1.0);
+        assert!(xs[1].is_nan());
+        assert_eq!(xs[2], -2.0);
+    }
+
+    /// ±Inf saturates to ±max (fn-flavoured formats are finite), and the
+    /// saturation boundary is half-way between the last two grid points.
+    #[test]
+    fn infinity_and_saturation_boundaries() {
+        for (fmt, max) in [(E4M3, 448.0f32), (E5M2, 57344.0)] {
+            assert_eq!(fp8_round(f32::INFINITY, fmt), max, "{}", fmt.name);
+            assert_eq!(fp8_round(f32::NEG_INFINITY, fmt), -max, "{}", fmt.name);
+            assert_eq!(fp8_round(max, fmt), max);
+            assert_eq!(fp8_round(f32::MAX, fmt), max);
+            // one ulp above max still saturates rather than escaping the grid
+            assert_eq!(fp8_round(max * 1.001, fmt), max);
+        }
+    }
+
+    /// E5M2 subnormals: quantum 2⁻¹⁶ below the 2⁻¹⁴ min normal; round to
+    /// nearest with ties-to-even on the subnormal grid.
+    #[test]
+    fn e5m2_subnormal_grid() {
+        let q = 2.0f32.powi(-16);
+        for m in 1..4 {
+            let v = m as f32 * q;
+            assert_eq!(fp8_round(v, E5M2), v, "subnormal grid point {m}");
+            assert_eq!(fp8_round(-v, E5M2), -v);
+        }
+        assert_eq!(fp8_round(q * 0.4, E5M2), 0.0);
+        assert_eq!(fp8_round(q * 0.6, E5M2), q);
+        // tie at 0.5·q goes to even (0); tie at 1.5·q goes to even (2q)
+        assert_eq!(fp8_round(q * 0.5, E5M2), 0.0);
+        assert_eq!(fp8_round(q * 1.5, E5M2), 2.0 * q);
+        // min normal boundary is exact
+        assert_eq!(fp8_round(2.0f32.powi(-14), E5M2), 2.0f32.powi(-14));
+    }
+
+    /// f32 inputs that are *themselves* subnormal (< 2⁻¹²⁶) are far below
+    /// either format's smallest subnormal and must flush to ±0, preserving
+    /// nothing but the sign.
+    #[test]
+    fn f32_subnormal_inputs_flush_to_zero() {
+        let tiny = f32::from_bits(1); // smallest positive f32 subnormal
+        for fmt in [E4M3, E5M2] {
+            assert_eq!(fp8_round(tiny, fmt), 0.0, "{}", fmt.name);
+            assert_eq!(fp8_round(-tiny, fmt), 0.0, "{}", fmt.name);
+            assert_eq!(fp8_round(f32::MIN_POSITIVE / 2.0, fmt), 0.0);
+        }
+    }
+
+    /// The cast is idempotent: round(round(x)) == round(x) across normals,
+    /// subnormals, saturated values and signed zeros — i.e. every output
+    /// is a fixed point of the grid (a round-trip property the fp8
+    /// training simulation relies on every step).
+    #[test]
+    fn round_trip_is_idempotent() {
+        for fmt in [E4M3, E5M2] {
+            let mut probes: Vec<f32> = vec![0.0, -0.0, 1e-30, -1e-30, 1e30, -1e30];
+            let mut x = -600.0f32;
+            while x < 600.0 {
+                probes.push(x);
+                x += 0.618;
+            }
+            // dense sweep through the subnormal band too
+            for m in 0..40 {
+                probes.push(m as f32 * 2.0f32.powi(-18));
+            }
+            for &p in &probes {
+                let once = fp8_round(p, fmt);
+                let twice = fp8_round(once, fmt);
+                assert_eq!(
+                    once.to_bits(),
+                    twice.to_bits(),
+                    "{}: {p} → {once} → {twice} not idempotent",
+                    fmt.name
+                );
+            }
+        }
+    }
 }

@@ -89,6 +89,23 @@ impl Tower {
     }
 }
 
+/// Raw f32 model weights in the serving encoder's layout — the bridge
+/// between a training checkpoint ([`crate::ckpt`]) and a live encoder.
+/// Block matrices are in the canonical projection order
+/// (`wq, wk, wv, wo, w1, w2`), matching the train model's param layout.
+pub struct EncoderWeights {
+    /// `[dim, patch_dim]`
+    pub patch_embed: Matrix,
+    /// `[vocab, dim]`
+    pub tok_embed: Matrix,
+    pub image_blocks: Vec<[Matrix; 6]>,
+    /// `[embed_dim, dim]`
+    pub image_out: Matrix,
+    pub text_blocks: Vec<[Matrix; 6]>,
+    /// `[embed_dim, dim]`
+    pub text_out: Matrix,
+}
+
 /// The serving encoder: image + text towers with pre-quantized weights.
 pub struct ClipEncoder {
     cfg: EncoderConfig,
@@ -123,6 +140,61 @@ impl ClipEncoder {
         let image_tower = build_tower(cfg.patches, &mut rng);
         let text_tower = build_tower(cfg.text_seq, &mut rng);
         Self { cfg, patch_embed, tok_embed, image_tower, text_tower }
+    }
+
+    /// Build an encoder from explicit f32 weights (a loaded checkpoint)
+    /// instead of fresh seeds.  `cfg.kind` picks the serving quantization
+    /// scheme applied to those weights — the same trained f32 master can
+    /// serve as Standard, SwitchBack or LLM.int8().  Panics on shape
+    /// mismatch (callers validate via [`crate::ckpt`] first).
+    pub fn from_weights(cfg: EncoderConfig, w: EncoderWeights) -> Self {
+        assert_eq!(cfg.dim % cfg.heads, 0, "dim must divide by heads");
+        assert_eq!(w.image_blocks.len(), cfg.blocks, "image tower block count");
+        assert_eq!(w.text_blocks.len(), cfg.blocks, "text tower block count");
+        assert_eq!(
+            (w.patch_embed.rows, w.patch_embed.cols),
+            (cfg.dim, cfg.patch_dim),
+            "patch_embed shape"
+        );
+        assert_eq!((w.tok_embed.rows, w.tok_embed.cols), (cfg.vocab, cfg.dim));
+        let lin = |m: &Matrix| Linear { w: m.clone(), kind: cfg.kind }.prepare();
+        let build_tower = |seq: usize, blocks: &[[Matrix; 6]], out: &Matrix| -> Tower {
+            assert_eq!((out.rows, out.cols), (cfg.embed_dim, cfg.dim), "out_proj shape");
+            // a dummy RNG seeds the scaffold block; every projection is
+            // overwritten before prepare() quantizes anything
+            let mut scaffold_rng = Rng::seed(0);
+            let prepared = blocks
+                .iter()
+                .map(|mats| {
+                    let mut blk = TransformerBlock::new(
+                        cfg.dim,
+                        cfg.heads,
+                        seq,
+                        cfg.kind,
+                        &mut scaffold_rng,
+                    );
+                    for (dst, src) in blk.projections_mut().into_iter().zip(mats) {
+                        assert_eq!(
+                            (dst.w.rows, dst.w.cols),
+                            (src.rows, src.cols),
+                            "block projection shape"
+                        );
+                        dst.w = src.clone();
+                    }
+                    blk.prepare()
+                })
+                .collect();
+            Tower { seq, blocks: prepared, out_proj: lin(out) }
+        };
+        let image_tower = build_tower(cfg.patches, &w.image_blocks, &w.image_out);
+        let text_tower = build_tower(cfg.text_seq, &w.text_blocks, &w.text_out);
+        Self {
+            patch_embed: lin(&w.patch_embed),
+            tok_embed: w.tok_embed,
+            image_tower,
+            text_tower,
+            cfg,
+        }
     }
 
     pub fn config(&self) -> &EncoderConfig {

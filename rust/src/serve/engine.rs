@@ -23,11 +23,11 @@ use super::encoder::{ClipEncoder, EncoderConfig};
 use super::metrics::ServeMetrics;
 use super::EncodeInput;
 use crate::util::threads::num_threads;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Engine construction knobs.
 #[derive(Debug, Clone)]
@@ -74,10 +74,26 @@ struct Job {
 }
 
 struct Shared {
-    encoder: ClipEncoder,
+    /// shape contract every request is validated against — fixed at boot;
+    /// hot-swapped encoders must match it (kind may differ)
+    cfg: EncoderConfig,
+    /// the live encoder.  Workers take the read lock only long enough to
+    /// clone the `Arc` (one pointer bump), so a hot-swap's exclusive pause
+    /// is the write-lock acquisition, not a batch's forward pass.
+    encoder: RwLock<Arc<ClipEncoder>>,
+    /// cache-key generation: bumped on every hot-swap, mixed into every
+    /// cache key, so embeddings from old weights become unreachable (and
+    /// LRU-evict) without walking or locking the whole cache
+    generation: AtomicU64,
     queue: BatchQueue<Job>,
     cache: Option<ShardedLru>,
     metrics: ServeMetrics,
+}
+
+/// Mix the cache generation into a content hash.  Generation 0 leaves the
+/// key untouched, so pre-swap behavior (and tests) are unchanged.
+fn cache_key(content: u64, generation: u64) -> u64 {
+    content ^ generation.wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// The running engine (workers live until [`Engine::shutdown`] / drop).
@@ -90,6 +106,18 @@ impl Engine {
     /// Build the encoder (pre-quantizing all weights once) and start the
     /// worker pool.
     pub fn start(cfg: ServeConfig) -> Engine {
+        let encoder = ClipEncoder::new(cfg.encoder.clone());
+        Self::start_with_encoder(cfg, encoder)
+    }
+
+    /// Start with an already-built encoder (e.g. weights loaded from a
+    /// checkpoint via [`ClipEncoder::from_weights`] instead of fresh
+    /// seeds).  The encoder's shape must match `cfg.encoder`.
+    pub fn start_with_encoder(cfg: ServeConfig, encoder: ClipEncoder) -> Engine {
+        assert!(
+            same_shape(encoder.config(), &cfg.encoder),
+            "encoder shape does not match the serve config"
+        );
         let workers = if cfg.workers > 0 {
             cfg.workers
         } else {
@@ -106,7 +134,9 @@ impl Engine {
             None
         };
         let shared = Arc::new(Shared {
-            encoder: ClipEncoder::new(cfg.encoder),
+            cfg: cfg.encoder,
+            encoder: RwLock::new(Arc::new(encoder)),
+            generation: AtomicU64::new(0),
             queue: BatchQueue::new(cfg.policy),
             cache,
             metrics: ServeMetrics::new(),
@@ -120,6 +150,41 @@ impl Engine {
         Engine { shared, workers: handles }
     }
 
+    /// Atomically install a new encoder between micro-batches (live weight
+    /// hot-swap).  In-flight requests are never dropped: batches already
+    /// executing finish on the old encoder (their workers hold an `Arc`),
+    /// queued requests encode on the new one, and the cache generation
+    /// bump invalidates every stale embedding.  Returns the exclusive
+    /// pause (write-lock hold, a pointer swap — microseconds).
+    pub fn install_encoder(&self, encoder: ClipEncoder) -> Result<Duration, String> {
+        let sh = &self.shared;
+        if !same_shape(encoder.config(), &sh.cfg) {
+            return Err(format!(
+                "hot-swap rejected: encoder shape {:?} does not match the \
+                 serving shape contract {:?}",
+                encoder.config(),
+                sh.cfg
+            ));
+        }
+        let fresh = Arc::new(encoder);
+        let t0 = Instant::now();
+        {
+            let mut slot = sh.encoder.write().map_err(|_| "encoder lock poisoned")?;
+            *slot = fresh;
+            // bump inside the write hold so no request can pair the new
+            // weights with an old-generation cache key
+            sh.generation.fetch_add(1, Ordering::SeqCst);
+        }
+        let pause = t0.elapsed();
+        sh.metrics.record_swap(pause.as_nanos() as u64);
+        Ok(pause)
+    }
+
+    /// Cache generation (bumped once per hot-swap).
+    pub fn generation(&self) -> u64 {
+        self.shared.generation.load(Ordering::SeqCst)
+    }
+
     /// Blocking encode of one input.  Thread-safe; call from any number of
     /// client threads.
     pub fn encode(&self, input: EncodeInput) -> EncodeResult {
@@ -131,7 +196,7 @@ impl Engine {
         // counted after validation so hit_rate's denominator is accepted
         // requests only
         sh.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        let key = input.content_hash();
+        let key = cache_key(input.content_hash(), sh.generation.load(Ordering::SeqCst));
         let t0 = Instant::now();
         if let Some(cache) = &sh.cache {
             if let Some(emb) = cache.get(key) {
@@ -155,7 +220,7 @@ impl Engine {
     }
 
     fn validate(&self, input: &EncodeInput) -> Result<(), String> {
-        let cfg = self.shared.encoder.config();
+        let cfg = &self.shared.cfg;
         match input {
             EncodeInput::Image(px) => {
                 if px.len() != cfg.image_len() {
@@ -187,14 +252,16 @@ impl Engine {
         &self.shared.metrics
     }
 
-    /// The encoder's model shape (loadgen builds matching inputs from it).
+    /// The engine's model-shape contract (loadgen builds matching inputs
+    /// from it; hot-swaps never change it).
     pub fn encoder_config(&self) -> &EncoderConfig {
-        self.shared.encoder.config()
+        &self.shared.cfg
     }
 
-    /// Precision label of the serving encoder ("standard", "switchback", …).
+    /// Precision label of the *current* serving encoder ("standard",
+    /// "switchback", …) — may change across hot-swaps.
     pub fn kind_label(&self) -> &'static str {
-        self.shared.encoder.config().kind.label()
+        self.shared.encoder.read().unwrap().config().kind.label()
     }
 
     /// (hits, misses) seen by the embedding cache, if enabled.
@@ -204,7 +271,7 @@ impl Engine {
 
     /// Resident encoder weight bytes (pre-quantized form).
     pub fn weight_bytes(&self) -> usize {
-        self.shared.encoder.weight_bytes()
+        self.shared.encoder.read().unwrap().weight_bytes()
     }
 
     /// Stop accepting work, drain the queue, and join the workers.
@@ -226,10 +293,27 @@ impl Drop for Engine {
     }
 }
 
+/// Shape equality of two encoder configs (kind and seed are free — a
+/// hot-swap may retrain or requantize, but never resize the model).
+fn same_shape(a: &EncoderConfig, b: &EncoderConfig) -> bool {
+    a.dim == b.dim
+        && a.heads == b.heads
+        && a.blocks == b.blocks
+        && a.embed_dim == b.embed_dim
+        && a.patches == b.patches
+        && a.patch_dim == b.patch_dim
+        && a.text_seq == b.text_seq
+        && a.vocab == b.vocab
+}
+
 /// Worker: pull micro-batches until the queue closes and drains.
 fn worker_loop(sh: &Shared) {
     while let Some(batch) = sh.queue.pop_batch() {
         let t0 = Instant::now();
+        // pin the live encoder for this whole micro-batch: a concurrent
+        // hot-swap takes effect at the next batch boundary, and the read
+        // guard is dropped immediately so a swap never waits on a forward
+        let encoder = Arc::clone(&sh.encoder.read().unwrap());
         let n = batch.len();
         // partition by modality, remembering original slots
         let mut img_idx = vec![];
@@ -255,8 +339,8 @@ fn worker_loop(sh: &Shared) {
                 EncodeInput::Image(_) => unreachable!(),
             })
             .collect();
-        let img_embs = sh.encoder.encode_images(&imgs);
-        let txt_embs = sh.encoder.encode_texts(&txts);
+        let img_embs = encoder.encode_images(&imgs);
+        let txt_embs = encoder.encode_texts(&txts);
         let mut out: Vec<Option<Arc<Vec<f32>>>> = vec![None; n];
         for (slot, emb) in img_idx.iter().zip(img_embs) {
             out[*slot] = Some(Arc::new(emb));
@@ -397,6 +481,88 @@ mod tests {
         eng.shutdown();
         // the queue is closed now; a late push is rejected
         assert_eq!(shared.queue.depth(), 0);
+    }
+
+    /// Hot-swap: embeddings change to the new weights, stale cache entries
+    /// are invalidated via the generation bump, and no request errors.
+    #[test]
+    fn hot_swap_installs_new_weights_and_invalidates_cache() {
+        let cfg = tiny_cfg(LinearKind::SwitchBack, 64);
+        let eng = Engine::start(cfg.clone());
+        let mut rng = Rng::seed(21);
+        let img = random_image(&mut rng);
+        let before = eng.encode(img.clone()).unwrap();
+        assert!(eng.encode(img.clone()).unwrap().cache_hit, "warm before swap");
+        assert_eq!(eng.generation(), 0);
+
+        // different seed → genuinely different weights, same shape
+        let mut swapped_cfg = cfg.encoder.clone();
+        swapped_cfg.seed = 999;
+        let pause = eng.install_encoder(ClipEncoder::new(swapped_cfg)).unwrap();
+        assert_eq!(eng.generation(), 1);
+        assert!(pause.as_millis() < 1000, "swap pause is a pointer write");
+
+        let after = eng.encode(img.clone()).unwrap();
+        assert!(!after.cache_hit, "generation bump must invalidate the cache");
+        assert_ne!(*before.embedding, *after.embedding, "weights must have changed");
+        assert!(eng.encode(img).unwrap().cache_hit, "new generation re-caches");
+        let snap = eng.metrics().snapshot();
+        assert_eq!(snap.hot_swaps, 1);
+        assert_eq!(snap.rejected, 0);
+        eng.shutdown();
+    }
+
+    /// A shape-mismatched encoder is rejected without disturbing serving.
+    #[test]
+    fn hot_swap_rejects_shape_mismatch() {
+        let cfg = tiny_cfg(LinearKind::Standard, 16);
+        let eng = Engine::start(cfg.clone());
+        let mut bad = cfg.encoder.clone();
+        bad.dim = 32;
+        let err = eng.install_encoder(ClipEncoder::new(bad)).unwrap_err();
+        assert!(err.contains("shape"), "{err}");
+        assert_eq!(eng.generation(), 0);
+        let mut rng = Rng::seed(3);
+        assert!(eng.encode(random_image(&mut rng)).is_ok());
+        eng.shutdown();
+    }
+
+    /// Swaps under concurrent load: every request succeeds (zero drops)
+    /// while generations advance mid-traffic.
+    #[test]
+    fn hot_swap_under_load_drops_nothing() {
+        let cfg = tiny_cfg(LinearKind::SwitchBack, 128);
+        let eng = Arc::new(Engine::start(cfg.clone()));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let clients: Vec<_> = (0..4)
+            .map(|t| {
+                let eng = Arc::clone(&eng);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::seed(300 + t);
+                    let mut n = 0u64;
+                    while !stop.load(Ordering::Relaxed) || n < 20 {
+                        eng.encode(random_image(&mut rng)).expect("dropped request");
+                        let toks: Vec<i32> = (0..5).map(|_| rng.below(64) as i32).collect();
+                        eng.encode(EncodeInput::Text(toks)).expect("dropped request");
+                        n += 2;
+                    }
+                    n
+                })
+            })
+            .collect();
+        for gen in 0..3u64 {
+            let mut c = cfg.encoder.clone();
+            c.seed = 1000 + gen;
+            eng.install_encoder(ClipEncoder::new(c)).unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = clients.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(eng.generation(), 3);
+        let snap = eng.metrics().snapshot();
+        assert_eq!(snap.requests, total, "every request accounted for");
+        assert_eq!(snap.rejected, 0);
+        assert_eq!(snap.hot_swaps, 3);
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct ServeMetrics {
     pub hit_ns: Histogram,
     /// worker time per batch (forward pass + bookkeeping), ns
     pub batch_ns: Histogram,
+    /// live weight hot-swaps installed ([`super::Engine::install_encoder`])
+    pub hot_swaps: AtomicU64,
+    /// worst-case swap pause (exclusive write-lock hold), ns
+    pub swap_pause_max_ns: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -70,7 +74,16 @@ impl ServeMetrics {
             batch_p50_ms: ns_to_ms(b50),
             batch_p95_ms: ns_to_ms(b95),
             batch_p99_ms: ns_to_ms(b99),
+            hot_swaps: self.hot_swaps.load(Ordering::Relaxed),
+            swap_pause_max_us: self.swap_pause_max_ns.load(Ordering::Relaxed) as f64 / 1e3,
         }
+    }
+
+    /// Record one hot-swap's exclusive pause (worst case is what matters
+    /// for tail latency, so only the max is kept).
+    pub fn record_swap(&self, pause_ns: u64) {
+        self.hot_swaps.fetch_add(1, Ordering::Relaxed);
+        self.swap_pause_max_ns.fetch_max(pause_ns, Ordering::Relaxed);
     }
 }
 
@@ -97,6 +110,8 @@ pub struct ServeSnapshot {
     pub batch_p50_ms: f64,
     pub batch_p95_ms: f64,
     pub batch_p99_ms: f64,
+    pub hot_swaps: u64,
+    pub swap_pause_max_us: f64,
 }
 
 impl ServeSnapshot {
@@ -119,6 +134,10 @@ impl ServeSnapshot {
             .field_f32("batch_p50_ms", self.batch_p50_ms as f32)
             .field_f32("batch_p95_ms", self.batch_p95_ms as f32)
             .field_f32("batch_p99_ms", self.batch_p99_ms as f32);
+        if self.hot_swaps > 0 {
+            w.field_u64("hot_swaps", self.hot_swaps)
+                .field_f32("swap_pause_max_us", self.swap_pause_max_us as f32);
+        }
         w.finish()
     }
 

@@ -31,7 +31,11 @@
 //!   hits are served without touching the GEMM substrate at all.
 //! * [`encoder`] — dual-tower forward-only CLIP encoder built from
 //!   [`crate::nn::PreparedBlock`]s (weights quantized once at load).
-//! * [`engine`] — worker pool wiring the above together.
+//! * [`engine`] — worker pool wiring the above together, plus the live
+//!   weight hot-swap path (`Engine::install_encoder`): trained
+//!   checkpoints ([`crate::ckpt`]) are installed atomically between
+//!   micro-batches, with a cache-generation bump invalidating stale
+//!   embeddings and zero dropped in-flight requests.
 //! * [`metrics`] — atomic serving telemetry + JSON snapshot.
 //! * [`loadgen`] — closed-loop load generator (the `loadgen` subcommand),
 //!   emits `BENCH_serve.json` so the perf trajectory is tracked per PR.
@@ -45,7 +49,7 @@ pub mod metrics;
 
 pub use batcher::{BatchPolicy, BatchQueue};
 pub use cache::ShardedLru;
-pub use encoder::{ClipEncoder, EncoderConfig};
+pub use encoder::{ClipEncoder, EncoderConfig, EncoderWeights};
 pub use engine::{EncodeResponse, Engine, ServeConfig};
 pub use loadgen::{run_loadgen, write_bench_json, LoadgenConfig, LoadgenReport};
 pub use metrics::{ServeMetrics, ServeSnapshot};

@@ -23,20 +23,23 @@
 
 use super::loss::clip_contrastive;
 use super::model::ClipTrainModel;
+use crate::ckpt::{self, TrainCheckpoint};
 use crate::config::TrainHyper;
 use crate::coordinator::common::{build_optimizer, spike_cfg, tail_mean_loss};
 use crate::coordinator::eval::nearest_class_accuracy;
 use crate::data::{Batch, DataConfig, Shift, SyntheticClip};
-use crate::optim::clip_global_norm;
 use crate::optim::schedules::LrSchedule;
+use crate::optim::{clip_global_norm, OptimizerState};
 use crate::serve::EncoderConfig;
+use crate::telemetry::spikes::DEDUP_WINDOW;
 use crate::telemetry::{
-    detect_loss_spikes, detect_rms_spikes, MetricsSink, StepRecord, TensorProbe,
+    detect_loss_spikes, detect_rms_spikes, MetricsSink, SpikeConfig, StepRecord,
+    TensorProbe,
 };
 use crate::tensor::Matrix;
 use crate::util::json::ObjWriter;
 use crate::util::threads::par_map;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;
@@ -61,6 +64,16 @@ pub struct NativeTrainConfig {
     pub metrics_path: Option<String>,
     /// examples per concept for the final zero-shot eval (0 = skip)
     pub eval_per_concept: usize,
+    /// write a disk snapshot every N steps (0 = off; needs `ckpt_dir`)
+    pub ckpt_every: u64,
+    /// snapshot directory for `--ckpt-every` / the final-state snapshot
+    pub ckpt_dir: Option<String>,
+    /// retention: keep only the newest K disk snapshots
+    pub ckpt_keep: usize,
+    /// spike-rollback guard: when the loss spikes, restore the last
+    /// in-memory snapshot (model + optimizer) and skip the offending
+    /// shard window instead of training through it
+    pub rollback_on_spike: bool,
 }
 
 impl NativeTrainConfig {
@@ -93,6 +106,29 @@ impl NativeTrainConfig {
             probe_every: 1,
             metrics_path: None,
             eval_per_concept: 2,
+            ckpt_every: 0,
+            ckpt_dir: None,
+            ckpt_keep: 3,
+            rollback_on_spike: false,
+        }
+    }
+
+    /// The synthetic-corpus config this run trains on — the single place
+    /// the data seed is derived from the run seed.  `pipeline`'s eval
+    /// rebuilds the stream through this same constructor, so the two can
+    /// never drift (a drifted stream would silently eval on a
+    /// distribution the model never saw).
+    pub fn data_config(&self) -> DataConfig {
+        let e = &self.encoder;
+        DataConfig {
+            shifts: self.shifts.clone(),
+            ..DataConfig::for_model(
+                e.patches,
+                e.patch_dim,
+                e.text_seq,
+                e.vocab,
+                self.hyper.seed.wrapping_add(0x5EED),
+            )
         }
     }
 
@@ -285,6 +321,15 @@ pub struct NativeRunResult {
     pub zero_shot_acc: Option<f32>,
     pub timing: StepTiming,
     pub sink: MetricsSink,
+    /// step this run resumed from (None = fresh run)
+    pub resumed_from: Option<u64>,
+    /// steps at which the spike-rollback guard fired
+    pub rollback_steps: Vec<u64>,
+    /// disk snapshots written (`--ckpt-every`)
+    pub snapshots: usize,
+    /// total bytes and wall seconds spent writing snapshots
+    pub ckpt_bytes: u64,
+    pub ckpt_save_secs: f64,
 }
 
 impl NativeRunResult {
@@ -306,6 +351,16 @@ impl NativeRunResult {
         if let Some(acc) = self.zero_shot_acc {
             println!("               zero-shot acc {:.1}%", 100.0 * acc);
         }
+        if let Some(from) = self.resumed_from {
+            println!("               resumed from step {from}");
+        }
+        if !self.rollback_steps.is_empty() {
+            println!(
+                "               spike rollbacks: {} (at steps {:?})",
+                self.rollback_steps.len(),
+                self.rollback_steps
+            );
+        }
     }
 
     fn to_json(&self) -> String {
@@ -320,11 +375,103 @@ impl NativeRunResult {
             .field_u64("loss_spikes", self.loss_spikes as u64)
             .field_u64("rms_spikes", self.rms_spikes as u64)
             .field_bool("diverged", self.diverged)
+            .field_u64("rollbacks", self.rollback_steps.len() as u64)
             .field_raw("time_ms", &self.timing.to_json());
         if let Some(acc) = self.zero_shot_acc {
             w.field_f32("zero_shot_acc", acc);
         }
+        if let Some(from) = self.resumed_from {
+            w.field_u64("resumed_from", from);
+        }
+        if self.snapshots > 0 {
+            w.field_u64("snapshots", self.snapshots as u64)
+                .field_u64("ckpt_bytes", self.ckpt_bytes)
+                .field_f32(
+                    "ckpt_save_mb_s",
+                    (self.ckpt_bytes as f64 / 1e6 / self.ckpt_save_secs.max(1e-9)) as f32,
+                );
+        }
         w.finish()
+    }
+}
+
+/// Online loss-spike detector driving the rollback guard — the streaming
+/// form of [`detect_loss_spikes`]: a trailing-window mean/σ deviation test
+/// with the paper's two-deviations-within-10 confirmation, plus a
+/// cooldown so a permanent distribution shift cannot thrash the guard
+/// while the running baseline adapts.
+struct RollbackGuard {
+    cfg: SpikeConfig,
+    history: Vec<f32>,
+    last_deviation: Option<u64>,
+    cooldown_until: u64,
+}
+
+impl RollbackGuard {
+    fn new(cfg: SpikeConfig) -> Self {
+        Self { cfg, history: vec![], last_deviation: None, cooldown_until: 0 }
+    }
+
+    /// An unconfirmed deviation is pending: the trainer must not refresh
+    /// its rollback snapshot while armed, or a confirmation arriving up to
+    /// [`DEDUP_WINDOW`] steps later would "roll back" onto a snapshot that
+    /// already contains the spiked updates.
+    fn armed(&self) -> bool {
+        self.last_deviation.is_some()
+    }
+
+    /// Observe step `step`'s loss; returns `true` when a confirmed spike
+    /// should trigger a rollback *now*.
+    fn observe(&mut self, step: u64, loss: f32) -> bool {
+        // a deviation that was never confirmed within the window is stale:
+        // disarm so the snapshot cadence can resume (see `armed`)
+        if self
+            .last_deviation
+            .is_some_and(|d| step.saturating_sub(d) > DEDUP_WINDOW)
+        {
+            self.last_deviation = None;
+        }
+        let deviation = if self.history.len() < 5 || step < self.cfg.burn_in {
+            false
+        } else if !loss.is_finite() {
+            true
+        } else {
+            let lo = self.history.len().saturating_sub(self.cfg.stat_window);
+            let hist = &self.history[lo..];
+            let n = hist.len() as f64;
+            let mean = hist.iter().map(|&v| v as f64).sum::<f64>() / n;
+            let var =
+                hist.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+            let std = var.sqrt().max(1e-12);
+            (loss as f64) > mean + self.cfg.loss_sigma as f64 * std
+        };
+        // finite spiked losses still enter the history — after a real
+        // distribution shift the baseline must adapt or the guard would
+        // fire forever.  Non-finite losses stay out: one NaN would poison
+        // the window mean and blind the detector for stat_window steps.
+        if loss.is_finite() {
+            self.history.push(loss);
+            // bound the baseline: only the trailing stat_window values are
+            // ever read (amortized O(1) trim for multi-million-step runs)
+            if self.history.len() > 2 * self.cfg.stat_window.max(1) {
+                let excess = self.history.len() - self.cfg.stat_window;
+                self.history.drain(..excess);
+            }
+        }
+        if !deviation || step < self.cooldown_until {
+            return false;
+        }
+        match self.last_deviation {
+            Some(prev) if step.saturating_sub(prev) <= DEDUP_WINDOW => {
+                self.last_deviation = None;
+                self.cooldown_until = step + 3 * DEDUP_WINDOW;
+                true
+            }
+            _ => {
+                self.last_deviation = Some(step);
+                false
+            }
+        }
     }
 }
 
@@ -333,36 +480,160 @@ pub struct NativeTrainer {
     cfg: NativeTrainConfig,
     model: ClipTrainModel,
     data: SyntheticClip,
+    /// step the model/optimizer/data state corresponds to (resume cursor)
+    start_step: u64,
+    /// optimizer state pending import at the top of [`Self::run`]
+    resume_opt: Option<OptimizerState>,
+    /// full state capture at the end of the last [`Self::run`]
+    final_ckpt: Option<TrainCheckpoint>,
 }
 
 impl NativeTrainer {
     pub fn new(cfg: NativeTrainConfig) -> Self {
-        let e = &cfg.encoder;
-        let data = SyntheticClip::new(DataConfig {
-            shifts: cfg.shifts.clone(),
-            ..DataConfig::for_model(
-                e.patches,
-                e.patch_dim,
-                e.text_seq,
-                e.vocab,
-                cfg.hyper.seed.wrapping_add(0x5EED),
-            )
-        });
-        let model = ClipTrainModel::new(e.clone());
-        Self { cfg, model, data }
+        let data = SyntheticClip::new(cfg.data_config());
+        let model = ClipTrainModel::new(cfg.encoder.clone());
+        Self {
+            cfg,
+            model,
+            data,
+            start_step: 0,
+            resume_opt: None,
+            final_ckpt: None,
+        }
     }
 
     pub fn model(&self) -> &ClipTrainModel {
         &self.model
     }
 
-    /// Run the configured number of steps.
+    /// State capture at the end of the last completed [`Self::run`] —
+    /// what `pipeline` serves and what the final disk snapshot contains.
+    pub fn final_checkpoint(&self) -> Option<&TrainCheckpoint> {
+        self.final_ckpt.as_ref()
+    }
+
+    /// Restore a checkpoint into this trainer so the next [`Self::run`]
+    /// continues bit-identically from `ck.step`.  Fails closed on any
+    /// mismatch the math depends on — a resume under different
+    /// shape/hyper/schedule would silently diverge from the original run.
+    ///
+    /// Scope of the contract: the *training math* (weights, optimizer
+    /// moments, data draws, schedule) is bit-identical.  The spike
+    /// [`RollbackGuard`] is a reactive intervention, not training math —
+    /// its online loss history / cooldown are not checkpointed, so under
+    /// `rollback_on_spike` a resumed detector restarts cold and guard
+    /// *decisions* within `stat_window` of the resume point may differ
+    /// from the uninterrupted run's (the CLI prints a note).
+    pub fn restore(&mut self, ck: &TrainCheckpoint) -> Result<()> {
+        let e = &self.cfg.encoder;
+        let c = &ck.encoder;
+        if (c.dim, c.heads, c.blocks, c.embed_dim)
+            != (e.dim, e.heads, e.blocks, e.embed_dim)
+            || (c.patches, c.patch_dim, c.text_seq, c.vocab)
+                != (e.patches, e.patch_dim, e.text_seq, e.vocab)
+            || c.kind != e.kind
+            || c.seed != e.seed
+        {
+            bail!(
+                "checkpoint model {:?} does not match this run's model {:?}",
+                c,
+                e
+            );
+        }
+        let h = &self.cfg.hyper;
+        let k = &ck.hyper;
+        if (k.steps, k.warmup, k.seed, k.optimizer)
+            != (h.steps, h.warmup, h.seed, h.optimizer)
+            || k.lr.to_bits() != h.lr.to_bits()
+            || k.weight_decay.to_bits() != h.weight_decay.to_bits()
+            || k.beta1.to_bits() != h.beta1.to_bits()
+            || k.beta2.to_bits() != h.beta2.to_bits()
+            || k.beta2_lambda.map(f32::to_bits) != h.beta2_lambda.map(f32::to_bits)
+            || k.grad_clip.map(f32::to_bits) != h.grad_clip.map(f32::to_bits)
+        {
+            bail!(
+                "checkpoint hyperparameters {:?} do not match this run's {:?} \
+                 — resume must use the original schedule",
+                k,
+                h
+            );
+        }
+        let same_shifts = ck.shifts.len() == self.cfg.shifts.len()
+            && ck.shifts.iter().zip(&self.cfg.shifts).all(|(a, b)| {
+                a.at_step == b.at_step
+                    && a.image_gain.to_bits() == b.image_gain.to_bits()
+                    && a.remap_concepts == b.remap_concepts
+            });
+        if !same_shifts {
+            bail!("checkpoint shift schedule does not match this run's");
+        }
+        if (ck.batch, ck.grad_shards) != (self.cfg.batch, self.cfg.grad_shards) {
+            bail!(
+                "checkpoint was trained with batch {} / {} shards, this run \
+                 uses {} / {} — the data draws and summation order would differ",
+                ck.batch,
+                ck.grad_shards,
+                self.cfg.batch,
+                self.cfg.grad_shards
+            );
+        }
+        if ck.step >= h.steps {
+            bail!(
+                "checkpoint is at step {} of a {}-step run — nothing to resume",
+                ck.step,
+                h.steps
+            );
+        }
+        self.model.load_params(&ck.params);
+        self.data
+            .restore(&ck.data)
+            .map_err(|e| anyhow::anyhow!("data cursor: {e}"))?;
+        self.start_step = ck.step;
+        self.resume_opt = Some(ck.opt.clone());
+        Ok(())
+    }
+
+    /// Assemble a [`TrainCheckpoint`] from the live training state.
+    fn capture(
+        &self,
+        step: u64,
+        params: &[Vec<f32>],
+        opt_state: OptimizerState,
+    ) -> TrainCheckpoint {
+        TrainCheckpoint {
+            step,
+            encoder: self.cfg.encoder.clone(),
+            hyper: self.cfg.hyper.clone(),
+            shifts: self.cfg.shifts.clone(),
+            batch: self.cfg.batch,
+            grad_shards: self.cfg.grad_shards,
+            param_names: self
+                .model
+                .param_metas()
+                .into_iter()
+                .map(|m| m.name)
+                .collect(),
+            params: params.to_vec(),
+            opt: opt_state,
+            data: self.data.cursor(),
+        }
+    }
+
+    /// Run from the current state (step `start_step`, 0 for a fresh
+    /// trainer) to the configured number of steps.
     pub fn run(&mut self, verbose: bool) -> Result<NativeRunResult> {
         let h = self.cfg.hyper.clone();
+        if self.start_step >= h.steps {
+            bail!("start step {} >= total steps {}", self.start_step, h.steps);
+        }
         let metas = self.model.param_metas();
         let mut params = self.model.collect_params();
         let sizes: Vec<usize> = params.iter().map(|p| p.len()).collect();
         let mut opt = build_optimizer(&h, &metas, &sizes);
+        if let Some(st) = self.resume_opt.take() {
+            opt.import_state(&st)
+                .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
+        }
         let schedule = LrSchedule::new(h.lr, h.warmup, h.steps);
         let (pe_idx, mid_idx) = self.model.probe_indices();
         let pe_name = metas[pe_idx].name.clone();
@@ -376,9 +647,37 @@ impl NativeTrainer {
         let mut first_loss = f32::NAN;
         let mut final_acc = 0.0f32;
         let mut diverged = false;
+
+        // --- checkpoint / rollback machinery -------------------------
+        let ckpt_dir = self.cfg.ckpt_dir.as_ref().map(std::path::PathBuf::from);
+        let disk_every = if ckpt_dir.is_some() { self.cfg.ckpt_every } else { 0 };
+        // the guard restores from an in-memory snapshot; refresh it on the
+        // disk cadence when one is configured, else every dedup window
+        let mem_every = if self.cfg.rollback_on_spike {
+            if disk_every > 0 {
+                disk_every
+            } else {
+                DEDUP_WINDOW
+            }
+        } else {
+            0
+        };
+        let mut guard = self
+            .cfg
+            .rollback_on_spike
+            .then(|| RollbackGuard::new(spike_cfg(h.steps)));
+        let mut mem_snap: Option<(u64, Vec<Vec<f32>>, OptimizerState)> = self
+            .cfg
+            .rollback_on_spike
+            .then(|| (self.start_step, params.clone(), opt.export_state()));
+        let mut rollback_steps: Vec<u64> = vec![];
+        let mut snapshots = 0usize;
+        let mut ckpt_bytes = 0u64;
+        let mut ckpt_save_secs = 0.0f64;
+        let resumed_from = (self.start_step > 0).then_some(self.start_step);
         let run_t0 = Instant::now();
 
-        for step in 1..=h.steps {
+        for step in self.start_step + 1..=h.steps {
             let step_t0 = Instant::now();
             let batch = self.data.next_batch(self.cfg.batch);
             timing.data_ms += step_t0.elapsed().as_secs_f64() * 1e3;
@@ -387,11 +686,18 @@ impl NativeTrainer {
             timing.forward_ms += out.forward_ms;
             timing.loss_ms += out.loss_ms;
             timing.backward_ms += out.backward_ms;
-            if step == 1 {
+            if step == self.start_step + 1 {
                 first_loss = out.loss;
             }
             final_acc = out.acc;
-            if !out.loss.is_finite() || out.loss > 50.0 {
+
+            // the guard sees the loss before the update is applied: a
+            // confirmed spike reverts model+optimizer to the last snapshot
+            // and skips this shard window entirely (the data stream has
+            // already moved past it)
+            let rolled_back =
+                guard.as_mut().is_some_and(|g| g.observe(step, out.loss));
+            if !rolled_back && (!out.loss.is_finite() || out.loss > 50.0) {
                 diverged = true;
             }
 
@@ -413,9 +719,48 @@ impl NativeTrainer {
 
             let t_opt = Instant::now();
             let lr = schedule.at(step);
-            let stats = opt.step(&mut params, &grads, lr, None);
-            self.model.load_params(&params);
+            let stats = if rolled_back {
+                let (snap_step, snap_params, snap_opt) =
+                    mem_snap.as_ref().expect("rollback guard implies a snapshot");
+                for (dst, src) in params.iter_mut().zip(snap_params) {
+                    dst.copy_from_slice(src);
+                }
+                self.model.load_params(&params);
+                opt.import_state(snap_opt)
+                    .map_err(|e| anyhow::anyhow!("rollback: {e}"))?;
+                rollback_steps.push(step);
+                if verbose {
+                    println!(
+                        "  step {step:>5}  loss {:8.4}  SPIKE — rolled back to \
+                         step-{snap_step} snapshot, shard window skipped",
+                        out.loss
+                    );
+                }
+                crate::optim::StepStats::empty(params.len())
+            } else {
+                let stats = opt.step(&mut params, &grads, lr, None);
+                self.model.load_params(&params);
+                stats
+            };
             timing.optim_ms += t_opt.elapsed().as_secs_f64() * 1e3;
+
+            // never refresh the rollback snapshot while a deviation is
+            // pending confirmation — the pending spike's update is already
+            // in `params`, and snapshotting it would make the upcoming
+            // rollback restore the poisoned state it means to discard
+            let guard_armed = guard.as_ref().is_some_and(|g| g.armed());
+            if mem_every > 0 && step % mem_every == 0 && !guard_armed {
+                mem_snap = Some((step, params.clone(), opt.export_state()));
+            }
+            if disk_every > 0 && (step % disk_every == 0 || step == h.steps) {
+                let dir = ckpt_dir.as_ref().expect("disk_every implies ckpt_dir");
+                let ck = self.capture(step, &params, opt.export_state());
+                let st = ckpt::save(&ckpt::snapshot_path(dir, step), &ck)?;
+                snapshots += 1;
+                ckpt_bytes += st.bytes;
+                ckpt_save_secs += st.secs;
+                ckpt::prune_snapshots(dir, self.cfg.ckpt_keep);
+            }
 
             let step_ms = step_t0.elapsed().as_secs_f64() * 1e3;
             timing.total_ms += step_ms;
@@ -459,6 +804,10 @@ impl NativeTrainer {
         let loss_spikes = detect_loss_spikes(&losses, &sc).len();
         let rms_spikes = detect_rms_spikes(&sink.rms_trace(&pe_name), &sc).len();
         let tail_loss = tail_mean_loss(&losses);
+        let steps_run = h.steps - self.start_step;
+        // the trainer's state now corresponds to the end of the run
+        self.final_ckpt = Some(self.capture(h.steps, &params, opt.export_state()));
+        self.start_step = h.steps;
         Ok(NativeRunResult {
             kind: self.cfg.encoder.kind.label(),
             optimizer: opt.name(),
@@ -466,13 +815,18 @@ impl NativeTrainer {
             final_loss: *losses.last().unwrap_or(&f32::NAN),
             tail_loss,
             final_acc,
-            steps_per_sec: h.steps as f32 / elapsed.max(1e-9),
+            steps_per_sec: steps_run as f32 / elapsed.max(1e-9),
             loss_spikes,
             rms_spikes,
             diverged,
             zero_shot_acc,
             timing,
             sink,
+            resumed_from,
+            rollback_steps,
+            snapshots,
+            ckpt_bytes,
+            ckpt_save_secs,
         })
     }
 
@@ -551,14 +905,19 @@ mod tests {
 
     /// Restores `SWITCHBACK_THREADS` to "unset" even if the test panics
     /// mid-run, so a failure cannot leak the override into other tests.
-    /// (No other test writes this var; all in-process readers go through
-    /// `std::env`, which serializes access internally.)
-    struct ThreadsEnvGuard;
+    /// Holds `THREADS_ENV_TEST_LOCK` for its lifetime — env vars are
+    /// process-global and several tests override this one.
+    struct ThreadsEnvGuard {
+        _lock: std::sync::MutexGuard<'static, ()>,
+    }
 
     impl ThreadsEnvGuard {
         fn set(threads: &str) -> Self {
+            let lock = crate::util::threads::THREADS_ENV_TEST_LOCK
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
             std::env::set_var("SWITCHBACK_THREADS", threads);
-            Self
+            Self { _lock: lock }
         }
     }
 
@@ -673,6 +1032,177 @@ mod tests {
         assert!(r.get("loss_spikes").is_some());
         assert!(r.get("time_ms").unwrap().get("forward").is_some());
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// The headline resume contract: train k steps + snapshot + resume to
+    /// N is **bit-identical** with an uninterrupted N-step run — weights,
+    /// optimizer moments and the per-step loss trace — under both
+    /// SWITCHBACK_THREADS=1 and =4.
+    #[test]
+    fn resume_is_bit_identical_across_thread_counts() {
+        let dir = std::env::temp_dir().join("sbck_resume_test");
+        for threads in ["1", "4"] {
+            let _guard = ThreadsEnvGuard::set(threads);
+            let _ = std::fs::remove_dir_all(&dir);
+            let steps = 12u64;
+            let k = 5u64;
+            let mut cfg = tiny_cfg(LinearKind::SwitchBack, steps);
+            cfg.shifts = vec![Shift {
+                at_step: 8, // a shift in the resumed segment must replay too
+                image_gain: 3.0,
+                remap_concepts: true,
+            }];
+
+            // uninterrupted reference run
+            let mut full = NativeTrainer::new(cfg.clone());
+            let full_res = full.run(false).unwrap();
+            let full_ck = full.final_checkpoint().unwrap().clone();
+
+            // interrupted run: same config, snapshots every k steps
+            let mut snap_cfg = cfg.clone();
+            snap_cfg.ckpt_every = k;
+            snap_cfg.ckpt_dir = Some(dir.to_str().unwrap().to_string());
+            snap_cfg.ckpt_keep = 10;
+            let mut interrupted = NativeTrainer::new(snap_cfg);
+            let int_res = interrupted.run(false).unwrap();
+            assert!(int_res.snapshots >= 2, "k-cadence + final snapshot");
+            let (ck, _) = ckpt::load(&ckpt::snapshot_path(&dir, k)).unwrap();
+            assert_eq!(ck.step, k);
+
+            // resume from the step-k snapshot and run to completion
+            let mut resumed = NativeTrainer::new(cfg.clone());
+            resumed.restore(&ck).unwrap();
+            let res = resumed.run(false).unwrap();
+            assert_eq!(res.resumed_from, Some(k));
+            assert_eq!(res.sink.records.len(), (steps - k) as usize);
+
+            let resumed_ck = resumed.final_checkpoint().unwrap();
+            assert_eq!(
+                resumed_ck.params, full_ck.params,
+                "[threads={threads}] weights diverged after resume"
+            );
+            assert_eq!(
+                resumed_ck.opt, full_ck.opt,
+                "[threads={threads}] optimizer moments diverged after resume"
+            );
+            assert_eq!(
+                resumed_ck.data, full_ck.data,
+                "[threads={threads}] data cursor diverged after resume"
+            );
+            // loss trace of the overlapping segment matches step for step
+            let full_tail: Vec<u32> = full_res.sink.loss_trace()[k as usize..]
+                .iter()
+                .map(|l| l.to_bits())
+                .collect();
+            let res_trace: Vec<u32> =
+                res.sink.loss_trace().iter().map(|l| l.to_bits()).collect();
+            assert_eq!(full_tail, res_trace, "[threads={threads}] loss trace diverged");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Restore fails closed on mismatched hyper/shape/schedule.
+    #[test]
+    fn restore_rejects_incompatible_checkpoints() {
+        let cfg = tiny_cfg(LinearKind::Standard, 10);
+        let mut a = NativeTrainer::new(cfg.clone());
+        let _ = a.run(false).unwrap();
+        let done = a.final_checkpoint().unwrap().clone();
+        // finished checkpoint: nothing to resume
+        let mut b = NativeTrainer::new(cfg.clone());
+        assert!(b.restore(&done).is_err());
+        // mid-run checkpoint against a different lr: rejected
+        let mut ck = done.clone();
+        ck.step = 5;
+        let mut lr_cfg = cfg.clone();
+        lr_cfg.hyper.lr *= 2.0;
+        let mut c = NativeTrainer::new(lr_cfg);
+        let err = c.restore(&ck).unwrap_err().to_string();
+        assert!(err.contains("hyper"), "{err}");
+        // different model seed: rejected
+        let mut seed_cfg = cfg.clone();
+        seed_cfg.encoder.seed = 43;
+        let mut d = NativeTrainer::new(seed_cfg);
+        assert!(d.restore(&ck).is_err());
+        // different shift schedule: rejected
+        let mut shift_cfg = cfg;
+        shift_cfg.shifts =
+            vec![Shift { at_step: 3, image_gain: 2.0, remap_concepts: false }];
+        let mut e = NativeTrainer::new(shift_cfg);
+        assert!(e.restore(&ck).is_err());
+    }
+
+    /// The spike-rollback guard: under an aggressive distribution shift
+    /// with plain AdamW, the guard fires, reverts to the snapshot, and the
+    /// run completes without diverging.
+    #[test]
+    fn rollback_guard_fires_on_shift_spike_and_recovers() {
+        let steps = 60u64;
+        let mut cfg = tiny_cfg(LinearKind::Standard, steps);
+        cfg.hyper.optimizer = crate::config::OptimizerKind::Adamw;
+        cfg.shifts = vec![Shift {
+            at_step: 40, // well past burn-in (spike_cfg(60) → 20)
+            image_gain: 60.0,
+            remap_concepts: true,
+        }];
+        cfg.rollback_on_spike = true;
+        let mut trainer = NativeTrainer::new(cfg);
+        let res = trainer.run(false).unwrap();
+        assert!(
+            !res.rollback_steps.is_empty(),
+            "guard never fired under a 60× input-gain shift"
+        );
+        assert!(
+            res.rollback_steps.iter().any(|&s| s > 40),
+            "at least one rollback must follow the shift: {:?}",
+            res.rollback_steps
+        );
+        assert!(!res.diverged, "rolled-back spikes must not count as divergence");
+        assert!(res.final_loss.is_finite());
+    }
+
+    /// RollbackGuard unit behavior: confirmation window, cooldown,
+    /// non-finite losses, burn-in.
+    #[test]
+    fn rollback_guard_confirmation_and_cooldown() {
+        let cfg = SpikeConfig { burn_in: 5, stat_window: 50, ..Default::default() };
+        let mut g = RollbackGuard::new(cfg.clone());
+        for t in 1..=20u64 {
+            assert!(!g.observe(t, 1.0 + (t % 3) as f32 * 0.01), "baseline fired");
+        }
+        // one deviation arms the guard, the confirming one triggers it
+        assert!(!g.observe(21, 9.0));
+        assert!(g.observe(22, 9.0), "second deviation within window must fire");
+        // cooldown: continued deviations right after do not re-trigger
+        assert!(!g.observe(23, 9.0));
+        assert!(!g.observe(24, 9.0));
+
+        // a lone deviation (no confirmation within 10) never fires, arms
+        // the guard only for the confirmation window, then disarms
+        let mut g = RollbackGuard::new(cfg.clone());
+        for t in 1..=20u64 {
+            g.observe(t, 1.0 + (t % 3) as f32 * 0.01);
+        }
+        assert!(!g.observe(21, 9.0));
+        assert!(g.armed(), "pending deviation must block snapshot refresh");
+        for t in 22..=40u64 {
+            assert!(!g.observe(t, 1.0), "stale deviation fired at {t}");
+        }
+        assert!(!g.armed(), "stale deviation must disarm the guard");
+
+        // NaN loss counts as a deviation but never enters the baseline:
+        // the window stats stay finite and later spikes are still caught
+        let mut g = RollbackGuard::new(cfg);
+        for t in 1..=10u64 {
+            g.observe(t, 1.0 + (t % 3) as f32 * 0.01);
+        }
+        assert!(!g.observe(11, f32::NAN));
+        assert!(g.observe(12, f32::NAN));
+        for t in 13..=42u64 {
+            g.observe(t, 1.0 + (t % 3) as f32 * 0.01); // past the cooldown
+        }
+        assert!(!g.observe(43, 9.0), "first deviation only arms");
+        assert!(g.observe(44, 9.0), "NaN must not have blinded the window");
     }
 
     /// Zero-shot eval runs and returns a sane range after a short run.

@@ -4,12 +4,14 @@
 //! * [`json`]    — JSON parser + writer (manifests, JSONL metrics).
 //! * [`threads`] — data-parallel helper over row chunks (the GEMM pool).
 //! * [`float`]   — bf16 / fp16 rounding via bit manipulation.
+//! * [`crc32`]   — CRC-32 integrity checks (checkpoint tensor blobs).
 //! * [`bench`]   — a tiny criterion-style benchmark harness used by the
 //!   `cargo bench` targets (median-of-samples timing + throughput).
 //! * [`regression`] — BENCH_*.json baseline comparison (the
 //!   `switchback benchdiff` CI gate).
 
 pub mod bench;
+pub mod crc32;
 pub mod float;
 pub mod json;
 pub mod regression;

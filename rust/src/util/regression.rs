@@ -43,6 +43,7 @@ pub fn compare_bench(
     match ok.as_str() {
         "serve_throughput" => Ok(compare_serve(old, new, tol, strict)?),
         "train_native" => Ok(compare_train(old, new, tol, strict)?),
+        "ckpt_pipeline" => Ok(compare_ckpt(old, new, tol, strict)?),
         other => Err(format!("unknown bench kind {other:?}")),
     }
 }
@@ -55,6 +56,33 @@ fn results(v: &Value) -> Result<&[Value], String> {
 
 fn f(entry: &Value, key: &str) -> Option<f64> {
     entry.get(key).and_then(Value::as_f64)
+}
+
+/// A required numeric metric.  `null` is how the JSON writer serializes a
+/// non-finite f32 (`util::json::num`), so a null metric means the
+/// producing run recorded NaN/Inf — explicitly incomparable.  Fail closed
+/// with a message that says so, rather than parsing it as 0 (a silent
+/// pass) or panicking.
+fn req_num(entry: &Value, ctx: &str, key: &str) -> Result<f64, String> {
+    match entry.get(key) {
+        None => Err(format!("{ctx}: missing {key:?}")),
+        Some(Value::Null) => Err(format!(
+            "{ctx}: {key:?} is null — the run recorded a non-finite value, \
+             which is not comparable; fix the run (or the baseline) first"
+        )),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| format!("{ctx}: {key:?} is not a number")),
+    }
+}
+
+/// An optional numeric metric: absent is `None` (older schema), but an
+/// explicit `null` still fails closed like [`req_num`].
+fn opt_num(entry: &Value, ctx: &str, key: &str) -> Result<Option<f64>, String> {
+    match entry.get(key) {
+        None => Ok(None),
+        Some(_) => req_num(entry, ctx, key).map(Some),
+    }
 }
 
 fn s<'a>(entry: &'a Value, key: &str) -> &'a str {
@@ -70,13 +98,12 @@ fn serve_index(v: &Value) -> Result<Vec<(String, u64, f64, f64)>, String> {
         .map(|r| {
             let kind = s(r, "kind").to_string();
             let conc = f(r, "concurrency").unwrap_or(0.0) as u64;
-            let rps = f(r, "requests_per_sec")
-                .ok_or("serve entry missing requests_per_sec")?;
-            let p99 = r
+            let ctx = format!("serve {kind} c={conc}");
+            let rps = req_num(r, &ctx, "requests_per_sec")?;
+            let metrics = r
                 .get("metrics")
-                .and_then(|m| m.get("request_p99_ms"))
-                .and_then(Value::as_f64)
-                .ok_or("serve entry missing metrics.request_p99_ms")?;
+                .ok_or_else(|| format!("{ctx}: missing \"metrics\""))?;
+            let p99 = req_num(metrics, &ctx, "request_p99_ms")?;
             Ok((kind, conc, rps, p99))
         })
         .collect()
@@ -189,9 +216,9 @@ fn compare_train(
     let mut matched = 0usize;
     for r in nn {
         let key = (s(r, "kind").to_string(), s(r, "optimizer").to_string());
-        let first = f(r, "first_loss").ok_or("train entry missing first_loss")?;
-        let fin = f(r, "final_loss").ok_or("train entry missing final_loss")?;
         let tag = format!("train {}/{}", key.0, key.1);
+        let first = req_num(r, &tag, "first_loss")?;
+        let fin = req_num(r, &tag, "final_loss")?;
         // portable learning invariants: the run must still learn
         if r.get("diverged").and_then(Value::as_bool).unwrap_or(false) {
             regs.push(format!("{tag}: run diverged"));
@@ -209,8 +236,8 @@ fn compare_train(
         };
         matched += 1;
         let (ospikes, nspikes) = (
-            f(o, "loss_spikes").unwrap_or(0.0),
-            f(r, "loss_spikes").unwrap_or(0.0),
+            opt_num(o, &tag, "loss_spikes")?.unwrap_or(0.0),
+            opt_num(r, &tag, "loss_spikes")?.unwrap_or(0.0),
         );
         if nspikes > ospikes + 1.0 {
             regs.push(format!(
@@ -219,8 +246,8 @@ fn compare_train(
         }
         if strict {
             let (osps, nsps) = (
-                f(o, "steps_per_sec").unwrap_or(0.0),
-                f(r, "steps_per_sec").unwrap_or(0.0),
+                opt_num(o, &tag, "steps_per_sec")?.unwrap_or(0.0),
+                opt_num(r, &tag, "steps_per_sec")?.unwrap_or(0.0),
             );
             if osps > 0.0 && nsps < osps * (1.0 - tol) {
                 regs.push(format!(
@@ -228,7 +255,7 @@ fn compare_train(
                     tol * 100.0
                 ));
             }
-            let ofin = f(o, "final_loss").unwrap_or(f64::NAN);
+            let ofin = opt_num(o, &tag, "final_loss")?.unwrap_or(f64::NAN);
             if ofin.is_finite() && fin > ofin * (1.0 + tol) {
                 regs.push(format!(
                     "{tag}: final loss {ofin:.4} → {fin:.4} (> {:.0}% rise)",
@@ -243,6 +270,86 @@ fn compare_train(
              train results"
                 .into(),
         );
+    }
+    Ok(regs)
+}
+
+// ----- ckpt pipeline --------------------------------------------------
+
+/// BENCH_ckpt.json gate.  Portable invariants (machine-independent, and
+/// deterministic by construction on this substrate): zero dropped requests
+/// across the hot-swap, bit-identical checkpoint round trip, serve/train
+/// encode parity, cache invalidation, and the zero-shot accuracy of the
+/// served weights.  Strict additionally gates save/load MB/s and the
+/// hot-swap pause (same-machine absolutes).
+fn compare_ckpt(
+    old: &Value,
+    new: &Value,
+    tol: f64,
+    strict: bool,
+) -> Result<Vec<String>, String> {
+    let on = results(old)?;
+    let nn = results(new)?;
+    if nn.is_empty() {
+        return Err("new ckpt document has no results".into());
+    }
+    let mut regs = vec![];
+    let mut matched = 0usize;
+    for r in nn {
+        let kind = s(r, "kind").to_string();
+        let tag = format!("ckpt {kind}");
+        let dropped = req_num(r, &tag, "dropped_requests")?;
+        if dropped > 0.0 {
+            regs.push(format!(
+                "{tag}: {dropped:.0} requests dropped across the hot-swap"
+            ));
+        }
+        for (key, what) in [
+            ("round_trip_ok", "checkpoint round trip is no longer bit-identical"),
+            ("eval_matches_model", "serve/train encode parity broke"),
+            ("cache_invalidated", "hot-swap no longer invalidates the cache"),
+            ("weights_changed", "hot-swap did not actually change the weights"),
+        ] {
+            if !r.get(key).and_then(Value::as_bool).unwrap_or(false) {
+                regs.push(format!("{tag}: {what} ({key} != true)"));
+            }
+        }
+        let acc = req_num(r, &tag, "eval_acc")?;
+        let Some(o) = on.iter().find(|o| s(o, "kind") == kind) else {
+            continue;
+        };
+        matched += 1;
+        let oacc = req_num(o, &tag, "eval_acc")?;
+        if oacc > 0.0 && acc < oacc * (1.0 - tol) {
+            regs.push(format!(
+                "{tag}: served zero-shot acc {oacc:.3} → {acc:.3} (> {:.0}% drop)",
+                tol * 100.0
+            ));
+        }
+        if strict {
+            for key in ["save_mb_s", "load_mb_s"] {
+                let (ov, nv) = (req_num(o, &tag, key)?, req_num(r, &tag, key)?);
+                if ov > 0.0 && nv < ov * (1.0 - tol) {
+                    regs.push(format!(
+                        "{tag}: {key} {ov:.1} → {nv:.1} MB/s (> {:.0}% drop)",
+                        tol * 100.0
+                    ));
+                }
+            }
+            let (op, np) = (
+                req_num(o, &tag, "hot_swap_pause_us")?,
+                req_num(r, &tag, "hot_swap_pause_us")?,
+            );
+            if op > 0.0 && np > op * (1.0 + tol) {
+                regs.push(format!(
+                    "{tag}: hot-swap pause {op:.1} → {np:.1} µs (> {:.0}% rise)",
+                    tol * 100.0
+                ));
+            }
+        }
+    }
+    if matched == 0 {
+        return Err("no kinds matched between baseline and new ckpt results".into());
     }
     Ok(regs)
 }
@@ -361,6 +468,111 @@ mod tests {
             }
         }
         assert!(compare_bench(&tr, &lion, 0.15, false).is_err());
+    }
+
+    fn ckpt_doc(
+        dropped: u64,
+        round_trip: bool,
+        acc: f64,
+        save: f64,
+        pause: f64,
+    ) -> Value {
+        parse(&format!(
+            r#"{{"bench":"ckpt_pipeline","config":{{}},"results":[
+                {{"kind":"switchback","dropped_requests":{dropped},
+                  "round_trip_ok":{round_trip},"eval_matches_model":true,
+                  "cache_invalidated":true,"weights_changed":true,
+                  "eval_acc":{acc},"save_mb_s":{save},"load_mb_s":{save},
+                  "hot_swap_pause_us":{pause}}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn ckpt_invariants_are_gated() {
+        let good = ckpt_doc(0, true, 0.8, 100.0, 50.0);
+        assert!(compare_bench(&good, &good, 0.15, false).unwrap().is_empty());
+        // dropped requests across the swap: caught
+        let drops = ckpt_doc(3, true, 0.8, 100.0, 50.0);
+        let regs = compare_bench(&good, &drops, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("dropped")), "{regs:?}");
+        // broken round trip: caught
+        let broken = ckpt_doc(0, false, 0.8, 100.0, 50.0);
+        let regs = compare_bench(&good, &broken, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("round trip")), "{regs:?}");
+        // served accuracy collapse: caught
+        let dumb = ckpt_doc(0, true, 0.3, 100.0, 50.0);
+        let regs = compare_bench(&good, &dumb, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("zero-shot")), "{regs:?}");
+        // portable mode ignores machine absolutes; strict gates them
+        let slow = ckpt_doc(0, true, 0.8, 10.0, 500.0);
+        assert!(compare_bench(&good, &slow, 0.15, false).unwrap().is_empty());
+        let regs = compare_bench(&good, &slow, 0.15, true).unwrap();
+        assert!(regs.iter().any(|r| r.contains("save_mb_s")), "{regs:?}");
+        assert!(regs.iter().any(|r| r.contains("pause")), "{regs:?}");
+    }
+
+    /// The json writer serializes non-finite floats as `null`; a null
+    /// metric must fail the gate *closed* with a clear message — not parse
+    /// as 0 (silent pass) and not panic.
+    #[test]
+    fn null_metrics_fail_closed_with_clear_message() {
+        // serve: null requests_per_sec (the run's wall clock was NaN)
+        let good = serve_doc(1000.0, 1500.0, 10.0, 8.0);
+        let nulled = parse(
+            r#"{"bench":"serve_throughput","policy":{},"results":[
+                {"kind":"standard","concurrency":16,"requests_per_sec":null,
+                 "metrics":{"request_p99_ms":10.0}},
+                {"kind":"switchback","concurrency":16,"requests_per_sec":1500.0,
+                 "metrics":{"request_p99_ms":8.0}}
+            ]}"#,
+        )
+        .unwrap();
+        let err = compare_bench(&good, &nulled, 0.15, false).unwrap_err();
+        assert!(err.contains("null"), "{err}");
+        assert!(err.contains("requests_per_sec"), "{err}");
+        assert!(err.contains("non-finite"), "{err}");
+
+        // train: final_loss null (diverged run wrote NaN)
+        let tr = train_doc(3.4, 2.1, 12.0, 0, false);
+        let nulled = parse(
+            r#"{"bench":"train_native","config":{},"results":[
+                {"kind":"switchback","optimizer":"stable_adamw",
+                 "first_loss":3.4,"final_loss":null,
+                 "steps_per_sec":12.0,"loss_spikes":0,"diverged":true}
+            ]}"#,
+        )
+        .unwrap();
+        let err = compare_bench(&tr, &nulled, 0.15, false).unwrap_err();
+        assert!(err.contains("final_loss") && err.contains("null"), "{err}");
+
+        // a null in the *baseline* is equally incomparable (strict path)
+        let nulled_base = parse(
+            r#"{"bench":"train_native","config":{},"results":[
+                {"kind":"switchback","optimizer":"stable_adamw",
+                 "first_loss":3.4,"final_loss":2.1,
+                 "steps_per_sec":null,"loss_spikes":0,"diverged":false}
+            ]}"#,
+        )
+        .unwrap();
+        let err = compare_bench(&nulled_base, &tr, 0.15, true).unwrap_err();
+        assert!(err.contains("steps_per_sec") && err.contains("null"), "{err}");
+
+        // ckpt: null eval_acc
+        let good_ck = ckpt_doc(0, true, 0.8, 100.0, 50.0);
+        let nulled_ck = parse(
+            r#"{"bench":"ckpt_pipeline","config":{},"results":[
+                {"kind":"switchback","dropped_requests":0,
+                 "round_trip_ok":true,"eval_matches_model":true,
+                 "cache_invalidated":true,"weights_changed":true,
+                 "eval_acc":null,"save_mb_s":100.0,"load_mb_s":100.0,
+                 "hot_swap_pause_us":50.0}
+            ]}"#,
+        )
+        .unwrap();
+        let err = compare_bench(&good_ck, &nulled_ck, 0.15, false).unwrap_err();
+        assert!(err.contains("eval_acc") && err.contains("null"), "{err}");
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! call, which costs ~10µs each — negligible against the ≥1ms GEMMs this
 //! parallelizes (measured in EXPERIMENTS.md §Perf).
 
+/// Serializes unit tests that set the process-global `SWITCHBACK_THREADS`
+/// env var (cargo runs tests on parallel threads; two writers would race).
+/// Lock it around any `ThreadsEnvGuard`-style override.
+#[cfg(test)]
+pub(crate) static THREADS_ENV_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Number of worker threads (cores, capped; override with SWITCHBACK_THREADS).
 pub fn num_threads() -> usize {
     if let Ok(s) = std::env::var("SWITCHBACK_THREADS") {

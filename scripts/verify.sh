@@ -9,10 +9,11 @@
 #            dedicated test job; the release build is incremental
 #            against the restored cargo cache)
 #
-# Emits BENCH_serve.json and BENCH_train.json at the repo root so the
-# serving and training perf trajectories are tracked across PRs (schemas:
-# EXPERIMENTS.md §Serve / §Train).  scripts/check_bench.sh gates both
-# against the committed baselines in benchmarks/.
+# Emits BENCH_serve.json, BENCH_train.json and BENCH_ckpt.json at the
+# repo root so the serving, training and checkpoint/hot-swap perf
+# trajectories are tracked across PRs (schemas: EXPERIMENTS.md §Serve /
+# §Train / §Ckpt).  scripts/check_bench.sh gates all three against the
+# committed baselines in benchmarks/.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -41,10 +42,14 @@ if [[ "$MODE" == "--full" ]]; then
     REQUESTS=10000
     CONCURRENCY=32
     TRAIN_STEPS=150
+    PIPE_STEPS=120
+    PIPE_REQUESTS=2000
 else
     REQUESTS=1000
     CONCURRENCY=16
     TRAIN_STEPS=50
+    PIPE_STEPS=40
+    PIPE_REQUESTS=256
 fi
 "$BIN" loadgen \
     --requests "$REQUESTS" \
@@ -63,4 +68,43 @@ echo "== train smoke (BENCH_train.json) =="
     --out "$REPO_ROOT/BENCH_train.json"
 
 echo
-echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json + $REPO_ROOT/BENCH_train.json"
+echo "== ckpt pipeline: train → snapshot → serve → hot-swap → eval (BENCH_ckpt.json) =="
+CKPT_PIPE="$REPO_ROOT/ckpts_verify_pipeline"
+rm -rf "$CKPT_PIPE"
+# hard-fails internally on: round-trip mismatch, dropped requests during
+# the hot-swap, or serve/train encode divergence
+"$BIN" pipeline \
+    --steps "$PIPE_STEPS" \
+    --requests "$PIPE_REQUESTS" \
+    --ckpt-dir "$CKPT_PIPE" \
+    --out "$REPO_ROOT/BENCH_ckpt.json" \
+    --quiet
+
+echo
+echo "== ckpt resume smoke: interrupted + resumed == uninterrupted =="
+CKPT_A="$REPO_ROOT/ckpts_verify_a"
+CKPT_B="$REPO_ROOT/ckpts_verify_b"
+rm -rf "$CKPT_A" "$CKPT_B"
+# one 40-step run snapshotting at 20/40, then a second trainer resumed
+# from the step-20 snapshot; both step-40 snapshots must be bit-identical
+"$BIN" train --kind switchback --steps 40 \
+    --ckpt-every 20 --ckpt-dir "$CKPT_A" --eval-per-concept 0 \
+    --out "$REPO_ROOT/.bench_ckpt_smoke_a.json" -q
+"$BIN" train --resume "$CKPT_A/ckpt-00000020.sbck" \
+    --ckpt-every 20 --ckpt-dir "$CKPT_B" --eval-per-concept 0 \
+    --out "$REPO_ROOT/.bench_ckpt_smoke_b.json" -q
+"$BIN" ckpt inspect "$CKPT_B/ckpt-00000040.sbck"
+DIFF_OUT="$("$BIN" ckpt diff "$CKPT_A/ckpt-00000040.sbck" "$CKPT_B/ckpt-00000040.sbck")"
+echo "$DIFF_OUT"
+echo "$DIFF_OUT" | grep -q "parameters: bit-identical" \
+    || { echo "resume smoke FAILED: resumed weights differ" >&2; exit 1; }
+echo "$DIFF_OUT" | grep -q "state identical" \
+    || { echo "resume smoke FAILED: resumed optimizer state differs" >&2; exit 1; }
+echo "$DIFF_OUT" | grep -q "cursor identical" \
+    || { echo "resume smoke FAILED: resumed data cursor differs" >&2; exit 1; }
+echo "resume smoke OK — interrupted+resumed run is bit-identical"
+rm -rf "$CKPT_A" "$CKPT_B" "$CKPT_PIPE" \
+    "$REPO_ROOT/.bench_ckpt_smoke_a.json" "$REPO_ROOT/.bench_ckpt_smoke_b.json"
+
+echo
+echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json + $REPO_ROOT/BENCH_train.json + $REPO_ROOT/BENCH_ckpt.json"
