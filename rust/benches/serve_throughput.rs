@@ -62,6 +62,7 @@ fn main() {
                 population,
                 image_fraction: 0.7,
                 seed: 77,
+                swap_every: 0,
             },
         );
         report.print();
@@ -89,6 +90,7 @@ fn main() {
             population: 8,
             image_fraction: 1.0,
             seed: 3,
+            swap_every: 0,
         },
     );
     println!(

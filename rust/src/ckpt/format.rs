@@ -33,7 +33,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 use std::time::Instant;
 
+/// File magic: the first four bytes of every checkpoint.
 pub const MAGIC: &[u8; 4] = b"SBCK";
+/// On-disk format version this build writes and reads.
 pub const FORMAT_VERSION: u32 = 1;
 
 /// Everything a resumed run needs to continue bit-identically (see the
@@ -67,6 +69,7 @@ pub struct IoStats {
 }
 
 impl IoStats {
+    /// Throughput of the save/load this measures.
     pub fn mb_per_s(&self) -> f64 {
         self.bytes as f64 / 1e6 / self.secs.max(1e-9)
     }
@@ -232,8 +235,168 @@ fn le_bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
         .collect()
 }
 
+/// Validate the 16-byte header; returns the manifest length in bytes.
+fn parse_header(head: &[u8; 16], path: &Path) -> Result<usize> {
+    if &head[0..4] != MAGIC {
+        bail!("{path:?} is not a switchback checkpoint (bad magic)");
+    }
+    let version = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
+    if version != FORMAT_VERSION {
+        bail!("{path:?} has format version {version}, this build reads {FORMAT_VERSION}");
+    }
+    Ok(u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize)
+}
+
+/// Rebuild the [`EncoderConfig`] echo from a parsed manifest.
+fn encoder_from_manifest(m: &Value) -> Result<EncoderConfig> {
+    let model = m.get("model").ok_or_else(|| anyhow!("manifest missing model"))?;
+    let kind_s = read_str(model, "kind")?;
+    let kind = LinearKind::parse(kind_s)
+        .ok_or_else(|| anyhow!("unknown precision kind {kind_s:?}"))?;
+    Ok(EncoderConfig {
+        kind,
+        dim: read_usize(model, "dim")?,
+        heads: read_usize(model, "heads")?,
+        blocks: read_usize(model, "blocks")?,
+        embed_dim: read_usize(model, "embed_dim")?,
+        patches: read_usize(model, "patches")?,
+        patch_dim: read_usize(model, "patch_dim")?,
+        text_seq: read_usize(model, "text_seq")?,
+        vocab: read_usize(model, "vocab")?,
+        seed: read_u64_str(model, "seed")?,
+    })
+}
+
+/// What [`peek`] reads out of a checkpoint without touching its tensor
+/// blobs: enough for a watcher to decide whether a snapshot is newer and
+/// shape-compatible before paying for the full CRC-checked load.
+#[derive(Debug, Clone)]
+pub struct CkptPeek {
+    /// training step the snapshot was taken after (the freshness key)
+    pub step: u64,
+    /// model shape + precision kind + init seed echo
+    pub encoder: EncoderConfig,
+    /// model tensors in the file (excluding optimizer slots)
+    pub n_params: usize,
+    /// manifest length in bytes (all that was read past the header)
+    pub manifest_bytes: usize,
+    /// bytes the manifest says a complete file holds (header + manifest
+    /// + every tensor blob)
+    pub expected_bytes: u64,
+    /// bytes actually on disk right now — `< expected_bytes` means the
+    /// blobs are still being written (e.g. a non-atomic copy in flight):
+    /// a full [`load`] would fail *now* but may succeed later
+    pub file_bytes: u64,
+}
+
+impl CkptPeek {
+    /// Does the on-disk size match what the manifest promises?  (Content
+    /// integrity still needs [`load`]'s CRC pass.)
+    pub fn is_complete(&self) -> bool {
+        self.file_bytes >= self.expected_bytes
+    }
+}
+
+/// Read a checkpoint's header + JSON manifest **without loading the
+/// tensor blobs** — a few KiB of I/O regardless of model size.  The
+/// serve-side standby watcher ([`crate::serve::standby`]) uses this to
+/// pick the newest compatible snapshot (newest-manifest-wins) before
+/// committing to a full [`load`].  Integrity of the blobs is *not*
+/// checked here; that is `load`'s job.
+pub fn peek(path: &Path) -> Result<CkptPeek> {
+    use std::io::Read;
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut head = [0u8; 16];
+    f.read_exact(&mut head)
+        .map_err(|_| anyhow!("{path:?} is truncated inside the header"))?;
+    let mlen = parse_header(&head, path)?;
+    // the length field is untrusted bytes: bound it by the file size
+    // before allocating, or a torn header could ask for a huge buffer
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
+    if (mlen as u64).saturating_add(16) > file_len {
+        bail!("{path:?} is truncated inside the manifest");
+    }
+    let mut mbytes = vec![0u8; mlen];
+    f.read_exact(&mut mbytes)
+        .map_err(|_| anyhow!("{path:?} is truncated inside the manifest"))?;
+    let manifest = std::str::from_utf8(&mbytes)
+        .map_err(|_| anyhow!("manifest is not UTF-8"))?;
+    let m = json::parse(manifest).map_err(|e| anyhow!("bad manifest JSON: {e}"))?;
+    // end of the furthest blob per the manifest → the complete file size
+    let blob_end: u64 = m
+        .get("tensors")
+        .and_then(Value::as_arr)
+        .map(|ts| {
+            ts.iter()
+                .filter_map(|t| {
+                    let off = t.get("offset").and_then(Value::as_f64)? as u64;
+                    let len = t.get("len").and_then(Value::as_f64)? as u64;
+                    Some(off.saturating_add(len.saturating_mul(4)))
+                })
+                .max()
+                .unwrap_or(0)
+        })
+        .unwrap_or(0);
+    Ok(CkptPeek {
+        step: read_u64_num(&m, "step")?,
+        encoder: encoder_from_manifest(&m)?,
+        n_params: read_usize(&m, "n_params")?,
+        manifest_bytes: mlen,
+        expected_bytes: (16 + mlen as u64).saturating_add(blob_end),
+        file_bytes: file_len,
+    })
+}
+
 /// Serialize `ck` to `path` (atomic: temp file + rename).  Returns bytes
 /// written and wall time (save MB/s in BENCH_ckpt.json).
+///
+/// Round trip (every blob CRC-32-checked on [`load`]; [`peek`] reads the
+/// manifest without touching the blobs):
+///
+/// ```
+/// use switchback::ckpt::{load, peek, save, TrainCheckpoint};
+/// use switchback::config::TrainHyper;
+/// use switchback::data::DataCursor;
+/// use switchback::nn::LinearKind;
+/// use switchback::optim::OptimizerState;
+/// use switchback::serve::EncoderConfig;
+///
+/// let ck = TrainCheckpoint {
+///     step: 3,
+///     encoder: EncoderConfig {
+///         kind: LinearKind::SwitchBack,
+///         dim: 4, heads: 2, blocks: 1, embed_dim: 2,
+///         patches: 2, patch_dim: 3, text_seq: 2, vocab: 8, seed: 7,
+///     },
+///     hyper: TrainHyper::preset(4),
+///     shifts: vec![],
+///     batch: 2,
+///     grad_shards: 1,
+///     param_names: vec!["w".into()],
+///     params: vec![vec![1.0, -2.5]],
+///     opt: OptimizerState {
+///         name: "lion".into(),
+///         t: 3,
+///         slots: vec![("m".into(), vec![vec![0.5, 0.25]])],
+///     },
+///     data: DataCursor {
+///         step: 3, gain: 1.0, mapping: vec![0, 1],
+///         rng: [1, 2, 3, 4], rng_spare: None,
+///     },
+/// };
+/// let path = std::env::temp_dir().join("sbck_doctest_roundtrip.sbck");
+/// save(&path, &ck)?;
+/// let (back, _io) = load(&path)?; // fails closed on any CRC mismatch
+/// assert_eq!(back.params, ck.params);
+/// assert_eq!(back.opt, ck.opt);
+/// assert_eq!(peek(&path)?.step, 3); // manifest only, no tensor load
+/// # std::fs::remove_file(&path).ok();
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub fn save(path: &Path, ck: &TrainCheckpoint) -> Result<IoStats> {
     if ck.param_names.len() != ck.params.len() {
         bail!(
@@ -297,38 +460,20 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
     let t0 = Instant::now();
     let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
     let bytes = raw.len() as u64;
-    if raw.len() < 16 || &raw[0..4] != MAGIC {
+    if raw.len() < 16 {
         bail!("{path:?} is not a switchback checkpoint (bad magic)");
     }
-    let version = u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]);
-    if version != FORMAT_VERSION {
-        bail!("{path:?} has format version {version}, this build reads {FORMAT_VERSION}");
-    }
-    let mlen = u64::from_le_bytes(raw[8..16].try_into().unwrap()) as usize;
-    let blob_base = 16 + mlen;
-    if raw.len() < blob_base {
-        bail!("{path:?} is truncated inside the manifest");
-    }
+    let mlen = parse_header(raw[0..16].try_into().unwrap(), path)?;
+    // untrusted length field: checked add, or a torn header whose length
+    // wraps usize would index past (or before) the buffer
+    let blob_base = match 16usize.checked_add(mlen) {
+        Some(b) if b <= raw.len() => b,
+        _ => bail!("{path:?} is truncated inside the manifest"),
+    };
     let manifest = std::str::from_utf8(&raw[16..blob_base])
         .map_err(|_| anyhow!("manifest is not UTF-8"))?;
     let m = json::parse(manifest).map_err(|e| anyhow!("bad manifest JSON: {e}"))?;
-
-    let model = m.get("model").ok_or_else(|| anyhow!("manifest missing model"))?;
-    let kind_s = read_str(model, "kind")?;
-    let kind = LinearKind::parse(kind_s)
-        .ok_or_else(|| anyhow!("unknown precision kind {kind_s:?}"))?;
-    let encoder = EncoderConfig {
-        kind,
-        dim: read_usize(model, "dim")?,
-        heads: read_usize(model, "heads")?,
-        blocks: read_usize(model, "blocks")?,
-        embed_dim: read_usize(model, "embed_dim")?,
-        patches: read_usize(model, "patches")?,
-        patch_dim: read_usize(model, "patch_dim")?,
-        text_seq: read_usize(model, "text_seq")?,
-        vocab: read_usize(model, "vocab")?,
-        seed: read_u64_str(model, "seed")?,
-    };
+    let encoder = encoder_from_manifest(&m)?;
 
     let hv = m.get("hyper").ok_or_else(|| anyhow!("manifest missing hyper"))?;
     let opt_s = read_str(hv, "optimizer")?;
@@ -567,6 +712,56 @@ pub(crate) mod tests {
         std::fs::write(&vfile, &raw).unwrap();
         let err = load(&vfile).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `peek` reads only the header + manifest: it must succeed — and
+    /// agree with the manifest — even on a file whose tensor blobs are
+    /// truncated (which `load` correctly rejects).
+    #[test]
+    fn peek_reads_manifest_without_touching_blobs() {
+        let dir = std::env::temp_dir().join("sbck_fmt_peek");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.sbck");
+        let ck = sample_ckpt();
+        save(&path, &ck).unwrap();
+        let p = peek(&path).unwrap();
+        assert_eq!(p.step, ck.step);
+        assert_eq!(p.n_params, ck.params.len());
+        assert_eq!(p.encoder.kind, ck.encoder.kind);
+        assert_eq!(p.encoder.seed, ck.encoder.seed);
+        assert_eq!(p.encoder.dim, ck.encoder.dim);
+        assert!(p.manifest_bytes > 0);
+        assert!(p.is_complete(), "a finished save must peek complete");
+        assert_eq!(p.expected_bytes, p.file_bytes, "save writes exactly the blobs");
+
+        // drop the last tensor bytes: load fails closed, peek still works
+        // — and reports the file as incomplete (a copy still in flight)
+        let raw = std::fs::read(&path).unwrap();
+        let trunc = dir.join("trunc.sbck");
+        std::fs::write(&trunc, &raw[..raw.len() - 3]).unwrap();
+        assert!(load(&trunc).is_err(), "truncated blobs must fail load");
+        let tp = peek(&trunc).unwrap();
+        assert_eq!(tp.step, ck.step);
+        assert!(!tp.is_complete(), "missing blob bytes must show as incomplete");
+
+        // header/manifest damage still fails peek closed: a full 16-byte
+        // header with a wrong magic, a short file, and a header whose
+        // manifest-length field asks for more bytes than the file holds
+        let junk = dir.join("junk.sbck");
+        std::fs::write(&junk, b"NOPE....0123456789ab").unwrap();
+        assert!(peek(&junk).unwrap_err().to_string().contains("magic"));
+        let short = dir.join("short.sbck");
+        std::fs::write(&short, b"SBCK").unwrap();
+        assert!(peek(&short).unwrap_err().to_string().contains("truncated"));
+        let mut lying = Vec::new();
+        lying.extend_from_slice(MAGIC);
+        lying.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        lying.extend_from_slice(&u64::MAX.to_le_bytes()); // absurd manifest len
+        let huge = dir.join("huge.sbck");
+        std::fs::write(&huge, &lying).unwrap();
+        let err = peek(&huge).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -35,12 +35,16 @@
 //!   skips the offending shard window,
 //! * `serve --weights` / `switchback pipeline` — load-at-boot + live
 //!   hot-swap, benchmarked in `BENCH_ckpt.json`,
+//! * the serve-side **warm-standby watcher** ([`crate::serve::standby`]),
+//!   which uses [`peek`] to pick the newest compatible snapshot in a
+//!   watched directory (manifest-only read, no tensor I/O) before paying
+//!   for the full CRC-checked [`load`],
 //! * `ckpt inspect` / `ckpt diff` ([`inspect`]).
 
 pub mod format;
 pub mod inspect;
 
-pub use format::{load, save, IoStats, TrainCheckpoint, FORMAT_VERSION};
+pub use format::{load, peek, save, CkptPeek, IoStats, TrainCheckpoint, FORMAT_VERSION};
 
 use crate::serve::{EncoderConfig, EncoderWeights};
 use crate::tensor::Matrix;

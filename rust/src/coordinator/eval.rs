@@ -7,7 +7,7 @@
 //!
 //! The classification core ([`nearest_class_accuracy`]) is embedding-space
 //! only and un-gated: the PJRT path feeds it artifact-encoded embeddings
-//! ([`zero_shot_accuracy`]), the native path feeds it
+//! (`zero_shot_accuracy`, feature `pjrt`), the native path feeds it
 //! `train::ClipTrainModel` embeddings.
 
 /// Cosine-similarity argmax classification over flat embedding buffers.

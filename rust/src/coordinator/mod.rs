@@ -7,10 +7,10 @@
 //! * [`registry`] — the experiment/scenario registry (un-gated listing).
 //! * [`eval`] — zero-shot-style evaluation; the nearest-class core is
 //!   un-gated and shared with the native path.
-//! * [`trainer`] (feature `pjrt`) — the full training loop over an AOT
+//! * `trainer` (feature `pjrt`) — the full training loop over an AOT
 //!   artifact: data → PJRT step → (optional loss-scaler) → (optional grad
 //!   clip) → optimizer → telemetry.
-//! * [`experiments`] (feature `pjrt`) — the runners mapping every paper
+//! * `experiments` (feature `pjrt`) — the runners mapping every paper
 //!   figure to a set of runs and a printed summary (DESIGN.md experiment
 //!   index).
 

@@ -8,7 +8,8 @@
 //! * **L2 (JAX, build time)** — CLIP dual-tower with precision-pluggable
 //!   linear layers, AOT-lowered to HLO text artifacts.
 //! * **L3 (this crate, runtime)** — everything on the training path:
-//!   - [`runtime`] loads + executes the AOT artifacts via PJRT,
+//!   - `runtime` (feature `pjrt`) loads + executes the AOT artifacts via
+//!     PJRT,
 //!   - [`optim`] implements **StableAdamW** (the paper's Algorithm 2),
 //!     AdamW, gradient clipping, loss scalers,
 //!   - [`telemetry`] implements the RMS-spike / loss-spike analysis
@@ -36,7 +37,7 @@
 //! Python never runs on the training path: `make artifacts` lowers the
 //! model once; the `switchback` binary is then self-contained.
 //!
-//! The [`runtime`] module and the artifact-driven parts of
+//! The `runtime` module and the artifact-driven parts of
 //! [`coordinator`] need the PJRT toolchain and are gated behind the
 //! `pjrt` cargo feature; everything else (including the native trainer,
 //! the serving engine and all benches) builds and tests without it.

@@ -27,9 +27,10 @@ use switchback::coordinator::eval::nearest_class_accuracy;
 use switchback::coordinator::registry;
 use switchback::data::SyntheticClip;
 use switchback::nn::LinearKind;
+use switchback::serve::standby::{self, StandbyConfig};
 use switchback::serve::{
-    run_loadgen, write_bench_json, BatchPolicy, ClipEncoder, EncodeInput,
-    EncoderConfig, Engine, LoadgenConfig, ServeConfig,
+    planned_swaps, run_loadgen, write_bench_json, BatchPolicy, ClipEncoder,
+    EncodeInput, EncoderConfig, Engine, LoadgenConfig, ServeConfig, ServeSnapshot,
 };
 use switchback::tensor::Rng;
 use switchback::train::{
@@ -103,6 +104,13 @@ TRAIN OPTIONS (native):
   --ckpt-keep K          snapshot retention (default: 3)
   --rollback-on-spike    restore the last snapshot when the loss spikes
                          and skip the offending shard window
+  --spike-sigma X        rollback-guard deviation threshold in trailing
+                         standard deviations (default: 3.2, the paper's
+                         Appendix-D heuristic; reported spike counts
+                         always use 3.2 regardless)
+  --spike-cooldown N     steps the guard stays quiet after firing while
+                         the loss baseline adapts (default: 30 = 3x the
+                         Appendix-D dedup window)
   --resume PATH          continue bit-identically from a checkpoint file
                          or directory; shape/schedule/optimizer flags
                          conflict (the checkpoint's values apply) and
@@ -113,12 +121,22 @@ TRAIN OPTIONS (native):
   --quiet
 
 PIPELINE OPTIONS:
-  --steps N              training steps (default: 80; snapshots at N/2, N)
+  --steps N              training steps, >= 8 (default: 80; snapshots on
+                         an N/4 cadence — the engine boots the first and
+                         the standby watcher promotes the rest under
+                         live traffic, then rejects an injected drifted
+                         snapshot)
   --kind K               precision kind end to end (default: switchback)
   --optimizer K          adamw | stable_adamw | lion (default: stable_adamw)
-  --requests N           serving requests around the hot-swap (default: 512)
+  --requests N           minimum serving requests across the promotions
+                         (default: 512)
   --concurrency N        client threads (default: 8)
-  --ckpt-dir DIR         snapshot directory (default: ckpts_pipeline)
+  --ckpt-dir DIR         snapshot directory — cleared at start, the
+                         scenario's workspace (default: ckpts_pipeline;
+                         the watcher watches its watch/ subdirectory)
+  --drift-max X          canary drift bound for promotions (default: 0.5;
+                         must stay positive — the scenario asserts the
+                         injected drifted snapshot is rejected)
   --seed N               (default: 42)
   --out PATH             report path (default: BENCH_ckpt.json)
   --quiet
@@ -168,6 +186,23 @@ SERVE / LOADGEN OPTIONS:
   --weights PATH         serve: boot from a training checkpoint (file or
                          snapshot dir; shape comes from the checkpoint,
                          --kind picks the serving quantization)
+  --watch-dir DIR        serve: warm-standby watch directory — the
+                         watcher peeks new ckpt-*.sbck manifests,
+                         prepares + canary-validates off-thread, and
+                         promotes via the generation-bump hot-swap
+  --standby              serve (with --watch-dir): additionally *wait
+                         for and assert* the promotion when the watched
+                         directory already holds a snapshot newer than
+                         the booted weights, before the smoke probes run
+  --canary-every N       serve: post-promotion canary probe every N
+                         watcher polls; a failed probe rolls back to
+                         the previous generation (default: 4)
+  --drift-max X          serve: max canary cosine distance live vs
+                         candidate (default: 0.5; 0 disables the bound)
+  --swap-every N         loadgen: add one swap-aware run that promotes a
+                         fresh encoder generation every N requests
+                         (sustained throughput + tail latency across
+                         generations, standby counters in the entry)
 ";
 
 /// Every `--key value` flag any subcommand accepts.  The parser rejects
@@ -205,6 +240,12 @@ const VALUE_FLAGS: &[&str] = &[
     "--out",
     "--tol",
     "--weights",
+    "--watch-dir",
+    "--canary-every",
+    "--drift-max",
+    "--swap-every",
+    "--spike-sigma",
+    "--spike-cooldown",
     "--resume",
     "--ckpt-every",
     "--ckpt-dir",
@@ -229,6 +270,7 @@ const BOOL_FLAGS: &[&str] = &[
     "--assert-improves",
     "--strict",
     "--rollback-on-spike",
+    "--standby",
     "-v",
     "-q",
 ];
@@ -567,6 +609,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             bail!("--ckpt-every needs --ckpt-dir");
         }
         cfg.rollback_on_spike = args.has("--rollback-on-spike");
+        apply_spike_flags(args, &mut cfg)?;
         cfg.metrics_path = args.flags.get("metrics").map(|base| {
             if multi {
                 format!("{base}.{}_{}.jsonl", kind.label(), optimizer.label())
@@ -652,6 +695,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse + validate the rollback-guard tuning flags
+/// (`--spike-sigma`/`--spike-cooldown`) — shared by fresh and resumed
+/// runs so the validation can never diverge between the two paths.
+fn apply_spike_flags(args: &Args, cfg: &mut NativeTrainConfig) -> Result<()> {
+    cfg.spike_sigma = args.get("spike-sigma", cfg.spike_sigma)?;
+    if !cfg.spike_sigma.is_finite() || cfg.spike_sigma <= 0.0 {
+        bail!("--spike-sigma must be a positive number");
+    }
+    cfg.spike_cooldown = args.get("spike-cooldown", cfg.spike_cooldown)?;
+    Ok(())
+}
+
 /// `train --resume <path>`: continue a checkpointed run bit-identically.
 /// Shape, hyperparameters, batch/shard geometry and the shift schedule are
 /// adopted from the checkpoint (anything else would silently diverge from
@@ -709,6 +764,9 @@ fn cmd_train_resume(args: &Args, resume: &str) -> Result<()> {
         }
     }
     cfg.rollback_on_spike = args.has("--rollback-on-spike");
+    // guard tuning is run-control (a reactive intervention, not training
+    // math), so unlike the schedule flags it is accepted on resume
+    apply_spike_flags(args, &mut cfg)?;
     if cfg.rollback_on_spike {
         // the guard's online loss-history/cooldown state is deliberately
         // not part of the checkpoint (DESIGN.md §Checkpoint): the
@@ -759,15 +817,19 @@ fn cmd_ckpt(args: &Args) -> Result<()> {
     }
 }
 
-/// The end-to-end `pipeline` scenario: train with snapshots → verify the
-/// round trip → serve the mid-run weights → hot-swap to the final weights
-/// under live traffic (zero dropped requests) → eval the served weights
-/// against the train model (bit-identical encodes).  Emits
-/// BENCH_ckpt.json (schema: EXPERIMENTS.md §Ckpt).
+/// The end-to-end `pipeline` scenario: train with snapshots on an N/4
+/// cadence → verify the round trip → boot the serving engine from the
+/// *first* snapshot → the warm-standby watcher picks the later snapshots
+/// out of a watched directory and promotes them under live closed-loop
+/// traffic (zero dropped requests, one generation bump each) → an
+/// injected drifted snapshot is canary-rejected without touching the
+/// live generation → eval the served weights against the train model
+/// (bit-identical encodes).  Emits BENCH_ckpt.json (schema:
+/// EXPERIMENTS.md §Ckpt).
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let steps: u64 = args.get("steps", 80)?;
-    if steps < 4 {
-        bail!("--steps must be at least 4 (snapshots at N/2 and N)");
+    if steps < 8 {
+        bail!("--steps must be at least 8 (snapshots on an N/4 cadence)");
     }
     let kind_s: String = args.get("kind", "switchback".to_string())?;
     let Some(kind) = LinearKind::parse(&kind_s) else {
@@ -788,26 +850,42 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let dir: String = args.get("ckpt-dir", "ckpts_pipeline".to_string())?;
     let out: String = args.get("out", "BENCH_ckpt.json".to_string())?;
     let verbose = !args.has("--quiet") && !args.has("-q");
+    let drift_max: f32 = args.get("drift-max", 0.5)?;
+    // the scenario *mandates* a canary rejection of the injected drifted
+    // snapshot, so the bound cannot be disabled here (unlike `serve`)
+    if !drift_max.is_finite() || drift_max <= 0.0 {
+        bail!("--drift-max must be a positive number (pipeline requires the bound)");
+    }
 
-    // ---- 1) train, snapshotting at N/2 and N -------------------------
+    // ---- 1) train, snapshotting on the N/4 cadence -------------------
+    // the snapshot directory is this scenario's workspace: clear it so a
+    // previous run's snapshots cannot leak into the staged promotions
+    let _ = std::fs::remove_dir_all(&dir);
     let mut cfg = NativeTrainConfig::preset(kind, steps);
     cfg.hyper.optimizer = optimizer;
     cfg.hyper.seed = seed;
     cfg.encoder.seed = seed;
-    cfg.ckpt_every = (steps / 2).max(1);
+    cfg.ckpt_every = (steps / 4).max(1);
     cfg.ckpt_dir = Some(dir.clone());
-    cfg.ckpt_keep = 4;
+    cfg.ckpt_keep = 8;
     println!("== pipeline 1/4: train {} steps (snapshots every {}) ==", steps, cfg.ckpt_every);
-    let mid_step = cfg.ckpt_every;
     let mut trainer = NativeTrainer::new(cfg);
     let train_res = trainer.run(verbose)?;
     train_res.print();
     let save_mb_s =
         train_res.ckpt_bytes as f64 / 1e6 / train_res.ckpt_save_secs.max(1e-9);
 
-    // ---- 2) load both snapshots back, verify the round trip ----------
+    // ---- 2) load the snapshots back, verify the round trip -----------
     let dir_path = std::path::Path::new(&dir);
-    let (mid_ck, _) = ckpt::load(&ckpt::snapshot_path(dir_path, mid_step))?;
+    let snaps = ckpt::list_snapshots(dir_path);
+    if snaps.len() < 4 {
+        bail!(
+            "pipeline expected ≥4 snapshots on the N/4 cadence, found {}",
+            snaps.len()
+        );
+    }
+    let (boot_step, boot_path) = snaps[0].clone();
+    let (boot_ck, _) = ckpt::load(&boot_path)?;
     let (final_ck, load_io) = ckpt::load(&ckpt::snapshot_path(dir_path, steps))?;
     let live = trainer.final_checkpoint().expect("run just completed");
     let round_trip_ok = final_ck.params == live.params
@@ -823,8 +901,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         load_io.bytes
     );
 
-    // ---- 3) serve the mid-run weights, hot-swap to final mid-traffic --
-    let enc_cfg = mid_ck.encoder.clone();
+    // ---- 3) boot from the first snapshot; the watcher promotes the
+    //         rest under live traffic, then rejects injected drift -----
+    let enc_cfg = boot_ck.encoder.clone();
     let image_len = enc_cfg.image_len();
     let (text_seq, vocab) = (enc_cfg.text_seq, enc_cfg.vocab);
     let serve_cfg = ServeConfig {
@@ -837,11 +916,11 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         cache_capacity: 8192.max(requests * 2),
         cache_shards: 0,
     };
-    let mid_enc = ClipEncoder::from_weights(
+    let boot_enc = ClipEncoder::from_weights(
         enc_cfg.clone(),
-        ckpt::encoder_weights(&enc_cfg, &mid_ck.params)?,
+        ckpt::encoder_weights(&enc_cfg, &boot_ck.params)?,
     );
-    let engine = Engine::start_with_encoder(serve_cfg, mid_enc);
+    let engine = std::sync::Arc::new(Engine::start_with_encoder(serve_cfg, boot_enc));
     let mut rng = Rng::seed(seed ^ 0x51BE);
     let probe: Vec<f32> = (0..image_len).map(|_| rng.normal()).collect();
     let pre = engine
@@ -855,32 +934,42 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         bail!("probe did not warm the cache");
     }
 
-    // build the new encoder *before* the swap — preparation (quantize) is
-    // the expensive part and happens outside the engine entirely
-    let final_enc = ClipEncoder::from_weights(
-        enc_cfg.clone(),
-        ckpt::encoder_weights(&enc_cfg, &final_ck.params)?,
-    );
+    let watch_dir = dir_path.join("watch");
+    let _ = std::fs::remove_dir_all(&watch_dir);
+    std::fs::create_dir_all(&watch_dir)?;
+    let mut scfg = StandbyConfig::new(&watch_dir);
+    scfg.poll = std::time::Duration::from_millis(5);
+    scfg.drift_max = Some(drift_max);
+    scfg.initial_step = boot_step;
+    scfg.baseline = Some(boot_ck.params.clone());
+    scfg.verbose = verbose;
+    let watcher = standby::spawn(std::sync::Arc::clone(&engine), scfg);
+    let staged: Vec<(u64, std::path::PathBuf)> = snaps[1..].to_vec();
     println!(
-        "== pipeline 3/4: {requests} requests × {concurrency} clients with a \
-         mid-traffic hot-swap =="
+        "== pipeline 3/4: ≥{requests} requests × {concurrency} clients; the \
+         watcher promotes {} staged snapshots mid-traffic, then must reject \
+         an injected drifted one ==",
+        staged.len()
     );
-    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-    let next = AtomicUsize::new(0);
+    use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    let stop = AtomicBool::new(false);
+    let issued = AtomicUsize::new(0);
     let errors = AtomicU64::new(0);
-    let mut swap_pause = std::time::Duration::ZERO;
-    std::thread::scope(|s| -> Result<()> {
+    let min_per_client = requests / concurrency + 1;
+    let mut stage_err: Option<String> = None;
+    std::thread::scope(|s| {
         for c in 0..concurrency {
             let engine = &engine;
-            let next = &next;
+            let stop = &stop;
+            let issued = &issued;
             let errors = &errors;
             s.spawn(move || {
                 let mut rng = Rng::seed(0xC11E07 + c as u64);
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= requests {
-                        return;
-                    }
+                let mut mine = 0usize;
+                // traffic flows for the whole promote/reject sequence:
+                // run until the coordinator says stop AND the per-client
+                // minimum is met
+                while !stop.load(Ordering::Relaxed) || mine < min_per_client {
                     let input = if rng.uniform() < 0.7 {
                         EncodeInput::Image((0..image_len).map(|_| rng.normal()).collect())
                     } else {
@@ -891,33 +980,124 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                     if engine.encode(input).is_err() {
                         errors.fetch_add(1, Ordering::Relaxed);
                     }
+                    mine += 1;
+                    issued.fetch_add(1, Ordering::Relaxed);
                 }
             });
         }
-        // install the new weights once traffic is in full flight
-        while next.load(Ordering::Relaxed) < requests / 2 {
-            std::thread::yield_now();
-        }
-        swap_pause = engine
-            .install_encoder(final_enc)
-            .map_err(|e| anyhow::anyhow!("hot-swap failed: {e}"))?;
-        Ok(())
-    })?;
+        // wait for `ok`, but fail *fast* (not at the 120 s timeout) when
+        // `bad` observes the opposite outcome — e.g. a staged snapshot
+        // being rejected, or the drift injection being promoted
+        let wait_for = |what: &str,
+                        ok: &dyn Fn(&ServeSnapshot) -> bool,
+                        bad: &dyn Fn(&ServeSnapshot) -> Option<String>|
+         -> Result<(), String> {
+            let t0 = std::time::Instant::now();
+            loop {
+                let snap = engine.metrics().snapshot();
+                if ok(&snap) {
+                    return Ok(());
+                }
+                if let Some(why) = bad(&snap) {
+                    return Err(format!("while waiting for {what}: {why}"));
+                }
+                if t0.elapsed().as_secs() > 120 {
+                    return Err(format!("timed out waiting for {what}"));
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        };
+        let n_staged = staged.len();
+        let stage = || -> Result<(), String> {
+            for (k, (step, path)) in staged.iter().enumerate() {
+                // atomic hand-off (copy + rename): the watcher must never
+                // peek a half-written snapshot
+                let tmp = watch_dir.join("staging.tmp");
+                std::fs::copy(path, &tmp).map_err(|e| e.to_string())?;
+                std::fs::rename(&tmp, ckpt::snapshot_path(&watch_dir, *step))
+                    .map_err(|e| e.to_string())?;
+                wait_for(
+                    &format!("promotion of step {step}"),
+                    &|m| m.standby_promotions as usize >= k + 1,
+                    &|m| {
+                        (m.standby_rejects > 0).then(|| {
+                            "the staged snapshot was canary-rejected \
+                             (see watcher log; is --drift-max too tight?)"
+                                .to_string()
+                        })
+                    },
+                )?;
+            }
+            // drift injection: a different-seed model's weights dressed
+            // up as a newer snapshot — the canary bound must refuse it
+            let donor = ClipTrainModel::new(EncoderConfig {
+                seed: seed ^ 0xBAD_5EED,
+                ..enc_cfg.clone()
+            });
+            let mut bad = final_ck.clone();
+            bad.step = steps + 1;
+            bad.params = donor.collect_params();
+            ckpt::save(&ckpt::snapshot_path(&watch_dir, steps + 1), &bad)
+                .map_err(|e| e.to_string())?;
+            wait_for(
+                "canary rejection of the drifted snapshot",
+                &|m| m.standby_rejects >= 1,
+                &|m| {
+                    (m.standby_promotions as usize > n_staged).then(|| {
+                        "the drifted snapshot was PROMOTED instead of \
+                         rejected (drift bound did not hold)"
+                            .to_string()
+                    })
+                },
+            )?;
+            Ok(())
+        };
+        stage_err = stage().err();
+        stop.store(true, Ordering::Relaxed);
+    });
+    watcher.stop();
+    if let Some(e) = stage_err {
+        bail!("pipeline standby phase failed: {e}");
+    }
     let dropped = errors.load(Ordering::Relaxed);
     if dropped > 0 {
-        bail!("hot-swap dropped {dropped} in-flight requests");
+        bail!("{dropped} requests failed during the watcher-driven promotions");
+    }
+    let snap = engine.metrics().snapshot();
+    let swap_requests = issued.load(Ordering::Relaxed);
+    if snap.standby_promotions as usize != staged.len() {
+        bail!(
+            "expected {} watcher promotions, observed {}",
+            staged.len(),
+            snap.standby_promotions
+        );
+    }
+    if snap.standby_rollbacks > 0 {
+        bail!("unexpected post-promotion rollback(s): {}", snap.standby_rollbacks);
+    }
+    if engine.generation() != staged.len() as u64 {
+        bail!(
+            "the rejected snapshot must leave the live generation untouched \
+             (generation {}, expected {})",
+            engine.generation(),
+            staged.len()
+        );
     }
     let post = engine
         .encode(EncodeInput::Image(probe.clone()))
         .map_err(|e| anyhow::anyhow!("post-swap probe failed: {e}"))?;
     let cache_invalidated = !post.cache_hit;
     let weights_changed = *post.embedding != *pre.embedding;
-    let snap = engine.metrics().snapshot();
     println!(
-        "   hot-swap pause {:.1} µs  (generation {}, cache invalidated: \
-         {cache_invalidated}, weights changed: {weights_changed})",
-        swap_pause.as_secs_f64() * 1e6,
+        "   {} watcher promotions, {} canary reject(s), 0 rollbacks — \
+         generation {}, swap-pause max {:.1} µs, prepare p99 {:.2} ms \
+         (cache invalidated: {cache_invalidated}, weights changed: \
+         {weights_changed})",
+        snap.standby_promotions,
+        snap.standby_rejects,
         engine.generation(),
+        snap.swap_pause_max_us,
+        snap.prepare_p99_ms,
     );
     snap.print(engine.kind_label());
 
@@ -975,7 +1155,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     if !eval_matches_model {
         bail!("serving engine and train model disagree on the same weights");
     }
-    engine.shutdown();
+    drop(engine); // joins the worker pool (Engine::drop drains the queue)
 
     // ---- BENCH_ckpt.json ---------------------------------------------
     let mut config = ObjWriter::new();
@@ -997,9 +1177,14 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         .field_f32("save_mb_s", save_mb_s as f32)
         .field_f32("load_mb_s", load_io.mb_per_s() as f32)
         .field_bool("round_trip_ok", round_trip_ok)
-        .field_f32("hot_swap_pause_us", (swap_pause.as_secs_f64() * 1e6) as f32)
+        .field_f32("hot_swap_pause_us", snap.swap_pause_max_us as f32)
+        .field_f32("swap_pause_p99_us", snap.swap_pause_p99_us as f32)
+        .field_f32("prepare_p99_ms", snap.prepare_p99_ms as f32)
         .field_u64("hot_swaps", snap.hot_swaps)
-        .field_u64("swap_requests", requests as u64)
+        .field_u64("standby_promotions", snap.standby_promotions)
+        .field_u64("standby_rejects", snap.standby_rejects)
+        .field_u64("standby_rollbacks", snap.standby_rollbacks)
+        .field_u64("swap_requests", swap_requests as u64)
         .field_u64("dropped_requests", dropped)
         .field_bool("cache_invalidated", cache_invalidated)
         .field_bool("weights_changed", weights_changed)
@@ -1116,14 +1301,22 @@ fn serve_config_from(args: &Args, kind: LinearKind) -> Result<ServeConfig> {
 
 /// In-process smoke run of the serving engine (the network front-end is a
 /// future scaling PR; the engine API is the subsystem this PR lands).
+/// With `--watch-dir` the warm-standby watcher rides along: if the
+/// watched directory already holds a snapshot newer than the booted
+/// weights, the smoke waits for (and asserts) its promotion.
 fn cmd_serve(args: &Args) -> Result<()> {
     let kind_s: String = args.get("kind", "switchback".to_string())?;
     let Some(kind) = LinearKind::parse(&kind_s) else {
         bail!("bad --kind {kind_s:?} (standard | switchback | switchback_m | llmint8)");
     };
+    let watch_dir = args.flags.get("watch-dir").cloned();
+    if args.has("--standby") && watch_dir.is_none() {
+        bail!("--standby needs --watch-dir <dir>");
+    }
     let mut cfg = serve_config_from(args, kind)?;
     // --weights: boot from a training checkpoint — shape and f32 master
     // weights come from the file, --kind picks the serving quantization
+    let mut boot: Option<(u64, Vec<Vec<f32>>)> = None;
     let loaded = match args.flags.get("weights") {
         Some(wpath) => {
             let file = ckpt::resolve(wpath)?;
@@ -1139,6 +1332,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 kind.label()
             );
             let weights = ckpt::encoder_weights(&cfg.encoder, &ck.params)?;
+            boot = Some((ck.step, ck.params));
             Some(ClipEncoder::from_weights(cfg.encoder.clone(), weights))
         }
         None => None,
@@ -1153,14 +1347,78 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.encoder.blocks,
         if loaded.is_some() { "checkpoint" } else { "seeded" }
     );
-    let engine = match loaded {
+    let engine = std::sync::Arc::new(match loaded {
         Some(enc) => Engine::start_with_encoder(cfg, enc),
         None => Engine::start(cfg),
-    };
+    });
     println!(
         "encoder resident weights: {:.1} KiB (pre-quantized at load)",
         engine.weight_bytes() as f64 / 1024.0
     );
+
+    // warm-standby: watch the directory and (when it already holds a
+    // newer snapshot) require one promotion before the smoke probes run,
+    // so the probes exercise the promoted generation
+    let mut standby_handle = None;
+    if let Some(dir) = watch_dir {
+        let boot_step = boot.as_ref().map(|(s, _)| *s).unwrap_or(0);
+        let drift_max: f32 = args.get("drift-max", 0.5)?;
+        if !drift_max.is_finite() || drift_max < 0.0 {
+            bail!("--drift-max must be a non-negative number");
+        }
+        let mut scfg = StandbyConfig::new(&dir);
+        scfg.probe_every = args.get("canary-every", 4u32)?;
+        scfg.drift_max = if drift_max > 0.0 { Some(drift_max) } else { None };
+        scfg.initial_step = boot_step;
+        scfg.baseline = boot.map(|(_, params)| params);
+        scfg.verbose = true;
+        let newest = ckpt::list_snapshots(std::path::Path::new(&dir))
+            .into_iter()
+            .filter_map(|(_, p)| ckpt::peek(&p).ok())
+            .map(|p| p.step)
+            .max()
+            .unwrap_or(0);
+        standby_handle = Some(standby::spawn(std::sync::Arc::clone(&engine), scfg));
+        // --watch-dir alone spawns the watcher and moves on; --standby
+        // additionally *requires* the pending promotion before the smoke
+        // probes run, so they exercise the promoted generation
+        if args.has("--standby") && newest > boot_step {
+            println!(
+                "standby: watching {dir} — newest snapshot step {newest} > \
+                 booted step {boot_step}, waiting for its promotion"
+            );
+            let t0 = std::time::Instant::now();
+            loop {
+                let snap = engine.metrics().snapshot();
+                if snap.standby_promotions >= 1 {
+                    println!(
+                        "standby: promoted to generation {} \
+                         (prepare p99 {:.2} ms, swap pause max {:.1} µs)",
+                        engine.generation(),
+                        snap.prepare_p99_ms,
+                        snap.swap_pause_max_us,
+                    );
+                    break;
+                }
+                // a reject is not fatal yet: it may be an unrelated bad
+                // file in the directory — a valid candidate can still
+                // promote on a later poll, so only the timeout gives up
+                if t0.elapsed().as_secs() > 30 {
+                    bail!(
+                        "standby: no promotion within 30s ({} snapshot(s) \
+                         rejected — see the watcher log above)",
+                        snap.standby_rejects
+                    );
+                }
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+        } else {
+            println!(
+                "standby: watching {dir} (booted step {boot_step}, newest \
+                 snapshot step {newest} — promotions happen live)"
+            );
+        }
+    }
     let mut rng = Rng::seed(7);
     let img: Vec<f32> = (0..image_len).map(|_| rng.normal()).collect();
     let toks: Vec<i32> = (0..text_seq).map(|_| rng.below(vocab) as i32).collect();
@@ -1190,7 +1448,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let snap = engine.metrics().snapshot();
     snap.print(kind.label());
-    engine.shutdown();
+    if let Some(handle) = standby_handle {
+        handle.stop();
+        println!(
+            "standby: {} promotion(s), {} reject(s), {} rollback(s)",
+            snap.standby_promotions, snap.standby_rejects, snap.standby_rollbacks
+        );
+    }
+    drop(engine); // joins the worker pool (Engine::drop drains the queue)
     println!("serve smoke OK");
     Ok(())
 }
@@ -1242,6 +1507,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 population,
                 image_fraction,
                 seed,
+                swap_every: 0,
             };
             let report = run_loadgen(&engine, &lg);
             report.print();
@@ -1251,6 +1517,52 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             reports.push(report);
             engine.shutdown();
         }
+    }
+
+    // --swap-every: one extra run measuring sustained throughput + tail
+    // latency *across repeated generations* — the swapper promotes a
+    // fresh encoder every N requests through the standby path, so the
+    // entry carries promotion counters and swap-pause percentiles that
+    // benchdiff gates as invariants
+    let swap_every: usize = args.count("swap-every", 0)?;
+    if swap_every > 0 {
+        if swap_every >= requests {
+            bail!("--swap-every must be smaller than --requests for a swap to happen");
+        }
+        let kind = kinds
+            .iter()
+            .copied()
+            .find(|k| *k == LinearKind::SwitchBack)
+            .unwrap_or(kinds[0]);
+        let cfg = serve_config_from(args, kind)?;
+        let engine = Engine::start(cfg);
+        let lg = LoadgenConfig {
+            requests,
+            concurrency: concurrencies[0],
+            population,
+            image_fraction,
+            seed,
+            swap_every,
+        };
+        let report = run_loadgen(&engine, &lg);
+        report.print();
+        if report.errors > 0 {
+            bail!("loadgen --swap-every: {} requests failed", report.errors);
+        }
+        // the swapper promotes every due generation, deterministically
+        let expected = planned_swaps(requests, swap_every) as u64;
+        if report.snapshot.standby_promotions != expected
+            || report.snapshot.standby_rejects > 0
+        {
+            bail!(
+                "loadgen --swap-every: expected {expected} promotions and 0 \
+                 rejects, observed {} and {}",
+                report.snapshot.standby_promotions,
+                report.snapshot.standby_rejects
+            );
+        }
+        reports.push(report);
+        engine.shutdown();
     }
 
     // the acceptance ratio: int8 serving vs the f32 baseline

@@ -2,7 +2,8 @@
 //! linear-layer variants and a full transformer block.
 //!
 //! This is the *measured-speed* half of the reproduction (the accuracy
-//! experiments run through the AOT'd JAX model — see [`crate::runtime`]).
+//! experiments run through the AOT'd JAX model — see `crate::runtime`,
+//! feature `pjrt`).
 //! The paper's Fig 3/4/13 compare wall-clock of SwitchBack vs standard vs
 //! LLM.int8() linear layers inside real training steps; those comparisons
 //! need kernels that actually run at different speeds, which the

@@ -43,10 +43,12 @@ impl Default for AdamWConfig {
 }
 
 impl AdamWConfig {
+    /// StableAdamW (Algorithm 2): AdaFactor update clipping on.
     pub fn stable(beta2: f32) -> Self {
         Self { beta2, update_clipping: true, ..Self::default() }
     }
 
+    /// Plain AdamW: no update clipping (the Fig 6-8 baseline).
     pub fn plain(beta2: f32) -> Self {
         Self { beta2, update_clipping: false, ..Self::default() }
     }
@@ -66,6 +68,8 @@ pub struct AdamW {
 }
 
 impl AdamW {
+    /// Zero-moment optimizer over `sizes`-shaped flat tensors; `metas`
+    /// decides which tensors receive weight decay.
     pub fn new(cfg: AdamWConfig, metas: &[ParamMeta], sizes: &[usize]) -> Self {
         assert_eq!(metas.len(), sizes.len());
         let state = metas

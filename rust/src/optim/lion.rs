@@ -7,6 +7,8 @@
 
 use super::{Optimizer, OptimizerState, ParamMeta, StepStats};
 
+/// Lion hyperparameters (β₁ interpolation, β₂ momentum, decoupled
+/// weight decay).
 #[derive(Debug, Clone)]
 pub struct LionConfig {
     pub beta1: f32,
@@ -20,6 +22,8 @@ impl Default for LionConfig {
     }
 }
 
+/// The Lion optimizer over flat per-tensor buffers (momentum only —
+/// no second moment, hence no RMS_t and no update clipping to do).
 pub struct Lion {
     cfg: LionConfig,
     m: Vec<Vec<f32>>,
@@ -27,6 +31,7 @@ pub struct Lion {
 }
 
 impl Lion {
+    /// Zero-momentum optimizer over `sizes`-shaped flat tensors.
     pub fn new(cfg: LionConfig, metas: &[ParamMeta], sizes: &[usize]) -> Self {
         Self {
             cfg,

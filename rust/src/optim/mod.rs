@@ -65,6 +65,8 @@ pub struct StepStats {
 }
 
 impl StepStats {
+    /// Neutral stats for a step that applied no update (skipped or
+    /// rolled back): RMS 1.0, lr multiplier 1.0, nothing skipped.
     pub fn empty(n: usize) -> Self {
         Self {
             rms: vec![1.0; n],

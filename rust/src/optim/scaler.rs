@@ -45,10 +45,13 @@ pub struct DynamicGlobalScaler {
 }
 
 impl DynamicGlobalScaler {
+    /// PyTorch-shaped defaults: scale 2^16, growth interval 2000.
     pub fn new() -> Self {
         Self { scale: 65536.0, growth_interval: 2000, clean_steps: 0, drops: 0 }
     }
 
+    /// Inspect a step's gradients: any overflow halves the scale and
+    /// skips the whole step; enough clean steps double it.
     pub fn inspect(&mut self, grads: &[Vec<f32>]) -> ScaleDecision {
         let overflow = grads.iter().any(|g| tensor_overflows(g, self.scale));
         if overflow {
@@ -86,10 +89,13 @@ pub struct FixedTensorScaler {
 }
 
 impl FixedTensorScaler {
+    /// Fixed scale over `n_tensors` per-tensor skip counters.
     pub fn new(scale: f32, n_tensors: usize) -> Self {
         Self { scale, skip_counts: vec![0; n_tensors] }
     }
 
+    /// Inspect a step's gradients: overflowing tensors are skipped
+    /// individually (the scale never moves).
     pub fn inspect(&mut self, grads: &[Vec<f32>]) -> ScaleDecision {
         let mask: Vec<bool> = grads
             .iter()

@@ -10,6 +10,8 @@ pub struct LrSchedule {
 }
 
 impl LrSchedule {
+    /// Linear warmup over `warmup_steps`, cosine decay to zero at
+    /// `total_steps`.
     pub fn new(base_lr: f32, warmup_steps: u64, total_steps: u64) -> Self {
         assert!(warmup_steps <= total_steps);
         Self { base_lr, warmup_steps, total_steps }

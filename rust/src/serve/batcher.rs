@@ -41,6 +41,7 @@ pub struct BatchQueue<T> {
 }
 
 impl<T> BatchQueue<T> {
+    /// An open queue under `policy` (panics on a zero `max_batch`).
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1, "max_batch must be >= 1");
         Self {
@@ -50,6 +51,7 @@ impl<T> BatchQueue<T> {
         }
     }
 
+    /// The policy this queue batches under.
     pub fn policy(&self) -> BatchPolicy {
         self.policy
     }

@@ -27,10 +27,12 @@ impl Default for Fnv1a {
 }
 
 impl Fnv1a {
+    /// The standard FNV-1a offset basis.
     pub fn new() -> Self {
         Self(0xcbf29ce484222325)
     }
 
+    /// Fold `bytes` into the running hash.
     pub fn update(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
@@ -38,6 +40,7 @@ impl Fnv1a {
         }
     }
 
+    /// The current 64-bit digest.
     pub fn finish(&self) -> u64 {
         self.0
     }

@@ -64,6 +64,20 @@ impl EncoderConfig {
     pub fn image_len(&self) -> usize {
         self.patches * self.patch_dim
     }
+
+    /// Shape equality (kind and seed are free): a hot-swap or standby
+    /// promotion may retrain or requantize the model, but never resize it
+    /// — the serving shape is a boot-time contract.
+    pub fn same_shape(&self, other: &EncoderConfig) -> bool {
+        self.dim == other.dim
+            && self.heads == other.heads
+            && self.blocks == other.blocks
+            && self.embed_dim == other.embed_dim
+            && self.patches == other.patches
+            && self.patch_dim == other.patch_dim
+            && self.text_seq == other.text_seq
+            && self.vocab == other.vocab
+    }
 }
 
 /// One tower: input embedding → blocks → pooled output projection.
@@ -197,6 +211,7 @@ impl ClipEncoder {
         }
     }
 
+    /// The shape/precision this encoder was built with.
     pub fn config(&self) -> &EncoderConfig {
         &self.cfg
     }

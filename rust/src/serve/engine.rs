@@ -43,6 +43,7 @@ pub struct ServeConfig {
 }
 
 impl ServeConfig {
+    /// The default serving stack around [`EncoderConfig::demo`].
     pub fn demo(kind: crate::nn::LinearKind) -> Self {
         Self {
             encoder: EncoderConfig::demo(kind),
@@ -185,6 +186,14 @@ impl Engine {
         self.shared.generation.load(Ordering::SeqCst)
     }
 
+    /// Pin the *current* live encoder (one `Arc` clone, the same pointer
+    /// bump the workers do per micro-batch).  The standby watcher encodes
+    /// its canary batch through this to measure embedding drift against a
+    /// candidate without consuming engine capacity.
+    pub fn current_encoder(&self) -> Arc<ClipEncoder> {
+        Arc::clone(&self.shared.encoder.read().unwrap())
+    }
+
     /// Blocking encode of one input.  Thread-safe; call from any number of
     /// client threads.
     pub fn encode(&self, input: EncodeInput) -> EncodeResult {
@@ -296,14 +305,7 @@ impl Drop for Engine {
 /// Shape equality of two encoder configs (kind and seed are free — a
 /// hot-swap may retrain or requantize, but never resize the model).
 fn same_shape(a: &EncoderConfig, b: &EncoderConfig) -> bool {
-    a.dim == b.dim
-        && a.heads == b.heads
-        && a.blocks == b.blocks
-        && a.embed_dim == b.embed_dim
-        && a.patches == b.patches
-        && a.patch_dim == b.patch_dim
-        && a.text_seq == b.text_seq
-        && a.vocab == b.vocab
+    a.same_shape(b)
 }
 
 /// Worker: pull micro-batches until the queue closes and drains.

@@ -16,8 +16,10 @@
 //! Results are written to `BENCH_serve.json` (machine-readable, one entry
 //! per kind×concurrency) so the perf trajectory is tracked across PRs.
 
+use super::encoder::ClipEncoder;
 use super::engine::Engine;
 use super::metrics::ServeSnapshot;
+use super::standby::{validate_and_promote, CanarySet};
 use super::EncodeInput;
 use crate::tensor::Rng;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -34,6 +36,13 @@ pub struct LoadgenConfig {
     /// fraction of the population that is images (rest are captions)
     pub image_fraction: f32,
     pub seed: u64,
+    /// install a freshly prepared encoder generation every N issued
+    /// requests (0 = no swaps).  Swaps go through the standby
+    /// promote path ([`validate_and_promote`], drift bound disabled —
+    /// the generations are intentionally unrelated), so the reported
+    /// tail latency is measured *across* repeated generations and the
+    /// promotions land in the snapshot's standby counters.
+    pub swap_every: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -44,6 +53,7 @@ impl Default for LoadgenConfig {
             population: 1000,
             image_fraction: 0.7,
             seed: 1234,
+            swap_every: 0,
         }
     }
 }
@@ -55,6 +65,8 @@ pub struct LoadgenReport {
     pub kind: String,
     pub concurrency: usize,
     pub requests: usize,
+    /// swap cadence of the run (0 = single-generation run)
+    pub swap_every: usize,
     pub wall_secs: f64,
     pub requests_per_sec: f64,
     pub errors: u64,
@@ -62,6 +74,7 @@ pub struct LoadgenReport {
 }
 
 impl LoadgenReport {
+    /// Human-readable per-run summary (plus swap metrics when enabled).
     pub fn print(&self) {
         println!(
             "[{:<12}] c={:<3} {:>7} reqs in {:>7.2}s  →  {:>8.1} req/s",
@@ -69,6 +82,17 @@ impl LoadgenReport {
             self.requests_per_sec
         );
         self.snapshot.print(&self.kind);
+        if self.swap_every > 0 {
+            println!(
+                "  [{}] swap-every {}: {} promotions across generations \
+                 (swap-pause p99 {:.1} µs, prepare p99 {:.2} ms)",
+                self.kind,
+                self.swap_every,
+                self.snapshot.standby_promotions,
+                self.snapshot.swap_pause_p99_us,
+                self.snapshot.prepare_p99_ms,
+            );
+        }
     }
 }
 
@@ -100,7 +124,25 @@ fn engine_config(engine: &Engine) -> (usize, usize, usize) {
     (c.image_len(), c.text_seq, c.vocab)
 }
 
-/// Run one closed-loop sweep against a started engine.
+/// How many generations a `swap_every` run promotes by the time `issued`
+/// requests have been claimed.  Promotions fire at the *midpoint* of
+/// each window (issued = s/2, 3s/2, 5s/2, …) so every one of them lands
+/// while traffic is still flowing — scheduling them at window *ends*
+/// would push the final promotion past the last request.  For a whole
+/// run this is `planned_swaps(requests, s)` — exactly `requests/s` when
+/// `s` divides `requests` (the verify.sh configuration).
+pub fn planned_swaps(issued: usize, swap_every: usize) -> usize {
+    if swap_every == 0 {
+        return 0;
+    }
+    (issued + swap_every / 2) / swap_every
+}
+
+/// Run one closed-loop sweep against a started engine.  With
+/// `swap_every > 0` a swapper thread rides along: every N issued
+/// requests it prepares a fresh same-shape encoder generation and
+/// promotes it through the standby path, so the report's latency
+/// percentiles span repeated hot-swaps instead of one static generation.
 pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
     assert!(cfg.population > 0, "population must be positive");
     let population = Arc::new(build_population(engine, cfg));
@@ -123,12 +165,63 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
                 }
             });
         }
+        if cfg.swap_every > 0 {
+            let next = Arc::clone(&next);
+            s.spawn(move || {
+                let canary = CanarySet::build(engine.encoder_config(), 4, cfg.seed ^ 0xCA9A);
+                let mut generation = 0usize;
+                loop {
+                    // the shared counter overshoots by up to `concurrency`
+                    // (claim first, bounds-check after) — clamp it
+                    let issued = next.load(Ordering::Relaxed).min(cfg.requests);
+                    // every generation that is *due* at the current issue
+                    // count gets promoted (mid-window cadence, see
+                    // `planned_swaps`), even if the clients outran the
+                    // swapper — a run always ends with
+                    // planned_swaps(requests, swap_every) promotions,
+                    // deterministically
+                    if generation < planned_swaps(issued, cfg.swap_every) {
+                        // prepare off the request path: fresh weights,
+                        // same shape contract, canary-checked for
+                        // finiteness (no drift bound — generations are
+                        // unrelated by design)
+                        let prep_t0 = Instant::now();
+                        let mut ec = engine.encoder_config().clone();
+                        ec.seed = cfg.seed ^ (0x5AB0 + generation as u64);
+                        let candidate = ClipEncoder::new(ec);
+                        match validate_and_promote(
+                            engine, candidate, &canary, None, prep_t0,
+                        ) {
+                            Ok(_) => generation += 1,
+                            Err(e) => {
+                                // a failed install is persistent (lock
+                                // poisoned / non-finite weights): stop
+                                // swapping and let the shortfall in
+                                // standby_promotions (+ the recorded
+                                // reject) fail the run's gates
+                                eprintln!(
+                                    "loadgen swapper: promotion of \
+                                     generation {generation} failed: {e}"
+                                );
+                                return;
+                            }
+                        }
+                        continue;
+                    }
+                    if issued >= cfg.requests {
+                        return;
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+            });
+        }
     });
     let wall = t0.elapsed().as_secs_f64();
     LoadgenReport {
         kind: engine.kind_label().to_string(),
         concurrency: cfg.concurrency,
         requests: cfg.requests,
+        swap_every: cfg.swap_every,
         wall_secs: wall,
         requests_per_sec: cfg.requests as f64 / wall.max(1e-9),
         errors: errors.load(Ordering::Relaxed),
@@ -149,8 +242,11 @@ pub fn write_bench_json(
         let mut w = ObjWriter::new();
         w.field_str("kind", &r.kind)
             .field_u64("concurrency", r.concurrency as u64)
-            .field_u64("requests", r.requests as u64)
-            .field_f32("wall_secs", r.wall_secs as f32)
+            .field_u64("requests", r.requests as u64);
+        if r.swap_every > 0 {
+            w.field_u64("swap_every", r.swap_every as u64);
+        }
+        w.field_f32("wall_secs", r.wall_secs as f32)
             .field_f32("requests_per_sec", r.requests_per_sec as f32)
             .field_u64("errors", r.errors)
             .field_raw("metrics", &r.snapshot.to_json());
@@ -211,6 +307,7 @@ mod tests {
             population: 40,
             image_fraction: 0.5,
             seed: 9,
+            swap_every: 0,
         };
         let rep = run_loadgen(&eng, &cfg);
         assert_eq!(rep.errors, 0);
@@ -235,6 +332,7 @@ mod tests {
             population: 10,
             image_fraction: 1.0,
             seed: 2,
+            swap_every: 0,
         };
         let rep = run_loadgen(&eng, &cfg);
         let path = std::env::temp_dir().join("bench_serve_test.json");
@@ -255,6 +353,46 @@ mod tests {
         eng.shutdown();
     }
 
+    /// `swap_every`: generations advance mid-run through the standby
+    /// promote path, every request still succeeds, and the swap metrics
+    /// land in the report + JSON entry.
+    #[test]
+    fn swap_every_promotes_generations_without_dropping_requests() {
+        let eng = tiny_engine(4096);
+        let cfg = LoadgenConfig {
+            requests: 300,
+            concurrency: 4,
+            population: 50,
+            image_fraction: 0.5,
+            seed: 11,
+            swap_every: 100,
+        };
+        let rep = run_loadgen(&eng, &cfg);
+        assert_eq!(rep.errors, 0, "swaps must not fail requests");
+        // every due generation is promoted even if the clients outrun the
+        // swapper: planned_swaps(300, 100) = 3, at issue counts 50/150/250
+        assert_eq!(planned_swaps(300, 100), 3);
+        assert_eq!(planned_swaps(1000, 250), 4, "the verify.sh shape");
+        assert_eq!(planned_swaps(0, 100), 0);
+        assert_eq!(planned_swaps(100, 0), 0);
+        assert_eq!(rep.snapshot.standby_promotions, 3);
+        assert_eq!(rep.snapshot.standby_promotions, rep.snapshot.hot_swaps);
+        assert_eq!(rep.snapshot.standby_rejects, 0);
+        assert_eq!(eng.generation(), 3);
+        let path = std::env::temp_dir().join("bench_serve_swap_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_bench_json(&path, 8, 1000, &[rep]).unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let v = parse(&doc).unwrap();
+        let r0 = &v.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("swap_every").unwrap().as_usize(), Some(100));
+        let m = r0.get("metrics").unwrap();
+        assert!(m.get("standby_promotions").unwrap().as_usize().unwrap() >= 1);
+        assert!(m.get("swap_pause_p99_us").is_some());
+        let _ = std::fs::remove_file(&path);
+        eng.shutdown();
+    }
+
     #[test]
     fn population_mixes_modalities() {
         let eng = tiny_engine(0);
@@ -264,6 +402,7 @@ mod tests {
             population: 10,
             image_fraction: 0.5,
             seed: 4,
+            swap_every: 0,
         };
         let pop = build_population(&eng, &cfg);
         let imgs = pop.iter().filter(|p| p.is_image()).count();

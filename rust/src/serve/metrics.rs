@@ -36,9 +36,24 @@ pub struct ServeMetrics {
     pub hot_swaps: AtomicU64,
     /// worst-case swap pause (exclusive write-lock hold), ns
     pub swap_pause_max_ns: AtomicU64,
+    /// distribution of swap pauses across generations, ns
+    pub swap_pause_ns: Histogram,
+    /// standby promotions: candidates that passed the canary drift bound
+    /// and were installed ([`super::standby`])
+    pub standby_promotions: AtomicU64,
+    /// standby rejections: unreadable/mismatched/drifted candidates that
+    /// never touched the live generation
+    pub standby_rejects: AtomicU64,
+    /// automatic rollbacks to the previous generation after a failed
+    /// post-promotion canary probe
+    pub standby_rollbacks: AtomicU64,
+    /// off-thread candidate preparation time (CRC-checked load +
+    /// re-quantize + canary encode), ns
+    pub prepare_ns: Histogram,
 }
 
 impl ServeMetrics {
+    /// All-zero counters and empty histograms.
     pub fn new() -> Self {
         Self::default()
     }
@@ -53,6 +68,8 @@ impl ServeMetrics {
         let (p50, p95, p99) = self.request_ns.percentiles();
         let (h50, h95, h99) = self.hit_ns.percentiles();
         let (b50, b95, b99) = self.batch_ns.percentiles();
+        let (s50, _, s99) = self.swap_pause_ns.percentiles();
+        let (pr50, _, pr99) = self.prepare_ns.percentiles();
         ServeSnapshot {
             requests,
             cache_hits: hits,
@@ -76,14 +93,39 @@ impl ServeMetrics {
             batch_p99_ms: ns_to_ms(b99),
             hot_swaps: self.hot_swaps.load(Ordering::Relaxed),
             swap_pause_max_us: self.swap_pause_max_ns.load(Ordering::Relaxed) as f64 / 1e3,
+            swap_pause_p50_us: s50 as f64 / 1e3,
+            swap_pause_p99_us: s99 as f64 / 1e3,
+            standby_promotions: self.standby_promotions.load(Ordering::Relaxed),
+            standby_rejects: self.standby_rejects.load(Ordering::Relaxed),
+            standby_rollbacks: self.standby_rollbacks.load(Ordering::Relaxed),
+            prepare_p50_ms: ns_to_ms(pr50),
+            prepare_p99_ms: ns_to_ms(pr99),
         }
     }
 
-    /// Record one hot-swap's exclusive pause (worst case is what matters
-    /// for tail latency, so only the max is kept).
+    /// Record one hot-swap's exclusive pause: the max (the worst case is
+    /// what matters for tail latency) plus the full distribution across
+    /// generations.
     pub fn record_swap(&self, pause_ns: u64) {
         self.hot_swaps.fetch_add(1, Ordering::Relaxed);
         self.swap_pause_max_ns.fetch_max(pause_ns, Ordering::Relaxed);
+        self.swap_pause_ns.record(pause_ns);
+    }
+
+    /// Record a standby promotion and its off-thread preparation time.
+    pub fn record_promote(&self, prepare_ns: u64) {
+        self.standby_promotions.fetch_add(1, Ordering::Relaxed);
+        self.prepare_ns.record(prepare_ns);
+    }
+
+    /// Record a standby rejection (the live generation was not touched).
+    pub fn record_reject(&self) {
+        self.standby_rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an automatic rollback to the previous generation.
+    pub fn record_rollback(&self) {
+        self.standby_rollbacks.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -112,6 +154,13 @@ pub struct ServeSnapshot {
     pub batch_p99_ms: f64,
     pub hot_swaps: u64,
     pub swap_pause_max_us: f64,
+    pub swap_pause_p50_us: f64,
+    pub swap_pause_p99_us: f64,
+    pub standby_promotions: u64,
+    pub standby_rejects: u64,
+    pub standby_rollbacks: u64,
+    pub prepare_p50_ms: f64,
+    pub prepare_p99_ms: f64,
 }
 
 impl ServeSnapshot {
@@ -136,7 +185,16 @@ impl ServeSnapshot {
             .field_f32("batch_p99_ms", self.batch_p99_ms as f32);
         if self.hot_swaps > 0 {
             w.field_u64("hot_swaps", self.hot_swaps)
-                .field_f32("swap_pause_max_us", self.swap_pause_max_us as f32);
+                .field_f32("swap_pause_max_us", self.swap_pause_max_us as f32)
+                .field_f32("swap_pause_p50_us", self.swap_pause_p50_us as f32)
+                .field_f32("swap_pause_p99_us", self.swap_pause_p99_us as f32);
+        }
+        if self.standby_promotions + self.standby_rejects + self.standby_rollbacks > 0 {
+            w.field_u64("standby_promotions", self.standby_promotions)
+                .field_u64("standby_rejects", self.standby_rejects)
+                .field_u64("standby_rollbacks", self.standby_rollbacks)
+                .field_f32("prepare_p50_ms", self.prepare_p50_ms as f32)
+                .field_f32("prepare_p99_ms", self.prepare_p99_ms as f32);
         }
         w.finish()
     }
@@ -179,6 +237,35 @@ mod tests {
         let v = parse(&s.to_json()).unwrap();
         assert_eq!(v.get("requests").unwrap().as_usize(), Some(10));
         assert!(v.get("hit_rate").unwrap().as_f64().unwrap() > 0.39);
+    }
+
+    /// Standby counters and histograms surface in the snapshot + JSON,
+    /// and stay absent from the JSON of a run that never used standby
+    /// (so pre-standby baselines remain comparable).
+    #[test]
+    fn standby_counters_round_trip_to_json() {
+        let m = ServeMetrics::new();
+        let plain = parse(&m.snapshot().to_json()).unwrap();
+        assert!(plain.get("standby_promotions").is_none());
+        assert!(plain.get("hot_swaps").is_none());
+
+        m.record_promote(2_000_000); // 2 ms prepare
+        m.record_promote(4_000_000);
+        m.record_reject();
+        m.record_rollback();
+        m.record_swap(30_000); // 30 µs pause
+        let s = m.snapshot();
+        assert_eq!(s.standby_promotions, 2);
+        assert_eq!(s.standby_rejects, 1);
+        assert_eq!(s.standby_rollbacks, 1);
+        assert!(s.prepare_p99_ms > 1.0 && s.prepare_p99_ms < 10.0);
+        assert!(s.swap_pause_p99_us > 10.0 && s.swap_pause_p99_us < 100.0);
+        let v = parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("standby_promotions").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("standby_rejects").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("standby_rollbacks").unwrap().as_usize(), Some(1));
+        assert!(v.get("prepare_p99_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("swap_pause_p99_us").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

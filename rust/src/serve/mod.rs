@@ -36,9 +36,17 @@
 //!   checkpoints ([`crate::ckpt`]) are installed atomically between
 //!   micro-batches, with a cache-generation bump invalidating stale
 //!   embeddings and zero dropped in-flight requests.
-//! * [`metrics`] — atomic serving telemetry + JSON snapshot.
-//! * [`loadgen`] — closed-loop load generator (the `loadgen` subcommand),
-//!   emits `BENCH_serve.json` so the perf trajectory is tracked per PR.
+//! * [`standby`] — the warm-standby slot: watches a checkpoint
+//!   directory, prepares + CRC-validates the newest snapshot off-thread,
+//!   gates promotion on a canary embedding-drift bound, and rolls back
+//!   to the previous generation if post-promotion probes fail.
+//! * [`metrics`] — atomic serving telemetry + JSON snapshot (including
+//!   standby promote/reject/rollback counters and prepare/swap-pause
+//!   histograms).
+//! * [`loadgen`] — closed-loop load generator (the `loadgen` subcommand,
+//!   with `--swap-every` for sustained throughput across repeated
+//!   generations), emits `BENCH_serve.json` so the perf trajectory is
+//!   tracked per PR.
 
 pub mod batcher;
 pub mod cache;
@@ -46,13 +54,15 @@ pub mod encoder;
 pub mod engine;
 pub mod loadgen;
 pub mod metrics;
+pub mod standby;
 
 pub use batcher::{BatchPolicy, BatchQueue};
 pub use cache::ShardedLru;
 pub use encoder::{ClipEncoder, EncoderConfig, EncoderWeights};
 pub use engine::{EncodeResponse, Engine, ServeConfig};
-pub use loadgen::{run_loadgen, write_bench_json, LoadgenConfig, LoadgenReport};
+pub use loadgen::{planned_swaps, run_loadgen, write_bench_json, LoadgenConfig, LoadgenReport};
 pub use metrics::{ServeMetrics, ServeSnapshot};
+pub use standby::{CanarySet, Promotion, Standby, StandbyConfig, StandbyEvent, StandbyHandle};
 
 /// One encode request's payload: a patchified image or a token sequence.
 #[derive(Debug, Clone, PartialEq)]
@@ -64,6 +74,7 @@ pub enum EncodeInput {
 }
 
 impl EncodeInput {
+    /// Image payload? (workers partition micro-batches by modality)
     pub fn is_image(&self) -> bool {
         matches!(self, Self::Image(_))
     }

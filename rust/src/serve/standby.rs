@@ -1,0 +1,994 @@
+//! Warm-standby checkpoint reload: watch a directory of training
+//! snapshots, prepare and validate the newest one **off the serving
+//! path**, and promote it into the live [`Engine`] via the existing
+//! generation-bump hot-swap — or reject it without ever touching the
+//! live generation (DESIGN.md §Warm-standby).
+//!
+//! State machine (one watcher thread, spawned by [`spawn`]):
+//!
+//! ```text
+//!          ┌────────────────────────────────────────────────────┐
+//!          ▼                                                    │
+//!  WATCH: poll the directory, ckpt::peek the fresh snapshots    │
+//!  (manifest-only read — no tensor I/O), newest-manifest-wins   │
+//!          │ newer + shape-compatible snapshot                  │
+//!          ▼                                                    │
+//!  PREPARE (off-thread): full CRC-checked ckpt::load,           │
+//!  re-quantize for the serving LinearKind, encode the canary    │
+//!  batch on live + candidate in parallel (util::threads)        │
+//!          │                                                    │
+//!          ├── drift > bound / non-finite / bad file ──▶ REJECT ┤
+//!          ▼                                            (live   │
+//!  PROMOTE: Engine::install_encoder (pointer-swap pause,  gen   │
+//!  generation bump, zero dropped requests)              intact) │
+//!          │                                                    │
+//!          ▼                                                    │
+//!  PROBE: canary requests through the live engine must match    │
+//!  the promoted candidate bit-for-bit ──ok──────────────────────┘
+//!          │ mismatch
+//!          ▼
+//!  ROLLBACK: rebuild the previous generation's weights and
+//!  install them (another generation bump)
+//! ```
+//!
+//! The **canary drift bound** is the promotion gate: the candidate and
+//! the live encoder embed the same deterministic canary inputs, and the
+//! worst per-input cosine distance must stay under `drift_max`.  Trained
+//! successors of the live weights drift a little; a corrupt, mis-seeded
+//! or wrongly-converted checkpoint lands near-orthogonal and is
+//! rejected.  This mirrors how low-precision recipes stage numeric
+//! changes behind validation instead of trusting the bytes (PAPERS.md:
+//! *InfiR2*'s staged FP8 validation, *Scalify*'s scale-propagation
+//! checks).
+//!
+//! Everything the watcher does is observable through
+//! [`super::metrics::ServeMetrics`]: promote/reject/rollback counters
+//! plus prepare-time and swap-pause histograms, all surfaced in
+//! `BENCH_serve.json` / `BENCH_ckpt.json`.
+
+use super::encoder::{ClipEncoder, EncoderConfig};
+use super::engine::Engine;
+use super::EncodeInput;
+use crate::ckpt;
+use crate::tensor::Rng;
+use crate::util::threads::par_map;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Watcher knobs.  `StandbyConfig::new` picks production-shaped defaults;
+/// every field is also reachable from the CLI (`serve --watch-dir
+/// --canary-every --drift-max --standby`).
+#[derive(Debug, Clone)]
+pub struct StandbyConfig {
+    /// directory to watch for `ckpt-*.sbck` snapshots
+    pub watch_dir: PathBuf,
+    /// poll interval of the watcher thread
+    pub poll: Duration,
+    /// canary inputs *per modality* (images + captions)
+    pub canary: usize,
+    /// seed for the deterministic canary population
+    pub canary_seed: u64,
+    /// max allowed per-input cosine distance between live and candidate
+    /// canary embeddings; `None` disables the bound (non-finite
+    /// embeddings are always rejected)
+    pub drift_max: Option<f32>,
+    /// run a post-promotion canary probe every N polls (0 = never)
+    pub probe_every: u32,
+    /// snapshots at or below this step are ignored (the booted weights)
+    pub initial_step: u64,
+    /// flat parameter vector of the booted weights (train layout) — the
+    /// rollback anchor for the *first* promotion; without it a failed
+    /// first-generation probe has nothing to restore
+    pub baseline: Option<Vec<Vec<f32>>>,
+    /// print promote/reject/rollback lines from the watcher thread
+    pub verbose: bool,
+}
+
+impl StandbyConfig {
+    /// Defaults: 25 ms poll, 8+8 canaries, drift bound 0.5, probe every
+    /// 4th poll.
+    pub fn new(watch_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            watch_dir: watch_dir.into(),
+            poll: Duration::from_millis(25),
+            canary: 8,
+            canary_seed: 0xCA9A_817D,
+            drift_max: Some(0.5),
+            probe_every: 4,
+            initial_step: 0,
+            baseline: None,
+            verbose: false,
+        }
+    }
+}
+
+/// The deterministic canary population for one serving shape.  Built once
+/// per watcher (and per `loadgen --swap-every` run) so every validation
+/// compares the same inputs.
+pub struct CanarySet {
+    images: Vec<Vec<f32>>,
+    texts: Vec<Vec<i32>>,
+}
+
+impl CanarySet {
+    /// `per_modality` images + captions drawn from `seed` for `cfg`'s
+    /// payload shape.
+    pub fn build(cfg: &EncoderConfig, per_modality: usize, seed: u64) -> Self {
+        let base = Rng::seed(seed);
+        let images = (0..per_modality)
+            .map(|i| {
+                let mut r = base.fork(i as u64);
+                (0..cfg.image_len()).map(|_| r.normal()).collect()
+            })
+            .collect();
+        let texts = (0..per_modality)
+            .map(|i| {
+                let mut r = base.fork(0x7E77 + i as u64);
+                (0..cfg.text_seq).map(|_| r.below(cfg.vocab) as i32).collect()
+            })
+            .collect();
+        Self { images, texts }
+    }
+
+    /// Encode the whole set directly on `enc` (images first, then
+    /// captions) — the off-engine half of the drift comparison.
+    pub fn encode_with(&self, enc: &ClipEncoder) -> Vec<Vec<f32>> {
+        let imgs: Vec<&[f32]> = self.images.iter().map(Vec::as_slice).collect();
+        let txts: Vec<&[i32]> = self.texts.iter().map(Vec::as_slice).collect();
+        let mut out = enc.encode_images(&imgs);
+        out.extend(enc.encode_texts(&txts));
+        out
+    }
+
+    /// The same set as engine requests, index-aligned with
+    /// [`Self::encode_with`]'s output.
+    pub fn inputs(&self) -> Vec<EncodeInput> {
+        self.images
+            .iter()
+            .map(|px| EncodeInput::Image(px.clone()))
+            .chain(self.texts.iter().map(|t| EncodeInput::Text(t.clone())))
+            .collect()
+    }
+}
+
+/// Worst per-input cosine distance between two index-aligned embedding
+/// sets (both L2-normalized, so the dot product is the cosine).
+/// Non-finite embeddings yield `f32::INFINITY` — always past any bound.
+pub fn max_drift(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+    assert_eq!(a.len(), b.len(), "canary sets must be index-aligned");
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let dot: f32 = x.iter().zip(y).map(|(p, q)| p * q).sum();
+        if !dot.is_finite() {
+            return f32::INFINITY;
+        }
+        worst = worst.max(1.0 - dot);
+    }
+    worst
+}
+
+/// A successful [`validate_and_promote`] outcome.
+pub struct Promotion {
+    /// worst per-input canary cosine distance observed live-vs-candidate
+    pub drift: f32,
+    /// the engine's exclusive swap pause
+    pub pause: Duration,
+    /// the candidate's canary embeddings — what the live engine must now
+    /// reproduce bit-for-bit (the post-promotion probe expectation);
+    /// returned so callers never pay the canary forward pass twice
+    pub canary_embs: Vec<Vec<f32>>,
+}
+
+/// Canary-validate `candidate` against the live encoder and promote it
+/// through the generation-bump swap.  On success records a promotion
+/// (with `prepare_t0 → now` as the preparation time); on failure records
+/// a rejection and leaves the live generation untouched.
+///
+/// `drift_max: None` skips the drift bound (used by `loadgen
+/// --swap-every`, whose fresh-seeded generations are *intentionally*
+/// unrelated) but still rejects non-finite candidate embeddings.
+pub fn validate_and_promote(
+    engine: &Engine,
+    candidate: ClipEncoder,
+    canary: &CanarySet,
+    drift_max: Option<f32>,
+    prepare_t0: Instant,
+) -> Result<Promotion, String> {
+    let reject = |why: String| -> String {
+        engine.metrics().record_reject();
+        why
+    };
+    let live = engine.current_encoder();
+    // live + candidate canary encodes run concurrently on the
+    // util::threads pool — the preparation cost never rides a request
+    let mut embs = par_map(2, |i| {
+        if i == 0 {
+            canary.encode_with(&live)
+        } else {
+            canary.encode_with(&candidate)
+        }
+    });
+    let cand_embs = embs.pop().expect("candidate embeddings");
+    let live_embs = embs.pop().expect("live embeddings");
+    let drift = max_drift(&live_embs, &cand_embs);
+    if !drift.is_finite() {
+        return Err(reject("candidate canary embeddings are non-finite".into()));
+    }
+    if let Some(bound) = drift_max {
+        if drift > bound {
+            return Err(reject(format!(
+                "canary drift {drift:.3} exceeds bound {bound:.3}"
+            )));
+        }
+    }
+    match engine.install_encoder(candidate) {
+        Ok(pause) => {
+            engine
+                .metrics()
+                .record_promote(prepare_t0.elapsed().as_nanos() as u64);
+            Ok(Promotion { drift, pause, canary_embs: cand_embs })
+        }
+        Err(e) => Err(reject(format!("install rejected: {e}"))),
+    }
+}
+
+/// What one watcher step observed (returned by [`Standby::poll_once`] /
+/// [`Standby::probe_once`] so the CLI and tests can react).
+#[derive(Debug)]
+pub enum StandbyEvent {
+    /// nothing new in the watch directory / probes passed
+    Idle,
+    /// a snapshot passed the canary gate and is now live
+    Promoted {
+        step: u64,
+        generation: u64,
+        drift: f32,
+        pause: Duration,
+    },
+    /// a snapshot was refused; the live generation is untouched
+    Rejected { step: u64, reason: String },
+    /// a post-promotion probe failed and the previous generation's
+    /// weights were reinstalled
+    RolledBack { generation: u64, reason: String },
+    /// a probe failed but no previous generation is retained to restore
+    ProbeFailed { reason: String },
+}
+
+/// The standby slot: owns the watch cursor, the canary population, the
+/// rollback anchor and the probe expectation.  [`spawn`] runs it on a
+/// dedicated thread; tests drive [`Self::poll_once`] /
+/// [`Self::probe_once`] directly.
+pub struct Standby {
+    engine: Arc<Engine>,
+    cfg: StandbyConfig,
+    canary: CanarySet,
+    /// highest *promoted manifest* step (starts at `initial_step`) —
+    /// snapshots whose manifest is at or below this are stale content
+    last_step: u64,
+    /// filename steps already handled (promoted, stale, or rejected
+    /// after a successful peek) — never revisited.  Files whose *peek*
+    /// fails are deliberately NOT added: an unreadable header usually
+    /// means a non-atomic copy still in flight, so they are retried on
+    /// every poll (a failed 16-byte read, cheap) until they parse
+    handled_steps: std::collections::HashSet<u64>,
+    /// params of the generation *before* the current one (rollback target)
+    anchor: Option<Vec<Vec<f32>>>,
+    /// params of the current generation (becomes the anchor on the next
+    /// promotion)
+    current: Option<Vec<Vec<f32>>>,
+    /// the current generation's canary embeddings (probe expectation)
+    expected: Option<Vec<Vec<f32>>>,
+}
+
+impl Standby {
+    /// A fresh watcher state over `engine`: builds the canary
+    /// population and seats the baseline as the first rollback anchor.
+    pub fn new(engine: Arc<Engine>, cfg: StandbyConfig) -> Self {
+        let canary =
+            CanarySet::build(engine.encoder_config(), cfg.canary.max(1), cfg.canary_seed);
+        let last_step = cfg.initial_step;
+        let current = cfg.baseline.clone();
+        Self {
+            engine,
+            cfg,
+            canary,
+            last_step,
+            handled_steps: std::collections::HashSet::new(),
+            anchor: None,
+            current,
+            expected: None,
+        }
+    }
+
+    /// One watch-directory scan: peek every not-yet-handled snapshot
+    /// ([`ckpt::peek`] — header + manifest, no tensor I/O) and prepare
+    /// the one with the newest *manifest* step above the cursor
+    /// (filename numbers are advisory: a copied/renamed snapshot may
+    /// carry any name), then promote or reject.  A rejected file is
+    /// marked handled (never retried); an *unreadable* file is retried
+    /// on later polls — it is usually a non-atomic copy still in flight
+    /// — and cannot block a valid sibling, because the cursor only
+    /// advances on promotions.
+    pub fn poll_once(&mut self) -> StandbyEvent {
+        let fresh: Vec<(u64, PathBuf)> = ckpt::list_snapshots(&self.cfg.watch_dir)
+            .into_iter()
+            .filter(|(s, _)| !self.handled_steps.contains(s))
+            .collect();
+        if fresh.is_empty() {
+            return StandbyEvent::Idle;
+        }
+        // (manifest step, filename step, path) of the best candidate
+        let mut best: Option<(u64, u64, PathBuf)> = None;
+        for (fstep, path) in &fresh {
+            match ckpt::peek(path) {
+                // a readable manifest whose blobs are shorter than it
+                // promises is a copy still in flight: preparing it now
+                // would CRC-fail and permanently blacklist a snapshot
+                // that is about to become valid — retry on a later poll
+                Ok(p) if !p.is_complete() => {}
+                Ok(p) if p.step > self.last_step => {
+                    let newer = match &best {
+                        Some((bs, _, _)) => p.step > *bs,
+                        None => true,
+                    };
+                    if newer {
+                        best = Some((p.step, *fstep, path.clone()));
+                    }
+                }
+                Ok(_) => {
+                    // readable, complete, but the manifest is not newer
+                    // than what we serve: stale content — never revisit
+                    self.handled_steps.insert(*fstep);
+                }
+                Err(_) => {
+                    // unreadable header/manifest: likely a copy still in
+                    // flight — skip this poll, retry on the next
+                }
+            }
+        }
+        let Some((mstep, fstep, path)) = best else {
+            return StandbyEvent::Idle;
+        };
+        let event = self.prepare_and_promote(mstep, &path);
+        match &event {
+            StandbyEvent::Promoted { .. } => {
+                // the cursor is the promoted *manifest* step; the file
+                // itself is done either way
+                self.last_step = self.last_step.max(mstep);
+                self.handled_steps.insert(fstep);
+            }
+            StandbyEvent::Rejected { .. } => {
+                self.handled_steps.insert(fstep);
+            }
+            _ => {}
+        }
+        event
+    }
+
+    /// Prepare (CRC-checked load + re-quantize + canary encode) and
+    /// promote one snapshot.  Rejection leaves the live generation — and
+    /// the rollback anchor — untouched.
+    fn prepare_and_promote(&mut self, step: u64, path: &std::path::Path) -> StandbyEvent {
+        let t0 = Instant::now();
+        let reject = |me: &Self, reason: String| -> StandbyEvent {
+            me.engine.metrics().record_reject();
+            StandbyEvent::Rejected { step, reason }
+        };
+        let ck = match ckpt::load(path) {
+            Ok((ck, _io)) => ck,
+            Err(e) => return reject(self, format!("load failed: {e}")),
+        };
+        let serve_cfg = self.engine.encoder_config();
+        if !ck.encoder.same_shape(serve_cfg) {
+            return reject(
+                self,
+                format!(
+                    "snapshot shape {:?} does not match the serving contract {:?}",
+                    ck.encoder, serve_cfg
+                ),
+            );
+        }
+        // serving precision is the engine's choice, not the checkpoint's
+        let cand_cfg = EncoderConfig { kind: serve_cfg.kind, ..ck.encoder.clone() };
+        let weights = match ckpt::encoder_weights(&cand_cfg, &ck.params) {
+            Ok(w) => w,
+            Err(e) => return reject(self, format!("weight layout: {e}")),
+        };
+        let candidate = ClipEncoder::from_weights(cand_cfg, weights);
+        match validate_and_promote(
+            &self.engine,
+            candidate,
+            &self.canary,
+            self.cfg.drift_max,
+            t0,
+        ) {
+            Ok(promo) => {
+                self.anchor = self.current.take();
+                self.current = Some(ck.params);
+                self.expected = Some(promo.canary_embs);
+                StandbyEvent::Promoted {
+                    step,
+                    generation: self.engine.generation(),
+                    drift: promo.drift,
+                    pause: promo.pause,
+                }
+            }
+            Err(reason) => StandbyEvent::Rejected { step, reason },
+        }
+    }
+
+    /// Post-promotion canary probe: every canary request served by the
+    /// live engine must match the promoted candidate's embeddings
+    /// bit-for-bit (the substrate is deterministic and batch-composition
+    /// independent, so any difference means the live weights are not the
+    /// ones that passed validation).  On mismatch, roll back to the
+    /// previous generation.
+    pub fn probe_once(&mut self) -> StandbyEvent {
+        let Some(expected) = self.expected.clone() else {
+            return StandbyEvent::Idle; // nothing promoted yet
+        };
+        for (input, want) in self.canary.inputs().into_iter().zip(&expected) {
+            match self.engine.encode(input) {
+                Ok(resp) => {
+                    if *resp.embedding != *want {
+                        return self.rollback("canary probe diverged from the \
+                                              promoted weights");
+                    }
+                }
+                // an encode error here is engine shutdown, not bad weights
+                Err(_) => return StandbyEvent::Idle,
+            }
+        }
+        StandbyEvent::Idle
+    }
+
+    /// Reinstall the previous generation's weights (another generation
+    /// bump, so stale cache entries from the bad generation die too).
+    fn rollback(&mut self, reason: &str) -> StandbyEvent {
+        let Some(params) = self.anchor.take() else {
+            self.expected = None; // stop re-probing an expectation we can't fix
+            return StandbyEvent::ProbeFailed {
+                reason: format!("{reason}; no previous generation retained"),
+            };
+        };
+        let serve_cfg = self.engine.encoder_config().clone();
+        let restored = match ckpt::encoder_weights(&serve_cfg, &params) {
+            Ok(w) => ClipEncoder::from_weights(serve_cfg, w),
+            Err(e) => {
+                return StandbyEvent::ProbeFailed {
+                    reason: format!("{reason}; rollback rebuild failed: {e}"),
+                }
+            }
+        };
+        let expected = self.canary.encode_with(&restored);
+        match self.engine.install_encoder(restored) {
+            Ok(_pause) => {
+                self.engine.metrics().record_rollback();
+                self.current = Some(params);
+                self.expected = Some(expected);
+                StandbyEvent::RolledBack {
+                    generation: self.engine.generation(),
+                    reason: reason.to_string(),
+                }
+            }
+            Err(e) => StandbyEvent::ProbeFailed {
+                reason: format!("{reason}; rollback install failed: {e}"),
+            },
+        }
+    }
+}
+
+/// Handle to a running watcher thread; stops (and joins) on
+/// [`StandbyHandle::stop`] or drop.
+pub struct StandbyHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl StandbyHandle {
+    /// Signal the watcher to exit and join it.
+    pub fn stop(self) {
+        // Drop does the work; consuming the handle makes intent explicit.
+    }
+}
+
+impl Drop for StandbyHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start the watcher thread: poll → prepare → canary → promote/reject,
+/// with a probe (and possible rollback) every `probe_every` polls.
+pub fn spawn(engine: Arc<Engine>, cfg: StandbyConfig) -> StandbyHandle {
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&stop);
+    let join = std::thread::spawn(move || {
+        let poll = cfg.poll;
+        let probe_every = cfg.probe_every;
+        let verbose = cfg.verbose;
+        let mut sb = Standby::new(engine, cfg);
+        let mut ticks: u32 = 0;
+        while !flag.load(Ordering::Relaxed) {
+            log_event(verbose, &sb.poll_once());
+            ticks = ticks.wrapping_add(1);
+            if probe_every > 0 && ticks % probe_every == 0 {
+                log_event(verbose, &sb.probe_once());
+            }
+            std::thread::sleep(poll);
+        }
+    });
+    StandbyHandle { stop, join: Some(join) }
+}
+
+fn log_event(verbose: bool, ev: &StandbyEvent) {
+    if !verbose {
+        return;
+    }
+    match ev {
+        StandbyEvent::Idle => {}
+        StandbyEvent::Promoted { step, generation, drift, pause } => println!(
+            "[standby] promoted snapshot step {step} → generation {generation} \
+             (drift {drift:.4}, swap pause {:.1} µs)",
+            pause.as_secs_f64() * 1e6
+        ),
+        StandbyEvent::Rejected { step, reason } => {
+            println!("[standby] rejected snapshot step {step}: {reason}")
+        }
+        StandbyEvent::RolledBack { generation, reason } => println!(
+            "[standby] ROLLED BACK to generation {generation}: {reason}"
+        ),
+        StandbyEvent::ProbeFailed { reason } => {
+            println!("[standby] probe failed, no rollback possible: {reason}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::TrainCheckpoint;
+    use crate::config::TrainHyper;
+    use crate::data::DataCursor;
+    use crate::nn::LinearKind;
+    use crate::optim::OptimizerState;
+    use crate::serve::batcher::BatchPolicy;
+    use crate::serve::engine::ServeConfig;
+    use crate::train::ClipTrainModel;
+
+    fn tiny_cfg(seed: u64) -> EncoderConfig {
+        EncoderConfig {
+            kind: LinearKind::SwitchBack,
+            dim: 16,
+            heads: 2,
+            blocks: 1,
+            embed_dim: 8,
+            patches: 4,
+            patch_dim: 12,
+            text_seq: 5,
+            vocab: 64,
+            seed,
+        }
+    }
+
+    fn engine_from(params: &[Vec<f32>], enc_cfg: &EncoderConfig) -> Arc<Engine> {
+        let serve_cfg = ServeConfig {
+            encoder: enc_cfg.clone(),
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 2,
+            cache_capacity: 256,
+            cache_shards: 2,
+        };
+        let weights = ckpt::encoder_weights(enc_cfg, params).unwrap();
+        let enc = ClipEncoder::from_weights(enc_cfg.clone(), weights);
+        Arc::new(Engine::start_with_encoder(serve_cfg, enc))
+    }
+
+    fn ckpt_with(params: Vec<Vec<f32>>, step: u64, enc: &EncoderConfig) -> TrainCheckpoint {
+        TrainCheckpoint {
+            step,
+            encoder: enc.clone(),
+            hyper: TrainHyper::preset(1000),
+            shifts: vec![],
+            batch: 4,
+            grad_shards: 1,
+            param_names: (0..params.len()).map(|i| format!("t{i}")).collect(),
+            params,
+            opt: OptimizerState { name: "lion".into(), t: step, slots: vec![] },
+            data: DataCursor {
+                step,
+                gain: 1.0,
+                mapping: vec![0],
+                rng: [1, 2, 3, 4],
+                rng_spare: None,
+            },
+        }
+    }
+
+    fn perturbed(params: &[Vec<f32>], scale: f32) -> Vec<Vec<f32>> {
+        params
+            .iter()
+            .map(|t| t.iter().map(|v| v * scale).collect())
+            .collect()
+    }
+
+    fn standby_in(dir: &std::path::Path, engine: &Arc<Engine>, base: Vec<Vec<f32>>) -> Standby {
+        let mut cfg = StandbyConfig::new(dir);
+        cfg.baseline = Some(base);
+        Standby::new(Arc::clone(engine), cfg)
+    }
+
+    /// A newer snapshot of (nearly) the same weights is prepared,
+    /// canary-validated and promoted; the engine then serves exactly the
+    /// candidate's embeddings and the probe passes.
+    #[test]
+    fn watcher_promotes_newer_compatible_snapshot() {
+        let dir = std::env::temp_dir().join("sbck_standby_promote");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut sb = standby_in(&dir, &engine, params.clone());
+
+        assert!(matches!(sb.poll_once(), StandbyEvent::Idle), "empty dir");
+
+        let newer = perturbed(&params, 1.001);
+        ckpt::save(&ckpt::snapshot_path(&dir, 10), &ckpt_with(newer, 10, &enc_cfg))
+            .unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Promoted { step, generation, drift, .. } => {
+                assert_eq!(step, 10);
+                assert_eq!(generation, 1);
+                assert!(drift < 0.1, "near-identical weights, drift {drift}");
+            }
+            other => panic!("expected promotion, got {other:?}"),
+        }
+        assert_eq!(engine.generation(), 1);
+        let snap = engine.metrics().snapshot();
+        assert_eq!(snap.standby_promotions, 1);
+        assert_eq!(snap.standby_rejects, 0);
+        assert!(snap.prepare_p99_ms >= 0.0);
+        assert!(matches!(sb.poll_once(), StandbyEvent::Idle), "handled once");
+        assert!(matches!(sb.probe_once(), StandbyEvent::Idle), "probe passes");
+        assert_eq!(engine.metrics().snapshot().standby_rollbacks, 0);
+    }
+
+    /// A drifted snapshot (different-seed weights) is rejected by the
+    /// canary bound: the live generation, and serving, are untouched —
+    /// and the file is not re-prepared on later polls.
+    #[test]
+    fn drifted_snapshot_is_rejected_without_touching_the_generation() {
+        let dir = std::env::temp_dir().join("sbck_standby_reject");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut sb = standby_in(&dir, &engine, params.clone());
+
+        let alien = ClipTrainModel::new(tiny_cfg(999)).collect_params();
+        ckpt::save(&ckpt::snapshot_path(&dir, 20), &ckpt_with(alien, 20, &enc_cfg))
+            .unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Rejected { step, reason } => {
+                assert_eq!(step, 20);
+                assert!(reason.contains("drift"), "{reason}");
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert_eq!(engine.generation(), 0, "reject must not bump the generation");
+        assert_eq!(engine.metrics().snapshot().standby_rejects, 1);
+        assert!(matches!(sb.poll_once(), StandbyEvent::Idle), "not re-prepared");
+        // serving still works on the original weights
+        let mut rng = Rng::seed(5);
+        let img: Vec<f32> = (0..enc_cfg.image_len()).map(|_| rng.normal()).collect();
+        assert!(engine.encode(EncodeInput::Image(img)).is_ok());
+    }
+
+    /// CRC-corrupt and shape-mismatched snapshot files are rejected
+    /// (counted once each, never retried), never promoted.
+    #[test]
+    fn corrupt_and_mismatched_snapshots_are_rejected() {
+        let dir = std::env::temp_dir().join("sbck_standby_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut sb = standby_in(&dir, &engine, params.clone());
+
+        // readable manifest, corrupt tensor blob: CRC rejection at load
+        let crc_path = ckpt::snapshot_path(&dir, 30);
+        ckpt::save(&crc_path, &ckpt_with(perturbed(&params, 1.001), 30, &enc_cfg))
+            .unwrap();
+        let mut raw = std::fs::read(&crc_path).unwrap();
+        let n = raw.len();
+        raw[n - 2] ^= 0x40;
+        std::fs::write(&crc_path, &raw).unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Rejected { step: 30, reason } => {
+                assert!(reason.contains("load failed"), "{reason}");
+            }
+            other => panic!("expected CRC rejection, got {other:?}"),
+        }
+        assert!(matches!(sb.poll_once(), StandbyEvent::Idle), "rejected once");
+
+        let mut bad_shape = tiny_cfg(7);
+        bad_shape.dim = 32;
+        bad_shape.heads = 4;
+        let alien = ClipTrainModel::new(bad_shape.clone()).collect_params();
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 40),
+            &ckpt_with(alien, 40, &bad_shape),
+        )
+        .unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Rejected { step: 40, reason } => {
+                assert!(reason.contains("shape"), "{reason}");
+            }
+            other => panic!("expected shape rejection, got {other:?}"),
+        }
+        assert_eq!(engine.generation(), 0);
+        assert_eq!(engine.metrics().snapshot().standby_rejects, 2);
+    }
+
+    /// An unreadable file (a non-atomic copy still in flight) neither
+    /// wedges the watcher nor gets blacklisted: valid siblings promote
+    /// around it, and once the "copy" completes it promotes too.
+    #[test]
+    fn unreadable_file_is_retried_and_does_not_block_siblings() {
+        let dir = std::env::temp_dir().join("sbck_standby_noblock");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut sb = standby_in(&dir, &engine, params.clone());
+
+        // half-written file with an absurdly high step number: skipped,
+        // not rejected (it may still be mid-copy)
+        std::fs::write(ckpt::snapshot_path(&dir, 99_999_999), b"torn").unwrap();
+        assert!(matches!(sb.poll_once(), StandbyEvent::Idle));
+        assert_eq!(engine.metrics().snapshot().standby_rejects, 0);
+
+        // a legitimate snapshot with a *lower* step promotes regardless
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 10),
+            &ckpt_with(perturbed(&params, 1.001), 10, &enc_cfg),
+        )
+        .unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Promoted { step: 10, generation: 1, .. } => {}
+            other => panic!("valid snapshot was blocked: {other:?}"),
+        }
+
+        // the "copy" completes: the same filename becomes readable and
+        // newer → promoted on a later poll (retry, not blacklist)
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 99_999_999),
+            &ckpt_with(perturbed(&params, 1.002), 99_999_999, &enc_cfg),
+        )
+        .unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Promoted { step: 99_999_999, generation: 2, .. } => {}
+            other => panic!("completed copy was not retried: {other:?}"),
+        }
+        let snap = engine.metrics().snapshot();
+        assert_eq!(snap.standby_promotions, 2);
+        assert_eq!(snap.standby_rejects, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A copied/renamed snapshot (filename step far above its manifest
+    /// step) must not blind the cursor: a later file with a lower
+    /// filename step but a genuinely newer manifest still promotes.
+    #[test]
+    fn renamed_snapshot_does_not_blind_the_cursor() {
+        let dir = std::env::temp_dir().join("sbck_standby_renamed");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut sb = standby_in(&dir, &engine, params.clone());
+
+        // manifest step 100 hiding behind filename step 1000
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 1000),
+            &ckpt_with(perturbed(&params, 1.001), 100, &enc_cfg),
+        )
+        .unwrap();
+        assert!(matches!(
+            sb.poll_once(),
+            StandbyEvent::Promoted { step: 100, .. }
+        ));
+        assert!(matches!(sb.poll_once(), StandbyEvent::Idle), "handled once");
+
+        // lower filename step, newer manifest: must still win
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 200),
+            &ckpt_with(perturbed(&params, 1.002), 200, &enc_cfg),
+        )
+        .unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Promoted { step: 200, generation: 2, .. } => {}
+            other => panic!("newer manifest was blinded by the filename: {other:?}"),
+        }
+
+        // even a filename *below* every previous one is considered:
+        // freshness is decided by the manifest alone
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 5),
+            &ckpt_with(perturbed(&params, 1.003), 300, &enc_cfg),
+        )
+        .unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Promoted { step: 300, generation: 3, .. } => {}
+            other => panic!("low filename hid a newer manifest: {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A snapshot whose *manifest* is readable but whose tensor blobs
+    /// are still being written (peek OK, incomplete) is retried — not
+    /// CRC-rejected and blacklisted — and promotes once complete.
+    #[test]
+    fn incomplete_blobs_are_retried_until_the_copy_finishes() {
+        let dir = std::env::temp_dir().join("sbck_standby_midcopy");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut sb = standby_in(&dir, &engine, params.clone());
+
+        // simulate a mid-copy file: full save, then chop the blob tail
+        let path = ckpt::snapshot_path(&dir, 60);
+        ckpt::save(&path, &ckpt_with(perturbed(&params, 1.001), 60, &enc_cfg))
+            .unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 64]).unwrap();
+        assert!(matches!(sb.poll_once(), StandbyEvent::Idle), "mid-copy skip");
+        assert_eq!(engine.metrics().snapshot().standby_rejects, 0);
+
+        // the copy completes → promoted on a later poll
+        std::fs::write(&path, &full).unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Promoted { step: 60, generation: 1, .. } => {}
+            other => panic!("completed blobs were not retried: {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// When the live weights stop matching the promoted candidate (an
+    /// out-of-band install behind the watcher's back), the canary probe
+    /// catches it and rolls back to the previous generation's weights.
+    #[test]
+    fn probe_failure_rolls_back_to_previous_generation() {
+        let dir = std::env::temp_dir().join("sbck_standby_rollback");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut sb = standby_in(&dir, &engine, params.clone());
+
+        let newer = perturbed(&params, 1.001);
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 10),
+            &ckpt_with(newer, 10, &enc_cfg),
+        )
+        .unwrap();
+        assert!(matches!(sb.poll_once(), StandbyEvent::Promoted { .. }));
+        assert!(matches!(sb.probe_once(), StandbyEvent::Idle));
+
+        // out-of-band swap: different weights slip in behind the watcher
+        engine
+            .install_encoder(ClipEncoder::new(tiny_cfg(4242)))
+            .unwrap();
+        match sb.probe_once() {
+            StandbyEvent::RolledBack { generation, .. } => {
+                assert_eq!(generation, 3, "promote + oob + rollback = 3 bumps");
+            }
+            other => panic!("expected rollback, got {other:?}"),
+        }
+        assert_eq!(engine.metrics().snapshot().standby_rollbacks, 1);
+        // the engine now serves the *baseline* weights again (the
+        // generation before the tampered one)
+        let weights = ckpt::encoder_weights(&enc_cfg, &params).unwrap();
+        let baseline_enc = ClipEncoder::from_weights(enc_cfg.clone(), weights);
+        let want = sb.canary.encode_with(&baseline_enc);
+        let got = engine
+            .encode(sb.canary.inputs().remove(0))
+            .unwrap()
+            .embedding;
+        assert_eq!(*got, want[0], "rollback must restore the previous weights");
+        // and the probe expectation now tracks the restored generation
+        assert!(matches!(sb.probe_once(), StandbyEvent::Idle));
+    }
+
+    /// `validate_and_promote` is the shared gate: unrelated weights fail
+    /// a finite bound (counted as a reject, generation untouched) but
+    /// pass with the bound disabled (the loadgen --swap-every mode).
+    #[test]
+    fn validate_and_promote_gates_on_the_bound() {
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let canary = CanarySet::build(engine.encoder_config(), 8, 0xCA9A);
+
+        let unrelated = || ClipEncoder::new(tiny_cfg(31337));
+        let err = validate_and_promote(
+            &engine,
+            unrelated(),
+            &canary,
+            Some(0.5),
+            Instant::now(),
+        )
+        .unwrap_err();
+        assert!(err.contains("drift"), "{err}");
+        assert_eq!(engine.generation(), 0);
+        assert_eq!(engine.metrics().snapshot().standby_rejects, 1);
+
+        let promo = validate_and_promote(
+            &engine,
+            unrelated(),
+            &canary,
+            None,
+            Instant::now(),
+        )
+        .unwrap();
+        assert!(
+            promo.drift > 0.5,
+            "unrelated weights must drift, got {}",
+            promo.drift
+        );
+        assert_eq!(promo.canary_embs.len(), 16, "8 images + 8 captions");
+        assert_eq!(engine.generation(), 1);
+        assert_eq!(engine.metrics().snapshot().standby_promotions, 1);
+    }
+
+    /// End to end through the spawned thread: drop a snapshot into the
+    /// watched directory, the watcher promotes it under a running engine.
+    #[test]
+    fn spawned_watcher_promotes_in_the_background() {
+        let dir = std::env::temp_dir().join("sbck_standby_spawn");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut cfg = StandbyConfig::new(&dir);
+        cfg.poll = Duration::from_millis(2);
+        cfg.baseline = Some(params.clone());
+        let handle = spawn(Arc::clone(&engine), cfg);
+
+        let newer = perturbed(&params, 1.001);
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 50),
+            &ckpt_with(newer, 50, &enc_cfg),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        while engine.metrics().snapshot().standby_promotions < 1 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "watcher never promoted the dropped snapshot"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        handle.stop();
+        assert_eq!(engine.generation(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -74,6 +74,13 @@ pub struct NativeTrainConfig {
     /// in-memory snapshot (model + optimizer) and skip the offending
     /// shard window instead of training through it
     pub rollback_on_spike: bool,
+    /// guard deviation threshold in trailing-window standard deviations
+    /// (`--spike-sigma`; default: the paper's 3.2σ, Appendix D)
+    pub spike_sigma: f32,
+    /// steps the guard stays quiet after firing while the loss baseline
+    /// adapts (`--spike-cooldown`; default 3× the Appendix-D dedup
+    /// window = 30)
+    pub spike_cooldown: u64,
 }
 
 impl NativeTrainConfig {
@@ -110,6 +117,8 @@ impl NativeTrainConfig {
             ckpt_dir: None,
             ckpt_keep: 3,
             rollback_on_spike: false,
+            spike_sigma: crate::telemetry::DEFAULT_LOSS_SIGMA,
+            spike_cooldown: 3 * DEDUP_WINDOW,
         }
     }
 
@@ -402,14 +411,22 @@ impl NativeRunResult {
 /// while the running baseline adapts.
 struct RollbackGuard {
     cfg: SpikeConfig,
+    /// post-fire quiet period in steps (`--spike-cooldown`)
+    cooldown: u64,
     history: Vec<f32>,
     last_deviation: Option<u64>,
     cooldown_until: u64,
 }
 
 impl RollbackGuard {
-    fn new(cfg: SpikeConfig) -> Self {
-        Self { cfg, history: vec![], last_deviation: None, cooldown_until: 0 }
+    fn new(cfg: SpikeConfig, cooldown: u64) -> Self {
+        Self {
+            cfg,
+            cooldown,
+            history: vec![],
+            last_deviation: None,
+            cooldown_until: 0,
+        }
     }
 
     /// An unconfirmed deviation is pending: the trainer must not refresh
@@ -464,7 +481,7 @@ impl RollbackGuard {
         match self.last_deviation {
             Some(prev) if step.saturating_sub(prev) <= DEDUP_WINDOW => {
                 self.last_deviation = None;
-                self.cooldown_until = step + 3 * DEDUP_WINDOW;
+                self.cooldown_until = step + self.cooldown;
                 true
             }
             _ => {
@@ -519,7 +536,7 @@ impl NativeTrainer {
     ///
     /// Scope of the contract: the *training math* (weights, optimizer
     /// moments, data draws, schedule) is bit-identical.  The spike
-    /// [`RollbackGuard`] is a reactive intervention, not training math —
+    /// `RollbackGuard` is a reactive intervention, not training math —
     /// its online loss history / cooldown are not checkpointed, so under
     /// `rollback_on_spike` a resumed detector restarts cold and guard
     /// *decisions* within `stat_window` of the resume point may differ
@@ -662,10 +679,16 @@ impl NativeTrainer {
         } else {
             0
         };
-        let mut guard = self
-            .cfg
-            .rollback_on_spike
-            .then(|| RollbackGuard::new(spike_cfg(h.steps)));
+        let mut guard = self.cfg.rollback_on_spike.then(|| {
+            // the guard's threshold is tunable (--spike-sigma); the
+            // post-hoc spike *reporting* below stays at the paper's 3.2σ
+            // so BENCH_train spike counts remain comparable across runs
+            let cfg = SpikeConfig {
+                loss_sigma: self.cfg.spike_sigma,
+                ..spike_cfg(h.steps)
+            };
+            RollbackGuard::new(cfg, self.cfg.spike_cooldown)
+        });
         let mut mem_snap: Option<(u64, Vec<Vec<f32>>, OptimizerState)> = self
             .cfg
             .rollback_on_spike
@@ -1166,7 +1189,7 @@ mod tests {
     #[test]
     fn rollback_guard_confirmation_and_cooldown() {
         let cfg = SpikeConfig { burn_in: 5, stat_window: 50, ..Default::default() };
-        let mut g = RollbackGuard::new(cfg.clone());
+        let mut g = RollbackGuard::new(cfg.clone(), 3 * DEDUP_WINDOW);
         for t in 1..=20u64 {
             assert!(!g.observe(t, 1.0 + (t % 3) as f32 * 0.01), "baseline fired");
         }
@@ -1179,7 +1202,7 @@ mod tests {
 
         // a lone deviation (no confirmation within 10) never fires, arms
         // the guard only for the confirmation window, then disarms
-        let mut g = RollbackGuard::new(cfg.clone());
+        let mut g = RollbackGuard::new(cfg.clone(), 3 * DEDUP_WINDOW);
         for t in 1..=20u64 {
             g.observe(t, 1.0 + (t % 3) as f32 * 0.01);
         }
@@ -1192,7 +1215,7 @@ mod tests {
 
         // NaN loss counts as a deviation but never enters the baseline:
         // the window stats stay finite and later spikes are still caught
-        let mut g = RollbackGuard::new(cfg);
+        let mut g = RollbackGuard::new(cfg, 3 * DEDUP_WINDOW);
         for t in 1..=10u64 {
             g.observe(t, 1.0 + (t % 3) as f32 * 0.01);
         }
@@ -1203,6 +1226,49 @@ mod tests {
         }
         assert!(!g.observe(43, 9.0), "first deviation only arms");
         assert!(g.observe(44, 9.0), "NaN must not have blinded the window");
+    }
+
+    /// The guard knobs are real: a huge `--spike-sigma` silences the
+    /// guard on the same shift that fires it at the default, and a short
+    /// `--spike-cooldown` re-arms sooner than the default 30 steps.
+    #[test]
+    fn spike_sigma_and_cooldown_are_tunable() {
+        let steps = 60u64;
+        let mut cfg = tiny_cfg(LinearKind::Standard, steps);
+        cfg.hyper.optimizer = crate::config::OptimizerKind::Adamw;
+        cfg.shifts = vec![Shift {
+            at_step: 40,
+            image_gain: 60.0,
+            remap_concepts: true,
+        }];
+        cfg.rollback_on_spike = true;
+        cfg.spike_sigma = 1e6; // nothing is a 1e6σ deviation
+        let res = NativeTrainer::new(cfg).run(false).unwrap();
+        assert!(
+            res.rollback_steps.is_empty(),
+            "a 1e6σ threshold must silence the guard, fired at {:?}",
+            res.rollback_steps
+        );
+
+        // cooldown: default 30 suppresses a second fire at distance 12;
+        // cooldown 5 lets it through
+        for (cooldown, expect_second) in [(3 * DEDUP_WINDOW, false), (5u64, true)] {
+            let sc = SpikeConfig { burn_in: 5, stat_window: 50, ..Default::default() };
+            let mut g = RollbackGuard::new(sc, cooldown);
+            for t in 1..=20u64 {
+                g.observe(t, 1.0 + (t % 3) as f32 * 0.01);
+            }
+            assert!(!g.observe(21, 9.0));
+            assert!(g.observe(22, 9.0), "first confirmed spike fires");
+            // the 9.0s entered the trailing baseline, so the second burst
+            // must clear the inflated mean+σ threshold: use 30.0
+            assert!(!g.observe(32, 30.0), "arming deviation only");
+            assert_eq!(
+                g.observe(33, 30.0),
+                expect_second,
+                "cooldown {cooldown}: second spike at distance 11"
+            );
+        }
     }
 
     /// Zero-shot eval runs and returns a sane range after a short run.

@@ -7,9 +7,13 @@
 //!
 //! * **portable** (default): gates only machine-independent quantities —
 //!   the SwitchBack-vs-Standard throughput *ratio* and p99 *ratio* for
-//!   serve, and the learning invariants (loss decreased, no divergence,
-//!   spike counts) for train.  This is what CI runs against the committed
-//!   baseline, which was measured on different hardware.
+//!   serve, the swap-mode invariants (zero failed requests, ≥1 promotion,
+//!   tail latency within [`SWAP_TAIL_FACTOR`]× of the same document's
+//!   single-generation run), the learning invariants (loss decreased, no
+//!   divergence, spike counts) for train, and the standby
+//!   promote/reject/rollback counters for the ckpt pipeline.  This is
+//!   what CI runs against the committed baseline, which was measured on
+//!   different hardware.
 //! * **strict**: additionally gates absolute requests/sec, p99 and
 //!   steps/sec entry-by-entry.  Use when old and new were measured on the
 //!   same machine (e.g. bisecting a local regression).
@@ -91,37 +95,73 @@ fn s<'a>(entry: &'a Value, key: &str) -> &'a str {
 
 // ----- serve ----------------------------------------------------------
 
-/// `(kind, concurrency)` → (requests_per_sec, p99_ms)
-fn serve_index(v: &Value) -> Result<Vec<(String, u64, f64, f64)>, String> {
+/// Swap-aware runs may pay tail latency for hot-swaps (the swapper
+/// competes for cores while preparing a generation), but a swap-mode p99
+/// beyond this multiple of the same configuration's single-generation
+/// p99 means promotions are stalling the serving path — gated as an
+/// invariant (machine-portable: both runs come from the same document).
+pub const SWAP_TAIL_FACTOR: f64 = 10.0;
+
+/// One serve-results entry in comparable form.
+struct ServeEntry {
+    kind: String,
+    conc: u64,
+    /// swap cadence (0 = plain single-generation run)
+    swap_every: u64,
+    rps: f64,
+    p99: f64,
+    errors: f64,
+    /// standby promotions recorded by the run's metrics (0 when absent)
+    promotions: f64,
+    /// standby rejections recorded by the run's metrics (0 when absent)
+    rejects: f64,
+}
+
+fn serve_index(v: &Value) -> Result<Vec<ServeEntry>, String> {
     results(v)?
         .iter()
         .map(|r| {
             let kind = s(r, "kind").to_string();
             let conc = f(r, "concurrency").unwrap_or(0.0) as u64;
+            let swap_every = f(r, "swap_every").unwrap_or(0.0) as u64;
             let ctx = format!("serve {kind} c={conc}");
             let rps = req_num(r, &ctx, "requests_per_sec")?;
             let metrics = r
                 .get("metrics")
                 .ok_or_else(|| format!("{ctx}: missing \"metrics\""))?;
             let p99 = req_num(metrics, &ctx, "request_p99_ms")?;
-            Ok((kind, conc, rps, p99))
+            let errors = opt_num(r, &ctx, "errors")?.unwrap_or(0.0);
+            let promotions =
+                opt_num(metrics, &ctx, "standby_promotions")?.unwrap_or(0.0);
+            let rejects = opt_num(metrics, &ctx, "standby_rejects")?.unwrap_or(0.0);
+            Ok(ServeEntry {
+                kind,
+                conc,
+                swap_every,
+                rps,
+                p99,
+                errors,
+                promotions,
+                rejects,
+            })
         })
         .collect()
 }
 
-/// The Standard-vs-SwitchBack ratios per concurrency (machine-portable).
-fn serve_ratios(idx: &[(String, u64, f64, f64)]) -> Vec<(u64, f64, f64)> {
+/// The Standard-vs-SwitchBack ratios per concurrency (machine-portable),
+/// over the plain single-generation runs only.
+fn serve_ratios(idx: &[ServeEntry]) -> Vec<(u64, f64, f64)> {
     let mut out = vec![];
-    for (kind, conc, rps, p99) in idx {
-        let (conc, rps, p99) = (*conc, *rps, *p99);
-        if kind != "switchback" {
+    for e in idx {
+        if e.kind != "switchback" || e.swap_every > 0 {
             continue;
         }
-        if let Some(&(_, _, std_rps, std_p99)) =
-            idx.iter().find(|(k, c, _, _)| k == "standard" && *c == conc)
+        if let Some(std_e) = idx
+            .iter()
+            .find(|o| o.kind == "standard" && o.conc == e.conc && o.swap_every == 0)
         {
-            if std_rps > 0.0 && p99 > 0.0 {
-                out.push((conc, rps / std_rps, std_p99 / p99));
+            if std_e.rps > 0.0 && e.p99 > 0.0 {
+                out.push((e.conc, e.rps / std_e.rps, std_e.p99 / e.p99));
             }
         }
     }
@@ -136,6 +176,16 @@ fn compare_serve(
 ) -> Result<Vec<String>, String> {
     let oi = serve_index(old)?;
     let ni = serve_index(new)?;
+    // fail closed if the swap-aware run disappeared: the baseline gates
+    // its invariants, and "no entry" must not read as "no regression"
+    if oi.iter().any(|e| e.swap_every > 0) && !ni.iter().any(|e| e.swap_every > 0) {
+        return Err(
+            "baseline has a --swap-every entry but the new document has \
+             none — the swap-aware run disappeared; restore it (or refresh \
+             the baseline) before comparing"
+                .into(),
+        );
+    }
     let mut regs = vec![];
     let mut compared = 0usize;
     // portable: the int8-vs-f32 ratios must not regress
@@ -161,26 +211,68 @@ fn compare_serve(
             ));
         }
     }
+    // portable swap invariants: a --swap-every run must drop nothing,
+    // actually promote generations, and keep its tail latency within
+    // SWAP_TAIL_FACTOR of the same configuration's single-generation run
+    // (a within-document bound, so machine speed cancels out)
+    for e in ni.iter().filter(|e| e.swap_every > 0) {
+        compared += 1;
+        let tag = format!("serve {} c={} swap-every={}", e.kind, e.conc, e.swap_every);
+        if e.errors > 0.0 {
+            regs.push(format!(
+                "{tag}: {:.0} requests failed across generations",
+                e.errors
+            ));
+        }
+        if e.promotions < 1.0 {
+            regs.push(format!("{tag}: no generation was promoted"));
+        }
+        if e.rejects > 0.0 {
+            regs.push(format!(
+                "{tag}: {:.0} promotion(s) failed validation \
+                 (fresh-seeded generations must always install)",
+                e.rejects
+            ));
+        }
+        if let Some(plain) = ni
+            .iter()
+            .find(|o| o.kind == e.kind && o.conc == e.conc && o.swap_every == 0)
+        {
+            if plain.p99 > 0.0 && e.p99 > plain.p99 * SWAP_TAIL_FACTOR {
+                regs.push(format!(
+                    "{tag}: swap-tail-latency invariant broken — p99 \
+                     {:.2} ms vs {:.2} ms single-generation (> {SWAP_TAIL_FACTOR}×)",
+                    e.p99, plain.p99
+                ));
+            }
+        }
+    }
     if strict {
-        for (kind, conc, nrps, np99) in &ni {
-            let (conc, nrps, np99) = (*conc, *nrps, *np99);
-            let Some(&(_, _, orps, op99)) =
-                oi.iter().find(|(k, c, _, _)| k == kind && *c == conc)
-            else {
+        for e in &ni {
+            let Some(o) = oi.iter().find(|o| {
+                o.kind == e.kind && o.conc == e.conc && o.swap_every == e.swap_every
+            }) else {
                 continue;
             };
             compared += 1;
-            if nrps < orps * (1.0 - tol) {
+            if e.rps < o.rps * (1.0 - tol) {
                 regs.push(format!(
-                    "serve {kind} c={conc}: throughput {orps:.0} → {nrps:.0} req/s \
+                    "serve {} c={}: throughput {:.0} → {:.0} req/s \
                      (> {:.0}% drop)",
+                    e.kind,
+                    e.conc,
+                    o.rps,
+                    e.rps,
                     tol * 100.0
                 ));
             }
-            if np99 > op99 * (1.0 + tol) {
+            if e.p99 > o.p99 * (1.0 + tol) {
                 regs.push(format!(
-                    "serve {kind} c={conc}: p99 {op99:.2} → {np99:.2} ms \
-                     (> {:.0}% rise)",
+                    "serve {} c={}: p99 {:.2} → {:.2} ms (> {:.0}% rise)",
+                    e.kind,
+                    e.conc,
+                    o.p99,
+                    e.p99,
                     tol * 100.0
                 ));
             }
@@ -191,8 +283,8 @@ fn compare_serve(
     if compared == 0 {
         return Err(
             "nothing comparable between baseline and new serve results \
-             (no standard/switchback pair or matching (kind, concurrency) \
-             entries)"
+             (no standard/switchback pair, no swap-every entry, and no \
+             matching (kind, concurrency) entries)"
                 .into(),
         );
     }
@@ -314,11 +406,43 @@ fn compare_ckpt(
                 regs.push(format!("{tag}: {what} ({key} != true)"));
             }
         }
+        // standby invariants (present since the watcher-driven pipeline):
+        // rollbacks mean a promoted generation failed its live canary
+        // probe — never expected from a clean pipeline run
+        if let Some(rb) = opt_num(r, &tag, "standby_rollbacks")? {
+            if rb > 0.0 {
+                regs.push(format!(
+                    "{tag}: {rb:.0} unexpected post-promotion rollback(s)"
+                ));
+            }
+        }
         let acc = req_num(r, &tag, "eval_acc")?;
         let Some(o) = on.iter().find(|o| s(o, "kind") == kind) else {
             continue;
         };
         matched += 1;
+        // watcher throughput of the promote/reject state machine must not
+        // shrink vs the baseline scenario (same pipeline shape on both
+        // sides, so the counts are deterministic)
+        for (key, what) in [
+            ("standby_promotions", "watcher-driven promotions"),
+            ("standby_rejects", "canary rejections of injected drift"),
+        ] {
+            match (opt_num(o, &tag, key)?, opt_num(r, &tag, key)?) {
+                (Some(ov), Some(nv)) => {
+                    if nv < ov {
+                        regs.push(format!("{tag}: {what} fell {ov:.0} → {nv:.0}"));
+                    }
+                }
+                // gated data vanished from the fresh run: fail closed,
+                // absence must not read as a pass
+                (Some(ov), None) => regs.push(format!(
+                    "{tag}: baseline records {key} ({ov:.0}) but the new \
+                     run omits it"
+                )),
+                _ => {}
+            }
+        }
         let oacc = req_num(o, &tag, "eval_acc")?;
         if oacc > 0.0 && acc < oacc * (1.0 - tol) {
             regs.push(format!(
@@ -573,6 +697,116 @@ mod tests {
         .unwrap();
         let err = compare_bench(&good_ck, &nulled_ck, 0.15, false).unwrap_err();
         assert!(err.contains("eval_acc") && err.contains("null"), "{err}");
+    }
+
+    /// A serve doc with the plain standard/switchback pair plus one
+    /// swap-aware entry (`swap_every` + standby counters).
+    fn serve_doc_with_swap(
+        errors: u64,
+        promotions: u64,
+        rejects: u64,
+        swap_p99: f64,
+    ) -> Value {
+        parse(&format!(
+            r#"{{"bench":"serve_throughput","policy":{{}},"results":[
+                {{"kind":"standard","concurrency":16,"requests_per_sec":1000.0,
+                  "errors":0,"metrics":{{"request_p99_ms":10.0}}}},
+                {{"kind":"switchback","concurrency":16,"requests_per_sec":1500.0,
+                  "errors":0,"metrics":{{"request_p99_ms":8.0}}}},
+                {{"kind":"switchback","concurrency":16,"swap_every":250,
+                  "requests_per_sec":1200.0,"errors":{errors},
+                  "metrics":{{"request_p99_ms":{swap_p99},
+                              "standby_promotions":{promotions},
+                              "standby_rejects":{rejects},
+                              "standby_rollbacks":0}}}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    /// Swap-aware entries are gated on invariants (zero errors, ≥1
+    /// promotion, bounded tail vs the single-generation run) and are
+    /// excluded from the plain throughput-ratio comparison.
+    #[test]
+    fn swap_entries_are_gated_on_invariants() {
+        let old = serve_doc(1000.0, 1500.0, 10.0, 8.0); // no swap entry
+        let good = serve_doc_with_swap(0, 3, 0, 12.0);
+        let regs = compare_bench(&old, &good, 0.15, false).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+        // the swap run must not poison the ratio math: identical ratios
+        // pass even though a slower swap-mode entry exists for the same
+        // (kind, concurrency)
+        let regs = compare_bench(&good, &good, 0.15, false).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+
+        let dropped = serve_doc_with_swap(4, 3, 0, 12.0);
+        let regs = compare_bench(&old, &dropped, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("failed")), "{regs:?}");
+
+        let unswapped = serve_doc_with_swap(0, 0, 0, 12.0);
+        let regs = compare_bench(&old, &unswapped, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("promoted")), "{regs:?}");
+
+        // a recorded reject means a promotion failed validation mid-run
+        let rejected = serve_doc_with_swap(0, 3, 1, 12.0);
+        let regs = compare_bench(&old, &rejected, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("validation")), "{regs:?}");
+
+        // swap p99 more than SWAP_TAIL_FACTOR× the single-generation p99
+        let stalled = serve_doc_with_swap(0, 3, 0, 8.0 * SWAP_TAIL_FACTOR + 1.0);
+        let regs = compare_bench(&old, &stalled, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("swap-tail-latency")),
+            "{regs:?}"
+        );
+
+        // the swap entry disappearing from the fresh doc fails closed
+        let err = compare_bench(&good, &old, 0.15, false).unwrap_err();
+        assert!(err.contains("swap-every"), "{err}");
+    }
+
+    /// Ckpt standby counters gate: rollbacks are never expected, and the
+    /// promote/reject counts must not shrink vs the baseline scenario.
+    #[test]
+    fn ckpt_standby_counters_are_gated() {
+        let with_standby = |promos: u64, rejects: u64, rollbacks: u64| -> Value {
+            parse(&format!(
+                r#"{{"bench":"ckpt_pipeline","config":{{}},"results":[
+                    {{"kind":"switchback","dropped_requests":0,
+                      "round_trip_ok":true,"eval_matches_model":true,
+                      "cache_invalidated":true,"weights_changed":true,
+                      "eval_acc":0.8,"save_mb_s":100.0,"load_mb_s":100.0,
+                      "hot_swap_pause_us":50.0,
+                      "standby_promotions":{promos},
+                      "standby_rejects":{rejects},
+                      "standby_rollbacks":{rollbacks}}}
+                ]}}"#
+            ))
+            .unwrap()
+        };
+        let base = with_standby(3, 1, 0);
+        assert!(compare_bench(&base, &base, 0.15, false).unwrap().is_empty());
+        // an old baseline without the counters still compares cleanly
+        let old_schema = ckpt_doc(0, true, 0.8, 100.0, 50.0);
+        assert!(compare_bench(&old_schema, &base, 0.15, false)
+            .unwrap()
+            .is_empty());
+
+        let rolled = with_standby(3, 1, 2);
+        let regs = compare_bench(&base, &rolled, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("rollback")), "{regs:?}");
+
+        let fewer_promos = with_standby(1, 1, 0);
+        let regs = compare_bench(&base, &fewer_promos, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("promotions")), "{regs:?}");
+
+        let no_reject = with_standby(3, 0, 0);
+        let regs = compare_bench(&base, &no_reject, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("rejections")), "{regs:?}");
+
+        // counters vanishing from the fresh run fail closed too
+        let regs = compare_bench(&base, &old_schema, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("omits")), "{regs:?}");
     }
 
     #[test]

@@ -51,11 +51,17 @@ else
     PIPE_STEPS=40
     PIPE_REQUESTS=256
 fi
+# --swap-every adds one swap-aware run: sustained throughput + tail
+# latency across repeated generations, promoted through the standby path
+SWAP_EVERY=$((REQUESTS / 4))
 "$BIN" loadgen \
     --requests "$REQUESTS" \
     --concurrency "$CONCURRENCY" \
     --kinds standard,switchback \
+    --swap-every "$SWAP_EVERY" \
     --out "$REPO_ROOT/BENCH_serve.json"
+grep -q '"standby_promotions":' "$REPO_ROOT/BENCH_serve.json" \
+    || { echo "loadgen smoke FAILED: no standby promotions in BENCH_serve.json" >&2; exit 1; }
 
 echo
 echo "== train smoke (BENCH_train.json) =="
@@ -68,17 +74,53 @@ echo "== train smoke (BENCH_train.json) =="
     --out "$REPO_ROOT/BENCH_train.json"
 
 echo
-echo "== ckpt pipeline: train → snapshot → serve → hot-swap → eval (BENCH_ckpt.json) =="
+echo "== ckpt pipeline: train → watcher promotes snapshots mid-traffic → eval (BENCH_ckpt.json) =="
 CKPT_PIPE="$REPO_ROOT/ckpts_verify_pipeline"
 rm -rf "$CKPT_PIPE"
 # hard-fails internally on: round-trip mismatch, dropped requests during
-# the hot-swap, or serve/train encode divergence
+# the watcher-driven promotions, a promoted (instead of canary-rejected)
+# drift injection, or serve/train encode divergence
 "$BIN" pipeline \
     --steps "$PIPE_STEPS" \
     --requests "$PIPE_REQUESTS" \
     --ckpt-dir "$CKPT_PIPE" \
     --out "$REPO_ROOT/BENCH_ckpt.json" \
     --quiet
+# belt and braces on top of the command's own asserts: the artifact must
+# record ≥3 watcher promotions, the injected-drift rejection, no
+# rollbacks and zero dropped requests
+# note the trailing comma in each pattern: it pins the exact value
+# (":3" alone would also match 30)
+grep -q '"standby_promotions":3,' "$REPO_ROOT/BENCH_ckpt.json" \
+    || { echo "pipeline smoke FAILED: expected exactly 3 watcher promotions" >&2; exit 1; }
+grep -q '"standby_rejects":1,' "$REPO_ROOT/BENCH_ckpt.json" \
+    || { echo "pipeline smoke FAILED: drift injection was not rejected exactly once" >&2; exit 1; }
+grep -q '"standby_rollbacks":0,' "$REPO_ROOT/BENCH_ckpt.json" \
+    || { echo "pipeline smoke FAILED: unexpected rollback" >&2; exit 1; }
+grep -q '"dropped_requests":0,' "$REPO_ROOT/BENCH_ckpt.json" \
+    || { echo "pipeline smoke FAILED: dropped requests during promotions" >&2; exit 1; }
+
+echo
+echo "== standby smoke: train → watcher picks up the newer snapshot → canary promote =="
+CKPT_STANDBY="$REPO_ROOT/ckpts_verify_standby"
+rm -rf "$CKPT_STANDBY"
+# two snapshots (steps 10 and 20); serve boots the older one with the
+# watcher pointed at the same directory — the smoke waits for (and
+# asserts) the canary-validated promotion of step 20, then the usual
+# probe/cache checks run on the promoted generation
+"$BIN" train --kind switchback --steps 20 \
+    --ckpt-every 10 --ckpt-dir "$CKPT_STANDBY" --eval-per-concept 0 \
+    --out "$REPO_ROOT/.bench_standby_smoke.json" -q
+STANDBY_OUT="$("$BIN" serve --kind switchback \
+    --weights "$CKPT_STANDBY/ckpt-00000010.sbck" \
+    --watch-dir "$CKPT_STANDBY" --standby)"
+echo "$STANDBY_OUT"
+echo "$STANDBY_OUT" | grep -q "standby: promoted to generation 1" \
+    || { echo "standby smoke FAILED: watcher did not promote the newer snapshot" >&2; exit 1; }
+echo "$STANDBY_OUT" | grep -q "serve smoke OK" \
+    || { echo "standby smoke FAILED: serve probes failed after promotion" >&2; exit 1; }
+echo "standby smoke OK — watcher promoted the newer snapshot under canary validation"
+rm -rf "$CKPT_STANDBY" "$REPO_ROOT/.bench_standby_smoke.json"
 
 echo
 echo "== ckpt resume smoke: interrupted + resumed == uninterrupted =="
