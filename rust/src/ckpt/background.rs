@@ -1,0 +1,256 @@
+//! Non-blocking background checkpoint saves (`train --ckpt-async`).
+//!
+//! The trainer captures a [`TrainCheckpoint`] at a step boundary — an
+//! O(bytes) memcpy of the params/optimizer-state view, nothing else —
+//! and hands it to the [`AsyncSaver`]'s dedicated thread, which pays for
+//! serialization, CRC-32 and disk entirely off the step loop.  Because
+//! the capture is taken between steps and never mutated afterwards, the
+//! bytes an async save writes are **bit-identical** to what a
+//! synchronous [`format::save_sharded`] of the same step would have
+//! written (tested here and end-to-end in `crate::train`).
+//!
+//! Two guarantees the trainer leans on:
+//!
+//! * **join-on-exit** — [`AsyncSaver::finish`] closes the queue, drains
+//!   every pending save and surfaces the first I/O error; dropping the
+//!   saver without calling `finish` still joins the thread (the Drop
+//!   guard), so a panicking run can never leak a half-written snapshot
+//!   *and* keep running past it.
+//! * **in-flight registry** — every enqueued path stays registered until
+//!   its save has fully committed (final rename done), and
+//!   [`super::prune_snapshots_guarded`] refuses to delete registered
+//!   paths, so retention can never race a save it is about to expose.
+
+use super::format::{self, TrainCheckpoint};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One queued save: where, what, and how many v2 shards (≤ 1 = v1 file).
+struct SaveJob {
+    path: PathBuf,
+    ck: TrainCheckpoint,
+    shards: usize,
+}
+
+/// Accumulated outcome of every save a saver performed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SaveTotals {
+    /// snapshots fully committed to disk
+    pub snapshots: usize,
+    /// bytes written across them
+    pub bytes: u64,
+    /// wall seconds spent writing (saver-thread time, not step-loop time)
+    pub secs: f64,
+}
+
+/// A dedicated checkpoint-writer thread with a bounded lifecycle:
+/// [`spawn`](Self::spawn) → [`enqueue`](Self::enqueue)× →
+/// [`finish`](Self::finish).
+pub struct AsyncSaver {
+    tx: Option<Sender<SaveJob>>,
+    join: Option<JoinHandle<Result<SaveTotals>>>,
+    in_flight: Arc<Mutex<HashSet<PathBuf>>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // a poisoned registry only means a saver-thread panic mid-save; the
+    // set itself is still coherent (inserts/removes are atomic under it)
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl AsyncSaver {
+    /// Start the saver thread (idle until the first [`enqueue`]).
+    ///
+    /// [`enqueue`]: Self::enqueue
+    pub fn spawn() -> Self {
+        let (tx, rx) = channel::<SaveJob>();
+        let in_flight: Arc<Mutex<HashSet<PathBuf>>> = Arc::default();
+        let registry = Arc::clone(&in_flight);
+        let join = std::thread::Builder::new()
+            .name("ckpt-saver".into())
+            .spawn(move || {
+                let mut totals = SaveTotals::default();
+                let mut first_err: Option<anyhow::Error> = None;
+                while let Ok(job) = rx.recv() {
+                    let res = format::save_sharded(&job.path, &job.ck, job.shards)
+                        .with_context(|| {
+                            format!("background save of {:?}", job.path)
+                        });
+                    // deregister only after the final rename: prune must
+                    // keep its hands off until the snapshot is committed
+                    lock(&registry).remove(&job.path);
+                    match res {
+                        Ok(io) => {
+                            totals.snapshots += 1;
+                            totals.bytes += io.bytes;
+                            totals.secs += io.secs;
+                        }
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
+                match first_err {
+                    Some(e) => Err(e),
+                    None => Ok(totals),
+                }
+            })
+            .expect("spawning the ckpt-saver thread");
+        Self { tx: Some(tx), join: Some(join), in_flight }
+    }
+
+    /// Queue one snapshot.  Registers `path` as in-flight *before* the
+    /// job is visible to the saver thread, so a prune between enqueue and
+    /// write cannot delete the predecessor it is about to replace — or
+    /// the snapshot itself once it lands.
+    pub fn enqueue(&self, path: PathBuf, ck: TrainCheckpoint, shards: usize) {
+        lock(&self.in_flight).insert(path.clone());
+        if let Some(tx) = &self.tx {
+            // a send error means the saver thread already exited (it only
+            // does so on channel close, so this is unreachable in
+            // practice); the failure surfaces at finish() via join
+            let _ = tx.send(SaveJob { path, ck, shards });
+        }
+    }
+
+    /// Snapshot of the in-flight registry — feed it to
+    /// [`super::prune_snapshots_guarded`] on every retention pass.
+    pub fn in_flight(&self) -> HashSet<PathBuf> {
+        lock(&self.in_flight).clone()
+    }
+
+    /// Queued-or-writing save count (0 ⇒ every enqueued snapshot is on
+    /// disk).
+    pub fn pending(&self) -> usize {
+        lock(&self.in_flight).len()
+    }
+
+    /// Close the queue, drain every pending save, join the thread and
+    /// return the accumulated totals — or the first save error.  This is
+    /// the join-on-exit guard the trainer calls before reporting a run
+    /// complete.
+    pub fn finish(mut self) -> Result<SaveTotals> {
+        self.tx.take(); // close the channel: the worker drains then exits
+        let join = self.join.take().expect("finish called once");
+        join.join()
+            .map_err(|_| anyhow!("the ckpt-saver thread panicked"))?
+    }
+}
+
+impl Drop for AsyncSaver {
+    /// Last-resort join (e.g. the run errored out mid-loop): still drain
+    /// the queue so no snapshot is left half-written, but swallow the
+    /// outcome — an error path is already unwinding.
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::format::tests::sample_ckpt;
+    use super::super::{load, prune_snapshots_guarded, snapshot_path};
+    use super::*;
+
+    #[test]
+    fn async_saves_commit_and_match_sync_bytes() {
+        let dir = std::env::temp_dir().join("sbck_async_saver_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample_ckpt();
+        let saver = AsyncSaver::spawn();
+        saver.enqueue(snapshot_path(&dir, 1), ck.clone(), 1); // v1
+        saver.enqueue(snapshot_path(&dir, 2), ck.clone(), 3); // v2
+        saver.enqueue(snapshot_path(&dir, 3), ck.clone(), 3);
+        let totals = saver.finish().unwrap();
+        assert_eq!(totals.snapshots, 3);
+        assert!(totals.bytes > 0 && totals.secs >= 0.0);
+
+        // every snapshot is committed, loadable, and bit-identical to the
+        // synchronous save of the same capture
+        let sync_v1 = dir.join("sync1.sbck");
+        format::save(&sync_v1, &ck).unwrap();
+        assert_eq!(
+            std::fs::read(snapshot_path(&dir, 1)).unwrap(),
+            std::fs::read(&sync_v1).unwrap(),
+            "async v1 bytes must equal the sync save"
+        );
+        let (a, _) = load(&snapshot_path(&dir, 2)).unwrap();
+        assert_eq!(a.params, ck.params);
+        assert_eq!(a.opt, ck.opt);
+        let sync_v2 = dir.join("sync2.sbck");
+        format::save_sharded(&sync_v2, &ck, 3).unwrap();
+        for s in 0..3 {
+            assert_eq!(
+                std::fs::read(snapshot_path(&dir, 2).join(format::shard_filename(s)))
+                    .unwrap(),
+                std::fs::read(sync_v2.join(format::shard_filename(s))).unwrap(),
+                "async shard {s} bytes must equal the sync save"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn drop_without_finish_still_drains_the_queue() {
+        let dir = std::env::temp_dir().join("sbck_async_drop_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample_ckpt();
+        {
+            let saver = AsyncSaver::spawn();
+            for step in 1..=4u64 {
+                saver.enqueue(snapshot_path(&dir, step), ck.clone(), 2);
+            }
+            // dropped here: the guard must join, not abandon the queue
+        }
+        for step in 1..=4u64 {
+            load(&snapshot_path(&dir, step)).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn finish_surfaces_the_first_save_error() {
+        let ck = sample_ckpt();
+        let saver = AsyncSaver::spawn();
+        // an unwritable destination: the parent is a *file*
+        let junk = std::env::temp_dir().join("sbck_async_err_test_file");
+        std::fs::write(&junk, b"x").unwrap();
+        saver.enqueue(junk.join("ckpt-00000001.sbck"), ck, 2);
+        let err = saver.finish().unwrap_err().to_string();
+        assert!(err.contains("background save"), "{err}");
+        std::fs::remove_file(&junk).ok();
+    }
+
+    /// The registry window covers enqueue → committed: a prune issued
+    /// while a save is queued can never delete that snapshot's path.
+    #[test]
+    fn in_flight_registry_guards_prune_until_commit() {
+        let dir = std::env::temp_dir().join("sbck_async_prune_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample_ckpt();
+        let saver = AsyncSaver::spawn();
+        let path = snapshot_path(&dir, 5);
+        saver.enqueue(path.clone(), ck, 2);
+        // regardless of whether the save already landed, the guarded
+        // prune consults the registry snapshot taken *now*
+        let guard = saver.in_flight();
+        assert!(guard.is_empty() || guard.contains(&path));
+        assert_eq!(prune_snapshots_guarded(&dir, 1, &guard), 0);
+        saver.finish().unwrap();
+        assert!(path.exists(), "the guarded snapshot must survive");
+        load(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,8 +1,10 @@
-//! The on-disk checkpoint format (version 1).
+//! The on-disk checkpoint formats.
+//!
+//! **Version 1 — single file** (`ckpt-<step>.sbck`):
 //!
 //! ```text
 //! bytes 0..4   magic  b"SBCK"
-//! bytes 4..8   format version, u32 LE  (currently 1)
+//! bytes 4..8   format version, u32 LE  (1)
 //! bytes 8..16  manifest length M, u64 LE
 //! bytes 16..16+M  JSON manifest (util::json writer; human-inspectable)
 //! then         raw tensor blobs: little-endian f32, contiguous, at the
@@ -10,17 +12,46 @@
 //!              each CRC-32-checked on load
 //! ```
 //!
-//! Blob order: the model parameters in `ClipTrainModel::collect_params`
-//! layout order, then one run of per-tensor buffers per optimizer slot
-//! (`opt.<slot>.<tensor>`).  Exactness rules: full-range integers (seeds,
-//! RNG words, step counters) are serialized as decimal *strings* — JSON
-//! numbers are f64 and silently lose u64 precision; scalar f32 state the
-//! resume math depends on (data gain, Box–Muller spare, hyper floats) is
-//! serialized twice, display value for humans plus `*_bits` (the IEEE bit
-//! pattern) for exact reload.
+//! **Version 2 — manifest-of-shards** (`ckpt-<step>.sbck/` is a
+//! *directory*):
 //!
-//! Saves write `<path>.tmp` then rename, so an interrupted snapshot never
-//! corrupts an existing file.
+//! ```text
+//! ckpt-<step>.sbck/
+//!   shard-000.sbsh     contiguous LE-f32 blobs of its tensor group
+//!   shard-001.sbsh     ...
+//!   MANIFEST.sbck      magic + version 2 + manifest length + JSON
+//! ```
+//!
+//! The v2 manifest carries a `shards` array (file name, byte length,
+//! CRC-32 of the whole shard file) and per-tensor `(shard, offset)`
+//! coordinates.  Shards are written and read **in parallel**
+//! ([`crate::util::threads::par_try_map`]) — the streaming path a
+//! ViT-Huge-sized snapshot needs so saves/loads scale with spindle and
+//! core count instead of a single pass.
+//!
+//! Commit protocol (v2): shards are written first, each through its own
+//! `*.tmp` + rename; the root manifest is written **last** (also
+//! temp+rename), and the whole staging directory is renamed into place
+//! only after that.  A reader therefore never sees a manifest that
+//! promises shards which were not fully written by the producer — and a
+//! *non-atomic copy* of a snapshot directory (e.g. `cp -r` into a watch
+//! directory) is detected by [`peek`]'s per-shard size check
+//! ([`CkptPeek::is_complete`]), generalizing the v1 blob-size retry.
+//!
+//! Blob order (both versions): the model parameters in
+//! `ClipTrainModel::collect_params` layout order, then one run of
+//! per-tensor buffers per optimizer slot (`opt.<slot>.<tensor>`).
+//! Exactness rules: full-range integers (seeds, RNG words, step counters)
+//! are serialized as decimal *strings* — JSON numbers are f64 and
+//! silently lose u64 precision; scalar f32 state the resume math depends
+//! on (data gain, Box–Muller spare, hyper floats) is serialized twice,
+//! display value for humans plus `*_bits` (the IEEE bit pattern) for
+//! exact reload.
+//!
+//! The two formats hold the same bytes per tensor: a v2 snapshot of a
+//! [`TrainCheckpoint`] loads bit-identically to the v1 file of the same
+//! checkpoint (tested below), so every consumer — resume, serve boot,
+//! standby promotion, `ckpt diff` — accepts either interchangeably.
 
 use crate::config::{OptimizerKind, TrainHyper};
 use crate::data::{DataCursor, Shift};
@@ -29,14 +60,26 @@ use crate::optim::OptimizerState;
 use crate::serve::EncoderConfig;
 use crate::util::crc32::crc32;
 use crate::util::json::{self, ObjWriter, Value};
+use crate::util::threads::{par_map, par_try_map};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 use std::time::Instant;
 
-/// File magic: the first four bytes of every checkpoint.
+/// File magic: the first four bytes of every checkpoint (and of a v2
+/// snapshot directory's root manifest).
 pub const MAGIC: &[u8; 4] = b"SBCK";
-/// On-disk format version this build writes and reads.
+/// Single-file format version.
 pub const FORMAT_VERSION: u32 = 1;
+/// Manifest-of-shards format version (directory snapshots).
+pub const FORMAT_VERSION_V2: u32 = 2;
+/// Root-manifest filename inside a v2 snapshot directory.  Committed
+/// last, so its presence is the snapshot's producer-side commit marker.
+pub const MANIFEST_FILE: &str = "MANIFEST.sbck";
+
+/// Canonical shard filename inside a v2 snapshot directory.
+pub fn shard_filename(index: usize) -> String {
+    format!("shard-{index:03}.sbsh")
+}
 
 /// Everything a resumed run needs to continue bit-identically (see the
 /// module docs of [`crate::ckpt`] for the inventory).
@@ -128,7 +171,16 @@ fn read_str<'a>(v: &'a Value, key: &str) -> Result<&'a str> {
         .ok_or_else(|| anyhow!("manifest missing {key}"))
 }
 
-fn manifest_json(ck: &TrainCheckpoint, blobs: &[(String, usize, u64, u32)]) -> String {
+/// The manifest sections shared by both on-disk versions, pre-rendered.
+struct CommonSections {
+    model: String,
+    hyper: String,
+    shifts: String,
+    data: String,
+    opt: String,
+}
+
+fn common_sections(ck: &TrainCheckpoint) -> CommonSections {
     let e = &ck.encoder;
     let mut model = ObjWriter::new();
     model
@@ -192,31 +244,40 @@ fn manifest_json(ck: &TrainCheckpoint, blobs: &[(String, usize, u64, u32)]) -> S
         ck.opt.slots.iter().map(|(label, _)| json::quote(label)).collect();
     opt.field_raw("slots", &format!("[{}]", slots.join(",")));
 
-    let tensors: Vec<String> = blobs
-        .iter()
-        .map(|(name, len, offset, crc)| {
-            let mut w = ObjWriter::new();
-            w.field_str("name", name)
-                .field_u64("len", *len as u64)
-                .field_u64("offset", *offset)
-                .field_u64("crc", *crc as u64);
-            w.finish()
-        })
-        .collect();
+    CommonSections {
+        model: model.finish(),
+        hyper: hyper.finish(),
+        shifts: format!("[{}]", shifts.join(",")),
+        data: data.finish(),
+        opt: opt.finish(),
+    }
+}
 
+/// Assemble a manifest document: the common sections plus the
+/// version-specific blob index (`tensors_json`, and for v2 `shards_json`).
+fn manifest_json(
+    ck: &TrainCheckpoint,
+    version: u32,
+    tensors_json: &str,
+    shards_json: Option<&str>,
+) -> String {
+    let c = common_sections(ck);
     let mut top = ObjWriter::new();
     top.field_str("format", "switchback-ckpt")
-        .field_u64("version", FORMAT_VERSION as u64)
+        .field_u64("version", version as u64)
         .field_u64("step", ck.step)
         .field_u64("batch", ck.batch as u64)
         .field_u64("grad_shards", ck.grad_shards as u64)
-        .field_raw("model", &model.finish())
-        .field_raw("hyper", &hyper.finish())
-        .field_raw("shifts", &format!("[{}]", shifts.join(",")))
-        .field_raw("data", &data.finish())
-        .field_raw("opt", &opt.finish())
-        .field_u64("n_params", ck.params.len() as u64)
-        .field_raw("tensors", &format!("[{}]", tensors.join(",")));
+        .field_raw("model", &c.model)
+        .field_raw("hyper", &c.hyper)
+        .field_raw("shifts", &c.shifts)
+        .field_raw("data", &c.data)
+        .field_raw("opt", &c.opt)
+        .field_u64("n_params", ck.params.len() as u64);
+    if let Some(s) = shards_json {
+        top.field_raw("shards", s);
+    }
+    top.field_raw("tensors", tensors_json);
     top.finish()
 }
 
@@ -235,16 +296,22 @@ fn le_bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
         .collect()
 }
 
-/// Validate the 16-byte header; returns the manifest length in bytes.
-fn parse_header(head: &[u8; 16], path: &Path) -> Result<usize> {
+/// Validate the 16-byte header; returns `(version, manifest length)`.
+/// Accepts both known versions — the caller decides which one its
+/// container (raw file vs `MANIFEST.sbck`) permits.
+fn parse_header(head: &[u8; 16], path: &Path) -> Result<(u32, usize)> {
     if &head[0..4] != MAGIC {
         bail!("{path:?} is not a switchback checkpoint (bad magic)");
     }
     let version = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
-    if version != FORMAT_VERSION {
-        bail!("{path:?} has format version {version}, this build reads {FORMAT_VERSION}");
+    if version != FORMAT_VERSION && version != FORMAT_VERSION_V2 {
+        bail!(
+            "{path:?} has format version {version}, this build reads \
+             {FORMAT_VERSION} and {FORMAT_VERSION_V2}"
+        );
     }
-    Ok(u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize)
+    let mlen = u64::from_le_bytes(head[8..16].try_into().expect("16-byte header"));
+    Ok((version, mlen as usize))
 }
 
 /// Rebuild the [`EncoderConfig`] echo from a parsed manifest.
@@ -267,213 +334,24 @@ fn encoder_from_manifest(m: &Value) -> Result<EncoderConfig> {
     })
 }
 
-/// What [`peek`] reads out of a checkpoint without touching its tensor
-/// blobs: enough for a watcher to decide whether a snapshot is newer and
-/// shape-compatible before paying for the full CRC-checked load.
-#[derive(Debug, Clone)]
-pub struct CkptPeek {
-    /// training step the snapshot was taken after (the freshness key)
-    pub step: u64,
-    /// model shape + precision kind + init seed echo
-    pub encoder: EncoderConfig,
-    /// model tensors in the file (excluding optimizer slots)
-    pub n_params: usize,
-    /// manifest length in bytes (all that was read past the header)
-    pub manifest_bytes: usize,
-    /// bytes the manifest says a complete file holds (header + manifest
-    /// + every tensor blob)
-    pub expected_bytes: u64,
-    /// bytes actually on disk right now — `< expected_bytes` means the
-    /// blobs are still being written (e.g. a non-atomic copy in flight):
-    /// a full [`load`] would fail *now* but may succeed later
-    pub file_bytes: u64,
+/// Everything a manifest describes apart from the tensor bytes — shared
+/// by the v1 and v2 load paths.
+struct ManifestCore {
+    step: u64,
+    encoder: EncoderConfig,
+    hyper: TrainHyper,
+    shifts: Vec<Shift>,
+    batch: usize,
+    grad_shards: usize,
+    data: DataCursor,
+    opt_name: String,
+    opt_t: u64,
+    slot_labels: Vec<String>,
+    n_params: usize,
 }
 
-impl CkptPeek {
-    /// Does the on-disk size match what the manifest promises?  (Content
-    /// integrity still needs [`load`]'s CRC pass.)
-    pub fn is_complete(&self) -> bool {
-        self.file_bytes >= self.expected_bytes
-    }
-}
-
-/// Read a checkpoint's header + JSON manifest **without loading the
-/// tensor blobs** — a few KiB of I/O regardless of model size.  The
-/// serve-side standby watcher ([`crate::serve::standby`]) uses this to
-/// pick the newest compatible snapshot (newest-manifest-wins) before
-/// committing to a full [`load`].  Integrity of the blobs is *not*
-/// checked here; that is `load`'s job.
-pub fn peek(path: &Path) -> Result<CkptPeek> {
-    use std::io::Read;
-    let mut f =
-        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
-    let mut head = [0u8; 16];
-    f.read_exact(&mut head)
-        .map_err(|_| anyhow!("{path:?} is truncated inside the header"))?;
-    let mlen = parse_header(&head, path)?;
-    // the length field is untrusted bytes: bound it by the file size
-    // before allocating, or a torn header could ask for a huge buffer
-    let file_len = f
-        .metadata()
-        .with_context(|| format!("stat {path:?}"))?
-        .len();
-    if (mlen as u64).saturating_add(16) > file_len {
-        bail!("{path:?} is truncated inside the manifest");
-    }
-    let mut mbytes = vec![0u8; mlen];
-    f.read_exact(&mut mbytes)
-        .map_err(|_| anyhow!("{path:?} is truncated inside the manifest"))?;
-    let manifest = std::str::from_utf8(&mbytes)
-        .map_err(|_| anyhow!("manifest is not UTF-8"))?;
-    let m = json::parse(manifest).map_err(|e| anyhow!("bad manifest JSON: {e}"))?;
-    // end of the furthest blob per the manifest → the complete file size
-    let blob_end: u64 = m
-        .get("tensors")
-        .and_then(Value::as_arr)
-        .map(|ts| {
-            ts.iter()
-                .filter_map(|t| {
-                    let off = t.get("offset").and_then(Value::as_f64)? as u64;
-                    let len = t.get("len").and_then(Value::as_f64)? as u64;
-                    Some(off.saturating_add(len.saturating_mul(4)))
-                })
-                .max()
-                .unwrap_or(0)
-        })
-        .unwrap_or(0);
-    Ok(CkptPeek {
-        step: read_u64_num(&m, "step")?,
-        encoder: encoder_from_manifest(&m)?,
-        n_params: read_usize(&m, "n_params")?,
-        manifest_bytes: mlen,
-        expected_bytes: (16 + mlen as u64).saturating_add(blob_end),
-        file_bytes: file_len,
-    })
-}
-
-/// Serialize `ck` to `path` (atomic: temp file + rename).  Returns bytes
-/// written and wall time (save MB/s in BENCH_ckpt.json).
-///
-/// Round trip (every blob CRC-32-checked on [`load`]; [`peek`] reads the
-/// manifest without touching the blobs):
-///
-/// ```
-/// use switchback::ckpt::{load, peek, save, TrainCheckpoint};
-/// use switchback::config::TrainHyper;
-/// use switchback::data::DataCursor;
-/// use switchback::nn::LinearKind;
-/// use switchback::optim::OptimizerState;
-/// use switchback::serve::EncoderConfig;
-///
-/// let ck = TrainCheckpoint {
-///     step: 3,
-///     encoder: EncoderConfig {
-///         kind: LinearKind::SwitchBack,
-///         dim: 4, heads: 2, blocks: 1, embed_dim: 2,
-///         patches: 2, patch_dim: 3, text_seq: 2, vocab: 8, seed: 7,
-///     },
-///     hyper: TrainHyper::preset(4),
-///     shifts: vec![],
-///     batch: 2,
-///     grad_shards: 1,
-///     param_names: vec!["w".into()],
-///     params: vec![vec![1.0, -2.5]],
-///     opt: OptimizerState {
-///         name: "lion".into(),
-///         t: 3,
-///         slots: vec![("m".into(), vec![vec![0.5, 0.25]])],
-///     },
-///     data: DataCursor {
-///         step: 3, gain: 1.0, mapping: vec![0, 1],
-///         rng: [1, 2, 3, 4], rng_spare: None,
-///     },
-/// };
-/// let path = std::env::temp_dir().join("sbck_doctest_roundtrip.sbck");
-/// save(&path, &ck)?;
-/// let (back, _io) = load(&path)?; // fails closed on any CRC mismatch
-/// assert_eq!(back.params, ck.params);
-/// assert_eq!(back.opt, ck.opt);
-/// assert_eq!(peek(&path)?.step, 3); // manifest only, no tensor load
-/// # std::fs::remove_file(&path).ok();
-/// # Ok::<(), anyhow::Error>(())
-/// ```
-pub fn save(path: &Path, ck: &TrainCheckpoint) -> Result<IoStats> {
-    if ck.param_names.len() != ck.params.len() {
-        bail!(
-            "param_names ({}) and params ({}) disagree",
-            ck.param_names.len(),
-            ck.params.len()
-        );
-    }
-    for (label, bufs) in &ck.opt.slots {
-        if bufs.len() != ck.params.len() {
-            bail!("opt slot {label:?} has {} tensors, model has {}", bufs.len(), ck.params.len());
-        }
-    }
-    let t0 = Instant::now();
-    // encode every blob once; offsets/crcs feed the manifest, bytes the file
-    let mut blob_meta: Vec<(String, usize, u64, u32)> = vec![];
-    let mut blob_bytes: Vec<Vec<u8>> = vec![];
-    let mut offset = 0u64;
-    let mut push = |name: String, data: &[f32], meta: &mut Vec<_>, bytes: &mut Vec<Vec<u8>>| {
-        let b = f32s_to_le_bytes(data);
-        meta.push((name, data.len(), offset, crc32(&b)));
-        offset += b.len() as u64;
-        bytes.push(b);
-    };
-    for (name, p) in ck.param_names.iter().zip(&ck.params) {
-        push(name.clone(), p, &mut blob_meta, &mut blob_bytes);
-    }
-    for (label, bufs) in &ck.opt.slots {
-        for (name, b) in ck.param_names.iter().zip(bufs) {
-            push(format!("opt.{label}.{name}"), b, &mut blob_meta, &mut blob_bytes);
-        }
-    }
-    let manifest = manifest_json(ck, &blob_meta);
-    debug_assert!(json::parse(&manifest).is_ok(), "invalid ckpt manifest");
-
-    let mut out: Vec<u8> =
-        Vec::with_capacity(16 + manifest.len() + offset as usize);
-    out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
-    out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
-    out.extend_from_slice(manifest.as_bytes());
-    for b in &blob_bytes {
-        out.extend_from_slice(b);
-    }
-    if let Some(dir) = path.parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)
-                .with_context(|| format!("creating {dir:?}"))?;
-        }
-    }
-    let tmp = path.with_extension("sbck.tmp");
-    std::fs::write(&tmp, &out).with_context(|| format!("writing {tmp:?}"))?;
-    std::fs::rename(&tmp, path).with_context(|| format!("renaming to {path:?}"))?;
-    Ok(IoStats { bytes: out.len() as u64, secs: t0.elapsed().as_secs_f64() })
-}
-
-/// Deserialize and integrity-check a checkpoint.  Fails closed on a bad
-/// magic/version, a truncated file, or any blob whose CRC-32 disagrees
-/// with the manifest.
-pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
-    let t0 = Instant::now();
-    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
-    let bytes = raw.len() as u64;
-    if raw.len() < 16 {
-        bail!("{path:?} is not a switchback checkpoint (bad magic)");
-    }
-    let mlen = parse_header(raw[0..16].try_into().unwrap(), path)?;
-    // untrusted length field: checked add, or a torn header whose length
-    // wraps usize would index past (or before) the buffer
-    let blob_base = match 16usize.checked_add(mlen) {
-        Some(b) if b <= raw.len() => b,
-        _ => bail!("{path:?} is truncated inside the manifest"),
-    };
-    let manifest = std::str::from_utf8(&raw[16..blob_base])
-        .map_err(|_| anyhow!("manifest is not UTF-8"))?;
-    let m = json::parse(manifest).map_err(|e| anyhow!("bad manifest JSON: {e}"))?;
-    let encoder = encoder_from_manifest(&m)?;
+fn manifest_core(m: &Value) -> Result<ManifestCore> {
+    let encoder = encoder_from_manifest(m)?;
 
     let hv = m.get("hyper").ok_or_else(|| anyhow!("manifest missing hyper"))?;
     let opt_s = read_str(hv, "optimizer")?;
@@ -545,12 +423,552 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
         .map(|s| s.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad slot label")))
         .collect::<Result<_>>()?;
 
-    let n_params = read_usize(&m, "n_params")?;
+    Ok(ManifestCore {
+        step: read_u64_num(m, "step")?,
+        encoder,
+        hyper,
+        shifts,
+        batch: read_usize(m, "batch")?,
+        grad_shards: read_usize(m, "grad_shards")?,
+        data,
+        opt_name,
+        opt_t,
+        slot_labels,
+        n_params: read_usize(m, "n_params")?,
+    })
+}
+
+/// Rebuild a [`TrainCheckpoint`] from a decoded core + the tensor blobs
+/// in manifest order (params first, then one run per optimizer slot).
+fn assemble(core: ManifestCore, names: Vec<String>, mut blobs: Vec<Vec<f32>>) -> TrainCheckpoint {
+    let n = core.n_params;
+    let params: Vec<Vec<f32>> = blobs.drain(..n).collect();
+    let param_names: Vec<String> = names[..n].to_vec();
+    let mut slots = Vec::with_capacity(core.slot_labels.len());
+    for label in core.slot_labels {
+        let bufs: Vec<Vec<f32>> = blobs.drain(..n).collect();
+        slots.push((label, bufs));
+    }
+    TrainCheckpoint {
+        step: core.step,
+        encoder: core.encoder,
+        hyper: core.hyper,
+        shifts: core.shifts,
+        batch: core.batch,
+        grad_shards: core.grad_shards,
+        param_names,
+        params,
+        opt: OptimizerState { name: core.opt_name, t: core.opt_t, slots },
+        data: core.data,
+    }
+}
+
+/// What [`peek`] reads out of a checkpoint without touching its tensor
+/// blobs: enough for a watcher to decide whether a snapshot is newer and
+/// shape-compatible before paying for the full CRC-checked load.
+#[derive(Debug, Clone)]
+pub struct CkptPeek {
+    /// training step the snapshot was taken after (the freshness key)
+    pub step: u64,
+    /// model shape + precision kind + init seed echo
+    pub encoder: EncoderConfig,
+    /// model tensors in the file (excluding optimizer slots)
+    pub n_params: usize,
+    /// manifest length in bytes (all that was read past the header)
+    pub manifest_bytes: usize,
+    /// bytes a complete snapshot holds (header + manifest + every tensor
+    /// blob; for v2, header + manifest + every shard file)
+    pub expected_bytes: u64,
+    /// bytes actually on disk right now — `< expected_bytes` means the
+    /// blobs are still being written (e.g. a non-atomic copy in flight):
+    /// a full [`load`] would fail *now* but may succeed later
+    pub file_bytes: u64,
+    /// on-disk format version (1 = single file, 2 = sharded directory)
+    pub version: u32,
+    /// shard-file count (0 for a v1 single-file snapshot)
+    pub shards: usize,
+    /// completeness verdict: v1 compares file size against the manifest's
+    /// blob extent; v2 requires every shard file to exist at (at least)
+    /// its declared size
+    complete: bool,
+}
+
+impl CkptPeek {
+    /// Does the on-disk state match what the manifest promises?  (Content
+    /// integrity still needs [`load`]'s CRC pass.)  `false` usually means
+    /// a non-atomic copy is still in flight — retry later.
+    pub fn is_complete(&self) -> bool {
+        self.complete
+    }
+}
+
+/// Read a checkpoint's header + JSON manifest **without loading the
+/// tensor blobs** — a few KiB of I/O regardless of model size.  The
+/// serve-side standby watcher ([`crate::serve::standby`]) uses this to
+/// pick the newest compatible snapshot (newest-manifest-wins) before
+/// committing to a full [`load`].  Integrity of the blobs is *not*
+/// checked here; that is `load`'s job.
+///
+/// Dispatches on the path: a directory is peeked through its
+/// [`MANIFEST_FILE`] (v2), a file through its own header (v1).  For v2
+/// the shard files are only `stat`ed, never read.
+pub fn peek(path: &Path) -> Result<CkptPeek> {
+    if path.is_dir() {
+        return peek_dir(path);
+    }
+    use std::io::Read;
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut head = [0u8; 16];
+    f.read_exact(&mut head)
+        .map_err(|_| anyhow!("{path:?} is truncated inside the header"))?;
+    let (version, mlen) = parse_header(&head, path)?;
+    if version != FORMAT_VERSION {
+        bail!(
+            "{path:?} is a v{version} shard manifest — peek the snapshot \
+             directory that contains it"
+        );
+    }
+    // the length field is untrusted bytes: bound it by the file size
+    // before allocating, or a torn header could ask for a huge buffer
+    let file_len = f
+        .metadata()
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
+    if (mlen as u64).saturating_add(16) > file_len {
+        bail!("{path:?} is truncated inside the manifest");
+    }
+    let mut mbytes = vec![0u8; mlen];
+    f.read_exact(&mut mbytes)
+        .map_err(|_| anyhow!("{path:?} is truncated inside the manifest"))?;
+    let manifest = std::str::from_utf8(&mbytes)
+        .map_err(|_| anyhow!("manifest is not UTF-8"))?;
+    let m = json::parse(manifest).map_err(|e| anyhow!("bad manifest JSON: {e}"))?;
+    // end of the furthest blob per the manifest → the complete file size
+    let blob_end: u64 = m
+        .get("tensors")
+        .and_then(Value::as_arr)
+        .map(|ts| {
+            ts.iter()
+                .filter_map(|t| {
+                    let off = t.get("offset").and_then(Value::as_f64)? as u64;
+                    let len = t.get("len").and_then(Value::as_f64)? as u64;
+                    Some(off.saturating_add(len.saturating_mul(4)))
+                })
+                .max()
+                .unwrap_or(0)
+        })
+        .unwrap_or(0);
+    let expected_bytes = (16 + mlen as u64).saturating_add(blob_end);
+    Ok(CkptPeek {
+        step: read_u64_num(&m, "step")?,
+        encoder: encoder_from_manifest(&m)?,
+        n_params: read_usize(&m, "n_params")?,
+        manifest_bytes: mlen,
+        expected_bytes,
+        file_bytes: file_len,
+        version: FORMAT_VERSION,
+        shards: 0,
+        complete: file_len >= expected_bytes,
+    })
+}
+
+/// The `shards` array of a v2 manifest: `(file, bytes, crc32)` per shard.
+fn shard_list(m: &Value) -> Result<Vec<(String, u64, u32)>> {
+    m.get("shards")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing shards"))?
+        .iter()
+        .map(|s| {
+            Ok((
+                read_str(s, "file")?.to_string(),
+                read_u64_num(s, "bytes")?,
+                read_u64_num(s, "crc")? as u32,
+            ))
+        })
+        .collect()
+}
+
+/// Read a v2 snapshot directory's root manifest (header-validated,
+/// length-bounded).  Returns the parsed document and the manifest byte
+/// length.
+fn read_dir_manifest(dir: &Path) -> Result<(Value, usize, u64)> {
+    let mpath = dir.join(MANIFEST_FILE);
+    let raw = std::fs::read(&mpath).with_context(|| format!("reading {mpath:?}"))?;
+    if raw.len() < 16 {
+        bail!("{mpath:?} is not a switchback checkpoint (bad magic)");
+    }
+    let head: &[u8; 16] = raw[0..16].try_into().expect("length checked above");
+    let (version, mlen) = parse_header(head, &mpath)?;
+    if version != FORMAT_VERSION_V2 {
+        bail!(
+            "{mpath:?} has format version {version}, a snapshot directory's \
+             root manifest must be v{FORMAT_VERSION_V2}"
+        );
+    }
+    let blob_base = match 16usize.checked_add(mlen) {
+        Some(b) if b <= raw.len() => b,
+        _ => bail!("{mpath:?} is truncated inside the manifest"),
+    };
+    let manifest = std::str::from_utf8(&raw[16..blob_base])
+        .map_err(|_| anyhow!("manifest is not UTF-8"))?;
+    let m = json::parse(manifest).map_err(|e| anyhow!("bad manifest JSON: {e}"))?;
+    Ok((m, mlen, raw.len() as u64))
+}
+
+fn peek_dir(dir: &Path) -> Result<CkptPeek> {
+    let (m, mlen, manifest_file_bytes) = read_dir_manifest(dir)?;
+    let shards = shard_list(&m)?;
+    let mut expected_bytes = 16 + mlen as u64;
+    let mut file_bytes = manifest_file_bytes;
+    let mut complete = true;
+    for (file, bytes, _crc) in &shards {
+        expected_bytes = expected_bytes.saturating_add(*bytes);
+        match std::fs::metadata(dir.join(file)) {
+            // a shard shorter than the manifest promises is a copy still
+            // in flight; longer would CRC-fail, but is "present"
+            Ok(md) => {
+                file_bytes += md.len();
+                if md.len() < *bytes {
+                    complete = false;
+                }
+            }
+            Err(_) => complete = false,
+        }
+    }
+    Ok(CkptPeek {
+        step: read_u64_num(&m, "step")?,
+        encoder: encoder_from_manifest(&m)?,
+        n_params: read_usize(&m, "n_params")?,
+        manifest_bytes: mlen,
+        expected_bytes,
+        file_bytes,
+        version: FORMAT_VERSION_V2,
+        shards: shards.len(),
+        complete,
+    })
+}
+
+/// Flat `(name, data)` blob list in the canonical layout order: the model
+/// parameters, then one run of per-tensor buffers per optimizer slot.
+/// Carries the save-side consistency validation shared by both formats.
+fn blob_entries(ck: &TrainCheckpoint) -> Result<Vec<(String, &[f32])>> {
+    if ck.param_names.len() != ck.params.len() {
+        bail!(
+            "param_names ({}) and params ({}) disagree",
+            ck.param_names.len(),
+            ck.params.len()
+        );
+    }
+    for (label, bufs) in &ck.opt.slots {
+        if bufs.len() != ck.params.len() {
+            bail!("opt slot {label:?} has {} tensors, model has {}", bufs.len(), ck.params.len());
+        }
+    }
+    let mut out: Vec<(String, &[f32])> =
+        Vec::with_capacity(ck.params.len() * (1 + ck.opt.slots.len()));
+    for (name, p) in ck.param_names.iter().zip(&ck.params) {
+        out.push((name.clone(), p.as_slice()));
+    }
+    for (label, bufs) in &ck.opt.slots {
+        for (name, b) in ck.param_names.iter().zip(bufs) {
+            out.push((format!("opt.{label}.{name}"), b.as_slice()));
+        }
+    }
+    Ok(out)
+}
+
+/// Contiguous tensor ranges per shard, balanced by byte size — a pure
+/// function of `(sizes, shards)`, so the grouping (and therefore the
+/// on-disk bytes) is deterministic regardless of worker count.  Every
+/// shard gets at least one tensor; the shard count is clamped to the
+/// tensor count.
+fn shard_plan(sizes: &[usize], shards: usize) -> Vec<std::ops::Range<usize>> {
+    let n_t = sizes.len();
+    let n = shards.clamp(1, n_t.max(1));
+    let total: u64 = sizes.iter().map(|&s| s as u64).sum();
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    let mut cum = 0u64;
+    for k in 0..n {
+        let target = total * (k as u64 + 1) / n as u64;
+        let mut end = start;
+        // take tensors until the cumulative size reaches this shard's
+        // boundary, but always at least one, and always leave one per
+        // remaining shard
+        while end < n_t && (cum < target || end == start) && (n_t - end) > (n - k - 1) {
+            cum += sizes[end] as u64;
+            end += 1;
+        }
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Remove whatever is at `p` — file or directory — ignoring "not found".
+pub(crate) fn remove_path(p: &Path) -> Result<()> {
+    let res = if p.is_dir() { std::fs::remove_dir_all(p) } else { std::fs::remove_file(p) };
+    match res {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+        Err(e) => Err(anyhow!("removing {p:?}: {e}")),
+    }
+}
+
+/// Rename `from` into place at `to`.  A plain rename is atomic and is
+/// always tried first (file-over-file overwrites atomically; a fresh
+/// name succeeds outright).  Only when that fails — the target is an
+/// existing *directory* snapshot, which rename cannot replace — is the
+/// old snapshot cleared and the rename retried: the non-atomic window
+/// exists solely when overwriting a same-name directory snapshot, never
+/// for a sibling and never on the common fresh-name path.
+fn rename_over(from: &Path, to: &Path) -> Result<()> {
+    if std::fs::rename(from, to).is_ok() {
+        return Ok(());
+    }
+    remove_path(to)?;
+    std::fs::rename(from, to).with_context(|| format!("renaming to {to:?}"))
+}
+
+fn ensure_parent(path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Serialize `ck` to `path` as a **v1 single file** (atomic: temp file +
+/// rename).  Returns bytes written and wall time (save MB/s in
+/// BENCH_ckpt.json).  For the sharded v2 layout use [`save_sharded`].
+///
+/// Round trip (every blob CRC-32-checked on [`load`]; [`peek`] reads the
+/// manifest without touching the blobs):
+///
+/// ```
+/// use switchback::ckpt::{load, peek, save, TrainCheckpoint};
+/// use switchback::config::TrainHyper;
+/// use switchback::data::DataCursor;
+/// use switchback::nn::LinearKind;
+/// use switchback::optim::OptimizerState;
+/// use switchback::serve::EncoderConfig;
+///
+/// let ck = TrainCheckpoint {
+///     step: 3,
+///     encoder: EncoderConfig {
+///         kind: LinearKind::SwitchBack,
+///         dim: 4, heads: 2, blocks: 1, embed_dim: 2,
+///         patches: 2, patch_dim: 3, text_seq: 2, vocab: 8, seed: 7,
+///     },
+///     hyper: TrainHyper::preset(4),
+///     shifts: vec![],
+///     batch: 2,
+///     grad_shards: 1,
+///     param_names: vec!["w".into()],
+///     params: vec![vec![1.0, -2.5]],
+///     opt: OptimizerState {
+///         name: "lion".into(),
+///         t: 3,
+///         slots: vec![("m".into(), vec![vec![0.5, 0.25]])],
+///     },
+///     data: DataCursor {
+///         step: 3, gain: 1.0, mapping: vec![0, 1],
+///         rng: [1, 2, 3, 4], rng_spare: None,
+///     },
+/// };
+/// let path = std::env::temp_dir().join("sbck_doctest_roundtrip.sbck");
+/// save(&path, &ck)?;
+/// let (back, _io) = load(&path)?; // fails closed on any CRC mismatch
+/// assert_eq!(back.params, ck.params);
+/// assert_eq!(back.opt, ck.opt);
+/// assert_eq!(peek(&path)?.step, 3); // manifest only, no tensor load
+/// # std::fs::remove_file(&path).ok();
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+pub fn save(path: &Path, ck: &TrainCheckpoint) -> Result<IoStats> {
+    let entries = blob_entries(ck)?;
+    let t0 = Instant::now();
+    // encode every blob once; offsets/crcs feed the manifest, bytes the file
+    let mut blob_meta: Vec<(String, usize, u64, u32)> = vec![];
+    let mut blob_bytes: Vec<Vec<u8>> = vec![];
+    let mut offset = 0u64;
+    for (name, data) in &entries {
+        let b = f32s_to_le_bytes(data);
+        blob_meta.push((name.clone(), data.len(), offset, crc32(&b)));
+        offset += b.len() as u64;
+        blob_bytes.push(b);
+    }
+    let tensors: Vec<String> = blob_meta
+        .iter()
+        .map(|(name, len, off, crc)| {
+            let mut w = ObjWriter::new();
+            w.field_str("name", name)
+                .field_u64("len", *len as u64)
+                .field_u64("offset", *off)
+                .field_u64("crc", *crc as u64);
+            w.finish()
+        })
+        .collect();
+    let manifest = manifest_json(
+        ck,
+        FORMAT_VERSION,
+        &format!("[{}]", tensors.join(",")),
+        None,
+    );
+    debug_assert!(json::parse(&manifest).is_ok(), "invalid ckpt manifest");
+
+    let mut out: Vec<u8> =
+        Vec::with_capacity(16 + manifest.len() + offset as usize);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+    out.extend_from_slice(manifest.as_bytes());
+    for b in &blob_bytes {
+        out.extend_from_slice(b);
+    }
+    ensure_parent(path)?;
+    let tmp = path.with_extension("sbck.tmp");
+    remove_path(&tmp)?; // a crashed v2 staging dir may squat on the name
+    std::fs::write(&tmp, &out).with_context(|| format!("writing {tmp:?}"))?;
+    rename_over(&tmp, path)?;
+    Ok(IoStats { bytes: out.len() as u64, secs: t0.elapsed().as_secs_f64() })
+}
+
+/// Serialize `ck` to `path` as a **v2 manifest-of-shards directory**:
+/// tensors are grouped into `shards` balanced-by-bytes blob files,
+/// encoded + CRC'd + written in parallel.  `shards <= 1` falls back to
+/// the v1 single-file [`save`].
+///
+/// Commit protocol: everything lands in a `<path>.tmp` staging directory
+/// — each shard via its own temp+rename, the root [`MANIFEST_FILE`]
+/// *last* — and the staging directory is renamed into place only once
+/// the manifest is down.  An interrupted save therefore never produces a
+/// visible snapshot, complete or otherwise.
+pub fn save_sharded(path: &Path, ck: &TrainCheckpoint, shards: usize) -> Result<IoStats> {
+    if shards <= 1 {
+        return save(path, ck);
+    }
+    let entries = blob_entries(ck)?;
+    let t0 = Instant::now();
+    let sizes: Vec<usize> = entries.iter().map(|(_, d)| d.len() * 4).collect();
+    let plan = shard_plan(&sizes, shards);
+    // encode + CRC every shard in parallel (the compute half of a save)
+    let encoded: Vec<(Vec<u8>, u32)> = par_map(plan.len(), |s| {
+        let mut bytes =
+            Vec::with_capacity(plan[s].clone().map(|t| sizes[t]).sum::<usize>());
+        for (_, data) in &entries[plan[s].clone()] {
+            bytes.extend_from_slice(&f32s_to_le_bytes(data));
+        }
+        let crc = crc32(&bytes);
+        (bytes, crc)
+    });
+
+    // manifest index: per-tensor (shard, offset-within-shard), per-shard
+    // (file, bytes, crc)
+    let mut tensors: Vec<String> = Vec::with_capacity(entries.len());
+    for (s, range) in plan.iter().enumerate() {
+        let mut off = 0u64;
+        for (name, data) in &entries[range.clone()] {
+            let mut w = ObjWriter::new();
+            w.field_str("name", name)
+                .field_u64("len", data.len() as u64)
+                .field_u64("shard", s as u64)
+                .field_u64("offset", off);
+            tensors.push(w.finish());
+            off += (data.len() * 4) as u64;
+        }
+    }
+    let shard_entries: Vec<String> = encoded
+        .iter()
+        .enumerate()
+        .map(|(s, (bytes, crc))| {
+            let mut w = ObjWriter::new();
+            w.field_str("file", &shard_filename(s))
+                .field_u64("bytes", bytes.len() as u64)
+                .field_u64("crc", *crc as u64);
+            w.finish()
+        })
+        .collect();
+    let manifest = manifest_json(
+        ck,
+        FORMAT_VERSION_V2,
+        &format!("[{}]", tensors.join(",")),
+        Some(&format!("[{}]", shard_entries.join(","))),
+    );
+    debug_assert!(json::parse(&manifest).is_ok(), "invalid ckpt manifest");
+
+    ensure_parent(path)?;
+    let staging = path.with_extension("sbck.tmp");
+    remove_path(&staging)?;
+    std::fs::create_dir_all(&staging)
+        .with_context(|| format!("creating {staging:?}"))?;
+    // shards first, in parallel, each atomically (temp + rename)
+    par_try_map(encoded.len(), |s| -> Result<()> {
+        let tmp = staging.join(format!("{}.tmp", shard_filename(s)));
+        let dst = staging.join(shard_filename(s));
+        std::fs::write(&tmp, &encoded[s].0).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &dst).with_context(|| format!("renaming to {dst:?}"))?;
+        Ok(())
+    })?;
+    // the root manifest commits the snapshot — written only after every
+    // shard is fully down
+    let mut head: Vec<u8> = Vec::with_capacity(16 + manifest.len());
+    head.extend_from_slice(MAGIC);
+    head.extend_from_slice(&FORMAT_VERSION_V2.to_le_bytes());
+    head.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+    head.extend_from_slice(manifest.as_bytes());
+    let mtmp = staging.join(format!("{MANIFEST_FILE}.tmp"));
+    std::fs::write(&mtmp, &head).with_context(|| format!("writing {mtmp:?}"))?;
+    std::fs::rename(&mtmp, staging.join(MANIFEST_FILE))
+        .with_context(|| format!("committing {MANIFEST_FILE} in {staging:?}"))?;
+    rename_over(&staging, path)?;
+    let bytes =
+        head.len() as u64 + encoded.iter().map(|(b, _)| b.len() as u64).sum::<u64>();
+    Ok(IoStats { bytes, secs: t0.elapsed().as_secs_f64() })
+}
+
+/// Deserialize and integrity-check a checkpoint — v1 single file or v2
+/// shard directory, dispatched on the path.  Fails closed on a bad
+/// magic/version, a truncated file, a missing/short shard, or any
+/// blob/shard whose CRC-32 disagrees with the manifest.
+pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
+    if path.is_dir() {
+        return load_dir(path);
+    }
+    let t0 = Instant::now();
+    let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let bytes = raw.len() as u64;
+    // fail closed on anything shorter than a header — a 0/8/15-byte junk
+    // file must return Err, never slice out of bounds
+    if raw.len() < 16 {
+        bail!("{path:?} is not a switchback checkpoint (bad magic)");
+    }
+    let head: &[u8; 16] = raw[0..16].try_into().expect("length checked above");
+    let (version, mlen) = parse_header(head, path)?;
+    if version != FORMAT_VERSION {
+        bail!(
+            "{path:?} is a v{version} shard manifest — load the snapshot \
+             directory that contains it"
+        );
+    }
+    // untrusted length field: checked add, or a torn header whose length
+    // wraps usize would index past (or before) the buffer
+    let blob_base = match 16usize.checked_add(mlen) {
+        Some(b) if b <= raw.len() => b,
+        _ => bail!("{path:?} is truncated inside the manifest"),
+    };
+    let manifest = std::str::from_utf8(&raw[16..blob_base])
+        .map_err(|_| anyhow!("manifest is not UTF-8"))?;
+    let m = json::parse(manifest).map_err(|e| anyhow!("bad manifest JSON: {e}"))?;
+    let core = manifest_core(&m)?;
+
     let tensors = m
         .get("tensors")
         .and_then(Value::as_arr)
         .ok_or_else(|| anyhow!("manifest missing tensors"))?;
-    let expected = n_params * (1 + slot_labels.len());
+    let expected = core.n_params * (1 + core.slot_labels.len());
     if tensors.len() != expected {
         bail!("manifest lists {} tensors, expected {expected}", tensors.len());
     }
@@ -562,11 +980,17 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
         let len = read_usize(t, "len")?;
         let off = read_usize(t, "offset")?;
         let crc = read_u64_num(t, "crc")? as u32;
+        // len/offset are untrusted manifest values: checked arithmetic,
+        // or a corrupt manifest could wrap the bounds math and either
+        // panic or slice the wrong bytes instead of failing closed
+        let hi = len
+            .checked_mul(4)
+            .and_then(|b| blob_base.checked_add(off)?.checked_add(b))
+            .filter(|&hi| hi <= raw.len())
+            .ok_or_else(|| {
+                anyhow!("tensor {name:?} extends past end of file (truncated?)")
+            })?;
         let lo = blob_base + off;
-        let hi = lo + len * 4;
-        if hi > raw.len() {
-            bail!("tensor {name:?} extends past end of file (truncated?)");
-        }
         let chunk = &raw[lo..hi];
         let got = crc32(chunk);
         if got != crc {
@@ -579,26 +1003,70 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
         blobs.push(le_bytes_to_f32s(chunk));
     }
 
-    let params: Vec<Vec<f32>> = blobs.drain(..n_params).collect();
-    let param_names: Vec<String> = names[..n_params].to_vec();
-    let mut slots = Vec::with_capacity(slot_labels.len());
-    for label in slot_labels {
-        let bufs: Vec<Vec<f32>> = blobs.drain(..n_params).collect();
-        slots.push((label, bufs));
-    }
+    let ck = assemble(core, names, blobs);
+    Ok((ck, IoStats { bytes, secs: t0.elapsed().as_secs_f64() }))
+}
 
-    let ck = TrainCheckpoint {
-        step: read_u64_num(&m, "step")?,
-        encoder,
-        hyper,
-        shifts,
-        batch: read_usize(&m, "batch")?,
-        grad_shards: read_usize(&m, "grad_shards")?,
-        param_names,
-        params,
-        opt: OptimizerState { name: opt_name, t: opt_t, slots },
-        data,
-    };
+/// The v2 read path: parse the root manifest, then read + CRC-check every
+/// shard file in parallel and slice the tensors out of their shards.
+fn load_dir(dir: &Path) -> Result<(TrainCheckpoint, IoStats)> {
+    let t0 = Instant::now();
+    let (m, _mlen, manifest_bytes) = read_dir_manifest(dir)?;
+    let core = manifest_core(&m)?;
+    let shards = shard_list(&m)?;
+
+    // parallel streaming read: each worker reads and CRC-checks one shard
+    let shard_bufs: Vec<Vec<u8>> = par_try_map(shards.len(), |s| -> Result<Vec<u8>> {
+        let (file, bytes, crc) = &shards[s];
+        let p = dir.join(file);
+        let b = std::fs::read(&p).with_context(|| format!("reading shard {p:?}"))?;
+        if b.len() as u64 != *bytes {
+            bail!(
+                "shard {file:?} is {} bytes, manifest promises {bytes} \
+                 (incomplete copy?)",
+                b.len()
+            );
+        }
+        let got = crc32(&b);
+        if got != *crc {
+            bail!(
+                "shard {file:?} failed its CRC-32 check \
+                 (stored {crc:#010x}, computed {got:#010x}) — corrupt checkpoint"
+            );
+        }
+        Ok(b)
+    })?;
+
+    let tensors = m
+        .get("tensors")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing tensors"))?;
+    let expected = core.n_params * (1 + core.slot_labels.len());
+    if tensors.len() != expected {
+        bail!("manifest lists {} tensors, expected {expected}", tensors.len());
+    }
+    let mut names = Vec::with_capacity(tensors.len());
+    let mut blobs: Vec<Vec<f32>> = Vec::with_capacity(tensors.len());
+    for t in tensors {
+        let name = read_str(t, "name")?;
+        let len = read_usize(t, "len")?;
+        let shard = read_usize(t, "shard")?;
+        let off = read_usize(t, "offset")?;
+        let buf = shard_bufs.get(shard).ok_or_else(|| {
+            anyhow!("tensor {name:?} names shard {shard}, only {} exist", shard_bufs.len())
+        })?;
+        // untrusted manifest values: checked multiply + add, same
+        // fail-closed rule as the v1 tensor bounds above
+        let hi = len
+            .checked_mul(4)
+            .and_then(|b| off.checked_add(b))
+            .filter(|&hi| hi <= buf.len())
+            .ok_or_else(|| anyhow!("tensor {name:?} extends past end of its shard"))?;
+        names.push(name.to_string());
+        blobs.push(le_bytes_to_f32s(&buf[off..hi]));
+    }
+    let ck = assemble(core, names, blobs);
+    let bytes = manifest_bytes + shard_bufs.iter().map(|b| b.len() as u64).sum::<u64>();
     Ok((ck, IoStats { bytes, secs: t0.elapsed().as_secs_f64() }))
 }
 
@@ -650,6 +1118,22 @@ pub(crate) mod tests {
         }
     }
 
+    fn assert_ckpt_eq(back: &TrainCheckpoint, ck: &TrainCheckpoint, what: &str) {
+        assert_eq!(back.step, ck.step, "{what}: step");
+        assert_eq!(back.encoder.kind, ck.encoder.kind, "{what}: kind");
+        assert_eq!(back.encoder.seed, ck.encoder.seed, "{what}: model seed");
+        assert_eq!(back.hyper.seed, ck.hyper.seed, "{what}: hyper seed");
+        assert_eq!(back.hyper.lr.to_bits(), ck.hyper.lr.to_bits(), "{what}: lr bits");
+        assert_eq!(back.hyper.grad_clip, ck.hyper.grad_clip, "{what}: clip");
+        assert_eq!(back.hyper.optimizer, ck.hyper.optimizer, "{what}: optimizer");
+        assert_eq!(back.shifts.len(), ck.shifts.len(), "{what}: shifts");
+        assert_eq!((back.batch, back.grad_shards), (ck.batch, ck.grad_shards));
+        assert_eq!(back.param_names, ck.param_names, "{what}: names");
+        assert_eq!(back.params, ck.params, "{what}: params");
+        assert_eq!(back.opt, ck.opt, "{what}: optimizer state");
+        assert_eq!(back.data, ck.data, "{what}: data cursor");
+    }
+
     #[test]
     fn save_load_roundtrip_is_exact() {
         let dir = std::env::temp_dir().join("sbck_fmt_test");
@@ -660,20 +1144,8 @@ pub(crate) mod tests {
         assert!(saved.bytes > 0 && saved.secs >= 0.0);
         let (back, loaded) = load(&path).unwrap();
         assert_eq!(loaded.bytes, saved.bytes);
-        assert_eq!(back.step, ck.step);
-        assert_eq!(back.encoder.kind, ck.encoder.kind);
-        assert_eq!(back.encoder.seed, ck.encoder.seed);
-        assert_eq!(back.hyper.seed, ck.hyper.seed);
-        assert_eq!(back.hyper.lr.to_bits(), ck.hyper.lr.to_bits());
-        assert_eq!(back.hyper.grad_clip, ck.hyper.grad_clip);
-        assert_eq!(back.hyper.optimizer, ck.hyper.optimizer);
-        assert_eq!(back.shifts.len(), 1);
+        assert_ckpt_eq(&back, &ck, "v1 roundtrip");
         assert_eq!(back.shifts[0].at_step, 22);
-        assert_eq!((back.batch, back.grad_shards), (8, 3));
-        assert_eq!(back.param_names, ck.param_names);
-        assert_eq!(back.params, ck.params);
-        assert_eq!(back.opt, ck.opt);
-        assert_eq!(back.data, ck.data);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -715,6 +1187,41 @@ pub(crate) mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
+    /// The short-file regression (ISSUE 5 satellite): `load` on a file
+    /// shorter than the 16-byte header must return the fail-closed `Err`
+    /// path — never slice out of bounds — exactly like `peek` already
+    /// does.  Covers 0-, 8- and 15-byte junk for both entry points.
+    #[test]
+    fn load_and_peek_fail_closed_on_short_files() {
+        let dir = std::env::temp_dir().join("sbck_fmt_short");
+        std::fs::create_dir_all(&dir).unwrap();
+        for n in [0usize, 8, 15] {
+            let p = dir.join(format!("short{n}.sbck"));
+            // 8/15-byte prefixes of a real header: the nastiest torn writes
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(MAGIC);
+            bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+            bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+            bytes.truncate(n);
+            std::fs::write(&p, &bytes).unwrap();
+            let err = load(&p).unwrap_err().to_string();
+            assert!(
+                err.contains("magic") || err.contains("truncated"),
+                "{n}-byte file: {err}"
+            );
+            let err = peek(&p).unwrap_err().to_string();
+            assert!(err.contains("truncated"), "{n}-byte peek: {err}");
+        }
+        // same torn prefixes as a v2 root manifest: the directory loader
+        // must fail closed identically
+        let snap = dir.join("ckpt-00000001.sbck");
+        std::fs::create_dir_all(&snap).unwrap();
+        std::fs::write(snap.join(MANIFEST_FILE), b"SBCK").unwrap();
+        assert!(load(&snap).is_err());
+        assert!(peek(&snap).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
     /// `peek` reads only the header + manifest: it must succeed — and
     /// agree with the manifest — even on a file whose tensor blobs are
     /// truncated (which `load` correctly rejects).
@@ -732,6 +1239,7 @@ pub(crate) mod tests {
         assert_eq!(p.encoder.seed, ck.encoder.seed);
         assert_eq!(p.encoder.dim, ck.encoder.dim);
         assert!(p.manifest_bytes > 0);
+        assert_eq!((p.version, p.shards), (FORMAT_VERSION, 0));
         assert!(p.is_complete(), "a finished save must peek complete");
         assert_eq!(p.expected_bytes, p.file_bytes, "save writes exactly the blobs");
 
@@ -771,12 +1279,242 @@ pub(crate) mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("a.sbck");
         save(&path, &sample_ckpt()).unwrap();
+        save_sharded(&dir.join("b.sbck"), &sample_ckpt(), 3).unwrap();
         let leftovers: Vec<_> = std::fs::read_dir(&dir)
             .unwrap()
             .flatten()
             .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
             .collect();
-        assert!(leftovers.is_empty(), "temp file left behind");
+        assert!(leftovers.is_empty(), "temp file left behind: {leftovers:?}");
+        // and none inside the committed shard directory either
+        let inner: Vec<_> = std::fs::read_dir(dir.join("b.sbck"))
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(inner.is_empty(), "shard temp left behind: {inner:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_plan_covers_all_tensors_contiguously() {
+        for (sizes, shards) in [
+            (vec![10usize, 20, 30, 40, 50, 60], 4usize),
+            (vec![1000, 1, 1, 1], 4),
+            (vec![4], 4),
+            (vec![8, 8], 1),
+            (vec![], 3),
+            (vec![5; 29], 4), // the pipeline's 29-tensor model
+        ] {
+            let plan = shard_plan(&sizes, shards);
+            let n = shards.clamp(1, sizes.len().max(1));
+            assert_eq!(plan.len(), n, "{sizes:?}/{shards}");
+            assert_eq!(plan[0].start, 0);
+            assert_eq!(plan.last().unwrap().end, sizes.len());
+            for w in plan.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+            }
+            if !sizes.is_empty() {
+                assert!(plan.iter().all(|r| !r.is_empty()), "{plan:?}");
+            }
+            // deterministic
+            assert_eq!(plan, shard_plan(&sizes, shards));
+        }
+    }
+
+    /// The v2 tentpole contract: a sharded save round-trips to the exact
+    /// same [`TrainCheckpoint`] as the v1 single file — params, optimizer
+    /// moments, cursor, hyper bits — and `peek` understands the directory
+    /// without reading a shard.
+    #[test]
+    fn sharded_roundtrip_is_bit_identical_to_v1() {
+        let dir = std::env::temp_dir().join("sbck_fmt_v2_rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample_ckpt();
+        let v1 = dir.join("one.sbck");
+        save(&v1, &ck).unwrap();
+        let (from_v1, _) = load(&v1).unwrap();
+
+        for shards in [2usize, 4, 64 /* clamps to the 6 tensors */] {
+            let v2 = dir.join(format!("sharded{shards}.sbck"));
+            let io = save_sharded(&v2, &ck, shards).unwrap();
+            assert!(v2.is_dir(), "v2 snapshot must be a directory");
+            assert!(io.bytes > 0);
+            let (back, lio) = load(&v2).unwrap();
+            assert_eq!(lio.bytes, io.bytes, "load must see what save wrote");
+            assert_ckpt_eq(&back, &ck, "v2 roundtrip");
+            assert_ckpt_eq(&back, &from_v1, "v2 vs v1");
+
+            let p = peek(&v2).unwrap();
+            assert_eq!(p.step, ck.step);
+            assert_eq!(p.version, FORMAT_VERSION_V2);
+            assert_eq!(p.shards, shards.min(6), "6 tensors cap the shard count");
+            assert_eq!(p.n_params, ck.params.len());
+            assert!(p.is_complete());
+            assert_eq!(p.expected_bytes, p.file_bytes);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Incomplete-shard detection (the generalized blob-size retry) and
+    /// per-shard CRC enforcement.
+    #[test]
+    fn sharded_corruption_and_incomplete_copies_fail_closed() {
+        let dir = std::env::temp_dir().join("sbck_fmt_v2_bad");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample_ckpt();
+        let snap = dir.join("s.sbck");
+        save_sharded(&snap, &ck, 3).unwrap();
+
+        // bit-flip inside a shard: the shard CRC catches it
+        let s1 = snap.join(shard_filename(1));
+        let mut raw = std::fs::read(&s1).unwrap();
+        raw[0] ^= 0x01;
+        std::fs::write(&s1, &raw).unwrap();
+        let err = load(&snap).unwrap_err().to_string();
+        assert!(err.contains("CRC-32"), "{err}");
+        raw[0] ^= 0x01;
+        std::fs::write(&s1, &raw).unwrap();
+        load(&snap).unwrap();
+
+        // truncate a shard: peek flags incomplete (copy in flight), load
+        // fails closed naming the shard
+        let full = std::fs::read(&s1).unwrap();
+        std::fs::write(&s1, &full[..full.len() - 4]).unwrap();
+        let p = peek(&snap).unwrap();
+        assert!(!p.is_complete(), "short shard must peek incomplete");
+        let err = load(&snap).unwrap_err().to_string();
+        assert!(err.contains("incomplete") || err.contains("bytes"), "{err}");
+        std::fs::write(&s1, &full).unwrap();
+
+        // delete a shard entirely: same story
+        std::fs::remove_file(&s1).unwrap();
+        assert!(!peek(&snap).unwrap().is_complete());
+        assert!(load(&snap).is_err());
+        std::fs::write(&s1, &full).unwrap();
+        load(&snap).unwrap();
+
+        // no manifest at all (producer crashed pre-commit, or a copy that
+        // has not reached it yet): peek and load both fail closed
+        let uncommitted = dir.join("u.sbck");
+        std::fs::create_dir_all(&uncommitted).unwrap();
+        std::fs::write(uncommitted.join(shard_filename(0)), b"data").unwrap();
+        assert!(peek(&uncommitted).is_err());
+        assert!(load(&uncommitted).is_err());
+
+        // a v2 manifest fed to the flat-file loader is redirected, not
+        // misparsed
+        let err = load(&snap.join(MANIFEST_FILE)).unwrap_err().to_string();
+        assert!(err.contains("directory"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Rewrite a header+manifest container with a tampered manifest
+    /// (fixing up the length field), keeping any trailing bytes.
+    fn retampered(raw: &[u8], from: &str, to: &str) -> Vec<u8> {
+        let mlen = u64::from_le_bytes(raw[8..16].try_into().unwrap()) as usize;
+        let manifest = std::str::from_utf8(&raw[16..16 + mlen]).unwrap();
+        let tampered = manifest.replacen(from, to, 1);
+        assert_ne!(manifest, tampered, "tamper target {from:?} not found");
+        let mut out = Vec::new();
+        out.extend_from_slice(&raw[0..8]);
+        out.extend_from_slice(&(tampered.len() as u64).to_le_bytes());
+        out.extend_from_slice(tampered.as_bytes());
+        out.extend_from_slice(&raw[16 + mlen..]);
+        out
+    }
+
+    /// Untrusted-manifest arithmetic must fail closed, never wrap or
+    /// panic: a tensor `len` of 2^62 (exactly representable as a JSON
+    /// f64; `len * 4` would wrap to 0 in release and panic in debug)
+    /// makes `load` return Err on both on-disk versions.
+    #[test]
+    fn absurd_manifest_tensor_lengths_fail_closed() {
+        let dir = std::env::temp_dir().join("sbck_fmt_absurd_len");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample_ckpt();
+        let huge = "4611686018427387904"; // 2^62
+
+        let v1 = dir.join("a.sbck");
+        save(&v1, &ck).unwrap();
+        let raw = std::fs::read(&v1).unwrap();
+        let bad = dir.join("bad.sbck");
+        std::fs::write(&bad, retampered(&raw, "\"len\":3", &format!("\"len\":{huge}")))
+            .unwrap();
+        let err = load(&bad).unwrap_err().to_string();
+        assert!(err.contains("extends past"), "{err}");
+
+        let v2 = dir.join("s.sbck");
+        save_sharded(&v2, &ck, 3).unwrap();
+        let mpath = v2.join(MANIFEST_FILE);
+        let raw = std::fs::read(&mpath).unwrap();
+        std::fs::write(&mpath, retampered(&raw, "\"len\":3", &format!("\"len\":{huge}")))
+            .unwrap();
+        let err = load(&v2).unwrap_err().to_string();
+        assert!(err.contains("extends past"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Overwriting a same-name snapshot works across every version pair
+    /// — the clear-and-retry rename replaces dir targets that a plain
+    /// rename cannot.
+    #[test]
+    fn saves_replace_same_name_snapshots_across_versions() {
+        let dir = std::env::temp_dir().join("sbck_fmt_overwrite");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample_ckpt();
+        let p = dir.join("x.sbck");
+        save_sharded(&p, &ck, 2).unwrap();
+        save_sharded(&p, &ck, 3).unwrap(); // dir over dir
+        assert_eq!(peek(&p).unwrap().shards, 3, "old shards must not linger");
+        load(&p).unwrap();
+        save(&p, &ck).unwrap(); // file over dir
+        assert!(p.is_file());
+        load(&p).unwrap();
+        save_sharded(&p, &ck, 2).unwrap(); // dir over file
+        assert!(p.is_dir());
+        load(&p).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Sharded save bytes are deterministic under any worker count — the
+    /// foundation of the async-save bit-identity guarantee.
+    #[test]
+    fn sharded_save_bytes_identical_across_thread_counts() {
+        let dir = std::env::temp_dir().join("sbck_fmt_v2_threads");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample_ckpt();
+        let mut trees: Vec<Vec<(String, Vec<u8>)>> = vec![];
+        for threads in ["1", "4"] {
+            let _lock = crate::util::threads::THREADS_ENV_TEST_LOCK
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            std::env::set_var("SWITCHBACK_THREADS", threads);
+            let snap = dir.join(format!("t{threads}.sbck"));
+            save_sharded(&snap, &ck, 3).unwrap();
+            std::env::remove_var("SWITCHBACK_THREADS");
+            let mut files: Vec<(String, Vec<u8>)> = std::fs::read_dir(&snap)
+                .unwrap()
+                .flatten()
+                .map(|e| {
+                    (
+                        e.file_name().to_string_lossy().into_owned(),
+                        std::fs::read(e.path()).unwrap(),
+                    )
+                })
+                .collect();
+            files.sort();
+            trees.push(files);
+        }
+        assert_eq!(
+            trees[0], trees[1],
+            "sharded snapshot bytes must not depend on SWITCHBACK_THREADS"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

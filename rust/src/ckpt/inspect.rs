@@ -1,8 +1,9 @@
 //! `ckpt inspect` / `ckpt diff` — human-readable views over checkpoint
-//! files.  Both go through [`super::format::load`], so every inspection is
-//! also a full integrity check (magic, version, per-blob CRC-32).
+//! files (v1 single files and v2 shard directories alike).  Both go
+//! through [`super::format::load`], so every inspection is also a full
+//! integrity check (magic, version, per-blob/per-shard CRC-32).
 
-use super::format::{load, TrainCheckpoint};
+use super::format::{load, peek, TrainCheckpoint};
 use anyhow::Result;
 use std::fmt::Write as _;
 use std::path::Path;
@@ -13,16 +14,21 @@ fn total_floats(ck: &TrainCheckpoint) -> usize {
 
 /// One-screen summary of a checkpoint (the `ckpt inspect` output).
 pub fn inspect(path: &Path) -> Result<String> {
+    let pk = peek(path)?; // version + shard layout (manifest-only read)
     let (ck, io) = load(path)?;
     let e = &ck.encoder;
     let h = &ck.hyper;
     let mut s = String::new();
     let _ = writeln!(s, "checkpoint : {}", path.display());
+    let shard_note = if pk.shards > 0 {
+        format!(" ({} shards)", pk.shards)
+    } else {
+        String::new()
+    };
     let _ = writeln!(
         s,
-        "format     : switchback-ckpt v{}   {} bytes   (all CRCs OK)",
-        super::FORMAT_VERSION,
-        io.bytes
+        "format     : switchback-ckpt v{}{shard_note}   {} bytes   (all CRCs OK)",
+        pk.version, io.bytes
     );
     let _ = writeln!(s, "step       : {} / {} (warmup {})", ck.step, h.steps, h.warmup);
     let _ = writeln!(
@@ -172,6 +178,32 @@ mod tests {
         assert!(!same, "{d}");
         assert!(d.contains("1/3 elems differ") || d.contains("elems differ"), "{d}");
         assert!(d.contains("1/2 tensors differ"), "{d}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Inspect and diff understand v2 shard directories, and a v1-vs-v2
+    /// pair of the same checkpoint diffs bit-identical (the
+    /// cross-version compatibility contract verify.sh greps for).
+    #[test]
+    fn inspect_and_diff_across_versions() {
+        let dir = std::env::temp_dir().join("sbck_inspect_v2_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample_ckpt();
+        let v1 = dir.join("a.sbck");
+        let v2 = dir.join("b.sbck");
+        save(&v1, &ck).unwrap();
+        super::super::format::save_sharded(&v2, &ck, 3).unwrap();
+
+        let report = inspect(&v2).unwrap();
+        assert!(report.contains("switchback-ckpt v2 (3 shards)"), "{report}");
+        assert!(report.contains("all CRCs OK"), "{report}");
+
+        let (d, same) = diff(&v1, &v2).unwrap();
+        assert!(same, "v1 and v2 of the same checkpoint must diff clean:\n{d}");
+        assert!(d.contains("bit-identical"), "{d}");
+        assert!(d.contains("state identical"), "{d}");
+        assert!(d.contains("cursor identical"), "{d}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

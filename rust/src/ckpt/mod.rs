@@ -15,11 +15,24 @@
 //!   shift schedule) so a resume can rebuild the exact LR cosine and the
 //!   un-fired tail of the shift schedule — and fail closed on mismatch.
 //!
-//! On-disk format ([`format`]): magic + version, a JSON manifest (via the
-//! in-tree [`crate::util::json`] writer — human-inspectable with any JSON
-//! tool), then raw little-endian f32 tensor blobs, each CRC-32-checked
-//! ([`crate::util::crc32`]).  Writes go through a temp file + rename, so a
-//! crash mid-snapshot never corrupts an existing checkpoint.
+//! On-disk formats ([`format`]): **v1** is a single file — magic +
+//! version, a JSON manifest (via the in-tree [`crate::util::json`] writer
+//! — human-inspectable with any JSON tool), then raw little-endian f32
+//! tensor blobs, each CRC-32-checked ([`crate::util::crc32`]).  **v2** is
+//! a *manifest-of-shards directory*: tensors grouped into per-shard blob
+//! files written and read in parallel ([`crate::util::threads`]), each
+//! with a whole-file CRC-32, plus a root manifest committed last so a
+//! snapshot is visible only when complete.  All writes go through
+//! temp + rename, so a crash mid-snapshot never corrupts an existing
+//! checkpoint; `load`/`peek`/`inspect`/`diff` accept either version
+//! interchangeably.
+//!
+//! **Background saves** ([`background::AsyncSaver`]): the trainer can
+//! hand a step-boundary state capture to a dedicated saver thread
+//! (`train --ckpt-async`) so the step loop never blocks on disk; the
+//! saver registers every in-flight path so [`prune_snapshots_guarded`]
+//! can never delete a snapshot that is still being written, and saves are
+//! bit-identical to their synchronous counterparts.
 //!
 //! The same artifact feeds the serving path: [`encoder_weights`] reshapes
 //! a checkpoint's parameter vector into [`crate::serve::EncoderWeights`],
@@ -41,14 +54,20 @@
 //!   for the full CRC-checked [`load`],
 //! * `ckpt inspect` / `ckpt diff` ([`inspect`]).
 
+pub mod background;
 pub mod format;
 pub mod inspect;
 
-pub use format::{load, peek, save, CkptPeek, IoStats, TrainCheckpoint, FORMAT_VERSION};
+pub use background::{AsyncSaver, SaveTotals};
+pub use format::{
+    load, peek, save, save_sharded, CkptPeek, IoStats, TrainCheckpoint,
+    FORMAT_VERSION, FORMAT_VERSION_V2, MANIFEST_FILE,
+};
 
 use crate::serve::{EncoderConfig, EncoderWeights};
 use crate::tensor::Matrix;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 
 /// Canonical snapshot filename inside a checkpoint directory.
@@ -61,7 +80,9 @@ pub fn snapshot_path(dir: &Path, step: u64) -> PathBuf {
     dir.join(snapshot_filename(step))
 }
 
-/// All snapshots in `dir`, sorted by step ascending.
+/// All snapshots in `dir`, sorted by step ascending.  Matches both v1
+/// files and v2 shard directories (same `ckpt-<step>.sbck` name); `.tmp`
+/// staging entries never match the suffix and are therefore invisible.
 pub fn list_snapshots(dir: &Path) -> Vec<(u64, PathBuf)> {
     let Ok(entries) = std::fs::read_dir(dir) else {
         return vec![];
@@ -88,17 +109,47 @@ pub fn latest_snapshot(dir: &Path) -> Option<(u64, PathBuf)> {
 }
 
 /// Delete all but the newest `keep` snapshots; returns how many were
-/// removed (best-effort: an unremovable file is skipped, not fatal).
+/// removed.  Equivalent to [`prune_snapshots_guarded`] with no in-flight
+/// saves.
 pub fn prune_snapshots(dir: &Path, keep: usize) -> usize {
-    let snaps = list_snapshots(dir);
-    let excess = snaps.len().saturating_sub(keep.max(1));
-    snaps[..excess]
+    prune_snapshots_guarded(dir, keep, &HashSet::new())
+}
+
+/// Retention with in-flight protection: delete the oldest *complete*
+/// snapshots beyond `keep`, never touching
+///
+/// * `.tmp` staging files/directories (invisible to [`list_snapshots`]),
+/// * **incomplete** snapshots — a v2 directory whose shards are still
+///   being written/copied, or a v1 file shorter than its manifest
+///   promises (these are also excluded from the retention *count*: a
+///   half-copied snapshot must not push a good one over the edge),
+/// * any path in `in_flight` — the [`AsyncSaver`]'s registry of saves
+///   that are queued or mid-write (`train --ckpt-async`).
+///
+/// Returns how many snapshots were removed (best-effort: an unremovable
+/// entry is skipped, not fatal).
+pub fn prune_snapshots_guarded(
+    dir: &Path,
+    keep: usize,
+    in_flight: &HashSet<PathBuf>,
+) -> usize {
+    let prunable: Vec<(u64, PathBuf)> = list_snapshots(dir)
+        .into_iter()
+        .filter(|(_, p)| !in_flight.contains(p))
+        // peek is a header+manifest read (KiB) — cheap enough per cadence;
+        // unreadable counts as incomplete (fail closed: never delete what
+        // we cannot prove is a finished snapshot)
+        .filter(|(_, p)| format::peek(p).map(|pk| pk.is_complete()).unwrap_or(false))
+        .collect();
+    let excess = prunable.len().saturating_sub(keep.max(1));
+    prunable[..excess]
         .iter()
-        .filter(|(_, p)| std::fs::remove_file(p).is_ok())
+        .filter(|(_, p)| format::remove_path(p).is_ok())
         .count()
 }
 
-/// Resolve a CLI checkpoint argument: a `.sbck` file is used as-is, a
+/// Resolve a CLI checkpoint argument: a `.sbck` file — or a v2 snapshot
+/// *directory* (it holds a [`MANIFEST_FILE`]) — is used as-is; any other
 /// directory resolves to its newest snapshot.
 pub fn resolve(path: &str) -> Result<PathBuf> {
     let p = Path::new(path);
@@ -106,11 +157,54 @@ pub fn resolve(path: &str) -> Result<PathBuf> {
         return Ok(p.to_path_buf());
     }
     if p.is_dir() {
+        if p.join(MANIFEST_FILE).is_file() {
+            return Ok(p.to_path_buf());
+        }
         return latest_snapshot(p)
             .map(|(_, f)| f)
             .ok_or_else(|| anyhow!("no ckpt-*.sbck snapshots in {path:?}"));
     }
     bail!("checkpoint path {path:?} does not exist");
+}
+
+/// Copy a snapshot (v1 file or v2 directory) to `dst` with the same
+/// commit discipline as a save: everything lands under a temporary name
+/// first — for v2, shard files before the root manifest — and the final
+/// rename makes it visible atomically.  Used by `pipeline` to stage
+/// snapshots into a watch directory without ever exposing a half-copy.
+pub fn stage_copy(src: &Path, dst: &Path) -> Result<()> {
+    let tmp = dst.with_extension("sbck.stage");
+    // a crashed earlier stage may have left either shape at the temp name
+    format::remove_path(&tmp)?;
+    if src.is_dir() {
+        std::fs::create_dir_all(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        let mut names: Vec<String> = std::fs::read_dir(src)
+            .with_context(|| format!("reading {src:?}"))?
+            .flatten()
+            .filter_map(|e| e.file_name().into_string().ok())
+            .collect();
+        names.sort();
+        // manifest last: a reader that races the copy sees shards without
+        // a manifest (unreadable → retried), never the reverse
+        names.retain(|n| n != MANIFEST_FILE);
+        names.push(MANIFEST_FILE.to_string());
+        for name in &names {
+            if !src.join(name).is_file() {
+                continue;
+            }
+            std::fs::copy(src.join(name), tmp.join(name))
+                .with_context(|| format!("copying {name}"))?;
+        }
+    } else {
+        std::fs::copy(src, &tmp).with_context(|| format!("copying {src:?}"))?;
+    }
+    // rename first (atomic for file-over-file and fresh names); only a
+    // same-name directory snapshot at dst needs the clear + retry
+    if std::fs::rename(&tmp, dst).is_err() {
+        format::remove_path(dst)?;
+        std::fs::rename(&tmp, dst).with_context(|| format!("renaming to {dst:?}"))?;
+    }
+    Ok(())
 }
 
 /// Reshape a checkpoint's flat parameter vector into the serving-encoder
@@ -241,8 +335,9 @@ mod tests {
         let dir = std::env::temp_dir().join("sbck_dir_test");
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
+        let ck = format::tests::sample_ckpt();
         for step in [5u64, 30, 10, 20] {
-            std::fs::write(snapshot_path(&dir, step), b"stub").unwrap();
+            format::save(&snapshot_path(&dir, step), &ck).unwrap();
         }
         std::fs::write(dir.join("not-a-ckpt.txt"), b"x").unwrap();
         let steps: Vec<u64> = list_snapshots(&dir).iter().map(|(s, _)| *s).collect();
@@ -257,6 +352,120 @@ mod tests {
         let file = snapshot_path(&dir, 20);
         assert_eq!(resolve(file.to_str().unwrap()).unwrap(), file);
         assert!(resolve("/nonexistent/nowhere").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The prune-during-save regression (ISSUE 5 satellite): retention
+    /// must skip `.tmp` staging entries, never count or delete an
+    /// incomplete (mid-copy) snapshot, and never delete a path the async
+    /// saver still holds in its in-flight registry.
+    #[test]
+    fn prune_spares_tmp_incomplete_and_in_flight_snapshots() {
+        let dir = std::env::temp_dir().join("sbck_prune_guard_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = format::tests::sample_ckpt();
+        // four complete snapshots: v1 files at 10/20, v2 dirs at 30/40
+        for step in [10u64, 20] {
+            format::save(&snapshot_path(&dir, step), &ck).unwrap();
+        }
+        for step in [30u64, 40] {
+            format::save_sharded(&snapshot_path(&dir, step), &ck, 3).unwrap();
+        }
+        // a staging leftover (crashed save): name never matches listing
+        std::fs::write(dir.join("ckpt-00000050.sbck.tmp"), b"half").unwrap();
+        // an incomplete v2 snapshot: manifest present, one shard missing
+        // (a non-atomic copy in flight)
+        let midcopy = snapshot_path(&dir, 60);
+        format::save_sharded(&midcopy, &ck, 3).unwrap();
+        std::fs::remove_file(midcopy.join(format::shard_filename(1))).unwrap();
+        assert!(!format::peek(&midcopy).unwrap().is_complete());
+        // an unreadable junk file: also never counted, never deleted
+        std::fs::write(snapshot_path(&dir, 70), b"torn").unwrap();
+
+        // the async saver still "holds" step 10 (the oldest complete one)
+        let mut in_flight = HashSet::new();
+        in_flight.insert(snapshot_path(&dir, 10));
+
+        // complete ∧ unguarded = {20, 30, 40}; keep 2 → only 20 goes
+        assert_eq!(prune_snapshots_guarded(&dir, 2, &in_flight), 1);
+        assert!(snapshot_path(&dir, 10).exists(), "in-flight save deleted");
+        assert!(!snapshot_path(&dir, 20).exists(), "oldest complete must go");
+        assert!(snapshot_path(&dir, 30).exists());
+        assert!(snapshot_path(&dir, 40).exists());
+        assert!(midcopy.exists(), "mid-copy snapshot deleted");
+        assert!(snapshot_path(&dir, 70).exists(), "unreadable file deleted");
+        assert!(dir.join("ckpt-00000050.sbck.tmp").exists(), "staging deleted");
+
+        // release the registry: 10 is now the oldest prunable snapshot
+        assert_eq!(prune_snapshots_guarded(&dir, 2, &HashSet::new()), 1);
+        assert!(!snapshot_path(&dir, 10).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `resolve` and `latest_snapshot` treat a v2 directory as one
+    /// snapshot, not as a directory of snapshots.
+    #[test]
+    fn resolve_accepts_v2_snapshot_directories() {
+        let dir = std::env::temp_dir().join("sbck_resolve_v2_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = format::tests::sample_ckpt();
+        let snap = snapshot_path(&dir, 7);
+        format::save_sharded(&snap, &ck, 2).unwrap();
+        // the snapshot dir itself resolves to itself…
+        assert_eq!(resolve(snap.to_str().unwrap()).unwrap(), snap);
+        // …and the containing dir resolves to it as the newest snapshot
+        assert_eq!(resolve(dir.to_str().unwrap()).unwrap(), snap);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `stage_copy` reproduces a snapshot byte-for-byte under a new name,
+    /// for both on-disk shapes.
+    #[test]
+    fn stage_copy_round_trips_both_versions() {
+        let dir = std::env::temp_dir().join("sbck_stage_copy_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = format::tests::sample_ckpt();
+        let v1 = snapshot_path(&dir, 1);
+        format::save(&v1, &ck).unwrap();
+        let v1_dst = snapshot_path(&dir, 2);
+        stage_copy(&v1, &v1_dst).unwrap();
+        assert_eq!(
+            std::fs::read(&v1).unwrap(),
+            std::fs::read(&v1_dst).unwrap(),
+            "v1 copy must be byte-identical"
+        );
+        let v2 = snapshot_path(&dir, 3);
+        format::save_sharded(&v2, &ck, 3).unwrap();
+        let v2_dst = snapshot_path(&dir, 4);
+        stage_copy(&v2, &v2_dst).unwrap();
+        let (a, _) = format::load(&v2).unwrap();
+        let (b, _) = format::load(&v2_dst).unwrap();
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.opt, b.opt);
+        assert_eq!(a.data, b.data);
+        // no staging leftovers
+        assert!(!dir.join("ckpt-00000004.sbck.stage").exists());
+
+        // a v1 file staged over an existing v2 *directory* at the same
+        // destination replaces it (rename cannot overwrite a dir; the
+        // clear-and-retry path must)
+        stage_copy(&v1, &v2_dst).unwrap();
+        assert!(v2_dst.is_file());
+        assert_eq!(std::fs::read(&v1).unwrap(), std::fs::read(&v2_dst).unwrap());
+
+        // a stale .stage leftover of the *other* shape does not wedge a
+        // later stage to the same destination
+        let dst5 = snapshot_path(&dir, 5);
+        std::fs::create_dir_all(dir.join("ckpt-00000005.sbck.stage")).unwrap();
+        stage_copy(&v1, &dst5).unwrap();
+        assert!(dst5.is_file());
+        std::fs::write(dir.join("ckpt-00000006.sbck.stage"), b"stale file").unwrap();
+        let dst6 = snapshot_path(&dir, 6);
+        stage_copy(&v2, &dst6).unwrap();
+        format::load(&dst6).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 }

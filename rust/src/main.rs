@@ -101,7 +101,19 @@ TRAIN OPTIONS (native):
   --assert-improves      exit nonzero unless every run's loss decreased
   --ckpt-every N         write a snapshot every N steps (needs --ckpt-dir)
   --ckpt-dir DIR         snapshot directory (ckpt-<step>.sbck files)
-  --ckpt-keep K          snapshot retention (default: 3)
+  --ckpt-keep K          snapshot retention (default: 3; counts only
+                         complete snapshots — .tmp staging and mid-copy
+                         entries are never counted or deleted)
+  --ckpt-shards N        group tensors into N shard files written/read in
+                         parallel (the v2 manifest-of-shards directory
+                         layout; default: 1 = the v1 single file — both
+                         load/peek/inspect/diff interchangeably)
+  --ckpt-async           write snapshots from a step-boundary state
+                         capture on a background saver thread: the step
+                         loop never blocks on disk, saves stay
+                         bit-identical to synchronous ones, and the saver
+                         is joined (and error-checked) before the run
+                         reports complete (needs --ckpt-every)
   --rollback-on-spike    restore the last snapshot when the loss spikes
                          and skip the offending shard window
   --spike-sigma X        rollback-guard deviation threshold in trailing
@@ -137,6 +149,12 @@ PIPELINE OPTIONS:
   --drift-max X          canary drift bound for promotions (default: 0.5;
                          must stay positive — the scenario asserts the
                          injected drifted snapshot is rejected)
+  --ckpt-shards N        shard count for the training snapshots, written
+                         by a background saver (--ckpt-async semantics;
+                         default: 4).  The scenario proves the sharded
+                         async snapshot is bit-identical to a synchronous
+                         v1 save of the same step (`ckpt diff`) before
+                         the watcher serves it
   --seed N               (default: 42)
   --out PATH             report path (default: BENCH_ckpt.json)
   --quiet
@@ -250,6 +268,7 @@ const VALUE_FLAGS: &[&str] = &[
     "--ckpt-every",
     "--ckpt-dir",
     "--ckpt-keep",
+    "--ckpt-shards",
     "--dim",
     "--heads",
     "--blocks",
@@ -271,6 +290,7 @@ const BOOL_FLAGS: &[&str] = &[
     "--strict",
     "--rollback-on-spike",
     "--standby",
+    "--ckpt-async",
     "-v",
     "-q",
 ];
@@ -608,6 +628,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         if cfg.ckpt_every > 0 && cfg.ckpt_dir.is_none() {
             bail!("--ckpt-every needs --ckpt-dir");
         }
+        apply_ckpt_io_flags(args, &mut cfg)?;
         cfg.rollback_on_spike = args.has("--rollback-on-spike");
         apply_spike_flags(args, &mut cfg)?;
         cfg.metrics_path = args.flags.get("metrics").map(|base| {
@@ -695,6 +716,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse + validate the snapshot-I/O flags (`--ckpt-shards` /
+/// `--ckpt-async`) — shared by fresh and resumed runs.  Both are
+/// run-control: they change how snapshots are written, never the bytes a
+/// snapshot decodes to, so (like the guard flags) they are accepted on
+/// `--resume`.
+fn apply_ckpt_io_flags(args: &Args, cfg: &mut NativeTrainConfig) -> Result<()> {
+    cfg.ckpt_shards = args.get("ckpt-shards", 1)?;
+    if cfg.ckpt_shards == 0 {
+        bail!("--ckpt-shards must be at least 1");
+    }
+    cfg.ckpt_async = args.has("--ckpt-async");
+    if cfg.ckpt_async && cfg.ckpt_every == 0 {
+        bail!(
+            "--ckpt-async needs --ckpt-every/--ckpt-dir (it only changes \
+             how snapshots are written)"
+        );
+    }
+    Ok(())
+}
+
 /// Parse + validate the rollback-guard tuning flags
 /// (`--spike-sigma`/`--spike-cooldown`) — shared by fresh and resumed
 /// runs so the validation can never diverge between the two paths.
@@ -763,6 +804,9 @@ fn cmd_train_resume(args: &Args, resume: &str) -> Result<()> {
             cfg.ckpt_dir = Some(dir.to_string_lossy().into_owned());
         }
     }
+    // snapshot I/O shape is run-control (the decoded bytes are identical
+    // either way), so sharded/async writing is freely re-chosen on resume
+    apply_ckpt_io_flags(args, &mut cfg)?;
     cfg.rollback_on_spike = args.has("--rollback-on-spike");
     // guard tuning is run-control (a reactive intervention, not training
     // math), so unlike the schedule flags it is accepted on resume
@@ -856,10 +900,18 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     if !drift_max.is_finite() || drift_max <= 0.0 {
         bail!("--drift-max must be a positive number (pipeline requires the bound)");
     }
+    let ckpt_shards: usize = args.get("ckpt-shards", 4)?;
+    if ckpt_shards == 0 {
+        bail!("--ckpt-shards must be at least 1");
+    }
 
     // ---- 1) train, snapshotting on the N/4 cadence -------------------
     // the snapshot directory is this scenario's workspace: clear it so a
-    // previous run's snapshots cannot leak into the staged promotions
+    // previous run's snapshots cannot leak into the staged promotions.
+    // Snapshots are written the production way: sharded (v2
+    // manifest-of-shards) from a background saver thread (--ckpt-async
+    // semantics), so the whole standby/serve loop downstream runs on the
+    // sharded artifacts
     let _ = std::fs::remove_dir_all(&dir);
     let mut cfg = NativeTrainConfig::preset(kind, steps);
     cfg.hyper.optimizer = optimizer;
@@ -868,7 +920,13 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     cfg.ckpt_every = (steps / 4).max(1);
     cfg.ckpt_dir = Some(dir.clone());
     cfg.ckpt_keep = 8;
-    println!("== pipeline 1/4: train {} steps (snapshots every {}) ==", steps, cfg.ckpt_every);
+    cfg.ckpt_shards = ckpt_shards;
+    cfg.ckpt_async = true;
+    println!(
+        "== pipeline 1/4: train {} steps (async sharded snapshots every {}, \
+         {} shards) ==",
+        steps, cfg.ckpt_every, ckpt_shards
+    );
     let mut trainer = NativeTrainer::new(cfg);
     let train_res = trainer.run(verbose)?;
     train_res.print();
@@ -894,11 +952,35 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     if !round_trip_ok {
         bail!("checkpoint round trip is not bit-identical to the live trainer state");
     }
+    // the sharded-async acceptance gate: a synchronous single-file (v1)
+    // save of the same step must decode to exactly the same state, and
+    // `ckpt diff` must agree through the CLI surface (the name never
+    // matches ckpt-*.sbck, so the watcher staging below cannot see it)
+    let sync_path = dir_path.join("sync-final.sbck");
+    let sync_io = ckpt::save(&sync_path, live)?;
+    let (sync_ck, sync_load_io) = ckpt::load(&sync_path)?;
+    let sharded_bit_identical = final_ck.params == sync_ck.params
+        && final_ck.opt == sync_ck.opt
+        && final_ck.data == sync_ck.data;
+    let (diff_report, diff_identical) =
+        ckpt::inspect::diff(&ckpt::snapshot_path(dir_path, steps), &sync_path)?;
+    if !sharded_bit_identical || !diff_identical {
+        bail!(
+            "sharded async snapshot is not bit-identical to the synchronous \
+             v1 save of the same step:\n{diff_report}"
+        );
+    }
+    let shard_peek = ckpt::peek(&ckpt::snapshot_path(dir_path, steps))?;
     println!(
-        "== pipeline 2/4: round trip OK — save {:.1} MB/s, load {:.1} MB/s, {} bytes ==",
+        "== pipeline 2/4: round trip OK — v{} snapshot ({} shards): save \
+         {:.1} MB/s, load {:.1} MB/s; sync v1 reference: save {:.1} MB/s, \
+         load {:.1} MB/s; sharded ≡ sync (ckpt diff bit-identical) ==",
+        shard_peek.version,
+        shard_peek.shards,
         save_mb_s,
         load_io.mb_per_s(),
-        load_io.bytes
+        sync_io.mb_per_s(),
+        sync_load_io.mb_per_s(),
     );
 
     // ---- 3) boot from the first snapshot; the watcher promotes the
@@ -1010,11 +1092,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         let n_staged = staged.len();
         let stage = || -> Result<(), String> {
             for (k, (step, path)) in staged.iter().enumerate() {
-                // atomic hand-off (copy + rename): the watcher must never
-                // peek a half-written snapshot
-                let tmp = watch_dir.join("staging.tmp");
-                std::fs::copy(path, &tmp).map_err(|e| e.to_string())?;
-                std::fs::rename(&tmp, ckpt::snapshot_path(&watch_dir, *step))
+                // atomic hand-off (stage + rename; for a v2 directory:
+                // shards first, manifest last): the watcher must never
+                // act on a half-written snapshot
+                ckpt::stage_copy(path, &ckpt::snapshot_path(&watch_dir, *step))
                     .map_err(|e| e.to_string())?;
                 wait_for(
                     &format!("promotion of step {step}"),
@@ -1074,6 +1155,13 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     }
     if snap.standby_rollbacks > 0 {
         bail!("unexpected post-promotion rollback(s): {}", snap.standby_rollbacks);
+    }
+    if snap.standby_quarantines > 0 {
+        bail!(
+            "unexpected snapshot quarantine(s): {} — staging must never \
+             expose a half-written snapshot",
+            snap.standby_quarantines
+        );
     }
     if engine.generation() != staged.len() as u64 {
         bail!(
@@ -1174,8 +1262,12 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         .field_f32("train_tail_loss", train_res.tail_loss)
         .field_u64("snapshots", train_res.snapshots as u64)
         .field_u64("ckpt_bytes", load_io.bytes)
-        .field_f32("save_mb_s", save_mb_s as f32)
-        .field_f32("load_mb_s", load_io.mb_per_s() as f32)
+        .field_f32("save_mb_s", sync_io.mb_per_s() as f32)
+        .field_f32("load_mb_s", sync_load_io.mb_per_s() as f32)
+        .field_u64("ckpt_shards", ckpt_shards as u64)
+        .field_f32("shard_save_mb_s", save_mb_s as f32)
+        .field_f32("shard_load_mb_s", load_io.mb_per_s() as f32)
+        .field_bool("sharded_bit_identical", sharded_bit_identical)
         .field_bool("round_trip_ok", round_trip_ok)
         .field_f32("hot_swap_pause_us", snap.swap_pause_max_us as f32)
         .field_f32("swap_pause_p99_us", snap.swap_pause_p99_us as f32)
@@ -1184,6 +1276,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         .field_u64("standby_promotions", snap.standby_promotions)
         .field_u64("standby_rejects", snap.standby_rejects)
         .field_u64("standby_rollbacks", snap.standby_rollbacks)
+        .field_u64("standby_quarantines", snap.standby_quarantines)
         .field_u64("swap_requests", swap_requests as u64)
         .field_u64("dropped_requests", dropped)
         .field_bool("cache_invalidated", cache_invalidated)
@@ -1795,6 +1888,49 @@ mod tests {
         .unwrap();
         let err = cmd_train(&a).unwrap_err();
         assert!(err.to_string().contains("--with-shifts conflicts"), "{err}");
+    }
+
+    #[test]
+    fn ckpt_shard_and_async_flags_validate() {
+        // --ckpt-async without a snapshot cadence is a hard error
+        let a = Args::parse(&argv(&[
+            "--ckpt-async",
+            "--kind",
+            "switchback",
+            "--steps",
+            "2",
+        ]))
+        .unwrap();
+        let err = cmd_train(&a).unwrap_err();
+        assert!(err.to_string().contains("--ckpt-every"), "{err}");
+        // --ckpt-shards 0 is rejected
+        let a = Args::parse(&argv(&[
+            "--ckpt-shards",
+            "0",
+            "--kind",
+            "switchback",
+            "--steps",
+            "2",
+        ]))
+        .unwrap();
+        let err = cmd_train(&a).unwrap_err();
+        assert!(err.to_string().contains("--ckpt-shards"), "{err}");
+        // pipeline validates its shard count too
+        let a = Args::parse(&argv(&["--ckpt-shards", "0"])).unwrap();
+        let err = cmd_pipeline(&a).unwrap_err();
+        assert!(err.to_string().contains("--ckpt-shards"), "{err}");
+        // …and both are accepted on --resume (run-control), failing later
+        // only because the checkpoint path does not exist
+        let a = Args::parse(&argv(&[
+            "--resume",
+            "/nonexistent/ckpts",
+            "--ckpt-shards",
+            "4",
+            "--ckpt-async",
+        ]))
+        .unwrap();
+        let err = cmd_train(&a).unwrap_err();
+        assert!(err.to_string().contains("does not exist"), "{err}");
     }
 
     #[test]

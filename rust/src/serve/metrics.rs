@@ -47,6 +47,10 @@ pub struct ServeMetrics {
     /// automatic rollbacks to the previous generation after a failed
     /// post-promotion canary probe
     pub standby_rollbacks: AtomicU64,
+    /// snapshots the watcher gave up on: unreadable or incomplete past
+    /// the bounded retry/backoff budget (a permanently truncated copy) —
+    /// quarantined and never revisited ([`super::standby`])
+    pub standby_quarantines: AtomicU64,
     /// off-thread candidate preparation time (CRC-checked load +
     /// re-quantize + canary encode), ns
     pub prepare_ns: Histogram,
@@ -98,6 +102,7 @@ impl ServeMetrics {
             standby_promotions: self.standby_promotions.load(Ordering::Relaxed),
             standby_rejects: self.standby_rejects.load(Ordering::Relaxed),
             standby_rollbacks: self.standby_rollbacks.load(Ordering::Relaxed),
+            standby_quarantines: self.standby_quarantines.load(Ordering::Relaxed),
             prepare_p50_ms: ns_to_ms(pr50),
             prepare_p99_ms: ns_to_ms(pr99),
         }
@@ -126,6 +131,11 @@ impl ServeMetrics {
     /// Record an automatic rollback to the previous generation.
     pub fn record_rollback(&self) {
         self.standby_rollbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a quarantined snapshot (retry budget exhausted).
+    pub fn record_quarantine(&self) {
+        self.standby_quarantines.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -159,6 +169,7 @@ pub struct ServeSnapshot {
     pub standby_promotions: u64,
     pub standby_rejects: u64,
     pub standby_rollbacks: u64,
+    pub standby_quarantines: u64,
     pub prepare_p50_ms: f64,
     pub prepare_p99_ms: f64,
 }
@@ -189,10 +200,15 @@ impl ServeSnapshot {
                 .field_f32("swap_pause_p50_us", self.swap_pause_p50_us as f32)
                 .field_f32("swap_pause_p99_us", self.swap_pause_p99_us as f32);
         }
-        if self.standby_promotions + self.standby_rejects + self.standby_rollbacks > 0 {
+        let standby_active = self.standby_promotions
+            + self.standby_rejects
+            + self.standby_rollbacks
+            + self.standby_quarantines;
+        if standby_active > 0 {
             w.field_u64("standby_promotions", self.standby_promotions)
                 .field_u64("standby_rejects", self.standby_rejects)
                 .field_u64("standby_rollbacks", self.standby_rollbacks)
+                .field_u64("standby_quarantines", self.standby_quarantines)
                 .field_f32("prepare_p50_ms", self.prepare_p50_ms as f32)
                 .field_f32("prepare_p99_ms", self.prepare_p99_ms as f32);
         }
@@ -253,19 +269,30 @@ mod tests {
         m.record_promote(4_000_000);
         m.record_reject();
         m.record_rollback();
+        m.record_quarantine();
         m.record_swap(30_000); // 30 µs pause
         let s = m.snapshot();
         assert_eq!(s.standby_promotions, 2);
         assert_eq!(s.standby_rejects, 1);
         assert_eq!(s.standby_rollbacks, 1);
+        assert_eq!(s.standby_quarantines, 1);
         assert!(s.prepare_p99_ms > 1.0 && s.prepare_p99_ms < 10.0);
         assert!(s.swap_pause_p99_us > 10.0 && s.swap_pause_p99_us < 100.0);
         let v = parse(&s.to_json()).unwrap();
         assert_eq!(v.get("standby_promotions").unwrap().as_usize(), Some(2));
         assert_eq!(v.get("standby_rejects").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("standby_rollbacks").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("standby_quarantines").unwrap().as_usize(), Some(1));
         assert!(v.get("prepare_p99_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(v.get("swap_pause_p99_us").unwrap().as_f64().unwrap() > 0.0);
+
+        // a quarantine alone must surface the standby block too (it is
+        // the only signal a stuck snapshot leaves behind)
+        let q = ServeMetrics::new();
+        q.record_quarantine();
+        let v = parse(&q.snapshot().to_json()).unwrap();
+        assert_eq!(v.get("standby_quarantines").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("standby_promotions").unwrap().as_usize(), Some(0));
     }
 
     #[test]

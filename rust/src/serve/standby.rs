@@ -10,7 +10,9 @@
 //!          ┌────────────────────────────────────────────────────┐
 //!          ▼                                                    │
 //!  WATCH: poll the directory, ckpt::peek the fresh snapshots    │
-//!  (manifest-only read — no tensor I/O), newest-manifest-wins   │
+//!  (manifest-only read — no tensor I/O; v1 files and v2 shard   │
+//!  directories alike), newest-manifest-wins; unreadable or      │
+//!  incomplete files retry with bounded backoff, then QUARANTINE │
 //!          │ newer + shape-compatible snapshot                  │
 //!          ▼                                                    │
 //!  PREPARE (off-thread): full CRC-checked ckpt::load,           │
@@ -79,6 +81,15 @@ pub struct StandbyConfig {
     pub probe_every: u32,
     /// snapshots at or below this step are ignored (the booted weights)
     pub initial_step: u64,
+    /// give up on a snapshot that stays unreadable or incomplete after
+    /// this many failed peeks and **quarantine** it (counted in
+    /// `ServeMetrics::standby_quarantines`, never revisited).  Retries
+    /// run every poll for the first 3 attempts — the original
+    /// non-atomic-copy grace window — then back off exponentially
+    /// (2, 4, 8, 16, then every 32 polls), so a permanently truncated
+    /// file costs a bounded number of peeks instead of one per poll
+    /// forever.  0 = retry forever (the pre-quarantine behavior).
+    pub stall_retries: u32,
     /// flat parameter vector of the booted weights (train layout) — the
     /// rollback anchor for the *first* promotion; without it a failed
     /// first-generation probe has nothing to restore
@@ -89,7 +100,8 @@ pub struct StandbyConfig {
 
 impl StandbyConfig {
     /// Defaults: 25 ms poll, 8+8 canaries, drift bound 0.5, probe every
-    /// 4th poll.
+    /// 4th poll, quarantine after 20 failed peeks (≈ 11 s of backoff at
+    /// the 25 ms poll).
     pub fn new(watch_dir: impl Into<PathBuf>) -> Self {
         Self {
             watch_dir: watch_dir.into(),
@@ -99,6 +111,7 @@ impl StandbyConfig {
             drift_max: Some(0.5),
             probe_every: 4,
             initial_step: 0,
+            stall_retries: 20,
             baseline: None,
             verbose: false,
         }
@@ -250,11 +263,36 @@ pub enum StandbyEvent {
     },
     /// a snapshot was refused; the live generation is untouched
     Rejected { step: u64, reason: String },
+    /// a snapshot stayed unreadable/incomplete past the bounded
+    /// retry/backoff budget (`stall_retries`) — e.g. a permanently
+    /// truncated copy — and is now quarantined: counted in
+    /// `ServeMetrics::standby_quarantines`, never peeked again
+    Quarantined { step: u64, reason: String },
     /// a post-promotion probe failed and the previous generation's
     /// weights were reinstalled
     RolledBack { generation: u64, reason: String },
     /// a probe failed but no previous generation is retained to restore
     ProbeFailed { reason: String },
+}
+
+/// Retry bookkeeping for one unreadable/incomplete snapshot file.
+#[derive(Debug, Default)]
+struct Stall {
+    /// failed peeks so far
+    attempts: u32,
+    /// polls to skip before the next peek (the backoff window)
+    skip: u32,
+}
+
+/// Polls to skip after `attempts` failed peeks: the first 3 retry every
+/// poll (the original "non-atomic copy in flight" grace window — cheap
+/// 16-byte reads), then 2, 4, 8, 16, capped at 32 polls between peeks.
+fn backoff_polls(attempts: u32) -> u32 {
+    if attempts <= 3 {
+        0
+    } else {
+        1u32 << (attempts - 3).min(5)
+    }
 }
 
 /// The standby slot: owns the watch cursor, the canary population, the
@@ -268,12 +306,16 @@ pub struct Standby {
     /// highest *promoted manifest* step (starts at `initial_step`) —
     /// snapshots whose manifest is at or below this are stale content
     last_step: u64,
-    /// filename steps already handled (promoted, stale, or rejected
-    /// after a successful peek) — never revisited.  Files whose *peek*
-    /// fails are deliberately NOT added: an unreadable header usually
-    /// means a non-atomic copy still in flight, so they are retried on
-    /// every poll (a failed 16-byte read, cheap) until they parse
+    /// filename steps already handled (promoted, stale, rejected after a
+    /// successful peek, or quarantined) — never revisited.  Files whose
+    /// *peek* fails or reads incomplete are NOT added immediately: an
+    /// unreadable header usually means a non-atomic copy still in
+    /// flight, so they are retried (with backoff, see [`Stall`]) until
+    /// they parse — or until the `stall_retries` budget runs out and
+    /// they are quarantined
     handled_steps: std::collections::HashSet<u64>,
+    /// per-file retry bookkeeping for unreadable/incomplete snapshots
+    stalls: std::collections::HashMap<u64, Stall>,
     /// params of the generation *before* the current one (rollback target)
     anchor: Option<Vec<Vec<f32>>>,
     /// params of the current generation (becomes the anchor on the next
@@ -297,6 +339,7 @@ impl Standby {
             canary,
             last_step,
             handled_steps: std::collections::HashSet::new(),
+            stalls: std::collections::HashMap::new(),
             anchor: None,
             current,
             expected: None,
@@ -304,13 +347,15 @@ impl Standby {
     }
 
     /// One watch-directory scan: peek every not-yet-handled snapshot
-    /// ([`ckpt::peek`] — header + manifest, no tensor I/O) and prepare
-    /// the one with the newest *manifest* step above the cursor
-    /// (filename numbers are advisory: a copied/renamed snapshot may
-    /// carry any name), then promote or reject.  A rejected file is
-    /// marked handled (never retried); an *unreadable* file is retried
-    /// on later polls — it is usually a non-atomic copy still in flight
-    /// — and cannot block a valid sibling, because the cursor only
+    /// ([`ckpt::peek`] — header + manifest, no tensor I/O; for a v2
+    /// shard directory the shards are only `stat`ed) and prepare the one
+    /// with the newest *manifest* step above the cursor (filename
+    /// numbers are advisory: a copied/renamed snapshot may carry any
+    /// name), then promote or reject.  A rejected file is marked handled
+    /// (never retried); an *unreadable or incomplete* file — usually a
+    /// non-atomic copy still in flight — is retried with bounded backoff
+    /// and eventually **quarantined** (see [`StandbyConfig::stall_retries`]),
+    /// and can never block a valid sibling, because the cursor only
     /// advances on promotions.
     pub fn poll_once(&mut self) -> StandbyEvent {
         let fresh: Vec<(u64, PathBuf)> = ckpt::list_snapshots(&self.cfg.watch_dir)
@@ -322,14 +367,28 @@ impl Standby {
         }
         // (manifest step, filename step, path) of the best candidate
         let mut best: Option<(u64, u64, PathBuf)> = None;
+        let mut quarantined: Option<StandbyEvent> = None;
         for (fstep, path) in &fresh {
+            // a stalled file inside its backoff window is not even peeked
+            if let Some(st) = self.stalls.get_mut(fstep) {
+                if st.skip > 0 {
+                    st.skip -= 1;
+                    continue;
+                }
+            }
             match ckpt::peek(path) {
-                // a readable manifest whose blobs are shorter than it
-                // promises is a copy still in flight: preparing it now
+                // a readable manifest whose blobs/shards are shorter than
+                // it promises is a copy still in flight: preparing it now
                 // would CRC-fail and permanently blacklist a snapshot
-                // that is about to become valid — retry on a later poll
-                Ok(p) if !p.is_complete() => {}
+                // that is about to become valid — retry (bounded)
+                Ok(p) if !p.is_complete() => {
+                    let ev = self.note_stall(*fstep, "incomplete past the retry budget");
+                    if quarantined.is_none() {
+                        quarantined = ev;
+                    }
+                }
                 Ok(p) if p.step > self.last_step => {
+                    self.stalls.remove(fstep);
                     let newer = match &best {
                         Some((bs, _, _)) => p.step > *bs,
                         None => true,
@@ -341,16 +400,26 @@ impl Standby {
                 Ok(_) => {
                     // readable, complete, but the manifest is not newer
                     // than what we serve: stale content — never revisit
+                    self.stalls.remove(fstep);
                     self.handled_steps.insert(*fstep);
                 }
-                Err(_) => {
+                Err(e) => {
                     // unreadable header/manifest: likely a copy still in
-                    // flight — skip this poll, retry on the next
+                    // flight — retry (bounded) on later polls
+                    let ev = self.note_stall(
+                        *fstep,
+                        &format!("unreadable past the retry budget: {e}"),
+                    );
+                    if quarantined.is_none() {
+                        quarantined = ev;
+                    }
                 }
             }
         }
         let Some((mstep, fstep, path)) = best else {
-            return StandbyEvent::Idle;
+            // no candidate this poll: surface a quarantine if one fired
+            // (metrics count every one either way)
+            return quarantined.unwrap_or(StandbyEvent::Idle);
         };
         let event = self.prepare_and_promote(mstep, &path);
         match &event {
@@ -366,6 +435,27 @@ impl Standby {
             _ => {}
         }
         event
+    }
+
+    /// Count one failed peek of `fstep`.  Within the budget: schedule the
+    /// next retry (exponential poll backoff) and return `None`.  Budget
+    /// exhausted: quarantine the file — handled forever, counted in
+    /// `ServeMetrics` — and return the event.
+    fn note_stall(&mut self, fstep: u64, reason: &str) -> Option<StandbyEvent> {
+        let max = self.cfg.stall_retries;
+        let st = self.stalls.entry(fstep).or_default();
+        st.attempts += 1;
+        if max > 0 && st.attempts >= max {
+            self.stalls.remove(&fstep);
+            self.handled_steps.insert(fstep);
+            self.engine.metrics().record_quarantine();
+            return Some(StandbyEvent::Quarantined {
+                step: fstep,
+                reason: reason.to_string(),
+            });
+        }
+        st.skip = backoff_polls(st.attempts);
+        None
     }
 
     /// Prepare (CRC-checked load + re-quantize + canary encode) and
@@ -540,6 +630,9 @@ fn log_event(verbose: bool, ev: &StandbyEvent) {
         ),
         StandbyEvent::Rejected { step, reason } => {
             println!("[standby] rejected snapshot step {step}: {reason}")
+        }
+        StandbyEvent::Quarantined { step, reason } => {
+            println!("[standby] QUARANTINED snapshot file step {step}: {reason}")
         }
         StandbyEvent::RolledBack { generation, reason } => println!(
             "[standby] ROLLED BACK to generation {generation}: {reason}"
@@ -956,6 +1049,191 @@ mod tests {
         assert_eq!(promo.canary_embs.len(), 16, "8 images + 8 captions");
         assert_eq!(engine.generation(), 1);
         assert_eq!(engine.metrics().snapshot().standby_promotions, 1);
+    }
+
+    /// The quarantine satellite (ISSUE 5): a permanently truncated file
+    /// must not be re-peeked every poll forever — after `stall_retries`
+    /// failed peeks (with exponential backoff between them) it is
+    /// quarantined, counted, and never revisited, even if the filename
+    /// later becomes valid.  Fails on the pre-fix watcher, which retried
+    /// unconditionally on every poll.
+    #[test]
+    fn permanently_truncated_snapshot_is_quarantined_after_bounded_retries() {
+        let dir = std::env::temp_dir().join("sbck_standby_quarantine");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut cfg = StandbyConfig::new(&dir);
+        cfg.baseline = Some(params.clone());
+        cfg.stall_retries = 5;
+        let mut sb = Standby::new(Arc::clone(&engine), cfg);
+
+        std::fs::write(ckpt::snapshot_path(&dir, 77), b"torn forever").unwrap();
+        let mut polls = 0u32;
+        let ev = loop {
+            polls += 1;
+            assert!(polls < 50, "stalled file was never quarantined");
+            match sb.poll_once() {
+                StandbyEvent::Idle => {}
+                ev => break ev,
+            }
+        };
+        match ev {
+            StandbyEvent::Quarantined { step: 77, reason } => {
+                assert!(reason.contains("unreadable"), "{reason}");
+            }
+            other => panic!("expected quarantine, got {other:?}"),
+        }
+        // attempts 1–3 run back to back, then backoff 2 + 4 polls:
+        // quarantine lands on poll 7 — pinning this proves the backoff
+        // actually spaces the peeks instead of hammering every poll
+        assert_eq!(polls, 7, "exponential backoff schedule changed");
+        let snap = engine.metrics().snapshot();
+        assert_eq!(snap.standby_quarantines, 1);
+        assert_eq!(snap.standby_rejects, 0, "quarantine is not a reject");
+
+        // the quarantined *filename* is dead even once its content heals
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 77),
+            &ckpt_with(perturbed(&params, 1.001), 77, &enc_cfg),
+        )
+        .unwrap();
+        assert!(matches!(sb.poll_once(), StandbyEvent::Idle), "resurrected");
+
+        // …but the watcher itself is healthy: a sibling under a fresh
+        // name (same newer manifest) still promotes
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 78),
+            &ckpt_with(perturbed(&params, 1.001), 78, &enc_cfg),
+        )
+        .unwrap();
+        assert!(matches!(
+            sb.poll_once(),
+            StandbyEvent::Promoted { step: 78, .. }
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// An incomplete v2 shard directory (a copy missing a shard forever)
+    /// follows the same bounded-retry → quarantine path, with the
+    /// incomplete-specific reason.
+    #[test]
+    fn incomplete_shard_directory_quarantines_with_incomplete_reason() {
+        let dir = std::env::temp_dir().join("sbck_standby_quarantine_v2");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut cfg = StandbyConfig::new(&dir);
+        cfg.baseline = Some(params.clone());
+        cfg.stall_retries = 4;
+        let mut sb = Standby::new(Arc::clone(&engine), cfg);
+
+        let snap = ckpt::snapshot_path(&dir, 90);
+        ckpt::save_sharded(&snap, &ckpt_with(perturbed(&params, 1.001), 90, &enc_cfg), 3)
+            .unwrap();
+        std::fs::remove_file(snap.join(ckpt::format::shard_filename(1))).unwrap();
+        let mut polls = 0u32;
+        let ev = loop {
+            polls += 1;
+            assert!(polls < 50, "incomplete shard dir was never quarantined");
+            match sb.poll_once() {
+                StandbyEvent::Idle => {}
+                ev => break ev,
+            }
+        };
+        match ev {
+            StandbyEvent::Quarantined { step: 90, reason } => {
+                assert!(reason.contains("incomplete"), "{reason}");
+            }
+            other => panic!("expected quarantine, got {other:?}"),
+        }
+        assert_eq!(engine.metrics().snapshot().standby_quarantines, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `stall_retries = 0` keeps the old retry-forever behavior.
+    #[test]
+    fn stall_retries_zero_never_quarantines() {
+        let dir = std::env::temp_dir().join("sbck_standby_noquarantine");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut cfg = StandbyConfig::new(&dir);
+        cfg.baseline = Some(params.clone());
+        cfg.stall_retries = 0;
+        let mut sb = Standby::new(Arc::clone(&engine), cfg);
+        std::fs::write(ckpt::snapshot_path(&dir, 55), b"torn").unwrap();
+        for _ in 0..100 {
+            assert!(matches!(sb.poll_once(), StandbyEvent::Idle));
+        }
+        assert_eq!(engine.metrics().snapshot().standby_quarantines, 0);
+        // and it still heals if the copy eventually completes
+        ckpt::save(
+            &ckpt::snapshot_path(&dir, 55),
+            &ckpt_with(perturbed(&params, 1.001), 55, &enc_cfg),
+        )
+        .unwrap();
+        let mut promoted = false;
+        for _ in 0..40 {
+            if matches!(sb.poll_once(), StandbyEvent::Promoted { step: 55, .. }) {
+                promoted = true;
+                break;
+            }
+        }
+        assert!(promoted, "healed file never promoted (backoff too sticky?)");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The watcher promotes v2 shard-directory snapshots exactly like v1
+    /// files — and an incomplete shard dir is retried, then promotes
+    /// once the missing shard lands (the generalized blob-size retry).
+    #[test]
+    fn sharded_snapshots_promote_and_incomplete_shards_are_retried() {
+        let dir = std::env::temp_dir().join("sbck_standby_v2_promote");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engine = engine_from(&params, &enc_cfg);
+        let mut sb = standby_in(&dir, &engine, params.clone());
+
+        // a complete sharded snapshot promotes directly
+        ckpt::save_sharded(
+            &ckpt::snapshot_path(&dir, 10),
+            &ckpt_with(perturbed(&params, 1.001), 10, &enc_cfg),
+            4,
+        )
+        .unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Promoted { step: 10, generation: 1, .. } => {}
+            other => panic!("sharded snapshot did not promote: {other:?}"),
+        }
+
+        // mid-copy: shard missing → skipped, not rejected; restore → promoted
+        let snap = ckpt::snapshot_path(&dir, 20);
+        ckpt::save_sharded(
+            &snap,
+            &ckpt_with(perturbed(&params, 1.002), 20, &enc_cfg),
+            4,
+        )
+        .unwrap();
+        let shard1 = snap.join(ckpt::format::shard_filename(1));
+        let bytes = std::fs::read(&shard1).unwrap();
+        std::fs::remove_file(&shard1).unwrap();
+        assert!(matches!(sb.poll_once(), StandbyEvent::Idle), "mid-copy skip");
+        assert_eq!(engine.metrics().snapshot().standby_rejects, 0);
+        std::fs::write(&shard1, &bytes).unwrap();
+        match sb.poll_once() {
+            StandbyEvent::Promoted { step: 20, generation: 2, .. } => {}
+            other => panic!("completed shard dir was not retried: {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// End to end through the spawned thread: drop a snapshot into the

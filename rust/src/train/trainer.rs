@@ -70,6 +70,15 @@ pub struct NativeTrainConfig {
     pub ckpt_dir: Option<String>,
     /// retention: keep only the newest K disk snapshots
     pub ckpt_keep: usize,
+    /// shard count per snapshot (`--ckpt-shards`): ≤ 1 writes the v1
+    /// single file, ≥ 2 the v2 manifest-of-shards directory (shards
+    /// encoded/CRC'd/written in parallel)
+    pub ckpt_shards: usize,
+    /// background saves (`--ckpt-async`): capture the state at the step
+    /// boundary and serialize + write it on a dedicated saver thread so
+    /// the step loop never blocks on disk; joined (and error-checked)
+    /// before the run reports complete
+    pub ckpt_async: bool,
     /// spike-rollback guard: when the loss spikes, restore the last
     /// in-memory snapshot (model + optimizer) and skip the offending
     /// shard window instead of training through it
@@ -116,6 +125,8 @@ impl NativeTrainConfig {
             ckpt_every: 0,
             ckpt_dir: None,
             ckpt_keep: 3,
+            ckpt_shards: 1,
+            ckpt_async: false,
             rollback_on_spike: false,
             spike_sigma: crate::telemetry::DEFAULT_LOSS_SIGMA,
             spike_cooldown: 3 * DEDUP_WINDOW,
@@ -668,6 +679,10 @@ impl NativeTrainer {
         // --- checkpoint / rollback machinery -------------------------
         let ckpt_dir = self.cfg.ckpt_dir.as_ref().map(std::path::PathBuf::from);
         let disk_every = if ckpt_dir.is_some() { self.cfg.ckpt_every } else { 0 };
+        // --ckpt-async: a dedicated saver thread pays for serialization +
+        // CRC + disk; the step loop only pays the step-boundary capture
+        let mut saver = (disk_every > 0 && self.cfg.ckpt_async)
+            .then(ckpt::AsyncSaver::spawn);
         // the guard restores from an in-memory snapshot; refresh it on the
         // disk cadence when one is configured, else every dedup window
         let mem_every = if self.cfg.rollback_on_spike {
@@ -777,12 +792,31 @@ impl NativeTrainer {
             }
             if disk_every > 0 && (step % disk_every == 0 || step == h.steps) {
                 let dir = ckpt_dir.as_ref().expect("disk_every implies ckpt_dir");
+                let path = ckpt::snapshot_path(dir, step);
+                // the capture *is* the step-boundary copy (an O(bytes)
+                // memcpy of params + moments + cursor); everything after
+                // it — encode, CRC, disk — can leave the step loop
                 let ck = self.capture(step, &params, opt.export_state());
-                let st = ckpt::save(&ckpt::snapshot_path(dir, step), &ck)?;
-                snapshots += 1;
-                ckpt_bytes += st.bytes;
-                ckpt_save_secs += st.secs;
-                ckpt::prune_snapshots(dir, self.cfg.ckpt_keep);
+                match &saver {
+                    Some(sv) => {
+                        sv.enqueue(path, ck, self.cfg.ckpt_shards);
+                        // retention must not race the saver: in-flight
+                        // paths are excluded from count and deletion
+                        ckpt::prune_snapshots_guarded(
+                            dir,
+                            self.cfg.ckpt_keep,
+                            &sv.in_flight(),
+                        );
+                    }
+                    None => {
+                        let st =
+                            ckpt::save_sharded(&path, &ck, self.cfg.ckpt_shards)?;
+                        snapshots += 1;
+                        ckpt_bytes += st.bytes;
+                        ckpt_save_secs += st.secs;
+                        ckpt::prune_snapshots(dir, self.cfg.ckpt_keep);
+                    }
+                }
             }
 
             let step_ms = step_t0.elapsed().as_secs_f64() * 1e3;
@@ -815,6 +849,21 @@ impl NativeTrainer {
             sink.log(rec);
         }
         let elapsed = run_t0.elapsed().as_secs_f32();
+
+        // join-on-exit guard: drain and error-check every background save
+        // before this run reports complete (steps/s above deliberately
+        // excludes the drain — that wall time never blocked a step)
+        if let Some(sv) = saver.take() {
+            let totals = sv.finish()?;
+            snapshots += totals.snapshots;
+            ckpt_bytes += totals.bytes;
+            ckpt_save_secs += totals.secs;
+            if let Some(dir) = &ckpt_dir {
+                // the cadence prunes skipped in-flight paths; enforce the
+                // final retention now that everything is committed
+                ckpt::prune_snapshots(dir, self.cfg.ckpt_keep);
+            }
+        }
 
         let zero_shot_acc = if self.cfg.eval_per_concept > 0 {
             Some(self.zero_shot_eval(self.cfg.eval_per_concept))
@@ -1122,6 +1171,74 @@ mod tests {
             assert_eq!(full_tail, res_trace, "[threads={threads}] loss trace diverged");
         }
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The async-save contract (ISSUE 5 tentpole): a `--ckpt-async
+    /// --ckpt-shards N` run writes snapshots **bit-identical** to the
+    /// synchronous single-file run's — and `--resume` from a sharded
+    /// async snapshot continues bit-identically — under both
+    /// SWITCHBACK_THREADS=1 and =4.
+    #[test]
+    fn async_sharded_snapshots_match_sync_and_resume_bit_identically() {
+        let dir_sync = std::env::temp_dir().join("sbck_async_sync_a");
+        let dir_async = std::env::temp_dir().join("sbck_async_sync_b");
+        for threads in ["1", "4"] {
+            let _guard = ThreadsEnvGuard::set(threads);
+            let _ = std::fs::remove_dir_all(&dir_sync);
+            let _ = std::fs::remove_dir_all(&dir_async);
+            let steps = 12u64;
+            let k = 5u64;
+            let mut cfg = tiny_cfg(LinearKind::SwitchBack, steps);
+            cfg.ckpt_every = k;
+            cfg.ckpt_keep = 10;
+
+            let mut sync_cfg = cfg.clone();
+            sync_cfg.ckpt_dir = Some(dir_sync.to_str().unwrap().to_string());
+            let sync_res = NativeTrainer::new(sync_cfg).run(false).unwrap();
+
+            let mut async_cfg = cfg.clone();
+            async_cfg.ckpt_dir = Some(dir_async.to_str().unwrap().to_string());
+            async_cfg.ckpt_shards = 3;
+            async_cfg.ckpt_async = true;
+            let mut async_trainer = NativeTrainer::new(async_cfg);
+            let async_res = async_trainer.run(false).unwrap();
+            assert_eq!(
+                async_res.snapshots, sync_res.snapshots,
+                "[threads={threads}] the saver must drain every queued save"
+            );
+            assert!(async_res.ckpt_bytes > 0);
+
+            // every snapshot pair decodes to the same checkpoint, and the
+            // async one really is the sharded v2 layout
+            for step in [k, 2 * k, steps] {
+                let a = ckpt::snapshot_path(&dir_sync, step);
+                let b = ckpt::snapshot_path(&dir_async, step);
+                assert!(b.is_dir(), "[threads={threads}] expected a v2 dir");
+                assert_eq!(ckpt::peek(&b).unwrap().version, ckpt::FORMAT_VERSION_V2);
+                let (ca, _) = ckpt::load(&a).unwrap();
+                let (cb, _) = ckpt::load(&b).unwrap();
+                assert_eq!(ca.params, cb.params, "[threads={threads}] step {step}");
+                assert_eq!(ca.opt, cb.opt, "[threads={threads}] step {step}");
+                assert_eq!(ca.data, cb.data, "[threads={threads}] step {step}");
+            }
+
+            // resume from the sharded async snapshot: bit-identical tail
+            let (ck, _) = ckpt::load(&ckpt::snapshot_path(&dir_async, k)).unwrap();
+            let mut resumed = NativeTrainer::new(cfg.clone());
+            resumed.restore(&ck).unwrap();
+            let _ = resumed.run(false).unwrap();
+            let full_ck = async_trainer.final_checkpoint().unwrap();
+            let resumed_ck = resumed.final_checkpoint().unwrap();
+            assert_eq!(
+                resumed_ck.params, full_ck.params,
+                "[threads={threads}] weights diverged resuming from a \
+                 sharded async snapshot"
+            );
+            assert_eq!(resumed_ck.opt, full_ck.opt, "[threads={threads}]");
+            assert_eq!(resumed_ck.data, full_ck.data, "[threads={threads}]");
+        }
+        std::fs::remove_dir_all(&dir_sync).ok();
+        std::fs::remove_dir_all(&dir_async).ok();
     }
 
     /// Restore fails closed on mismatched hyper/shape/schedule.

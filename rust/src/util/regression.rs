@@ -10,10 +10,12 @@
 //!   serve, the swap-mode invariants (zero failed requests, ≥1 promotion,
 //!   tail latency within [`SWAP_TAIL_FACTOR`]× of the same document's
 //!   single-generation run), the learning invariants (loss decreased, no
-//!   divergence, spike counts) for train, and the standby
-//!   promote/reject/rollback counters for the ckpt pipeline.  This is
-//!   what CI runs against the committed baseline, which was measured on
-//!   different hardware.
+//!   divergence, spike counts) for train, and — for the ckpt pipeline —
+//!   the standby promote/reject/rollback/quarantine counters plus the
+//!   sharded-snapshot invariants (`sharded_bit_identical`, shard count,
+//!   and the shard metrics not vanishing once the baseline records them).
+//!   This is what CI runs against the committed baseline, which was
+//!   measured on different hardware.
 //! * **strict**: additionally gates absolute requests/sec, p99 and
 //!   steps/sec entry-by-entry.  Use when old and new were measured on the
 //!   same machine (e.g. bisecting a local regression).
@@ -416,6 +418,25 @@ fn compare_ckpt(
                 ));
             }
         }
+        // a quarantine means the watcher gave up on a staged snapshot —
+        // the pipeline's atomic staging must never produce one
+        if let Some(q) = opt_num(r, &tag, "standby_quarantines")? {
+            if q > 0.0 {
+                regs.push(format!(
+                    "{tag}: {q:.0} snapshot(s) quarantined by the standby watcher"
+                ));
+            }
+        }
+        // sharded-snapshot invariant (present since the v2 pipeline): the
+        // async sharded save must stay bit-identical to the sync v1 save
+        if let Some(v) = r.get("sharded_bit_identical") {
+            if v.as_bool() != Some(true) {
+                regs.push(format!(
+                    "{tag}: sharded async snapshot no longer bit-identical \
+                     to the synchronous save (sharded_bit_identical != true)"
+                ));
+            }
+        }
         let acc = req_num(r, &tag, "eval_acc")?;
         let Some(o) = on.iter().find(|o| s(o, "kind") == kind) else {
             continue;
@@ -443,6 +464,33 @@ fn compare_ckpt(
                 _ => {}
             }
         }
+        // shard metrics must not vanish once the baseline records them —
+        // absence of gated data never reads as a pass (the same rule the
+        // standby counters follow)
+        for key in [
+            "ckpt_shards",
+            "shard_save_mb_s",
+            "shard_load_mb_s",
+            "sharded_bit_identical",
+        ] {
+            if o.get(key).is_some() && r.get(key).is_none() {
+                regs.push(format!(
+                    "{tag}: baseline records {key} but the new run omits it"
+                ));
+            }
+        }
+        // the scenario's shard count is deterministic: falling below the
+        // baseline means the sharded path silently stopped being exercised
+        if let (Some(ov), Some(nv)) = (
+            opt_num(o, &tag, "ckpt_shards")?,
+            opt_num(r, &tag, "ckpt_shards")?,
+        ) {
+            if nv < ov {
+                regs.push(format!(
+                    "{tag}: pipeline shard count fell {ov:.0} → {nv:.0}"
+                ));
+            }
+        }
         let oacc = req_num(o, &tag, "eval_acc")?;
         if oacc > 0.0 && acc < oacc * (1.0 - tol) {
             regs.push(format!(
@@ -458,6 +506,20 @@ fn compare_ckpt(
                         "{tag}: {key} {ov:.1} → {nv:.1} MB/s (> {:.0}% drop)",
                         tol * 100.0
                     ));
+                }
+            }
+            // shard throughput: machine absolutes, gated only when both
+            // documents carry them (older baselines predate the fields)
+            for key in ["shard_save_mb_s", "shard_load_mb_s"] {
+                if let (Some(ov), Some(nv)) =
+                    (opt_num(o, &tag, key)?, opt_num(r, &tag, key)?)
+                {
+                    if ov > 0.0 && nv < ov * (1.0 - tol) {
+                        regs.push(format!(
+                            "{tag}: {key} {ov:.1} → {nv:.1} MB/s (> {:.0}% drop)",
+                            tol * 100.0
+                        ));
+                    }
                 }
             }
             let (op, np) = (
@@ -807,6 +869,77 @@ mod tests {
         // counters vanishing from the fresh run fail closed too
         let regs = compare_bench(&base, &old_schema, 0.15, false).unwrap();
         assert!(regs.iter().any(|r| r.contains("omits")), "{regs:?}");
+    }
+
+    /// A ckpt entry carrying the v2 shard fields: the sharded-snapshot
+    /// invariants gate bit-identity, quarantines, shard-count shrinkage,
+    /// and the fields vanishing — and strict gates the shard MB/s.
+    fn ckpt_doc_sharded(
+        identical: bool,
+        quarantines: u64,
+        shards: u64,
+        shard_save: f64,
+    ) -> Value {
+        parse(&format!(
+            r#"{{"bench":"ckpt_pipeline","config":{{}},"results":[
+                {{"kind":"switchback","dropped_requests":0,
+                  "round_trip_ok":true,"eval_matches_model":true,
+                  "cache_invalidated":true,"weights_changed":true,
+                  "eval_acc":0.8,"save_mb_s":100.0,"load_mb_s":100.0,
+                  "ckpt_shards":{shards},"shard_save_mb_s":{shard_save},
+                  "shard_load_mb_s":{shard_save},
+                  "sharded_bit_identical":{identical},
+                  "standby_quarantines":{quarantines},
+                  "hot_swap_pause_us":50.0}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn ckpt_shard_invariants_are_gated() {
+        let base = ckpt_doc_sharded(true, 0, 4, 200.0);
+        assert!(compare_bench(&base, &base, 0.15, false).unwrap().is_empty());
+        // an old baseline without shard fields still compares cleanly
+        let old_schema = ckpt_doc(0, true, 0.8, 100.0, 50.0);
+        assert!(compare_bench(&old_schema, &base, 0.15, false)
+            .unwrap()
+            .is_empty());
+
+        // bit-identity broken: caught portably
+        let broken = ckpt_doc_sharded(false, 0, 4, 200.0);
+        let regs = compare_bench(&base, &broken, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("sharded_bit_identical")),
+            "{regs:?}"
+        );
+
+        // a quarantined snapshot: caught portably
+        let quarantined = ckpt_doc_sharded(true, 2, 4, 200.0);
+        let regs = compare_bench(&base, &quarantined, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("quarantined")), "{regs:?}");
+
+        // shard count shrank vs the baseline scenario: caught
+        let fewer = ckpt_doc_sharded(true, 0, 1, 200.0);
+        let regs = compare_bench(&base, &fewer, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("shard count")), "{regs:?}");
+
+        // the shard fields vanishing from a fresh run fails closed
+        let regs = compare_bench(&base, &old_schema, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("omits")),
+            "shard metrics absence must not read as a pass: {regs:?}"
+        );
+
+        // shard MB/s is a machine absolute: portable ignores a collapse,
+        // strict catches it
+        let slow = ckpt_doc_sharded(true, 0, 4, 20.0);
+        assert!(compare_bench(&base, &slow, 0.15, false).unwrap().is_empty());
+        let regs = compare_bench(&base, &slow, 0.15, true).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("shard_save_mb_s")),
+            "{regs:?}"
+        );
     }
 
     #[test]

@@ -88,6 +88,19 @@ where
     out.into_iter().map(|v| v.unwrap()).collect()
 }
 
+/// Fallible [`par_map`]: run `f` over `0..n` in parallel and collect the
+/// results, returning the lowest-index error if any call failed.  Every
+/// call still runs (scoped threads cannot abort siblings mid-flight); the
+/// deterministic index-order error pick keeps failures reproducible
+/// across thread counts.  Used by the sharded checkpoint reader/writer
+/// (`ckpt::format`), where each shard's I/O + CRC runs on its own worker.
+pub fn par_try_map<R: Send, E: Send, F>(n: usize, f: F) -> Result<Vec<R>, E>
+where
+    F: Fn(usize) -> Result<R, E> + Sync,
+{
+    par_map(n, f).into_iter().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,5 +134,18 @@ mod tests {
         par_chunks_mut(&mut e, 4, |_, _| panic!("must not be called"));
         let out: Vec<usize> = par_map(1, |i| i);
         assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    fn par_try_map_collects_or_fails_deterministically() {
+        let ok: Result<Vec<usize>, String> = par_try_map(100, |i| Ok(i * 2));
+        assert_eq!(ok.unwrap()[99], 198);
+        // multiple failures: the lowest index wins regardless of which
+        // worker finished first
+        let err: Result<Vec<usize>, String> =
+            par_try_map(100, |i| if i % 7 == 3 { Err(format!("bad {i}")) } else { Ok(i) });
+        assert_eq!(err.unwrap_err(), "bad 3");
+        let none: Result<Vec<usize>, String> = par_try_map(0, |_| Err("x".into()));
+        assert!(none.unwrap().is_empty());
     }
 }

@@ -74,21 +74,25 @@ echo "== train smoke (BENCH_train.json) =="
     --out "$REPO_ROOT/BENCH_train.json"
 
 echo
-echo "== ckpt pipeline: train → watcher promotes snapshots mid-traffic → eval (BENCH_ckpt.json) =="
+echo "== ckpt pipeline: sharded async train → watcher promotes v2 snapshots mid-traffic → eval (BENCH_ckpt.json) =="
 CKPT_PIPE="$REPO_ROOT/ckpts_verify_pipeline"
 rm -rf "$CKPT_PIPE"
-# hard-fails internally on: round-trip mismatch, dropped requests during
-# the watcher-driven promotions, a promoted (instead of canary-rejected)
-# drift injection, or serve/train encode divergence
+# hard-fails internally on: round-trip mismatch, a sharded async snapshot
+# that is not bit-identical to the synchronous v1 save of the same step,
+# dropped requests during the watcher-driven promotions, a promoted
+# (instead of canary-rejected) drift injection, a quarantined staging
+# hand-off, or serve/train encode divergence
 "$BIN" pipeline \
     --steps "$PIPE_STEPS" \
     --requests "$PIPE_REQUESTS" \
     --ckpt-dir "$CKPT_PIPE" \
+    --ckpt-shards 4 \
     --out "$REPO_ROOT/BENCH_ckpt.json" \
     --quiet
 # belt and braces on top of the command's own asserts: the artifact must
 # record ≥3 watcher promotions, the injected-drift rejection, no
-# rollbacks and zero dropped requests
+# rollbacks/quarantines, zero dropped requests, and the sharded snapshot
+# invariants (4 shards, bit-identical to the sync save)
 # note the trailing comma in each pattern: it pins the exact value
 # (":3" alone would also match 30)
 grep -q '"standby_promotions":3,' "$REPO_ROOT/BENCH_ckpt.json" \
@@ -97,19 +101,27 @@ grep -q '"standby_rejects":1,' "$REPO_ROOT/BENCH_ckpt.json" \
     || { echo "pipeline smoke FAILED: drift injection was not rejected exactly once" >&2; exit 1; }
 grep -q '"standby_rollbacks":0,' "$REPO_ROOT/BENCH_ckpt.json" \
     || { echo "pipeline smoke FAILED: unexpected rollback" >&2; exit 1; }
+grep -q '"standby_quarantines":0,' "$REPO_ROOT/BENCH_ckpt.json" \
+    || { echo "pipeline smoke FAILED: a staged snapshot was quarantined" >&2; exit 1; }
 grep -q '"dropped_requests":0,' "$REPO_ROOT/BENCH_ckpt.json" \
     || { echo "pipeline smoke FAILED: dropped requests during promotions" >&2; exit 1; }
+grep -q '"ckpt_shards":4,' "$REPO_ROOT/BENCH_ckpt.json" \
+    || { echo "pipeline smoke FAILED: snapshots were not sharded 4 ways" >&2; exit 1; }
+grep -q '"sharded_bit_identical":true,' "$REPO_ROOT/BENCH_ckpt.json" \
+    || { echo "pipeline smoke FAILED: sharded async snapshot != sync v1 save" >&2; exit 1; }
 
 echo
-echo "== standby smoke: train → watcher picks up the newer snapshot → canary promote =="
+echo "== standby smoke: sharded async train → watcher promotes the newer v2 snapshot =="
 CKPT_STANDBY="$REPO_ROOT/ckpts_verify_standby"
 rm -rf "$CKPT_STANDBY"
-# two snapshots (steps 10 and 20); serve boots the older one with the
-# watcher pointed at the same directory — the smoke waits for (and
-# asserts) the canary-validated promotion of step 20, then the usual
-# probe/cache checks run on the promoted generation
+# two sharded snapshots written by the background saver (steps 10 and
+# 20); serve boots the older shard *directory* with the watcher pointed
+# at the same directory — the smoke waits for (and asserts) the
+# canary-validated promotion of the sharded step-20 snapshot, then the
+# usual probe/cache checks run on the promoted generation
 "$BIN" train --kind switchback --steps 20 \
     --ckpt-every 10 --ckpt-dir "$CKPT_STANDBY" --eval-per-concept 0 \
+    --ckpt-shards 4 --ckpt-async \
     --out "$REPO_ROOT/.bench_standby_smoke.json" -q
 STANDBY_OUT="$("$BIN" serve --kind switchback \
     --weights "$CKPT_STANDBY/ckpt-00000010.sbck" \
@@ -119,21 +131,25 @@ echo "$STANDBY_OUT" | grep -q "standby: promoted to generation 1" \
     || { echo "standby smoke FAILED: watcher did not promote the newer snapshot" >&2; exit 1; }
 echo "$STANDBY_OUT" | grep -q "serve smoke OK" \
     || { echo "standby smoke FAILED: serve probes failed after promotion" >&2; exit 1; }
-echo "standby smoke OK — watcher promoted the newer snapshot under canary validation"
+echo "standby smoke OK — watcher promoted the newer sharded snapshot under canary validation"
 rm -rf "$CKPT_STANDBY" "$REPO_ROOT/.bench_standby_smoke.json"
 
 echo
-echo "== ckpt resume smoke: interrupted + resumed == uninterrupted =="
+echo "== ckpt resume smoke: interrupted + resumed == uninterrupted (v1 sync vs v2 async) =="
 CKPT_A="$REPO_ROOT/ckpts_verify_a"
 CKPT_B="$REPO_ROOT/ckpts_verify_b"
 rm -rf "$CKPT_A" "$CKPT_B"
-# one 40-step run snapshotting at 20/40, then a second trainer resumed
-# from the step-20 snapshot; both step-40 snapshots must be bit-identical
+# one 40-step run snapshotting v1 single files at 20/40, then a second
+# trainer resumed from the step-20 snapshot writing *sharded async* (v2)
+# snapshots; the v1 and v2 step-40 snapshots must be bit-identical —
+# this greps the cross-version + background-save identity through the
+# CLI surface (`ckpt diff` over a file and a shard directory)
 "$BIN" train --kind switchback --steps 40 \
     --ckpt-every 20 --ckpt-dir "$CKPT_A" --eval-per-concept 0 \
     --out "$REPO_ROOT/.bench_ckpt_smoke_a.json" -q
 "$BIN" train --resume "$CKPT_A/ckpt-00000020.sbck" \
     --ckpt-every 20 --ckpt-dir "$CKPT_B" --eval-per-concept 0 \
+    --ckpt-shards 4 --ckpt-async \
     --out "$REPO_ROOT/.bench_ckpt_smoke_b.json" -q
 "$BIN" ckpt inspect "$CKPT_B/ckpt-00000040.sbck"
 DIFF_OUT="$("$BIN" ckpt diff "$CKPT_A/ckpt-00000040.sbck" "$CKPT_B/ckpt-00000040.sbck")"
