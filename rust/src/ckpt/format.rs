@@ -58,6 +58,7 @@ use crate::data::{DataCursor, Shift};
 use crate::nn::LinearKind;
 use crate::optim::OptimizerState;
 use crate::serve::EncoderConfig;
+use crate::trace;
 use crate::util::crc32::crc32;
 use crate::util::json::{self, ObjWriter, Value};
 use crate::util::threads::{par_map, par_try_map};
@@ -788,17 +789,21 @@ fn ensure_parent(path: &Path) -> Result<()> {
 /// # Ok::<(), anyhow::Error>(())
 /// ```
 pub fn save(path: &Path, ck: &TrainCheckpoint) -> Result<IoStats> {
+    let _sp = trace::span("ckpt.save", "ckpt");
     let entries = blob_entries(ck)?;
     let t0 = Instant::now();
     // encode every blob once; offsets/crcs feed the manifest, bytes the file
     let mut blob_meta: Vec<(String, usize, u64, u32)> = vec![];
     let mut blob_bytes: Vec<Vec<u8>> = vec![];
     let mut offset = 0u64;
-    for (name, data) in &entries {
-        let b = f32s_to_le_bytes(data);
-        blob_meta.push((name.clone(), data.len(), offset, crc32(&b)));
-        offset += b.len() as u64;
-        blob_bytes.push(b);
+    {
+        let _enc = trace::span("ckpt.encode", "ckpt");
+        for (name, data) in &entries {
+            let b = f32s_to_le_bytes(data);
+            blob_meta.push((name.clone(), data.len(), offset, crc32(&b)));
+            offset += b.len() as u64;
+            blob_bytes.push(b);
+        }
     }
     let tensors: Vec<String> = blob_meta
         .iter()
@@ -831,9 +836,14 @@ pub fn save(path: &Path, ck: &TrainCheckpoint) -> Result<IoStats> {
     ensure_parent(path)?;
     let tmp = path.with_extension("sbck.tmp");
     remove_path(&tmp)?; // a crashed v2 staging dir may squat on the name
-    std::fs::write(&tmp, &out).with_context(|| format!("writing {tmp:?}"))?;
-    rename_over(&tmp, path)?;
-    Ok(IoStats { bytes: out.len() as u64, secs: t0.elapsed().as_secs_f64() })
+    {
+        let _wr = trace::span("ckpt.write", "ckpt");
+        std::fs::write(&tmp, &out).with_context(|| format!("writing {tmp:?}"))?;
+        rename_over(&tmp, path)?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    trace::global().histogram("ckpt.save_ns").record((secs * 1e9) as u64);
+    Ok(IoStats { bytes: out.len() as u64, secs })
 }
 
 /// Serialize `ck` to `path` as a **v2 manifest-of-shards directory**:
@@ -850,18 +860,26 @@ pub fn save_sharded(path: &Path, ck: &TrainCheckpoint, shards: usize) -> Result<
     if shards <= 1 {
         return save(path, ck);
     }
+    let _sp = trace::span("ckpt.save", "ckpt");
     let entries = blob_entries(ck)?;
     let t0 = Instant::now();
     let sizes: Vec<usize> = entries.iter().map(|(_, d)| d.len() * 4).collect();
     let plan = shard_plan(&sizes, shards);
     // encode + CRC every shard in parallel (the compute half of a save)
     let encoded: Vec<(Vec<u8>, u32)> = par_map(plan.len(), |s| {
-        let mut bytes =
-            Vec::with_capacity(plan[s].clone().map(|t| sizes[t]).sum::<usize>());
-        for (_, data) in &entries[plan[s].clone()] {
-            bytes.extend_from_slice(&f32s_to_le_bytes(data));
-        }
-        let crc = crc32(&bytes);
+        let bytes = {
+            let _enc = trace::span_n("ckpt.shard_encode", "ckpt", s as u32);
+            let mut bytes =
+                Vec::with_capacity(plan[s].clone().map(|t| sizes[t]).sum::<usize>());
+            for (_, data) in &entries[plan[s].clone()] {
+                bytes.extend_from_slice(&f32s_to_le_bytes(data));
+            }
+            bytes
+        };
+        let crc = {
+            let _crc = trace::span_n("ckpt.shard_crc", "ckpt", s as u32);
+            crc32(&bytes)
+        };
         (bytes, crc)
     });
 
@@ -906,6 +924,7 @@ pub fn save_sharded(path: &Path, ck: &TrainCheckpoint, shards: usize) -> Result<
         .with_context(|| format!("creating {staging:?}"))?;
     // shards first, in parallel, each atomically (temp + rename)
     par_try_map(encoded.len(), |s| -> Result<()> {
+        let _wr = trace::span_n("ckpt.shard_write", "ckpt", s as u32);
         let tmp = staging.join(format!("{}.tmp", shard_filename(s)));
         let dst = staging.join(shard_filename(s));
         std::fs::write(&tmp, &encoded[s].0).with_context(|| format!("writing {tmp:?}"))?;
@@ -920,13 +939,18 @@ pub fn save_sharded(path: &Path, ck: &TrainCheckpoint, shards: usize) -> Result<
     head.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
     head.extend_from_slice(manifest.as_bytes());
     let mtmp = staging.join(format!("{MANIFEST_FILE}.tmp"));
-    std::fs::write(&mtmp, &head).with_context(|| format!("writing {mtmp:?}"))?;
-    std::fs::rename(&mtmp, staging.join(MANIFEST_FILE))
-        .with_context(|| format!("committing {MANIFEST_FILE} in {staging:?}"))?;
-    rename_over(&staging, path)?;
+    {
+        let _mf = trace::span("ckpt.manifest", "ckpt");
+        std::fs::write(&mtmp, &head).with_context(|| format!("writing {mtmp:?}"))?;
+        std::fs::rename(&mtmp, staging.join(MANIFEST_FILE))
+            .with_context(|| format!("committing {MANIFEST_FILE} in {staging:?}"))?;
+        rename_over(&staging, path)?;
+    }
     let bytes =
         head.len() as u64 + encoded.iter().map(|(b, _)| b.len() as u64).sum::<u64>();
-    Ok(IoStats { bytes, secs: t0.elapsed().as_secs_f64() })
+    let secs = t0.elapsed().as_secs_f64();
+    trace::global().histogram("ckpt.save_ns").record((secs * 1e9) as u64);
+    Ok(IoStats { bytes, secs })
 }
 
 /// Deserialize and integrity-check a checkpoint — v1 single file or v2
@@ -937,6 +961,7 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
     if path.is_dir() {
         return load_dir(path);
     }
+    let _sp = trace::span("ckpt.load", "ckpt");
     let t0 = Instant::now();
     let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
     let bytes = raw.len() as u64;
@@ -1004,12 +1029,15 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
     }
 
     let ck = assemble(core, names, blobs);
-    Ok((ck, IoStats { bytes, secs: t0.elapsed().as_secs_f64() }))
+    let secs = t0.elapsed().as_secs_f64();
+    trace::global().histogram("ckpt.load_ns").record((secs * 1e9) as u64);
+    Ok((ck, IoStats { bytes, secs }))
 }
 
 /// The v2 read path: parse the root manifest, then read + CRC-check every
 /// shard file in parallel and slice the tensors out of their shards.
 fn load_dir(dir: &Path) -> Result<(TrainCheckpoint, IoStats)> {
+    let _sp = trace::span("ckpt.load", "ckpt");
     let t0 = Instant::now();
     let (m, _mlen, manifest_bytes) = read_dir_manifest(dir)?;
     let core = manifest_core(&m)?;
@@ -1017,6 +1045,7 @@ fn load_dir(dir: &Path) -> Result<(TrainCheckpoint, IoStats)> {
 
     // parallel streaming read: each worker reads and CRC-checks one shard
     let shard_bufs: Vec<Vec<u8>> = par_try_map(shards.len(), |s| -> Result<Vec<u8>> {
+        let _rd = trace::span_n("ckpt.shard_read", "ckpt", s as u32);
         let (file, bytes, crc) = &shards[s];
         let p = dir.join(file);
         let b = std::fs::read(&p).with_context(|| format!("reading shard {p:?}"))?;
@@ -1067,7 +1096,9 @@ fn load_dir(dir: &Path) -> Result<(TrainCheckpoint, IoStats)> {
     }
     let ck = assemble(core, names, blobs);
     let bytes = manifest_bytes + shard_bufs.iter().map(|b| b.len() as u64).sum::<u64>();
-    Ok((ck, IoStats { bytes, secs: t0.elapsed().as_secs_f64() }))
+    let secs = t0.elapsed().as_secs_f64();
+    trace::global().histogram("ckpt.load_ns").record((secs * 1e9) as u64);
+    Ok((ck, IoStats { bytes, secs }))
 }
 
 #[cfg(test)]

@@ -32,7 +32,11 @@
 //!   - [`ckpt`] is the subsystem that joins the two: versioned, CRC-checked
 //!     binary checkpoints of model + optimizer + RNG/schedule state, giving
 //!     the trainer bit-identical `--resume` and spike-rollback, and the
-//!     serving engine `--weights` load-at-boot plus live weight hot-swap.
+//!     serving engine `--weights` load-at-boot plus live weight hot-swap,
+//!   - [`trace`] is the cross-cutting observability substrate: an
+//!     always-on span profiler, one metrics registry shared by
+//!     train/serve/ckpt, and the spike flight recorder that dumps the
+//!     paper's `g²/v` under-estimation probes when a spike fires.
 //!
 //! Python never runs on the training path: `make artifacts` lowers the
 //! model once; the `switchback` binary is then self-contained.
@@ -55,6 +59,7 @@ pub mod runtime;
 pub mod serve;
 pub mod telemetry;
 pub mod tensor;
+pub mod trace;
 pub mod train;
 pub mod util;
 

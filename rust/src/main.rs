@@ -33,6 +33,7 @@ use switchback::serve::{
     EncodeInput, EncoderConfig, Engine, LoadgenConfig, ServeConfig, ServeSnapshot,
 };
 use switchback::tensor::Rng;
+use switchback::trace;
 use switchback::train::{
     write_bench_train_json, ClipTrainModel, NativeTrainConfig, NativeTrainer,
 };
@@ -73,6 +74,14 @@ USAGE:
                                             writes BENCH_ckpt.json
   switchback ckpt inspect <path>            checkpoint manifest + CRC check
   switchback ckpt diff <a> <b>              tensor-by-tensor comparison
+  switchback trace export <dump> [--out P]  raw span dump (--trace-out) →
+                                            Chrome trace-event JSON (open
+                                            in Perfetto / chrome://tracing)
+  switchback trace top <dump>               per-span time table from a
+                                            raw span dump
+  switchback trace spikes <dump>            lead–lag forensics on a
+                                            flight-recorder dump
+                                            (--flight-out)
   switchback benchdiff <baseline> <new>     bench-regression gate
                                             [--tol X --strict]
 
@@ -123,11 +132,22 @@ TRAIN OPTIONS (native):
   --spike-cooldown N     steps the guard stays quiet after firing while
                          the loss baseline adapts (default: 30 = 3x the
                          Appendix-D dedup window)
+  --trace-out PATH       write the run's raw span dump at exit (convert
+                         with `switchback trace export`, summarize with
+                         `switchback trace top`)
+  --flight-out PATH      arm the spike flight recorder: when the rollback
+                         guard fires (or, post-hoc, the loss-spike
+                         detector) the last K steps of full-fidelity
+                         probes — per-tensor RMS_t and the g²/v
+                         under-estimation ratio — are dumped here as
+                         forensic JSON (`switchback trace spikes`)
+  --flight-window K      flight-recorder window in steps (default: 64)
   --resume PATH          continue bit-identically from a checkpoint file
                          or directory; shape/schedule/optimizer flags
                          conflict (the checkpoint's values apply) and
                          only run-control flags (--out, --metrics,
-                         --ckpt-*, --quiet) are accepted
+                         --ckpt-*, --trace-out, --flight-*, --quiet)
+                         are accepted
   --dim/--heads/--blocks/--embed-dim/--patches/--patch-dim/--text-seq/--vocab
                          model shape (defaults: 64/4/2/32, 8/32/8/256)
   --quiet
@@ -157,6 +177,8 @@ PIPELINE OPTIONS:
                          the watcher serves it
   --seed N               (default: 42)
   --out PATH             report path (default: BENCH_ckpt.json)
+  --trace-out PATH       write the whole scenario's raw span dump at exit
+                         (train + ckpt + serve spans end to end)
   --quiet
 
 TRAIN-AOT OPTIONS:
@@ -264,6 +286,9 @@ const VALUE_FLAGS: &[&str] = &[
     "--swap-every",
     "--spike-sigma",
     "--spike-cooldown",
+    "--trace-out",
+    "--flight-out",
+    "--flight-window",
     "--resume",
     "--ckpt-every",
     "--ckpt-dir",
@@ -638,6 +663,14 @@ fn cmd_train(args: &Args) -> Result<()> {
                 base.clone()
             }
         });
+        cfg.flight_path = args.flags.get("flight-out").map(|base| {
+            if multi {
+                format!("{base}.{}_{}.json", kind.label(), optimizer.label())
+            } else {
+                base.clone()
+            }
+        });
+        cfg.flight_window = args.get("flight-window", cfg.flight_window)?;
         Ok(cfg)
     };
 
@@ -695,6 +728,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     write_bench_train_json(&out, echo_cfg.as_ref().expect("≥1 run"), &results)?;
     println!("wrote {out}");
+    write_trace_dump_if_requested(args)?;
 
     if assert_improves {
         for r in &results {
@@ -752,7 +786,7 @@ fn apply_spike_flags(args: &Args, cfg: &mut NativeTrainConfig) -> Result<()> {
 /// Shape, hyperparameters, batch/shard geometry and the shift schedule are
 /// adopted from the checkpoint (anything else would silently diverge from
 /// the original run — see DESIGN.md §Checkpoint); only run-control flags
-/// (--out, --metrics, --ckpt-*, --quiet) apply.
+/// (--out, --metrics, --ckpt-*, --trace-out, --flight-*, --quiet) apply.
 fn cmd_train_resume(args: &Args, resume: &str) -> Result<()> {
     // everything the resumed math depends on comes from the checkpoint;
     // accepting one of these flags and silently dropping it would let a
@@ -811,6 +845,9 @@ fn cmd_train_resume(args: &Args, resume: &str) -> Result<()> {
     // guard tuning is run-control (a reactive intervention, not training
     // math), so unlike the schedule flags it is accepted on resume
     apply_spike_flags(args, &mut cfg)?;
+    // tracing/forensics are pure observers — freely re-chosen on resume
+    cfg.flight_path = args.flags.get("flight-out").cloned();
+    cfg.flight_window = args.get("flight-window", cfg.flight_window)?;
     if cfg.rollback_on_spike {
         // the guard's online loss-history/cooldown state is deliberately
         // not part of the checkpoint (DESIGN.md §Checkpoint): the
@@ -832,7 +869,77 @@ fn cmd_train_resume(args: &Args, resume: &str) -> Result<()> {
     let out: String = args.get("out", "BENCH_train.json".to_string())?;
     write_bench_train_json(&out, &echo, &[res])?;
     println!("wrote {out}");
+    write_trace_dump_if_requested(args)?;
     Ok(())
+}
+
+/// Drain the process-wide span ring to `--trace-out` (shared by `train`,
+/// `train --resume` and `pipeline`).  Draining at exit keeps the hot path
+/// free of any I/O: spans cost a thread-local push until this moment.
+fn write_trace_dump_if_requested(args: &Args) -> Result<()> {
+    if let Some(tp) = args.flags.get("trace-out") {
+        let dump = trace::take();
+        trace::write_span_dump(std::path::Path::new(tp), &dump)?;
+        println!(
+            "wrote {tp} ({} spans{}; `switchback trace export {tp}` → Perfetto)",
+            dump.spans.len(),
+            if dump.dropped > 0 {
+                format!(", {} dropped by the ring", dump.dropped)
+            } else {
+                String::new()
+            }
+        );
+    }
+    Ok(())
+}
+
+/// `trace export|top|spikes` — consume the tracer's artifacts: raw span
+/// dumps (`--trace-out`) and flight-recorder dumps (`--flight-out`).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let read_arg = |what: &str| -> Result<(String, String)> {
+        let Some(p) = args.positional.get(1) else {
+            bail!("trace: missing <{what}>");
+        };
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
+        Ok((p.clone(), text))
+    };
+    match args.positional.first().map(String::as_str) {
+        Some("export") => {
+            let (p, text) = read_arg("span-dump.json")?;
+            let dump = trace::parse_span_dump(&text)
+                .map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+            let out: String = args.get("out", format!("{p}.perfetto.json"))?;
+            std::fs::write(&out, trace::chrome_trace_json(&dump))?;
+            println!(
+                "wrote {out} ({} events; open in Perfetto or chrome://tracing)",
+                dump.spans.len()
+            );
+            Ok(())
+        }
+        Some("top") => {
+            let (p, text) = read_arg("span-dump.json")?;
+            let dump = trace::parse_span_dump(&text)
+                .map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+            print!("{}", trace::top_table(&dump));
+            Ok(())
+        }
+        Some("spikes") => {
+            let (p, text) = read_arg("flight-dump.json")?;
+            let dump =
+                trace::parse_dump(&text).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+            println!(
+                "flight dump: trigger {} at step {} ({} frames, window {})",
+                dump.trigger_kind,
+                dump.trigger_step,
+                dump.frames.len(),
+                dump.window
+            );
+            println!("{}", trace::analyze(&dump).summary());
+            Ok(())
+        }
+        _ => bail!("usage: switchback trace <export|top|spikes> <dump> [--out P]"),
+    }
 }
 
 /// `ckpt inspect <path>` / `ckpt diff <a> <b>` — every inspection is also
@@ -1289,6 +1396,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         .field_raw("results", &format!("[{}]", entry.finish()));
     std::fs::write(&out, top.finish() + "\n")?;
     println!("wrote {out}");
+    write_trace_dump_if_requested(args)?;
     Ok(())
 }
 
@@ -1699,6 +1807,7 @@ fn main() -> Result<()> {
         "loadgen" => cmd_loadgen(&args),
         "pipeline" => cmd_pipeline(&args),
         "ckpt" => cmd_ckpt(&args),
+        "trace" => cmd_trace(&args),
         "benchdiff" => cmd_benchdiff(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");

@@ -162,6 +162,37 @@ pub trait Optimizer: Send {
     fn import_state(&mut self, st: &OptimizerState) -> Result<(), String>;
 }
 
+/// The paper's spike predictor (§3.3–3.4): the mean **under-estimation
+/// ratio** `mean(g² / max(u, ε²))` of tensor `tensor`, computed against
+/// the second-moment slot (`"u"`) of an exported [`OptimizerState`].
+/// Values ≫ 1 mean the second moment under-estimates the current squared
+/// gradients — exactly the condition the paper shows precedes loss spikes
+/// by 1–8 iterations.  Equals `RMS_t²` when `st` was exported right after
+/// the step that consumed `g`.
+///
+/// Returns `None` for optimizers without a second moment (Lion), an
+/// out-of-range tensor index, or a gradient/buffer length mismatch.
+pub fn under_estimation_ratio(
+    st: &OptimizerState,
+    tensor: usize,
+    g: &[f32],
+    eps: f32,
+) -> Option<f32> {
+    let (_, bufs) = st.slots.iter().find(|(label, _)| label == "u")?;
+    let u = bufs.get(tensor)?;
+    if u.len() != g.len() || g.is_empty() {
+        return None;
+    }
+    // f32 division accumulated in f64 — bit-matching AdamW's in-step
+    // RMS_t computation so ratio == rms² exactly.
+    let eps2 = eps * eps;
+    let mut sum = 0.0f64;
+    for (&gj, &uj) in g.iter().zip(u) {
+        sum += ((gj * gj) / uj.max(eps2)) as f64;
+    }
+    Some((sum / g.len() as f64) as f32)
+}
+
 /// Global-norm gradient clipping (the Fig 10 comparison baseline; the paper
 /// clips at norm 1.0, "standard in e.g. PaLM").  Returns the pre-clip norm.
 pub fn clip_global_norm(grads: &mut [Vec<f32>], max_norm: f32) -> f32 {
@@ -256,6 +287,51 @@ mod tests {
             assert_eq!(pa, pb, "{kind}: resumed updates diverged");
             assert_eq!(a.export_state(), b.export_state(), "{kind}: moments diverged");
         }
+    }
+
+    /// Pin `under_estimation_ratio` on a hand-computed AdamW trajectory
+    /// (β₂ = 0.9, one scalar parameter, gradients 1 then 2):
+    ///
+    /// * t=1: β̂₂ = 0 ⇒ u₁ = g₁² = 1, ratio = 1²/1 = **1.0**
+    /// * t=2: β̂₂ = 0.9·(1−0.9)/(1−0.81) = 9/19
+    ///   ⇒ u₂ = (9/19)·1 + (10/19)·4 = 49/19 ≈ 2.5789
+    ///   ratio = 4/(49/19) = 76/49 ≈ **1.5510**
+    #[test]
+    fn under_estimation_ratio_matches_hand_computed_adamw() {
+        let metas = vec![ParamMeta::no_decay("w", "weight")];
+        let mut opt = AdamW::new(AdamWConfig::plain(0.9), &metas, &[1]);
+        let mut p = vec![vec![0.0f32]];
+        let eps = AdamWConfig::default().eps;
+
+        let g1 = vec![vec![1.0f32]];
+        let stats1 = opt.step(&mut p, &g1, 1e-3, None);
+        let r1 = under_estimation_ratio(&opt.export_state(), 0, &g1[0], eps)
+            .expect("adamw exports a second moment");
+        assert!((r1 - 1.0).abs() < 1e-6, "t=1 ratio {r1}");
+
+        let g2 = vec![vec![2.0f32]];
+        let stats2 = opt.step(&mut p, &g2, 1e-3, None);
+        let r2 = under_estimation_ratio(&opt.export_state(), 0, &g2[0], eps)
+            .expect("adamw exports a second moment");
+        assert!((r2 - 76.0 / 49.0).abs() < 1e-5, "t=2 ratio {r2}");
+
+        // the ratio is RMS_t² — the same quantity StepStats reports
+        assert!((r1 - stats1.rms[0] * stats1.rms[0]).abs() < 1e-6);
+        assert!((r2 - stats2.rms[0] * stats2.rms[0]).abs() < 1e-6);
+    }
+
+    /// No second moment (Lion) or shape mismatch ⇒ `None`, never a bogus
+    /// number.
+    #[test]
+    fn under_estimation_ratio_rejects_bad_inputs() {
+        let metas = vec![ParamMeta::weight("w")];
+        let lion = Lion::new(LionConfig::default(), &metas, &[2]);
+        assert!(under_estimation_ratio(&lion.export_state(), 0, &[1.0, 1.0], 1e-6).is_none());
+        let adam = AdamW::new(AdamWConfig::plain(0.9), &metas, &[2]);
+        let st = adam.export_state();
+        assert!(under_estimation_ratio(&st, 1, &[1.0, 1.0], 1e-6).is_none(), "bad index");
+        assert!(under_estimation_ratio(&st, 0, &[1.0], 1e-6).is_none(), "length mismatch");
+        assert!(under_estimation_ratio(&st, 0, &[], 1e-6).is_none(), "empty gradient");
     }
 
     /// Mis-shaped or cross-optimizer imports fail closed.

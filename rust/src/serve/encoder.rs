@@ -93,7 +93,10 @@ impl Tower {
     /// via the shared `nn` helpers — the train model uses the same ones,
     /// which is what keeps train/serve encodings bit-identical).
     fn encode(&self, mut x: Matrix, dim: usize) -> Matrix {
-        for blk in &self.blocks {
+        for (i, blk) in self.blocks.iter().enumerate() {
+            // one span per transformer block: the 6 projection GEMMs +
+            // attention/MLP glue, tagged with the layer index
+            let _sp = crate::trace::span_n("serve.gemm_block", "serve", i as u32);
             x = blk.forward(&x);
         }
         let pooled = mean_pool_rows(&x, self.seq, dim);

@@ -22,6 +22,7 @@ use super::cache::ShardedLru;
 use super::encoder::{ClipEncoder, EncoderConfig};
 use super::metrics::ServeMetrics;
 use super::EncodeInput;
+use crate::trace;
 use crate::util::threads::num_threads;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
@@ -177,7 +178,16 @@ impl Engine {
             sh.generation.fetch_add(1, Ordering::SeqCst);
         }
         let pause = t0.elapsed();
-        sh.metrics.record_swap(pause.as_nanos() as u64);
+        let pause_ns = pause.as_nanos() as u64;
+        let gen = sh.generation.load(Ordering::SeqCst) as u32;
+        trace::event_at(
+            "serve.swap_pause",
+            "serve",
+            trace::now_ns().saturating_sub(pause_ns),
+            pause_ns,
+            gen,
+        );
+        sh.metrics.record_swap(pause_ns);
         Ok(pause)
     }
 
@@ -199,17 +209,21 @@ impl Engine {
     pub fn encode(&self, input: EncodeInput) -> EncodeResult {
         let sh = &self.shared;
         if let Err(e) = self.validate(&input) {
-            sh.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.rejected.inc();
             return Err(e);
         }
         // counted after validation so hit_rate's denominator is accepted
         // requests only
-        sh.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        sh.metrics.requests.inc();
         let key = cache_key(input.content_hash(), sh.generation.load(Ordering::SeqCst));
         let t0 = Instant::now();
         if let Some(cache) = &sh.cache {
-            if let Some(emb) = cache.get(key) {
-                sh.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+            let probed = {
+                let _sp = trace::span("serve.cache_probe", "serve");
+                cache.get(key)
+            };
+            if let Some(emb) = probed {
+                sh.metrics.cache_hits.inc();
                 sh.metrics.hit_ns.record(t0.elapsed().as_nanos() as u64);
                 return Ok(EncodeResponse { embedding: emb, cache_hit: true });
             }
@@ -217,11 +231,11 @@ impl Engine {
         let (tx, rx) = sync_channel(1);
         let job = Job { input, key, enqueued: t0, reply: tx };
         if !sh.queue.push(job) {
-            sh.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.rejected.inc();
             return Err("engine is shut down".into());
         }
         // counted only once actually enqueued, so misses == batched work
-        sh.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+        sh.metrics.cache_misses.inc();
         match rx.recv() {
             Ok(res) => res,
             Err(_) => Err("worker dropped the request (engine shutting down)".into()),
@@ -310,7 +324,30 @@ fn same_shape(a: &EncoderConfig, b: &EncoderConfig) -> bool {
 
 /// Worker: pull micro-batches until the queue closes and drains.
 fn worker_loop(sh: &Shared) {
+    let mut assemble_t0 = trace::now_ns();
     while let Some(batch) = sh.queue.pop_batch() {
+        // assembly = wait-for-first-job + the batching window
+        trace::event_at(
+            "serve.batch_assemble",
+            "serve",
+            assemble_t0,
+            trace::now_ns().saturating_sub(assemble_t0),
+            batch.len() as u32,
+        );
+        // per-request queue wait, recorded retroactively from the enqueue
+        // stamp (the interval does not nest on this call stack)
+        let popped_ns = trace::now_ns();
+        for job in &batch {
+            let waited = job.enqueued.elapsed().as_nanos() as u64;
+            trace::event_at(
+                "serve.queue_wait",
+                "serve",
+                popped_ns.saturating_sub(waited),
+                waited,
+                0,
+            );
+        }
+        let _sp = trace::span_n("serve.batch", "serve", batch.len() as u32);
         let t0 = Instant::now();
         // pin the live encoder for this whole micro-batch: a concurrent
         // hot-swap takes effect at the next batch boundary, and the read
@@ -363,9 +400,15 @@ fn worker_loop(sh: &Shared) {
                 .reply
                 .send(Ok(EncodeResponse { embedding: emb, cache_hit: false }));
         }
-        sh.metrics.batches.fetch_add(1, Ordering::Relaxed);
-        sh.metrics.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
-        sh.metrics.batch_ns.record(t0.elapsed().as_nanos() as u64);
+        {
+            // one atomic group: a snapshot either sees this whole batch
+            // (count + occupancy + latency sample) or none of it
+            let _g = sh.metrics.grouped();
+            sh.metrics.batches.inc();
+            sh.metrics.batched_requests.add(n as u64);
+            sh.metrics.batch_ns.record(t0.elapsed().as_nanos() as u64);
+        }
+        assemble_t0 = trace::now_ns();
     }
 }
 

@@ -1,84 +1,147 @@
-//! Serving telemetry: atomic counters + latency histograms, snapshotted
-//! into a JSON-serializable report.
+//! Serving telemetry on the unified [`crate::trace`] metrics registry.
 //!
-//! Everything here is recorded from hot paths (client threads on hits,
-//! workers per batch), so it is all relaxed atomics — no locks, no
-//! allocation.  `loadgen` and the `serve` smoke subcommand read one
-//! [`ServeSnapshot`] at the end; BENCH_serve.json is built from these.
+//! Every metric here is a [`Registry`] handle — recording stays relaxed
+//! atomics with no locks or allocation on the hot paths (client threads
+//! on hits, workers per batch).  What the registry adds is **snapshot
+//! consistency**: [`ServeMetrics::snapshot`] reads every counter and
+//! histogram in one pass behind the registry's update gate, and
+//! multi-metric updates that maintain an invariant (a standby promotion
+//! records its hot-swap *and* its promotion; a worker records its batch
+//! triple) hold [`ServeMetrics::grouped`] across the writes.  `loadgen`
+//! snapshotting mid-run therefore can never observe
+//! `standby_promotions > hot_swaps` or a batch counted without its
+//! occupancy — the race the old field-by-field snapshot allowed.
+//!
+//! `ServeMetrics` owns a private registry instance (not the process
+//! [`crate::trace::global`] one) so concurrent engines/tests never share
+//! counters; [`ServeMetrics::registry`] exposes it for the JSON /
+//! Prometheus-style expositions.
 
-use crate::telemetry::Histogram;
+use crate::trace::registry::{
+    Counter, Hist, HistSummary, MetricValue, Registry, UpdateGuard,
+};
 use crate::util::json::ObjWriter;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Live serving metrics (shared by the engine, its workers and clients).
-#[derive(Default)]
 pub struct ServeMetrics {
+    registry: Registry,
     /// requests accepted by `Engine::encode` (rejects are counted only in
     /// `rejected`, so `hit_rate = hits / requests` is over accepted work)
-    pub requests: AtomicU64,
+    pub requests: Counter,
     /// served straight from the embedding cache (no GEMM work at all)
-    pub cache_hits: AtomicU64,
+    pub cache_hits: Counter,
     /// enqueued for encoding
-    pub cache_misses: AtomicU64,
+    pub cache_misses: Counter,
     /// rejected before enqueue (bad shape / shutdown)
-    pub rejected: AtomicU64,
+    pub rejected: Counter,
     /// batches executed by the worker pool
-    pub batches: AtomicU64,
+    pub batches: Counter,
     /// requests carried by those batches (occupancy = this / batches)
-    pub batched_requests: AtomicU64,
+    pub batched_requests: Counter,
     /// end-to-end latency of encode-path requests (enqueue → reply), ns
-    pub request_ns: Histogram,
+    pub request_ns: Hist,
     /// latency of cache hits (lookup only), ns
-    pub hit_ns: Histogram,
+    pub hit_ns: Hist,
     /// worker time per batch (forward pass + bookkeeping), ns
-    pub batch_ns: Histogram,
+    pub batch_ns: Hist,
     /// live weight hot-swaps installed ([`super::Engine::install_encoder`])
-    pub hot_swaps: AtomicU64,
+    pub hot_swaps: Counter,
     /// worst-case swap pause (exclusive write-lock hold), ns
-    pub swap_pause_max_ns: AtomicU64,
+    pub swap_pause_max_ns: Counter,
     /// distribution of swap pauses across generations, ns
-    pub swap_pause_ns: Histogram,
+    pub swap_pause_ns: Hist,
     /// standby promotions: candidates that passed the canary drift bound
     /// and were installed ([`super::standby`])
-    pub standby_promotions: AtomicU64,
+    pub standby_promotions: Counter,
     /// standby rejections: unreadable/mismatched/drifted candidates that
     /// never touched the live generation
-    pub standby_rejects: AtomicU64,
+    pub standby_rejects: Counter,
     /// automatic rollbacks to the previous generation after a failed
     /// post-promotion canary probe
-    pub standby_rollbacks: AtomicU64,
+    pub standby_rollbacks: Counter,
     /// snapshots the watcher gave up on: unreadable or incomplete past
     /// the bounded retry/backoff budget (a permanently truncated copy) —
     /// quarantined and never revisited ([`super::standby`])
-    pub standby_quarantines: AtomicU64,
+    pub standby_quarantines: Counter,
     /// off-thread candidate preparation time (CRC-checked load +
     /// re-quantize + canary encode), ns
-    pub prepare_ns: Histogram,
+    pub prepare_ns: Hist,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl ServeMetrics {
-    /// All-zero counters and empty histograms.
+    /// All-zero counters and empty histograms on a fresh registry.
     pub fn new() -> Self {
-        Self::default()
+        let registry = Registry::new();
+        let c = |name: &str| registry.counter(name);
+        let h = |name: &str| registry.histogram(name);
+        Self {
+            requests: c("serve.requests"),
+            cache_hits: c("serve.cache_hits"),
+            cache_misses: c("serve.cache_misses"),
+            rejected: c("serve.rejected"),
+            batches: c("serve.batches"),
+            batched_requests: c("serve.batched_requests"),
+            request_ns: h("serve.request_ns"),
+            hit_ns: h("serve.hit_ns"),
+            batch_ns: h("serve.batch_ns"),
+            hot_swaps: c("serve.hot_swaps"),
+            swap_pause_max_ns: c("serve.swap_pause_max_ns"),
+            swap_pause_ns: h("serve.swap_pause_ns"),
+            standby_promotions: c("serve.standby_promotions"),
+            standby_rejects: c("serve.standby_rejects"),
+            standby_rollbacks: c("serve.standby_rollbacks"),
+            standby_quarantines: c("serve.standby_quarantines"),
+            prepare_ns: h("serve.prepare_ns"),
+            registry,
+        }
     }
 
-    /// Point-in-time copy of everything a report needs.
+    /// The backing registry (JSON / Prometheus exposition, extra metrics).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Mark a multi-metric update as atomic with respect to
+    /// [`snapshot`](Self::snapshot).  Hold this across writes that
+    /// maintain a cross-metric invariant (swap + promotion, the worker's
+    /// batch triple).  Do not nest on one thread.
+    pub fn grouped(&self) -> UpdateGuard<'_> {
+        self.registry.grouped()
+    }
+
+    /// Point-in-time copy of everything a report needs — **one pass**
+    /// behind the registry's update gate, so no [`grouped`](Self::grouped)
+    /// update is half-visible.
     pub fn snapshot(&self) -> ServeSnapshot {
-        let requests = self.requests.load(Ordering::Relaxed);
-        let hits = self.cache_hits.load(Ordering::Relaxed);
-        let misses = self.cache_misses.load(Ordering::Relaxed);
-        let batches = self.batches.load(Ordering::Relaxed);
-        let batched = self.batched_requests.load(Ordering::Relaxed);
-        let (p50, p95, p99) = self.request_ns.percentiles();
-        let (h50, h95, h99) = self.hit_ns.percentiles();
-        let (b50, b95, b99) = self.batch_ns.percentiles();
-        let (s50, _, s99) = self.swap_pause_ns.percentiles();
-        let (pr50, _, pr99) = self.prepare_ns.percentiles();
+        let snap = self.registry.snapshot();
+        let c = |name: &str| match snap.get(name) {
+            Some(MetricValue::Counter(v)) => *v,
+            _ => 0,
+        };
+        let h = |name: &str| match snap.get(name) {
+            Some(MetricValue::Hist(s)) => *s,
+            _ => HistSummary::default(),
+        };
+        let requests = c("serve.requests");
+        let hits = c("serve.cache_hits");
+        let batches = c("serve.batches");
+        let batched = c("serve.batched_requests");
+        let req = h("serve.request_ns");
+        let hit = h("serve.hit_ns");
+        let bat = h("serve.batch_ns");
+        let swap = h("serve.swap_pause_ns");
+        let prep = h("serve.prepare_ns");
         ServeSnapshot {
             requests,
             cache_hits: hits,
-            cache_misses: misses,
-            rejected: self.rejected.load(Ordering::Relaxed),
+            cache_misses: c("serve.cache_misses"),
+            rejected: c("serve.rejected"),
             batches,
             hit_rate: if requests > 0 { hits as f64 / requests as f64 } else { 0.0 },
             mean_batch_occupancy: if batches > 0 {
@@ -86,56 +149,58 @@ impl ServeMetrics {
             } else {
                 0.0
             },
-            request_p50_ms: ns_to_ms(p50),
-            request_p95_ms: ns_to_ms(p95),
-            request_p99_ms: ns_to_ms(p99),
-            hit_p50_ms: ns_to_ms(h50),
-            hit_p95_ms: ns_to_ms(h95),
-            hit_p99_ms: ns_to_ms(h99),
-            batch_p50_ms: ns_to_ms(b50),
-            batch_p95_ms: ns_to_ms(b95),
-            batch_p99_ms: ns_to_ms(b99),
-            hot_swaps: self.hot_swaps.load(Ordering::Relaxed),
-            swap_pause_max_us: self.swap_pause_max_ns.load(Ordering::Relaxed) as f64 / 1e3,
-            swap_pause_p50_us: s50 as f64 / 1e3,
-            swap_pause_p99_us: s99 as f64 / 1e3,
-            standby_promotions: self.standby_promotions.load(Ordering::Relaxed),
-            standby_rejects: self.standby_rejects.load(Ordering::Relaxed),
-            standby_rollbacks: self.standby_rollbacks.load(Ordering::Relaxed),
-            standby_quarantines: self.standby_quarantines.load(Ordering::Relaxed),
-            prepare_p50_ms: ns_to_ms(pr50),
-            prepare_p99_ms: ns_to_ms(pr99),
+            request_p50_ms: ns_to_ms(req.p50),
+            request_p95_ms: ns_to_ms(req.p95),
+            request_p99_ms: ns_to_ms(req.p99),
+            hit_p50_ms: ns_to_ms(hit.p50),
+            hit_p95_ms: ns_to_ms(hit.p95),
+            hit_p99_ms: ns_to_ms(hit.p99),
+            batch_p50_ms: ns_to_ms(bat.p50),
+            batch_p95_ms: ns_to_ms(bat.p95),
+            batch_p99_ms: ns_to_ms(bat.p99),
+            hot_swaps: c("serve.hot_swaps"),
+            swap_pause_max_us: c("serve.swap_pause_max_ns") as f64 / 1e3,
+            swap_pause_p50_us: swap.p50 as f64 / 1e3,
+            swap_pause_p99_us: swap.p99 as f64 / 1e3,
+            standby_promotions: c("serve.standby_promotions"),
+            standby_rejects: c("serve.standby_rejects"),
+            standby_rollbacks: c("serve.standby_rollbacks"),
+            standby_quarantines: c("serve.standby_quarantines"),
+            prepare_p50_ms: ns_to_ms(prep.p50),
+            prepare_p99_ms: ns_to_ms(prep.p99),
         }
     }
 
     /// Record one hot-swap's exclusive pause: the max (the worst case is
     /// what matters for tail latency) plus the full distribution across
-    /// generations.
+    /// generations.  Takes no gate itself — the standby promotion flow
+    /// wraps this together with [`record_promote`](Self::record_promote)
+    /// under one [`grouped`](Self::grouped) guard.
     pub fn record_swap(&self, pause_ns: u64) {
-        self.hot_swaps.fetch_add(1, Ordering::Relaxed);
-        self.swap_pause_max_ns.fetch_max(pause_ns, Ordering::Relaxed);
+        self.hot_swaps.inc();
+        self.swap_pause_max_ns.fetch_max(pause_ns);
         self.swap_pause_ns.record(pause_ns);
     }
 
     /// Record a standby promotion and its off-thread preparation time.
     pub fn record_promote(&self, prepare_ns: u64) {
-        self.standby_promotions.fetch_add(1, Ordering::Relaxed);
+        self.standby_promotions.inc();
         self.prepare_ns.record(prepare_ns);
     }
 
     /// Record a standby rejection (the live generation was not touched).
     pub fn record_reject(&self) {
-        self.standby_rejects.fetch_add(1, Ordering::Relaxed);
+        self.standby_rejects.inc();
     }
 
     /// Record an automatic rollback to the previous generation.
     pub fn record_rollback(&self) {
-        self.standby_rollbacks.fetch_add(1, Ordering::Relaxed);
+        self.standby_rollbacks.inc();
     }
 
     /// Record a quarantined snapshot (retry budget exhausted).
     pub fn record_quarantine(&self) {
-        self.standby_quarantines.fetch_add(1, Ordering::Relaxed);
+        self.standby_quarantines.inc();
     }
 }
 
@@ -235,15 +300,16 @@ impl ServeSnapshot {
 mod tests {
     use super::*;
     use crate::util::json::parse;
+    use std::sync::Arc;
 
     #[test]
     fn snapshot_math_and_json() {
         let m = ServeMetrics::new();
-        m.requests.store(10, Ordering::Relaxed);
-        m.cache_hits.store(4, Ordering::Relaxed);
-        m.cache_misses.store(6, Ordering::Relaxed);
-        m.batches.store(3, Ordering::Relaxed);
-        m.batched_requests.store(6, Ordering::Relaxed);
+        m.requests.set(10);
+        m.cache_hits.set(4);
+        m.cache_misses.set(6);
+        m.batches.set(3);
+        m.batched_requests.set(6);
         m.request_ns.record(1_000_000);
         m.request_ns.record(3_000_000);
         let s = m.snapshot();
@@ -302,5 +368,77 @@ mod tests {
         assert_eq!(s.hit_rate, 0.0);
         assert_eq!(s.mean_batch_occupancy, 0.0);
         assert_eq!(s.request_p50_ms, 0.0);
+    }
+
+    /// The regression this migration fixes: a snapshot racing promotion
+    /// flows (hot-swap then promote, recorded under one `grouped` guard —
+    /// the production order in `standby::validate_and_promote`) must never
+    /// observe `standby_promotions > hot_swaps`.  The old field-by-field
+    /// snapshot read `hot_swaps` first, so a swap+promote pair landing
+    /// between the loads showed up promotion-first.
+    #[test]
+    fn concurrent_snapshot_never_sees_promotions_exceed_swaps() {
+        let m = Arc::new(ServeMetrics::new());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            let writer = {
+                let (m, stop) = (Arc::clone(&m), Arc::clone(&stop));
+                scope.spawn(move || {
+                    use std::sync::atomic::Ordering;
+                    while !stop.load(Ordering::Relaxed) {
+                        let _g = m.grouped();
+                        m.record_swap(100);
+                        m.record_promote(1_000);
+                    }
+                })
+            };
+            for _ in 0..2_000 {
+                let s = m.snapshot();
+                assert!(
+                    s.standby_promotions <= s.hot_swaps,
+                    "snapshot split a promotion: {} promotions > {} swaps",
+                    s.standby_promotions,
+                    s.hot_swaps
+                );
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            writer.join().expect("writer");
+        });
+        let s = m.snapshot();
+        assert_eq!(s.standby_promotions, s.hot_swaps);
+    }
+
+    /// The batch triple (batches, batched_requests, batch_ns) recorded
+    /// under one guard keeps occupancy exact in every snapshot.
+    #[test]
+    fn concurrent_snapshot_sees_whole_batch_triples() {
+        let m = Arc::new(ServeMetrics::new());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            let writer = {
+                let (m, stop) = (Arc::clone(&m), Arc::clone(&stop));
+                scope.spawn(move || {
+                    use std::sync::atomic::Ordering;
+                    while !stop.load(Ordering::Relaxed) {
+                        let _g = m.grouped();
+                        m.batches.inc();
+                        m.batched_requests.add(4);
+                        m.batch_ns.record(5_000);
+                    }
+                })
+            };
+            for _ in 0..2_000 {
+                let s = m.snapshot();
+                if s.batches > 0 {
+                    assert!(
+                        (s.mean_batch_occupancy - 4.0).abs() < 1e-9,
+                        "occupancy {} from a torn batch triple",
+                        s.mean_batch_occupancy
+                    );
+                }
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            writer.join().expect("writer");
+        });
     }
 }

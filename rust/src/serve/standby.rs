@@ -237,6 +237,11 @@ pub fn validate_and_promote(
             )));
         }
     }
+    let _sp = crate::trace::span("standby.promote", "standby");
+    // swap + promotion counters are one atomic group: a concurrent
+    // metrics snapshot must never observe the promotion without its
+    // hot-swap (promotions > swaps)
+    let _g = engine.metrics().grouped();
     match engine.install_encoder(candidate) {
         Ok(pause) => {
             engine
@@ -462,6 +467,7 @@ impl Standby {
     /// promote one snapshot.  Rejection leaves the live generation — and
     /// the rollback anchor — untouched.
     fn prepare_and_promote(&mut self, step: u64, path: &std::path::Path) -> StandbyEvent {
+        let _sp = crate::trace::span("standby.prepare", "standby");
         let t0 = Instant::now();
         let reject = |me: &Self, reason: String| -> StandbyEvent {
             me.engine.metrics().record_reject();

@@ -78,6 +78,37 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of every recorded sample (as recorded, not bucket midpoints).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Fold every sample of `other` into `self` (bucket-wise addition).
+    ///
+    /// All loads/adds are relaxed, so merging is safe while either side is
+    /// still being recorded into; samples landing mid-merge are either
+    /// fully included or left for a later merge, never double-counted
+    /// (each bucket is read exactly once).  The per-thread-histogram →
+    /// merge pattern gives contention-free recording with one aggregate
+    /// view at the end.
+    pub fn merge(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(&other.buckets) {
+            let n = src.load(Ordering::Relaxed);
+            if n > 0 {
+                dst.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Per-bucket counts (index-aligned across histograms) — lets a merge
+    /// be verified bucket-for-bucket, not just through the summaries.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
     pub fn mean(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -154,6 +185,89 @@ mod tests {
         h.record(1 << 40);
         assert_eq!(h.count(), 2);
         assert!(h.quantile(0.5) >= 1 << 40);
+    }
+
+    /// Per-thread record → merge must equal one histogram recorded
+    /// sequentially, bucket for bucket (the contention-free aggregation
+    /// pattern the trace registry and serve metrics rely on).
+    #[test]
+    fn concurrent_record_then_merge_equals_sequential() {
+        const THREADS: usize = 4;
+        const PER: u64 = 5_000;
+        let sample = |t: u64, i: u64| 1 + (t * 1_000_003 + i * 7_919) % 100_000;
+
+        let merged = Histogram::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..THREADS as u64)
+                .map(|t| {
+                    scope.spawn(move || {
+                        let h = Histogram::new();
+                        for i in 0..PER {
+                            h.record(sample(t, i));
+                        }
+                        h
+                    })
+                })
+                .collect();
+            for h in handles {
+                merged.merge(&h.join().expect("recorder thread"));
+            }
+        });
+
+        let seq = Histogram::new();
+        for t in 0..THREADS as u64 {
+            for i in 0..PER {
+                seq.record(sample(t, i));
+            }
+        }
+        assert_eq!(merged.count(), seq.count());
+        assert_eq!(merged.sum(), seq.sum());
+        assert_eq!(merged.max(), seq.max());
+        assert_eq!(merged.bucket_counts(), seq.bucket_counts());
+        assert_eq!(merged.percentiles(), seq.percentiles());
+    }
+
+    /// Concurrent `record` into one shared histogram loses nothing: the
+    /// totals equal the sequential recording of the same samples.
+    #[test]
+    fn concurrent_record_into_shared_histogram_loses_nothing() {
+        const THREADS: u64 = 4;
+        const PER: u64 = 5_000;
+        let shared = Histogram::new();
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let h = &shared;
+                scope.spawn(move || {
+                    for i in 0..PER {
+                        h.record(1 + (t * PER + i) % 4096);
+                    }
+                });
+            }
+        });
+        let seq = Histogram::new();
+        for v in 0..THREADS * PER {
+            seq.record(1 + v % 4096);
+        }
+        assert_eq!(shared.count(), THREADS * PER);
+        assert_eq!(shared.sum(), seq.sum());
+        assert_eq!(shared.bucket_counts(), seq.bucket_counts());
+    }
+
+    /// Merging into an empty histogram is a copy; merging an empty one is
+    /// a no-op.
+    #[test]
+    fn merge_identity_cases() {
+        let a = Histogram::new();
+        for v in [3u64, 40, 500_000] {
+            a.record(v);
+        }
+        let copy = Histogram::new();
+        copy.merge(&a);
+        assert_eq!(copy.bucket_counts(), a.bucket_counts());
+        assert_eq!((copy.count(), copy.sum(), copy.max()), (a.count(), a.sum(), a.max()));
+        copy.merge(&Histogram::new());
+        assert_eq!(copy.count(), a.count());
+        assert_eq!(copy.bucket_counts(), a.bucket_counts());
     }
 
     #[test]

@@ -22,6 +22,11 @@ pub struct StepRecord {
     /// RMS_t for probed tensors, keyed by tensor name (patch embed + a
     /// mid-transformer control tensor, per Fig 9 vs Fig 21)
     pub rms: BTreeMap<String, f32>,
+    /// the paper's spike predictor (§3.3–3.4): per-probe mean
+    /// `g²/max(u, ε²)` against AdamW's second moment — values ≫ 1 mean the
+    /// estimator lags the gradient distribution and a loss spike is likely
+    /// 1–8 iterations out ([`crate::optim::under_estimation_ratio`])
+    pub under_est: BTreeMap<String, f32>,
     /// per-block mean |features| (vision ++ text), logged every probe_every
     pub feature_mags: Vec<f32>,
     /// probes of selected gradient tensors (mean/max abs, Fig 11/14)
@@ -49,6 +54,13 @@ impl StepRecord {
                 inner.field_f32(k, *v);
             }
             w.field_raw("rms", &inner.finish());
+        }
+        if !self.under_est.is_empty() {
+            let mut inner = ObjWriter::new();
+            for (k, v) in &self.under_est {
+                inner.field_f32(k, *v);
+            }
+            w.field_raw("under_estimation_ratio", &inner.finish());
         }
         if !self.feature_mags.is_empty() {
             w.field_f32_arr("feature_mags", &self.feature_mags);
@@ -104,6 +116,13 @@ impl StepRecord {
             for (k, x) in m {
                 if let Some(x) = x.as_f64() {
                     rec.rms.insert(k.clone(), x as f32);
+                }
+            }
+        }
+        if let Some(Value::Obj(m)) = v.get("under_estimation_ratio") {
+            for (k, x) in m {
+                if let Some(x) = x.as_f64() {
+                    rec.under_est.insert(k.clone(), x as f32);
                 }
             }
         }
@@ -255,6 +274,24 @@ mod tests {
         assert_eq!(back.loss_scale, Some(65536.0));
         assert!(back.skipped_step);
         assert_eq!(back.step_ms, Some(12.5));
+    }
+
+    /// The spike-predictor field survives the JSONL round trip and stays
+    /// absent (not `{}`) when no probes ran this step.
+    #[test]
+    fn under_estimation_ratio_roundtrip() {
+        let mut rec = StepRecord { step: 3, ..Default::default() };
+        rec.under_est.insert("visual.patch_embed".into(), 1.551);
+        rec.under_est.insert("visual.block5".into(), 0.97);
+        let line = rec.to_json();
+        assert!(line.contains("\"under_estimation_ratio\""));
+        let back = StepRecord::from_json(&line).unwrap();
+        assert_eq!(back.under_est.len(), 2);
+        assert!((back.under_est["visual.patch_embed"] - 1.551).abs() < 1e-6);
+        assert!((back.under_est["visual.block5"] - 0.97).abs() < 1e-6);
+
+        let bare = StepRecord::default().to_json();
+        assert!(!bare.contains("under_estimation_ratio"));
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Trace serialization: the raw span dump runs write next to their bench
+//! artifacts, the Chrome trace-event conversion (`switchback trace
+//! export`, loads in Perfetto / `chrome://tracing`), and the per-span
+//! aggregate table (`switchback trace top`).
+//!
+//! Raw dump format (nanoseconds since the process trace epoch):
+//!
+//! ```json
+//! {"format": "switchback-trace", "version": 1, "clock": "ns",
+//!  "dropped": 0,
+//!  "spans": [{"name": "train.forward", "cat": "train",
+//!             "ts": 1200, "dur": 340, "tid": 1, "seq": 0}, ...]}
+//! ```
+
+use super::span::TraceDump;
+use crate::util::json::{parse, ObjWriter, Value};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One span as read back from a raw dump (owned strings — the in-process
+/// [`super::span::Span`] uses `&'static str` names).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRec {
+    pub name: String,
+    pub cat: String,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub tid: u64,
+    pub seq: u32,
+}
+
+/// A parsed raw span dump.
+#[derive(Debug, Clone, Default)]
+pub struct SpanDump {
+    pub dropped: u64,
+    pub spans: Vec<SpanRec>,
+}
+
+/// Serialize a live [`TraceDump`] as the raw dump format.
+pub fn span_dump_json(dump: &TraceDump) -> String {
+    let spans: Vec<String> = dump
+        .spans
+        .iter()
+        .map(|s| {
+            let mut w = ObjWriter::new();
+            w.field_str("name", s.name)
+                .field_str("cat", s.cat)
+                .field_u64("ts", s.start_ns)
+                .field_u64("dur", s.dur_ns)
+                .field_u64("tid", s.tid)
+                .field_u64("seq", s.seq as u64);
+            w.finish()
+        })
+        .collect();
+    let mut w = ObjWriter::new();
+    w.field_str("format", "switchback-trace")
+        .field_u64("version", 1)
+        .field_str("clock", "ns")
+        .field_u64("dropped", dump.dropped)
+        .field_raw("spans", &format!("[{}]", spans.join(",")));
+    w.finish()
+}
+
+/// [`span_dump_json`] straight to a file.
+pub fn write_span_dump(path: &std::path::Path, dump: &TraceDump) -> std::io::Result<()> {
+    std::fs::write(path, span_dump_json(dump))
+}
+
+/// Parse a raw span dump back.
+pub fn parse_span_dump(text: &str) -> Result<SpanDump, String> {
+    let v = parse(text)?;
+    match v.get("format").and_then(Value::as_str) {
+        Some("switchback-trace") => {}
+        other => return Err(format!("not a span dump (format {other:?})")),
+    }
+    let spans = v
+        .get("spans")
+        .and_then(Value::as_arr)
+        .ok_or("missing spans array")?
+        .iter()
+        .map(|s| {
+            let u = |k: &str| s.get(k).and_then(Value::as_f64).unwrap_or(0.0) as u64;
+            let txt = |k: &str| {
+                s.get(k).and_then(Value::as_str).unwrap_or_default().to_string()
+            };
+            SpanRec {
+                name: txt("name"),
+                cat: txt("cat"),
+                ts_ns: u("ts"),
+                dur_ns: u("dur"),
+                tid: u("tid"),
+                seq: u("seq") as u32,
+            }
+        })
+        .collect();
+    Ok(SpanDump {
+        dropped: v.get("dropped").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+        spans,
+    })
+}
+
+/// Microseconds with sub-µs precision — Chrome trace timestamps are µs
+/// floats; formatting through f64 keeps ns resolution that `f32` would
+/// round away on long runs.
+fn us(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1_000.0)
+}
+
+/// Convert a raw dump to Chrome trace-event JSON (complete `"X"` events),
+/// the format Perfetto and `chrome://tracing` load directly.
+pub fn chrome_trace_json(dump: &SpanDump) -> String {
+    let events: Vec<String> = dump
+        .spans
+        .iter()
+        .map(|s| {
+            let mut args = ObjWriter::new();
+            args.field_u64("seq", s.seq as u64);
+            let mut w = ObjWriter::new();
+            w.field_str("name", &s.name)
+                .field_str("cat", &s.cat)
+                .field_str("ph", "X")
+                .field_raw("ts", &us(s.ts_ns))
+                .field_raw("dur", &us(s.dur_ns))
+                .field_u64("pid", 1)
+                .field_u64("tid", s.tid)
+                .field_raw("args", &args.finish());
+            w.finish()
+        })
+        .collect();
+    let mut other = ObjWriter::new();
+    other.field_u64("dropped_spans", dump.dropped);
+    let mut w = ObjWriter::new();
+    w.field_raw("traceEvents", &format!("[{}]", events.join(",")))
+        .field_str("displayTimeUnit", "ms")
+        .field_raw("otherData", &other.finish());
+    w.finish()
+}
+
+/// Aggregate rows for `trace top`: per span name, sorted by total time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopRow {
+    pub name: String,
+    pub count: u64,
+    pub total_ns: u64,
+    pub max_ns: u64,
+}
+
+/// Aggregate a dump per span name, heaviest total first.
+pub fn aggregate(dump: &SpanDump) -> Vec<TopRow> {
+    let mut by_name: BTreeMap<&str, TopRow> = BTreeMap::new();
+    for s in &dump.spans {
+        let row = by_name.entry(&s.name).or_insert_with(|| TopRow {
+            name: s.name.clone(),
+            count: 0,
+            total_ns: 0,
+            max_ns: 0,
+        });
+        row.count += 1;
+        row.total_ns += s.dur_ns;
+        row.max_ns = row.max_ns.max(s.dur_ns);
+    }
+    let mut rows: Vec<TopRow> = by_name.into_values().collect();
+    rows.sort_by(|a, b| b.total_ns.cmp(&a.total_ns).then(a.name.cmp(&b.name)));
+    rows
+}
+
+/// Human-readable span-time table (the `trace top` output).
+pub fn top_table(dump: &SpanDump) -> String {
+    let rows = aggregate(dump);
+    let name_w = rows.iter().map(|r| r.name.len()).max().unwrap_or(4).max(4);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<name_w$}  {:>8}  {:>12}  {:>10}  {:>10}",
+        "span", "count", "total_ms", "mean_us", "max_us"
+    );
+    for r in &rows {
+        let _ = writeln!(
+            out,
+            "{:<name_w$}  {:>8}  {:>12.3}  {:>10.1}  {:>10.1}",
+            r.name,
+            r.count,
+            r.total_ns as f64 / 1e6,
+            r.total_ns as f64 / 1e3 / r.count.max(1) as f64,
+            r.max_ns as f64 / 1e3,
+        );
+    }
+    if dump.dropped > 0 {
+        let _ = writeln!(out, "({} spans dropped by the bounded ring)", dump.dropped);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::span::Span;
+
+    fn dump() -> SpanDump {
+        let raw = TraceDump {
+            spans: vec![
+                Span {
+                    name: "train.forward",
+                    cat: "train",
+                    start_ns: 1_500,
+                    dur_ns: 2_000,
+                    tid: 1,
+                    seq: 0,
+                },
+                Span {
+                    name: "serve.gemm",
+                    cat: "serve",
+                    start_ns: 4_000,
+                    dur_ns: 750,
+                    tid: 2,
+                    seq: 3,
+                },
+                Span {
+                    name: "train.forward",
+                    cat: "train",
+                    start_ns: 9_000,
+                    dur_ns: 1_000,
+                    tid: 1,
+                    seq: 0,
+                },
+            ],
+            dropped: 2,
+        };
+        parse_span_dump(&span_dump_json(&raw)).expect("round trip")
+    }
+
+    #[test]
+    fn raw_dump_round_trips() {
+        let d = dump();
+        assert_eq!(d.dropped, 2);
+        assert_eq!(d.spans.len(), 3);
+        assert_eq!(d.spans[0].name, "train.forward");
+        assert_eq!(d.spans[1].tid, 2);
+        assert_eq!(d.spans[1].seq, 3);
+        assert_eq!(d.spans[2].ts_ns, 9_000);
+    }
+
+    /// The acceptance-criteria schema check: every trace event carries the
+    /// Chrome trace-event required fields with the right types/units.
+    #[test]
+    fn chrome_trace_schema_shape() {
+        let text = chrome_trace_json(&dump());
+        let v = parse(&text).expect("chrome trace must be valid JSON");
+        assert_eq!(
+            v.get("displayTimeUnit").and_then(Value::as_str),
+            Some("ms")
+        );
+        assert_eq!(
+            v.get("otherData").and_then(|o| o.get("dropped_spans")).and_then(Value::as_usize),
+            Some(2)
+        );
+        let events = v.get("traceEvents").and_then(Value::as_arr).unwrap();
+        assert_eq!(events.len(), 3);
+        for e in events {
+            assert_eq!(e.get("ph").and_then(Value::as_str), Some("X"));
+            assert!(e.get("name").and_then(Value::as_str).is_some());
+            assert!(e.get("cat").and_then(Value::as_str).is_some());
+            assert_eq!(e.get("pid").and_then(Value::as_usize), Some(1));
+            assert!(e.get("tid").and_then(Value::as_usize).is_some());
+            // µs floats
+            assert!(e.get("ts").and_then(Value::as_f64).is_some());
+            assert!(e.get("dur").and_then(Value::as_f64).is_some());
+            assert!(e.get("args").and_then(|a| a.get("seq")).is_some());
+        }
+        // 1500 ns → 1.5 µs, sub-µs precision preserved
+        assert_eq!(events[0].get("ts").and_then(Value::as_f64), Some(1.5));
+        assert_eq!(events[1].get("dur").and_then(Value::as_f64), Some(0.75));
+    }
+
+    #[test]
+    fn top_aggregates_and_sorts_by_total() {
+        let rows = aggregate(&dump());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].name, "train.forward");
+        assert_eq!(rows[0].count, 2);
+        assert_eq!(rows[0].total_ns, 3_000);
+        assert_eq!(rows[0].max_ns, 2_000);
+        assert_eq!(rows[1].name, "serve.gemm");
+        let table = top_table(&dump());
+        assert!(table.contains("train.forward"));
+        assert!(table.contains("2 spans dropped"));
+    }
+
+    #[test]
+    fn parse_rejects_non_trace_documents() {
+        assert!(parse_span_dump("{\"format\":\"flight\"}").is_err());
+        assert!(parse_span_dump("[]").is_err());
+    }
+}

@@ -1,0 +1,309 @@
+//! The spike flight recorder: a bounded ring of full-fidelity per-step
+//! probes, dumped as a forensic JSON bundle the moment the spike detector
+//! or rollback guard fires.
+//!
+//! The paper's diagnostic (§3.3–3.4) is *temporal*: loss spikes follow the
+//! moment squared gradients become under-estimated by AdamW's second
+//! moment by 1–8 iterations.  Post-hoc JSONL often misses the lead-up
+//! (probes are sampled every N steps); the flight recorder keeps the last
+//! K steps at full fidelity — loss, grad norm, LR, per-tensor update RMS
+//! **and the per-tensor `g²/v` under-estimation ratio** — so a dump
+//! captures exactly the window the lead–lag machinery needs.
+//!
+//! Dump format (`switchback trace spikes <dump>` consumes it):
+//!
+//! ```json
+//! {
+//!   "format": "switchback-flight", "version": 1,
+//!   "trigger": {"kind": "rollback_guard", "step": 123},
+//!   "window": 64,
+//!   "steps": [
+//!     {"step": 60, "loss": 2.1, "grad_norm": 0.9, "lr": 1e-3,
+//!      "rms": {"embed": 0.7, "head": 1.1},
+//!      "under_estimation_ratio": {"embed": 1.4, "head": 0.9}},
+//!     ...
+//!   ]
+//! }
+//! ```
+
+use crate::telemetry::analyzer::{lead_lag_analysis, LeadLagReport};
+use crate::telemetry::spikes::SpikeConfig;
+use crate::util::json::{parse, ObjWriter, Value};
+use std::collections::{BTreeMap, VecDeque};
+
+/// One step's full-fidelity probe set.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FlightFrame {
+    pub step: u64,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub lr: f32,
+    /// per-tensor update RMS (paper RMS_t), keyed by probe name
+    pub rms: BTreeMap<String, f32>,
+    /// per-tensor mean g²/v under-estimation ratio, keyed by probe name
+    pub under_est: BTreeMap<String, f32>,
+}
+
+impl FlightFrame {
+    fn to_json(&self) -> String {
+        let map_json = |m: &BTreeMap<String, f32>| {
+            let mut w = ObjWriter::new();
+            for (k, v) in m {
+                w.field_f32(k, *v);
+            }
+            w.finish()
+        };
+        let mut w = ObjWriter::new();
+        w.field_u64("step", self.step)
+            .field_f32("loss", self.loss)
+            .field_f32("grad_norm", self.grad_norm)
+            .field_f32("lr", self.lr)
+            .field_raw("rms", &map_json(&self.rms))
+            .field_raw("under_estimation_ratio", &map_json(&self.under_est));
+        w.finish()
+    }
+}
+
+/// A bounded ring of the most recent [`FlightFrame`]s.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    cap: usize,
+    frames: VecDeque<FlightFrame>,
+}
+
+impl FlightRecorder {
+    /// `window`: how many trailing steps a dump covers (K).
+    pub fn new(window: usize) -> Self {
+        let cap = window.max(1);
+        Self { cap, frames: VecDeque::with_capacity(cap) }
+    }
+
+    pub fn window(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Record one step; the oldest frame falls off past the window.
+    pub fn push(&mut self, frame: FlightFrame) {
+        if self.frames.len() == self.cap {
+            self.frames.pop_front();
+        }
+        self.frames.push_back(frame);
+    }
+
+    /// Serialize the current window as a forensic dump.  `trigger_kind` is
+    /// what fired (`"rollback_guard"` / `"loss_spike"`), `trigger_step`
+    /// the step it fired at.
+    pub fn dump_json(&self, trigger_kind: &str, trigger_step: u64) -> String {
+        let mut trig = ObjWriter::new();
+        trig.field_str("kind", trigger_kind).field_u64("step", trigger_step);
+        let steps: Vec<String> = self.frames.iter().map(|f| f.to_json()).collect();
+        let mut w = ObjWriter::new();
+        w.field_str("format", "switchback-flight")
+            .field_u64("version", 1)
+            .field_raw("trigger", &trig.finish())
+            .field_u64("window", self.cap as u64)
+            .field_raw("steps", &format!("[{}]", steps.join(",")));
+        w.finish()
+    }
+
+    /// [`dump_json`](Self::dump_json) straight to a file.
+    pub fn dump_to(
+        &self,
+        path: &std::path::Path,
+        trigger_kind: &str,
+        trigger_step: u64,
+    ) -> std::io::Result<()> {
+        std::fs::write(path, self.dump_json(trigger_kind, trigger_step))
+    }
+}
+
+/// A parsed forensic dump.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    pub trigger_kind: String,
+    pub trigger_step: u64,
+    pub window: usize,
+    pub frames: Vec<FlightFrame>,
+}
+
+fn f32_map(v: Option<&Value>) -> BTreeMap<String, f32> {
+    let mut out = BTreeMap::new();
+    if let Some(Value::Obj(m)) = v {
+        for (k, val) in m {
+            if let Some(x) = val.as_f64() {
+                out.insert(k.clone(), x as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Parse a dump produced by [`FlightRecorder::dump_json`].
+pub fn parse_dump(text: &str) -> Result<FlightDump, String> {
+    let v = parse(text)?;
+    match v.get("format").and_then(Value::as_str) {
+        Some("switchback-flight") => {}
+        other => return Err(format!("not a flight dump (format {other:?})")),
+    }
+    let trigger = v.get("trigger").ok_or("missing trigger")?;
+    let frames = v
+        .get("steps")
+        .and_then(Value::as_arr)
+        .ok_or("missing steps array")?
+        .iter()
+        .map(|s| {
+            let f64_field =
+                |k: &str| s.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+            FlightFrame {
+                step: f64_field("step") as u64,
+                loss: f64_field("loss") as f32,
+                grad_norm: f64_field("grad_norm") as f32,
+                lr: f64_field("lr") as f32,
+                rms: f32_map(s.get("rms")),
+                under_est: f32_map(s.get("under_estimation_ratio")),
+            }
+        })
+        .collect();
+    Ok(FlightDump {
+        trigger_kind: trigger
+            .get("kind")
+            .and_then(Value::as_str)
+            .unwrap_or("unknown")
+            .to_string(),
+        trigger_step: trigger.get("step").and_then(Value::as_f64).unwrap_or(0.0)
+            as u64,
+        window: v.get("window").and_then(Value::as_usize).unwrap_or(0),
+        frames,
+    })
+}
+
+/// Run the paper's lead–lag analysis over a dump: the loss trace against
+/// the per-step **max** update RMS across probed tensors (a spike in any
+/// probe counts).  Thresholds come from the paper's Appendix D defaults;
+/// the running-stat window and burn-in scale down to the dump length so a
+/// K-step window is analyzable at all.
+pub fn analyze(dump: &FlightDump) -> LeadLagReport {
+    let loss: Vec<f32> = dump.frames.iter().map(|f| f.loss).collect();
+    let rms: Vec<f32> = dump
+        .frames
+        .iter()
+        .map(|f| f.rms.values().copied().fold(0.0f32, f32::max))
+        .collect();
+    let n = dump.frames.len();
+    let cfg = SpikeConfig {
+        stat_window: (n / 3).clamp(8, 20),
+        burn_in: ((n / 4).clamp(4, 20)) as u64,
+        ..Default::default()
+    };
+    lead_lag_analysis(&loss, &rms, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(step: u64, loss: f32, rms_a: f32, ratio_a: f32) -> FlightFrame {
+        FlightFrame {
+            step,
+            loss,
+            grad_norm: 1.0,
+            lr: 1e-3,
+            rms: BTreeMap::from([
+                ("embed".to_string(), rms_a),
+                ("head".to_string(), 0.5),
+            ]),
+            under_est: BTreeMap::from([
+                ("embed".to_string(), ratio_a),
+                ("head".to_string(), 1.0),
+            ]),
+        }
+    }
+
+    #[test]
+    fn ring_keeps_only_the_last_window() {
+        let mut fr = FlightRecorder::new(4);
+        for step in 0..10 {
+            fr.push(frame(step, 1.0, 0.5, 1.0));
+        }
+        assert_eq!(fr.len(), 4);
+        let dump = parse_dump(&fr.dump_json("loss_spike", 9)).unwrap();
+        let steps: Vec<u64> = dump.frames.iter().map(|f| f.step).collect();
+        assert_eq!(steps, vec![6, 7, 8, 9], "oldest frames must fall off");
+    }
+
+    #[test]
+    fn zero_window_still_holds_one_frame() {
+        let mut fr = FlightRecorder::new(0);
+        fr.push(frame(1, 1.0, 0.5, 1.0));
+        fr.push(frame(2, 1.0, 0.5, 1.0));
+        assert_eq!(fr.len(), 1);
+    }
+
+    /// The acceptance-criteria shape: a dump parses back with
+    /// `under_estimation_ratio` for ≥ 2 probed tensors on every frame.
+    #[test]
+    fn dump_round_trips_with_ratios_for_two_tensors() {
+        let mut fr = FlightRecorder::new(8);
+        for step in 10..18 {
+            fr.push(frame(step, 2.0 + step as f32 * 0.01, 0.7, 1.4));
+        }
+        let text = fr.dump_json("rollback_guard", 17);
+        assert!(text.contains("\"under_estimation_ratio\""));
+        let dump = parse_dump(&text).unwrap();
+        assert_eq!(dump.trigger_kind, "rollback_guard");
+        assert_eq!(dump.trigger_step, 17);
+        assert_eq!(dump.window, 8);
+        assert_eq!(dump.frames.len(), 8);
+        for f in &dump.frames {
+            assert!(
+                f.under_est.len() >= 2,
+                "need ≥2 probed tensors, got {:?}",
+                f.under_est
+            );
+            assert!((f.under_est["embed"] - 1.4).abs() < 1e-6);
+            assert_eq!(f.rms.len(), 2);
+        }
+        // frames survive the round trip exactly (f32-representable values)
+        assert_eq!(dump.frames[0].step, 10);
+        assert!((dump.frames[0].loss - 2.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_rejects_non_flight_documents() {
+        assert!(parse_dump("{\"format\":\"other\"}").is_err());
+        assert!(parse_dump("not json").is_err());
+    }
+
+    /// A synthetic dump where an RMS spike leads a loss spike by 3 steps
+    /// must come out of `analyze` as predicted.
+    #[test]
+    fn analyze_finds_the_lead_lag_structure() {
+        let mut fr = FlightRecorder::new(64);
+        for step in 0..64u64 {
+            // jitter so the loss running-std is nonzero
+            let mut loss = 1.0 + ((step % 7) as f32 - 3.0) * 0.01;
+            let mut rms = 0.5;
+            if step == 40 {
+                rms = 3.0; // RMS spike (≥ 2.3)
+            }
+            if (43..=45).contains(&step) {
+                loss = 5.0; // confirmed loss spike 3 steps later
+            }
+            fr.push(frame(step, loss, rms, 1.0));
+        }
+        let dump = parse_dump(&fr.dump_json("loss_spike", 43)).unwrap();
+        let report = analyze(&dump);
+        assert_eq!(report.total_loss_spikes, 1, "{:?}", report.loss_spikes);
+        assert_eq!(report.predicted, 1);
+        assert_eq!(report.rms_spikes, vec![40]);
+        assert!(report.summary().contains("loss spikes follow an RMS spike"));
+    }
+}

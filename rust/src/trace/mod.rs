@@ -1,0 +1,37 @@
+//! Unified tracing + metrics: the measurement substrate for every perf
+//! claim in this repo.
+//!
+//! * [`span`] — the always-on span tracer: scoped guards record into
+//!   thread-local buffers that drain to one bounded global ring; no locks
+//!   on the record path, no new dependencies.  [`take`] collects the
+//!   trace; overhead is itself a gated bench metric
+//!   (`trace_overhead_pct`).
+//! * [`registry`] — named counters/gauges/histograms behind one
+//!   consistent-snapshot API with JSON and Prometheus-style exposition.
+//!   `ServeMetrics`, the trainer's step telemetry and ckpt's save/load
+//!   timers all record here.
+//! * [`flight`] — the spike flight recorder: the last K steps of
+//!   full-fidelity probes (loss, grad norm, per-tensor update RMS, and
+//!   the paper's `g²/v` under-estimation ratio), dumped as a forensic
+//!   JSON bundle when the spike detector or rollback guard fires.
+//! * [`export`] — raw span dumps, Chrome trace-event/Perfetto conversion
+//!   and the span-time table behind the `switchback trace` CLI.
+
+pub mod export;
+pub mod flight;
+pub mod registry;
+pub mod span;
+
+pub use export::{
+    aggregate, chrome_trace_json, parse_span_dump, span_dump_json, top_table,
+    write_span_dump, SpanDump, SpanRec, TopRow,
+};
+pub use flight::{analyze, parse_dump, FlightDump, FlightFrame, FlightRecorder};
+pub use registry::{
+    global, Counter, Gauge, Hist, HistSummary, MetricValue, MetricsSnapshot,
+    Registry,
+};
+pub use span::{
+    calibrate_span_cost_ns, enabled, event_at, now_ns, set_enabled, span,
+    span_n, spans_recorded, take, Span, SpanGuard, TraceDump, RING_CAP,
+};

@@ -1,0 +1,416 @@
+//! The unified metrics registry: named counters, gauges and histograms
+//! behind one snapshot API with JSON and Prometheus-style exposition.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Hist`]) are cheap `Arc` clones over
+//! relaxed atomics — recording never takes the registry lock.  Consistency
+//! across *groups* of metrics comes from the update gate: a multi-metric
+//! update holds [`Registry::grouped`] (a shared read lock) while
+//! [`Registry::snapshot`] takes the write side, so a snapshot observes a
+//! grouped update entirely or not at all.  This is what keeps invariants
+//! like `standby_promotions ≤ hot_swaps` true in every mid-run snapshot
+//! ([`crate::serve::ServeMetrics`]).
+//!
+//! Subsystems either own a [`Registry`] instance (the serve engine: one
+//! per engine, so tests and multi-engine processes never share counters)
+//! or record into the process-wide [`global`] registry (the trainer's
+//! step phases, checkpoint save/load timers).
+
+use crate::telemetry::Histogram;
+use crate::util::json::{num, quote, ObjWriter};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard};
+
+/// A monotone counter handle (also carries max-style watermarks via
+/// [`Counter::fetch_max`]).
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the value (tests and gauge-like watermark resets).
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the value to at least `v` (watermarks, e.g. worst swap pause).
+    pub fn fetch_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+}
+
+/// An f64 gauge handle (stored as IEEE bits in one atomic).
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A histogram handle; derefs to [`Histogram`] so `record`/`quantile`/
+/// `percentiles`/`merge` are available directly.
+#[derive(Clone)]
+pub struct Hist(Arc<Histogram>);
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self(Arc::new(Histogram::new()))
+    }
+}
+
+impl std::ops::Deref for Hist {
+    type Target = Histogram;
+
+    fn deref(&self) -> &Histogram {
+        &self.0
+    }
+}
+
+enum Slot {
+    Counter(Counter),
+    Gauge(Gauge),
+    Hist(Hist),
+}
+
+impl Slot {
+    fn kind(&self) -> &'static str {
+        match self {
+            Slot::Counter(_) => "counter",
+            Slot::Gauge(_) => "gauge",
+            Slot::Hist(_) => "histogram",
+        }
+    }
+}
+
+/// A named-metric registry with one consistent snapshot API.
+#[derive(Default)]
+pub struct Registry {
+    slots: Mutex<BTreeMap<String, Slot>>,
+    gate: RwLock<()>,
+}
+
+/// Holding this marks a multi-metric update as one atomic group with
+/// respect to [`Registry::snapshot`].  Do not nest acquisitions on one
+/// thread (a queued snapshot writer could deadlock a re-entrant reader).
+#[must_use = "the update group lasts until the guard is dropped"]
+pub struct UpdateGuard<'a>(#[allow(dead_code)] RwLockReadGuard<'a, ()>);
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create the named counter.  Panics if `name` is already
+    /// registered as a different metric kind (a naming bug, not a runtime
+    /// condition).
+    pub fn counter(&self, name: &str) -> Counter {
+        match self.slot(name, || Slot::Counter(Counter::default())) {
+            Slot::Counter(c) => c.clone(),
+            other => panic!("metric {name:?} is a {}, not a counter", other.kind()),
+        }
+    }
+
+    /// Get-or-create the named gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        match self.slot(name, || Slot::Gauge(Gauge::default())) {
+            Slot::Gauge(g) => g.clone(),
+            other => panic!("metric {name:?} is a {}, not a gauge", other.kind()),
+        }
+    }
+
+    /// Get-or-create the named histogram.
+    pub fn histogram(&self, name: &str) -> Hist {
+        match self.slot(name, || Slot::Hist(Hist::default())) {
+            Slot::Hist(h) => h.clone(),
+            other => panic!("metric {name:?} is a {}, not a histogram", other.kind()),
+        }
+    }
+
+    fn slot(&self, name: &str, mk: impl FnOnce() -> Slot) -> Slot {
+        let mut slots = lock(&self.slots);
+        let slot = slots.entry(name.to_string()).or_insert_with(mk);
+        match slot {
+            Slot::Counter(c) => Slot::Counter(c.clone()),
+            Slot::Gauge(g) => Slot::Gauge(g.clone()),
+            Slot::Hist(h) => Slot::Hist(h.clone()),
+        }
+    }
+
+    /// Mark a multi-metric update as atomic with respect to snapshots.
+    pub fn grouped(&self) -> UpdateGuard<'_> {
+        UpdateGuard(self.gate.read().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// One-pass snapshot of every registered metric.  Takes the write
+    /// side of the update gate: no [`grouped`](Self::grouped) update is
+    /// in flight while the values are read, so cross-metric invariants
+    /// maintained under the gate hold in the result.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let _gate = self.gate.write().unwrap_or_else(|e| e.into_inner());
+        let slots = lock(&self.slots);
+        let entries = slots
+            .iter()
+            .map(|(name, slot)| {
+                let value = match slot {
+                    Slot::Counter(c) => MetricValue::Counter(c.get()),
+                    Slot::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Slot::Hist(h) => {
+                        let (p50, p95, p99) = h.percentiles();
+                        MetricValue::Hist(HistSummary {
+                            count: h.count(),
+                            sum: h.sum(),
+                            max: h.max(),
+                            p50,
+                            p95,
+                            p99,
+                        })
+                    }
+                };
+                (name.clone(), value)
+            })
+            .collect();
+        MetricsSnapshot { entries }
+    }
+}
+
+/// Quantile/total summary of one histogram at snapshot time.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+}
+
+/// One metric's value at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Hist(HistSummary),
+}
+
+/// A point-in-time copy of a whole registry, name-sorted.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub entries: Vec<(String, MetricValue)>,
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; ours use dots.
+fn prom_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == ':' { c } else { '_' })
+        .collect()
+}
+
+impl MetricsSnapshot {
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries
+            .binary_search_by(|(n, _)| n.as_str().cmp(name))
+            .ok()
+            .map(|i| &self.entries[i].1)
+    }
+
+    /// One JSON object: counters/gauges as numbers, histograms as nested
+    /// `{count, sum, max, p50, p95, p99}` objects.
+    pub fn to_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        for (name, v) in &self.entries {
+            match v {
+                MetricValue::Counter(c) => {
+                    w.field_u64(name, *c);
+                }
+                MetricValue::Gauge(g) => {
+                    w.field_raw(name, &num(*g as f32));
+                }
+                MetricValue::Hist(h) => {
+                    let mut hw = ObjWriter::new();
+                    hw.field_u64("count", h.count)
+                        .field_u64("sum", h.sum)
+                        .field_u64("max", h.max)
+                        .field_u64("p50", h.p50)
+                        .field_u64("p95", h.p95)
+                        .field_u64("p99", h.p99);
+                    w.field_raw(name, &hw.finish());
+                }
+            }
+        }
+        w.finish()
+    }
+
+    /// Prometheus-style text exposition: counters/gauges as single
+    /// samples, histograms as summaries (`{quantile=...}` + `_sum` +
+    /// `_count`).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.entries {
+            let n = prom_name(name);
+            match v {
+                MetricValue::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {n} counter\n{n} {c}");
+                }
+                MetricValue::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {n} gauge\n{n} {g}");
+                }
+                MetricValue::Hist(h) => {
+                    let _ = writeln!(out, "# TYPE {n} summary");
+                    for (q, qv) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)] {
+                        let _ = writeln!(out, "{n}{{quantile={}}} {qv}", quote(q));
+                    }
+                    let _ = writeln!(out, "{n}_sum {}\n{n}_count {}", h.sum, h.count);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The process-wide registry (trainer step phases, ckpt save/load timers,
+/// anything without a natural owner).
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn handles_are_shared_by_name() {
+        let r = Registry::new();
+        r.counter("a.requests").add(3);
+        r.counter("a.requests").inc();
+        assert_eq!(r.counter("a.requests").get(), 4);
+        r.gauge("a.load").set(0.5);
+        assert_eq!(r.gauge("a.load").get(), 0.5);
+        r.histogram("a.lat_ns").record(1000);
+        assert_eq!(r.histogram("a.lat_ns").count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a gauge")]
+    fn kind_clash_panics() {
+        let r = Registry::new();
+        r.counter("x").inc();
+        r.gauge("x");
+    }
+
+    #[test]
+    fn snapshot_is_complete_and_sorted() {
+        let r = Registry::new();
+        r.counter("z.count").add(7);
+        r.gauge("a.gauge").set(-1.5);
+        let h = r.histogram("m.ns");
+        h.record(100);
+        h.record(300);
+        let s = r.snapshot();
+        let names: Vec<&str> = s.entries.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a.gauge", "m.ns", "z.count"]);
+        assert_eq!(s.get("z.count"), Some(&MetricValue::Counter(7)));
+        assert_eq!(s.get("a.gauge"), Some(&MetricValue::Gauge(-1.5)));
+        match s.get("m.ns") {
+            Some(MetricValue::Hist(h)) => {
+                assert_eq!(h.count, 2);
+                assert_eq!(h.sum, 400);
+                assert_eq!(h.max, 300);
+            }
+            other => panic!("m.ns: {other:?}"),
+        }
+        assert!(s.get("missing").is_none());
+    }
+
+    #[test]
+    fn json_exposition_parses() {
+        let r = Registry::new();
+        r.counter("c").add(2);
+        r.gauge("g").set(1.25);
+        r.histogram("h").record(50);
+        let v = parse(&r.snapshot().to_json()).unwrap();
+        assert_eq!(v.get("c").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("g").unwrap().as_f64(), Some(1.25));
+        assert_eq!(v.get("h").unwrap().get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("h").unwrap().get("sum").unwrap().as_usize(), Some(50));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new();
+        r.counter("serve.requests").add(5);
+        r.gauge("train.lr").set(0.001);
+        let h = r.histogram("serve.request_ns");
+        h.record(2_000_000);
+        let text = r.snapshot().to_prometheus();
+        assert!(text.contains("# TYPE serve_requests counter"), "{text}");
+        assert!(text.contains("serve_requests 5"), "{text}");
+        assert!(text.contains("# TYPE train_lr gauge"), "{text}");
+        assert!(text.contains("# TYPE serve_request_ns summary"), "{text}");
+        assert!(text.contains("serve_request_ns{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("serve_request_ns_count 1"), "{text}");
+        // every non-comment line is `name value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split(' ').count(), 2, "bad exposition line {line:?}");
+        }
+    }
+
+    /// A snapshot racing grouped two-counter updates never observes the
+    /// half-applied state (the gate is the serve promotions ≤ swaps fix).
+    #[test]
+    fn snapshot_never_splits_a_grouped_update() {
+        let r = std::sync::Arc::new(Registry::new());
+        let first = r.counter("pair.first");
+        let second = r.counter("pair.second");
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            let writer = {
+                let (r, stop) = (Arc::clone(&r), Arc::clone(&stop));
+                scope.spawn(move || {
+                    let first = r.counter("pair.first");
+                    let second = r.counter("pair.second");
+                    while !stop.load(Ordering::Relaxed) {
+                        let _g = r.grouped();
+                        // invariant under the gate: first == second
+                        first.inc();
+                        second.inc();
+                    }
+                })
+            };
+            for _ in 0..2_000 {
+                let s = r.snapshot();
+                let (a, b) = match (s.get("pair.first"), s.get("pair.second")) {
+                    (Some(MetricValue::Counter(a)), Some(MetricValue::Counter(b))) => (*a, *b),
+                    other => panic!("missing counters: {other:?}"),
+                };
+                assert_eq!(a, b, "snapshot split a grouped update");
+            }
+            stop.store(true, Ordering::Relaxed);
+            writer.join().expect("writer");
+        });
+        assert_eq!(first.get(), second.get());
+    }
+}

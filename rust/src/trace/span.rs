@@ -1,0 +1,335 @@
+//! The span tracer: scoped guards → thread-local buffers → one global ring.
+//!
+//! Recording a span costs two clock reads and a push onto a thread-local
+//! `Vec` — no lock, no allocation on the steady state.  Buffers drain into
+//! the bounded global ring every [`FLUSH_AT`] spans, when their thread
+//! exits (a TLS drop guard, so scoped workers never lose spans), and when
+//! [`take`] collects the trace.  The ring holds the most recent
+//! [`RING_CAP`] spans; older ones are dropped and counted, never silently.
+//!
+//! Tracing is **on by default** (the overhead is gated in benchdiff via
+//! `trace_overhead_pct`); [`set_enabled`]`(false)` reduces [`span`] to a
+//! single relaxed load for A/B overhead measurements.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Most recent spans retained by the global ring.
+pub const RING_CAP: usize = 65_536;
+/// Thread-local buffer length that triggers a drain into the ring.
+const FLUSH_AT: usize = 64;
+
+/// One completed span: a named, categorized `[start, start+dur)` interval
+/// on one thread.  `seq` carries a small per-span argument (layer index,
+/// shard index); it is exported as `args.seq` in the Chrome trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub name: &'static str,
+    pub cat: &'static str,
+    /// nanoseconds since the process trace epoch
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// tracer-assigned thread id (1-based, in thread-creation order)
+    pub tid: u64,
+    pub seq: u32,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static RECORDED: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static RING: Mutex<Vec<Span>> = Mutex::new(Vec::new());
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // ring contents stay coherent across a panicking recorder; poisoning
+    // carries no extra information here
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (first trace call wins).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Globally enable/disable span recording (metrics are unaffected).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Total spans recorded since process start (monotone; never reset).  The
+/// trainer differences this across a run to compute spans-per-step for
+/// the `trace_overhead_pct` bench field.
+pub fn spans_recorded() -> u64 {
+    RECORDED.load(Ordering::Relaxed)
+}
+
+struct ThreadBuf {
+    tid: u64,
+    buf: Vec<Span>,
+}
+
+impl Drop for ThreadBuf {
+    // thread exit: whatever the buffer still holds reaches the ring, so
+    // short-lived scoped workers (GEMM shards, ckpt shard writers) never
+    // lose their spans
+    fn drop(&mut self) {
+        flush_into_ring(&mut self.buf);
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        buf: Vec::with_capacity(FLUSH_AT),
+    });
+}
+
+/// Append `buf` to the ring, dropping the oldest spans past [`RING_CAP`].
+fn flush_into_ring(buf: &mut Vec<Span>) {
+    if buf.is_empty() {
+        return;
+    }
+    let mut ring = lock(&RING);
+    let over = (ring.len() + buf.len()).saturating_sub(RING_CAP);
+    if over > 0 {
+        let from_ring = over.min(ring.len());
+        ring.drain(..from_ring);
+        let from_buf = over - from_ring;
+        if from_buf > 0 {
+            buf.drain(..from_buf.min(buf.len()));
+        }
+        DROPPED.fetch_add(over as u64, Ordering::Relaxed);
+    }
+    ring.append(buf);
+}
+
+fn push(mut sp: Span) {
+    RECORDED.fetch_add(1, Ordering::Relaxed);
+    let buffered = TLS
+        .try_with(|cell| match cell.try_borrow_mut() {
+            Ok(mut tb) => {
+                sp.tid = tb.tid;
+                tb.buf.push(sp);
+                if tb.buf.len() >= FLUSH_AT {
+                    flush_into_ring(&mut tb.buf);
+                }
+                true
+            }
+            Err(_) => false,
+        })
+        .unwrap_or(false);
+    if !buffered {
+        // TLS unavailable (thread teardown): straight to the ring, tid 0
+        flush_into_ring(&mut vec![sp]);
+    }
+}
+
+/// A scoped span: measures from construction to drop.
+#[must_use = "a span measures until it is dropped — bind it with `let _sp = ...`"]
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    seq: u32,
+    start_ns: u64,
+    live: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.live {
+            push(Span {
+                name: self.name,
+                cat: self.cat,
+                start_ns: self.start_ns,
+                dur_ns: now_ns().saturating_sub(self.start_ns),
+                tid: 0,
+                seq: self.seq,
+            });
+        }
+    }
+}
+
+/// Open a scoped span; it records itself when dropped.
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    span_n(name, cat, 0)
+}
+
+/// [`span`] with a small numeric argument (layer/shard index).
+pub fn span_n(name: &'static str, cat: &'static str, seq: u32) -> SpanGuard {
+    let live = enabled();
+    SpanGuard {
+        name,
+        cat,
+        seq,
+        start_ns: if live { now_ns() } else { 0 },
+        live,
+    }
+}
+
+/// Record a span retroactively from explicit timestamps — for intervals
+/// that do not nest on one call stack (queue waits, swap pauses measured
+/// elsewhere).
+pub fn event_at(name: &'static str, cat: &'static str, start_ns: u64, dur_ns: u64, seq: u32) {
+    if enabled() {
+        push(Span { name, cat, start_ns, dur_ns, tid: 0, seq });
+    }
+}
+
+/// Everything [`take`] collected: the retained spans (start-ordered) and
+/// how many older spans the bounded ring had to drop to stay within
+/// [`RING_CAP`].
+#[derive(Debug, Default)]
+pub struct TraceDump {
+    pub spans: Vec<Span>,
+    pub dropped: u64,
+}
+
+/// Drain the calling thread's buffer and collect the global ring.
+///
+/// Buffers of *other still-running* threads are not reachable; they drain
+/// on their own cadence ([`FLUSH_AT`]) and at thread exit, so call this
+/// after worker pools have been joined for a complete trace.
+pub fn take() -> TraceDump {
+    let _ = TLS.try_with(|cell| {
+        if let Ok(mut tb) = cell.try_borrow_mut() {
+            flush_into_ring(&mut tb.buf);
+        }
+    });
+    let mut spans = std::mem::take(&mut *lock(&RING));
+    spans.sort_by_key(|s| (s.start_ns, s.tid));
+    TraceDump { spans, dropped: DROPPED.swap(0, Ordering::Relaxed) }
+}
+
+/// Measured cost of one span record, in nanoseconds: two clock reads plus
+/// a buffered push with the same amortized-drain shape as the live path.
+/// Feeds `trace_overhead_pct = spans_per_step * cost / step_time`, the
+/// honest alternative to re-running the whole bench with tracing off.
+pub fn calibrate_span_cost_ns(iters: u32) -> f64 {
+    let iters = iters.max(1);
+    let mut scratch: Vec<Span> = Vec::with_capacity(FLUSH_AT);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let s = now_ns();
+        scratch.push(Span {
+            name: "trace.calibrate",
+            cat: "trace",
+            start_ns: s,
+            dur_ns: now_ns().saturating_sub(s),
+            tid: 0,
+            seq: i,
+        });
+        if scratch.len() >= FLUSH_AT {
+            scratch.clear();
+        }
+    }
+    std::hint::black_box(&scratch);
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Serializes tests that drain the process-global ring with [`take`]
+/// (cargo runs tests on parallel threads; two drains would race).
+#[cfg(test)]
+pub(crate) static RING_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn named(dump: &TraceDump, name: &str) -> Vec<Span> {
+        dump.spans.iter().filter(|s| s.name == name).copied().collect()
+    }
+
+    #[test]
+    fn guard_records_one_span_with_duration() {
+        let _l = lock(&RING_TEST_LOCK);
+        {
+            let _sp = span("trace.test.guard", "test");
+            std::hint::black_box(0u64);
+        }
+        let got = named(&take(), "trace.test.guard");
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].cat, "test");
+        assert!(got[0].tid >= 1, "TLS must stamp a thread id");
+    }
+
+    #[test]
+    fn disabled_tracing_records_nothing() {
+        let _l = lock(&RING_TEST_LOCK);
+        set_enabled(false);
+        {
+            let _sp = span("trace.test.disabled", "test");
+        }
+        event_at("trace.test.disabled", "test", 1, 2, 0);
+        set_enabled(true);
+        assert!(named(&take(), "trace.test.disabled").is_empty());
+    }
+
+    #[test]
+    fn thread_exit_flushes_partial_buffers() {
+        let _l = lock(&RING_TEST_LOCK);
+        std::thread::spawn(|| {
+            // fewer than FLUSH_AT: only the TLS drop guard can deliver these
+            for i in 0..3u32 {
+                let _sp = span_n("trace.test.exit", "test", i);
+            }
+        })
+        .join()
+        .expect("recorder thread");
+        let got = named(&take(), "trace.test.exit");
+        assert_eq!(got.len(), 3);
+        let seqs: Vec<u32> = got.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn event_at_preserves_explicit_timestamps() {
+        let _l = lock(&RING_TEST_LOCK);
+        event_at("trace.test.retro", "test", 12_345, 678, 9);
+        let got = named(&take(), "trace.test.retro");
+        assert_eq!(got.len(), 1);
+        assert_eq!((got[0].start_ns, got[0].dur_ns, got[0].seq), (12_345, 678, 9));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let _l = lock(&RING_TEST_LOCK);
+        let _ = take(); // start from an empty ring
+        for i in 0..(RING_CAP + 500) {
+            event_at("trace.test.bound", "test", i as u64, 1, 0);
+        }
+        let dump = take();
+        assert!(dump.spans.len() <= RING_CAP);
+        assert!(dump.dropped >= 500, "dropped {}", dump.dropped);
+        // the *newest* spans survive
+        let got = named(&dump, "trace.test.bound");
+        assert_eq!(got.last().map(|s| s.start_ns), Some((RING_CAP + 499) as u64));
+    }
+
+    #[test]
+    fn take_orders_by_start_time() {
+        let _l = lock(&RING_TEST_LOCK);
+        event_at("trace.test.order", "test", 500, 1, 0);
+        event_at("trace.test.order", "test", 100, 1, 0);
+        event_at("trace.test.order", "test", 300, 1, 0);
+        let got = named(&take(), "trace.test.order");
+        let ts: Vec<u64> = got.iter().map(|s| s.start_ns).collect();
+        assert_eq!(ts, vec![100, 300, 500]);
+    }
+
+    #[test]
+    fn calibration_returns_a_sane_cost() {
+        let ns = calibrate_span_cost_ns(10_000);
+        assert!(ns > 0.0 && ns < 100_000.0, "per-span cost {ns} ns");
+    }
+}

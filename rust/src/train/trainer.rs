@@ -29,7 +29,7 @@ use crate::coordinator::common::{build_optimizer, spike_cfg, tail_mean_loss};
 use crate::coordinator::eval::nearest_class_accuracy;
 use crate::data::{Batch, DataConfig, Shift, SyntheticClip};
 use crate::optim::schedules::LrSchedule;
-use crate::optim::{clip_global_norm, OptimizerState};
+use crate::optim::{clip_global_norm, under_estimation_ratio, OptimizerState};
 use crate::serve::EncoderConfig;
 use crate::telemetry::spikes::DEDUP_WINDOW;
 use crate::telemetry::{
@@ -37,6 +37,7 @@ use crate::telemetry::{
     TensorProbe,
 };
 use crate::tensor::Matrix;
+use crate::trace::{self, FlightFrame, FlightRecorder};
 use crate::util::json::ObjWriter;
 use crate::util::threads::par_map;
 use anyhow::{bail, Result};
@@ -90,6 +91,14 @@ pub struct NativeTrainConfig {
     /// adapts (`--spike-cooldown`; default 3× the Appendix-D dedup
     /// window = 30)
     pub spike_cooldown: u64,
+    /// flight-recorder forensic dump path (`--flight-out`; None = recorder
+    /// off).  When the rollback guard fires — or, failing that, the
+    /// post-hoc loss-spike detector finds a spike — the last
+    /// `flight_window` steps of full-fidelity probes (per-tensor RMS_t
+    /// and the g²/v under-estimation ratio) are written here as JSON
+    pub flight_path: Option<String>,
+    /// flight-recorder ring capacity in steps (`--flight-window`)
+    pub flight_window: usize,
 }
 
 impl NativeTrainConfig {
@@ -130,6 +139,8 @@ impl NativeTrainConfig {
             rollback_on_spike: false,
             spike_sigma: crate::telemetry::DEFAULT_LOSS_SIGMA,
             spike_cooldown: 3 * DEDUP_WINDOW,
+            flight_path: None,
+            flight_window: 64,
         }
     }
 
@@ -350,6 +361,13 @@ pub struct NativeRunResult {
     /// total bytes and wall seconds spent writing snapshots
     pub ckpt_bytes: u64,
     pub ckpt_save_secs: f64,
+    /// estimated span-tracer cost as a percentage of mean step wall time
+    /// (spans recorded per step × calibrated per-span cost / step time);
+    /// gated by `benchdiff` so instrumentation creep is caught in CI
+    pub trace_overhead_pct: f32,
+    /// path of the forensic flight dump written this run, if a spike
+    /// trigger fired while the recorder was on (`--flight-out`)
+    pub flight_dump: Option<String>,
 }
 
 impl NativeRunResult {
@@ -381,6 +399,9 @@ impl NativeRunResult {
                 self.rollback_steps
             );
         }
+        if let Some(p) = &self.flight_dump {
+            println!("               flight dump: {p}");
+        }
     }
 
     fn to_json(&self) -> String {
@@ -396,7 +417,11 @@ impl NativeRunResult {
             .field_u64("rms_spikes", self.rms_spikes as u64)
             .field_bool("diverged", self.diverged)
             .field_u64("rollbacks", self.rollback_steps.len() as u64)
+            .field_f32("trace_overhead_pct", self.trace_overhead_pct)
             .field_raw("time_ms", &self.timing.to_json());
+        if let Some(p) = &self.flight_dump {
+            w.field_str("flight_dump", p);
+        }
         if let Some(acc) = self.zero_shot_acc {
             w.field_f32("zero_shot_acc", acc);
         }
@@ -713,17 +738,41 @@ impl NativeTrainer {
         let mut ckpt_bytes = 0u64;
         let mut ckpt_save_secs = 0.0f64;
         let resumed_from = (self.start_step > 0).then_some(self.start_step);
+        let mut flight = self
+            .cfg
+            .flight_path
+            .as_ref()
+            .map(|_| FlightRecorder::new(self.cfg.flight_window));
+        let mut flight_dump: Option<String> = None;
+        let spans_before = trace::spans_recorded();
         let run_t0 = Instant::now();
 
         for step in self.start_step + 1..=h.steps {
+            let _step_sp = trace::span_n("train.step", "train", step as u32);
             let step_t0 = Instant::now();
-            let batch = self.data.next_batch(self.cfg.batch);
+            let batch = {
+                let _sp = trace::span("train.data", "train");
+                self.data.next_batch(self.cfg.batch)
+            };
             timing.data_ms += step_t0.elapsed().as_secs_f64() * 1e3;
 
             let out = forward_backward(&self.model, &batch, self.cfg.grad_shards);
             timing.forward_ms += out.forward_ms;
             timing.loss_ms += out.loss_ms;
             timing.backward_ms += out.backward_ms;
+            // phase timings come back from forward_backward; turn them
+            // into retroactive spans (they ran back-to-back ending now)
+            // rather than paying a second clock inside the hot path
+            let fb_end = trace::now_ns();
+            let f_ns = (out.forward_ms * 1e6) as u64;
+            let l_ns = (out.loss_ms * 1e6) as u64;
+            let b_ns = (out.backward_ms * 1e6) as u64;
+            let b_start = fb_end.saturating_sub(b_ns);
+            let l_start = b_start.saturating_sub(l_ns);
+            let f_start = l_start.saturating_sub(f_ns);
+            trace::event_at("train.forward", "train", f_start, f_ns, step as u32);
+            trace::event_at("train.loss", "train", l_start, l_ns, step as u32);
+            trace::event_at("train.backward", "train", b_start, b_ns, step as u32);
             if step == self.start_step + 1 {
                 first_loss = out.loss;
             }
@@ -740,6 +789,7 @@ impl NativeTrainer {
             }
 
             let mut grads = out.grads;
+            let clip_sp = trace::span("train.clip", "train");
             let grad_norm = {
                 let mut ss = 0.0f64;
                 for g in &grads {
@@ -754,8 +804,10 @@ impl NativeTrainer {
             if let Some(max_norm) = h.grad_clip {
                 clip_global_norm(&mut grads, max_norm);
             }
+            drop(clip_sp);
 
             let t_opt = Instant::now();
+            let opt_sp = trace::span("train.optim", "train");
             let lr = schedule.at(step);
             let stats = if rolled_back {
                 let (snap_step, snap_params, snap_opt) =
@@ -780,6 +832,7 @@ impl NativeTrainer {
                 self.model.load_params(&params);
                 stats
             };
+            drop(opt_sp);
             timing.optim_ms += t_opt.elapsed().as_secs_f64() * 1e3;
 
             // never refresh the rollback snapshot while a deviation is
@@ -796,7 +849,10 @@ impl NativeTrainer {
                 // the capture *is* the step-boundary copy (an O(bytes)
                 // memcpy of params + moments + cursor); everything after
                 // it — encode, CRC, disk — can leave the step loop
-                let ck = self.capture(step, &params, opt.export_state());
+                let ck = {
+                    let _sp = trace::span("train.ckpt_capture", "train");
+                    self.capture(step, &params, opt.export_state())
+                };
                 match &saver {
                     Some(sv) => {
                         sv.enqueue(path, ck, self.cfg.ckpt_shards);
@@ -836,6 +892,39 @@ impl NativeTrainer {
                 probes.insert(pe_name.clone(), TensorProbe::of(&grads[pe_idx]));
                 probes.insert(mid_name.clone(), TensorProbe::of(&grads[mid_idx]));
                 rec.grad_probes = probes;
+                // the g²/v under-estimation ratio (the paper's spike
+                // mechanism): how far the realized gradient outruns the
+                // stale second moment.  Skipped on rollback steps — the
+                // restored moments no longer correspond to this gradient.
+                // eps matches build_optimizer's AdamWConfig.
+                if !rolled_back {
+                    let st = opt.export_state();
+                    for (idx, name) in [(pe_idx, &pe_name), (mid_idx, &mid_name)] {
+                        if let Some(r) =
+                            under_estimation_ratio(&st, idx, &grads[idx], 1e-6)
+                        {
+                            rec.under_est.insert(name.clone(), r);
+                        }
+                    }
+                }
+            }
+            if let Some(fr) = flight.as_mut() {
+                fr.push(FlightFrame {
+                    step,
+                    loss: out.loss,
+                    grad_norm,
+                    lr,
+                    rms: rec.rms.clone(),
+                    under_est: rec.under_est.clone(),
+                });
+                // the guard firing is the forensic moment: dump the window
+                // *now*, spike frame included, before training continues
+                if rolled_back && flight_dump.is_none() {
+                    let p =
+                        self.cfg.flight_path.as_ref().expect("flight implies path");
+                    fr.dump_to(Path::new(p), "rollback_guard", step)?;
+                    flight_dump = Some(p.clone());
+                }
             }
             if verbose && (step % 10 == 0 || step == 1) {
                 println!(
@@ -873,10 +962,35 @@ impl NativeTrainer {
 
         let losses = sink.loss_trace();
         let sc = spike_cfg(h.steps);
-        let loss_spikes = detect_loss_spikes(&losses, &sc).len();
+        let loss_spike_steps = detect_loss_spikes(&losses, &sc);
+        let loss_spikes = loss_spike_steps.len();
         let rms_spikes = detect_rms_spikes(&sink.rms_trace(&pe_name), &sc).len();
         let tail_loss = tail_mean_loss(&losses);
+        // the guard never fired (or was off) but the post-hoc detector saw
+        // a spike: still dump the recorder window for forensics
+        if flight_dump.is_none() {
+            if let (Some(fr), Some(&at)) = (&flight, loss_spike_steps.last()) {
+                let p = self.cfg.flight_path.as_ref().expect("flight implies path");
+                fr.dump_to(Path::new(p), "loss_spike", self.start_step + 1 + at)?;
+                flight_dump = Some(p.clone());
+            }
+        }
         let steps_run = h.steps - self.start_step;
+        // tracer overhead as a gated metric: spans recorded this run ×
+        // calibrated per-span cost, relative to mean step wall time.  The
+        // span counter is process-global, so concurrent runs (parallel
+        // tests) make this an over-estimate; the CLI path is one run and
+        // therefore accurate.
+        let spans_per_step = trace::spans_recorded().saturating_sub(spans_before)
+            as f64
+            / steps_run.max(1) as f64;
+        let mean_step_ns = timing.total_ms * 1e6 / steps_run.max(1) as f64;
+        let trace_overhead_pct = if mean_step_ns > 0.0 {
+            (spans_per_step * trace::calibrate_span_cost_ns(256) / mean_step_ns
+                * 100.0) as f32
+        } else {
+            0.0
+        };
         // the trainer's state now corresponds to the end of the run
         self.final_ckpt = Some(self.capture(h.steps, &params, opt.export_state()));
         self.start_step = h.steps;
@@ -899,6 +1013,8 @@ impl NativeTrainer {
             snapshots,
             ckpt_bytes,
             ckpt_save_secs,
+            trace_overhead_pct,
+            flight_dump,
         })
     }
 
@@ -1103,7 +1219,48 @@ mod tests {
         assert!(r.get("steps_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(r.get("loss_spikes").is_some());
         assert!(r.get("time_ms").unwrap().get("forward").is_some());
+        // the tracer-overhead gate needs this field in every bench doc;
+        // the bound is loose because parallel tests share the span counter
+        let ov = r.get("trace_overhead_pct").unwrap().as_f64().unwrap();
+        assert!(ov.is_finite() && ov >= 0.0, "overhead {ov}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// The flight recorder (ISSUE 6 tentpole): a spiky rollback run dumps
+    /// the last-K-steps forensic window, with the g²/v under-estimation
+    /// ratio present for both probed tensors, and the bench JSON points at
+    /// the dump.
+    #[test]
+    fn flight_recorder_dumps_on_spike_with_ratio_probes() {
+        let steps = 60u64;
+        let mut cfg = tiny_cfg(LinearKind::Standard, steps);
+        cfg.hyper.optimizer = crate::config::OptimizerKind::Adamw;
+        cfg.shifts = vec![Shift {
+            at_step: 40,
+            image_gain: 60.0,
+            remap_concepts: true,
+        }];
+        cfg.rollback_on_spike = true;
+        let dump_path = std::env::temp_dir().join("sb_flight_trainer_test.json");
+        cfg.flight_path = Some(dump_path.to_str().unwrap().to_string());
+        cfg.flight_window = 32;
+        let res = NativeTrainer::new(cfg).run(false).unwrap();
+        assert!(res.flight_dump.is_some(), "spiky run must write a flight dump");
+        let text = std::fs::read_to_string(&dump_path).unwrap();
+        let dump = crate::trace::parse_dump(&text).unwrap();
+        assert_eq!(dump.window, 32);
+        assert!(
+            dump.trigger_kind == "rollback_guard"
+                || dump.trigger_kind == "loss_spike",
+            "unexpected trigger {:?}",
+            dump.trigger_kind
+        );
+        assert!(!dump.frames.is_empty() && dump.frames.len() <= 32);
+        // full-fidelity probes: both probed tensors carry the ratio
+        let best = dump.frames.iter().map(|f| f.under_est.len()).max().unwrap();
+        assert!(best >= 2, "expected ≥2 ratio-probed tensors, got {best}");
+        assert!(res.to_json().contains("\"flight_dump\""));
+        std::fs::remove_file(&dump_path).ok();
     }
 
     /// The headline resume contract: train k steps + snapshot + resume to

@@ -295,6 +295,11 @@ fn compare_serve(
 
 // ----- train ----------------------------------------------------------
 
+/// Absolute ceiling for the span tracer's estimated share of step wall
+/// time (`trace_overhead_pct` in BENCH_train.json).  It is a ratio of two
+/// same-machine clocks, so it gates in portable mode, not just strict.
+const TRACE_OVERHEAD_BUDGET_PCT: f64 = 3.0;
+
 fn compare_train(
     old: &Value,
     new: &Value,
@@ -322,6 +327,16 @@ fn compare_train(
                 "{tag}: loss no longer decreases ({first:.4} → {fin:.4})"
             ));
         }
+        // tracing must stay effectively free: the tracer's share of step
+        // time is budgeted absolutely, independent of any baseline
+        if let Some(ov) = opt_num(r, &tag, "trace_overhead_pct")? {
+            if !ov.is_finite() || ov > TRACE_OVERHEAD_BUDGET_PCT {
+                regs.push(format!(
+                    "{tag}: trace_overhead_pct {ov:.2} exceeds the \
+                     {TRACE_OVERHEAD_BUDGET_PCT}% budget"
+                ));
+            }
+        }
         let Some(o) = on
             .iter()
             .find(|o| s(o, "kind") == key.0 && s(o, "optimizer") == key.1)
@@ -329,6 +344,16 @@ fn compare_train(
             continue;
         };
         matched += 1;
+        // once the baseline records the overhead metric it must not vanish
+        // from a fresh run — absence never reads as a pass
+        if o.get("trace_overhead_pct").is_some()
+            && r.get("trace_overhead_pct").is_none()
+        {
+            regs.push(format!(
+                "{tag}: baseline records trace_overhead_pct but the new run \
+                 omits it"
+            ));
+        }
         let (ospikes, nspikes) = (
             opt_num(o, &tag, "loss_spikes")?.unwrap_or(0.0),
             opt_num(r, &tag, "loss_spikes")?.unwrap_or(0.0),
@@ -620,6 +645,46 @@ mod tests {
         // strict flags the 2× slowdown
         let regs = compare_bench(&old, &new, 0.15, true).unwrap();
         assert!(regs.iter().any(|r| r.contains("steps/s")), "{regs:?}");
+    }
+
+    fn train_doc_with_overhead(overhead: Option<f64>) -> Value {
+        let field = match overhead {
+            Some(v) => format!(r#""trace_overhead_pct":{v},"#),
+            None => String::new(),
+        };
+        parse(&format!(
+            r#"{{"bench":"train_native","config":{{}},"results":[
+                {{"kind":"switchback","optimizer":"stable_adamw",
+                  "first_loss":3.4,"final_loss":2.1,
+                  "steps_per_sec":12.0,"loss_spikes":0,{field}
+                  "diverged":false}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    /// The tracer-overhead gate: within budget passes, over budget fails
+    /// in portable mode, and the field vanishing from a fresh run while
+    /// the baseline records it fails closed.
+    #[test]
+    fn trace_overhead_is_gated_and_fails_closed() {
+        let old = train_doc_with_overhead(Some(0.5));
+        let ok = train_doc_with_overhead(Some(1.2));
+        assert!(compare_bench(&old, &ok, 0.15, false).unwrap().is_empty());
+        // blown budget: caught without strict mode
+        let hot = train_doc_with_overhead(Some(7.5));
+        let regs = compare_bench(&old, &hot, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("trace_overhead_pct")),
+            "{regs:?}"
+        );
+        // field dropped while the baseline records it: caught
+        let gone = train_doc_with_overhead(None);
+        let regs = compare_bench(&old, &gone, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("omits it")), "{regs:?}");
+        // pre-tracing baseline against an instrumented run: no complaint
+        let regs = compare_bench(&gone, &ok, 0.15, false).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
     }
 
     #[test]

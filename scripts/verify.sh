@@ -88,6 +88,7 @@ rm -rf "$CKPT_PIPE"
     --ckpt-dir "$CKPT_PIPE" \
     --ckpt-shards 4 \
     --out "$REPO_ROOT/BENCH_ckpt.json" \
+    --trace-out "$REPO_ROOT/BENCH_pipeline.trace.json" \
     --quiet
 # belt and braces on top of the command's own asserts: the artifact must
 # record ≥3 watcher promotions, the injected-drift rejection, no
@@ -109,6 +110,55 @@ grep -q '"ckpt_shards":4,' "$REPO_ROOT/BENCH_ckpt.json" \
     || { echo "pipeline smoke FAILED: snapshots were not sharded 4 ways" >&2; exit 1; }
 grep -q '"sharded_bit_identical":true,' "$REPO_ROOT/BENCH_ckpt.json" \
     || { echo "pipeline smoke FAILED: sharded async snapshot != sync v1 save" >&2; exit 1; }
+
+echo
+echo "== trace smoke: pipeline span dump → Perfetto export + span-time table =="
+# the pipeline dump covers train + ckpt + serve spans end to end; the
+# export must be loadable Chrome trace-event JSON (CI uploads it as the
+# per-PR profiling artifact)
+grep -q '"format":"switchback-trace"' "$REPO_ROOT/BENCH_pipeline.trace.json" \
+    || { echo "trace smoke FAILED: pipeline wrote no span dump" >&2; exit 1; }
+"$BIN" trace export "$REPO_ROOT/BENCH_pipeline.trace.json" \
+    --out "$REPO_ROOT/BENCH_pipeline.perfetto.json"
+grep -q '"traceEvents"' "$REPO_ROOT/BENCH_pipeline.perfetto.json" \
+    || { echo "trace smoke FAILED: export is not Chrome trace-event JSON" >&2; exit 1; }
+for span in train.step ckpt.shard_write serve.batch; do
+    grep -q "\"$span\"" "$REPO_ROOT/BENCH_pipeline.trace.json" \
+        || { echo "trace smoke FAILED: no $span spans in the pipeline dump" >&2; exit 1; }
+done
+"$BIN" trace top "$REPO_ROOT/BENCH_pipeline.trace.json"
+echo "trace smoke OK — pipeline dump exported to BENCH_pipeline.perfetto.json"
+
+echo
+echo "== flight-recorder smoke: spiky adamw train → forensic dump + lead-lag =="
+FLIGHT="$REPO_ROOT/.verify_flight.json"
+FLIGHT_BENCH="$REPO_ROOT/.bench_flight_smoke.json"
+rm -f "$FLIGHT"
+# AdamW under the stuck-in-the-past shift schedule is the paper's spike
+# reproducer; the recorder must dump iff the rollback guard or the
+# post-hoc loss-spike detector fired (the run's own JSON says which)
+"$BIN" train --kinds standard --optimizers adamw \
+    --steps "$TRAIN_STEPS" --with-shifts --rollback-on-spike \
+    --eval-per-concept 0 \
+    --flight-out "$FLIGHT" --flight-window 32 \
+    --out "$FLIGHT_BENCH" --quiet
+if [ -f "$FLIGHT" ]; then
+    grep -q '"format":"switchback-flight"' "$FLIGHT" \
+        || { echo "flight smoke FAILED: dump is not flight-format JSON" >&2; exit 1; }
+    grep -q '"under_estimation_ratio"' "$FLIGHT" \
+        || { echo "flight smoke FAILED: no g²/v under-estimation probes in the dump" >&2; exit 1; }
+    "$BIN" trace spikes "$FLIGHT" | grep -q "loss spikes follow an RMS spike" \
+        || { echo "flight smoke FAILED: trace spikes lead-lag summary missing" >&2; exit 1; }
+    echo "flight smoke OK — forensic dump written and analyzable"
+else
+    # no dump is only legitimate when nothing fired: spike ⇒ dump
+    grep -q '"loss_spikes":0,' "$FLIGHT_BENCH" \
+        || { echo "flight smoke FAILED: run spiked but wrote no flight dump" >&2; exit 1; }
+    grep -q '"rollbacks":0,' "$FLIGHT_BENCH" \
+        || { echo "flight smoke FAILED: guard fired but wrote no flight dump" >&2; exit 1; }
+    echo "flight smoke OK — no spike at $TRAIN_STEPS steps, recorder stayed quiet"
+fi
+rm -f "$FLIGHT" "$FLIGHT_BENCH"
 
 echo
 echo "== standby smoke: sharded async train → watcher promotes the newer v2 snapshot =="
