@@ -3,12 +3,15 @@
 //! Paper setup: dims 512–4096, time each op in the fwd+bwd of dim→4·dim and
 //! 4·dim→dim layers (a transformer MLP) with b = 16·dim rows; then report
 //! the % speedup of SwitchBack's summed ops over the standard layer's.
-//! Substrate substitution: rust i8 GEMM vs f32 GEMM instead of Triton int8
-//! vs fp16 cuBLAS — the shape (int8 matmuls ≈ half the float time, quantize
-//! ops an order of magnitude cheaper, advantage grows with dim) carries.
+//! Substrate substitution: the packed blocked int8 GEMM vs f32 GEMM instead
+//! of Triton int8 vs fp16 cuBLAS — the shape (int8 matmuls faster than the
+//! float ones, quantize ops an order of magnitude cheaper, advantage grows
+//! with dim) carries.  The int8 bars time the packed kernel with the
+//! quantize+pack cost measured as its own bar, mirroring how
+//! [`switchback::gemm::MatmulPlan::forward`] pays it per training call.
 
-use switchback::gemm::{StandardLinearOps, SwitchBackOps};
-use switchback::quant::{rowwise_quant, tensorwise_quant, tensorwise_quant_transpose};
+use switchback::gemm::{gemm_i8_packed, MatmulPlan, PackedInt8};
+use switchback::quant::{rowwise_quant, QuantScheme};
 use switchback::tensor::{Matrix, Rng};
 use switchback::util::bench::{bench, BenchResult};
 
@@ -20,6 +23,8 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
     let dims: &[usize] = if quick { &[128, 256] } else { &[128, 256, 512] };
     let samples = 3;
+    let standard = MatmulPlan::standard();
+    let switchback = MatmulPlan::switchback(false);
     println!("== Fig 3 (left): per-op times, averaged over dim→4dim and 4dim→dim ==");
     println!("   b = 16·dim rows (batch×seq)\n");
     let mut rows = vec![];
@@ -38,38 +43,38 @@ fn main() {
 
             // --- standard (Algorithm 5): three float matmuls
             let r_fwd = bench("std fwd", samples, || {
-                let _ = StandardLinearOps::forward(&x, &w);
+                let _ = standard.forward(&x, &w);
             });
             let r_dg = bench("std dgrad", samples, || {
-                let _ = StandardLinearOps::dgrad(&g, &w);
+                let _ = standard.dgrad(&g, &w);
             });
             let r_wg = bench("std wgrad", samples, || {
-                let _ = StandardLinearOps::wgrad(&g, &x);
+                let _ = standard.wgrad(&g, &x);
             });
             t_std += ms(&r_fwd) + ms(&r_dg) + ms(&r_wg);
 
             // --- SwitchBack ops, individually (the Fig 3-left bars)
             let xq = rowwise_quant(&x);
-            let wq = tensorwise_quant(&w);
             let gq = rowwise_quant(&g);
-            let wtq = tensorwise_quant_transpose(&w);
+            let wp = PackedInt8::quantize(QuantScheme::TensorWise, &w);
+            let wtp = PackedInt8::quantize(QuantScheme::TensorWiseTranspose, &w);
             let r_qx = bench("quantize x (rowwise)", samples, || {
                 let _ = rowwise_quant(&x);
             });
-            let r_qw = bench("quantize w (tensorwise)", samples, || {
-                let _ = tensorwise_quant(&w);
+            let r_qw = bench("quantize+pack w (tensorwise)", samples, || {
+                let _ = PackedInt8::quantize(QuantScheme::TensorWise, &w);
             });
-            let r_qwt = bench("quantize+transpose w (fused)", samples, || {
-                let _ = tensorwise_quant_transpose(&w);
+            let r_qwt = bench("quantize+transpose+pack w (fused)", samples, || {
+                let _ = PackedInt8::quantize(QuantScheme::TensorWiseTranspose, &w);
             });
-            let r_i8f = bench("int8 matmul+dequant (fwd)", samples, || {
-                let _ = switchback::gemm::gemm_i8_nt_rowtensor(&xq, &wq);
+            let r_i8f = bench("int8 blocked matmul+dequant (fwd)", samples, || {
+                let _ = gemm_i8_packed(&xq, &wp);
             });
-            let r_i8d = bench("int8 matmul+dequant (dgrad)", samples, || {
-                let _ = switchback::gemm::gemm_i8_nt_rowtensor(&gq, &wtq);
+            let r_i8d = bench("int8 blocked matmul+dequant (dgrad)", samples, || {
+                let _ = gemm_i8_packed(&gq, &wtp);
             });
             let r_wg16 = bench("f32 wgrad (kept high precision)", samples, || {
-                let _ = SwitchBackOps::wgrad(&g, &x);
+                let _ = switchback.wgrad(&g, &x);
             });
             t_sb += ms(&r_qx) + ms(&r_qw) + ms(&r_qwt) + ms(&r_i8f) + ms(&r_i8d)
                 + ms(&r_wg16);

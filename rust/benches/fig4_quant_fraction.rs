@@ -1,18 +1,32 @@
 //! Fig 4 (left): % of a SwitchBack linear layer's time spent in quantize
 //! ops, as a function of dim.  Paper: ≤25%, falling to ~10% at large dim
 //! (quantize is O(n²) against the matmul's O(n³)).
+//!
+//! Matmuls run on the packed blocked kernel (weights packed outside the
+//! timer, as the prepare path does); quantize ops cover both activation
+//! row-quantize and the weight quantize+pack the training forward pays
+//! per call.  `--out <path>` writes a `gemm_quant_fraction` artifact the
+//! `gemm_roofline` bench embeds into BENCH_gemm.json for the CI gate.
 
-use switchback::gemm::{gemm_i8_nt_rowtensor, SwitchBackOps};
-use switchback::quant::{rowwise_quant, tensorwise_quant, tensorwise_quant_transpose};
+use switchback::gemm::{gemm_i8_packed, MatmulPlan, PackedInt8};
+use switchback::quant::{rowwise_quant, QuantScheme};
 use switchback::tensor::{Matrix, Rng};
 use switchback::util::bench::bench;
+use switchback::util::json::ObjWriter;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned());
     let dims: &[usize] = if quick { &[128, 256] } else { &[128, 256, 512] };
     let samples = 3;
+    let plan = MatmulPlan::switchback(false);
     println!("== Fig 4 (left): fraction of SwitchBack layer time in quantize ops ==\n");
     println!("  dim     quantize-ms   matmul-ms   quant %");
+    let mut rows = Vec::new();
     for &dim in dims {
         let b = 2 * dim; // see fig3 note
         let (m, n) = (4 * dim, dim);
@@ -21,21 +35,21 @@ fn main() {
         let w = Matrix::randn(m, n, 0.05, &mut rng);
         let g = Matrix::randn(b, m, 1.0, &mut rng);
         let xq = rowwise_quant(&x);
-        let wq = tensorwise_quant(&w);
         let gq = rowwise_quant(&g);
-        let wtq = tensorwise_quant_transpose(&w);
+        let wp = PackedInt8::quantize(QuantScheme::TensorWise, &w);
+        let wtp = PackedInt8::quantize(QuantScheme::TensorWiseTranspose, &w);
 
         let q = bench("quant", samples, || {
             let _ = rowwise_quant(&x);
-            let _ = tensorwise_quant(&w);
             let _ = rowwise_quant(&g);
-            let _ = tensorwise_quant_transpose(&w);
+            let _ = PackedInt8::quantize(QuantScheme::TensorWise, &w);
+            let _ = PackedInt8::quantize(QuantScheme::TensorWiseTranspose, &w);
         })
         .median_ns;
         let mm = bench("matmuls", samples, || {
-            let _ = gemm_i8_nt_rowtensor(&xq, &wq);
-            let _ = gemm_i8_nt_rowtensor(&gq, &wtq);
-            let _ = SwitchBackOps::wgrad(&g, &x);
+            let _ = gemm_i8_packed(&xq, &wp); // fwd
+            let _ = gemm_i8_packed(&gq, &wtp); // dgrad
+            let _ = plan.wgrad(&g, &x); // f32 wgrad (kept high precision)
         })
         .median_ns;
         let frac = 100.0 * q / (q + mm);
@@ -44,6 +58,26 @@ fn main() {
             q / 1e6,
             mm / 1e6
         );
+        rows.push((dim, q / 1e6, mm / 1e6, frac));
     }
     println!("\n  (paper: ≤25%, decreasing with dim)");
+
+    if let Some(path) = out_path {
+        let entries: Vec<String> = rows
+            .iter()
+            .map(|&(dim, quant_ms, matmul_ms, pct)| {
+                let mut o = ObjWriter::new();
+                o.field_u64("dim", dim as u64)
+                    .field_f32("quant_ms", quant_ms as f32)
+                    .field_f32("matmul_ms", matmul_ms as f32)
+                    .field_f32("quant_pct", pct as f32);
+                o.finish()
+            })
+            .collect();
+        let mut top = ObjWriter::new();
+        top.field_str("bench", "gemm_quant_fraction")
+            .field_raw("results", &format!("[{}]", entries.join(",")));
+        std::fs::write(&path, top.finish() + "\n").expect("write --out");
+        println!("wrote {path}");
+    }
 }

@@ -1,49 +1,168 @@
-//! GEMM roofline: absolute throughput of the native kernels (GFLOP/s and
-//! effective GB/s), used by EXPERIMENTS.md §Perf to argue how far the
-//! substrate is from this machine's practical roofline, and to track the
-//! perf-pass iterations.
+//! GEMM kernel shootout + roofline: f32 reference vs the flat int8
+//! reference kernel vs the packed cache-blocked kernel, at serve shapes.
+//!
+//! Emits `BENCH_gemm.json` (`--out`, kind `gemm_kernels`) — the artifact
+//! `scripts/check_bench.sh` gates: the blocked kernel must stay at least
+//! as fast as the flat reference at the two largest shapes (portable
+//! invariant; absolute ratios under `--strict`).  With `--quant <path>`
+//! the quant-fraction results emitted by the `fig4_quant_fraction` bench
+//! are embedded, so the gate sees one file.
+//!
+//! Shapes are `(b, k, m)`: activations `[b, k]` × weight `[m, k]` — the
+//! serve encoder's projection shapes (b = batch×seq rows).
 
-use switchback::gemm::{gemm_f32_nn, gemm_f32_nt, gemm_i8_nt_rowtensor};
+use switchback::gemm::{
+    gemm_f32_nt, gemm_i8_nt_rowtensor, gemm_i8_packed, kernel_isa, PackedInt8,
+};
 use switchback::quant::{rowwise_quant, tensorwise_quant};
 use switchback::tensor::{Matrix, Rng};
 use switchback::util::bench::bench;
+use switchback::util::json::{self, ObjWriter};
 use switchback::util::threads::num_threads;
 
-fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let sizes: &[usize] = if quick { &[256] } else { &[256, 512] };
-    let samples = 3;
-    println!("threads: {}\n", num_threads());
-    println!("  n       kernel          median-ms   GFLOP/s (2n³/t)");
-    for &n in sizes {
-        let mut rng = Rng::seed(1);
-        let a = Matrix::randn(n, n, 1.0, &mut rng);
-        let b = Matrix::randn(n, n, 1.0, &mut rng);
-        let flops = 2.0 * (n as f64).powi(3);
-        let aq = rowwise_quant(&a);
-        let bq = tensorwise_quant(&b);
+struct ShapeResult {
+    name: String,
+    b: usize,
+    k: usize,
+    m: usize,
+    f32_ms: f64,
+    reference_ms: f64,
+    blocked_ms: f64,
+}
 
-        let r1 = bench("f32 NT", samples, || {
-            let _ = gemm_f32_nt(&a, &b);
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let flag = |name: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let out_path = flag("--out");
+    let quant_path = flag("--quant");
+
+    // (b, k, m); the --quick set is exactly the committed-baseline set
+    // (benchmarks/BENCH_gemm.baseline.json) — benchdiff name-matches.
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(256, 256, 256), (512, 128, 512), (512, 512, 512)]
+    } else {
+        &[
+            (256, 256, 256),
+            (512, 128, 128),
+            (512, 128, 512),
+            (512, 512, 512),
+            (1024, 512, 512),
+        ]
+    };
+    let samples = 3;
+    println!("threads: {}  kernel isa: {}\n", num_threads(), kernel_isa().label());
+    println!("  shape                f32-ms   ref-i8-ms   blocked-ms   blocked-vs-ref   int8-vs-f32");
+    let mut results = Vec::new();
+    for &(b, k, m) in shapes {
+        let mut rng = Rng::seed(1);
+        let x = Matrix::randn(b, k, 1.0, &mut rng);
+        let w = Matrix::randn(m, k, 0.1, &mut rng);
+        let xq = rowwise_quant(&x);
+        let wq = tensorwise_quant(&w);
+        // pack once, outside the timer — serving packs at prepare/load time
+        let wp = PackedInt8::pack_tensorwise(&wq);
+
+        let r_f32 = bench("f32 NT", samples, || {
+            let _ = gemm_f32_nt(&x, &w);
         });
-        let r2 = bench("f32 NN", samples, || {
-            let _ = gemm_f32_nn(&a, &b);
+        let r_ref = bench("reference i8", samples, || {
+            let _ = gemm_i8_nt_rowtensor(&xq, &wq);
         });
-        let r3 = bench("i8 NT (+dequant)", samples, || {
-            let _ = gemm_i8_nt_rowtensor(&aq, &bq);
+        let r_blk = bench("blocked i8", samples, || {
+            let _ = gemm_i8_packed(&xq, &wp);
         });
-        for r in [&r1, &r2, &r3] {
-            println!(
-                "  {n:<7} {:<15} {:>9.3}   {:>8.1}",
-                r.name,
-                r.median_ns / 1e6,
-                flops / r.median_ns
-            );
-        }
+        let sr = ShapeResult {
+            name: format!("b{b}_k{k}_m{m}"),
+            b,
+            k,
+            m,
+            f32_ms: r_f32.median_ns / 1e6,
+            reference_ms: r_ref.median_ns / 1e6,
+            blocked_ms: r_blk.median_ns / 1e6,
+        };
         println!(
-            "  {n:<7} int8/f32-NT ratio: {:.2}x",
-            r1.median_ns / r3.median_ns
+            "  {:<18} {:>9.3}   {:>9.3}   {:>10.3}   {:>13.2}x   {:>10.2}x",
+            sr.name,
+            sr.f32_ms,
+            sr.reference_ms,
+            sr.blocked_ms,
+            sr.reference_ms / sr.blocked_ms,
+            sr.f32_ms / sr.blocked_ms,
         );
-        println!();
+        results.push(sr);
     }
+
+    if let Some(path) = out_path {
+        let entries: Vec<String> = results
+            .iter()
+            .map(|s| {
+                let mut o = ObjWriter::new();
+                o.field_str("name", &s.name)
+                    .field_u64("b", s.b as u64)
+                    .field_u64("k", s.k as u64)
+                    .field_u64("m", s.m as u64)
+                    .field_f32("f32_ms", s.f32_ms as f32)
+                    .field_f32("reference_ms", s.reference_ms as f32)
+                    .field_f32("blocked_ms", s.blocked_ms as f32)
+                    .field_f32(
+                        "blocked_speedup",
+                        (s.reference_ms / s.blocked_ms) as f32,
+                    )
+                    .field_f32("int8_vs_f32", (s.f32_ms / s.blocked_ms) as f32);
+                o.finish()
+            })
+            .collect();
+        let quant_raw = quant_path.map(|qp| match embed_quant(&qp) {
+            Ok(raw) => raw,
+            Err(e) => {
+                eprintln!("could not embed quant fraction from {qp}: {e}");
+                std::process::exit(1);
+            }
+        });
+        let mut top = ObjWriter::new();
+        top.field_str("bench", "gemm_kernels")
+            .field_str("isa", kernel_isa().label())
+            .field_u64("threads", num_threads() as u64)
+            .field_raw("results", &format!("[{}]", entries.join(",")));
+        if let Some(raw) = quant_raw {
+            top.field_raw("quant_fraction", &raw);
+        }
+        std::fs::write(&path, top.finish() + "\n").expect("write --out");
+        println!("\nwrote {path}");
+    }
+}
+
+/// Re-serialize the `fig4_quant_fraction --out` results array so the gate
+/// reads one artifact.  Fails loudly on schema drift — a silently dropped
+/// field would make the benchdiff gate vacuous.
+fn embed_quant(path: &str) -> Result<String, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let doc = json::parse(&text)?;
+    if doc.get("bench").and_then(|b| b.as_str()) != Some("gemm_quant_fraction") {
+        return Err("not a gemm_quant_fraction artifact".into());
+    }
+    let arr = doc
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or("no results array")?;
+    let mut entries = Vec::new();
+    for e in arr {
+        let mut o = ObjWriter::new();
+        let f = |k: &str| -> Result<f64, String> {
+            e.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("missing field {k}"))
+        };
+        o.field_u64("dim", f("dim")? as u64)
+            .field_f32("quant_ms", f("quant_ms")? as f32)
+            .field_f32("matmul_ms", f("matmul_ms")? as f32)
+            .field_f32("quant_pct", f("quant_pct")? as f32);
+        entries.push(o.finish());
+    }
+    Ok(format!("[{}]", entries.join(",")))
 }

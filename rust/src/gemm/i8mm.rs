@@ -12,12 +12,25 @@ use crate::quant::{QuantizedRow, QuantizedTensor, INT8_MAX};
 use crate::tensor::Matrix;
 use crate::util::threads::par_chunks_mut;
 
+/// Reference int8 dot product — the oracle the packed kernel
+/// ([`super::pack`]) is tested bit-for-bit against.
+///
+/// Mismatched inner dims are a caller bug, enforced at this kernel
+/// boundary: the old `min(len)` truncation silently produced a wrong
+/// (partial) dot instead of failing.
 #[inline]
-fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+pub(crate) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(
+        a.len(),
+        b.len(),
+        "dot_i8 inner dims disagree ({} vs {})",
+        a.len(),
+        b.len()
+    );
     // i8×i8 products fit in i16 (≤127² = 16129); accumulating i16 products
     // into i32 lanes is the pmaddwd pattern LLVM's autovectorizer
     // recognizes (≈3× over naive i32 widening on SSE2/AVX2 — §Perf log).
-    let n = a.len().min(b.len());
+    let n = a.len();
     let mut acc = [0i32; 8];
     let chunks = n / 8;
     for i in 0..chunks {
@@ -110,6 +123,18 @@ mod tests {
         }
         let slow = super::super::gemm_f32_nt(&xd, &wd);
         assert!(fast.max_abs_diff(&slow) < 1e-3);
+    }
+
+    /// The silent-truncation bug is gone: mismatched inner dims now trip
+    /// the kernel-boundary invariant (debug builds) instead of returning
+    /// a partial dot.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "dot_i8 inner dims disagree")]
+    fn mismatched_inner_dims_panic_in_debug() {
+        let a = [1i8, 2, 3, 4];
+        let b = [1i8, 2, 3];
+        let _ = dot_i8(&a, &b);
     }
 
     #[test]

@@ -2,103 +2,268 @@
 //! A100 int8 tensor-core kernels (DESIGN.md §Substitutions).
 //!
 //! The paper's Fig 3/4/13 measure Triton int8 kernels against fp16 cuBLAS;
-//! we measure a rayon-parallel, cache-blocked i8×i8→i32 GEMM against an
+//! we measure a packed cache-blocked i8×i8→i32 GEMM ([`pack`]) against an
 //! equally-optimized f32 GEMM.  The *shape* of the result carries over:
-//! 8-bit operands halve (vs f32: quarter) the memory traffic and widen the
-//! SIMD lanes, while quantize ops are O(n²) against the matmul's O(n³), so
+//! 8-bit operands quarter (vs f32) the memory traffic and widen the SIMD
+//! lanes, while quantize ops are O(n²) against the matmul's O(n³), so
 //! SwitchBack's advantage grows with `dim` and `batch×seq`.
 //!
 //! Layout conventions (matching the paper's observation that int8 hardware
 //! only implements `A Bᵀ`): all kernels are "NT" — both operands row-major,
 //! contracting over their *columns*, so every dot product runs over two
 //! contiguous rows and vectorizes.
+//!
+//! ## The one dispatch point: [`MatmulPlan`]
+//!
+//! Every linear layer's numerics are a *plan* — which form the weight is
+//! quantized to, and which of the three matmuls (fwd / dgrad / wgrad) run
+//! in int8 — held as plain data.  `MatmulPlan` replaces the old
+//! `StandardLinearOps` / `SwitchBackOps` / `LlmInt8Ops` structs and the
+//! per-kind match arms that were copy-pasted across `Linear::forward`,
+//! `Linear::forward_infer` and `PreparedLinear::forward`; callers pick a
+//! plan once (`LinearKind::plan()`) and every path funnels through it.
+//! All int8 matmuls run on the packed blocked kernel; the flat-layout
+//! kernels in [`i8mm`] remain as the reference oracles it is tested
+//! bit-for-bit against.
 
 mod f32mm;
 mod i8mm;
+mod pack;
 
 pub use f32mm::{gemm_f32_nn, gemm_f32_nt};
 pub use i8mm::{gemm_i8_nt_rowcol, gemm_i8_nt_rowtensor};
-
-use crate::quant::{
-    rowwise_quant, tensorwise_quant, tensorwise_quant_transpose,
+pub use pack::{
+    gemm_i8_packed, gemm_i8_packed_fused, gemm_i8_packed_i32, kernel_isa,
+    KernelIsa, PackedInt8, PackedScale, KP, MR,
 };
+
+use crate::quant::{QuantScheme, QuantScratch, QuantizedRow};
 use crate::tensor::Matrix;
+use std::cell::RefCell;
 
-/// The three matmuls of a standard linear layer, full precision
-/// (Algorithm 5 — the `torch.autograd` baseline):
-/// fwd `Y = X Wᵀ`, dgrad `dX = G W`, wgrad `dW = Gᵀ X`.
-pub struct StandardLinearOps;
+thread_local! {
+    /// Per-thread activation-quantization scratch: the serve/infer hot
+    /// path row-quantizes into these reused buffers, allocating nothing
+    /// per call once warm.
+    static ACT_SCRATCH: RefCell<QuantScratch> = RefCell::new(QuantScratch::new());
+}
 
-impl StandardLinearOps {
-    /// `x [b, n]`, `w [m, n]` → `[b, m]`
-    pub fn forward(x: &Matrix, w: &Matrix) -> Matrix {
-        gemm_f32_nt(x, w)
-    }
+/// Row-quantize `x` into the thread-local scratch and run `f` on it.
+fn with_quantized<R>(x: &Matrix, f: impl FnOnce(&QuantizedRow) -> R) -> R {
+    ACT_SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        f(s.rowwise(x))
+    })
+}
 
-    /// `g [b, m]`, `w [m, n]` → `[b, n]`
-    pub fn dgrad(g: &Matrix, w: &Matrix) -> Matrix {
-        gemm_f32_nn(g, w)
-    }
+/// The form a plan's weight operand takes in its forward matmul.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightForm {
+    /// full-precision f32 (Standard baseline, Algorithm 5)
+    F32,
+    /// int8 codes + one scalar state (SwitchBack, eq. 2)
+    TensorWise,
+    /// int8 codes + per-output-row state (LLM.int8(), eq. 1)
+    RowWise,
+}
 
-    /// `g [b, m]`, `x [b, n]` → `[m, n]` (inner dim = b = batch×seq)
-    pub fn wgrad(g: &Matrix, x: &Matrix) -> Matrix {
-        let gt = g.transpose();
-        gemm_f32_nn(&gt, x)
+impl WeightForm {
+    /// The quantization scheme this form applies to the weight, if any.
+    pub fn scheme(&self) -> Option<QuantScheme> {
+        match self {
+            Self::F32 => None,
+            Self::TensorWise => Some(QuantScheme::TensorWise),
+            Self::RowWise => Some(QuantScheme::RowWise),
+        }
     }
 }
 
-/// The SwitchBack linear layer ops (Algorithm 1) on the native substrate:
-/// int8 fwd + dgrad, f32 wgrad.
-pub struct SwitchBackOps;
+/// A linear layer's numerics as data: weight form + which matmuls run in
+/// int8 + what the backward cache holds.  One `match`-free dispatch point
+/// for training forward/backward, inference, and prepare-time packing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatmulPlan {
+    /// forward weight form (also the prepared/served form)
+    pub weight: WeightForm,
+    /// dgrad `dX = G W` runs int8 (row-quantized G × quantized Wᵀ)
+    pub int8_dgrad: bool,
+    /// wgrad `dW = Gᵀ X` runs int8 (the noisy one — Appendix C)
+    pub int8_wgrad: bool,
+    /// backward cache keeps int8 X codes instead of f32 X (Algorithm 3)
+    pub cache_codes: bool,
+}
 
-impl SwitchBackOps {
-    pub fn forward(x: &Matrix, w: &Matrix) -> Matrix {
-        let xq = rowwise_quant(x);
-        let wq = tensorwise_quant(w);
-        gemm_i8_nt_rowtensor(&xq, &wq)
+impl MatmulPlan {
+    /// Algorithm 5: all three matmuls full precision.
+    pub const fn standard() -> Self {
+        Self {
+            weight: WeightForm::F32,
+            int8_dgrad: false,
+            int8_wgrad: false,
+            cache_codes: false,
+        }
     }
 
-    pub fn dgrad(g: &Matrix, w: &Matrix) -> Matrix {
-        let gq = rowwise_quant(g);
-        // fused quantize+transpose: Wᵀ codes in one pass (§2.2.1)
-        let wtq = tensorwise_quant_transpose(w);
-        gemm_i8_nt_rowtensor(&gq, &wtq)
+    /// Algorithm 1 (`memory_efficient: false`) or Algorithm 3 (`true`):
+    /// int8 fwd + dgrad, exact f32 wgrad.
+    pub const fn switchback(memory_efficient: bool) -> Self {
+        Self {
+            weight: WeightForm::TensorWise,
+            int8_dgrad: true,
+            int8_wgrad: false,
+            cache_codes: memory_efficient,
+        }
     }
 
-    pub fn wgrad(g: &Matrix, x: &Matrix) -> Matrix {
-        StandardLinearOps::wgrad(g, x)
+    /// LLM.int8()-style: all three matmuls int8 (Fig 13 comparator).
+    pub const fn llm_int8() -> Self {
+        Self {
+            weight: WeightForm::RowWise,
+            int8_dgrad: true,
+            int8_wgrad: true,
+            cache_codes: false,
+        }
+    }
+
+    /// Whether the forward path row-quantizes its activations (callers
+    /// that already hold codes can take the `forward_quantized` door).
+    pub fn quantizes_activations(&self) -> bool {
+        !matches!(self.weight, WeightForm::F32)
+    }
+
+    /// Training/inference forward: `x [b, n]`, `w [m, n]` → `[b, m]`.
+    pub fn forward(&self, x: &Matrix, w: &Matrix) -> Matrix {
+        match self.weight.scheme() {
+            None => gemm_f32_nt(x, w),
+            Some(s) => {
+                let packed = PackedInt8::quantize(s, w);
+                with_quantized(x, |xq| gemm_i8_packed(xq, &packed))
+            }
+        }
+    }
+
+    /// Forward from already-quantized activations (shared codes — e.g. one
+    /// row-quantize feeding Q, K and V).  Int8 plans only.
+    pub fn forward_quantized(&self, xq: &QuantizedRow, w: &Matrix) -> Matrix {
+        let s = self
+            .weight
+            .scheme()
+            .expect("f32 plan has no quantized forward");
+        gemm_i8_packed(xq, &PackedInt8::quantize(s, w))
+    }
+
+    /// Forward with the fused quantize epilogue: dequantize, apply `map`
+    /// (e.g. gelu), and row-quantize each output row in one pass — the
+    /// next int8 layer's input without an f32 round-trip through memory.
+    pub fn forward_fused_quant(
+        &self,
+        xq: &QuantizedRow,
+        w: &Matrix,
+        map: Option<fn(f32) -> f32>,
+    ) -> QuantizedRow {
+        let s = self
+            .weight
+            .scheme()
+            .expect("f32 plan has no fused-quant forward");
+        gemm_i8_packed_fused(xq, &PackedInt8::quantize(s, w), map)
+    }
+
+    /// dgrad: `g [b, m]`, `w [m, n]` → `dX [b, n]`.
+    pub fn dgrad(&self, g: &Matrix, w: &Matrix) -> Matrix {
+        if !self.int8_dgrad {
+            return gemm_f32_nn(g, w);
+        }
+        let packed = match self.weight {
+            // fused quantize+transpose (§2.2.1): Wᵀ codes in one pass
+            WeightForm::TensorWise => {
+                PackedInt8::quantize(QuantScheme::TensorWiseTranspose, w)
+            }
+            WeightForm::RowWise => PackedInt8::quantize_rowwise(&w.transpose()),
+            WeightForm::F32 => unreachable!("int8 dgrad requires int8 weight"),
+        };
+        with_quantized(g, |gq| gemm_i8_packed(gq, &packed))
+    }
+
+    /// wgrad: `g [b, m]`, `x [b, n]` → `dW [m, n]` (inner dim = b =
+    /// batch×seq — which is why the int8 variant is the noisy one).
+    pub fn wgrad(&self, g: &Matrix, x: &Matrix) -> Matrix {
+        let gt = g.transpose();
+        if !self.int8_wgrad {
+            return gemm_f32_nn(&gt, x);
+        }
+        let packed = PackedInt8::quantize_rowwise(&x.transpose());
+        with_quantized(&gt, |gq| gemm_i8_packed(gq, &packed))
+    }
+
+    /// Pack the weight once (load/prepare time) into the form this plan's
+    /// forward consumes — int8 plans keep only packed codes + state.
+    pub fn prepare(&self, w: &Matrix) -> PreparedWeight {
+        match self.weight.scheme() {
+            None => PreparedWeight::Full(w.clone()),
+            Some(s) => PreparedWeight::Packed(PackedInt8::quantize(s, w)),
+        }
     }
 }
 
-/// LLM.int8()-style ops: all three matmuls in int8 (Fig 13 comparator).
-pub struct LlmInt8Ops;
+/// A weight stored in the form its forward matmul consumes, built once at
+/// prepare time: f32 for standard plans, packed tile-major int8 codes for
+/// quantized plans (≈4× less resident memory, zero per-call weight work).
+#[derive(Debug, Clone)]
+pub enum PreparedWeight {
+    /// f32 weight (Standard)
+    Full(Matrix),
+    /// packed int8 codes + state (SwitchBack / SwitchBackM / LLM.int8())
+    Packed(PackedInt8),
+}
 
-impl LlmInt8Ops {
-    pub fn forward(x: &Matrix, w: &Matrix) -> Matrix {
-        let xq = rowwise_quant(x);
-        let wq = rowwise_quant(w);
-        gemm_i8_nt_rowcol(&xq, &wq)
+impl PreparedWeight {
+    /// `x [b, in] → [b, out]`, activations quantized into the per-thread
+    /// scratch (no per-call allocation of codes).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        match self {
+            Self::Full(w) => gemm_f32_nt(x, w),
+            Self::Packed(p) => with_quantized(x, |xq| gemm_i8_packed(xq, p)),
+        }
     }
 
-    pub fn dgrad(g: &Matrix, w: &Matrix) -> Matrix {
-        let gq = rowwise_quant(g);
-        let wt = w.transpose();
-        let wtq = rowwise_quant(&wt);
-        gemm_i8_nt_rowcol(&gq, &wtq)
+    /// Forward from shared, already-quantized activations.
+    pub fn forward_quant(&self, xq: &QuantizedRow) -> Matrix {
+        match self {
+            Self::Full(_) => panic!("f32 weight has no quantized forward"),
+            Self::Packed(p) => gemm_i8_packed(xq, p),
+        }
     }
 
-    pub fn wgrad(g: &Matrix, x: &Matrix) -> Matrix {
-        let gt = g.transpose();
-        let gq = rowwise_quant(&gt);
-        let xt = x.transpose();
-        let xq = rowwise_quant(&xt);
-        gemm_i8_nt_rowcol(&gq, &xq)
+    /// Forward with the fused map+quantize epilogue (see
+    /// [`MatmulPlan::forward_fused_quant`]).
+    pub fn forward_fused_quant(
+        &self,
+        xq: &QuantizedRow,
+        map: Option<fn(f32) -> f32>,
+    ) -> QuantizedRow {
+        match self {
+            Self::Full(_) => panic!("f32 weight has no fused-quant forward"),
+            Self::Packed(p) => gemm_i8_packed_fused(xq, p, map),
+        }
+    }
+
+    /// Resident weight bytes (codes + state, or f32 data).
+    pub fn bytes(&self) -> usize {
+        match self {
+            Self::Full(w) => w.data.len() * 4,
+            Self::Packed(p) => p.bytes(),
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, Self::Packed(_))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{rowwise_quant, tensorwise_quant};
     use crate::tensor::Rng;
 
     fn rel_err(a: &Matrix, b: &Matrix) -> f32 {
@@ -116,8 +281,8 @@ mod tests {
         let mut rng = Rng::seed(11);
         let x = Matrix::randn(64, 96, 1.0, &mut rng);
         let w = Matrix::randn(48, 96, 0.1, &mut rng);
-        let yq = SwitchBackOps::forward(&x, &w);
-        let y = StandardLinearOps::forward(&x, &w);
+        let yq = MatmulPlan::switchback(false).forward(&x, &w);
+        let y = MatmulPlan::standard().forward(&x, &w);
         let e = rel_err(&yq, &y);
         assert!(e < 0.03, "quantization rel err too big: {e}");
     }
@@ -127,8 +292,8 @@ mod tests {
         let mut rng = Rng::seed(12);
         let g = Matrix::randn(64, 48, 1.0, &mut rng);
         let w = Matrix::randn(48, 96, 0.1, &mut rng);
-        let dq = SwitchBackOps::dgrad(&g, &w);
-        let d = StandardLinearOps::dgrad(&g, &w);
+        let dq = MatmulPlan::switchback(false).dgrad(&g, &w);
+        let d = MatmulPlan::standard().dgrad(&g, &w);
         assert!(rel_err(&dq, &d) < 0.03);
     }
 
@@ -140,11 +305,49 @@ mod tests {
         let b = 2048; // large inner dim
         let g = Matrix::randn(b, 32, 1.0, &mut rng);
         let x = Matrix::randn(b, 32, 1.0, &mut rng);
-        let exact = StandardLinearOps::wgrad(&g, &x);
-        let sb = SwitchBackOps::wgrad(&g, &x); // f32: exact
-        let llm = LlmInt8Ops::wgrad(&g, &x); // int8: noisy
+        let exact = MatmulPlan::standard().wgrad(&g, &x);
+        let sb = MatmulPlan::switchback(false).wgrad(&g, &x); // f32: exact
+        let llm = MatmulPlan::llm_int8().wgrad(&g, &x); // int8: noisy
         assert_eq!(rel_err(&sb, &exact), 0.0);
         let e = rel_err(&llm, &exact);
         assert!(e > 0.01, "int8 wgrad should be visibly noisy, got {e}");
+    }
+
+    /// The plan's packed forward reproduces the reference flat kernel
+    /// bit-for-bit — the redesign changes the API, not one ulp of output.
+    #[test]
+    fn plan_forward_bit_identical_to_reference_kernels() {
+        let mut rng = Rng::seed(14);
+        let x = Matrix::randn(33, 70, 1.0, &mut rng);
+        let w = Matrix::randn(27, 70, 0.1, &mut rng);
+        let xq = rowwise_quant(&x);
+        // switchback: reference = flat rowtensor kernel
+        let want = gemm_i8_nt_rowtensor(&xq, &tensorwise_quant(&w));
+        let got = MatmulPlan::switchback(false).forward(&x, &w);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+        // llm.int8: reference = flat rowcol kernel
+        let want = gemm_i8_nt_rowcol(&xq, &rowwise_quant(&w));
+        let got = MatmulPlan::llm_int8().forward(&x, &w);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
+        // prepared path is the same numerics
+        let prep = MatmulPlan::switchback(false).prepare(&w);
+        assert!(prep.is_quantized());
+        assert_eq!(prep.forward(&x).max_abs_diff(
+            &MatmulPlan::switchback(false).forward(&x, &w)), 0.0);
+    }
+
+    /// dgrad through the fused quantize+transpose equals dgrad against an
+    /// explicitly transposed, tensor-quantized weight (the §2.2.1 fusion
+    /// is a layout optimization, not a numeric change).
+    #[test]
+    fn dgrad_fused_transpose_matches_explicit_transpose() {
+        let mut rng = Rng::seed(15);
+        let g = Matrix::randn(21, 17, 1.0, &mut rng);
+        let w = Matrix::randn(17, 39, 0.1, &mut rng);
+        let got = MatmulPlan::switchback(false).dgrad(&g, &w);
+        let gq = rowwise_quant(&g);
+        let wt = tensorwise_quant(&w.transpose());
+        let want = gemm_i8_nt_rowtensor(&gq, &wt);
+        assert_eq!(got.max_abs_diff(&want), 0.0);
     }
 }

@@ -1,0 +1,826 @@
+//! Packed cache-blocked int8 GEMM — the production kernel behind
+//! [`crate::gemm::MatmulPlan`] and every int8 linear layer.
+//!
+//! The reference kernels in `i8mm.rs` walk `w.codes` row-major per output
+//! element; at serving shapes the weight panel falls out of L1 between
+//! activation rows and every dot re-streams it.  This module fixes that
+//! with the classic three-level blocking, sized for this CPU:
+//!
+//! * **Panel packing** (prepare time, once per weight): weight rows are
+//!   grouped into panels of [`MR`] rows, and within a panel the codes are
+//!   interleaved in [`KP`]-byte column chunks — `data[((p·kblocks + kb)·MR
+//!   + r)·KP + c]` holds row `p·MR+r`, column `kb·KP+c`.  The micro-kernel
+//!   therefore reads the panel *exactly sequentially*.  Both `k` and `m`
+//!   are zero-padded to the tile grid; zero codes contribute nothing to an
+//!   integer accumulation, so padding never changes a result.
+//! * **Cache blocking** (run time): activations are processed [`RB`] rows
+//!   at a time with the panel loop outside the row loop, so one panel
+//!   (`MR·k` bytes, L1-resident) is reused across all `RB` rows before the
+//!   next panel streams in — weight traffic from L2/memory drops by `RB`×.
+//!   Activation codes are sign-extended to i16 once per row block
+//!   (amortized over `m/MR` panel passes), which feeds `pmaddwd` directly.
+//! * **Micro-kernel** (`std::arch` SIMD): `_mm_madd_epi16` (SSE2, baseline
+//!   for every x86_64) or `_mm256_madd_epi16` (AVX2, runtime-detected)
+//!   accumulate i8×i8 products into i32 lanes.  The scalar loop — same
+//!   shape as the reference `dot_i8` — is the portable fallback and the
+//!   oracle the SIMD paths are tested against.  Integer adds are
+//!   associative, so every variant produces **bit-identical** i32
+//!   accumulators, and the shared f32 epilogue keeps the packed results
+//!   bit-identical to the reference GEMMs (the `nn` train/infer parity
+//!   tests depend on this).
+//!
+//! The epilogue can optionally apply an elementwise map (gelu) and
+//! re-quantize each finished row ([`gemm_i8_packed_fused`]), handing the
+//! *next* layer its row-quantized input directly — inter-layer activations
+//! never round-trip f32 through memory (the Scalify-style scale
+//! propagation the ROADMAP calls for).
+
+use crate::quant::{
+    quantize_one, quantize_row_into, safe_absmax, QuantScheme, QuantizedRow,
+    QuantizedTensor, INT8_MAX,
+};
+use crate::tensor::{Matrix, MatrixI8};
+use crate::util::threads::num_threads;
+
+/// Panel height: weight rows packed together and produced per micro-kernel
+/// call (8 i32 accumulators stay in registers on SSE2 and AVX2).
+pub const MR: usize = 8;
+
+/// Packed k-step in codes: one 128-bit SIMD register of i8.
+pub const KP: usize = 16;
+
+/// Activation rows per cache block: one packed panel stays L1-hot across
+/// this many rows before the next panel streams in.
+const RB: usize = 8;
+
+/// Dequantization state carried by a packed weight.
+#[derive(Debug, Clone)]
+pub enum PackedScale {
+    /// tensor-wise: one absmax for the whole weight (SwitchBack).
+    Tensor(f32),
+    /// row-wise-per-output: absmax per logical weight row (LLM.int8()).
+    Row(Vec<f32>),
+}
+
+/// A weight quantized to int8 and packed into the blocked kernel's
+/// tile-major panel layout (see the module docs), built once at
+/// prepare/load time.
+#[derive(Debug, Clone)]
+pub struct PackedInt8 {
+    /// logical weight rows (= output features)
+    pub m: usize,
+    /// logical inner dim (= input features)
+    pub k: usize,
+    /// `ceil(k / KP)` column chunks per panel row
+    kblocks: usize,
+    /// `ceil(m / MR)` panels
+    panels: usize,
+    /// `panels · kblocks · MR · KP` codes, tile-major, zero-padded
+    data: Vec<i8>,
+    pub scale: PackedScale,
+}
+
+impl PackedInt8 {
+    /// Quantize `w` under `scheme` and pack it in one pass (no
+    /// intermediate code matrix is materialized).
+    pub fn quantize(scheme: QuantScheme, w: &Matrix) -> Self {
+        match scheme {
+            QuantScheme::TensorWise => Self::quantize_tensorwise(w),
+            QuantScheme::TensorWiseTranspose => {
+                Self::quantize_tensorwise_transpose(w)
+            }
+            QuantScheme::RowWise => Self::quantize_rowwise(w),
+            QuantScheme::ColWise => {
+                panic!("packed GEMM has no col-wise weight form")
+            }
+        }
+    }
+
+    fn grid(m: usize, k: usize) -> (usize, usize, Vec<i8>) {
+        let kblocks = k.div_ceil(KP).max(1);
+        let panels = m.div_ceil(MR).max(1);
+        (kblocks, panels, vec![0i8; panels * kblocks * MR * KP])
+    }
+
+    /// Fused tensor-wise quantize + pack (paper eq. 2 → panel layout).
+    pub fn quantize_tensorwise(w: &Matrix) -> Self {
+        let state =
+            safe_absmax(w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+        let scale = INT8_MAX / state;
+        let (m, k) = (w.rows, w.cols);
+        let (kblocks, panels, mut data) = Self::grid(m, k);
+        for p in 0..panels {
+            for r in 0..MR.min(m - (p * MR).min(m)) {
+                let src = w.row(p * MR + r);
+                for kb in 0..kblocks {
+                    let c0 = kb * KP;
+                    let n = KP.min(k - c0.min(k));
+                    let dst0 = ((p * kblocks + kb) * MR + r) * KP;
+                    for i in 0..n {
+                        data[dst0 + i] = quantize_one(src[c0 + i], scale);
+                    }
+                }
+            }
+        }
+        Self { m, k, kblocks, panels, data, scale: PackedScale::Tensor(state) }
+    }
+
+    /// Tensor-wise quantize + **transpose** + pack: the packed matrix is
+    /// `wᵀ`.  Routes through the public fused quantize+transpose
+    /// (`tensorwise_quant_transpose`, paper §2.2.1) — `wᵀ` codes are
+    /// produced in one blocked pass over `w` without materializing `wᵀ`
+    /// in f32 — then the exact panel re-layout.  This is the int8 dgrad's
+    /// weight-prepare step ([`super::MatmulPlan::dgrad`]).
+    pub fn quantize_tensorwise_transpose(w: &Matrix) -> Self {
+        let q = crate::quant::tensorwise_quant_transpose(w);
+        Self::pack_tensorwise(&q)
+    }
+
+    /// Fused row-wise quantize + pack (per-output-row state, eq. 1).
+    pub fn quantize_rowwise(w: &Matrix) -> Self {
+        let (m, k) = (w.rows, w.cols);
+        let mut state = vec![0.0f32; m];
+        let (kblocks, panels, mut data) = Self::grid(m, k);
+        for p in 0..panels {
+            for r in 0..MR.min(m - (p * MR).min(m)) {
+                let row = p * MR + r;
+                let src = w.row(row);
+                let mx = safe_absmax(
+                    src.iter().fold(0.0f32, |m, &v| m.max(v.abs())),
+                );
+                state[row] = mx;
+                let scale = INT8_MAX / mx;
+                for kb in 0..kblocks {
+                    let c0 = kb * KP;
+                    let n = KP.min(k - c0);
+                    let dst0 = ((p * kblocks + kb) * MR + r) * KP;
+                    for i in 0..n {
+                        data[dst0 + i] = quantize_one(src[c0 + i], scale);
+                    }
+                }
+            }
+        }
+        Self { m, k, kblocks, panels, data, scale: PackedScale::Row(state) }
+    }
+
+    /// Pack already-quantized tensor-wise codes (exact re-layout).
+    pub fn pack_tensorwise(q: &QuantizedTensor) -> Self {
+        let (kblocks, panels, data) = pack_codes(&q.codes);
+        Self {
+            m: q.codes.rows,
+            k: q.codes.cols,
+            kblocks,
+            panels,
+            data,
+            scale: PackedScale::Tensor(q.state),
+        }
+    }
+
+    /// Pack already-quantized row-wise codes (exact re-layout).
+    pub fn pack_rowwise(q: &QuantizedRow) -> Self {
+        let (kblocks, panels, data) = pack_codes(&q.codes);
+        Self {
+            m: q.codes.rows,
+            k: q.codes.cols,
+            kblocks,
+            panels,
+            data,
+            scale: PackedScale::Row(q.state.clone()),
+        }
+    }
+
+    /// Resident bytes (packed codes + state) — the serve-memory metric.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+            + match &self.scale {
+                PackedScale::Tensor(_) => 4,
+                PackedScale::Row(s) => s.len() * 4,
+            }
+    }
+}
+
+fn pack_codes(codes: &MatrixI8) -> (usize, usize, Vec<i8>) {
+    let (m, k) = (codes.rows, codes.cols);
+    let (kblocks, panels, mut data) = PackedInt8::grid(m, k);
+    for p in 0..panels {
+        for r in 0..MR.min(m - (p * MR).min(m)) {
+            let src = codes.row(p * MR + r);
+            for kb in 0..kblocks {
+                let c0 = kb * KP;
+                let n = KP.min(k - c0);
+                let dst0 = ((p * kblocks + kb) * MR + r) * KP;
+                data[dst0..dst0 + n].copy_from_slice(&src[c0..c0 + n]);
+            }
+        }
+    }
+    (kblocks, panels, data)
+}
+
+// ----- micro-kernels ---------------------------------------------------
+
+/// Which inner-kernel instruction set the packed GEMM runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// portable fallback — also the oracle the SIMD paths test against
+    Scalar,
+    /// `_mm_madd_epi16` (baseline on every x86_64)
+    Sse2,
+    /// `_mm256_madd_epi16` (runtime-detected)
+    Avx2,
+}
+
+impl KernelIsa {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Sse2 => "sse2",
+            Self::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Best micro-kernel available on this machine.
+pub fn kernel_isa() -> KernelIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            KernelIsa::Avx2
+        } else {
+            KernelIsa::Sse2
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        KernelIsa::Scalar
+    }
+}
+
+/// Portable panel micro-kernel: `acc[r] += dot(x16, panel row r)`.
+/// `x16` is the sign-extended, zero-padded activation row
+/// (`kblocks·KP` i16); `panel` is one packed panel (`kblocks·MR·KP` i8).
+fn panel_dots_scalar(x16: &[i16], panel: &[i8], acc: &mut [i32; MR]) {
+    for (kb, xc) in x16.chunks_exact(KP).enumerate() {
+        let base = kb * MR * KP;
+        for r in 0..MR {
+            let wc = &panel[base + r * KP..base + (r + 1) * KP];
+            let mut s = 0i32;
+            for l in 0..KP {
+                s += xc[l] as i32 * wc[l] as i32;
+            }
+            acc[r] += s;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{KP, MR};
+    use std::arch::x86_64::*;
+
+    /// Sign-extend the low 8 i8 lanes to i16 (unpack-with-self then
+    /// arithmetic shift — the SSE2 idiom; no SSE4.1 `pmovsx` needed).
+    #[inline(always)]
+    unsafe fn sext_lo(v: __m128i) -> __m128i {
+        _mm_srai_epi16(_mm_unpacklo_epi8(v, v), 8)
+    }
+
+    #[inline(always)]
+    unsafe fn sext_hi(v: __m128i) -> __m128i {
+        _mm_srai_epi16(_mm_unpackhi_epi8(v, v), 8)
+    }
+
+    #[inline(always)]
+    unsafe fn hsum(v: __m128i) -> i32 {
+        let s = _mm_add_epi32(v, _mm_shuffle_epi32(v, 0b0100_1110));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b1011_0001));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// SSE2 micro-kernel: 16 codes × MR rows per iteration via `pmaddwd`
+    /// (i16 products pair-summed into i32 lanes — exact, no saturation:
+    /// |codes| ≤ 127 so a pair sum is ≤ 2·127² ≪ 2³¹).
+    pub unsafe fn panel_dots_sse2(x16: &[i16], panel: &[i8], acc: &mut [i32; MR]) {
+        let kblocks = x16.len() / KP;
+        debug_assert_eq!(panel.len(), kblocks * MR * KP);
+        let xp = x16.as_ptr();
+        let pp = panel.as_ptr();
+        let mut vacc = [_mm_setzero_si128(); MR];
+        for kb in 0..kblocks {
+            let xlo = _mm_loadu_si128(xp.add(kb * KP) as *const __m128i);
+            let xhi = _mm_loadu_si128(xp.add(kb * KP + 8) as *const __m128i);
+            let base = kb * MR * KP;
+            for r in 0..MR {
+                let wv = _mm_loadu_si128(pp.add(base + r * KP) as *const __m128i);
+                let prod = _mm_add_epi32(
+                    _mm_madd_epi16(xlo, sext_lo(wv)),
+                    _mm_madd_epi16(xhi, sext_hi(wv)),
+                );
+                vacc[r] = _mm_add_epi32(vacc[r], prod);
+            }
+        }
+        for r in 0..MR {
+            acc[r] += hsum(vacc[r]);
+        }
+    }
+
+    /// AVX2 micro-kernel: same tile, one `vpmaddwd` per 16 codes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn panel_dots_avx2(x16: &[i16], panel: &[i8], acc: &mut [i32; MR]) {
+        let kblocks = x16.len() / KP;
+        debug_assert_eq!(panel.len(), kblocks * MR * KP);
+        let xp = x16.as_ptr();
+        let pp = panel.as_ptr();
+        let mut vacc = [_mm256_setzero_si256(); MR];
+        for kb in 0..kblocks {
+            let xv = _mm256_loadu_si256(xp.add(kb * KP) as *const __m256i);
+            let base = kb * MR * KP;
+            for r in 0..MR {
+                let wb = _mm_loadu_si128(pp.add(base + r * KP) as *const __m128i);
+                let wv = _mm256_cvtepi8_epi16(wb);
+                vacc[r] = _mm256_add_epi32(vacc[r], _mm256_madd_epi16(xv, wv));
+            }
+        }
+        for r in 0..MR {
+            let lo = _mm256_castsi256_si128(vacc[r]);
+            let hi = _mm256_extracti128_si256(vacc[r], 1);
+            acc[r] += hsum(_mm_add_epi32(lo, hi));
+        }
+    }
+}
+
+#[inline]
+fn panel_dots(isa: KernelIsa, x16: &[i16], panel: &[i8], acc: &mut [i32; MR]) {
+    match isa {
+        KernelIsa::Scalar => panel_dots_scalar(x16, panel, acc),
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Sse2 => unsafe { x86::panel_dots_sse2(x16, panel, acc) },
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => unsafe { x86::panel_dots_avx2(x16, panel, acc) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => panel_dots_scalar(x16, panel, acc),
+    }
+}
+
+// ----- blocked driver --------------------------------------------------
+
+/// Run the blocked kernel over activation rows `row0..row0+nrows`,
+/// handing each finished row of raw i32 accumulators to `emit`.
+fn dots_rows(
+    isa: KernelIsa,
+    x: &QuantizedRow,
+    w: &PackedInt8,
+    row0: usize,
+    nrows: usize,
+    mut emit: impl FnMut(usize, &[i32]),
+) {
+    let k = x.codes.cols;
+    debug_assert_eq!(k, w.k, "inner dims disagree");
+    let kpad = w.kblocks * KP;
+    let panel_len = w.kblocks * MR * KP;
+    let mut x16 = vec![0i16; RB * kpad];
+    let mut acc = vec![0i32; RB * w.m];
+    for c0 in (0..nrows).step_by(RB) {
+        let rb = RB.min(nrows - c0);
+        // sign-extend this block's activation codes once, zero-padded to
+        // the packed k grid (zero codes add nothing — exactness preserved)
+        for ri in 0..rb {
+            let src = x.codes.row(row0 + c0 + ri);
+            let dst = &mut x16[ri * kpad..(ri + 1) * kpad];
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d = v as i16;
+            }
+            for d in dst[k..].iter_mut() {
+                *d = 0;
+            }
+        }
+        // panel loop outside the row loop: one panel stays L1-hot across
+        // all rb rows (the cache-blocking that beats the reference kernel)
+        for p in 0..w.panels {
+            let panel = &w.data[p * panel_len..(p + 1) * panel_len];
+            let col0 = p * MR;
+            let mr = MR.min(w.m - col0);
+            for ri in 0..rb {
+                let mut a = [0i32; MR];
+                panel_dots(isa, &x16[ri * kpad..(ri + 1) * kpad], panel, &mut a);
+                acc[ri * w.m + col0..ri * w.m + col0 + mr]
+                    .copy_from_slice(&a[..mr]);
+            }
+        }
+        for ri in 0..rb {
+            let gi = row0 + c0 + ri;
+            emit(gi, &acc[ri * w.m..(ri + 1) * w.m]);
+        }
+    }
+}
+
+/// Precomputed per-output dequant factors for a row-wise packed weight
+/// (`state[j] / 127`, hoisted once per GEMM call — same value, and
+/// therefore the same f32 result, as the reference kernel's inline
+/// division).
+fn row_scales(w: &PackedInt8) -> Option<Vec<f32>> {
+    match &w.scale {
+        PackedScale::Tensor(_) => None,
+        PackedScale::Row(state) => {
+            Some(state.iter().map(|s| s / INT8_MAX).collect())
+        }
+    }
+}
+
+/// Dequantize one finished accumulator row into `frow`, replicating the
+/// reference kernels' exact f32 expression order (bit-identity contract).
+#[inline]
+fn epilogue_row(
+    w: &PackedInt8,
+    swj: Option<&[f32]>,
+    x_state_i: f32,
+    dots: &[i32],
+    frow: &mut [f32],
+) {
+    match (&w.scale, swj) {
+        (PackedScale::Tensor(state), _) => {
+            let sw = state / INT8_MAX;
+            let scale = (x_state_i / INT8_MAX) * sw;
+            for (o, &d) in frow.iter_mut().zip(dots) {
+                *o = d as f32 * scale;
+            }
+        }
+        (PackedScale::Row(_), Some(ws)) => {
+            let sx = x_state_i / INT8_MAX;
+            for ((o, &d), &wj) in frow.iter_mut().zip(dots).zip(ws) {
+                *o = d as f32 * sx * wj;
+            }
+        }
+        (PackedScale::Row(_), None) => unreachable!("row scales precomputed"),
+    }
+}
+
+/// Packed blocked int8 GEMM: `x [b, k]` row-quantized × packed `w [m, k]`
+/// → f32 `[b, m]`.  Bit-identical to [`super::gemm_i8_nt_rowtensor`]
+/// (tensor-wise scale) / [`super::gemm_i8_nt_rowcol`] (row-wise scale).
+pub fn gemm_i8_packed(x: &QuantizedRow, w: &PackedInt8) -> Matrix {
+    gemm_i8_packed_with(kernel_isa(), x, w)
+}
+
+fn gemm_i8_packed_with(isa: KernelIsa, x: &QuantizedRow, w: &PackedInt8) -> Matrix {
+    assert_eq!(x.codes.cols, w.k, "inner dims disagree");
+    let (b, m) = (x.codes.rows, w.m);
+    let mut out = Matrix::zeros(b, m);
+    let ws = row_scales(w);
+    let swj = ws.as_deref();
+    let workers = num_threads().min(b.max(1));
+    if workers <= 1 || b <= 1 {
+        let data = &mut out.data[..];
+        let mut frow = vec![0.0f32; m];
+        dots_rows(isa, x, w, 0, b, |gi, dots| {
+            epilogue_row(w, swj, x.state[gi], dots, &mut frow);
+            data[gi * m..(gi + 1) * m].copy_from_slice(&frow);
+        });
+        return out;
+    }
+    let rows_per = b.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest = &mut out.data[..];
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take = (rows_per * m).min(rest.len());
+            let (chunk, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let my0 = row0;
+            let n = take / m.max(1);
+            row0 += n;
+            s.spawn(move || {
+                let mut frow = vec![0.0f32; m];
+                dots_rows(isa, x, w, my0, n, |gi, dots| {
+                    epilogue_row(w, swj, x.state[gi], dots, &mut frow);
+                    let off = (gi - my0) * m;
+                    chunk[off..off + m].copy_from_slice(&frow);
+                });
+            });
+        }
+    });
+    out
+}
+
+/// Packed GEMM with the **fused quantize epilogue**: dequantize each
+/// finished row, apply `map` (e.g. gelu) if given, then row-wise quantize
+/// it in place — returning the *next* layer's input without ever
+/// materializing the full f32 activation matrix.  The output is
+/// bit-identical to `rowwise_quant(map(gemm_i8_packed(x, w)))`.
+pub fn gemm_i8_packed_fused(
+    x: &QuantizedRow,
+    w: &PackedInt8,
+    map: Option<fn(f32) -> f32>,
+) -> QuantizedRow {
+    gemm_i8_packed_fused_with(kernel_isa(), x, w, map)
+}
+
+fn gemm_i8_packed_fused_with(
+    isa: KernelIsa,
+    x: &QuantizedRow,
+    w: &PackedInt8,
+    map: Option<fn(f32) -> f32>,
+) -> QuantizedRow {
+    assert_eq!(x.codes.cols, w.k, "inner dims disagree");
+    let (b, m) = (x.codes.rows, w.m);
+    let mut codes = MatrixI8::zeros(b, m);
+    let mut state = vec![0.0f32; b];
+    let ws = row_scales(w);
+    let swj = ws.as_deref();
+    let workers = num_threads().min(b.max(1));
+    if workers <= 1 || b <= 1 {
+        let cdata = &mut codes.data[..];
+        let sdata = &mut state[..];
+        let mut frow = vec![0.0f32; m];
+        dots_rows(isa, x, w, 0, b, |gi, dots| {
+            epilogue_row(w, swj, x.state[gi], dots, &mut frow);
+            if let Some(f) = map {
+                for o in frow.iter_mut() {
+                    *o = f(*o);
+                }
+            }
+            sdata[gi] = quantize_row_into(&frow, &mut cdata[gi * m..(gi + 1) * m]);
+        });
+        return QuantizedRow { codes, state };
+    }
+    let rows_per = b.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut crest = &mut codes.data[..];
+        let mut srest = &mut state[..];
+        let mut row0 = 0usize;
+        while !srest.is_empty() {
+            let n = rows_per.min(srest.len());
+            let (cchunk, ctail) = crest.split_at_mut(n * m);
+            let (schunk, stail) = srest.split_at_mut(n);
+            crest = ctail;
+            srest = stail;
+            let my0 = row0;
+            row0 += n;
+            s.spawn(move || {
+                let mut frow = vec![0.0f32; m];
+                dots_rows(isa, x, w, my0, n, |gi, dots| {
+                    epilogue_row(w, swj, x.state[gi], dots, &mut frow);
+                    if let Some(f) = map {
+                        for o in frow.iter_mut() {
+                            *o = f(*o);
+                        }
+                    }
+                    let r = gi - my0;
+                    schunk[r] =
+                        quantize_row_into(&frow, &mut cchunk[r * m..(r + 1) * m]);
+                });
+            });
+        }
+    });
+    QuantizedRow { codes, state }
+}
+
+/// Raw i32 accumulators (row-major `[b, m]`) of the packed kernel — what
+/// the equivalence tests compare bit-for-bit against the reference dot
+/// loop (single-threaded; a test/debug entry point, not a hot path).
+pub fn gemm_i8_packed_i32(x: &QuantizedRow, w: &PackedInt8) -> Vec<i32> {
+    gemm_i8_packed_i32_with(kernel_isa(), x, w)
+}
+
+fn gemm_i8_packed_i32_with(
+    isa: KernelIsa,
+    x: &QuantizedRow,
+    w: &PackedInt8,
+) -> Vec<i32> {
+    assert_eq!(x.codes.cols, w.k, "inner dims disagree");
+    let (b, m) = (x.codes.rows, w.m);
+    let mut out = vec![0i32; b * m];
+    dots_rows(isa, x, w, 0, b, |gi, dots| {
+        out[gi * m..(gi + 1) * m].copy_from_slice(dots);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::i8mm::dot_i8;
+    use super::super::{gemm_i8_nt_rowcol, gemm_i8_nt_rowtensor};
+    use super::*;
+    use crate::nn::gelu;
+    use crate::quant::{rowwise_quant, tensorwise_quant};
+    use crate::tensor::Rng;
+
+    fn isas() -> Vec<KernelIsa> {
+        let mut v = vec![KernelIsa::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        {
+            v.push(KernelIsa::Sse2);
+            if is_x86_feature_detected!("avx2") {
+                v.push(KernelIsa::Avx2);
+            }
+        }
+        v
+    }
+
+    /// Shape matrix for the equivalence tests: non-multiples of MR/KP/RB
+    /// on every axis, degenerate b=1 / m=1, and tile-aligned controls.
+    fn shapes() -> Vec<(usize, usize, usize)> {
+        vec![
+            (1, 1, 1),
+            (1, 40, 24),   // b = 1
+            (24, 40, 1),   // m = 1
+            (3, 5, 7),     // everything tiny and odd
+            (17, 33, 29),  // nothing tile-aligned
+            (16, 32, 24),  // fully tile-aligned control
+            (65, 129, 63), // crosses RB / KP / MR boundaries by one
+            (9, 100, 37),
+        ]
+    }
+
+    #[test]
+    fn packing_is_lossless_relayout() {
+        let mut rng = Rng::seed(21);
+        for (mm, kk) in [(24, 40), (7, 13), (1, 1), (33, 17)] {
+            let w = Matrix::randn(mm, kk, 1.0, &mut rng);
+            let q = tensorwise_quant(&w);
+            let packed = PackedInt8::pack_tensorwise(&q);
+            let fused = PackedInt8::quantize_tensorwise(&w);
+            assert_eq!(packed.data, fused.data, "{mm}x{kk}: fused != pack(quant)");
+            // spot-decode: every logical code must be recoverable
+            for row in 0..mm {
+                let (p, r) = (row / MR, row % MR);
+                for col in 0..kk {
+                    let (kb, c) = (col / KP, col % KP);
+                    let idx = ((p * packed.kblocks + kb) * MR + r) * KP + c;
+                    assert_eq!(
+                        packed.data[idx],
+                        q.codes.row(row)[col],
+                        "{mm}x{kk} at ({row},{col})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_transpose_pack_matches_pack_of_transposed() {
+        let mut rng = Rng::seed(22);
+        for (mm, kk) in [(24, 40), (7, 13), (33, 17), (1, 9)] {
+            let w = Matrix::randn(mm, kk, 1.0, &mut rng);
+            let a = PackedInt8::quantize_tensorwise_transpose(&w);
+            let b = PackedInt8::quantize_tensorwise(&w.transpose());
+            assert_eq!(a.data, b.data, "{mm}x{kk}");
+            assert_eq!(a.m, kk);
+            assert_eq!(a.k, mm);
+            match (&a.scale, &b.scale) {
+                (PackedScale::Tensor(x), PackedScale::Tensor(y)) => {
+                    assert_eq!(x, y)
+                }
+                _ => panic!("wrong scale kind"),
+            }
+        }
+    }
+
+    /// The tentpole invariant: every ISA's blocked kernel produces the
+    /// exact i32 accumulators of the reference dot loop, on shapes that
+    /// are deliberately hostile to the tile grid.
+    #[test]
+    fn blocked_i32_bit_identical_to_reference_all_isas() {
+        let mut rng = Rng::seed(23);
+        for (b, k, m) in shapes() {
+            let x = Matrix::randn(b, k, 1.0, &mut rng);
+            let w = Matrix::randn(m, k, 0.5, &mut rng);
+            let xq = rowwise_quant(&x);
+            let wq = tensorwise_quant(&w);
+            let packed = PackedInt8::pack_tensorwise(&wq);
+            let mut reference = vec![0i32; b * m];
+            for i in 0..b {
+                for j in 0..m {
+                    reference[i * m + j] =
+                        dot_i8(xq.codes.row(i), wq.codes.row(j));
+                }
+            }
+            for isa in isas() {
+                let got = gemm_i8_packed_i32_with(isa, &xq, &packed);
+                assert_eq!(
+                    got, reference,
+                    "i32 accumulators differ: {b}x{k}x{m} on {isa:?}"
+                );
+            }
+        }
+    }
+
+    /// All-saturated ±127 codes at the largest magnitudes the kernel can
+    /// see — the worst case for any madd overflow mistake.
+    #[test]
+    fn saturated_codes_accumulate_exactly() {
+        let k = 129; // odd, crosses KP
+        let (b, m) = (5, 11);
+        let mut x = Matrix::zeros(b, k);
+        let mut w = Matrix::zeros(m, k);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = if i % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        for (i, v) in w.data.iter_mut().enumerate() {
+            *v = if i % 3 == 0 { -1.0 } else { 1.0 };
+        }
+        let xq = rowwise_quant(&x);
+        let wq = tensorwise_quant(&w);
+        assert!(xq.codes.data.iter().all(|&c| c == 127 || c == -127));
+        assert!(wq.codes.data.iter().all(|&c| c == 127 || c == -127));
+        let packed = PackedInt8::pack_tensorwise(&wq);
+        let mut reference = vec![0i32; b * m];
+        for i in 0..b {
+            for j in 0..m {
+                reference[i * m + j] = dot_i8(xq.codes.row(i), wq.codes.row(j));
+            }
+        }
+        for isa in isas() {
+            assert_eq!(
+                gemm_i8_packed_i32_with(isa, &xq, &packed),
+                reference,
+                "{isa:?}"
+            );
+        }
+    }
+
+    /// f32 epilogue identity vs the reference GEMMs, both scale kinds.
+    #[test]
+    fn packed_f32_output_bit_identical_to_reference() {
+        let mut rng = Rng::seed(24);
+        for (b, k, m) in shapes() {
+            let x = Matrix::randn(b, k, 1.0, &mut rng);
+            let w = Matrix::randn(m, k, 0.5, &mut rng);
+            let xq = rowwise_quant(&x);
+            // tensor-wise scale
+            let wt = tensorwise_quant(&w);
+            let want = gemm_i8_nt_rowtensor(&xq, &wt);
+            let packed = PackedInt8::pack_tensorwise(&wt);
+            for isa in isas() {
+                let got = gemm_i8_packed_with(isa, &xq, &packed);
+                assert_eq!(
+                    got.max_abs_diff(&want),
+                    0.0,
+                    "rowtensor {b}x{k}x{m} on {isa:?}"
+                );
+            }
+            // row-wise scale
+            let wr = rowwise_quant(&w);
+            let want = gemm_i8_nt_rowcol(&xq, &wr);
+            let packed = PackedInt8::pack_rowwise(&wr);
+            for isa in isas() {
+                let got = gemm_i8_packed_with(isa, &xq, &packed);
+                assert_eq!(
+                    got.max_abs_diff(&want),
+                    0.0,
+                    "rowcol {b}x{k}x{m} on {isa:?}"
+                );
+            }
+        }
+    }
+
+    /// Fused epilogue ≡ unfused GEMM → map → rowwise_quant, bit-for-bit.
+    #[test]
+    fn fused_quant_epilogue_matches_unfused_pipeline() {
+        let mut rng = Rng::seed(25);
+        for (b, k, m) in shapes() {
+            let x = Matrix::randn(b, k, 1.0, &mut rng);
+            let w = Matrix::randn(m, k, 0.5, &mut rng);
+            let xq = rowwise_quant(&x);
+            let packed = PackedInt8::quantize_tensorwise(&w);
+            for map in [None, Some(gelu as fn(f32) -> f32)] {
+                let mut y = gemm_i8_packed(&xq, &packed);
+                if let Some(f) = map {
+                    for v in y.data.iter_mut() {
+                        *v = f(*v);
+                    }
+                }
+                let want = rowwise_quant(&y);
+                for isa in isas() {
+                    let got = gemm_i8_packed_fused_with(isa, &xq, &packed, map);
+                    assert_eq!(got.codes.data, want.codes.data,
+                        "fused codes differ: {b}x{k}x{m} {isa:?} map={}",
+                        map.is_some());
+                    assert_eq!(got.state, want.state,
+                        "fused state differs: {b}x{k}x{m} {isa:?}");
+                }
+            }
+        }
+    }
+
+    /// Threaded and single-threaded paths agree (row split is exact).
+    #[test]
+    fn threaded_split_matches_serial() {
+        let _lock = crate::util::threads::THREADS_ENV_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut rng = Rng::seed(26);
+        let x = Matrix::randn(37, 50, 1.0, &mut rng);
+        let w = Matrix::randn(23, 50, 0.5, &mut rng);
+        let xq = rowwise_quant(&x);
+        let packed = PackedInt8::quantize_tensorwise(&w);
+        let parallel = gemm_i8_packed(&xq, &packed);
+        let fused_par = gemm_i8_packed_fused(&xq, &packed, None);
+        std::env::set_var("SWITCHBACK_THREADS", "1");
+        let serial = gemm_i8_packed(&xq, &packed);
+        let fused_ser = gemm_i8_packed_fused(&xq, &packed, None);
+        std::env::remove_var("SWITCHBACK_THREADS");
+        assert_eq!(parallel.max_abs_diff(&serial), 0.0);
+        assert_eq!(fused_par.codes.data, fused_ser.codes.data);
+        assert_eq!(fused_par.state, fused_ser.state);
+    }
+}

@@ -10,6 +10,7 @@
 use super::linear::{Linear, LinearCache, LinearKind, PreparedLinear};
 use super::{gelu, gelu_grad, softmax_backward_rows, softmax_rows};
 use crate::gemm::{gemm_f32_nn, gemm_f32_nt};
+use crate::quant::{rowwise_quant, QuantizedRow};
 use crate::tensor::{Matrix, Rng};
 
 /// LayerNorm over the last dim with affine params.
@@ -313,16 +314,7 @@ impl TransformerBlock {
     /// output, but no [`BlockCache`] / [`LinearCache`] / softmax probs are
     /// retained — the serving path's memory stays O(batch·dim).
     pub fn forward_infer(&self, x: &Matrix) -> Matrix {
-        infer_body(self.dim, self.heads, self.seq, &self.ln1, &self.ln2, x, |p, h| {
-            match p {
-                Proj::Q => self.wq.forward_infer(h),
-                Proj::K => self.wk.forward_infer(h),
-                Proj::V => self.wv.forward_infer(h),
-                Proj::O => self.wo.forward_infer(h),
-                Proj::Up => self.w1.forward_infer(h),
-                Proj::Down => self.w2.forward_infer(h),
-            }
-        })
+        infer_body(self.dim, self.heads, self.seq, &self.ln1, &self.ln2, x, &LiveProj(self))
     }
 
     /// The six projection layers in canonical (q, k, v, o, up, down)
@@ -371,28 +363,133 @@ enum Proj {
     Down,
 }
 
+/// The projection surface [`infer_body`] drives — implemented by both the
+/// live ([`TransformerBlock`]) and pre-packed ([`PreparedBlock`]) forms.
+///
+/// For int8 kinds (`quantized()`), `infer_body` row-quantizes each block
+/// input **once** and feeds the shared codes to Q/K/V via `proj_quant`,
+/// and runs the MLP through `up_fused_gelu`: the up-projection's GEMM
+/// epilogue applies gelu and re-quantizes in one pass, so the hidden
+/// activation flows to the down-projection as int8 codes without an f32
+/// round-trip through memory.
+trait InferProj {
+    /// Whether the projections consume row-quantized activations.
+    fn quantized(&self) -> bool;
+    /// f32-in, f32-out projection (any kind).
+    fn proj(&self, p: Proj, x: &Matrix) -> Matrix;
+    /// Projection from shared, already-quantized activations (int8 kinds).
+    fn proj_quant(&self, p: Proj, xq: &QuantizedRow) -> Matrix;
+    /// Up-projection with the fused gelu+quantize epilogue (int8 kinds).
+    fn up_fused_gelu(&self, xq: &QuantizedRow) -> QuantizedRow;
+}
+
+/// [`InferProj`] over live (unprepared) weights: quantize-per-call.
+struct LiveProj<'a>(&'a TransformerBlock);
+
+impl LiveProj<'_> {
+    fn layer(&self, p: &Proj) -> &Linear {
+        match p {
+            Proj::Q => &self.0.wq,
+            Proj::K => &self.0.wk,
+            Proj::V => &self.0.wv,
+            Proj::O => &self.0.wo,
+            Proj::Up => &self.0.w1,
+            Proj::Down => &self.0.w2,
+        }
+    }
+}
+
+impl InferProj for LiveProj<'_> {
+    fn quantized(&self) -> bool {
+        self.0.wq.kind.plan().quantizes_activations()
+    }
+
+    fn proj(&self, p: Proj, x: &Matrix) -> Matrix {
+        self.layer(&p).forward_infer(x)
+    }
+
+    fn proj_quant(&self, p: Proj, xq: &QuantizedRow) -> Matrix {
+        let l = self.layer(&p);
+        l.kind.plan().forward_quantized(xq, &l.w)
+    }
+
+    fn up_fused_gelu(&self, xq: &QuantizedRow) -> QuantizedRow {
+        let l = &self.0.w1;
+        l.kind.plan().forward_fused_quant(xq, &l.w, Some(gelu))
+    }
+}
+
+/// [`InferProj`] over pre-packed weights: per call only activations move.
+struct PreparedProj<'a>(&'a PreparedBlock);
+
+impl PreparedProj<'_> {
+    fn layer(&self, p: &Proj) -> &PreparedLinear {
+        match p {
+            Proj::Q => &self.0.wq,
+            Proj::K => &self.0.wk,
+            Proj::V => &self.0.wv,
+            Proj::O => &self.0.wo,
+            Proj::Up => &self.0.w1,
+            Proj::Down => &self.0.w2,
+        }
+    }
+}
+
+impl InferProj for PreparedProj<'_> {
+    fn quantized(&self) -> bool {
+        self.0.wq.quantizes_input()
+    }
+
+    fn proj(&self, p: Proj, x: &Matrix) -> Matrix {
+        self.layer(&p).forward(x)
+    }
+
+    fn proj_quant(&self, p: Proj, xq: &QuantizedRow) -> Matrix {
+        self.layer(&p).forward_quant(xq)
+    }
+
+    fn up_fused_gelu(&self, xq: &QuantizedRow) -> QuantizedRow {
+        self.0.w1.forward_fused_quant(xq, Some(gelu))
+    }
+}
+
 /// The forward-only block body shared by [`TransformerBlock::forward_infer`]
 /// and [`PreparedBlock::forward`]: pre-norm attention + MLP with residuals,
 /// allocating nothing beyond the live activations.
-fn infer_body<F>(
+///
+/// Bit-identical to the training forward for every kind: sharing one
+/// row-quantize across Q/K/V reuses codes the training path computes
+/// identically per projection, and the fused gelu+quant epilogue produces
+/// exactly the codes `rowwise_quant(gelu(up_out))` would.
+fn infer_body(
     dim: usize,
     heads: usize,
     seq: usize,
     ln1: &LayerNorm,
     ln2: &LayerNorm,
     x: &Matrix,
-    proj: F,
-) -> Matrix
-where
-    F: Fn(Proj, &Matrix) -> Matrix,
-{
+    proj: &impl InferProj,
+) -> Matrix {
     let (t, d, h) = (seq, dim, heads);
     let hd = d / h;
     let batch = x.rows / t;
+    let quantized = proj.quantized();
     let xn = ln1.apply(x);
-    let q = proj(Proj::Q, &xn);
-    let k = proj(Proj::K, &xn);
-    let v = proj(Proj::V, &xn);
+    let (q, k, v) = if quantized {
+        // one row-quantize of the normed input, shared by Q, K and V
+        let xnq = rowwise_quant(&xn);
+        (
+            proj.proj_quant(Proj::Q, &xnq),
+            proj.proj_quant(Proj::K, &xnq),
+            proj.proj_quant(Proj::V, &xnq),
+        )
+    } else {
+        (
+            proj.proj(Proj::Q, &xn),
+            proj.proj(Proj::K, &xn),
+            proj.proj(Proj::V, &xn),
+        )
+    };
     let scale = 1.0 / (hd as f32).sqrt();
     let mut concat = Matrix::zeros(x.rows, d);
     for b in 0..batch {
@@ -418,17 +515,25 @@ where
             }
         }
     }
-    let attn_out = proj(Proj::O, &concat);
+    let attn_out = proj.proj(Proj::O, &concat);
     let mut x_mid = x.clone();
     for (m, a) in x_mid.data.iter_mut().zip(&attn_out.data) {
         *m += a;
     }
     let xn2 = ln2.apply(&x_mid);
-    let mut h_act = proj(Proj::Up, &xn2);
-    for v in h_act.data.iter_mut() {
-        *v = gelu(*v);
-    }
-    let mlp_out = proj(Proj::Down, &h_act);
+    let mlp_out = if quantized {
+        // fused MLP: up-GEMM → gelu → re-quantize inside the epilogue;
+        // the hidden activation reaches the down-GEMM as int8 codes
+        let xn2q = rowwise_quant(&xn2);
+        let h_q = proj.up_fused_gelu(&xn2q);
+        proj.proj_quant(Proj::Down, &h_q)
+    } else {
+        let mut h_act = proj.proj(Proj::Up, &xn2);
+        for v in h_act.data.iter_mut() {
+            *v = gelu(*v);
+        }
+        proj.proj(Proj::Down, &h_act)
+    };
     let mut y = x_mid;
     for (o, m) in y.data.iter_mut().zip(&mlp_out.data) {
         *o += m;
@@ -456,16 +561,7 @@ pub struct PreparedBlock {
 impl PreparedBlock {
     /// `x [B*T, d]` → `[B*T, d]` (T = `self.seq`), forward only.
     pub fn forward(&self, x: &Matrix) -> Matrix {
-        infer_body(self.dim, self.heads, self.seq, &self.ln1, &self.ln2, x, |p, h| {
-            match p {
-                Proj::Q => self.wq.forward(h),
-                Proj::K => self.wk.forward(h),
-                Proj::V => self.wv.forward(h),
-                Proj::O => self.wo.forward(h),
-                Proj::Up => self.w1.forward(h),
-                Proj::Down => self.w2.forward(h),
-            }
-        })
+        infer_body(self.dim, self.heads, self.seq, &self.ln1, &self.ln2, x, &PreparedProj(self))
     }
 
     /// Resident weight bytes across all six projections.

@@ -2,15 +2,14 @@
 //! of `python/compile/layers.py`), including the memory-efficient
 //! **SwitchBackM** (Algorithm 3) whose backward dequantizes the saved int8
 //! activations instead of keeping f32 around.
+//!
+//! Every variant's numerics live in one [`MatmulPlan`] (weight form +
+//! which matmuls run int8 + what the cache holds); this file only maps
+//! `LinearKind` → plan and threads the cache through the backward.
 
-use crate::gemm::{
-    gemm_i8_nt_rowcol, gemm_i8_nt_rowtensor, LlmInt8Ops, StandardLinearOps,
-    SwitchBackOps,
-};
-use crate::quant::{
-    dequant_rowwise, rowwise_quant, tensorwise_quant, tensorwise_quant_transpose,
-    QuantizedRow, QuantizedTensor,
-};
+use crate::gemm::MatmulPlan;
+pub use crate::gemm::PreparedWeight;
+use crate::quant::{dequant_rowwise, rowwise_quant, QuantizedRow};
 use crate::tensor::{Matrix, Rng};
 
 /// Which precision scheme the layer uses (paper §2.2 + Appendix B).
@@ -45,6 +44,17 @@ impl LinearKind {
             Self::SwitchBack => "switchback",
             Self::SwitchBackM => "switchback_m",
             Self::LlmInt8 => "llmint8",
+        }
+    }
+
+    /// The kind's numerics as data — the single dispatch point every
+    /// forward/backward/infer/prepare path funnels through.
+    pub const fn plan(&self) -> MatmulPlan {
+        match self {
+            Self::Standard => MatmulPlan::standard(),
+            Self::SwitchBack => MatmulPlan::switchback(false),
+            Self::SwitchBackM => MatmulPlan::switchback(true),
+            Self::LlmInt8 => MatmulPlan::llm_int8(),
         }
     }
 }
@@ -89,57 +99,28 @@ impl Linear {
 
     /// Forward: `x [b, in] → [b, out]`, plus the backward cache.
     pub fn forward(&self, x: &Matrix) -> (Matrix, LinearCache) {
-        match self.kind {
-            LinearKind::Standard => {
-                (StandardLinearOps::forward(x, &self.w), LinearCache::Full(x.clone()))
-            }
-            LinearKind::SwitchBack => {
-                (SwitchBackOps::forward(x, &self.w), LinearCache::Full(x.clone()))
-            }
-            LinearKind::SwitchBackM => {
-                // quantize once, reuse codes for both the matmul and the cache
-                let xq = rowwise_quant(x);
-                let wq = crate::quant::tensorwise_quant(&self.w);
-                let y = gemm_i8_nt_rowtensor(&xq, &wq);
-                (y, LinearCache::Quantized(xq))
-            }
-            LinearKind::LlmInt8 => {
-                (LlmInt8Ops::forward(x, &self.w), LinearCache::Full(x.clone()))
-            }
+        let plan = self.kind.plan();
+        if plan.cache_codes {
+            // Algorithm 3: quantize once, reuse the codes for both the
+            // matmul and the (4×-smaller) backward cache.
+            let xq = rowwise_quant(x);
+            let y = plan.forward_quantized(&xq, &self.w);
+            (y, LinearCache::Quantized(xq))
+        } else {
+            (plan.forward(x, &self.w), LinearCache::Full(x.clone()))
         }
     }
 
     /// Backward: upstream `g [b, out]` → `(dx [b, in], dw [out, in])`.
     pub fn backward(&self, cache: &LinearCache, g: &Matrix) -> (Matrix, Matrix) {
-        match (self.kind, cache) {
-            (LinearKind::Standard, LinearCache::Full(x)) => (
-                StandardLinearOps::dgrad(g, &self.w),
-                StandardLinearOps::wgrad(g, x),
-            ),
-            (LinearKind::SwitchBack, LinearCache::Full(x)) => (
-                SwitchBackOps::dgrad(g, &self.w),
-                SwitchBackOps::wgrad(g, x),
-            ),
-            (LinearKind::SwitchBackM, LinearCache::Quantized(xq)) => {
-                // Algorithm 3: dequantize X from int8, then f32 wgrad.
-                let x = dequant_rowwise(xq);
-                let dw = StandardLinearOps::wgrad(g, &x);
-                let dx = SwitchBackOps::dgrad(g, &self.w);
-                (dx, dw)
-            }
-            (LinearKind::LlmInt8, LinearCache::Full(x)) => {
-                let gq = rowwise_quant(g);
-                let wtq_t = {
-                    // row-wise per-output over Wᵀ — build via transpose
-                    let wt = self.w.transpose();
-                    rowwise_quant(&wt)
-                };
-                let dx = gemm_i8_nt_rowcol(&gq, &wtq_t);
-                let dw = LlmInt8Ops::wgrad(g, x);
-                (dx, dw)
-            }
-            _ => unreachable!("cache/kind mismatch"),
-        }
+        let plan = self.kind.plan();
+        let dx = plan.dgrad(g, &self.w);
+        let dw = match cache {
+            LinearCache::Full(x) => plan.wgrad(g, x),
+            // Algorithm 3: dequantize X from int8, then (exact f32) wgrad.
+            LinearCache::Quantized(xq) => plan.wgrad(g, &dequant_rowwise(xq)),
+        };
+        (dx, dw)
     }
 
     /// Inference-mode forward: identical numerics to [`Linear::forward`]'s
@@ -147,51 +128,29 @@ impl Linear {
     /// backward pass).  SwitchBackM shares SwitchBack's forward — the
     /// variants only differ in what they *save*, which is nothing here.
     pub fn forward_infer(&self, x: &Matrix) -> Matrix {
-        match self.kind {
-            LinearKind::Standard => StandardLinearOps::forward(x, &self.w),
-            LinearKind::SwitchBack | LinearKind::SwitchBackM => {
-                SwitchBackOps::forward(x, &self.w)
-            }
-            LinearKind::LlmInt8 => LlmInt8Ops::forward(x, &self.w),
-        }
+        self.kind.plan().forward(x, &self.w)
     }
 
-    /// Pre-quantize the weight once for forward-only serving (the serve
-    /// subsystem's quantize-on-load path).
+    /// Pack the weight once for forward-only serving (the serve
+    /// subsystem's quantize-on-load path): int8 kinds keep only packed
+    /// tile-major codes + state, ready for the blocked kernel.
     pub fn prepare(&self) -> PreparedLinear {
-        let weight = match self.kind {
-            LinearKind::Standard => PreparedWeight::Full(self.w.clone()),
-            LinearKind::SwitchBack | LinearKind::SwitchBackM => {
-                PreparedWeight::Tensorwise(tensorwise_quant(&self.w))
-            }
-            LinearKind::LlmInt8 => PreparedWeight::Rowwise(rowwise_quant(&self.w)),
-        };
         PreparedLinear {
             kind: self.kind,
             out_dim: self.w.rows,
             in_dim: self.w.cols,
-            weight,
+            weight: self.kind.plan().prepare(&self.w),
         }
     }
 }
 
-/// A weight stored in the form its forward matmul consumes, built once at
-/// load time instead of re-quantized per call (int8 kinds keep only codes
-/// + state: ≈4× less weight memory than f32).
-pub enum PreparedWeight {
-    /// f32 weight (Standard)
-    Full(Matrix),
-    /// tensor-wise int8 codes + scalar state (SwitchBack / SwitchBackM)
-    Tensorwise(QuantizedTensor),
-    /// row-wise-per-output int8 codes + per-row state (LLM.int8())
-    Rowwise(QuantizedRow),
-}
-
-/// A forward-only linear layer with its weight pre-quantized at load time.
+/// A forward-only linear layer with its weight pre-quantized **and
+/// pre-packed** into the blocked kernel's panel layout at load time.
 ///
 /// Per call only the *activations* are quantized (row-wise, O(b·n) against
-/// the matmul's O(b·m·n)); the weight-side quantize — O(m·n), the dominant
-/// quantize cost in [`Linear::forward`] — is already paid.
+/// the matmul's O(b·m·n), into per-thread scratch); the weight-side
+/// quantize+pack — O(m·n), the dominant quantize cost in
+/// [`Linear::forward`] — is already paid.
 pub struct PreparedLinear {
     pub kind: LinearKind,
     pub out_dim: usize,
@@ -200,33 +159,41 @@ pub struct PreparedLinear {
 }
 
 impl PreparedLinear {
-    /// `x [b, in] → [b, out]`, no cache, weight already quantized.
+    /// `x [b, in] → [b, out]`, no cache, weight already packed.
     pub fn forward(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.in_dim, "input dim mismatch");
-        match &self.weight {
-            PreparedWeight::Full(w) => StandardLinearOps::forward(x, w),
-            PreparedWeight::Tensorwise(wq) => {
-                gemm_i8_nt_rowtensor(&rowwise_quant(x), wq)
-            }
-            PreparedWeight::Rowwise(wq) => gemm_i8_nt_rowcol(&rowwise_quant(x), wq),
-        }
+        self.weight.forward(x)
+    }
+
+    /// Forward from shared, already-quantized activations (int8 kinds):
+    /// one row-quantize of a block input feeds Q, K and V.
+    pub fn forward_quant(&self, xq: &QuantizedRow) -> Matrix {
+        assert_eq!(xq.codes.cols, self.in_dim, "input dim mismatch");
+        self.weight.forward_quant(xq)
+    }
+
+    /// Forward with the fused map+quantize epilogue: the output rows are
+    /// mapped (e.g. gelu) and re-quantized inside the GEMM's dequant
+    /// epilogue — the next layer's int8 input without an f32 round-trip.
+    pub fn forward_fused_quant(
+        &self,
+        xq: &QuantizedRow,
+        map: Option<fn(f32) -> f32>,
+    ) -> QuantizedRow {
+        assert_eq!(xq.codes.cols, self.in_dim, "input dim mismatch");
+        self.weight.forward_fused_quant(xq, map)
+    }
+
+    /// Whether this layer consumes quantized activations (int8 kinds).
+    pub fn quantizes_input(&self) -> bool {
+        self.weight.is_quantized()
     }
 
     /// Resident weight bytes (codes + state) — the serving-memory analogue
     /// of [`LinearCache::retained_bytes`].
     pub fn weight_bytes(&self) -> usize {
-        match &self.weight {
-            PreparedWeight::Full(w) => w.data.len() * 4,
-            PreparedWeight::Tensorwise(q) => q.codes.data.len() + 4,
-            PreparedWeight::Rowwise(q) => q.codes.data.len() + q.state.len() * 4,
-        }
+        self.weight.bytes()
     }
-}
-
-// keep the fused transpose path exercised (used directly by the benches)
-#[allow(dead_code)]
-fn _fused_transpose_is_public(w: &Matrix) {
-    let _ = tensorwise_quant_transpose(w);
 }
 
 #[cfg(test)]
@@ -314,7 +281,7 @@ mod tests {
     }
 
     /// The inference path must be bit-identical to the training forward for
-    /// every kind — serving reuses the exact same GEMM substrate.
+    /// every kind — serving reuses the exact same GEMM substrate, packed.
     #[test]
     fn forward_infer_and_prepared_match_training_forward() {
         let mut rng = Rng::seed(83);
@@ -342,7 +309,31 @@ mod tests {
         }
     }
 
-    /// Pre-quantized int8 weights hold ≈4× less memory than f32 weights.
+    /// The shared-codes and fused-epilogue prepared paths are bit-identical
+    /// to quantize-then-forward (the fusion contract, per kind).
+    #[test]
+    fn prepared_quant_paths_match_unfused() {
+        let mut rng = Rng::seed(85);
+        for kind in [LinearKind::SwitchBack, LinearKind::LlmInt8] {
+            let lin = Linear::new(24, 40, kind, &mut rng);
+            let prep = lin.prepare();
+            assert!(prep.quantizes_input());
+            let x = Matrix::randn(7, 40, 1.0, &mut rng);
+            let xq = rowwise_quant(&x);
+            let y = prep.forward(&x);
+            assert_eq!(prep.forward_quant(&xq).max_abs_diff(&y), 0.0, "{kind:?}");
+            let fused = prep.forward_fused_quant(&xq, Some(crate::nn::gelu));
+            let mut mapped = y.clone();
+            for v in mapped.data.iter_mut() {
+                *v = crate::nn::gelu(*v);
+            }
+            let want = rowwise_quant(&mapped);
+            assert_eq!(fused.codes.data, want.codes.data, "{kind:?}");
+            assert_eq!(fused.state, want.state, "{kind:?}");
+        }
+    }
+
+    /// Pre-packed int8 weights hold ≈4× less memory than f32 weights.
     #[test]
     fn prepared_weight_bytes_quartered_for_int8_kinds() {
         let mut rng = Rng::seed(84);

@@ -6,8 +6,11 @@ use crate::tensor::{Matrix, MatrixI8};
 pub const INT8_MAX: f32 = 127.0;
 
 /// absmax with the all-zero floor (matches `ref._safe_absmax`).
+///
+/// Shared with the packed GEMM's fused quantize+pack paths (`gemm::pack`)
+/// so every quantizer in the crate applies the identical floor.
 #[inline]
-fn safe(m: f32) -> f32 {
+pub(crate) fn safe_absmax(m: f32) -> f32 {
     if m == 0.0 {
         1.0
     } else {
@@ -15,8 +18,11 @@ fn safe(m: f32) -> f32 {
     }
 }
 
+/// One value → one int8 code under an `INT8_MAX / absmax` scale.  Also
+/// shared with `gemm::pack` (fused quantize+pack must emit the exact
+/// same codes as quantize-then-pack).
 #[inline]
-fn quantize_one(v: f32, scale: f32) -> i8 {
+pub(crate) fn quantize_one(v: f32, scale: f32) -> i8 {
     round_ties_even(v * scale).clamp(-INT8_MAX, INT8_MAX) as i8
 }
 
@@ -41,6 +47,87 @@ pub struct QuantizedCol {
     pub state: Vec<f32>,
 }
 
+/// Which quantization statistic a matmul operand carries (paper §2.2.1):
+/// the *scheme* as data, so [`crate::gemm::MatmulPlan`] can describe a
+/// linear layer's precision strategy without per-kind code paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantScheme {
+    /// per-row absmax (eq. 1) — activations / gradients.
+    RowWise,
+    /// scalar absmax (eq. 2) — SwitchBack weights.
+    TensorWise,
+    /// tensor-wise over `xᵀ`, fused quantize+transpose in one pass
+    /// (§2.2.1) — the int8 dgrad's weight operand.
+    TensorWiseTranspose,
+    /// per-column absmax — LLM.int8()'s wgrad operand.
+    ColWise,
+}
+
+/// A quantized matrix under any [`QuantScheme`].
+#[derive(Debug, Clone)]
+pub enum Quantized {
+    Row(QuantizedRow),
+    Tensor(QuantizedTensor),
+    Col(QuantizedCol),
+}
+
+impl QuantScheme {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::RowWise => "rowwise",
+            Self::TensorWise => "tensorwise",
+            Self::TensorWiseTranspose => "tensorwise_transpose",
+            Self::ColWise => "colwise",
+        }
+    }
+
+    /// Quantize `x` under this scheme (allocating; the `*_into` variants
+    /// below are the buffer-reuse forms the hot paths use).
+    pub fn quantize(&self, x: &Matrix) -> Quantized {
+        match self {
+            Self::RowWise => Quantized::Row(rowwise_quant(x)),
+            Self::TensorWise => Quantized::Tensor(tensorwise_quant(x)),
+            Self::TensorWiseTranspose => {
+                Quantized::Tensor(tensorwise_quant_transpose(x))
+            }
+            Self::ColWise => Quantized::Col(colwise_quant(x)),
+        }
+    }
+}
+
+/// Reusable row-wise quantization buffers: `rowwise(&x)` resizes (never
+/// shrinking capacity) and overwrites, so a steady-state hot path — e.g.
+/// the serving engine quantizing activations before every packed GEMM —
+/// allocates nothing per call.  Keep one per thread (`gemm`'s
+/// thread-local `ACT_SCRATCH`).
+pub struct QuantScratch {
+    q: QuantizedRow,
+}
+
+impl QuantScratch {
+    pub fn new() -> Self {
+        Self {
+            q: QuantizedRow { codes: MatrixI8::zeros(0, 0), state: Vec::new() },
+        }
+    }
+
+    /// Row-wise quantize `x` into the held buffers.
+    pub fn rowwise(&mut self, x: &Matrix) -> &QuantizedRow {
+        self.q.codes.rows = x.rows;
+        self.q.codes.cols = x.cols;
+        self.q.codes.data.resize(x.rows * x.cols, 0);
+        self.q.state.resize(x.rows, 0.0);
+        rowwise_quant_into(x, &mut self.q.codes, &mut self.q.state);
+        &self.q
+    }
+}
+
+impl Default for QuantScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Row-wise int8 quantization (paper eq. 1).
 pub fn rowwise_quant(x: &Matrix) -> QuantizedRow {
     let mut codes = MatrixI8::zeros(x.rows, x.cols);
@@ -49,41 +136,68 @@ pub fn rowwise_quant(x: &Matrix) -> QuantizedRow {
     QuantizedRow { codes, state }
 }
 
+/// One row's absmax (with the all-zero floor) + code emission — the
+/// shared core of [`rowwise_quant_into`] and the packed GEMM's fused
+/// row-quantize epilogue (`gemm::pack`), so a fused output row is
+/// bit-identical to quantizing the materialized f32 row.  Returns the
+/// row's state.
+#[inline]
+pub fn quantize_row_into(row: &[f32], codes: &mut [i8]) -> f32 {
+    debug_assert_eq!(row.len(), codes.len());
+    let m = safe_absmax(row.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+    let scale = INT8_MAX / m;
+    for (c, &v) in codes.iter_mut().zip(row) {
+        *c = quantize_one(v, scale);
+    }
+    m
+}
+
 /// In-place variant (the hot path reuses buffers; see EXPERIMENTS.md §Perf).
 pub fn rowwise_quant_into(x: &Matrix, codes: &mut MatrixI8, state: &mut [f32]) {
     assert_eq!(codes.rows, x.rows);
     assert_eq!(codes.cols, x.cols);
     assert_eq!(state.len(), x.rows);
     for r in 0..x.rows {
-        let row = x.row(r);
-        let m = safe(row.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
-        state[r] = m;
-        let scale = INT8_MAX / m;
         let crow = &mut codes.data[r * x.cols..(r + 1) * x.cols];
-        for (c, &v) in crow.iter_mut().zip(row) {
-            *c = quantize_one(v, scale);
-        }
+        state[r] = quantize_row_into(x.row(r), crow);
     }
 }
 
 /// Tensor-wise int8 quantization (paper eq. 2).
 pub fn tensorwise_quant(x: &Matrix) -> QuantizedTensor {
-    let m = safe(x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
-    let scale = INT8_MAX / m;
     let mut codes = MatrixI8::zeros(x.rows, x.cols);
+    let state = tensorwise_quant_into(x, &mut codes);
+    QuantizedTensor { codes, state }
+}
+
+/// In-place variant of [`tensorwise_quant`]; returns the scalar state.
+pub fn tensorwise_quant_into(x: &Matrix, codes: &mut MatrixI8) -> f32 {
+    assert_eq!(codes.rows, x.rows);
+    assert_eq!(codes.cols, x.cols);
+    let m = safe_absmax(x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+    let scale = INT8_MAX / m;
     for (c, &v) in codes.data.iter_mut().zip(&x.data) {
         *c = quantize_one(v, scale);
     }
-    QuantizedTensor { codes, state: m }
+    m
 }
 
 /// Fused tensor-wise quantize + transpose (the paper's
 /// `tensor-wise_quantize_transpose`, §2.2.1): output codes are `xᵀ`,
 /// quantized in one pass over the input so memory is touched once.
 pub fn tensorwise_quant_transpose(x: &Matrix) -> QuantizedTensor {
-    let m = safe(x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
-    let scale = INT8_MAX / m;
     let mut codes = MatrixI8::zeros(x.cols, x.rows);
+    let state = tensorwise_quant_transpose_into(x, &mut codes);
+    QuantizedTensor { codes, state }
+}
+
+/// In-place variant of [`tensorwise_quant_transpose`] (`codes` must be
+/// `[x.cols, x.rows]`); returns the scalar state.
+pub fn tensorwise_quant_transpose_into(x: &Matrix, codes: &mut MatrixI8) -> f32 {
+    assert_eq!(codes.rows, x.cols);
+    assert_eq!(codes.cols, x.rows);
+    let m = safe_absmax(x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs())));
+    let scale = INT8_MAX / m;
     // Block the transpose for cache locality (same idea as the Pallas
     // kernel's VMEM-resident tile transpose).
     const B: usize = 64;
@@ -97,29 +211,40 @@ pub fn tensorwise_quant_transpose(x: &Matrix) -> QuantizedTensor {
             }
         }
     }
-    QuantizedTensor { codes, state: m }
+    m
 }
 
 /// Column-wise int8 quantization (per-column state; LLM.int8() wgrad path).
 pub fn colwise_quant(x: &Matrix) -> QuantizedCol {
-    let mut maxes = vec![0.0f32; x.cols];
+    let mut codes = MatrixI8::zeros(x.rows, x.cols);
+    let mut state = vec![0.0f32; x.cols];
+    colwise_quant_into(x, &mut codes, &mut state);
+    QuantizedCol { codes, state }
+}
+
+/// In-place variant of [`colwise_quant`] (`state` must be `x.cols` long).
+pub fn colwise_quant_into(x: &Matrix, codes: &mut MatrixI8, state: &mut [f32]) {
+    assert_eq!(codes.rows, x.rows);
+    assert_eq!(codes.cols, x.cols);
+    assert_eq!(state.len(), x.cols);
+    for mx in state.iter_mut() {
+        *mx = 0.0;
+    }
     for r in 0..x.rows {
-        for (mx, &v) in maxes.iter_mut().zip(x.row(r)) {
+        for (mx, &v) in state.iter_mut().zip(x.row(r)) {
             *mx = mx.max(v.abs());
         }
     }
-    for m in maxes.iter_mut() {
-        *m = safe(*m);
+    for m in state.iter_mut() {
+        *m = safe_absmax(*m);
     }
-    let mut codes = MatrixI8::zeros(x.rows, x.cols);
     for r in 0..x.rows {
         let row = x.row(r);
         let crow = &mut codes.data[r * x.cols..(r + 1) * x.cols];
         for c in 0..x.cols {
-            crow[c] = quantize_one(row[c], INT8_MAX / maxes[c]);
+            crow[c] = quantize_one(row[c], INT8_MAX / state[c]);
         }
     }
-    QuantizedCol { codes, state: maxes }
 }
 
 /// Dequantize row-wise codes back to f32 (SwitchBackM backward path).
@@ -195,5 +320,70 @@ mod tests {
         assert_eq!(q.state, vec![3.0, 100.0]);
         assert_eq!(q.codes.row(1)[0], -127);
         assert_eq!(q.codes.row(0)[1], 127);
+    }
+
+    /// Every `_into` variant must reproduce its allocating twin exactly
+    /// (the hot paths depend on buffer reuse changing nothing).
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        let mut rng = Rng::seed(7);
+        let x = Matrix::randn(13, 21, 1.5, &mut rng);
+        let mut codes = MatrixI8::zeros(13, 21);
+        let mut state = vec![0.0f32; 13];
+        rowwise_quant_into(&x, &mut codes, &mut state);
+        let q = rowwise_quant(&x);
+        assert_eq!(codes.data, q.codes.data);
+        assert_eq!(state, q.state);
+
+        let mut tc = MatrixI8::zeros(13, 21);
+        assert_eq!(tensorwise_quant_into(&x, &mut tc), tensorwise_quant(&x).state);
+        assert_eq!(tc.data, tensorwise_quant(&x).codes.data);
+
+        let mut tt = MatrixI8::zeros(21, 13);
+        let st = tensorwise_quant_transpose_into(&x, &mut tt);
+        let qt = tensorwise_quant_transpose(&x);
+        assert_eq!(st, qt.state);
+        assert_eq!(tt.data, qt.codes.data);
+
+        let mut cc = MatrixI8::zeros(13, 21);
+        let mut cs = vec![9.0f32; 21]; // stale values must be overwritten
+        colwise_quant_into(&x, &mut cc, &mut cs);
+        let qc = colwise_quant(&x);
+        assert_eq!(cc.data, qc.codes.data);
+        assert_eq!(cs, qc.state);
+    }
+
+    #[test]
+    fn scheme_dispatch_matches_direct_calls() {
+        let mut rng = Rng::seed(8);
+        let x = Matrix::randn(9, 17, 1.0, &mut rng);
+        match QuantScheme::RowWise.quantize(&x) {
+            Quantized::Row(q) => assert_eq!(q.codes.data, rowwise_quant(&x).codes.data),
+            _ => panic!("wrong variant"),
+        }
+        match QuantScheme::TensorWiseTranspose.quantize(&x) {
+            Quantized::Tensor(q) => {
+                assert_eq!(q.codes.data, tensorwise_quant_transpose(&x).codes.data)
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert_eq!(QuantScheme::ColWise.label(), "colwise");
+    }
+
+    /// The scratch reuses buffers across shape changes without leaking
+    /// stale codes or state.
+    #[test]
+    fn quant_scratch_reuse_is_exact() {
+        let mut rng = Rng::seed(9);
+        let mut scratch = QuantScratch::new();
+        for (r, c) in [(8, 32), (3, 5), (16, 64)] {
+            let x = Matrix::randn(r, c, 1.0, &mut rng);
+            let q = scratch.rowwise(&x);
+            let fresh = rowwise_quant(&x);
+            assert_eq!(q.codes.rows, r);
+            assert_eq!(q.codes.cols, c);
+            assert_eq!(q.codes.data[..r * c], fresh.codes.data[..]);
+            assert_eq!(q.state[..r], fresh.state[..]);
+        }
     }
 }

@@ -17,10 +17,13 @@ mod int8;
 
 pub use fp8::{fp8_round, fp8_round_slice, Fp8Format, E4M3, E5M2};
 pub use int8::{
-    colwise_quant, dequant_rowwise, rowwise_quant, rowwise_quant_into,
-    tensorwise_quant, tensorwise_quant_transpose, QuantizedCol, QuantizedRow,
-    QuantizedTensor, INT8_MAX,
+    colwise_quant, colwise_quant_into, dequant_rowwise, quantize_row_into,
+    rowwise_quant, rowwise_quant_into, tensorwise_quant, tensorwise_quant_into,
+    tensorwise_quant_transpose, tensorwise_quant_transpose_into, QuantScheme,
+    QuantScratch, Quantized, QuantizedCol, QuantizedRow, QuantizedTensor,
+    INT8_MAX,
 };
+pub(crate) use int8::{quantize_one, safe_absmax};
 
 /// Round-half-to-even for f32, matching `jnp.round` / IEEE
 /// round-to-nearest-even (std's `f32::round` rounds half away from zero,

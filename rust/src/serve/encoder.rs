@@ -1,10 +1,16 @@
 //! Forward-only dual-tower CLIP encoder for serving.
 //!
 //! Built once at load time from [`crate::nn::TransformerBlock`]s whose
-//! projection weights are immediately pre-quantized
-//! ([`TransformerBlock::prepare`]) — serving never pays the per-call
-//! weight quantize that the training forward does, and never allocates a
-//! backward cache.  Precision is pluggable exactly like training
+//! projection weights are immediately pre-quantized *and packed* into
+//! the blocked tile-major layout ([`TransformerBlock::prepare`] →
+//! [`crate::gemm::PreparedWeight::Packed`], DESIGN.md §GEMM) — serving
+//! never pays the per-call weight quantize+pack that the training
+//! forward does, never allocates a backward cache, and every int8
+//! projection runs on the packed cache-blocked kernel with the next
+//! quantize fused into the epilogue where the block wiring allows
+//! (Q/K/V share one activation quantize; up-proj emits quantized GELU
+//! output straight into down-proj).  Precision is pluggable exactly like
+//! training
 //! ([`LinearKind`]), so the `loadgen` sweep compares Standard (f32),
 //! SwitchBack and LLM.int8() serving on identical weights: seeding is
 //! kind-independent, so every kind encodes the *same* underlying f32

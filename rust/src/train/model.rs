@@ -263,6 +263,12 @@ impl ClipTrainModel {
 
     // ----- inference (eval path) --------------------------------------
 
+    // `forward_infer` quantizes weights per call but shares the serve
+    // path's blocked int8 kernels and fused-quantize block wiring (one
+    // activation quantize for Q/K/V, GELU fused into the up-proj
+    // epilogue) via the same `MatmulPlan` dispatch — which is what keeps
+    // eval encodings bit-identical to a prepared serving encoder's.
+
     fn tower_infer(
         blocks: &[TransformerBlock],
         out_proj: &Linear,

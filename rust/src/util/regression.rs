@@ -13,7 +13,11 @@
 //!   divergence, spike counts) for train, and — for the ckpt pipeline —
 //!   the standby promote/reject/rollback/quarantine counters plus the
 //!   sharded-snapshot invariants (`sharded_bit_identical`, shard count,
-//!   and the shard metrics not vanishing once the baseline records them).
+//!   and the shard metrics not vanishing once the baseline records them),
+//!   and — for the gemm kernels — the blocked-vs-reference *speedup*
+//!   curve (blocked ≥ the flat reference at the two largest shapes, and
+//!   no per-shape speedup collapse vs baseline) plus the quantize-time
+//!   fraction staying under [`QUANT_PCT_CEILING`].
 //!   This is what CI runs against the committed baseline, which was
 //!   measured on different hardware.
 //! * **strict**: additionally gates absolute requests/sec, p99 and
@@ -50,6 +54,7 @@ pub fn compare_bench(
         "serve_throughput" => Ok(compare_serve(old, new, tol, strict)?),
         "train_native" => Ok(compare_train(old, new, tol, strict)?),
         "ckpt_pipeline" => Ok(compare_ckpt(old, new, tol, strict)?),
+        "gemm_kernels" => Ok(compare_gemm(old, new, tol, strict)?),
         other => Err(format!("unknown bench kind {other:?}")),
     }
 }
@@ -565,6 +570,187 @@ fn compare_ckpt(
     Ok(regs)
 }
 
+// ----- gemm kernels ---------------------------------------------------
+
+/// Portable ceiling on the quantize fraction at the largest benched dim
+/// (paper Fig 4: ≤25% and falling with dim — 50% means the quantize ops
+/// around the GEMM have eaten the int8 win).
+pub const QUANT_PCT_CEILING: f64 = 50.0;
+
+/// One BENCH_gemm.json kernel entry in comparable form.
+struct GemmEntry {
+    name: String,
+    /// b·k·m — the ordering key for "largest shapes"
+    work: f64,
+    f32_ms: f64,
+    reference_ms: f64,
+    blocked_ms: f64,
+    blocked_speedup: f64,
+}
+
+fn gemm_index(v: &Value) -> Result<Vec<GemmEntry>, String> {
+    results(v)?
+        .iter()
+        .map(|r| {
+            let name = s(r, "name").to_string();
+            let ctx = format!("gemm {name}");
+            let work = req_num(r, &ctx, "b")?
+                * req_num(r, &ctx, "k")?
+                * req_num(r, &ctx, "m")?;
+            Ok(GemmEntry {
+                work,
+                f32_ms: req_num(r, &ctx, "f32_ms")?,
+                reference_ms: req_num(r, &ctx, "reference_ms")?,
+                blocked_ms: req_num(r, &ctx, "blocked_ms")?,
+                blocked_speedup: req_num(r, &ctx, "blocked_speedup")?,
+                name,
+            })
+        })
+        .collect()
+}
+
+fn compare_gemm(
+    old: &Value,
+    new: &Value,
+    tol: f64,
+    strict: bool,
+) -> Result<Vec<String>, String> {
+    let oi = gemm_index(old)?;
+    let ni = gemm_index(new)?;
+    // fail closed on vanishing coverage: every baseline shape must still
+    // be measured — "no entry" must not read as "no regression"
+    for o in &oi {
+        if !ni.iter().any(|n| n.name == o.name) {
+            return Err(format!(
+                "gemm: baseline shape {:?} is missing from the new document \
+                 — the bench lost coverage; restore the shape (or refresh \
+                 the baseline) before comparing",
+                o.name
+            ));
+        }
+    }
+    let mut regs = vec![];
+    let mut compared = 0usize;
+    // portable invariant: at the two largest shapes the blocked kernel
+    // must be at least as fast as the flat reference kernel (a ratio of
+    // two same-machine kernels, so machine speed cancels out)
+    let mut by_work: Vec<&GemmEntry> = ni.iter().collect();
+    by_work.sort_by(|a, b| b.work.partial_cmp(&a.work).unwrap());
+    for e in by_work.iter().take(2) {
+        compared += 1;
+        if e.blocked_speedup < 1.0 - tol {
+            regs.push(format!(
+                "gemm {}: blocked kernel slower than the flat reference \
+                 ({:.2}x, want ≥ 1.0x within {:.0}% tol)",
+                e.name,
+                e.blocked_speedup,
+                tol * 100.0
+            ));
+        }
+    }
+    // portable: the speedup-vs-size curve must not regress vs baseline
+    for e in &ni {
+        let Some(o) = oi.iter().find(|o| o.name == e.name) else {
+            continue; // new shape with no baseline: nothing to gate yet
+        };
+        compared += 1;
+        if e.blocked_speedup < o.blocked_speedup * (1.0 - tol) {
+            regs.push(format!(
+                "gemm {}: blocked-vs-reference speedup fell {:.2}x → {:.2}x \
+                 (> {:.0}% drop)",
+                e.name,
+                o.blocked_speedup,
+                e.blocked_speedup,
+                tol * 100.0
+            ));
+        }
+        if strict {
+            for (key, ov, nv) in [
+                ("f32_ms", o.f32_ms, e.f32_ms),
+                ("reference_ms", o.reference_ms, e.reference_ms),
+                ("blocked_ms", o.blocked_ms, e.blocked_ms),
+            ] {
+                if ov > 0.0 && nv > ov * (1.0 + tol) {
+                    regs.push(format!(
+                        "gemm {}: {key} {ov:.3} → {nv:.3} ms (> {:.0}% rise)",
+                        e.name,
+                        tol * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    // quant-fraction block (embedded from the fig4 bench): once the
+    // baseline records it, it vanishing from the new document fails closed
+    let oq = old.get("quant_fraction").and_then(Value::as_arr);
+    let nq = new.get("quant_fraction").and_then(Value::as_arr);
+    match (oq, nq) {
+        (Some(_), None) => {
+            return Err(
+                "gemm: baseline has a \"quant_fraction\" block but the new \
+                 document has none — the quant-fraction bench disappeared; \
+                 restore it (or refresh the baseline) before comparing"
+                    .into(),
+            );
+        }
+        (_, Some(nq)) => {
+            // portable: the quantize share at the largest dim stays sane
+            let mut largest: Option<(f64, f64)> = None;
+            for e in nq {
+                let dim = req_num(e, "gemm quant_fraction", "dim")?;
+                let pct = req_num(e, "gemm quant_fraction", "quant_pct")?;
+                if largest.map(|(d, _)| dim > d).unwrap_or(true) {
+                    largest = Some((dim, pct));
+                }
+            }
+            if let Some((dim, pct)) = largest {
+                compared += 1;
+                if pct > QUANT_PCT_CEILING {
+                    regs.push(format!(
+                        "gemm: quantize fraction at dim {dim:.0} is \
+                         {pct:.1}% (> {QUANT_PCT_CEILING:.0}% ceiling — \
+                         quantize overhead is eating the int8 win)"
+                    ));
+                }
+            }
+            if strict {
+                if let Some(oq) = oq {
+                    for e in nq {
+                        let dim = req_num(e, "gemm quant_fraction", "dim")?;
+                        let Some(o) = oq.iter().find(|o| {
+                            f(o, "dim").map(|d| d == dim).unwrap_or(false)
+                        }) else {
+                            continue;
+                        };
+                        compared += 1;
+                        for key in ["quant_ms", "matmul_ms"] {
+                            let ctx = format!("gemm quant_fraction dim {dim:.0}");
+                            let (ov, nv) =
+                                (req_num(o, &ctx, key)?, req_num(e, &ctx, key)?);
+                            if ov > 0.0 && nv > ov * (1.0 + tol) {
+                                regs.push(format!(
+                                    "{ctx}: {key} {ov:.3} → {nv:.3} ms \
+                                     (> {:.0}% rise)",
+                                    tol * 100.0
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (None, None) => {}
+    }
+    if compared == 0 {
+        return Err(
+            "nothing comparable between baseline and new gemm results \
+             (no matching shape names and no quant_fraction block)"
+                .into(),
+        );
+    }
+    Ok(regs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1016,5 +1202,141 @@ mod tests {
         assert!(compare_bench(&junk, &junk, 0.15, false).is_err());
         let nores = parse(r#"{"bench":"train_native"}"#).unwrap();
         assert!(compare_bench(&nores, &nores, 0.15, false).is_err());
+    }
+
+    /// One gemm_kernels shape entry; speedups derive from the ms fields
+    /// the way the bench computes them.
+    fn gemm_shape(
+        b: usize,
+        k: usize,
+        m: usize,
+        f32_ms: f64,
+        reference_ms: f64,
+        blocked_ms: f64,
+    ) -> String {
+        format!(
+            r#"{{"name":"b{b}_k{k}_m{m}","b":{b},"k":{k},"m":{m},
+                "f32_ms":{f32_ms},"reference_ms":{reference_ms},
+                "blocked_ms":{blocked_ms},
+                "blocked_speedup":{speedup},
+                "int8_vs_f32":{vs_f32}}}"#,
+            speedup = reference_ms / blocked_ms,
+            vs_f32 = f32_ms / blocked_ms,
+        )
+    }
+
+    fn gemm_doc(shapes: &[String], quant: Option<&str>) -> Value {
+        let qf = match quant {
+            Some(q) => format!(r#","quant_fraction":{q}"#),
+            None => String::new(),
+        };
+        parse(&format!(
+            r#"{{"bench":"gemm_kernels","isa":"avx2","threads":8,
+                "results":[{}]{qf}}}"#,
+            shapes.join(",")
+        ))
+        .unwrap()
+    }
+
+    fn gemm_base_shapes(scale: f64) -> Vec<String> {
+        // blocked ~1.6× the flat reference at every shape; `scale` models
+        // machine speed (same ratios, different absolutes)
+        vec![
+            gemm_shape(256, 256, 256, 20.0 * scale, 8.0 * scale, 5.0 * scale),
+            gemm_shape(512, 128, 512, 40.0 * scale, 16.0 * scale, 10.0 * scale),
+            gemm_shape(512, 512, 512, 80.0 * scale, 32.0 * scale, 20.0 * scale),
+        ]
+    }
+
+    const GEMM_QF: &str = r#"[
+        {"dim":128,"quant_ms":0.5,"matmul_ms":2.0,"quant_pct":20.0},
+        {"dim":256,"quant_ms":1.5,"matmul_ms":10.0,"quant_pct":13.0}]"#;
+
+    #[test]
+    fn portable_gemm_passes_across_machines() {
+        // same kernel ratios at 4× different machine speed: no regression
+        let old = gemm_doc(&gemm_base_shapes(1.0), Some(GEMM_QF));
+        let new = gemm_doc(&gemm_base_shapes(4.0), Some(GEMM_QF));
+        let regs = compare_bench(&old, &new, 0.15, false).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+        // strict flags the absolute collapse
+        let regs = compare_bench(&old, &new, 0.15, true).unwrap();
+        assert!(regs.iter().any(|r| r.contains("blocked_ms")), "{regs:?}");
+    }
+
+    #[test]
+    fn gemm_speedup_curve_regression_is_caught() {
+        let old = gemm_doc(&gemm_base_shapes(1.0), None);
+        // largest shape's blocked kernel lost its edge: 32/20 → 32/30
+        let mut shapes = gemm_base_shapes(1.0);
+        shapes[2] = gemm_shape(512, 512, 512, 80.0, 32.0, 30.0);
+        let new = gemm_doc(&shapes, None);
+        let regs = compare_bench(&old, &new, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("speedup fell")),
+            "{regs:?}"
+        );
+    }
+
+    #[test]
+    fn gemm_blocked_slower_than_reference_is_caught() {
+        // even against a baseline that agrees, blocked < reference at a
+        // largest shape trips the floor gate
+        let mut shapes = gemm_base_shapes(1.0);
+        shapes[2] = gemm_shape(512, 512, 512, 80.0, 32.0, 40.0); // 0.8×
+        let doc = gemm_doc(&shapes, None);
+        let regs = compare_bench(&doc, &doc, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("slower than the flat reference")),
+            "{regs:?}"
+        );
+    }
+
+    #[test]
+    fn gemm_missing_shape_and_vanished_quant_fraction_fail_closed() {
+        let old = gemm_doc(&gemm_base_shapes(1.0), Some(GEMM_QF));
+        // a baseline shape disappearing from the new doc is an error,
+        // not a pass
+        let fewer = gemm_doc(&gemm_base_shapes(1.0)[..2].to_vec(), Some(GEMM_QF));
+        assert!(compare_bench(&old, &fewer, 0.15, false).is_err());
+        // the quant_fraction block vanishing is an error too
+        let noq = gemm_doc(&gemm_base_shapes(1.0), None);
+        assert!(compare_bench(&old, &noq, 0.15, false).is_err());
+        // ... but a baseline that never had it compares cleanly
+        assert!(compare_bench(&noq, &noq, 0.15, false).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gemm_quant_fraction_ceiling_and_null_metrics() {
+        let old = gemm_doc(&gemm_base_shapes(1.0), Some(GEMM_QF));
+        // quantize eating >50% at the largest dim: caught portably
+        let hot = r#"[{"dim":128,"quant_ms":0.5,"matmul_ms":2.0,"quant_pct":20.0},
+            {"dim":256,"quant_ms":30.0,"matmul_ms":10.0,"quant_pct":75.0}]"#;
+        let new = gemm_doc(&gemm_base_shapes(1.0), Some(hot));
+        let regs = compare_bench(&old, &new, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("quantize fraction")), "{regs:?}");
+        // a null metric fails closed rather than comparing as 0
+        let nulled = parse(
+            r#"{"bench":"gemm_kernels","results":[
+                {"name":"b256_k256_m256","b":256,"k":256,"m":256,
+                 "f32_ms":20.0,"reference_ms":8.0,"blocked_ms":null,
+                 "blocked_speedup":1.6,"int8_vs_f32":4.0}]}"#,
+        )
+        .unwrap();
+        assert!(compare_bench(&nulled, &nulled, 0.15, false).is_err());
+    }
+
+    #[test]
+    fn gemm_strict_gates_quant_fraction_absolutes() {
+        let old = gemm_doc(&gemm_base_shapes(1.0), Some(GEMM_QF));
+        let slow_q = r#"[
+            {"dim":128,"quant_ms":0.5,"matmul_ms":2.0,"quant_pct":20.0},
+            {"dim":256,"quant_ms":4.5,"matmul_ms":10.0,"quant_pct":31.0}]"#;
+        let new = gemm_doc(&gemm_base_shapes(1.0), Some(slow_q));
+        // portable: under the ceiling, no complaint
+        assert!(compare_bench(&old, &new, 0.15, false).unwrap().is_empty());
+        // strict: the 3× quant_ms rise at dim 256 is caught
+        let regs = compare_bench(&old, &new, 0.15, true).unwrap();
+        assert!(regs.iter().any(|r| r.contains("quant_ms")), "{regs:?}");
     }
 }

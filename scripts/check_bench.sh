@@ -18,6 +18,7 @@
 #   cp BENCH_serve.json benchmarks/BENCH_serve.baseline.json
 #   cp BENCH_train.json benchmarks/BENCH_train.baseline.json
 #   cp BENCH_ckpt.json  benchmarks/BENCH_ckpt.baseline.json
+#   cp BENCH_gemm.json  benchmarks/BENCH_gemm.baseline.json
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -52,6 +53,7 @@ check() {
 check benchmarks/BENCH_serve.baseline.json BENCH_serve.json
 check benchmarks/BENCH_train.baseline.json BENCH_train.json
 check benchmarks/BENCH_ckpt.baseline.json BENCH_ckpt.json
+check benchmarks/BENCH_gemm.baseline.json BENCH_gemm.json
 
 if [[ "$FAILED" -ne 0 ]]; then
     echo "check_bench: FAILED (see regressions above)" >&2

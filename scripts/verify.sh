@@ -9,11 +9,12 @@
 #            dedicated test job; the release build is incremental
 #            against the restored cargo cache)
 #
-# Emits BENCH_serve.json, BENCH_train.json and BENCH_ckpt.json at the
-# repo root so the serving, training and checkpoint/hot-swap perf
-# trajectories are tracked across PRs (schemas: EXPERIMENTS.md §Serve /
-# §Train / §Ckpt).  scripts/check_bench.sh gates all three against the
-# committed baselines in benchmarks/.
+# Emits BENCH_serve.json, BENCH_train.json, BENCH_ckpt.json and
+# BENCH_gemm.json at the repo root so the serving, training,
+# checkpoint/hot-swap and GEMM-kernel perf trajectories are tracked
+# across PRs (schemas: EXPERIMENTS.md §Serve / §Train / §Ckpt, gemm:
+# benchmarks/README.md).  scripts/check_bench.sh gates all four against
+# the committed baselines in benchmarks/.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -72,6 +73,22 @@ echo "== train smoke (BENCH_train.json) =="
     --steps "$TRAIN_STEPS" \
     --kinds switchback,standard \
     --out "$REPO_ROOT/BENCH_train.json"
+
+echo
+echo "== gemm kernel shootout (BENCH_gemm.json) =="
+# fig4 emits the quant-fraction artifact first; gemm_roofline embeds it
+# so the benchdiff gate reads one file.  --quick times exactly the
+# committed-baseline shape set (benchmarks/BENCH_gemm.baseline.json).
+cargo bench --bench fig4_quant_fraction -- --quick \
+    --out "$REPO_ROOT/.bench_gemm_quant.json"
+cargo bench --bench gemm_roofline -- --quick \
+    --out "$REPO_ROOT/BENCH_gemm.json" \
+    --quant "$REPO_ROOT/.bench_gemm_quant.json"
+grep -q '"bench":"gemm_kernels"' "$REPO_ROOT/BENCH_gemm.json" \
+    || { echo "gemm smoke FAILED: BENCH_gemm.json is not a gemm_kernels artifact" >&2; exit 1; }
+grep -q '"quant_fraction":' "$REPO_ROOT/BENCH_gemm.json" \
+    || { echo "gemm smoke FAILED: quant-fraction block was not embedded" >&2; exit 1; }
+rm -f "$REPO_ROOT/.bench_gemm_quant.json"
 
 echo
 echo "== ckpt pipeline: sharded async train → watcher promotes v2 snapshots mid-traffic → eval (BENCH_ckpt.json) =="
@@ -215,4 +232,4 @@ rm -rf "$CKPT_A" "$CKPT_B" "$CKPT_PIPE" \
     "$REPO_ROOT/.bench_ckpt_smoke_a.json" "$REPO_ROOT/.bench_ckpt_smoke_b.json"
 
 echo
-echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json + $REPO_ROOT/BENCH_train.json + $REPO_ROOT/BENCH_ckpt.json"
+echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json + $REPO_ROOT/BENCH_train.json + $REPO_ROOT/BENCH_ckpt.json + $REPO_ROOT/BENCH_gemm.json"
