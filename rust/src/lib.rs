@@ -36,7 +36,11 @@
 //!   - [`trace`] is the cross-cutting observability substrate: an
 //!     always-on span profiler, one metrics registry shared by
 //!     train/serve/ckpt, and the spike flight recorder that dumps the
-//!     paper's `g²/v` under-estimation probes when a spike fires.
+//!     paper's `g²/v` under-estimation probes when a spike fires,
+//!   - [`net`] is the hand-rolled `std::net` HTTP/1.1 layer underneath
+//!     the live telemetry plane (`--telemetry-addr`): strict parsing
+//!     limits, keep-alive with per-connection caps, a bounded worker
+//!     pool and a clean shutdown handle.
 //!
 //! Python never runs on the training path: `make artifacts` lowers the
 //! model once; the `switchback` binary is then self-contained.
@@ -51,6 +55,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod gemm;
+pub mod net;
 pub mod nn;
 pub mod optim;
 pub mod quant;

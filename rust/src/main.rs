@@ -9,6 +9,8 @@
 //! * `serve [--kind K ...]`          — serving-engine smoke run
 //! * `loadgen [--requests N ...]`    — closed-loop serving benchmark,
 //!   writes BENCH_serve.json
+//! * `probe <url> [--expect S ...]`  — scrape client for the live
+//!   telemetry plane (`--telemetry-addr` on serve/train/pipeline)
 //! * `benchdiff <baseline> <new>`    — bench-regression gate over the
 //!   BENCH_*.json artifacts (the CI gate behind scripts/check_bench.sh)
 //!
@@ -20,12 +22,14 @@
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 use switchback::ckpt;
 use switchback::config::OptimizerKind;
 use switchback::coordinator::common::spike_shifts;
 use switchback::coordinator::eval::nearest_class_accuracy;
 use switchback::coordinator::registry;
 use switchback::data::SyntheticClip;
+use switchback::net::http_get;
 use switchback::nn::LinearKind;
 use switchback::serve::standby::{self, StandbyConfig};
 use switchback::serve::{
@@ -33,9 +37,10 @@ use switchback::serve::{
     EncodeInput, EncoderConfig, Engine, LoadgenConfig, ServeConfig, ServeSnapshot,
 };
 use switchback::tensor::Rng;
-use switchback::trace;
+use switchback::trace::{self, Readiness, TelemetryConfig, TelemetryServer};
 use switchback::train::{
-    write_bench_train_json, ClipTrainModel, NativeTrainConfig, NativeTrainer,
+    write_bench_train_json, ClipTrainModel, LiveHooks, NativeTrainConfig,
+    NativeTrainer,
 };
 use switchback::util::json::{self, ObjWriter};
 use switchback::util::regression::{compare_bench, DEFAULT_TOLERANCE};
@@ -72,6 +77,10 @@ USAGE:
   switchback pipeline [OPTIONS]             train → snapshot → serve →
                                             hot-swap → eval end-to-end,
                                             writes BENCH_ckpt.json
+  switchback probe <url> [OPTIONS]          GET a telemetry endpoint and
+                                            print status + body; exits
+                                            nonzero unless 2xx (and
+                                            --expect matched)
   switchback ckpt inspect <path>            checkpoint manifest + CRC check
   switchback ckpt diff <a> <b>              tensor-by-tensor comparison
   switchback trace export <dump> [--out P]  raw span dump (--trace-out) →
@@ -243,6 +252,34 @@ SERVE / LOADGEN OPTIONS:
                          fresh encoder generation every N requests
                          (sustained throughput + tail latency across
                          generations, standby counters in the entry)
+  --scrape-every MS      loadgen: add one scraper-present run — a rider
+                         thread GETs /metrics every MS milliseconds
+                         while the closed loop runs, and the entry gains
+                         scrapes/scrape_errors/scrape_p99_us (gated by
+                         benchdiff: the scraper must neither fail nor
+                         move the serve tail)
+  --scrape-url URL       loadgen: /metrics URL the scraper hits
+                         (default: a telemetry plane self-hosted on
+                         127.0.0.1:0 over the engine under test)
+
+TELEMETRY OPTIONS (serve / train / pipeline):
+  --telemetry-addr H:P   expose the live telemetry plane on HOST:PORT —
+                         GET /metrics (Prometheus), /metrics.json,
+                         /healthz, /readyz (mode-specific readiness +
+                         detail), /trace (Chrome trace JSON of the span
+                         ring), /flight (flight-recorder window).  Port
+                         0 picks an ephemeral port; the bound address is
+                         printed at boot (`telemetry: listening on …`)
+  --hold-ms N            serve: keep the engine + telemetry plane up for
+                         N ms after the smoke probes, so an external
+                         scraper can hit the printed address (default: 0)
+
+PROBE OPTIONS:
+  --expect SUBSTR        succeed only when the response body contains
+                         SUBSTR (in addition to a 2xx status)
+  --follow N             retry up to N times until the probe succeeds
+                         (default: 1 = single shot)
+  --every MS             delay between --follow retries (default: 200)
 ";
 
 /// Every `--key value` flag any subcommand accepts.  The parser rejects
@@ -284,6 +321,13 @@ const VALUE_FLAGS: &[&str] = &[
     "--canary-every",
     "--drift-max",
     "--swap-every",
+    "--telemetry-addr",
+    "--hold-ms",
+    "--scrape-every",
+    "--scrape-url",
+    "--expect",
+    "--follow",
+    "--every",
     "--spike-sigma",
     "--spike-cooldown",
     "--trace-out",
@@ -584,6 +628,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
 
+    // --telemetry-addr: one plane spans the whole matrix; every run
+    // publishes into the same hooks sequentially
+    let telemetry = arm_train_telemetry(args)?;
+    let live_hooks = telemetry.as_ref().map(|(h, _)| h.clone());
+
     let build_cfg = |kind: LinearKind, optimizer: OptimizerKind| -> Result<NativeTrainConfig> {
         let mut cfg = NativeTrainConfig::preset(kind, steps);
         if scenario == Some("train-smoke") {
@@ -671,6 +720,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             }
         });
         cfg.flight_window = args.get("flight-window", cfg.flight_window)?;
+        cfg.live = live_hooks.clone();
         Ok(cfg)
     };
 
@@ -729,6 +779,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     write_bench_train_json(&out, echo_cfg.as_ref().expect("≥1 run"), &results)?;
     println!("wrote {out}");
     write_trace_dump_if_requested(args)?;
+    if let Some((_, mut srv)) = telemetry {
+        srv.shutdown();
+    }
 
     if assert_improves {
         for r in &results {
@@ -861,6 +914,10 @@ fn cmd_train_resume(args: &Args, resume: &str) -> Result<()> {
         );
     }
     let verbose = !args.has("--quiet") && !args.has("-q");
+    // the telemetry plane is a pure observer (like --trace-out), so it is
+    // freely armed on resume
+    let telemetry = arm_train_telemetry(args)?;
+    cfg.live = telemetry.as_ref().map(|(h, _)| h.clone());
     let echo = cfg.clone();
     let mut trainer = NativeTrainer::new(cfg);
     trainer.restore(&ck)?;
@@ -870,6 +927,9 @@ fn cmd_train_resume(args: &Args, resume: &str) -> Result<()> {
     write_bench_train_json(&out, &echo, &[res])?;
     println!("wrote {out}");
     write_trace_dump_if_requested(args)?;
+    if let Some((_, mut srv)) = telemetry {
+        srv.shutdown();
+    }
     Ok(())
 }
 
@@ -891,6 +951,90 @@ fn write_trace_dump_if_requested(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Arm the train-mode telemetry plane (`--telemetry-addr` on `train` and
+/// `train --resume`): [`LiveHooks`] the step loop publishes into, plus
+/// the HTTP server reading them.  `/readyz` flips ready once the first
+/// step completes; `/flight` serves the live flight-recorder window.
+fn arm_train_telemetry(args: &Args) -> Result<Option<(LiveHooks, TelemetryServer)>> {
+    let Some(addr) = args.flags.get("telemetry-addr") else {
+        return Ok(None);
+    };
+    let hooks = LiveHooks::new(args.get("flight-window", 64)?);
+    let ready_hooks = hooks.clone();
+    let flight_hooks = hooks.clone();
+    let srv = TelemetryServer::bind(
+        addr,
+        TelemetryConfig {
+            mode: "train",
+            // the trainer's live gauges + spike counters all live in the
+            // process-wide registry
+            snapshot: Arc::new(|| trace::global().snapshot()),
+            ready: Arc::new(move || {
+                let step = ready_hooks
+                    .step_done
+                    .load(std::sync::atomic::Ordering::Relaxed);
+                Readiness::new(step > 0).with("step", step.to_string())
+            }),
+            flight: Some(Arc::new(move || flight_hooks.flight_json())),
+            http: Default::default(),
+        },
+    )?;
+    println!("telemetry: listening on {}", srv.url());
+    Ok(Some((hooks, srv)))
+}
+
+/// `probe <url>` — the scrape client paired with `--telemetry-addr`:
+/// GET the endpoint, print status + body, exit zero only on a 2xx
+/// (and, with `--expect`, a body containing the substring).  `--follow N`
+/// retries every `--every` ms, so scripts can wait for a readiness flip
+/// or a promotion to become visible without a shell polling loop.
+fn cmd_probe(args: &Args) -> Result<()> {
+    let Some(url) = args.positional.first() else {
+        bail!("probe: missing <url> (e.g. http://127.0.0.1:9100/healthz)");
+    };
+    let expect = args.flags.get("expect");
+    let follow: u32 = args.get("follow", 1)?;
+    if follow == 0 {
+        bail!("--follow must be at least 1");
+    }
+    let every_ms: u64 = args.get("every", 200)?;
+    let mut last = String::from("no response");
+    for attempt in 1..=follow {
+        match http_get(url, std::time::Duration::from_secs(5)) {
+            Ok(resp) => {
+                let matched = resp.is_ok()
+                    && match expect {
+                        Some(e) => resp.body.contains(e.as_str()),
+                        None => true,
+                    };
+                if matched {
+                    println!("HTTP {} {url} (attempt {attempt}/{follow})", resp.status);
+                    print!("{}", resp.body);
+                    if !resp.body.ends_with('\n') {
+                        println!();
+                    }
+                    return Ok(());
+                }
+                last = format!(
+                    "HTTP {} {}",
+                    resp.status,
+                    resp.body.lines().next().unwrap_or("")
+                );
+            }
+            Err(e) => last = e.to_string(),
+        }
+        if attempt < follow {
+            std::thread::sleep(std::time::Duration::from_millis(every_ms));
+        }
+    }
+    match expect {
+        Some(e) => bail!(
+            "probe: {url} never matched {e:?} in {follow} attempt(s) (last: {last})"
+        ),
+        None => bail!("probe: {url} not OK after {follow} attempt(s) (last: {last})"),
+    }
 }
 
 /// `trace export|top|spikes` — consume the tracer's artifacts: raw span
@@ -1012,6 +1156,66 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         bail!("--ckpt-shards must be at least 1");
     }
 
+    // --telemetry-addr: one plane spans the whole scenario.  While the
+    // engine slot is empty, /readyz reports the train phase (ready once
+    // the first step lands); the moment the serving engine boots into
+    // the slot, readiness hands over to the serve semantics (generation,
+    // promoting) — a follower scraping /readyz watches the train→serve
+    // transition and every standby promotion live
+    let engine_slot: Arc<std::sync::RwLock<Option<Arc<Engine>>>> =
+        Arc::new(std::sync::RwLock::new(None));
+    let telemetry = match args.flags.get("telemetry-addr") {
+        Some(addr) => {
+            let hooks = LiveHooks::new(64);
+            let snap_slot = Arc::clone(&engine_slot);
+            let ready_slot = Arc::clone(&engine_slot);
+            let ready_hooks = hooks.clone();
+            let flight_hooks = hooks.clone();
+            let srv = TelemetryServer::bind(
+                addr,
+                TelemetryConfig {
+                    mode: "pipeline",
+                    snapshot: Arc::new(move || {
+                        let global = trace::global().snapshot();
+                        match snap_slot.read().unwrap().as_ref() {
+                            Some(engine) => {
+                                engine.metrics().registry().snapshot().merged(global)
+                            }
+                            None => global,
+                        }
+                    }),
+                    ready: Arc::new(move || {
+                        match ready_slot.read().unwrap().as_ref() {
+                            Some(engine) => {
+                                let promoting = engine.metrics().is_promoting();
+                                Readiness::new(!promoting)
+                                    .with("phase", "\"serve\"")
+                                    .with("generation", engine.generation().to_string())
+                                    .with(
+                                        "promoting",
+                                        if promoting { "true" } else { "false" },
+                                    )
+                            }
+                            None => {
+                                let step = ready_hooks
+                                    .step_done
+                                    .load(std::sync::atomic::Ordering::Relaxed);
+                                Readiness::new(step > 0)
+                                    .with("phase", "\"train\"")
+                                    .with("step", step.to_string())
+                            }
+                        }
+                    }),
+                    flight: Some(Arc::new(move || flight_hooks.flight_json())),
+                    http: Default::default(),
+                },
+            )?;
+            println!("telemetry: listening on {}", srv.url());
+            Some((hooks, srv))
+        }
+        None => None,
+    };
+
     // ---- 1) train, snapshotting on the N/4 cadence -------------------
     // the snapshot directory is this scenario's workspace: clear it so a
     // previous run's snapshots cannot leak into the staged promotions.
@@ -1029,6 +1233,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     cfg.ckpt_keep = 8;
     cfg.ckpt_shards = ckpt_shards;
     cfg.ckpt_async = true;
+    cfg.live = telemetry.as_ref().map(|(h, _)| h.clone());
     println!(
         "== pipeline 1/4: train {} steps (async sharded snapshots every {}, \
          {} shards) ==",
@@ -1110,6 +1315,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         ckpt::encoder_weights(&enc_cfg, &boot_ck.params)?,
     );
     let engine = std::sync::Arc::new(Engine::start_with_encoder(serve_cfg, boot_enc));
+    // hand the telemetry plane over to serve-phase readiness
+    *engine_slot.write().unwrap() = Some(Arc::clone(&engine));
     let mut rng = Rng::seed(seed ^ 0x51BE);
     let probe: Vec<f32> = (0..image_len).map(|_| rng.normal()).collect();
     let pre = engine
@@ -1350,6 +1557,12 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     if !eval_matches_model {
         bail!("serving engine and train model disagree on the same weights");
     }
+    // wind the telemetry plane down first: its closures hold engine
+    // handles through the slot, and Engine::drop needs the last reference
+    *engine_slot.write().unwrap() = None;
+    if let Some((_, mut srv)) = telemetry {
+        srv.shutdown();
+    }
     drop(engine); // joins the worker pool (Engine::drop drains the queue)
 
     // ---- BENCH_ckpt.json ---------------------------------------------
@@ -1557,6 +1770,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.weight_bytes() as f64 / 1024.0
     );
 
+    // --telemetry-addr: the live plane rides the whole smoke (including
+    // any standby wait and the --hold-ms window).  /metrics is the
+    // engine's registry merged with the process-wide one; /readyz is
+    // "booted and not mid-promotion", with the generation, promoting
+    // flag and quarantine count as detail
+    let mut telemetry = match args.flags.get("telemetry-addr") {
+        Some(addr) => {
+            let snap_eng = Arc::clone(&engine);
+            let ready_eng = Arc::clone(&engine);
+            let srv = TelemetryServer::bind(
+                addr,
+                TelemetryConfig {
+                    mode: "serve",
+                    snapshot: Arc::new(move || {
+                        snap_eng
+                            .metrics()
+                            .registry()
+                            .snapshot()
+                            .merged(trace::global().snapshot())
+                    }),
+                    ready: Arc::new(move || {
+                        let promoting = ready_eng.metrics().is_promoting();
+                        Readiness::new(!promoting)
+                            .with("generation", ready_eng.generation().to_string())
+                            .with("promoting", if promoting { "true" } else { "false" })
+                            .with(
+                                "quarantines",
+                                ready_eng
+                                    .metrics()
+                                    .snapshot()
+                                    .standby_quarantines
+                                    .to_string(),
+                            )
+                    }),
+                    flight: None,
+                    http: Default::default(),
+                },
+            )?;
+            println!("telemetry: listening on {}", srv.url());
+            Some(srv)
+        }
+        None => None,
+    };
+
     // warm-standby: watch the directory and (when it already holds a
     // newer snapshot) require one promotion before the smoke probes run,
     // so the probes exercise the promoted generation
@@ -1656,6 +1913,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             snap.standby_promotions, snap.standby_rejects, snap.standby_rollbacks
         );
     }
+    // --hold-ms: keep the engine + telemetry plane up so an external
+    // scraper (verify.sh, a Prometheus dev box) can hit the printed
+    // address before the process exits
+    let hold_ms: u64 = args.get("hold-ms", 0)?;
+    if hold_ms > 0 {
+        println!("holding for {hold_ms} ms (telemetry stays scrapeable)");
+        std::thread::sleep(std::time::Duration::from_millis(hold_ms));
+    }
+    if let Some(srv) = telemetry.as_mut() {
+        // join the HTTP workers (and release their engine handles) before
+        // the engine itself winds down
+        srv.shutdown();
+    }
+    drop(telemetry);
     drop(engine); // joins the worker pool (Engine::drop drains the queue)
     println!("serve smoke OK");
     Ok(())
@@ -1708,7 +1979,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 population,
                 image_fraction,
                 seed,
-                swap_every: 0,
+                ..LoadgenConfig::default()
             };
             let report = run_loadgen(&engine, &lg);
             report.print();
@@ -1744,6 +2015,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             image_fraction,
             seed,
             swap_every,
+            ..LoadgenConfig::default()
         };
         let report = run_loadgen(&engine, &lg);
         report.print();
@@ -1764,6 +2036,76 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         }
         reports.push(report);
         engine.shutdown();
+    }
+
+    // --scrape-every: one extra scraper-present run — a rider thread GETs
+    // /metrics every N ms while the closed loop runs, so the entry
+    // records how the serve tail behaves with a scraper attached and how
+    // long scrapes take under load (both gated by benchdiff)
+    let scrape_every_ms: u64 = args.get("scrape-every", 0)?;
+    if scrape_every_ms > 0 {
+        let kind = kinds
+            .iter()
+            .copied()
+            .find(|k| *k == LinearKind::SwitchBack)
+            .unwrap_or(kinds[0]);
+        let cfg = serve_config_from(args, kind)?;
+        let engine = Arc::new(Engine::start(cfg));
+        // default scrape target: a telemetry plane self-hosted over the
+        // engine under test (exactly what `serve --telemetry-addr` serves)
+        let (url, mut own_srv) = match args.flags.get("scrape-url") {
+            Some(u) => (u.clone(), None),
+            None => {
+                let snap_eng = Arc::clone(&engine);
+                let srv = TelemetryServer::bind(
+                    "127.0.0.1:0",
+                    TelemetryConfig {
+                        mode: "serve",
+                        snapshot: Arc::new(move || {
+                            snap_eng
+                                .metrics()
+                                .registry()
+                                .snapshot()
+                                .merged(trace::global().snapshot())
+                        }),
+                        ready: Arc::new(|| Readiness::new(true)),
+                        flight: None,
+                        http: Default::default(),
+                    },
+                )?;
+                println!("telemetry: listening on {}", srv.url());
+                (format!("{}/metrics", srv.url()), Some(srv))
+            }
+        };
+        let lg = LoadgenConfig {
+            requests,
+            concurrency: concurrencies[0],
+            population,
+            image_fraction,
+            seed,
+            swap_every: 0,
+            scrape_every_ms,
+            scrape_url: Some(url),
+        };
+        let report = run_loadgen(&engine, &lg);
+        report.print();
+        if report.errors > 0 {
+            bail!("loadgen --scrape-every: {} requests failed", report.errors);
+        }
+        if report.scrapes == 0 || report.scrape_errors > 0 {
+            bail!(
+                "loadgen --scrape-every: {} well-formed scrapes, {} scrape \
+                 errors (want ≥1 and 0)",
+                report.scrapes,
+                report.scrape_errors
+            );
+        }
+        reports.push(report);
+        if let Some(srv) = own_srv.as_mut() {
+            srv.shutdown();
+        }
+        drop(own_srv);
+        drop(engine); // joins the worker pool (Engine::drop drains the queue)
     }
 
     // the acceptance ratio: int8 serving vs the f32 baseline
@@ -1806,6 +2148,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "pipeline" => cmd_pipeline(&args),
+        "probe" => cmd_probe(&args),
         "ckpt" => cmd_ckpt(&args),
         "trace" => cmd_trace(&args),
         "benchdiff" => cmd_benchdiff(&args),
@@ -2050,6 +2393,57 @@ mod tests {
         assert!(cmd_ckpt(&a).unwrap_err().to_string().contains("missing"));
         let a = Args::parse(&argv(&["diff", "only_one"])).unwrap();
         assert!(cmd_ckpt(&a).unwrap_err().to_string().contains("two paths"));
+    }
+
+    #[test]
+    fn probe_validates_args_and_fails_fast_on_dead_target() {
+        let a = Args::parse(&argv(&[])).unwrap();
+        let err = cmd_probe(&a).unwrap_err();
+        assert!(err.to_string().contains("missing <url>"), "{err}");
+        let a = Args::parse(&argv(&[
+            "http://127.0.0.1:1/healthz",
+            "--follow",
+            "0",
+        ]))
+        .unwrap();
+        let err = cmd_probe(&a).unwrap_err();
+        assert!(err.to_string().contains("--follow"), "{err}");
+        // nothing listens on the discard port: a single-shot probe fails
+        // with the connect error, not a hang or a panic
+        let a = Args::parse(&argv(&["http://127.0.0.1:1/healthz"])).unwrap();
+        let err = cmd_probe(&a).unwrap_err();
+        assert!(err.to_string().contains("not OK"), "{err}");
+        // non-http schemes are rejected by the client
+        let a = Args::parse(&argv(&["https://example.com/"])).unwrap();
+        assert!(cmd_probe(&a).is_err());
+    }
+
+    #[test]
+    fn telemetry_and_scrape_flags_parse() {
+        let a = Args::parse(&argv(&[
+            "--telemetry-addr",
+            "127.0.0.1:0",
+            "--scrape-every",
+            "5",
+            "--scrape-url",
+            "http://127.0.0.1:9/metrics",
+            "--hold-ms",
+            "10",
+            "--expect",
+            "\"ready\":true",
+            "--follow",
+            "3",
+            "--every",
+            "50",
+        ]))
+        .unwrap();
+        assert_eq!(
+            a.flags.get("telemetry-addr").map(String::as_str),
+            Some("127.0.0.1:0")
+        );
+        assert_eq!(a.get::<u64>("scrape-every", 0).unwrap(), 5);
+        assert_eq!(a.get::<u64>("hold-ms", 0).unwrap(), 10);
+        assert_eq!(a.get::<u32>("follow", 1).unwrap(), 3);
     }
 
     #[test]

@@ -1,0 +1,890 @@
+//! Minimal hand-rolled HTTP/1.1 server and client over `std::net`.
+//!
+//! Scope: exactly what a *read-only* telemetry plane needs, and nothing
+//! more.  `GET`/`HEAD` only, no request bodies, no TLS, no chunked
+//! transfer.  What it does do, it does carefully:
+//!
+//! * **Parsing with hard limits** — request-line length, per-header-line
+//!   length, header count, method token length.  Every limit violation
+//!   maps to a definite 4xx and the connection is closed; malformed bytes
+//!   never panic the worker.
+//! * **Keep-alive** — HTTP/1.1 connections persist by default (HTTP/1.0
+//!   and `Connection: close` do not), bounded by a per-connection request
+//!   cap and a per-read socket timeout so an idle or trickling peer
+//!   cannot pin a worker forever.
+//! * **Bounded concurrency** — one accept thread feeds a fixed worker
+//!   pool through a bounded queue; when the queue is full the accept
+//!   thread answers `503` inline and closes, so load cannot queue
+//!   unboundedly behind the engine it is observing.
+//! * **Clean shutdown** — [`Http1Server::shutdown`] stops the accept
+//!   loop (self-connecting to unblock `accept(2)`), drains the workers
+//!   and joins every thread.  Dropping the server shuts it down too.
+//!
+//! The client half ([`http_get`]) is just enough to scrape the server —
+//! used by `switchback probe` and the loadgen scraper so verify.sh and CI
+//! need no `curl`.
+
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Hard limits and sizing for an [`Http1Server`].
+#[derive(Debug, Clone)]
+pub struct Http1Config {
+    /// Maximum bytes in the request line (`GET /path HTTP/1.1`).
+    pub max_request_line: usize,
+    /// Maximum bytes in a single header line.
+    pub max_header_line: usize,
+    /// Maximum number of headers per request.
+    pub max_headers: usize,
+    /// Requests served on one connection before it is closed.
+    pub max_requests_per_conn: usize,
+    /// Per-read socket timeout; an idle keep-alive peer is dropped after
+    /// this long without bytes.
+    pub read_timeout: Duration,
+    /// Worker threads handling connections.
+    pub workers: usize,
+    /// Accepted connections queued ahead of the workers; beyond this the
+    /// accept thread answers `503` inline.
+    pub queue_depth: usize,
+}
+
+impl Default for Http1Config {
+    fn default() -> Self {
+        Http1Config {
+            max_request_line: 4096,
+            max_header_line: 4096,
+            max_headers: 64,
+            max_requests_per_conn: 128,
+            read_timeout: Duration::from_secs(5),
+            workers: 2,
+            queue_depth: 32,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request / response types
+// ---------------------------------------------------------------------------
+
+/// A parsed request. Bodies are rejected at parse time, so there is none.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// `GET` or `HEAD` (anything else is answered `405` before dispatch).
+    pub method: String,
+    /// Path component of the target, without the query string.
+    pub path: String,
+    /// Raw query string after `?`, if any.
+    pub query: Option<String>,
+    /// Headers with lower-cased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+}
+
+impl Request {
+    /// First header value with the given (lower-case) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A response the handler hands back; the server adds `Content-Length`
+/// and `Connection` framing headers itself.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8".to_string(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    pub fn json(status: u16, body: impl Into<String>) -> Self {
+        Response {
+            status,
+            content_type: "application/json".to_string(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    pub fn not_found() -> Self {
+        Response::text(404, "not found\n")
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        414 => "URI Too Long",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+/// Connection handler: pure function from request to response.
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+// ---------------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------------
+
+/// Outcome of trying to parse one request off a connection.
+enum Parsed {
+    /// A well-formed request (second field: peer asked to keep the
+    /// connection alive).
+    Ok(Request, bool),
+    /// Clean EOF before the first byte of a request — peer is done.
+    Closed,
+    /// Read timed out or errored — close without a response.
+    IoGone,
+    /// Protocol violation: answer with this status (+ message) and close.
+    Bad(u16, &'static str),
+}
+
+enum Line {
+    Some(Vec<u8>),
+    Eof,
+    TooLong,
+    IoErr,
+}
+
+/// Read one CRLF- (or LF-) terminated line, enforcing a byte cap.  The
+/// cap is checked as bytes accumulate, so an attacker streaming an
+/// endless line is cut off at `max`, not buffered.
+fn read_line_limited<R: BufRead>(r: &mut R, max: usize) -> Line {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let buf = match r.fill_buf() {
+                Ok(b) => b,
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    return Line::IoErr
+                }
+                Err(_) => return Line::IoErr,
+            };
+            if buf.is_empty() {
+                return Line::Eof;
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    line.extend_from_slice(&buf[..i]);
+                    (true, i + 1)
+                }
+                None => {
+                    line.extend_from_slice(buf);
+                    (false, buf.len())
+                }
+            }
+        };
+        r.consume(used);
+        if line.len() > max {
+            return Line::TooLong;
+        }
+        if done {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return Line::Some(line);
+        }
+    }
+}
+
+fn parse_request<R: BufRead>(r: &mut R, cfg: &Http1Config) -> Parsed {
+    // Request line.
+    let line = match read_line_limited(r, cfg.max_request_line) {
+        Line::Some(l) => l,
+        Line::Eof => return Parsed::Closed,
+        Line::TooLong => return Parsed::Bad(414, "request line too long"),
+        Line::IoErr => return Parsed::IoGone,
+    };
+    if line.is_empty() {
+        return Parsed::Bad(400, "empty request line");
+    }
+    let line = match String::from_utf8(line) {
+        Ok(s) => s,
+        Err(_) => return Parsed::Bad(400, "request line is not utf-8"),
+    };
+    let mut parts = line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => return Parsed::Bad(400, "malformed request line"),
+    };
+    if method.len() > 16 || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Parsed::Bad(400, "malformed method");
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Parsed::Bad(400, "unsupported HTTP version"),
+    };
+    if !target.starts_with('/') {
+        return Parsed::Bad(400, "target must be origin-form");
+    }
+
+    // Headers.
+    let mut headers: Vec<(String, String)> = Vec::new();
+    let mut conn_close = !http11; // HTTP/1.0 defaults to close
+    let mut has_body = false;
+    loop {
+        let line = match read_line_limited(r, cfg.max_header_line) {
+            Line::Some(l) => l,
+            Line::Eof => return Parsed::Bad(400, "truncated headers"),
+            Line::TooLong => return Parsed::Bad(431, "header line too long"),
+            Line::IoErr => return Parsed::IoGone,
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= cfg.max_headers {
+            return Parsed::Bad(431, "too many headers");
+        }
+        let line = match String::from_utf8(line) {
+            Ok(s) => s,
+            Err(_) => return Parsed::Bad(400, "header is not utf-8"),
+        };
+        let Some((name, value)) = line.split_once(':') else {
+            return Parsed::Bad(400, "malformed header");
+        };
+        if name.is_empty() || name.contains(' ') {
+            return Parsed::Bad(400, "malformed header name");
+        }
+        let name = name.to_ascii_lowercase();
+        let value = value.trim().to_string();
+        match name.as_str() {
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    conn_close = true;
+                } else if v.contains("keep-alive") {
+                    conn_close = false;
+                }
+            }
+            "content-length" => {
+                if value.parse::<u64>().map(|n| n > 0).unwrap_or(true) {
+                    has_body = true;
+                }
+            }
+            "transfer-encoding" => has_body = true,
+            _ => {}
+        }
+        headers.push((name, value));
+    }
+    if has_body {
+        return Parsed::Bad(400, "request bodies not supported");
+    }
+    if method != "GET" && method != "HEAD" {
+        return Parsed::Bad(405, "only GET and HEAD are supported");
+    }
+
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+    Parsed::Ok(
+        Request {
+            method: method.to_string(),
+            path,
+            query,
+            headers,
+        },
+        !conn_close,
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Response writing
+// ---------------------------------------------------------------------------
+
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+    head_only: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        resp.status,
+        reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    if !head_only {
+        stream.write_all(&resp.body)?;
+    }
+    stream.flush()
+}
+
+/// Best-effort error reply on a raw stream (accept-queue overflow, parse
+/// failure). Errors writing it are ignored — the connection is being
+/// dropped either way.
+fn write_error(stream: &mut TcpStream, status: u16, msg: &str) {
+    let resp = Response::text(status, format!("{msg}\n"));
+    let _ = write_response(stream, &resp, false, false);
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// A running HTTP/1.1 server. Shut down explicitly with
+/// [`Http1Server::shutdown`] or implicitly on drop.
+pub struct Http1Server {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Http1Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving `handler` on a bounded worker pool.
+    pub fn bind(addr: &str, cfg: Http1Config, handler: Handler) -> Result<Http1Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("http1: bind {addr} failed"))?;
+        let local = listener.local_addr().context("http1: local_addr failed")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx): (SyncSender<TcpStream>, Receiver<TcpStream>) =
+            mpsc::sync_channel(cfg.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::new();
+        for i in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let handler = Arc::clone(&handler);
+            let cfg = cfg.clone();
+            let stop = Arc::clone(&stop);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("http1-worker-{i}"))
+                    .spawn(move || loop {
+                        let stream = {
+                            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+                            guard.recv()
+                        };
+                        match stream {
+                            Ok(s) => handle_connection(s, &cfg, &handler, &stop),
+                            Err(_) => break, // accept thread gone
+                        }
+                    })
+                    .context("http1: spawn worker failed")?,
+            );
+        }
+
+        let accept_stop = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("http1-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    match tx.try_send(stream) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(mut stream)) => {
+                            write_error(&mut stream, 503, "telemetry queue full");
+                        }
+                        Err(TrySendError::Disconnected(_)) => break,
+                    }
+                }
+                // tx drops here; workers drain the queue and exit.
+            })
+            .context("http1: spawn accept thread failed")?;
+
+        Ok(Http1Server {
+            local,
+            stop,
+            accept: Some(accept),
+            workers,
+        })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting, drain workers, join all threads. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Unblock accept(2): the flag is checked after each accept.
+        let _ = TcpStream::connect(self.local);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Http1Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_connection(stream: TcpStream, cfg: &Http1Config, handler: &Handler, stop: &AtomicBool) {
+    if stream.set_read_timeout(Some(cfg.read_timeout)).is_err() {
+        return;
+    }
+    let _ = stream.set_write_timeout(Some(cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut write_half = stream;
+    let mut reader = BufReader::new(read_half);
+
+    for served in 0..cfg.max_requests_per_conn {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        match parse_request(&mut reader, cfg) {
+            Parsed::Ok(req, peer_keep_alive) => {
+                let keep_alive = peer_keep_alive && served + 1 < cfg.max_requests_per_conn;
+                // A panicking handler must not take the worker thread (and
+                // its share of the pool) with it: answer 500 and carry on.
+                let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&req)))
+                    .unwrap_or_else(|_| Response::text(500, "handler panicked\n"));
+                let head_only = req.method == "HEAD";
+                if write_response(&mut write_half, &resp, keep_alive, head_only).is_err() {
+                    return;
+                }
+                if !keep_alive {
+                    return;
+                }
+            }
+            Parsed::Closed | Parsed::IoGone => return,
+            Parsed::Bad(status, msg) => {
+                write_error(&mut write_half, status, msg);
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// A scraped response.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub body: String,
+}
+
+impl HttpResponse {
+    pub fn is_ok(&self) -> bool {
+        (200..300).contains(&self.status)
+    }
+}
+
+/// Split `http://host:port/path` into (authority, path-with-query).
+fn split_url(url: &str) -> Result<(String, String)> {
+    let rest = url
+        .strip_prefix("http://")
+        .with_context(|| format!("only http:// URLs are supported, got {url}"))?;
+    let (authority, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    };
+    if authority.is_empty() {
+        bail!("URL has no host: {url}");
+    }
+    Ok((authority.to_string(), path.to_string()))
+}
+
+/// Blocking `GET url` with a deadline on connect, read and write.
+/// `Connection: close` is always sent, so one call is one TCP connection.
+pub fn http_get(url: &str, timeout: Duration) -> Result<HttpResponse> {
+    let (authority, path) = split_url(url)?;
+    let addr = authority
+        .to_socket_addrs()
+        .with_context(|| format!("cannot resolve {authority}"))?
+        .next()
+        .with_context(|| format!("no address for {authority}"))?;
+    let stream = TcpStream::connect_timeout(&addr, timeout)
+        .with_context(|| format!("connect {authority} failed"))?;
+    stream.set_read_timeout(Some(timeout)).ok();
+    stream.set_write_timeout(Some(timeout)).ok();
+    let mut write_half = stream.try_clone().context("clone stream failed")?;
+    write_half
+        .write_all(
+            format!("GET {path} HTTP/1.1\r\nHost: {authority}\r\nConnection: close\r\n\r\n")
+                .as_bytes(),
+        )
+        .context("write request failed")?;
+    write_half.flush().ok();
+
+    let mut reader = BufReader::new(stream);
+    let status_line = match read_line_limited(&mut reader, 4096) {
+        Line::Some(l) => String::from_utf8(l).context("status line is not utf-8")?,
+        _ => bail!("no response from {url}"),
+    };
+    let mut parts = status_line.split(' ');
+    let (proto, code) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if !proto.starts_with("HTTP/1.") {
+        bail!("malformed status line from {url}: {status_line:?}");
+    }
+    let status: u16 = code
+        .parse()
+        .with_context(|| format!("malformed status code from {url}: {status_line:?}"))?;
+
+    let mut content_length: Option<usize> = None;
+    loop {
+        let line = match read_line_limited(&mut reader, 16 * 1024) {
+            Line::Some(l) => l,
+            Line::Eof => bail!("truncated response headers from {url}"),
+            Line::TooLong => bail!("oversized response header from {url}"),
+            Line::IoErr => bail!("read timed out on response headers from {url}"),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let line = String::from_utf8_lossy(&line).to_string();
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse::<usize>().ok();
+            }
+        }
+    }
+
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body.resize(n, 0);
+            reader
+                .read_exact(&mut body)
+                .with_context(|| format!("truncated response body from {url}"))?;
+        }
+        None => {
+            reader
+                .read_to_end(&mut body)
+                .with_context(|| format!("reading response body from {url} failed"))?;
+        }
+    }
+    Ok(HttpResponse {
+        status,
+        body: String::from_utf8_lossy(&body).to_string(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo-ish handler: 200 with the path as body, 404 on `/missing`.
+    fn test_handler() -> Handler {
+        Arc::new(|req: &Request| {
+            if req.path == "/missing" {
+                Response::not_found()
+            } else if req.path == "/panic" {
+                panic!("handler bug under test");
+            } else {
+                Response::text(
+                    200,
+                    format!("path={} query={}", req.path, req.query.as_deref().unwrap_or("-")),
+                )
+            }
+        })
+    }
+
+    fn spawn(cfg: Http1Config) -> Http1Server {
+        Http1Server::bind("127.0.0.1:0", cfg, test_handler()).expect("bind")
+    }
+
+    fn url(srv: &Http1Server, path: &str) -> String {
+        format!("http://{}{}", srv.local_addr(), path)
+    }
+
+    /// Open a raw connection with client-side timeouts so no test can hang.
+    fn raw_conn(srv: &Http1Server) -> TcpStream {
+        let s = TcpStream::connect(srv.local_addr()).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.set_write_timeout(Some(Duration::from_secs(5))).unwrap();
+        s
+    }
+
+    /// Write `req` raw, read everything until the server closes.
+    fn raw_roundtrip(srv: &Http1Server, req: &[u8]) -> String {
+        let mut s = raw_conn(srv);
+        s.write_all(req).expect("write");
+        let mut out = String::new();
+        let _ = s.read_to_string(&mut out);
+        out
+    }
+
+    #[test]
+    fn get_roundtrip_via_client() {
+        let srv = spawn(Http1Config::default());
+        let resp = http_get(&url(&srv, "/hello?x=1"), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, "path=/hello query=x=1");
+        let resp = http_get(&url(&srv, "/missing"), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn keep_alive_serves_multiple_requests_on_one_connection() {
+        let srv = spawn(Http1Config::default());
+        let mut s = raw_conn(&srv);
+        for i in 0..3 {
+            s.write_all(format!("GET /r{i} HTTP/1.1\r\nHost: t\r\n\r\n").as_bytes())
+                .unwrap();
+            let mut buf = [0u8; 2048];
+            let n = s.read(&mut buf).expect("read");
+            let text = String::from_utf8_lossy(&buf[..n]).to_string();
+            assert!(text.starts_with("HTTP/1.1 200"), "resp {i}: {text}");
+            assert!(text.contains(&format!("path=/r{i}")), "resp {i}: {text}");
+            assert!(text.contains("Connection: keep-alive"), "resp {i}: {text}");
+        }
+    }
+
+    #[test]
+    fn per_connection_request_cap_closes_connection() {
+        let cfg = Http1Config {
+            max_requests_per_conn: 2,
+            ..Http1Config::default()
+        };
+        let srv = spawn(cfg);
+        let mut s = raw_conn(&srv);
+        // First response keeps the connection; the second (cap) closes it.
+        s.write_all(b"GET /a HTTP/1.1\r\nHost: t\r\n\r\nGET /b HTTP/1.1\r\nHost: t\r\n\r\n")
+            .unwrap();
+        let mut out = String::new();
+        let _ = s.read_to_string(&mut out);
+        assert!(out.contains("path=/a"), "{out}");
+        assert!(out.contains("path=/b"), "{out}");
+        assert!(out.contains("Connection: close"), "{out}");
+    }
+
+    #[test]
+    fn head_gets_headers_but_no_body() {
+        let srv = spawn(Http1Config::default());
+        let out = raw_roundtrip(&srv, b"HEAD /h HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+        assert!(out.contains("Content-Length:"), "{out}");
+        assert!(!out.contains("path=/h"), "HEAD must not carry a body: {out}");
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let srv = spawn(Http1Config::default());
+        let out = raw_roundtrip(&srv, b"GET /ten HTTP/1.0\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+        assert!(out.contains("Connection: close"), "{out}");
+    }
+
+    // -- malformed-input fuzzing (the parser must 4xx-or-close, never panic,
+    //    never hang; client-side timeouts in raw_conn bound every read) -----
+
+    #[test]
+    fn garbage_request_line_is_400() {
+        let srv = spawn(Http1Config::default());
+        let out = raw_roundtrip(&srv, b"\x01\x02\xff garbage\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    }
+
+    #[test]
+    fn bad_method_is_rejected() {
+        let srv = spawn(Http1Config::default());
+        // Unknown-but-well-formed method: parse succeeds, dispatch refuses.
+        let out = raw_roundtrip(&srv, b"BREW /pot HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 405"), "{out}");
+        // Lower-case (token rule violated) is a parse error.
+        let out = raw_roundtrip(&srv, b"get / HTTP/1.1\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        // Absurdly long method token.
+        let long = format!("{} / HTTP/1.1\r\n\r\n", "M".repeat(64));
+        let out = raw_roundtrip(&srv, long.as_bytes());
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    }
+
+    #[test]
+    fn oversized_request_line_is_414() {
+        let cfg = Http1Config {
+            max_request_line: 256,
+            ..Http1Config::default()
+        };
+        let srv = spawn(cfg);
+        let req = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(1024));
+        let out = raw_roundtrip(&srv, req.as_bytes());
+        assert!(out.starts_with("HTTP/1.1 414"), "{out}");
+    }
+
+    #[test]
+    fn oversized_header_line_is_431() {
+        let cfg = Http1Config {
+            max_header_line: 256,
+            ..Http1Config::default()
+        };
+        let srv = spawn(cfg);
+        let req = format!("GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n", "b".repeat(1024));
+        let out = raw_roundtrip(&srv, req.as_bytes());
+        assert!(out.starts_with("HTTP/1.1 431"), "{out}");
+    }
+
+    #[test]
+    fn too_many_headers_is_431() {
+        let cfg = Http1Config {
+            max_headers: 8,
+            ..Http1Config::default()
+        };
+        let srv = spawn(cfg);
+        let mut req = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..32 {
+            req.push_str(&format!("X-H{i}: v\r\n"));
+        }
+        req.push_str("\r\n");
+        let out = raw_roundtrip(&srv, req.as_bytes());
+        assert!(out.starts_with("HTTP/1.1 431"), "{out}");
+    }
+
+    #[test]
+    fn request_body_is_400() {
+        let srv = spawn(Http1Config::default());
+        let out = raw_roundtrip(
+            &srv,
+            b"GET / HTTP/1.1\r\nHost: t\r\nContent-Length: 5\r\n\r\nhello",
+        );
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        let out = raw_roundtrip(
+            &srv,
+            b"GET / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    }
+
+    #[test]
+    fn truncated_headers_then_close_gets_400_and_server_survives() {
+        let srv = spawn(Http1Config::default());
+        {
+            let mut s = raw_conn(&srv);
+            s.write_all(b"GET / HTTP/1.1\r\nX-Half: tru").unwrap();
+            drop(s); // close mid-request
+        }
+        {
+            let mut s = raw_conn(&srv);
+            // Clean close after headers started → 400 "truncated headers".
+            s.write_all(b"GET / HTTP/1.1\r\nX-Half: whole\r\n").unwrap();
+            let _ = s.shutdown(std::net::Shutdown::Write);
+            let mut out = String::new();
+            let _ = s.read_to_string(&mut out);
+            assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        }
+        // Server still answers a well-formed request afterwards.
+        let resp = http_get(&url(&srv, "/alive"), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn early_close_before_any_bytes_is_silent() {
+        let srv = spawn(Http1Config::default());
+        for _ in 0..4 {
+            let s = raw_conn(&srv);
+            drop(s);
+        }
+        let resp = http_get(&url(&srv, "/still-here"), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn pipelined_garbage_after_valid_request_closes_with_4xx() {
+        let srv = spawn(Http1Config::default());
+        let mut s = raw_conn(&srv);
+        s.write_all(b"GET /ok HTTP/1.1\r\nHost: t\r\n\r\n?!?! not http\r\n\r\n")
+            .unwrap();
+        let mut out = String::new();
+        let _ = s.read_to_string(&mut out);
+        assert!(out.contains("path=/ok"), "{out}");
+        assert!(out.contains("HTTP/1.1 400"), "pipelined garbage must 400: {out}");
+    }
+
+    #[test]
+    fn idle_connection_is_dropped_after_read_timeout() {
+        let cfg = Http1Config {
+            read_timeout: Duration::from_millis(100),
+            ..Http1Config::default()
+        };
+        let srv = spawn(cfg);
+        let mut s = raw_conn(&srv);
+        // Send nothing; the server should drop us within ~read_timeout.
+        let mut buf = [0u8; 64];
+        let n = s.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "expected EOF from idle-timeout close");
+    }
+
+    #[test]
+    fn handler_panic_is_500_and_pool_survives() {
+        let srv = spawn(Http1Config::default());
+        let resp = http_get(&url(&srv, "/panic"), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 500);
+        // Same worker pool still serves afterwards (repeat past pool size).
+        for _ in 0..4 {
+            let resp = http_get(&url(&srv, "/after"), Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.status, 200);
+        }
+    }
+
+    #[test]
+    fn shutdown_joins_and_port_stops_answering() {
+        let mut srv = spawn(Http1Config::default());
+        let addr = srv.local_addr();
+        assert_eq!(
+            http_get(&format!("http://{addr}/x"), Duration::from_secs(5))
+                .unwrap()
+                .status,
+            200
+        );
+        srv.shutdown();
+        srv.shutdown(); // idempotent
+        let after = http_get(&format!("http://{addr}/x"), Duration::from_millis(500));
+        assert!(after.is_err(), "server must stop serving after shutdown");
+    }
+
+    #[test]
+    fn split_url_accepts_bare_authority_and_rejects_https() {
+        assert_eq!(
+            split_url("http://127.0.0.1:9100").unwrap(),
+            ("127.0.0.1:9100".to_string(), "/".to_string())
+        );
+        assert_eq!(
+            split_url("http://h:1/metrics?x=1").unwrap(),
+            ("h:1".to_string(), "/metrics?x=1".to_string())
+        );
+        assert!(split_url("https://h/").is_err());
+        assert!(split_url("http:///nohost").is_err());
+    }
+}

@@ -247,6 +247,36 @@ pub fn colwise_quant_into(x: &Matrix, codes: &mut MatrixI8, state: &mut [f32]) {
     }
 }
 
+/// Tensor-wise int8 round-trip statistics for live telemetry: the
+/// relative L2 quantization error (`‖x − deq(quant(x))‖₂ / ‖x‖₂`) and
+/// the clip rate (fraction of codes saturated at ±127 — the absmax
+/// element always saturates, so a nonzero tensor's rate is ≥ 1/n).  One
+/// streaming pass with no code buffer, cheap enough for the trainer's
+/// probe cadence; these are the per-layer gauges the telemetry plane
+/// exposes and a dynamic block-level fallback policy would consume.
+pub fn tensorwise_quant_stats(x: &[f32]) -> (f32, f32) {
+    if x.is_empty() {
+        return (0.0, 0.0);
+    }
+    let absmax = safe_absmax(x.iter().fold(0.0f32, |m, v| m.max(v.abs())));
+    let scale = INT8_MAX / absmax;
+    let step = absmax / INT8_MAX;
+    let mut err_ss = 0.0f64;
+    let mut x_ss = 0.0f64;
+    let mut clipped = 0usize;
+    for &v in x {
+        let q = quantize_one(v, scale);
+        if q == 127 || q == -127 {
+            clipped += 1;
+        }
+        let d = (v - q as f32 * step) as f64;
+        err_ss += d * d;
+        x_ss += (v as f64) * (v as f64);
+    }
+    let rel = if x_ss > 0.0 { (err_ss / x_ss).sqrt() as f32 } else { 0.0 };
+    (rel, clipped as f32 / x.len() as f32)
+}
+
 /// Dequantize row-wise codes back to f32 (SwitchBackM backward path).
 pub fn dequant_rowwise(q: &QuantizedRow) -> Matrix {
     let mut out = Matrix::zeros(q.codes.rows, q.codes.cols);
@@ -297,6 +327,26 @@ mod tests {
                 assert!((x.at(r, c) - back.at(r, c)).abs() <= 0.5 * step + 1e-7);
             }
         }
+    }
+
+    #[test]
+    fn quant_stats_error_and_clip_rate() {
+        // exactly representable tensor: absmax 1.27, codes step 0.01
+        let x = vec![1.27, -1.27, 0.0, 0.64];
+        let (err, clip) = tensorwise_quant_stats(&x);
+        // 0.64 → 64 codes exactly; everything round-trips with tiny error
+        assert!(err < 1e-3, "err {err}");
+        assert!((clip - 0.5).abs() < 1e-6, "clip {clip}"); // the two ±absmax
+        // all-zero tensor: no error, nothing saturates (absmax floor = 1.0)
+        assert_eq!(tensorwise_quant_stats(&[0.0; 8]), (0.0, 0.0));
+        assert_eq!(tensorwise_quant_stats(&[]), (0.0, 0.0));
+        // a heavy-tailed tensor has a real relative error, bounded by the
+        // half-step of its own scale
+        let mut rng = Rng::seed(9);
+        let m = Matrix::randn(8, 64, 1.0, &mut rng);
+        let (err, clip) = tensorwise_quant_stats(&m.data);
+        assert!(err > 0.0 && err < 0.05, "err {err}");
+        assert!(clip >= 1.0 / 512.0 && clip < 0.1, "clip {clip}");
     }
 
     #[test]

@@ -19,7 +19,8 @@ pub use fp8::{fp8_round, fp8_round_slice, Fp8Format, E4M3, E5M2};
 pub use int8::{
     colwise_quant, colwise_quant_into, dequant_rowwise, quantize_row_into,
     rowwise_quant, rowwise_quant_into, tensorwise_quant, tensorwise_quant_into,
-    tensorwise_quant_transpose, tensorwise_quant_transpose_into, QuantScheme,
+    tensorwise_quant_stats, tensorwise_quant_transpose,
+    tensorwise_quant_transpose_into, QuantScheme,
     QuantScratch, Quantized, QuantizedCol, QuantizedRow, QuantizedTensor,
     INT8_MAX,
 };

@@ -21,10 +21,11 @@ use super::engine::Engine;
 use super::metrics::ServeSnapshot;
 use super::standby::{validate_and_promote, CanarySet};
 use super::EncodeInput;
+use crate::net::http_get;
 use crate::tensor::Rng;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// One loadgen run's knobs.
 #[derive(Debug, Clone)]
@@ -43,6 +44,14 @@ pub struct LoadgenConfig {
     /// tail latency is measured *across* repeated generations and the
     /// promotions land in the snapshot's standby counters.
     pub swap_every: usize,
+    /// scrape `scrape_url` every N ms from a rider thread while the
+    /// closed loop runs (0 = no scraper).  The report gains scrape
+    /// counts and the p99 scrape latency, so BENCH_serve.json can gate
+    /// "a concurrent scraper neither fails nor moves the serve tail".
+    pub scrape_every_ms: u64,
+    /// `/metrics` URL the scraper hits (required when `scrape_every_ms`
+    /// is nonzero)
+    pub scrape_url: Option<String>,
 }
 
 impl Default for LoadgenConfig {
@@ -54,6 +63,8 @@ impl Default for LoadgenConfig {
             image_fraction: 0.7,
             seed: 1234,
             swap_every: 0,
+            scrape_every_ms: 0,
+            scrape_url: None,
         }
     }
 }
@@ -70,6 +81,14 @@ pub struct LoadgenReport {
     pub wall_secs: f64,
     pub requests_per_sec: f64,
     pub errors: u64,
+    /// scrape cadence of the run in ms (0 = no scraper attached)
+    pub scrape_every_ms: u64,
+    /// well-formed `/metrics` scrapes completed by the rider thread
+    pub scrapes: u64,
+    /// scrapes that failed or returned a malformed exposition
+    pub scrape_errors: u64,
+    /// p99 scrape latency in µs (0.0 when no scraper)
+    pub scrape_p99_us: f64,
     pub snapshot: ServeSnapshot,
 }
 
@@ -91,6 +110,17 @@ impl LoadgenReport {
                 self.snapshot.standby_promotions,
                 self.snapshot.swap_pause_p99_us,
                 self.snapshot.prepare_p99_ms,
+            );
+        }
+        if self.scrape_every_ms > 0 {
+            println!(
+                "  [{}] scrape-every {} ms: {} scrapes, {} errors, \
+                 scrape p99 {:.1} µs",
+                self.kind,
+                self.scrape_every_ms,
+                self.scrapes,
+                self.scrape_errors,
+                self.scrape_p99_us,
             );
         }
     }
@@ -145,9 +175,15 @@ pub fn planned_swaps(issued: usize, swap_every: usize) -> usize {
 /// percentiles span repeated hot-swaps instead of one static generation.
 pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
     assert!(cfg.population > 0, "population must be positive");
+    assert!(
+        cfg.scrape_every_ms == 0 || cfg.scrape_url.is_some(),
+        "scrape_every_ms needs scrape_url"
+    );
     let population = Arc::new(build_population(engine, cfg));
     let next = Arc::new(AtomicUsize::new(0));
     let errors = Arc::new(AtomicU64::new(0));
+    let scrape_lat = Mutex::new(Vec::<u64>::new());
+    let scrape_errors = AtomicU64::new(0);
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for _ in 0..cfg.concurrency.max(1) {
@@ -215,8 +251,33 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
                 }
             });
         }
+        if cfg.scrape_every_ms > 0 {
+            let url = cfg.scrape_url.clone().expect("checked above");
+            let next = Arc::clone(&next);
+            let (lat, errs) = (&scrape_lat, &scrape_errors);
+            s.spawn(move || {
+                // one scrape happens before the exit check, so even a
+                // run the clients finish instantly records `scrapes ≥ 1`
+                loop {
+                    let st0 = Instant::now();
+                    match http_get(&url, Duration::from_secs(5)) {
+                        Ok(resp) if resp.is_ok() && exposition_well_formed(&resp.body) => {
+                            lat.lock().unwrap().push(st0.elapsed().as_micros() as u64);
+                        }
+                        _ => {
+                            errs.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    if next.load(Ordering::Relaxed) >= cfg.requests {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(cfg.scrape_every_ms));
+                }
+            });
+        }
     });
     let wall = t0.elapsed().as_secs_f64();
+    let mut lat = scrape_lat.into_inner().unwrap_or_else(|e| e.into_inner());
     LoadgenReport {
         kind: engine.kind_label().to_string(),
         concurrency: cfg.concurrency,
@@ -225,8 +286,34 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
         wall_secs: wall,
         requests_per_sec: cfg.requests as f64 / wall.max(1e-9),
         errors: errors.load(Ordering::Relaxed),
+        scrape_every_ms: cfg.scrape_every_ms,
+        scrapes: lat.len() as u64,
+        scrape_errors: scrape_errors.load(Ordering::Relaxed),
+        scrape_p99_us: p99_us(&mut lat),
         snapshot: engine.metrics().snapshot(),
     }
+}
+
+/// A minimal wire-validity check on one `/metrics` body: every
+/// non-comment line is exactly `name value`.  The scraper counts a
+/// malformed exposition as an error, so the benchdiff gate
+/// (`scrape_errors == 0`) asserts *parseable* scrapes, not just 200s.
+fn exposition_well_formed(body: &str) -> bool {
+    !body.is_empty()
+        && body
+            .lines()
+            .filter(|l| !l.starts_with('#') && !l.is_empty())
+            .all(|l| l.split(' ').count() == 2)
+}
+
+/// p99 over raw µs samples (sorts in place; 0.0 when empty).
+fn p99_us(lat: &mut [u64]) -> f64 {
+    if lat.is_empty() {
+        return 0.0;
+    }
+    lat.sort_unstable();
+    let idx = ((lat.len() as f64) * 0.99).ceil() as usize;
+    lat[idx.clamp(1, lat.len()) - 1] as f64
 }
 
 /// Write `BENCH_serve.json`: machine-readable perf trajectory artifact.
@@ -245,6 +332,12 @@ pub fn write_bench_json(
             .field_u64("requests", r.requests as u64);
         if r.swap_every > 0 {
             w.field_u64("swap_every", r.swap_every as u64);
+        }
+        if r.scrape_every_ms > 0 {
+            w.field_u64("scrape_every_ms", r.scrape_every_ms)
+                .field_u64("scrapes", r.scrapes)
+                .field_u64("scrape_errors", r.scrape_errors)
+                .field_f32("scrape_p99_us", r.scrape_p99_us as f32);
         }
         w.field_f32("wall_secs", r.wall_secs as f32)
             .field_f32("requests_per_sec", r.requests_per_sec as f32)
@@ -308,6 +401,7 @@ mod tests {
             image_fraction: 0.5,
             seed: 9,
             swap_every: 0,
+            ..LoadgenConfig::default()
         };
         let rep = run_loadgen(&eng, &cfg);
         assert_eq!(rep.errors, 0);
@@ -333,6 +427,7 @@ mod tests {
             image_fraction: 1.0,
             seed: 2,
             swap_every: 0,
+            ..LoadgenConfig::default()
         };
         let rep = run_loadgen(&eng, &cfg);
         let path = std::env::temp_dir().join("bench_serve_test.json");
@@ -366,6 +461,7 @@ mod tests {
             image_fraction: 0.5,
             seed: 11,
             swap_every: 100,
+            ..LoadgenConfig::default()
         };
         let rep = run_loadgen(&eng, &cfg);
         assert_eq!(rep.errors, 0, "swaps must not fail requests");
@@ -393,6 +489,67 @@ mod tests {
         eng.shutdown();
     }
 
+    /// The scraper-present run: a rider thread scrapes a real localhost
+    /// `/metrics` plane over the engine under test while the closed loop
+    /// runs, every scrape is well-formed, and the scrape latency stats
+    /// land in the report + JSON entry (the benchdiff gate's inputs).
+    #[test]
+    fn scraper_rides_along_and_records_latency() {
+        use crate::trace::{Readiness, TelemetryConfig, TelemetryServer};
+        use std::sync::Arc;
+        let eng = Arc::new(tiny_engine(4096));
+        let snap_eng = Arc::clone(&eng);
+        let mut srv = TelemetryServer::bind(
+            "127.0.0.1:0",
+            TelemetryConfig {
+                mode: "serve",
+                snapshot: Arc::new(move || snap_eng.metrics().registry().snapshot()),
+                ready: Arc::new(|| Readiness::new(true)),
+                flight: None,
+                http: Default::default(),
+            },
+        )
+        .expect("bind telemetry");
+        let cfg = LoadgenConfig {
+            requests: 200,
+            concurrency: 4,
+            population: 50,
+            image_fraction: 0.5,
+            seed: 21,
+            scrape_every_ms: 1,
+            scrape_url: Some(format!("{}/metrics", srv.url())),
+            ..LoadgenConfig::default()
+        };
+        let rep = run_loadgen(&eng, &cfg);
+        assert_eq!(rep.errors, 0);
+        assert!(rep.scrapes >= 1, "rider must complete at least one scrape");
+        assert_eq!(rep.scrape_errors, 0, "every scrape must be well-formed");
+        assert!(rep.scrape_p99_us > 0.0);
+        let path = std::env::temp_dir().join("bench_serve_scrape_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_bench_json(&path, 8, 1000, &[rep]).unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let r0 = &parse(&doc).unwrap().get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("scrape_every_ms").unwrap().as_usize(), Some(1));
+        assert!(r0.get("scrapes").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(r0.get("scrape_errors").unwrap().as_usize(), Some(0));
+        assert!(r0.get("scrape_p99_us").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path);
+        srv.shutdown();
+        drop(eng); // Engine::drop joins the worker pool
+    }
+
+    #[test]
+    fn p99_and_exposition_checks() {
+        assert_eq!(p99_us(&mut []), 0.0);
+        assert_eq!(p99_us(&mut [7]), 7.0);
+        let mut lat: Vec<u64> = (1..=100).collect();
+        assert_eq!(p99_us(&mut lat), 99.0);
+        assert!(exposition_well_formed("# HELP x\na_total 1\nb 2.5"));
+        assert!(!exposition_well_formed(""));
+        assert!(!exposition_well_formed("torn line with spaces"));
+    }
+
     #[test]
     fn population_mixes_modalities() {
         let eng = tiny_engine(0);
@@ -403,6 +560,7 @@ mod tests {
             image_fraction: 0.5,
             seed: 4,
             swap_every: 0,
+            ..LoadgenConfig::default()
         };
         let pop = build_population(&eng, &cfg);
         let imgs = pop.iter().filter(|p| p.is_image()).count();

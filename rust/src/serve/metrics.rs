@@ -18,7 +18,7 @@
 //! Prometheus-style expositions.
 
 use crate::trace::registry::{
-    Counter, Hist, HistSummary, MetricValue, Registry, UpdateGuard,
+    Counter, Gauge, Hist, HistSummary, MetricValue, Registry, UpdateGuard,
 };
 use crate::util::json::ObjWriter;
 
@@ -66,6 +66,10 @@ pub struct ServeMetrics {
     /// off-thread candidate preparation time (CRC-checked load +
     /// re-quantize + canary encode), ns
     pub prepare_ns: Hist,
+    /// 1.0 while a standby candidate is mid prepare→promote, else 0.0 —
+    /// the `/readyz` "not mid-promotion" signal, also visible on
+    /// `/metrics` as `serve_standby_promoting`
+    standby_promoting: Gauge,
 }
 
 impl Default for ServeMetrics {
@@ -98,6 +102,7 @@ impl ServeMetrics {
             standby_rollbacks: c("serve.standby_rollbacks"),
             standby_quarantines: c("serve.standby_quarantines"),
             prepare_ns: h("serve.prepare_ns"),
+            standby_promoting: registry.gauge("serve.standby_promoting"),
             registry,
         }
     }
@@ -201,6 +206,29 @@ impl ServeMetrics {
     /// Record a quarantined snapshot (retry budget exhausted).
     pub fn record_quarantine(&self) {
         self.standby_quarantines.inc();
+    }
+
+    /// Mark the standby watcher as mid prepare→promote for the lifetime
+    /// of the returned guard (panic-safe: the flag clears on drop either
+    /// way).  `/readyz` reports not-ready while the mark is held.
+    pub fn mark_promoting(&self) -> PromotionMark<'_> {
+        self.standby_promoting.set(1.0);
+        PromotionMark(self)
+    }
+
+    /// Is a standby candidate mid prepare→promote right now?
+    pub fn is_promoting(&self) -> bool {
+        self.standby_promoting.get() != 0.0
+    }
+}
+
+/// RAII guard from [`ServeMetrics::mark_promoting`].
+#[must_use = "the promoting mark lasts until the guard is dropped"]
+pub struct PromotionMark<'a>(&'a ServeMetrics);
+
+impl Drop for PromotionMark<'_> {
+    fn drop(&mut self) {
+        self.0.standby_promoting.set(0.0);
     }
 }
 
@@ -359,6 +387,20 @@ mod tests {
         let v = parse(&q.snapshot().to_json()).unwrap();
         assert_eq!(v.get("standby_quarantines").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("standby_promotions").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn promoting_mark_sets_and_clears_the_gauge() {
+        let m = ServeMetrics::new();
+        assert!(!m.is_promoting());
+        {
+            let _mark = m.mark_promoting();
+            assert!(m.is_promoting());
+            // visible on the wire exposition too
+            let text = m.registry().snapshot().to_prometheus();
+            assert!(text.contains("serve_standby_promoting 1"), "{text}");
+        }
+        assert!(!m.is_promoting());
     }
 
     #[test]

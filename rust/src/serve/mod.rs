@@ -61,7 +61,7 @@ pub use cache::ShardedLru;
 pub use encoder::{ClipEncoder, EncoderConfig, EncoderWeights};
 pub use engine::{EncodeResponse, Engine, ServeConfig};
 pub use loadgen::{planned_swaps, run_loadgen, write_bench_json, LoadgenConfig, LoadgenReport};
-pub use metrics::{ServeMetrics, ServeSnapshot};
+pub use metrics::{PromotionMark, ServeMetrics, ServeSnapshot};
 pub use standby::{CanarySet, Promotion, Standby, StandbyConfig, StandbyEvent, StandbyHandle};
 
 /// One encode request's payload: a patchified image or a token sequence.

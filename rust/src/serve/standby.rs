@@ -468,6 +468,9 @@ impl Standby {
     /// the rollback anchor — untouched.
     fn prepare_and_promote(&mut self, step: u64, path: &std::path::Path) -> StandbyEvent {
         let _sp = crate::trace::span("standby.prepare", "standby");
+        // `/readyz` reports not-ready for the whole prepare→promote
+        // window; the guard clears the flag on every exit path
+        let _promoting = self.engine.metrics().mark_promoting();
         let t0 = Instant::now();
         let reject = |me: &Self, reason: String| -> StandbyEvent {
             me.engine.metrics().record_reject();

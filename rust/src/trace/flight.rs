@@ -86,6 +86,12 @@ impl FlightRecorder {
         self.frames.len()
     }
 
+    /// Step of the newest frame (0 while empty) — the `/flight`
+    /// endpoint's trigger step for a live scrape.
+    pub fn last_step(&self) -> u64 {
+        self.frames.back().map_or(0, |f| f.step)
+    }
+
     pub fn is_empty(&self) -> bool {
         self.frames.is_empty()
     }

@@ -16,11 +16,16 @@
 //!   JSON bundle when the spike detector or rollback guard fires.
 //! * [`export`] — raw span dumps, Chrome trace-event/Perfetto conversion
 //!   and the span-time table behind the `switchback trace` CLI.
+//! * [`telemetry_http`] — the live scrape surface over all of the above:
+//!   `/metrics`, `/metrics.json`, `/healthz`, `/readyz`, `/trace` and
+//!   `/flight` served by the hand-rolled [`crate::net::http1`] stack,
+//!   wired in via `--telemetry-addr` on `serve`/`train`/`pipeline`.
 
 pub mod export;
 pub mod flight;
 pub mod registry;
 pub mod span;
+pub mod telemetry_http;
 
 pub use export::{
     aggregate, chrome_trace_json, parse_span_dump, span_dump_json, top_table,
@@ -32,6 +37,7 @@ pub use registry::{
     Registry,
 };
 pub use span::{
-    calibrate_span_cost_ns, enabled, event_at, now_ns, set_enabled, span,
-    span_n, spans_recorded, take, Span, SpanGuard, TraceDump, RING_CAP,
+    calibrate_span_cost_ns, enabled, event_at, now_ns, peek, set_enabled,
+    span, span_n, spans_recorded, take, Span, SpanGuard, TraceDump, RING_CAP,
 };
+pub use telemetry_http::{Readiness, TelemetryConfig, TelemetryServer};

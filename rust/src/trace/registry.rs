@@ -235,6 +235,53 @@ impl MetricsSnapshot {
             .map(|i| &self.entries[i].1)
     }
 
+    /// Merge `other` into `self` (the telemetry plane exposes one scrape
+    /// surface over an engine-owned registry *plus* the global one).  On
+    /// a duplicate name, `self`'s entry wins — registries use disjoint
+    /// prefixes (`serve.` / `train.` / `ckpt.`), so a collision here is a
+    /// naming bug, not data to aggregate.
+    pub fn merged(mut self, other: MetricsSnapshot) -> MetricsSnapshot {
+        self.entries.extend(other.entries);
+        // Stable sort: for equal names, self's entry stays first and
+        // dedup keeps it.
+        self.entries.sort_by(|a, b| a.0.cmp(&b.0));
+        self.entries.dedup_by(|a, b| a.0 == b.0);
+        self
+    }
+
+    /// Exposition sample names, one per entry in entry order: sanitized
+    /// via [`prom_name`], counters suffixed `_total` (Prometheus
+    /// convention), and sanitization collisions (`a.b` and `a_b` both
+    /// sanitize to `a_b`) disambiguated deterministically — the first
+    /// entry in name-sorted order keeps the base name, later ones get
+    /// `_2`, `_3`, … — so no two entries ever emit the same sample name.
+    fn exposition_names(&self) -> Vec<String> {
+        let mut taken: std::collections::HashSet<String> = std::collections::HashSet::new();
+        self.entries
+            .iter()
+            .map(|(name, v)| {
+                let mut base = prom_name(name);
+                if matches!(v, MetricValue::Counter(_)) {
+                    base.push_str("_total");
+                }
+                let chosen = if taken.contains(&base) {
+                    let mut i = 2usize;
+                    loop {
+                        let cand = format!("{base}_{i}");
+                        if !taken.contains(&cand) {
+                            break cand;
+                        }
+                        i += 1;
+                    }
+                } else {
+                    base
+                };
+                taken.insert(chosen.clone());
+                chosen
+            })
+            .collect()
+    }
+
     /// One JSON object: counters/gauges as numbers, histograms as nested
     /// `{count, sum, max, p50, p95, p99}` objects.
     pub fn to_json(&self) -> String {
@@ -262,13 +309,15 @@ impl MetricsSnapshot {
         w.finish()
     }
 
-    /// Prometheus-style text exposition: counters/gauges as single
-    /// samples, histograms as summaries (`{quantile=...}` + `_sum` +
-    /// `_count`).
+    /// Prometheus-style text exposition: counters as `_total` samples,
+    /// gauges as single samples, histograms as summaries
+    /// (`{quantile=...}` + `_sum` + `_count`).  Sample names come from
+    /// [`Self::exposition_names`], so sanitization collisions are
+    /// disambiguated instead of silently emitting duplicate samples.
     pub fn to_prometheus(&self) -> String {
         let mut out = String::new();
-        for (name, v) in &self.entries {
-            let n = prom_name(name);
+        let names = self.exposition_names();
+        for ((_, v), n) in self.entries.iter().zip(names) {
             match v {
                 MetricValue::Counter(c) => {
                     let _ = writeln!(out, "# TYPE {n} counter\n{n} {c}");
@@ -366,8 +415,8 @@ mod tests {
         let h = r.histogram("serve.request_ns");
         h.record(2_000_000);
         let text = r.snapshot().to_prometheus();
-        assert!(text.contains("# TYPE serve_requests counter"), "{text}");
-        assert!(text.contains("serve_requests 5"), "{text}");
+        assert!(text.contains("# TYPE serve_requests_total counter"), "{text}");
+        assert!(text.contains("serve_requests_total 5"), "{text}");
         assert!(text.contains("# TYPE train_lr gauge"), "{text}");
         assert!(text.contains("# TYPE serve_request_ns summary"), "{text}");
         assert!(text.contains("serve_request_ns{quantile=\"0.5\"}"), "{text}");
@@ -376,6 +425,51 @@ mod tests {
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             assert_eq!(line.split(' ').count(), 2, "bad exposition line {line:?}");
         }
+    }
+
+    /// `a.b` and `a_b` both sanitize to `a_b`; exposition must not emit
+    /// two samples under one name — later entries (name-sorted order) are
+    /// deterministically suffixed `_2`, `_3`, ….
+    #[test]
+    fn prom_name_collisions_are_disambiguated() {
+        let r = Registry::new();
+        r.counter("a.b").add(1);
+        r.counter("a_b").add(2);
+        r.gauge("a.b.2").set(9.0); // sanitizes to a_b_2, adjacent to the suffix space
+        let s = r.snapshot();
+        let text = s.to_prometheus();
+        // name-sorted entry order: "a.b" < "a.b.2" < "a_b" ('.' < '_')
+        assert!(text.contains("a_b_total 1"), "{text}");
+        assert!(text.contains("a_b_2 9"), "{text}");
+        assert!(text.contains("a_b_total_2 2"), "{text}");
+        // no duplicate sample names anywhere
+        let mut sample_names: Vec<&str> = text
+            .lines()
+            .filter(|l| !l.starts_with('#') && !l.is_empty())
+            .map(|l| l.split(' ').next().unwrap())
+            .collect();
+        let total = sample_names.len();
+        sample_names.sort_unstable();
+        sample_names.dedup();
+        assert_eq!(sample_names.len(), total, "duplicate sample name: {text}");
+        // deterministic: same snapshot → identical exposition
+        assert_eq!(text, s.to_prometheus());
+    }
+
+    #[test]
+    fn merged_unions_registries_and_prefers_self_on_clash() {
+        let a = Registry::new();
+        a.counter("serve.requests").add(4);
+        a.counter("shared").add(1);
+        let b = Registry::new();
+        b.gauge("train.lr").set(0.5);
+        b.counter("shared").add(99);
+        let m = a.snapshot().merged(b.snapshot());
+        let names: Vec<&str> = m.entries.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["serve.requests", "shared", "train.lr"]);
+        assert_eq!(m.get("shared"), Some(&MetricValue::Counter(1)));
+        // merged snapshots still binary-search correctly
+        assert_eq!(m.get("serve.requests"), Some(&MetricValue::Counter(4)));
     }
 
     /// A snapshot racing grouped two-counter updates never observes the

@@ -211,6 +211,22 @@ pub fn take() -> TraceDump {
     TraceDump { spans, dropped: DROPPED.swap(0, Ordering::Relaxed) }
 }
 
+/// Non-destructive [`take`]: drain the calling thread's buffer into the
+/// ring, then *copy* the ring instead of emptying it, leaving the
+/// `dropped` count in place.  This is the `/trace` telemetry endpoint's
+/// read — a live scrape must not steal the spans the end-of-run
+/// `--trace-out` dump is still going to collect.
+pub fn peek() -> TraceDump {
+    let _ = TLS.try_with(|cell| {
+        if let Ok(mut tb) = cell.try_borrow_mut() {
+            flush_into_ring(&mut tb.buf);
+        }
+    });
+    let mut spans = lock(&RING).clone();
+    spans.sort_by_key(|s| (s.start_ns, s.tid));
+    TraceDump { spans, dropped: DROPPED.load(Ordering::Relaxed) }
+}
+
 /// Measured cost of one span record, in nanoseconds: two clock reads plus
 /// a buffered push with the same amortized-drain shape as the live path.
 /// Feeds `trace_overhead_pct = spans_per_step * cost / step_time`, the
@@ -325,6 +341,20 @@ mod tests {
         let got = named(&take(), "trace.test.order");
         let ts: Vec<u64> = got.iter().map(|s| s.start_ns).collect();
         assert_eq!(ts, vec![100, 300, 500]);
+    }
+
+    #[test]
+    fn peek_is_non_destructive() {
+        let _l = lock(&RING_TEST_LOCK);
+        let _ = take(); // start from an empty ring
+        event_at("trace.test.peek", "test", 10, 1, 0);
+        event_at("trace.test.peek", "test", 20, 1, 0);
+        let p1 = named(&peek(), "trace.test.peek");
+        let p2 = named(&peek(), "trace.test.peek");
+        assert_eq!(p1.len(), 2);
+        assert_eq!(p1, p2, "peek must not drain the ring");
+        // take() still sees everything afterwards
+        assert_eq!(named(&take(), "trace.test.peek").len(), 2);
     }
 
     #[test]

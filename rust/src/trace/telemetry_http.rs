@@ -1,0 +1,305 @@
+//! The live telemetry plane: read-only HTTP endpoints over the tracing
+//! substrate, served by [`crate::net::http1`].
+//!
+//! Until now every observability surface in this crate was post-hoc —
+//! dumps written after the run.  This module is the live view: attach
+//! `--telemetry-addr HOST:PORT` to `serve`, `train` or `pipeline` and
+//! scrape while the process works.  Endpoints:
+//!
+//! | path            | body                                             |
+//! |-----------------|--------------------------------------------------|
+//! | `/metrics`      | Prometheus text exposition of a live snapshot    |
+//! | `/metrics.json` | the same snapshot as one JSON object             |
+//! | `/healthz`      | process liveness (always `200` while serving)    |
+//! | `/readyz`       | mode-specific readiness, `200`/`503` + detail    |
+//! | `/trace`        | Chrome trace-event JSON of the current span ring |
+//! | `/flight`       | latest flight-recorder window as forensic JSON   |
+//!
+//! The module knows nothing about engines or trainers: callers hand in
+//! closures ([`TelemetryConfig`]) producing the metrics snapshot, the
+//! readiness verdict and the flight dump.  That keeps `trace` free of a
+//! dependency on `serve`/`train` and makes the endpoints trivially
+//! testable.  `/metrics` takes a full consistent
+//! [`Registry::snapshot`](crate::trace::Registry::snapshot) per scrape —
+//! grouped cross-metric invariants (promotions ≤ swaps) hold in every
+//! response, which the wire-level torn-snapshot test below pins.
+//! `/trace` uses the non-destructive [`super::span::peek`], so a scrape
+//! never steals spans from an end-of-run `--trace-out` dump.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::net::http1::{Handler, Http1Config, Http1Server, Request, Response};
+use crate::trace::registry::MetricsSnapshot;
+use crate::util::json::ObjWriter;
+
+/// A `/readyz` verdict: overall flag plus named detail fields.
+#[derive(Debug, Clone, Default)]
+pub struct Readiness {
+    pub ready: bool,
+    /// `(field, raw-JSON value)` pairs rendered into the response body —
+    /// e.g. `("generation", "3")`, `("promoting", "false")`.
+    pub detail: Vec<(String, String)>,
+}
+
+impl Readiness {
+    pub fn new(ready: bool) -> Self {
+        Readiness { ready, detail: Vec::new() }
+    }
+
+    /// Attach a detail field; `value` must already be valid raw JSON
+    /// (number, `true`/`false`, or a quoted string).
+    pub fn with(mut self, field: &str, value: impl Into<String>) -> Self {
+        self.detail.push((field.to_string(), value.into()));
+        self
+    }
+
+    fn body(&self, mode: &str) -> String {
+        let mut w = ObjWriter::new();
+        w.field_bool("ready", self.ready)
+            .field_str("mode", mode);
+        for (k, v) in &self.detail {
+            w.field_raw(k, v);
+        }
+        w.finish()
+    }
+}
+
+/// Provider closures wiring a process's live state into the endpoints.
+pub struct TelemetryConfig {
+    /// `"serve"`, `"train"` or `"pipeline"` — surfaced in `/healthz` and
+    /// `/readyz`.
+    pub mode: &'static str,
+    /// Fresh consistent snapshot for `/metrics` + `/metrics.json`.
+    pub snapshot: Arc<dyn Fn() -> MetricsSnapshot + Send + Sync>,
+    /// Fresh readiness verdict for `/readyz`.
+    pub ready: Arc<dyn Fn() -> Readiness + Send + Sync>,
+    /// Flight-recorder dump for `/flight`; `None` (no closure, or the
+    /// closure returns `None`) answers `404` — the recorder is optional
+    /// run-control.
+    pub flight: Option<Arc<dyn Fn() -> Option<String> + Send + Sync>>,
+    /// HTTP limits/sizing; `Http1Config::default()` unless a test says
+    /// otherwise.
+    pub http: Http1Config,
+}
+
+/// A running telemetry server; shuts down on drop or explicitly.
+pub struct TelemetryServer {
+    server: Http1Server,
+}
+
+impl TelemetryServer {
+    /// Bind `addr` (port 0 for ephemeral) and start serving.
+    pub fn bind(addr: &str, cfg: TelemetryConfig) -> Result<TelemetryServer> {
+        let http = cfg.http.clone();
+        let handler = router(cfg);
+        let server = Http1Server::bind(addr, http, handler)?;
+        Ok(TelemetryServer { server })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.server.local_addr()
+    }
+
+    /// Base URL, e.g. `http://127.0.0.1:43812`.
+    pub fn url(&self) -> String {
+        format!("http://{}", self.local_addr())
+    }
+
+    pub fn shutdown(&mut self) {
+        self.server.shutdown();
+    }
+}
+
+fn router(cfg: TelemetryConfig) -> Handler {
+    Arc::new(move |req: &Request| {
+        match req.path.as_str() {
+            "/metrics" => Response {
+                status: 200,
+                content_type: "text/plain; version=0.0.4; charset=utf-8".to_string(),
+                body: (cfg.snapshot)().to_prometheus().into_bytes(),
+            },
+            "/metrics.json" => Response::json(200, (cfg.snapshot)().to_json()),
+            "/healthz" => {
+                let mut w = ObjWriter::new();
+                w.field_bool("ok", true).field_str("mode", cfg.mode);
+                Response::json(200, w.finish())
+            }
+            "/readyz" => {
+                let r = (cfg.ready)();
+                let status = if r.ready { 200 } else { 503 };
+                Response::json(status, r.body(cfg.mode))
+            }
+            "/trace" => {
+                // peek → raw span dump → Chrome trace-event JSON, reusing
+                // the exact converters behind `switchback trace export`.
+                let dump = super::span::peek();
+                let raw = super::export::span_dump_json(&dump);
+                match super::export::parse_span_dump(&raw) {
+                    Ok(sd) => Response::json(200, super::export::chrome_trace_json(&sd)),
+                    Err(e) => Response::text(500, format!("trace export failed: {e}\n")),
+                }
+            }
+            "/flight" => match cfg.flight.as_ref().and_then(|f| f()) {
+                Some(json) => Response::json(200, json),
+                None => Response::text(404, "no flight recorder armed\n"),
+            },
+            _ => Response::text(
+                404,
+                "not found; endpoints: /metrics /metrics.json /healthz /readyz /trace /flight\n",
+            ),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::http1::http_get;
+    use crate::trace::registry::{MetricValue, Registry};
+    use crate::util::json::parse;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+
+    const T: Duration = Duration::from_secs(5);
+
+    fn bind(cfg: TelemetryConfig) -> TelemetryServer {
+        TelemetryServer::bind("127.0.0.1:0", cfg).expect("bind telemetry")
+    }
+
+    fn basic_cfg(reg: Arc<Registry>, ready_flag: Arc<AtomicBool>) -> TelemetryConfig {
+        TelemetryConfig {
+            mode: "serve",
+            snapshot: Arc::new(move || reg.snapshot()),
+            ready: Arc::new(move || {
+                let up = ready_flag.load(Ordering::Relaxed);
+                Readiness::new(up).with("booted", if up { "true" } else { "false" })
+            }),
+            flight: None,
+            http: Http1Config::default(),
+        }
+    }
+
+    #[test]
+    fn endpoints_serve_health_ready_metrics_trace_flight() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("serve.requests").add(7);
+        reg.histogram("serve.request_ns").record(1_000);
+        let ready = Arc::new(AtomicBool::new(false));
+        let mut cfg = basic_cfg(Arc::clone(&reg), Arc::clone(&ready));
+        cfg.flight = Some(Arc::new(|| Some("{\"format\":\"switchback-flight\"}".to_string())));
+        let srv = bind(cfg);
+        let u = |p: &str| format!("{}{}", srv.url(), p);
+
+        let h = http_get(&u("/healthz"), T).unwrap();
+        assert_eq!(h.status, 200);
+        assert!(h.body.contains("\"ok\":true"), "{}", h.body);
+        assert!(h.body.contains("\"mode\":\"serve\""), "{}", h.body);
+
+        // readiness flips with the provider's state
+        let r = http_get(&u("/readyz"), T).unwrap();
+        assert_eq!(r.status, 503);
+        assert!(r.body.contains("\"ready\":false"), "{}", r.body);
+        ready.store(true, Ordering::Relaxed);
+        let r = http_get(&u("/readyz"), T).unwrap();
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("\"ready\":true"), "{}", r.body);
+        assert!(r.body.contains("\"booted\":true"), "{}", r.body);
+
+        let m = http_get(&u("/metrics"), T).unwrap();
+        assert_eq!(m.status, 200);
+        assert!(m.body.contains("serve_requests_total 7"), "{}", m.body);
+        assert!(m.body.contains("serve_request_ns_count 1"), "{}", m.body);
+
+        let mj = http_get(&u("/metrics.json"), T).unwrap();
+        let v = parse(&mj.body).expect("metrics.json parses");
+        assert_eq!(v.get("serve.requests").unwrap().as_usize(), Some(7));
+
+        let t = http_get(&u("/trace"), T).unwrap();
+        assert_eq!(t.status, 200);
+        assert!(t.body.contains("\"traceEvents\""), "{}", t.body);
+
+        let f = http_get(&u("/flight"), T).unwrap();
+        assert_eq!(f.status, 200);
+        assert!(f.body.contains("switchback-flight"), "{}", f.body);
+
+        assert_eq!(http_get(&u("/nope"), T).unwrap().status, 404);
+    }
+
+    #[test]
+    fn flight_unarmed_is_404() {
+        let reg = Arc::new(Registry::new());
+        let ready = Arc::new(AtomicBool::new(true));
+        let srv = bind(basic_cfg(reg, ready));
+        let f = http_get(&format!("{}/flight", srv.url()), T).unwrap();
+        assert_eq!(f.status, 404);
+    }
+
+    /// Parse `name value` exposition samples out of a `/metrics` body.
+    fn sample(body: &str, name: &str) -> Option<f64> {
+        body.lines()
+            .filter(|l| !l.starts_with('#'))
+            .find_map(|l| {
+                let (n, v) = l.split_once(' ')?;
+                (n == name).then(|| v.parse::<f64>().ok())?
+            })
+    }
+
+    /// PR 6's torn-snapshot regression, extended to the wire: hammer a
+    /// grouped pair of counters and a histogram from writer threads while
+    /// scraping `/metrics` over a real localhost socket.  Every scrape
+    /// must parse, the grouped invariant must hold inside every scrape,
+    /// and totals must be monotonic across scrapes.
+    #[test]
+    fn wire_scrapes_parse_and_totals_stay_monotonic_under_load() {
+        let reg = Arc::new(Registry::new());
+        let ready = Arc::new(AtomicBool::new(true));
+        let srv = bind(basic_cfg(Arc::clone(&reg), ready));
+        let url = format!("{}/metrics", srv.url());
+
+        let stop = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            let mut writers = Vec::new();
+            for _ in 0..3 {
+                let (reg, stop) = (Arc::clone(&reg), Arc::clone(&stop));
+                writers.push(scope.spawn(move || {
+                    let first = reg.counter("pair.first");
+                    let second = reg.counter("pair.second");
+                    let hist = reg.histogram("work.ns");
+                    while !stop.load(Ordering::Relaxed) {
+                        {
+                            let _g = reg.grouped();
+                            first.inc();
+                            second.inc();
+                        }
+                        hist.record(100);
+                    }
+                }));
+            }
+
+            let (mut last_first, mut last_count) = (0.0f64, 0.0f64);
+            for i in 0..50 {
+                let resp = http_get(&url, T).expect("scrape");
+                assert_eq!(resp.status, 200);
+                // every non-comment line is `name value` — the scrape parses
+                for line in resp.body.lines().filter(|l| !l.starts_with('#')) {
+                    assert_eq!(line.split(' ').count(), 2, "scrape {i}: bad line {line:?}");
+                }
+                let first = sample(&resp.body, "pair_first_total").unwrap_or(0.0);
+                let second = sample(&resp.body, "pair_second_total").unwrap_or(0.0);
+                assert_eq!(first, second, "scrape {i} split a grouped update");
+                let count = sample(&resp.body, "work_ns_count").unwrap_or(0.0);
+                assert!(first >= last_first, "scrape {i}: counter went backwards");
+                assert!(count >= last_count, "scrape {i}: histogram count went backwards");
+                (last_first, last_count) = (first, count);
+            }
+            assert!(last_first > 0.0, "writers never advanced the counters");
+
+            stop.store(true, Ordering::Relaxed);
+            for w in writers {
+                w.join().expect("writer");
+            }
+        });
+    }
+}

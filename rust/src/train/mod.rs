@@ -37,6 +37,6 @@ pub mod trainer;
 pub use loss::{clip_contrastive, ContrastiveOut};
 pub use model::ClipTrainModel;
 pub use trainer::{
-    forward_backward, write_bench_train_json, NativeRunResult, NativeTrainConfig,
-    NativeTrainer, StepOutput,
+    forward_backward, write_bench_train_json, LiveHooks, NativeRunResult,
+    NativeTrainConfig, NativeTrainer, StepOutput,
 };

@@ -43,7 +43,44 @@ use crate::util::threads::par_map;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Live telemetry hooks armed by `--telemetry-addr`: the trainer
+/// publishes into these every step; the HTTP plane
+/// ([`crate::trace::telemetry_http`]) reads them.
+#[derive(Clone)]
+pub struct LiveHooks {
+    /// shared flight recorder behind `/flight` — the trainer pushes every
+    /// step's frame, a scrape dumps the current window non-destructively
+    pub flight: Arc<Mutex<FlightRecorder>>,
+    /// last completed step (0 until the first step lands) — train-mode
+    /// `/readyz` flips ready once this is > 0
+    pub step_done: Arc<AtomicU64>,
+}
+
+impl LiveHooks {
+    pub fn new(flight_window: usize) -> Self {
+        Self {
+            flight: Arc::new(Mutex::new(FlightRecorder::new(flight_window))),
+            step_done: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// `/flight` body: the recorder's current window, or `None` while
+    /// empty (the endpoint answers 404 until the first frame lands).
+    pub fn flight_json(&self) -> Option<String> {
+        let fr = self.flight.lock().unwrap_or_else(|e| e.into_inner());
+        (!fr.is_empty()).then(|| fr.dump_json("live_scrape", fr.last_step()))
+    }
+}
+
+impl std::fmt::Debug for LiveHooks {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "LiveHooks(step_done={})", self.step_done.load(Ordering::Relaxed))
+    }
+}
 
 /// One native training run's knobs.
 #[derive(Debug, Clone)]
@@ -99,6 +136,13 @@ pub struct NativeTrainConfig {
     pub flight_path: Option<String>,
     /// flight-recorder ring capacity in steps (`--flight-window`)
     pub flight_window: usize,
+    /// live telemetry hooks (`--telemetry-addr`; None = no live plane).
+    /// When set, the trainer pushes every step's flight frame into the
+    /// shared recorder, advances the step-done counter for `/readyz`,
+    /// and publishes live gauges (loss/lr/grad-norm plus per-layer
+    /// quant-error/clip-rate and `g²/v` under-estimation at the probe
+    /// cadence) into [`crate::trace::global`]
+    pub live: Option<LiveHooks>,
 }
 
 impl NativeTrainConfig {
@@ -141,6 +185,7 @@ impl NativeTrainConfig {
             spike_cooldown: 3 * DEDUP_WINDOW,
             flight_path: None,
             flight_window: 64,
+            live: None,
         }
     }
 
@@ -738,12 +783,27 @@ impl NativeTrainer {
         let mut ckpt_bytes = 0u64;
         let mut ckpt_save_secs = 0.0f64;
         let resumed_from = (self.start_step > 0).then_some(self.start_step);
-        let mut flight = self
-            .cfg
-            .flight_path
-            .as_ref()
-            .map(|_| FlightRecorder::new(self.cfg.flight_window));
+        // the recorder is shared with the `/flight` endpoint when the
+        // live plane is armed; otherwise it is private to this run.
+        // Dumping to disk still requires --flight-out either way.
+        let flight: Option<Arc<Mutex<FlightRecorder>>> = match (&self.cfg.live, &self.cfg.flight_path) {
+            (Some(hooks), _) => Some(Arc::clone(&hooks.flight)),
+            (None, Some(_)) => {
+                Some(Arc::new(Mutex::new(FlightRecorder::new(self.cfg.flight_window))))
+            }
+            (None, None) => None,
+        };
         let mut flight_dump: Option<String> = None;
+        // live gauges are hoisted handles: one relaxed store per step
+        let live_gauges = self.cfg.live.as_ref().map(|_| {
+            let g = trace::global();
+            (
+                g.gauge("train.step"),
+                g.gauge("train.loss"),
+                g.gauge("train.grad_norm"),
+                g.gauge("train.lr"),
+            )
+        });
         let spans_before = trace::spans_recorded();
         let run_t0 = Instant::now();
 
@@ -907,8 +967,29 @@ impl NativeTrainer {
                         }
                     }
                 }
+                // live plane armed: publish the probe-cadence per-layer
+                // gauges — g²/v for the probed tensors plus the int8
+                // round-trip error and clip rate of every linear weight
+                // (the signals a dynamic block-fallback policy consumes)
+                if self.cfg.live.is_some() {
+                    let g = trace::global();
+                    for (name, r) in &rec.under_est {
+                        g.gauge(&format!("train.under_est.{name}")).set(*r as f64);
+                    }
+                    for (idx, meta) in metas.iter().enumerate() {
+                        if meta.kind == "weight" {
+                            let (err, clip) =
+                                crate::quant::tensorwise_quant_stats(&params[idx]);
+                            g.gauge(&format!("train.quant_err.{}", meta.name))
+                                .set(err as f64);
+                            g.gauge(&format!("train.clip_rate.{}", meta.name))
+                                .set(clip as f64);
+                        }
+                    }
+                }
             }
-            if let Some(fr) = flight.as_mut() {
+            if let Some(fr) = &flight {
+                let fr = &mut *fr.lock().unwrap_or_else(|e| e.into_inner());
                 fr.push(FlightFrame {
                     step,
                     loss: out.loss,
@@ -919,11 +1000,13 @@ impl NativeTrainer {
                 });
                 // the guard firing is the forensic moment: dump the window
                 // *now*, spike frame included, before training continues
+                // (a live-only recorder with no --flight-out just keeps
+                // serving scrapes)
                 if rolled_back && flight_dump.is_none() {
-                    let p =
-                        self.cfg.flight_path.as_ref().expect("flight implies path");
-                    fr.dump_to(Path::new(p), "rollback_guard", step)?;
-                    flight_dump = Some(p.clone());
+                    if let Some(p) = self.cfg.flight_path.as_ref() {
+                        fr.dump_to(Path::new(p), "rollback_guard", step)?;
+                        flight_dump = Some(p.clone());
+                    }
                 }
             }
             if verbose && (step % 10 == 0 || step == 1) {
@@ -936,6 +1019,17 @@ impl NativeTrainer {
                 );
             }
             sink.log(rec);
+            if let Some(hooks) = &self.cfg.live {
+                // gauges first, then the step counter: a scraper seeing
+                // step_done == step also sees that step's scalars
+                if let Some((g_step, g_loss, g_gn, g_lr)) = &live_gauges {
+                    g_step.set(step as f64);
+                    g_loss.set(out.loss as f64);
+                    g_gn.set(grad_norm as f64);
+                    g_lr.set(lr as f64);
+                }
+                hooks.step_done.store(step, Ordering::Relaxed);
+            }
         }
         let elapsed = run_t0.elapsed().as_secs_f32();
 
@@ -969,9 +1063,14 @@ impl NativeTrainer {
         // the guard never fired (or was off) but the post-hoc detector saw
         // a spike: still dump the recorder window for forensics
         if flight_dump.is_none() {
-            if let (Some(fr), Some(&at)) = (&flight, loss_spike_steps.last()) {
-                let p = self.cfg.flight_path.as_ref().expect("flight implies path");
-                fr.dump_to(Path::new(p), "loss_spike", self.start_step + 1 + at)?;
+            if let (Some(fr), Some(&at), Some(p)) =
+                (&flight, loss_spike_steps.last(), self.cfg.flight_path.as_ref())
+            {
+                fr.lock().unwrap_or_else(|e| e.into_inner()).dump_to(
+                    Path::new(p),
+                    "loss_spike",
+                    self.start_step + 1 + at,
+                )?;
                 flight_dump = Some(p.clone());
             }
         }
@@ -1261,6 +1360,32 @@ mod tests {
         assert!(best >= 2, "expected ≥2 ratio-probed tensors, got {best}");
         assert!(res.to_json().contains("\"flight_dump\""));
         std::fs::remove_file(&dump_path).ok();
+    }
+
+    /// The live telemetry plane's trainer contract (`--telemetry-addr`):
+    /// a run with `cfg.live` armed advances `step_done` to the final
+    /// step, fills the shared flight recorder (scrapeable mid-run via
+    /// `flight_json`), and publishes the per-layer quant-error/clip-rate
+    /// gauges plus the live step scalars into the global registry.
+    #[test]
+    fn live_hooks_publish_steps_flight_and_quant_gauges() {
+        let steps = 6u64;
+        let mut cfg = tiny_cfg(LinearKind::SwitchBack, steps);
+        cfg.flight_window = 4;
+        let hooks = LiveHooks::new(cfg.flight_window);
+        cfg.live = Some(hooks.clone());
+        NativeTrainer::new(cfg).run(false).unwrap();
+        assert_eq!(hooks.step_done.load(Ordering::Relaxed), steps);
+        let dump = hooks.flight_json().expect("recorder must hold frames");
+        let parsed = crate::trace::parse_dump(&dump).unwrap();
+        assert_eq!(parsed.trigger_kind, "live_scrape");
+        assert_eq!(parsed.trigger_step, steps);
+        assert_eq!(parsed.frames.len(), 4, "window-capped frame count");
+        let snap = crate::trace::global().snapshot();
+        let has = |p: &str| snap.entries.iter().any(|(n, _)| n.starts_with(p));
+        assert!(has("train.quant_err."), "per-layer quant error gauges");
+        assert!(has("train.clip_rate."), "per-layer clip rate gauges");
+        assert!(has("train.step") && has("train.loss"), "live step scalars");
     }
 
     /// The headline resume contract: train k steps + snapshot + resume to

@@ -9,7 +9,11 @@
 //!   the SwitchBack-vs-Standard throughput *ratio* and p99 *ratio* for
 //!   serve, the swap-mode invariants (zero failed requests, ≥1 promotion,
 //!   tail latency within [`SWAP_TAIL_FACTOR`]× of the same document's
-//!   single-generation run), the learning invariants (loss decreased, no
+//!   single-generation run), the scrape-under-load invariants (≥1
+//!   well-formed `/metrics` scrape, zero scrape errors, scrape p99 under
+//!   [`SCRAPE_P99_BUDGET_US`], and the serve tail within
+//!   [`SCRAPE_TAIL_FACTOR`]× of the same document's scraper-free run),
+//!   the learning invariants (loss decreased, no
 //!   divergence, spike counts) for train, and — for the ckpt pipeline —
 //!   the standby promote/reject/rollback/quarantine counters plus the
 //!   sharded-snapshot invariants (`sharded_bit_identical`, shard count,
@@ -109,12 +113,29 @@ fn s<'a>(entry: &'a Value, key: &str) -> &'a str {
 /// invariant (machine-portable: both runs come from the same document).
 pub const SWAP_TAIL_FACTOR: f64 = 10.0;
 
+/// Absolute budget for the rider thread's p99 `/metrics` scrape latency
+/// (µs).  A loopback HTTP round trip plus a registry snapshot is
+/// dominated by fixed syscall/copy costs, not machine throughput, so a
+/// generous absolute ceiling gates in portable mode (the same reasoning
+/// as the `trace_overhead_pct` budget): 50 ms means the exposition path
+/// is blocking on the serving load, not formatting text.
+pub const SCRAPE_P99_BUDGET_US: f64 = 50_000.0;
+
+/// A concurrent scraper must not move the serve tail: a scraper-present
+/// run's request p99 beyond this multiple of the same configuration's
+/// scraper-free run means the telemetry plane is stealing cycles from
+/// the serving path — gated as a within-document invariant (both runs
+/// come from the same machine, so absolute speed cancels out).
+pub const SCRAPE_TAIL_FACTOR: f64 = 10.0;
+
 /// One serve-results entry in comparable form.
 struct ServeEntry {
     kind: String,
     conc: u64,
     /// swap cadence (0 = plain single-generation run)
     swap_every: u64,
+    /// scrape cadence in ms (0 = no rider scraper attached)
+    scrape_every: u64,
     rps: f64,
     p99: f64,
     errors: f64,
@@ -122,6 +143,12 @@ struct ServeEntry {
     promotions: f64,
     /// standby rejections recorded by the run's metrics (0 when absent)
     rejects: f64,
+    /// well-formed scrapes completed by the rider (0 when no scraper)
+    scrapes: f64,
+    /// failed or malformed scrapes (0 when no scraper)
+    scrape_errors: f64,
+    /// p99 scrape latency in µs (0 when no scraper)
+    scrape_p99_us: f64,
 }
 
 fn serve_index(v: &Value) -> Result<Vec<ServeEntry>, String> {
@@ -141,32 +168,52 @@ fn serve_index(v: &Value) -> Result<Vec<ServeEntry>, String> {
             let promotions =
                 opt_num(metrics, &ctx, "standby_promotions")?.unwrap_or(0.0);
             let rejects = opt_num(metrics, &ctx, "standby_rejects")?.unwrap_or(0.0);
+            // once an entry declares a scrape cadence, its scrape stats
+            // are required — a scraper run missing its own measurements
+            // is incomparable, not a pass
+            let scrape_every =
+                opt_num(r, &ctx, "scrape_every_ms")?.unwrap_or(0.0) as u64;
+            let (scrapes, scrape_errors, scrape_p99_us) = if scrape_every > 0 {
+                (
+                    req_num(r, &ctx, "scrapes")?,
+                    req_num(r, &ctx, "scrape_errors")?,
+                    req_num(r, &ctx, "scrape_p99_us")?,
+                )
+            } else {
+                (0.0, 0.0, 0.0)
+            };
             Ok(ServeEntry {
                 kind,
                 conc,
                 swap_every,
+                scrape_every,
                 rps,
                 p99,
                 errors,
                 promotions,
                 rejects,
+                scrapes,
+                scrape_errors,
+                scrape_p99_us,
             })
         })
         .collect()
 }
 
 /// The Standard-vs-SwitchBack ratios per concurrency (machine-portable),
-/// over the plain single-generation runs only.
+/// over the plain single-generation, scraper-free runs only.
 fn serve_ratios(idx: &[ServeEntry]) -> Vec<(u64, f64, f64)> {
     let mut out = vec![];
     for e in idx {
-        if e.kind != "switchback" || e.swap_every > 0 {
+        if e.kind != "switchback" || e.swap_every > 0 || e.scrape_every > 0 {
             continue;
         }
-        if let Some(std_e) = idx
-            .iter()
-            .find(|o| o.kind == "standard" && o.conc == e.conc && o.swap_every == 0)
-        {
+        if let Some(std_e) = idx.iter().find(|o| {
+            o.kind == "standard"
+                && o.conc == e.conc
+                && o.swap_every == 0
+                && o.scrape_every == 0
+        }) {
             if std_e.rps > 0.0 && e.p99 > 0.0 {
                 out.push((e.conc, e.rps / std_e.rps, std_e.p99 / e.p99));
             }
@@ -190,6 +237,19 @@ fn compare_serve(
             "baseline has a --swap-every entry but the new document has \
              none — the swap-aware run disappeared; restore it (or refresh \
              the baseline) before comparing"
+                .into(),
+        );
+    }
+    // same rule for the scraper-present run: once the baseline gates the
+    // scrape-under-load invariants, the entry vanishing must not read as
+    // "no regression"
+    if oi.iter().any(|e| e.scrape_every > 0)
+        && !ni.iter().any(|e| e.scrape_every > 0)
+    {
+        return Err(
+            "baseline has a --scrape-every entry but the new document has \
+             none — the scrape-under-load run disappeared; restore it (or \
+             refresh the baseline) before comparing"
                 .into(),
         );
     }
@@ -241,10 +301,12 @@ fn compare_serve(
                 e.rejects
             ));
         }
-        if let Some(plain) = ni
-            .iter()
-            .find(|o| o.kind == e.kind && o.conc == e.conc && o.swap_every == 0)
-        {
+        if let Some(plain) = ni.iter().find(|o| {
+            o.kind == e.kind
+                && o.conc == e.conc
+                && o.swap_every == 0
+                && o.scrape_every == 0
+        }) {
             if plain.p99 > 0.0 && e.p99 > plain.p99 * SWAP_TAIL_FACTOR {
                 regs.push(format!(
                     "{tag}: swap-tail-latency invariant broken — p99 \
@@ -254,10 +316,68 @@ fn compare_serve(
             }
         }
     }
+    // portable scrape-under-load invariants: a --scrape-every run must
+    // actually scrape, every scrape must come back well-formed, the
+    // scrape tail stays under the absolute budget, and the serving path's
+    // own tail stays within SCRAPE_TAIL_FACTOR of the same
+    // configuration's scraper-free run (a within-document bound)
+    for e in ni.iter().filter(|e| e.scrape_every > 0) {
+        compared += 1;
+        let tag = format!(
+            "serve {} c={} scrape-every={}ms",
+            e.kind, e.conc, e.scrape_every
+        );
+        if e.errors > 0.0 {
+            regs.push(format!(
+                "{tag}: {:.0} requests failed under a concurrent scraper",
+                e.errors
+            ));
+        }
+        if e.scrapes < 1.0 {
+            regs.push(format!(
+                "{tag}: the rider thread completed no scrapes — the \
+                 telemetry plane was never exercised under load"
+            ));
+        }
+        if e.scrape_errors > 0.0 {
+            regs.push(format!(
+                "{tag}: {:.0} scrape(s) failed or returned a malformed \
+                 exposition",
+                e.scrape_errors
+            ));
+        }
+        if e.scrapes >= 1.0 && e.scrape_p99_us > SCRAPE_P99_BUDGET_US {
+            regs.push(format!(
+                "{tag}: scrape p99 {:.0} µs exceeds the \
+                 {SCRAPE_P99_BUDGET_US:.0} µs budget — the exposition \
+                 path is blocking on the serving load",
+                e.scrape_p99_us
+            ));
+        }
+        if let Some(plain) = ni.iter().find(|o| {
+            o.kind == e.kind
+                && o.conc == e.conc
+                && o.swap_every == 0
+                && o.scrape_every == 0
+        }) {
+            if plain.p99 > 0.0 && e.p99 > plain.p99 * SCRAPE_TAIL_FACTOR {
+                regs.push(format!(
+                    "{tag}: scrape-tail-latency invariant broken — serve \
+                     p99 {:.2} ms vs {:.2} ms scraper-free \
+                     (> {SCRAPE_TAIL_FACTOR}×): the scraper moved the \
+                     serve tail",
+                    e.p99, plain.p99
+                ));
+            }
+        }
+    }
     if strict {
         for e in &ni {
             let Some(o) = oi.iter().find(|o| {
-                o.kind == e.kind && o.conc == e.conc && o.swap_every == e.swap_every
+                o.kind == e.kind
+                    && o.conc == e.conc
+                    && o.swap_every == e.swap_every
+                    && o.scrape_every == e.scrape_every
             }) else {
                 continue;
             };
@@ -1076,6 +1196,99 @@ mod tests {
         // the swap entry disappearing from the fresh doc fails closed
         let err = compare_bench(&good, &old, 0.15, false).unwrap_err();
         assert!(err.contains("swap-every"), "{err}");
+    }
+
+    /// A serve doc with the plain standard/switchback pair plus one
+    /// scraper-present entry (`scrape_every_ms` + rider stats).  The
+    /// scrape run's `serve_p99` is the serving path's own tail while the
+    /// rider scrapes (the SCRAPE_TAIL_FACTOR input).
+    fn serve_doc_with_scrape(
+        scrapes: u64,
+        scrape_errors: u64,
+        scrape_p99_us: f64,
+        serve_p99: f64,
+    ) -> Value {
+        parse(&format!(
+            r#"{{"bench":"serve_throughput","policy":{{}},"results":[
+                {{"kind":"standard","concurrency":16,"requests_per_sec":1000.0,
+                  "errors":0,"metrics":{{"request_p99_ms":10.0}}}},
+                {{"kind":"switchback","concurrency":16,"requests_per_sec":1500.0,
+                  "errors":0,"metrics":{{"request_p99_ms":8.0}}}},
+                {{"kind":"switchback","concurrency":16,"scrape_every_ms":5,
+                  "scrapes":{scrapes},"scrape_errors":{scrape_errors},
+                  "scrape_p99_us":{scrape_p99_us},
+                  "requests_per_sec":1400.0,"errors":0,
+                  "metrics":{{"request_p99_ms":{serve_p99}}}}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    /// Scraper-present entries are gated on invariants (≥1 well-formed
+    /// scrape, zero scrape errors, scrape p99 under the absolute budget,
+    /// serve tail within SCRAPE_TAIL_FACTOR of the scraper-free run) and
+    /// are excluded from the plain throughput-ratio comparison.
+    #[test]
+    fn scrape_entries_are_gated_on_invariants() {
+        let old = serve_doc(1000.0, 1500.0, 10.0, 8.0); // no scrape entry
+        let good = serve_doc_with_scrape(40, 0, 900.0, 9.0);
+        let regs = compare_bench(&old, &good, 0.15, false).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+        // the scrape run must not poison the ratio math: identical docs
+        // pass even though a slower scrape-mode entry exists for the
+        // same (kind, concurrency) — in portable and strict mode both
+        let regs = compare_bench(&good, &good, 0.15, false).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+        let regs = compare_bench(&good, &good, 0.15, true).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+
+        // a scraper that never completed a scrape: caught
+        let idle = serve_doc_with_scrape(0, 0, 0.0, 9.0);
+        let regs = compare_bench(&old, &idle, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("no scrapes")), "{regs:?}");
+
+        // failed / malformed scrapes: caught
+        let torn = serve_doc_with_scrape(40, 2, 900.0, 9.0);
+        let regs = compare_bench(&old, &torn, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("malformed")), "{regs:?}");
+
+        // scrape p99 over the absolute budget: caught
+        let slow = serve_doc_with_scrape(40, 0, SCRAPE_P99_BUDGET_US + 1.0, 9.0);
+        let regs = compare_bench(&old, &slow, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("µs budget")),
+            "{regs:?}"
+        );
+
+        // the scraper moving the serve tail beyond the factor: caught
+        let moved =
+            serve_doc_with_scrape(40, 0, 900.0, 8.0 * SCRAPE_TAIL_FACTOR + 1.0);
+        let regs = compare_bench(&old, &moved, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("scrape-tail-latency")),
+            "{regs:?}"
+        );
+
+        // the scrape entry disappearing from the fresh doc fails closed
+        let err = compare_bench(&good, &old, 0.15, false).unwrap_err();
+        assert!(err.contains("scrape-every"), "{err}");
+
+        // a scrape entry missing its own stats is incomparable, not a
+        // pass (fail closed on the declared-but-absent schema)
+        let gutted = parse(
+            r#"{"bench":"serve_throughput","policy":{},"results":[
+                {"kind":"standard","concurrency":16,"requests_per_sec":1000.0,
+                 "metrics":{"request_p99_ms":10.0}},
+                {"kind":"switchback","concurrency":16,"requests_per_sec":1500.0,
+                 "metrics":{"request_p99_ms":8.0}},
+                {"kind":"switchback","concurrency":16,"scrape_every_ms":5,
+                 "requests_per_sec":1400.0,
+                 "metrics":{"request_p99_ms":9.0}}
+            ]}"#,
+        )
+        .unwrap();
+        let err = compare_bench(&good, &gutted, 0.15, false).unwrap_err();
+        assert!(err.contains("scrapes"), "{err}");
     }
 
     /// Ckpt standby counters gate: rollbacks are never expected, and the

@@ -14,7 +14,10 @@
 # checkpoint/hot-swap and GEMM-kernel perf trajectories are tracked
 # across PRs (schemas: EXPERIMENTS.md §Serve / §Train / §Ckpt, gemm:
 # benchmarks/README.md).  scripts/check_bench.sh gates all four against
-# the committed baselines in benchmarks/.
+# the committed baselines in benchmarks/.  Also emits
+# BENCH_metrics.scrape.prom — one real /metrics scrape of the live
+# telemetry plane (`--telemetry-addr`), uploaded by CI as the per-PR
+# observability artifact.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -38,6 +41,43 @@ echo "== serve smoke =="
 "$BIN" serve --kind switchback --requests 64
 
 echo
+echo "== telemetry smoke: serve --telemetry-addr → probe /healthz /readyz /metrics =="
+# serve binds the plane on an ephemeral port, prints the address, and
+# --hold-ms keeps it scrapeable after its own smoke probes; the probe
+# subcommand polls until the plane answers.  The /metrics body is saved
+# as the per-PR scrape artifact CI uploads.
+TELEM_LOG="$REPO_ROOT/.verify_telemetry_serve.log"
+SCRAPE_OUT="$REPO_ROOT/BENCH_metrics.scrape.prom"
+rm -f "$TELEM_LOG" "$SCRAPE_OUT"
+"$BIN" serve --kind switchback --requests 64 \
+    --telemetry-addr 127.0.0.1:0 --hold-ms 6000 >"$TELEM_LOG" 2>&1 &
+TELEM_PID=$!
+TELEM_URL=""
+for _ in $(seq 1 100); do
+    TELEM_URL="$(sed -n 's/^telemetry: listening on //p' "$TELEM_LOG" | head -n 1)"
+    [[ -n "$TELEM_URL" ]] && break
+    sleep 0.1
+done
+[[ -n "$TELEM_URL" ]] || {
+    echo "telemetry smoke FAILED: serve never printed the bound address" >&2
+    cat "$TELEM_LOG" >&2
+    kill "$TELEM_PID" 2>/dev/null || true
+    exit 1
+}
+"$BIN" probe "$TELEM_URL/healthz" --expect '"ok":true' --follow 20 --every 100
+"$BIN" probe "$TELEM_URL/readyz" --expect '"ready":true' --follow 20 --every 100
+"$BIN" probe "$TELEM_URL/metrics" --follow 20 --every 100 \
+    | tail -n +2 >"$SCRAPE_OUT"
+grep -q '^serve_requests_total ' "$SCRAPE_OUT" \
+    || { echo "telemetry smoke FAILED: no serve_requests_total in the /metrics scrape" >&2; exit 1; }
+wait "$TELEM_PID" \
+    || { echo "telemetry smoke FAILED: serve exited nonzero" >&2; cat "$TELEM_LOG" >&2; exit 1; }
+grep -q "serve smoke OK" "$TELEM_LOG" \
+    || { echo "telemetry smoke FAILED: held serve run did not finish its own smoke" >&2; exit 1; }
+rm -f "$TELEM_LOG"
+echo "telemetry smoke OK — /metrics scrape saved to BENCH_metrics.scrape.prom"
+
+echo
 echo "== loadgen (BENCH_serve.json) =="
 if [[ "$MODE" == "--full" ]]; then
     REQUESTS=10000
@@ -53,16 +93,23 @@ else
     PIPE_REQUESTS=256
 fi
 # --swap-every adds one swap-aware run: sustained throughput + tail
-# latency across repeated generations, promoted through the standby path
+# latency across repeated generations, promoted through the standby path.
+# --scrape-every adds one scraper-present run: a rider thread scrapes a
+# live /metrics plane over the engine while the closed loop runs, so the
+# benchdiff gate can hold "a concurrent scraper neither fails nor moves
+# the serve tail" (benchmarks/README.md §Scrape metrics)
 SWAP_EVERY=$((REQUESTS / 4))
 "$BIN" loadgen \
     --requests "$REQUESTS" \
     --concurrency "$CONCURRENCY" \
     --kinds standard,switchback \
     --swap-every "$SWAP_EVERY" \
+    --scrape-every 5 \
     --out "$REPO_ROOT/BENCH_serve.json"
 grep -q '"standby_promotions":' "$REPO_ROOT/BENCH_serve.json" \
     || { echo "loadgen smoke FAILED: no standby promotions in BENCH_serve.json" >&2; exit 1; }
+grep -q '"scrape_errors":0,' "$REPO_ROOT/BENCH_serve.json" \
+    || { echo "loadgen smoke FAILED: no clean scraper-present run in BENCH_serve.json" >&2; exit 1; }
 
 echo
 echo "== train smoke (BENCH_train.json) =="
@@ -99,14 +146,46 @@ rm -rf "$CKPT_PIPE"
 # dropped requests during the watcher-driven promotions, a promoted
 # (instead of canary-rejected) drift injection, a quarantined staging
 # hand-off, or serve/train encode divergence
+# the pipeline runs backgrounded with its telemetry plane armed; a
+# follower probe watches /readyz flip from the train phase to the serve
+# phase (the engine-slot handover) while the scenario is still running —
+# the live-observability proof the tier-1 tests can't give
+PIPE_LOG="$REPO_ROOT/.verify_telemetry_pipeline.log"
+rm -f "$PIPE_LOG"
 "$BIN" pipeline \
     --steps "$PIPE_STEPS" \
     --requests "$PIPE_REQUESTS" \
     --ckpt-dir "$CKPT_PIPE" \
     --ckpt-shards 4 \
+    --telemetry-addr 127.0.0.1:0 \
     --out "$REPO_ROOT/BENCH_ckpt.json" \
     --trace-out "$REPO_ROOT/BENCH_pipeline.trace.json" \
-    --quiet
+    --quiet >"$PIPE_LOG" 2>&1 &
+PIPE_PID=$!
+PIPE_URL=""
+for _ in $(seq 1 100); do
+    PIPE_URL="$(sed -n 's/^telemetry: listening on //p' "$PIPE_LOG" | head -n 1)"
+    [[ -n "$PIPE_URL" ]] && break
+    sleep 0.1
+done
+[[ -n "$PIPE_URL" ]] || {
+    echo "pipeline smoke FAILED: pipeline never printed the telemetry address" >&2
+    cat "$PIPE_LOG" >&2
+    kill "$PIPE_PID" 2>/dev/null || true
+    exit 1
+}
+# the follower: poll until the serve phase is visible on the wire (the
+# train phase answers "phase":"train" first, so a match proves the
+# handover happened mid-run), then confirm the generation detail rides
+# along on the same verdict
+"$BIN" probe "$PIPE_URL/readyz" --expect '"phase":"serve"' --follow 600 --every 100 \
+    || { echo "pipeline smoke FAILED: /readyz never reached the serve phase" >&2; cat "$PIPE_LOG" >&2; exit 1; }
+"$BIN" probe "$PIPE_URL/readyz" --expect '"generation":' --follow 50 --every 100 \
+    || { echo "pipeline smoke FAILED: serve-phase /readyz carries no generation" >&2; cat "$PIPE_LOG" >&2; exit 1; }
+wait "$PIPE_PID" \
+    || { echo "pipeline smoke FAILED: pipeline exited nonzero" >&2; cat "$PIPE_LOG" >&2; exit 1; }
+cat "$PIPE_LOG"
+rm -f "$PIPE_LOG"
 # belt and braces on top of the command's own asserts: the artifact must
 # record ≥3 watcher promotions, the injected-drift rejection, no
 # rollbacks/quarantines, zero dropped requests, and the sharded snapshot
@@ -232,4 +311,4 @@ rm -rf "$CKPT_A" "$CKPT_B" "$CKPT_PIPE" \
     "$REPO_ROOT/.bench_ckpt_smoke_a.json" "$REPO_ROOT/.bench_ckpt_smoke_b.json"
 
 echo
-echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json + $REPO_ROOT/BENCH_train.json + $REPO_ROOT/BENCH_ckpt.json + $REPO_ROOT/BENCH_gemm.json"
+echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json + $REPO_ROOT/BENCH_train.json + $REPO_ROOT/BENCH_ckpt.json + $REPO_ROOT/BENCH_gemm.json + $REPO_ROOT/BENCH_metrics.scrape.prom"
