@@ -28,7 +28,9 @@
 //!   - [`serve`] is the first runtime subsystem *off* the training path: a
 //!     batched int8 embedding-serving engine (dynamic micro-batcher +
 //!     forward-only encoder + worker pool + sharded LRU cache) built on
-//!     the same measured-speed substrate,
+//!     the same measured-speed substrate, fronted by a real TCP data
+//!     plane — a doc-hash fan-out router across N engines and an
+//!     admission-gated HTTP/1.1 `POST /encode` front door,
 //!   - [`ckpt`] is the subsystem that joins the two: versioned, CRC-checked
 //!     binary checkpoints of model + optimizer + RNG/schedule state, giving
 //!     the trainer bit-identical `--resume` and spike-rollback, and the
@@ -38,9 +40,11 @@
 //!     train/serve/ckpt, and the spike flight recorder that dumps the
 //!     paper's `g²/v` under-estimation probes when a spike fires,
 //!   - [`net`] is the hand-rolled `std::net` HTTP/1.1 layer underneath
-//!     the live telemetry plane (`--telemetry-addr`): strict parsing
-//!     limits, keep-alive with per-connection caps, a bounded worker
-//!     pool and a clean shutdown handle.
+//!     both the live telemetry plane (`--telemetry-addr`) and the
+//!     serving data plane (`--listen`): strict parsing limits, bounded
+//!     POST bodies, keep-alive with per-connection caps, a persistent
+//!     client, a bounded worker pool and a clean shutdown handle —
+//!     hardened by a network fault-injection test suite.
 //!
 //! Python never runs on the training path: `make artifacts` lowers the
 //! model once; the `switchback` binary is then self-contained.

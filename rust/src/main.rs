@@ -33,8 +33,9 @@ use switchback::net::http_get;
 use switchback::nn::LinearKind;
 use switchback::serve::standby::{self, StandbyConfig};
 use switchback::serve::{
-    planned_swaps, run_loadgen, write_bench_json, BatchPolicy, ClipEncoder,
-    EncodeInput, EncoderConfig, Engine, LoadgenConfig, ServeConfig, ServeSnapshot,
+    planned_swaps, run_loadgen, run_loadgen_socket, write_bench_json, BatchPolicy,
+    ClipEncoder, EncodeClient, EncodeInput, EncoderConfig, Engine, Frontend,
+    FrontendConfig, LoadgenConfig, Router, ServeConfig, ServeSnapshot, SocketOutcome,
 };
 use switchback::tensor::Rng;
 use switchback::trace::{self, Readiness, TelemetryConfig, TelemetryServer};
@@ -261,6 +262,26 @@ SERVE / LOADGEN OPTIONS:
   --scrape-url URL       loadgen: /metrics URL the scraper hits
                          (default: a telemetry plane self-hosted on
                          127.0.0.1:0 over the engine under test)
+  --listen H:P           serve: bind the network front door — POST
+                         /encode over real TCP (HTTP/1.1, persistent
+                         connections), fanned out across the engine
+                         fleet by doc-hash affinity.  Port 0 picks an
+                         ephemeral port; the bound address is printed
+                         at boot (`frontend: listening on …`)
+  --engines N            serve (with --listen): engine-fleet size the
+                         router fans out across (default: 2)
+  --max-inflight N       serve (with --listen): admission window — at
+                         most N requests past the front door at once,
+                         the rest get an explicit 429 and count as
+                         rejected (default: 32; 0 = unlimited)
+  --socket ADDR          loadgen: add two real-TCP runs against an
+                         already-running `serve --listen` at ADDR —
+                         one clean run at the base concurrency (zero
+                         errors, zero sheds required) and one overload
+                         run at 4x that concurrency (admission
+                         rejections required).  The model-shape flags
+                         must match the server's; entries are tagged
+                         `socket` (and `overload`) for benchdiff
 
 TELEMETRY OPTIONS (serve / train / pipeline):
   --telemetry-addr H:P   expose the live telemetry plane on HOST:PORT —
@@ -325,6 +346,10 @@ const VALUE_FLAGS: &[&str] = &[
     "--hold-ms",
     "--scrape-every",
     "--scrape-url",
+    "--listen",
+    "--engines",
+    "--max-inflight",
+    "--socket",
     "--expect",
     "--follow",
     "--every",
@@ -1713,9 +1738,11 @@ fn serve_config_from(args: &Args, kind: LinearKind) -> Result<ServeConfig> {
     })
 }
 
-/// In-process smoke run of the serving engine (the network front-end is a
-/// future scaling PR; the engine API is the subsystem this PR lands).
-/// With `--watch-dir` the warm-standby watcher rides along: if the
+/// In-process smoke run of the serving engine, with `--listen` adding
+/// the real network path: a [`Frontend`] (TCP `POST /encode`) over a
+/// [`Router`] fanning out across `--engines` engines by doc-hash
+/// affinity.  With `--watch-dir` the warm-standby watcher rides along
+/// (fan-out aware: one watcher promotes every engine or none): if the
 /// watched directory already holds a snapshot newer than the booted
 /// weights, the smoke waits for (and asserts) its promotion.
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -1727,44 +1754,64 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.has("--standby") && watch_dir.is_none() {
         bail!("--standby needs --watch-dir <dir>");
     }
+    let listen = args.flags.get("listen").cloned();
+    let n_engines: usize = args.get("engines", if listen.is_some() { 2 } else { 1 })?;
+    if n_engines == 0 {
+        bail!("--engines must be at least 1");
+    }
+    if args.flags.contains_key("engines") && listen.is_none() && n_engines > 1 {
+        bail!("--engines needs --listen (the fleet serves the front door)");
+    }
+    let max_inflight: usize = args.get("max-inflight", 32)?;
     let mut cfg = serve_config_from(args, kind)?;
     // --weights: boot from a training checkpoint — shape and f32 master
     // weights come from the file, --kind picks the serving quantization
     let mut boot: Option<(u64, Vec<Vec<f32>>)> = None;
-    let loaded = match args.flags.get("weights") {
-        Some(wpath) => {
-            let file = ckpt::resolve(wpath)?;
-            let (ck, io) = ckpt::load(&file)?;
-            cfg.encoder = EncoderConfig { kind, ..ck.encoder.clone() };
-            println!(
-                "loaded {} (step {}/{}, {} bytes, {:.1} MB/s) — serving as {}",
-                file.display(),
-                ck.step,
-                ck.hyper.steps,
-                io.bytes,
-                io.mb_per_s(),
-                kind.label()
-            );
-            let weights = ckpt::encoder_weights(&cfg.encoder, &ck.params)?;
-            boot = Some((ck.step, ck.params));
-            Some(ClipEncoder::from_weights(cfg.encoder.clone(), weights))
-        }
-        None => None,
-    };
+    if let Some(wpath) = args.flags.get("weights") {
+        let file = ckpt::resolve(wpath)?;
+        let (ck, io) = ckpt::load(&file)?;
+        cfg.encoder = EncoderConfig { kind, ..ck.encoder.clone() };
+        println!(
+            "loaded {} (step {}/{}, {} bytes, {:.1} MB/s) — serving as {}",
+            file.display(),
+            ck.step,
+            ck.hyper.steps,
+            io.bytes,
+            io.mb_per_s(),
+            kind.label()
+        );
+        boot = Some((ck.step, ck.params));
+    }
     let image_len = cfg.encoder.image_len();
     let text_seq = cfg.encoder.text_seq;
     let vocab = cfg.encoder.vocab;
     println!(
-        "starting engine: kind={} dim={} blocks={} weights={}",
+        "starting engine: kind={} dim={} blocks={} weights={} engines={}",
         kind.label(),
         cfg.encoder.dim,
         cfg.encoder.blocks,
-        if loaded.is_some() { "checkpoint" } else { "seeded" }
+        if boot.is_some() { "checkpoint" } else { "seeded" },
+        n_engines,
     );
-    let engine = std::sync::Arc::new(match loaded {
-        Some(enc) => Engine::start_with_encoder(cfg, enc),
-        None => Engine::start(cfg),
-    });
+    // Every engine in the fleet boots the same generation-0 weights:
+    // seeded engines share the config seed, checkpoint boots rebuild the
+    // encoder per engine from the same master params.
+    let engines: Vec<std::sync::Arc<Engine>> = (0..n_engines)
+        .map(|_| -> Result<std::sync::Arc<Engine>> {
+            Ok(std::sync::Arc::new(match &boot {
+                Some((_, params)) => {
+                    let weights = ckpt::encoder_weights(&cfg.encoder, params)?;
+                    Engine::start_with_encoder(
+                        cfg.clone(),
+                        ClipEncoder::from_weights(cfg.encoder.clone(), weights),
+                    )
+                }
+                None => Engine::start(cfg.clone()),
+            }))
+        })
+        .collect::<Result<_>>()?;
+    let router = std::sync::Arc::new(Router::from_engines(engines));
+    let engine = std::sync::Arc::clone(&router.engines()[0]);
     println!(
         "encoder resident weights: {:.1} KiB (pre-quantized at load)",
         engine.weight_bytes() as f64 / 1024.0
@@ -1778,7 +1825,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut telemetry = match args.flags.get("telemetry-addr") {
         Some(addr) => {
             let snap_eng = Arc::clone(&engine);
-            let ready_eng = Arc::clone(&engine);
+            let ready_router = Arc::clone(&router);
             let srv = TelemetryServer::bind(
                 addr,
                 TelemetryConfig {
@@ -1791,17 +1838,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
                             .merged(trace::global().snapshot())
                     }),
                     ready: Arc::new(move || {
-                        let promoting = ready_eng.metrics().is_promoting();
-                        Readiness::new(!promoting)
-                            .with("generation", ready_eng.generation().to_string())
+                        // ready = no engine mid-promotion AND the fleet
+                        // agrees on one weight generation (a torn fan-out
+                        // must never look ready)
+                        let promoting = ready_router.is_promoting();
+                        let agreement = ready_router.generation_agreement();
+                        let primary = &ready_router.engines()[0];
+                        Readiness::new(!promoting && agreement.is_ok())
+                            .with(
+                                "generation",
+                                match &agreement {
+                                    Ok(g) => g.to_string(),
+                                    Err(_) => "\"disagreement\"".to_string(),
+                                },
+                            )
+                            .with("engines", ready_router.len().to_string())
                             .with("promoting", if promoting { "true" } else { "false" })
                             .with(
                                 "quarantines",
-                                ready_eng
-                                    .metrics()
-                                    .snapshot()
-                                    .standby_quarantines
-                                    .to_string(),
+                                primary.metrics().snapshot().standby_quarantines.to_string(),
                             )
                     }),
                     flight: None,
@@ -1810,6 +1865,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
             )?;
             println!("telemetry: listening on {}", srv.url());
             Some(srv)
+        }
+        None => None,
+    };
+
+    // --listen: bind the network front door — the Http1Server as the
+    // serving data plane, admission-gated and fanned out by doc hash.
+    // verify.sh sed-parses the printed line, so its shape is load-bearing.
+    let mut frontend = match &listen {
+        Some(addr) => {
+            let fe = Frontend::bind(
+                addr,
+                Arc::clone(&router),
+                FrontendConfig { max_inflight, ..FrontendConfig::default() },
+            )
+            .map_err(|e| anyhow::anyhow!("frontend bind failed: {e}"))?;
+            println!(
+                "frontend: listening on {} (engines={}, max-inflight={})",
+                fe.local_addr(),
+                router.len(),
+                max_inflight
+            );
+            Some(fe)
         }
         None => None,
     };
@@ -1836,7 +1913,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map(|p| p.step)
             .max()
             .unwrap_or(0);
-        standby_handle = Some(standby::spawn(std::sync::Arc::clone(&engine), scfg));
+        // fan-out aware: the one watcher validates once and installs the
+        // candidate on every engine (or none), so the fleet's generations
+        // never tear apart
+        standby_handle = Some(standby::spawn_fanout(router.engines().to_vec(), scfg));
         // --watch-dir alone spawns the watcher and moves on; --standby
         // additionally *requires* the pending promotion before the smoke
         // probes run, so they exercise the promoted generation
@@ -1904,6 +1984,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         println!("repeat request served from cache (no GEMM work)");
     }
+    // With the front door up, prove the full network path once before
+    // declaring the smoke good: TCP connect, POST /encode, parse the
+    // embedding back, and require the router to agree on one generation.
+    if let Some(fe) = frontend.as_ref() {
+        let mut client = EncodeClient::connect(
+            &fe.local_addr().to_string(),
+            std::time::Duration::from_secs(5),
+        )
+        .map_err(|e| anyhow::anyhow!("socket self-probe connect failed: {e}"))?;
+        let probe: Vec<f32> = (0..image_len).map(|_| rng.normal()).collect();
+        match client.encode(&EncodeInput::Image(probe)) {
+            Ok(SocketOutcome::Ok { embedding, .. }) => {
+                println!("socket self-probe OK (embedding dim {})", embedding.len());
+            }
+            Ok(SocketOutcome::Rejected(status)) => {
+                bail!("socket self-probe was shed with status {status} on an idle door");
+            }
+            Err(e) => bail!("socket self-probe failed: {e}"),
+        }
+        let generation = router
+            .generation_agreement()
+            .map_err(|e| anyhow::anyhow!("fleet generation disagreement: {e}"))?;
+        println!(
+            "fleet: {} engine(s) all at generation {generation}",
+            router.len()
+        );
+    }
     let snap = engine.metrics().snapshot();
     snap.print(kind.label());
     if let Some(handle) = standby_handle {
@@ -1918,16 +2025,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // address before the process exits
     let hold_ms: u64 = args.get("hold-ms", 0)?;
     if hold_ms > 0 {
-        println!("holding for {hold_ms} ms (telemetry stays scrapeable)");
+        println!("holding for {hold_ms} ms (front door + telemetry stay up)");
         std::thread::sleep(std::time::Duration::from_millis(hold_ms));
     }
+    // teardown order: stop accepting network work first (front door),
+    // then the telemetry plane, then the engines themselves
+    if let Some(fe) = frontend.as_mut() {
+        fe.shutdown();
+    }
+    drop(frontend);
     if let Some(srv) = telemetry.as_mut() {
         // join the HTTP workers (and release their engine handles) before
         // the engine itself winds down
         srv.shutdown();
     }
     drop(telemetry);
-    drop(engine); // joins the worker pool (Engine::drop drains the queue)
+    drop(engine);
+    drop(router); // last fleet handles: Engine::drop joins each worker pool
     println!("serve smoke OK");
     Ok(())
 }
@@ -2106,6 +2220,63 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         }
         drop(own_srv);
         drop(engine); // joins the worker pool (Engine::drop drains the queue)
+    }
+
+    // --socket ADDR: two extra runs through an already-running
+    // `serve --listen` front door, over real TCP.  The clean run (base
+    // concurrency, under the admission window) must finish with zero
+    // request errors and zero sheds; the overload run (4× base, past the
+    // default window) must observe admission rejections — both gated
+    // again by benchdiff against the checked-in baseline
+    if let Some(addr) = args.flags.get("socket").cloned() {
+        let kind = kinds
+            .iter()
+            .copied()
+            .find(|k| *k == LinearKind::SwitchBack)
+            .unwrap_or(kinds[0]);
+        // the population is rebuilt client-side from the shape flags, so
+        // they must match the server's boot flags for affinity + cache
+        // behavior to line up with the in-process entries
+        let cfg = serve_config_from(args, kind)?;
+        policy_echo = (cfg.policy.max_batch, cfg.policy.max_wait.as_micros() as u64);
+        let base_conc = concurrencies[0];
+        for (overload, concurrency) in
+            [(false, base_conc), (true, base_conc.saturating_mul(4))]
+        {
+            let lg = LoadgenConfig {
+                requests,
+                concurrency,
+                population,
+                image_fraction,
+                seed,
+                ..LoadgenConfig::default()
+            };
+            let report =
+                run_loadgen_socket(&addr, kind.label(), &cfg.encoder, &lg, overload)
+                    .map_err(|e| anyhow::anyhow!("loadgen --socket: {e}"))?;
+            report.print();
+            if report.errors > 0 {
+                bail!(
+                    "loadgen --socket{}: {} requests failed",
+                    if overload { " (overload)" } else { "" },
+                    report.errors
+                );
+            }
+            if overload && report.snapshot.rejected == 0 {
+                bail!(
+                    "loadgen --socket (overload, c={concurrency}): no admission \
+                     rejections — the window never filled, overload not proven"
+                );
+            }
+            if !overload && report.snapshot.rejected > 0 {
+                bail!(
+                    "loadgen --socket (c={concurrency}): {} requests shed under \
+                     the admission window — the clean run must not overload",
+                    report.snapshot.rejected
+                );
+            }
+            reports.push(report);
+        }
     }
 
     // the acceptance ratio: int8 serving vs the f32 baseline
@@ -2444,6 +2615,37 @@ mod tests {
         assert_eq!(a.get::<u64>("scrape-every", 0).unwrap(), 5);
         assert_eq!(a.get::<u64>("hold-ms", 0).unwrap(), 10);
         assert_eq!(a.get::<u32>("follow", 1).unwrap(), 3);
+    }
+
+    #[test]
+    fn socket_and_frontend_flags_parse() {
+        let a = Args::parse(&argv(&[
+            "--listen",
+            "127.0.0.1:0",
+            "--engines",
+            "3",
+            "--max-inflight",
+            "8",
+            "--socket",
+            "127.0.0.1:9",
+        ]))
+        .unwrap();
+        assert_eq!(a.flags.get("listen").map(String::as_str), Some("127.0.0.1:0"));
+        assert_eq!(a.get::<usize>("engines", 2).unwrap(), 3);
+        assert_eq!(a.get::<usize>("max-inflight", 32).unwrap(), 8);
+        assert_eq!(a.flags.get("socket").map(String::as_str), Some("127.0.0.1:9"));
+    }
+
+    #[test]
+    fn serve_rejects_fleet_without_front_door() {
+        // a multi-engine fleet only makes sense behind --listen
+        let a = Args::parse(&argv(&["--engines", "3"])).unwrap();
+        let err = cmd_serve(&a).unwrap_err();
+        assert!(err.to_string().contains("--listen"), "{err}");
+        let a = Args::parse(&argv(&["--engines", "0", "--listen", "127.0.0.1:0"]))
+            .unwrap();
+        let err = cmd_serve(&a).unwrap_err();
+        assert!(err.to_string().contains("--engines"), "{err}");
     }
 
     #[test]

@@ -1,28 +1,33 @@
 //! Minimal hand-rolled HTTP/1.1 server and client over `std::net`.
 //!
-//! Scope: exactly what a *read-only* telemetry plane needs, and nothing
-//! more.  `GET`/`HEAD` only, no request bodies, no TLS, no chunked
-//! transfer.  What it does do, it does carefully:
+//! Scope: what the telemetry plane and the serving front door
+//! ([`crate::serve::frontend`]) need, and nothing more.  `GET`/`HEAD`
+//! plus `POST` with a strictly bounded `Content-Length` body — no TLS,
+//! no chunked transfer.  What it does do, it does carefully:
 //!
 //! * **Parsing with hard limits** — request-line length, per-header-line
-//!   length, header count, method token length.  Every limit violation
-//!   maps to a definite 4xx and the connection is closed; malformed bytes
-//!   never panic the worker.
+//!   length, header count, method token length, body size.  Every limit
+//!   violation maps to a definite 4xx and the connection is closed;
+//!   malformed bytes never panic the worker.  Oversized bodies are
+//!   answered `413` *before* a byte of body is read.
 //! * **Keep-alive** — HTTP/1.1 connections persist by default (HTTP/1.0
 //!   and `Connection: close` do not), bounded by a per-connection request
-//!   cap and a per-read socket timeout so an idle or trickling peer
-//!   cannot pin a worker forever.
+//!   cap and a per-read socket timeout so an idle or trickling peer —
+//!   including a slow-loris body writer — cannot pin a worker forever.
 //! * **Bounded concurrency** — one accept thread feeds a fixed worker
 //!   pool through a bounded queue; when the queue is full the accept
 //!   thread answers `503` inline and closes, so load cannot queue
-//!   unboundedly behind the engine it is observing.
+//!   unboundedly behind the engine it is serving or observing.
 //! * **Clean shutdown** — [`Http1Server::shutdown`] stops the accept
 //!   loop (self-connecting to unblock `accept(2)`), drains the workers
 //!   and joins every thread.  Dropping the server shuts it down too.
 //!
-//! The client half ([`http_get`]) is just enough to scrape the server —
-//! used by `switchback probe` and the loadgen scraper so verify.sh and CI
-//! need no `curl`.
+//! The client half is two shapes: [`http_get`] / [`http_post`] for
+//! one-shot calls (`switchback probe`, the loadgen scraper), and
+//! [`Http1Client`] — a persistent keep-alive connection that
+//! transparently reconnects when the server closes it (request cap,
+//! restart) — for the loadgen socket clients, so verify.sh and CI need
+//! no `curl`.
 
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -57,6 +62,10 @@ pub struct Http1Config {
     /// Accepted connections queued ahead of the workers; beyond this the
     /// accept thread answers `503` inline.
     pub queue_depth: usize,
+    /// Maximum accepted request-body bytes (`POST` payloads); a declared
+    /// `Content-Length` beyond this is answered `413` without reading a
+    /// byte of body.
+    pub max_body: usize,
 }
 
 impl Default for Http1Config {
@@ -69,6 +78,7 @@ impl Default for Http1Config {
             read_timeout: Duration::from_secs(5),
             workers: 2,
             queue_depth: 32,
+            max_body: 1 << 20,
         }
     }
 }
@@ -77,10 +87,11 @@ impl Default for Http1Config {
 // Request / response types
 // ---------------------------------------------------------------------------
 
-/// A parsed request. Bodies are rejected at parse time, so there is none.
+/// A parsed request.
 #[derive(Debug, Clone)]
 pub struct Request {
-    /// `GET` or `HEAD` (anything else is answered `405` before dispatch).
+    /// `GET`, `HEAD` or `POST` (anything else is answered `405` before
+    /// dispatch).
     pub method: String,
     /// Path component of the target, without the query string.
     pub path: String,
@@ -88,6 +99,9 @@ pub struct Request {
     pub query: Option<String>,
     /// Headers with lower-cased names, in arrival order.
     pub headers: Vec<(String, String)>,
+    /// Request body — empty unless the method is `POST`, bounded by
+    /// [`Http1Config::max_body`] and fully read before dispatch.
+    pub body: Vec<u8>,
 }
 
 impl Request {
@@ -137,7 +151,9 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        413 => "Payload Too Large",
         414 => "URI Too Long",
+        429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -248,7 +264,8 @@ fn parse_request<R: BufRead>(r: &mut R, cfg: &Http1Config) -> Parsed {
     // Headers.
     let mut headers: Vec<(String, String)> = Vec::new();
     let mut conn_close = !http11; // HTTP/1.0 defaults to close
-    let mut has_body = false;
+    let mut content_length: u64 = 0;
+    let mut chunked = false;
     loop {
         let line = match read_line_limited(r, cfg.max_header_line) {
             Line::Some(l) => l,
@@ -283,21 +300,40 @@ fn parse_request<R: BufRead>(r: &mut R, cfg: &Http1Config) -> Parsed {
                     conn_close = false;
                 }
             }
-            "content-length" => {
-                if value.parse::<u64>().map(|n| n > 0).unwrap_or(true) {
-                    has_body = true;
-                }
-            }
-            "transfer-encoding" => has_body = true,
+            "content-length" => match value.parse::<u64>() {
+                Ok(n) => content_length = n,
+                Err(_) => return Parsed::Bad(400, "malformed content-length"),
+            },
+            "transfer-encoding" => chunked = true,
             _ => {}
         }
         headers.push((name, value));
     }
-    if has_body {
-        return Parsed::Bad(400, "request bodies not supported");
+    if chunked {
+        return Parsed::Bad(400, "chunked transfer not supported");
     }
-    if method != "GET" && method != "HEAD" {
-        return Parsed::Bad(405, "only GET and HEAD are supported");
+    match method {
+        "GET" | "HEAD" => {
+            if content_length > 0 {
+                return Parsed::Bad(400, "request bodies not supported");
+            }
+        }
+        "POST" => {
+            // Refuse before reading: an oversized declaration never makes
+            // the worker buffer (or even skip) the payload.
+            if content_length > cfg.max_body as u64 {
+                return Parsed::Bad(413, "request body too large");
+            }
+        }
+        _ => return Parsed::Bad(405, "only GET, HEAD and POST are supported"),
+    }
+    let mut body = vec![0u8; content_length as usize];
+    if !body.is_empty() {
+        // The per-read socket timeout covers the body too, so a slow-loris
+        // writer trickling body bytes is dropped, not waited on forever.
+        if r.read_exact(&mut body).is_err() {
+            return Parsed::IoGone;
+        }
     }
 
     let (path, query) = match target.split_once('?') {
@@ -310,6 +346,7 @@ fn parse_request<R: BufRead>(r: &mut R, cfg: &Http1Config) -> Parsed {
             path,
             query,
             headers,
+            body,
         },
         !conn_close,
     )
@@ -408,7 +445,7 @@ impl Http1Server {
                     match tx.try_send(stream) {
                         Ok(()) => {}
                         Err(TrySendError::Full(mut stream)) => {
-                            write_error(&mut stream, 503, "telemetry queue full");
+                            write_error(&mut stream, 503, "connection queue full");
                         }
                         Err(TrySendError::Disconnected(_)) => break,
                     }
@@ -522,6 +559,72 @@ fn split_url(url: &str) -> Result<(String, String)> {
     Ok((authority.to_string(), path.to_string()))
 }
 
+/// Read one HTTP/1.1 response (status line, headers, body) off `reader`.
+/// Returns the response plus whether the server left the connection open
+/// (`Connection: keep-alive` semantics).
+fn read_response<R: BufRead>(reader: &mut R, origin: &str) -> Result<(HttpResponse, bool)> {
+    let status_line = match read_line_limited(reader, 4096) {
+        Line::Some(l) => String::from_utf8(l).context("status line is not utf-8")?,
+        _ => bail!("no response from {origin}"),
+    };
+    let mut parts = status_line.split(' ');
+    let (proto, code) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if !proto.starts_with("HTTP/1.") {
+        bail!("malformed status line from {origin}: {status_line:?}");
+    }
+    let status: u16 = code
+        .parse()
+        .with_context(|| format!("malformed status code from {origin}: {status_line:?}"))?;
+
+    let mut content_length: Option<usize> = None;
+    let mut keep = true; // HTTP/1.1 default
+    loop {
+        let line = match read_line_limited(reader, 16 * 1024) {
+            Line::Some(l) => l,
+            Line::Eof => bail!("truncated response headers from {origin}"),
+            Line::TooLong => bail!("oversized response header from {origin}"),
+            Line::IoErr => bail!("read timed out on response headers from {origin}"),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let line = String::from_utf8_lossy(&line).to_string();
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse::<usize>().ok();
+            } else if name.eq_ignore_ascii_case("connection")
+                && value.trim().eq_ignore_ascii_case("close")
+            {
+                keep = false;
+            }
+        }
+    }
+
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body.resize(n, 0);
+            reader
+                .read_exact(&mut body)
+                .with_context(|| format!("truncated response body from {origin}"))?;
+        }
+        None => {
+            // No framing: the body runs to EOF, so the connection is spent.
+            keep = false;
+            reader
+                .read_to_end(&mut body)
+                .with_context(|| format!("reading response body from {origin} failed"))?;
+        }
+    }
+    Ok((
+        HttpResponse {
+            status,
+            body: String::from_utf8_lossy(&body).to_string(),
+        },
+        keep,
+    ))
+}
+
 /// Blocking `GET url` with a deadline on connect, read and write.
 /// `Connection: close` is always sent, so one call is one TCP connection.
 pub fn http_get(url: &str, timeout: Duration) -> Result<HttpResponse> {
@@ -545,56 +648,104 @@ pub fn http_get(url: &str, timeout: Duration) -> Result<HttpResponse> {
     write_half.flush().ok();
 
     let mut reader = BufReader::new(stream);
-    let status_line = match read_line_limited(&mut reader, 4096) {
-        Line::Some(l) => String::from_utf8(l).context("status line is not utf-8")?,
-        _ => bail!("no response from {url}"),
-    };
-    let mut parts = status_line.split(' ');
-    let (proto, code) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
-    if !proto.starts_with("HTTP/1.") {
-        bail!("malformed status line from {url}: {status_line:?}");
-    }
-    let status: u16 = code
-        .parse()
-        .with_context(|| format!("malformed status code from {url}: {status_line:?}"))?;
+    let (resp, _keep) = read_response(&mut reader, url)?;
+    Ok(resp)
+}
 
-    let mut content_length: Option<usize> = None;
-    loop {
-        let line = match read_line_limited(&mut reader, 16 * 1024) {
-            Line::Some(l) => l,
-            Line::Eof => bail!("truncated response headers from {url}"),
-            Line::TooLong => bail!("oversized response header from {url}"),
-            Line::IoErr => bail!("read timed out on response headers from {url}"),
-        };
-        if line.is_empty() {
-            break;
-        }
-        let line = String::from_utf8_lossy(&line).to_string();
-        if let Some((name, value)) = line.split_once(':') {
-            if name.eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse::<usize>().ok();
+/// Blocking one-shot `POST url` on a fresh connection.  For request
+/// streams, use [`Http1Client`] — the keep-alive variant.
+pub fn http_post(
+    url: &str,
+    content_type: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Result<HttpResponse> {
+    let (authority, path) = split_url(url)?;
+    let mut client = Http1Client::connect(&authority, timeout)?;
+    client.post(&path, content_type, body)
+}
+
+/// A persistent keep-alive HTTP/1.1 client pinned to one authority
+/// (`host:port`).  Requests are issued serially on a single connection;
+/// when the server closes it (per-connection request cap, error close,
+/// restart) the next call transparently redials and retries once.  The
+/// retry can re-send a request the server may already have executed, so
+/// callers should only POST idempotent operations — `/encode` is.
+pub struct Http1Client {
+    authority: String,
+    addr: SocketAddr,
+    timeout: Duration,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+impl Http1Client {
+    /// Resolve `authority` (`host:port`) once; the connection itself is
+    /// dialed lazily on the first request.
+    pub fn connect(authority: &str, timeout: Duration) -> Result<Http1Client> {
+        let addr = authority
+            .to_socket_addrs()
+            .with_context(|| format!("cannot resolve {authority}"))?
+            .next()
+            .with_context(|| format!("no address for {authority}"))?;
+        Ok(Http1Client {
+            authority: authority.to_string(),
+            addr,
+            timeout,
+            conn: None,
+        })
+    }
+
+    fn dial(&self) -> Result<BufReader<TcpStream>> {
+        let stream = TcpStream::connect_timeout(&self.addr, self.timeout)
+            .with_context(|| format!("connect {} failed", self.authority))?;
+        stream.set_read_timeout(Some(self.timeout)).ok();
+        stream.set_write_timeout(Some(self.timeout)).ok();
+        stream.set_nodelay(true).ok();
+        Ok(BufReader::new(stream))
+    }
+
+    /// POST `body` to `path`, reusing the live connection when possible.
+    /// A request that fails on a *reused* connection redials and retries
+    /// once — the server may have closed between requests.
+    pub fn post(&mut self, path: &str, content_type: &str, body: &[u8]) -> Result<HttpResponse> {
+        let reused = self.conn.is_some();
+        match self.try_post(path, content_type, body) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.conn = None;
+                if reused {
+                    self.try_post(path, content_type, body)
+                } else {
+                    Err(e)
+                }
             }
         }
     }
 
-    let mut body = Vec::new();
-    match content_length {
-        Some(n) => {
-            body.resize(n, 0);
-            reader
-                .read_exact(&mut body)
-                .with_context(|| format!("truncated response body from {url}"))?;
+    fn try_post(&mut self, path: &str, content_type: &str, body: &[u8]) -> Result<HttpResponse> {
+        if self.conn.is_none() {
+            self.conn = Some(self.dial()?);
         }
-        None => {
-            reader
-                .read_to_end(&mut body)
-                .with_context(|| format!("reading response body from {url} failed"))?;
+        let reader = self.conn.as_mut().expect("connection just dialed");
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+            self.authority,
+            body.len(),
+        );
+        {
+            let stream = reader.get_mut();
+            stream
+                .write_all(head.as_bytes())
+                .context("write request head failed")?;
+            stream.write_all(body).context("write request body failed")?;
+            stream.flush().context("flush request failed")?;
         }
+        let (resp, keep) = read_response(reader, &self.authority)?;
+        if !keep {
+            self.conn = None;
+        }
+        Ok(resp)
     }
-    Ok(HttpResponse {
-        status,
-        body: String::from_utf8_lossy(&body).to_string(),
-    })
 }
 
 // ---------------------------------------------------------------------------
@@ -605,13 +756,29 @@ pub fn http_get(url: &str, timeout: Duration) -> Result<HttpResponse> {
 mod tests {
     use super::*;
 
-    /// Echo-ish handler: 200 with the path as body, 404 on `/missing`.
+    /// Echo-ish handler: 200 with the path as body, 404 on `/missing`,
+    /// body echo on `/echo`, a 2 MiB payload on `/big`.
     fn test_handler() -> Handler {
         Arc::new(|req: &Request| {
             if req.path == "/missing" {
                 Response::not_found()
             } else if req.path == "/panic" {
                 panic!("handler bug under test");
+            } else if req.path == "/echo" {
+                Response::text(
+                    200,
+                    format!(
+                        "len={} body={}",
+                        req.body.len(),
+                        String::from_utf8_lossy(&req.body)
+                    ),
+                )
+            } else if req.path == "/big" {
+                Response {
+                    status: 200,
+                    content_type: "application/octet-stream".to_string(),
+                    body: vec![b'x'; 2 << 20],
+                }
             } else {
                 Response::text(
                     200,
@@ -872,6 +1039,150 @@ mod tests {
         srv.shutdown(); // idempotent
         let after = http_get(&format!("http://{addr}/x"), Duration::from_millis(500));
         assert!(after.is_err(), "server must stop serving after shutdown");
+    }
+
+    // -- POST bodies + persistent client ------------------------------------
+
+    #[test]
+    fn post_roundtrip_and_keep_alive_via_persistent_client() {
+        let srv = spawn(Http1Config::default());
+        let authority = srv.local_addr().to_string();
+        let mut client = Http1Client::connect(&authority, Duration::from_secs(5)).unwrap();
+        for i in 0..3 {
+            let body = format!("payload-{i}");
+            let resp = client.post("/echo", "text/plain", body.as_bytes()).unwrap();
+            assert_eq!(resp.status, 200);
+            assert_eq!(resp.body, format!("len={} body={body}", body.len()));
+        }
+        // One-shot helper takes the same path on a fresh connection.
+        let resp = http_post(
+            &url(&srv, "/echo"),
+            "text/plain",
+            b"oneshot",
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(resp.body, "len=7 body=oneshot");
+    }
+
+    #[test]
+    fn post_with_empty_body_is_ok() {
+        let srv = spawn(Http1Config::default());
+        let out = raw_roundtrip(
+            &srv,
+            b"POST /echo HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+        assert!(out.contains("len=0"), "{out}");
+    }
+
+    #[test]
+    fn persistent_client_reconnects_past_request_cap() {
+        let cfg = Http1Config {
+            max_requests_per_conn: 2,
+            ..Http1Config::default()
+        };
+        let srv = spawn(cfg);
+        let authority = srv.local_addr().to_string();
+        let mut client = Http1Client::connect(&authority, Duration::from_secs(5)).unwrap();
+        // 5 requests over a 2-request cap forces at least two reconnects;
+        // every call must still succeed.
+        for i in 0..5 {
+            let resp = client
+                .post("/echo", "text/plain", format!("r{i}").as_bytes())
+                .unwrap();
+            assert_eq!(resp.status, 200, "request {i}");
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let cfg = Http1Config {
+            max_body: 64,
+            ..Http1Config::default()
+        };
+        let srv = spawn(cfg);
+        // The 413 must come back on the declaration alone — no body sent.
+        let out = raw_roundtrip(
+            &srv,
+            b"POST /echo HTTP/1.1\r\nHost: t\r\nContent-Length: 1048576\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 413"), "{out}");
+        // Server keeps serving other connections.
+        let resp = http_get(&url(&srv, "/alive"), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn malformed_content_length_is_400() {
+        let srv = spawn(Http1Config::default());
+        let out = raw_roundtrip(
+            &srv,
+            b"POST /echo HTTP/1.1\r\nHost: t\r\nContent-Length: banana\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        let out = raw_roundtrip(
+            &srv,
+            b"POST /echo HTTP/1.1\r\nHost: t\r\nContent-Length: -5\r\n\r\n",
+        );
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    }
+
+    // -- network fault injection (the front door must 4xx-or-close, never
+    //    panic, and keep serving sibling connections) -----------------------
+
+    #[test]
+    fn slow_loris_body_is_dropped_and_sibling_survives() {
+        let cfg = Http1Config {
+            read_timeout: Duration::from_millis(150),
+            ..Http1Config::default()
+        };
+        let srv = spawn(cfg);
+        let mut s = raw_conn(&srv);
+        s.write_all(b"POST /echo HTTP/1.1\r\nHost: t\r\nContent-Length: 10\r\n\r\n")
+            .unwrap();
+        // Trickle one byte, then stall past the read timeout.
+        s.write_all(b"x").unwrap();
+        // A healthy sibling is served *while* the loris stalls.
+        let resp = http_get(&url(&srv, "/sibling"), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+        // The stalled connection is dropped without a response.
+        let mut buf = [0u8; 64];
+        let n = s.read(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "expected EOF after body read timeout");
+        // And the worker that held it is back in rotation.
+        let resp = http_get(&url(&srv, "/after-loris"), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn disconnect_mid_body_is_survived() {
+        let srv = spawn(Http1Config::default());
+        {
+            let mut s = raw_conn(&srv);
+            s.write_all(b"POST /echo HTTP/1.1\r\nHost: t\r\nContent-Length: 10\r\n\r\nabc")
+                .unwrap();
+            drop(s); // vanish with 7 body bytes owed
+        }
+        let resp = http_get(&url(&srv, "/alive"), Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn premature_eof_during_response_write_is_survived() {
+        let srv = spawn(Http1Config::default());
+        // Ask for 2 MiB, then walk away before reading any of it: the
+        // server's write eventually fails (reset/EPIPE) or lands in limbo —
+        // either way no panic, and the pool keeps serving.
+        for _ in 0..3 {
+            let mut s = raw_conn(&srv);
+            s.write_all(b"GET /big HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+            drop(s);
+        }
+        for _ in 0..4 {
+            let resp = http_get(&url(&srv, "/alive"), Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.status, 200);
+        }
     }
 
     #[test]

@@ -1,16 +1,19 @@
 //! Networking layer — hand-rolled, `std::net` only (the crate vendors no
 //! HTTP stack and CI is offline).
 //!
-//! [`http1`] is a deliberately minimal HTTP/1.1 server + client pair built
-//! for the read-only telemetry plane (`trace::telemetry_http`): strict
-//! request parsing with hard limits, keep-alive with a per-connection
-//! request cap, a bounded accept-thread + worker-pool model, and a clean
-//! shutdown handle.  It is also the first proving ground for the
-//! connection machinery the planned network serving front-end
-//! (ROADMAP #1) will reuse.
+//! [`http1`] is a deliberately minimal HTTP/1.1 server + client pair:
+//! strict request parsing with hard limits (request line, headers, body),
+//! keep-alive with a per-connection request cap, a bounded accept-thread +
+//! worker-pool model, and a clean shutdown handle.  It started life as the
+//! wire layer of the read-only telemetry plane (`trace::telemetry_http`)
+//! and now also carries the serving data plane: `serve::frontend` binds it
+//! as the `POST /encode` front door, and [`http1::Http1Client`] is the
+//! persistent reconnect-on-close client the loadgen socket mode drives it
+//! with.
 
 pub mod http1;
 
 pub use http1::{
-    http_get, Handler, Http1Config, Http1Server, HttpResponse, Request, Response,
+    http_get, http_post, Handler, Http1Client, Http1Config, Http1Server, HttpResponse, Request,
+    Response,
 };

@@ -302,6 +302,17 @@ impl Engine {
         self.shutdown_inner();
     }
 
+    /// Chaos hook: abruptly close the request queue *without* consuming
+    /// the engine or joining its workers (contrast [`Engine::shutdown`]).
+    /// Already-queued work still drains and gets replies; every later
+    /// [`Engine::encode`] is shed deterministically (`"engine is shut
+    /// down"`, counted in the `rejected` counter).  The router chaos test
+    /// kills one engine of a fleet mid-load with this and asserts the
+    /// siblings keep serving.
+    pub fn kill(&self) {
+        self.shared.queue.close();
+    }
+
     fn shutdown_inner(&mut self) {
         self.shared.queue.close();
         for h in self.workers.drain(..) {

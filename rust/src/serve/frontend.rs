@@ -1,0 +1,644 @@
+//! The network front door: [`Http1Server`] bound as the serving data
+//! plane (DESIGN.md §Network-front-door).
+//!
+//! **Wire format.** `POST /encode` with a JSON body,
+//! `{"kind":"image","data":[…]}` or `{"kind":"text","tokens":[…]}`
+//! (`util::json` both ways — no serde).  Success is
+//! `{"embedding":[…],"cache_hit":…,"engine":…,"generation":…}`; every
+//! error is `{"error":"…"}` with a status that tells the client what to
+//! do: `400` fix the request, `429` back off (admission window full),
+//! `503` a component is down or the accept queue overflowed.  Bodies are
+//! length-prefixed by `Content-Length` and bounded by
+//! [`Http1Config::max_body`]; an oversized declaration is `413` before a
+//! byte of payload is read.
+//!
+//! **Backpressure, never unbounded queueing.** Three bounded windows
+//! stack up:
+//! 1. *per connection* — HTTP/1.1 requests on one connection are served
+//!    serially, so a connection has at most one request in flight;
+//! 2. *per server* — the admission window
+//!    ([`FrontendConfig::max_inflight`]) caps requests inside the
+//!    parse→route→encode section across all connections; overflow is an
+//!    immediate `429` that also increments the primary engine's
+//!    `rejected` counter (the same ledger in-process sheds use);
+//! 3. *accept* — beyond `queue_depth` waiting connections the accept
+//!    thread answers `503` inline (`net::http1`).
+//!
+//! Behind the door, requests route by doc-hash affinity to a fleet of
+//! engines ([`super::router`]); the engine's own bounded batch queue is
+//! the final stage, and its sheds surface as `503`.
+
+use super::engine::EncodeResponse;
+use super::router::Router;
+use super::EncodeInput;
+use crate::net::http1::{Handler, Http1Client, Http1Config, Http1Server, Request, Response};
+use crate::util::json::{self, ObjWriter, Value};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Front-door knobs.
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    /// Requests admitted into parse→route→encode at once, across all
+    /// connections; beyond this the door answers `429` immediately.
+    /// 0 disables the window (the accept queue still bounds load).
+    pub max_inflight: usize,
+    /// Wire-layer limits.  The worker pool is per-*connection* (a
+    /// persistent client pins a worker while connected), so `workers`
+    /// must comfortably exceed the expected concurrent client count —
+    /// the default here is sized for loadgen's overload runs, not the
+    /// telemetry plane's two-worker default.
+    pub http: Http1Config,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            max_inflight: 32,
+            http: Http1Config {
+                workers: 96,
+                queue_depth: 256,
+                ..Http1Config::default()
+            },
+        }
+    }
+}
+
+/// The global in-flight window: a permit per admitted request, released
+/// on drop (panic-safe).  `cap == 0` means unlimited.
+struct Admission {
+    cap: usize,
+    inflight: AtomicUsize,
+}
+
+struct Permit<'a>(&'a Admission);
+
+impl Admission {
+    fn new(cap: usize) -> Self {
+        Admission { cap, inflight: AtomicUsize::new(0) }
+    }
+
+    fn try_acquire(&self) -> Option<Permit<'_>> {
+        if self.cap == 0 {
+            return Some(Permit(self));
+        }
+        // Optimistic claim: overshoot briefly, then give the slot back.
+        if self.inflight.fetch_add(1, Ordering::AcqRel) < self.cap {
+            Some(Permit(self))
+        } else {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            None
+        }
+    }
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        if self.0.cap != 0 {
+            self.0.inflight.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// A running front door over a [`Router`] fleet.  Shut down explicitly
+/// or on drop (the inner server joins its threads either way).
+pub struct Frontend {
+    server: Http1Server,
+    admission: Arc<Admission>,
+}
+
+impl Frontend {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve `POST /encode` over
+    /// `router`.
+    pub fn bind(addr: &str, router: Arc<Router>, cfg: FrontendConfig) -> Result<Frontend, String> {
+        let admission = Arc::new(Admission::new(cfg.max_inflight));
+        let gate = Arc::clone(&admission);
+        let handler: Handler = Arc::new(move |req: &Request| handle(req, &router, &gate));
+        let server =
+            Http1Server::bind(addr, cfg.http, handler).map_err(|e| format!("frontend: {e:#}"))?;
+        Ok(Frontend { server, admission })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.server.local_addr()
+    }
+
+    /// Stop accepting, drain and join. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.server.shutdown();
+    }
+
+    /// Test hook: occupy the whole admission window so the next request
+    /// deterministically sees `429`.
+    #[cfg(test)]
+    fn hold_window(&self) -> Vec<Permit<'_>> {
+        std::iter::from_fn(|| self.admission.try_acquire()).collect()
+    }
+}
+
+fn err_json(status: u16, msg: &str) -> Response {
+    Response::json(status, format!("{{\"error\":{}}}", json::quote(msg)))
+}
+
+fn handle(req: &Request, router: &Arc<Router>, gate: &Admission) -> Response {
+    if req.path != "/encode" {
+        return err_json(404, "unknown path; the data plane serves POST /encode");
+    }
+    if req.method != "POST" {
+        return err_json(405, "use POST /encode");
+    }
+    // Admission first — under overload the door sheds before paying for
+    // JSON parsing.  The primary engine's `rejected` counter is the
+    // ledger (the per-engine affinity is unknown before parsing).
+    let Some(_permit) = gate.try_acquire() else {
+        router.engines()[0].metrics().rejected.inc();
+        return err_json(429, "admission window full; back off and retry");
+    };
+    let input = match parse_encode_body(&req.body) {
+        Ok(input) => input,
+        Err(e) => return err_json(400, &e),
+    };
+    let idx = router.route(&input);
+    let engine = &router.engines()[idx];
+    match engine.encode(input) {
+        Ok(resp) => ok_json(&resp, idx, engine.generation()),
+        // The engine's own shed (closed queue) — a component is down.
+        Err(e) if e.contains("shut down") => err_json(503, &e),
+        // Validation errors — the client sent a bad payload.
+        Err(e) => err_json(400, &e),
+    }
+}
+
+fn ok_json(resp: &EncodeResponse, engine: usize, generation: u64) -> Response {
+    let mut w = ObjWriter::new();
+    w.field_f32_arr("embedding", &resp.embedding)
+        .field_bool("cache_hit", resp.cache_hit)
+        .field_u64("engine", engine as u64)
+        .field_u64("generation", generation);
+    Response::json(200, w.finish())
+}
+
+/// Parse one `/encode` request body into an [`EncodeInput`].
+fn parse_encode_body(body: &[u8]) -> Result<EncodeInput, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let v = json::parse(text).map_err(|e| format!("body is not valid JSON: {e}"))?;
+    let kind = v
+        .get("kind")
+        .and_then(Value::as_str)
+        .ok_or_else(|| "missing string field \"kind\"".to_string())?;
+    match kind {
+        "image" => {
+            let arr = v
+                .get("data")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| "image requests need a \"data\" array".to_string())?;
+            let mut px = Vec::with_capacity(arr.len());
+            for x in arr {
+                px.push(
+                    x.as_f64()
+                        .ok_or_else(|| "\"data\" must be all numbers".to_string())?
+                        as f32,
+                );
+            }
+            Ok(EncodeInput::Image(px))
+        }
+        "text" => {
+            let arr = v
+                .get("tokens")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| "text requests need a \"tokens\" array".to_string())?;
+            let mut toks = Vec::with_capacity(arr.len());
+            for x in arr {
+                toks.push(
+                    x.as_f64()
+                        .ok_or_else(|| "\"tokens\" must be all numbers".to_string())?
+                        as i32,
+                );
+            }
+            Ok(EncodeInput::Text(toks))
+        }
+        other => Err(format!("unknown kind {other:?}; expected \"image\" or \"text\"")),
+    }
+}
+
+/// Serialize one [`EncodeInput`] as an `/encode` request body — the
+/// client half of the wire format, shared by loadgen and the tests.
+pub fn encode_request_json(input: &EncodeInput) -> String {
+    let mut w = ObjWriter::new();
+    match input {
+        EncodeInput::Image(px) => {
+            w.field_str("kind", "image").field_f32_arr("data", px);
+        }
+        EncodeInput::Text(toks) => {
+            let toks_f: Vec<f32> = toks.iter().map(|t| *t as f32).collect();
+            w.field_str("kind", "text").field_f32_arr("tokens", &toks_f);
+        }
+    }
+    w.finish()
+}
+
+/// What one socket `/encode` call produced, from the client's seat.
+#[derive(Debug)]
+pub enum SocketOutcome {
+    /// 200 with a well-formed embedding.
+    Ok {
+        cache_hit: bool,
+        embedding: Vec<f32>,
+    },
+    /// Explicit admission shed (`429`) or component-down (`503`) — the
+    /// bounded-queue design working as intended, not a request error.
+    Rejected(u16),
+}
+
+/// A persistent-connection `/encode` client: one [`Http1Client`] (TCP
+/// keep-alive, transparent reconnect when the server closes) plus the
+/// wire format.  Loadgen's `--socket` worker threads each own one.
+pub struct EncodeClient {
+    inner: Http1Client,
+}
+
+impl EncodeClient {
+    /// `addr` is `host:port` (as printed by `serve --listen`).
+    pub fn connect(addr: &str, timeout: Duration) -> Result<EncodeClient, String> {
+        let inner = Http1Client::connect(addr, timeout).map_err(|e| format!("{e:#}"))?;
+        Ok(EncodeClient { inner })
+    }
+
+    /// One round trip.  `Err` is a *request error* (transport failure or
+    /// a 4xx/5xx outside the explicit-shed statuses) — loadgen counts
+    /// those as errors, while [`SocketOutcome::Rejected`] counts as
+    /// admission-control sheds.
+    pub fn encode(&mut self, input: &EncodeInput) -> Result<SocketOutcome, String> {
+        let body = encode_request_json(input);
+        let resp = self
+            .inner
+            .post("/encode", "application/json", body.as_bytes())
+            .map_err(|e| format!("{e:#}"))?;
+        match resp.status {
+            200 => {
+                let v = json::parse(&resp.body)
+                    .map_err(|e| format!("malformed 200 body: {e}"))?;
+                let cache_hit = v
+                    .get("cache_hit")
+                    .and_then(Value::as_bool)
+                    .ok_or("200 body missing cache_hit")?;
+                let emb = v
+                    .get("embedding")
+                    .and_then(Value::as_arr)
+                    .ok_or("200 body missing embedding")?;
+                let mut embedding = Vec::with_capacity(emb.len());
+                for x in emb {
+                    embedding.push(x.as_f64().ok_or("embedding must be numbers")? as f32);
+                }
+                Ok(SocketOutcome::Ok { cache_hit, embedding })
+            }
+            429 | 503 => Ok(SocketOutcome::Rejected(resp.status)),
+            s => Err(format!("status {s}: {}", resp.body.trim())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt;
+    use crate::ckpt::TrainCheckpoint;
+    use crate::config::TrainHyper;
+    use crate::data::DataCursor;
+    use crate::net::http1::http_post;
+    use crate::nn::LinearKind;
+    use crate::optim::OptimizerState;
+    use crate::serve::batcher::BatchPolicy;
+    use crate::serve::encoder::{ClipEncoder, EncoderConfig};
+    use crate::serve::engine::{Engine, ServeConfig};
+    use crate::serve::standby::{Standby, StandbyConfig, StandbyEvent};
+    use crate::tensor::Rng;
+    use crate::train::ClipTrainModel;
+
+    fn tiny_cfg(seed: u64) -> EncoderConfig {
+        EncoderConfig {
+            kind: LinearKind::SwitchBack,
+            dim: 16,
+            heads: 2,
+            blocks: 1,
+            embed_dim: 8,
+            patches: 4,
+            patch_dim: 12,
+            text_seq: 5,
+            vocab: 64,
+            seed,
+        }
+    }
+
+    fn serve_cfg(enc: EncoderConfig) -> ServeConfig {
+        ServeConfig {
+            encoder: enc,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 2,
+            cache_capacity: 256,
+            cache_shards: 2,
+        }
+    }
+
+    /// A bound frontend over `n` fresh engines, with a small worker pool
+    /// (tests use few connections).
+    fn frontend(n: usize) -> (Frontend, Arc<Router>) {
+        let router = Arc::new(Router::start(serve_cfg(tiny_cfg(7)), n));
+        let cfg = FrontendConfig {
+            max_inflight: 16,
+            http: Http1Config {
+                workers: 8,
+                ..Http1Config::default()
+            },
+        };
+        let fe = Frontend::bind("127.0.0.1:0", Arc::clone(&router), cfg).unwrap();
+        (fe, router)
+    }
+
+    fn image_for(cfg: &EncoderConfig, seed: u64) -> EncodeInput {
+        let mut r = Rng::seed(seed);
+        EncodeInput::Image((0..cfg.image_len()).map(|_| r.normal()).collect())
+    }
+
+    fn text_for(cfg: &EncoderConfig, seed: u64) -> EncodeInput {
+        let mut r = Rng::seed(seed);
+        EncodeInput::Text((0..cfg.text_seq).map(|_| r.below(cfg.vocab) as i32).collect())
+    }
+
+    #[test]
+    fn socket_roundtrip_matches_in_process_encode() {
+        let (fe, router) = frontend(2);
+        let addr = fe.local_addr().to_string();
+        let mut client = EncodeClient::connect(&addr, Duration::from_secs(5)).unwrap();
+        for input in [
+            image_for(router.encoder_config(), 3),
+            text_for(router.encoder_config(), 4),
+        ] {
+            let want = router.encode(input.clone()).unwrap();
+            match client.encode(&input).unwrap() {
+                SocketOutcome::Ok { cache_hit, embedding } => {
+                    // The doc was just encoded in-process on the same
+                    // affined engine, so the socket path must hit its
+                    // cache and return the identical embedding.
+                    assert!(cache_hit, "affined cache must be hot");
+                    assert_eq!(embedding, *want.embedding);
+                }
+                other => panic!("expected Ok, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_bodies_are_400_and_the_door_keeps_serving() {
+        let (fe, router) = frontend(1);
+        let base = format!("http://{}", fe.local_addr());
+        let t = Duration::from_secs(5);
+        for bad in [
+            "not json at all".to_string(),
+            "{\"kind\":\"soup\"}".to_string(),
+            "{\"no\":\"kind\"}".to_string(),
+            "{\"kind\":\"image\",\"data\":[1,\"x\"]}".to_string(),
+            // right shape field, wrong length → engine-side validation
+            "{\"kind\":\"text\",\"tokens\":[1,2]}".to_string(),
+        ] {
+            let resp =
+                http_post(&format!("{base}/encode"), "application/json", bad.as_bytes(), t)
+                    .unwrap();
+            assert_eq!(resp.status, 400, "{bad} → {}", resp.body);
+            assert!(resp.body.contains("error"), "{}", resp.body);
+        }
+        // Unknown path and wrong method have their own statuses.
+        assert_eq!(http_post(&format!("{base}/nope"), "application/json", b"{}", t)
+                .unwrap()
+                .status, 404);
+        assert_eq!(
+            crate::net::http1::http_get(&format!("{base}/encode"), t).unwrap().status,
+            405
+        );
+        // A healthy request still round-trips after all that.
+        let mut client =
+            EncodeClient::connect(&fe.local_addr().to_string(), t).unwrap();
+        let ok = client.encode(&image_for(router.encoder_config(), 9)).unwrap();
+        assert!(matches!(ok, SocketOutcome::Ok { .. }));
+    }
+
+    #[test]
+    fn admission_window_full_is_429_and_counted_as_rejected() {
+        let (fe, router) = frontend(1);
+        let rejected_before = router.engines()[0].metrics().snapshot().rejected;
+        let permits = fe.hold_window();
+        assert_eq!(permits.len(), 16, "test must seize the whole window");
+        let mut client =
+            EncodeClient::connect(&fe.local_addr().to_string(), Duration::from_secs(5)).unwrap();
+        match client.encode(&image_for(router.encoder_config(), 5)).unwrap() {
+            SocketOutcome::Rejected(status) => assert_eq!(status, 429),
+            other => panic!("expected 429 shed, got {other:?}"),
+        }
+        assert_eq!(
+            router.engines()[0].metrics().snapshot().rejected,
+            rejected_before + 1,
+            "admission sheds must land in the rejected ledger"
+        );
+        // Release the window: the same client and connection recover.
+        drop(permits);
+        let ok = client.encode(&image_for(router.encoder_config(), 5)).unwrap();
+        assert!(matches!(ok, SocketOutcome::Ok { .. }));
+    }
+
+    #[test]
+    fn dead_engine_sheds_as_503_while_siblings_serve() {
+        let (fe, router) = frontend(3);
+        let cfg = router.encoder_config().clone();
+        // Find one doc per engine.
+        let mut per_engine: Vec<Option<EncodeInput>> = vec![None, None, None];
+        for seed in 0..64 {
+            let d = image_for(&cfg, seed);
+            let idx = router.route(&d);
+            per_engine[idx].get_or_insert(d);
+        }
+        let docs: Vec<EncodeInput> =
+            per_engine.into_iter().map(|d| d.expect("doc per engine")).collect();
+
+        router.engines()[1].kill();
+        let mut client =
+            EncodeClient::connect(&fe.local_addr().to_string(), Duration::from_secs(5)).unwrap();
+        match client.encode(&docs[1]).unwrap() {
+            SocketOutcome::Rejected(status) => assert_eq!(status, 503),
+            other => panic!("expected 503 from the dead engine, got {other:?}"),
+        }
+        for alive in [0usize, 2] {
+            assert!(
+                matches!(client.encode(&docs[alive]).unwrap(), SocketOutcome::Ok { .. }),
+                "sibling engine {alive} must keep serving"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_body_is_413_and_the_connection_pool_survives() {
+        let router = Arc::new(Router::start(serve_cfg(tiny_cfg(7)), 1));
+        let cfg = FrontendConfig {
+            max_inflight: 4,
+            http: Http1Config {
+                workers: 4,
+                max_body: 128,
+                ..Http1Config::default()
+            },
+        };
+        let fe = Frontend::bind("127.0.0.1:0", Arc::clone(&router), cfg).unwrap();
+        let big = encode_request_json(&image_for(router.encoder_config(), 1));
+        assert!(big.len() > 128);
+        let resp = http_post(
+            &format!("http://{}/encode", fe.local_addr()),
+            "application/json",
+            big.as_bytes(),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 413);
+        // Sibling connections unaffected; a small text request fits.
+        let mut client =
+            EncodeClient::connect(&fe.local_addr().to_string(), Duration::from_secs(5)).unwrap();
+        let small = text_for(router.encoder_config(), 2);
+        assert!(encode_request_json(&small).len() <= 128);
+        assert!(matches!(client.encode(&small).unwrap(), SocketOutcome::Ok { .. }));
+    }
+
+    fn ckpt_with(params: Vec<Vec<f32>>, step: u64, enc: &EncoderConfig) -> TrainCheckpoint {
+        TrainCheckpoint {
+            step,
+            encoder: enc.clone(),
+            hyper: TrainHyper::preset(1000),
+            shifts: vec![],
+            batch: 4,
+            grad_shards: 1,
+            param_names: (0..params.len()).map(|i| format!("t{i}")).collect(),
+            params,
+            opt: OptimizerState { name: "lion".into(), t: step, slots: vec![] },
+            data: DataCursor {
+                step,
+                gain: 1.0,
+                mapping: vec![0],
+                rng: [1, 2, 3, 4],
+                rng_spare: None,
+            },
+        }
+    }
+
+    /// Satellite: one standby watcher promotes a snapshot across N=3
+    /// engines while real TCP clients hammer the door — same generation
+    /// everywhere, canary-reject touches nothing, zero request errors.
+    #[test]
+    fn fanout_promotion_under_concurrent_socket_load() {
+        let dir = std::env::temp_dir().join("sbck_frontend_fanout");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let enc_cfg = tiny_cfg(7);
+        let params = ClipTrainModel::new(enc_cfg.clone()).collect_params();
+        let engines: Vec<Arc<Engine>> = (0..3)
+            .map(|_| {
+                let weights = ckpt::encoder_weights(&enc_cfg, &params).unwrap();
+                let enc = ClipEncoder::from_weights(enc_cfg.clone(), weights);
+                Arc::new(Engine::start_with_encoder(serve_cfg(enc_cfg.clone()), enc))
+            })
+            .collect();
+        let router = Arc::new(Router::from_engines(engines));
+        let fe = Frontend::bind(
+            "127.0.0.1:0",
+            Arc::clone(&router),
+            FrontendConfig {
+                max_inflight: 32,
+                http: Http1Config { workers: 8, ..Http1Config::default() },
+            },
+        )
+        .unwrap();
+        let addr = fe.local_addr().to_string();
+
+        let mut cfg = StandbyConfig::new(&dir);
+        cfg.baseline = Some(params.clone());
+        let mut sb = Standby::new_fanout(router.engines().to_vec(), cfg);
+
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (events, errors) = std::thread::scope(|s| {
+            // Two real TCP clients loop over a small doc population for
+            // the whole promote + reject sequence.
+            let mut handles = Vec::new();
+            for t in 0..2u64 {
+                let addr = addr.clone();
+                let stop = Arc::clone(&stop);
+                let enc_cfg = enc_cfg.clone();
+                handles.push(s.spawn(move || {
+                    let mut client =
+                        EncodeClient::connect(&addr, Duration::from_secs(5)).unwrap();
+                    let mut errors = 0u64;
+                    let mut i = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let input = if i % 2 == 0 {
+                            image_for(&enc_cfg, 1000 + t * 100 + (i % 8))
+                        } else {
+                            text_for(&enc_cfg, 2000 + t * 100 + (i % 8))
+                        };
+                        if client.encode(&input).is_err() {
+                            errors += 1;
+                        }
+                        i += 1;
+                    }
+                    errors
+                }));
+            }
+
+            // Promote a near-identical snapshot across the fleet.
+            let newer: Vec<Vec<f32>> =
+                params.iter().map(|p| p.iter().map(|v| v * 1.001).collect()).collect();
+            ckpt::save(&ckpt::snapshot_path(&dir, 10), &ckpt_with(newer, 10, &enc_cfg))
+                .unwrap();
+            let ev1 = sb.poll_once();
+            // Then a drifted one: rejected, nothing moves anywhere.
+            let alien = ClipTrainModel::new(tiny_cfg(999)).collect_params();
+            ckpt::save(&ckpt::snapshot_path(&dir, 20), &ckpt_with(alien, 20, &enc_cfg))
+                .unwrap();
+            let ev2 = sb.poll_once();
+
+            stop.store(true, Ordering::Relaxed);
+            let errors: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            ((ev1, ev2), errors)
+        });
+
+        assert!(
+            matches!(events.0, StandbyEvent::Promoted { generation: 1, .. }),
+            "expected fan-out promotion, got {:?}",
+            events.0
+        );
+        assert!(
+            matches!(events.1, StandbyEvent::Rejected { .. }),
+            "expected canary rejection, got {:?}",
+            events.1
+        );
+        assert_eq!(errors, 0, "socket clients must see zero request errors");
+        // Same generation everywhere; the reject left all of them alone.
+        assert_eq!(router.generations(), vec![1, 1, 1]);
+        assert_eq!(router.generation_agreement().unwrap(), 1);
+        for e in router.engines() {
+            let snap = e.metrics().snapshot();
+            assert_eq!(snap.standby_promotions, 1, "every engine promoted once");
+            assert_eq!(snap.standby_rejects, 1, "every engine recorded the reject");
+        }
+        // Per-engine caches stayed generation-coherent: the same doc now
+        // encodes identically on every engine (fresh weights everywhere).
+        let probe = image_for(&enc_cfg, 31);
+        let embs: Vec<Vec<f32>> = router
+            .engines()
+            .iter()
+            .map(|e| e.encode(probe.clone()).unwrap().embedding.to_vec())
+            .collect();
+        assert_eq!(embs[0], embs[1]);
+        assert_eq!(embs[1], embs[2]);
+    }
+}

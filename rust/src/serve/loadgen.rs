@@ -15,10 +15,19 @@
 //!
 //! Results are written to `BENCH_serve.json` (machine-readable, one entry
 //! per kind×concurrency) so the perf trajectory is tracked across PRs.
+//!
+//! [`run_loadgen_socket`] is the same closed loop over real TCP: each
+//! client thread owns a persistent [`EncodeClient`] against a bound
+//! `serve --listen` front door, explicit admission sheds (`429`/`503`)
+//! land in a client-side `rejected` counter, and the report's entry is
+//! tagged `"socket":true` (plus `"overload":true` for the
+//! deliberately-over-window run) so benchdiff gates the wire path
+//! separately from the in-process path.
 
-use super::encoder::ClipEncoder;
+use super::encoder::{ClipEncoder, EncoderConfig};
 use super::engine::Engine;
-use super::metrics::ServeSnapshot;
+use super::frontend::{EncodeClient, SocketOutcome};
+use super::metrics::{ServeMetrics, ServeSnapshot};
 use super::standby::{validate_and_promote, CanarySet};
 use super::EncodeInput;
 use crate::net::http_get;
@@ -89,6 +98,12 @@ pub struct LoadgenReport {
     pub scrape_errors: u64,
     /// p99 scrape latency in µs (0.0 when no scraper)
     pub scrape_p99_us: f64,
+    /// true when the run went over real TCP through the front door (the
+    /// snapshot is then the *client-side* ledger, not an engine's)
+    pub socket: bool,
+    /// true for the deliberate-overload socket run: concurrency beyond
+    /// the server's admission window, expecting explicit `429` sheds
+    pub overload: bool,
     pub snapshot: ServeSnapshot,
 }
 
@@ -123,12 +138,26 @@ impl LoadgenReport {
                 self.scrape_p99_us,
             );
         }
+        if self.socket {
+            println!(
+                "  [{}] socket{}: {} explicit 429/503 sheds, {} errors",
+                self.kind,
+                if self.overload { " overload" } else { "" },
+                self.snapshot.rejected,
+                self.errors,
+            );
+        }
     }
 }
 
 /// Build the deterministic input population for an engine's model shape.
 pub fn build_population(engine: &Engine, cfg: &LoadgenConfig) -> Vec<EncodeInput> {
-    let enc = engine_config(engine);
+    build_population_for(engine.encoder_config(), cfg)
+}
+
+/// [`build_population`] from a bare shape — the socket path has no local
+/// [`Engine`], only the server's advertised [`EncoderConfig`].
+pub fn build_population_for(enc: &EncoderConfig, cfg: &LoadgenConfig) -> Vec<EncodeInput> {
     let rng = Rng::seed(cfg.seed);
     let n_images =
         ((cfg.population as f32 * cfg.image_fraction) as usize).min(cfg.population);
@@ -137,21 +166,16 @@ pub fn build_population(engine: &Engine, cfg: &LoadgenConfig) -> Vec<EncodeInput
             let mut r = rng.fork(i as u64);
             if i < n_images {
                 let px =
-                    (0..enc.0).map(|_| r.normal()).collect::<Vec<f32>>();
+                    (0..enc.image_len()).map(|_| r.normal()).collect::<Vec<f32>>();
                 EncodeInput::Image(px)
             } else {
-                let toks =
-                    (0..enc.1).map(|_| r.below(enc.2) as i32).collect::<Vec<i32>>();
+                let toks = (0..enc.text_seq)
+                    .map(|_| r.below(enc.vocab) as i32)
+                    .collect::<Vec<i32>>();
                 EncodeInput::Text(toks)
             }
         })
         .collect()
-}
-
-/// (image_len, text_seq, vocab) of the engine's encoder.
-fn engine_config(engine: &Engine) -> (usize, usize, usize) {
-    let c = engine.encoder_config();
-    (c.image_len(), c.text_seq, c.vocab)
 }
 
 /// How many generations a `swap_every` run promotes by the time `issued`
@@ -290,8 +314,92 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
         scrapes: lat.len() as u64,
         scrape_errors: scrape_errors.load(Ordering::Relaxed),
         scrape_p99_us: p99_us(&mut lat),
+        socket: false,
+        overload: false,
         snapshot: engine.metrics().snapshot(),
     }
+}
+
+/// Run one closed-loop sweep over real TCP against a bound front door.
+///
+/// Each of `concurrency` threads owns a persistent [`EncodeClient`]
+/// (keep-alive, transparent reconnect when the server's per-connection
+/// request cap closes the socket) and drives the same deterministic
+/// population as the in-process path — same seed, same draws, so the
+/// doc→engine affinity is identical across both.  The report's snapshot
+/// is a *client-side* ledger: explicit admission sheds (`429`/`503`)
+/// count in `rejected` (bounded queues working as designed), while
+/// transport failures and unexpected statuses count as request `errors`.
+/// `overload` labels the run for the benchdiff gate; the caller picks a
+/// concurrency beyond the server's admission window to earn it.
+pub fn run_loadgen_socket(
+    addr: &str,
+    kind: &str,
+    enc: &EncoderConfig,
+    cfg: &LoadgenConfig,
+    overload: bool,
+) -> Result<LoadgenReport, String> {
+    assert!(cfg.population > 0, "population must be positive");
+    // Fail fast on an unresolvable address before spawning the fleet.
+    EncodeClient::connect(addr, Duration::from_secs(5))?;
+    let population = build_population_for(enc, cfg);
+    let next = AtomicUsize::new(0);
+    let errors = AtomicU64::new(0);
+    let metrics = ServeMetrics::new();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..cfg.concurrency.max(1) {
+            let (population, next, errors, metrics) =
+                (&population, &next, &errors, &metrics);
+            s.spawn(move || {
+                let Ok(mut client) = EncodeClient::connect(addr, Duration::from_secs(5))
+                else {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                    return;
+                };
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cfg.requests {
+                        return;
+                    }
+                    let input = population[i % population.len()].clone();
+                    metrics.requests.inc();
+                    let rt0 = Instant::now();
+                    match client.encode(&input) {
+                        Ok(SocketOutcome::Ok { cache_hit, .. }) => {
+                            metrics.request_ns.record(rt0.elapsed().as_nanos() as u64);
+                            if cache_hit {
+                                metrics.cache_hits.inc();
+                            } else {
+                                metrics.cache_misses.inc();
+                            }
+                        }
+                        Ok(SocketOutcome::Rejected(_)) => metrics.rejected.inc(),
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(LoadgenReport {
+        kind: kind.to_string(),
+        concurrency: cfg.concurrency,
+        requests: cfg.requests,
+        swap_every: 0,
+        wall_secs: wall,
+        requests_per_sec: cfg.requests as f64 / wall.max(1e-9),
+        errors: errors.load(Ordering::Relaxed),
+        scrape_every_ms: 0,
+        scrapes: 0,
+        scrape_errors: 0,
+        scrape_p99_us: 0.0,
+        socket: true,
+        overload,
+        snapshot: metrics.snapshot(),
+    })
 }
 
 /// A minimal wire-validity check on one `/metrics` body: every
@@ -338,6 +446,12 @@ pub fn write_bench_json(
                 .field_u64("scrapes", r.scrapes)
                 .field_u64("scrape_errors", r.scrape_errors)
                 .field_f32("scrape_p99_us", r.scrape_p99_us as f32);
+        }
+        if r.socket {
+            w.field_bool("socket", true);
+            if r.overload {
+                w.field_bool("overload", true);
+            }
         }
         w.field_f32("wall_secs", r.wall_secs as f32)
             .field_f32("requests_per_sec", r.requests_per_sec as f32)
@@ -548,6 +662,119 @@ mod tests {
         assert!(exposition_well_formed("# HELP x\na_total 1\nb 2.5"));
         assert!(!exposition_well_formed(""));
         assert!(!exposition_well_formed("torn line with spaces"));
+    }
+
+    /// The socket path: a real front door over a 2-engine router, driven
+    /// by `run_loadgen_socket` — zero request errors, the client-side
+    /// ledger accounts for every request, and the JSON entry is tagged
+    /// `"socket":true` for the benchdiff comparator.
+    #[test]
+    fn socket_loadgen_round_trips_through_a_real_front_door() {
+        use crate::serve::frontend::{Frontend, FrontendConfig};
+        use crate::serve::router::Router;
+        use std::sync::Arc;
+        let router = Arc::new(Router::start(
+            ServeConfig {
+                encoder: EncoderConfig {
+                    kind: LinearKind::SwitchBack,
+                    dim: 16,
+                    heads: 2,
+                    blocks: 1,
+                    embed_dim: 8,
+                    patches: 4,
+                    patch_dim: 12,
+                    text_seq: 5,
+                    vocab: 64,
+                    seed: 3,
+                },
+                policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+                workers: 2,
+                cache_capacity: 4096,
+                cache_shards: 2,
+            },
+            2,
+        ));
+        let fe = Frontend::bind(
+            "127.0.0.1:0",
+            Arc::clone(&router),
+            FrontendConfig::default(),
+        )
+        .unwrap();
+        let cfg = LoadgenConfig {
+            requests: 120,
+            concurrency: 4,
+            population: 40,
+            image_fraction: 0.5,
+            seed: 9,
+            ..LoadgenConfig::default()
+        };
+        let rep = run_loadgen_socket(
+            &fe.local_addr().to_string(),
+            router.kind_label(),
+            router.encoder_config(),
+            &cfg,
+            false,
+        )
+        .unwrap();
+        assert_eq!(rep.errors, 0, "clean run must see zero request errors");
+        assert!(rep.socket && !rep.overload);
+        // Client-side ledger balances: every claimed request was either
+        // answered or explicitly shed (none expected here: closed-loop
+        // in-flight of 4 is far under the default admission window).
+        assert_eq!(rep.snapshot.requests, 120);
+        assert_eq!(rep.snapshot.rejected, 0);
+        assert_eq!(
+            rep.snapshot.cache_hits + rep.snapshot.cache_misses,
+            rep.snapshot.requests
+        );
+        assert!(rep.snapshot.hit_rate > 0.5, "population cycles must hit");
+        // Server-side view agrees across the fleet: requests fan out to
+        // both engines and nothing was shed.
+        let server_reqs: u64 = router
+            .engines()
+            .iter()
+            .map(|e| e.metrics().snapshot().requests)
+            .sum();
+        assert_eq!(server_reqs, 120);
+        for e in router.engines() {
+            assert!(e.metrics().snapshot().requests > 0, "both engines served");
+            assert_eq!(e.metrics().snapshot().rejected, 0);
+        }
+        let path = std::env::temp_dir().join("bench_serve_socket_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_bench_json(&path, 8, 1000, &[rep]).unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let r0 = &parse(&doc).unwrap().get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("socket").unwrap().as_bool(), Some(true));
+        assert!(r0.get("overload").is_none(), "clean run is not tagged overload");
+        assert_eq!(r0.get("errors").unwrap().as_usize(), Some(0));
+        assert!(r0.get("metrics").unwrap().get("rejected").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// The overload tag rides into the JSON entry (the benchdiff gate
+    /// keys socket entries on it and requires `rejected ≥ 1` there).
+    #[test]
+    fn overload_tag_is_emitted_for_overload_socket_reports() {
+        let eng = tiny_engine(64);
+        let cfg = LoadgenConfig {
+            requests: 20,
+            concurrency: 2,
+            population: 10,
+            ..LoadgenConfig::default()
+        };
+        let mut rep = run_loadgen(&eng, &cfg);
+        rep.socket = true;
+        rep.overload = true;
+        let path = std::env::temp_dir().join("bench_serve_overload_tag_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_bench_json(&path, 8, 1000, &[rep]).unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let r0 = &parse(&doc).unwrap().get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(r0.get("socket").unwrap().as_bool(), Some(true));
+        assert_eq!(r0.get("overload").unwrap().as_bool(), Some(true));
+        let _ = std::fs::remove_file(&path);
+        eng.shutdown();
     }
 
     #[test]

@@ -45,23 +45,36 @@
 //!   histograms).
 //! * [`loadgen`] — closed-loop load generator (the `loadgen` subcommand,
 //!   with `--swap-every` for sustained throughput across repeated
-//!   generations), emits `BENCH_serve.json` so the perf trajectory is
+//!   generations, and `--socket` for real-TCP clients against a bound
+//!   front door), emits `BENCH_serve.json` so the perf trajectory is
 //!   tracked per PR.
+//! * [`router`] — multi-engine fan-out: doc-hash affinity routing across
+//!   N engines (per-engine caches stay hot and disjoint), deterministic
+//!   shedding when an engine dies, and fleet-wide generation agreement.
+//! * [`frontend`] — the network front door: [`crate::net::http1`] bound
+//!   as the data plane (`POST /encode`, JSON wire format, bounded
+//!   admission window → explicit `429`/`503`, never unbounded queueing).
 
 pub mod batcher;
 pub mod cache;
 pub mod encoder;
 pub mod engine;
+pub mod frontend;
 pub mod loadgen;
 pub mod metrics;
+pub mod router;
 pub mod standby;
 
 pub use batcher::{BatchPolicy, BatchQueue};
 pub use cache::ShardedLru;
 pub use encoder::{ClipEncoder, EncoderConfig, EncoderWeights};
 pub use engine::{EncodeResponse, Engine, ServeConfig};
-pub use loadgen::{planned_swaps, run_loadgen, write_bench_json, LoadgenConfig, LoadgenReport};
+pub use frontend::{EncodeClient, Frontend, FrontendConfig, SocketOutcome};
+pub use loadgen::{
+    planned_swaps, run_loadgen, run_loadgen_socket, write_bench_json, LoadgenConfig, LoadgenReport,
+};
 pub use metrics::{PromotionMark, ServeMetrics, ServeSnapshot};
+pub use router::{engine_index, Router};
 pub use standby::{CanarySet, Promotion, Standby, StandbyConfig, StandbyEvent, StandbyHandle};
 
 /// One encode request's payload: a patchified image or a token sequence.

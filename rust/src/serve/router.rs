@@ -1,0 +1,347 @@
+//! Multi-engine fan-out with hash-affinity routing — the layer between
+//! the network front door ([`super::frontend`]) and N [`Engine`]
+//! instances (DESIGN.md §Network-front-door).
+//!
+//! **Affinity.** Every request carries a doc identity — the FNV-1a
+//! [`EncodeInput::content_hash`] the cache already keys on — and
+//! [`engine_index`] maps it to `hash % N`.  The mapping is pure and
+//! stable for a fixed fleet size, so repeated requests for one doc
+//! always land on the same engine and its sharded LRU stays hot; with
+//! per-engine caches there is no cross-engine invalidation protocol to
+//! get wrong, because no doc ever has cache entries on two engines.
+//!
+//! **Shedding, not silent loss.** The router never re-routes around a
+//! dead engine: an engine whose queue is closed sheds the request
+//! deterministically (`"engine is shut down"`, counted in that engine's
+//! `rejected` counter) and the caller sees the error.  Re-routing would
+//! silently move docs to cold caches and make the failure mode
+//! load-dependent; explicit shed keeps `ok + rejected` exactly equal to
+//! requests routed, which the chaos test pins.
+//!
+//! **Promotion.** One standby watcher validates each snapshot once and
+//! installs it across the whole fleet
+//! ([`super::standby::validate_and_promote_all`] /
+//! [`super::standby::spawn_fanout`]); [`Router::generation_agreement`]
+//! is the post-promotion invariant — every engine serves the same
+//! generation, or the router reports itself unready.
+
+use super::encoder::EncoderConfig;
+use super::engine::{EncodeResult, Engine, ServeConfig};
+use super::EncodeInput;
+use std::sync::Arc;
+
+/// Stable doc→engine affinity: `doc_hash % n`.  Pure so tests can pin
+/// the mapping; `n` is clamped to at least 1.
+pub fn engine_index(doc_hash: u64, n: usize) -> usize {
+    (doc_hash % n.max(1) as u64) as usize
+}
+
+/// N engines behind one routing function.  Dropping the router drops
+/// the engines (each shuts down on its last `Arc`).
+pub struct Router {
+    engines: Vec<Arc<Engine>>,
+}
+
+impl Router {
+    /// Boot `n` engines from one config.  Each engine seeds its encoder
+    /// from the same `cfg.encoder`, so the fleet starts weight-identical
+    /// at generation 0.
+    pub fn start(cfg: ServeConfig, n: usize) -> Router {
+        let engines = (0..n.max(1))
+            .map(|_| Arc::new(Engine::start(cfg.clone())))
+            .collect();
+        Router { engines }
+    }
+
+    /// Wrap already-running engines (checkpoint boots build each engine
+    /// with `Engine::start_with_encoder` first).
+    pub fn from_engines(engines: Vec<Arc<Engine>>) -> Router {
+        assert!(!engines.is_empty(), "router needs at least one engine");
+        Router { engines }
+    }
+
+    /// The fleet, primary (index 0) first.
+    pub fn engines(&self) -> &[Arc<Engine>] {
+        &self.engines
+    }
+
+    /// Fleet size.
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Always false — construction requires at least one engine.
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    /// Which engine `input` is affined to.
+    pub fn route(&self, input: &EncodeInput) -> usize {
+        engine_index(input.content_hash(), self.engines.len())
+    }
+
+    /// Encode on the affined engine.  A dead engine sheds (error +
+    /// its `rejected` counter); the router never re-routes.
+    pub fn encode(&self, input: EncodeInput) -> EncodeResult {
+        let idx = self.route(&input);
+        self.engines[idx].encode(input)
+    }
+
+    /// Per-engine generations, index-aligned with [`Self::engines`].
+    pub fn generations(&self) -> Vec<u64> {
+        self.engines.iter().map(|e| e.generation()).collect()
+    }
+
+    /// The fleet's single generation, or an error naming the disagreeing
+    /// engines — the post-fan-out-promotion invariant `/readyz` reflects.
+    pub fn generation_agreement(&self) -> Result<u64, String> {
+        let gens = self.generations();
+        let g0 = gens[0];
+        if gens.iter().all(|g| *g == g0) {
+            Ok(g0)
+        } else {
+            Err(format!("generation disagreement across the fleet: {gens:?}"))
+        }
+    }
+
+    /// Is any engine mid prepare→promote?
+    pub fn is_promoting(&self) -> bool {
+        self.engines.iter().any(|e| e.metrics().is_promoting())
+    }
+
+    /// The shared model-shape contract (identical across the fleet).
+    pub fn encoder_config(&self) -> &EncoderConfig {
+        self.engines[0].encoder_config()
+    }
+
+    /// Precision label of the primary engine's current encoder.
+    pub fn kind_label(&self) -> &'static str {
+        self.engines[0].kind_label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LinearKind;
+    use crate::serve::batcher::BatchPolicy;
+    use crate::serve::encoder::ClipEncoder;
+    use crate::serve::standby::{validate_and_promote_all, CanarySet};
+    use crate::tensor::Rng;
+    use std::time::{Duration, Instant};
+
+    fn tiny_cfg(seed: u64) -> EncoderConfig {
+        EncoderConfig {
+            kind: LinearKind::SwitchBack,
+            dim: 16,
+            heads: 2,
+            blocks: 1,
+            embed_dim: 8,
+            patches: 4,
+            patch_dim: 12,
+            text_seq: 5,
+            vocab: 64,
+            seed,
+        }
+    }
+
+    fn tiny_router(n: usize, cache: usize) -> Router {
+        Router::start(
+            ServeConfig {
+                encoder: tiny_cfg(7),
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(1),
+                },
+                workers: 2,
+                cache_capacity: cache,
+                cache_shards: 2,
+            },
+            n,
+        )
+    }
+
+    fn docs(cfg: &EncoderConfig, n: usize, seed: u64) -> Vec<EncodeInput> {
+        let base = Rng::seed(seed);
+        (0..n)
+            .map(|i| {
+                let mut r = base.fork(i as u64);
+                if i % 2 == 0 {
+                    EncodeInput::Image((0..cfg.image_len()).map(|_| r.normal()).collect())
+                } else {
+                    EncodeInput::Text(
+                        (0..cfg.text_seq).map(|_| r.below(cfg.vocab) as i32).collect(),
+                    )
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn affinity_is_pure_and_spreads_across_the_fleet() {
+        let router = tiny_router(3, 256);
+        let population = docs(router.encoder_config(), 64, 11);
+        let mapping: Vec<usize> = population.iter().map(|d| router.route(d)).collect();
+        // Pure: recomputing yields the identical mapping.
+        let again: Vec<usize> = population.iter().map(|d| router.route(d)).collect();
+        assert_eq!(mapping, again);
+        // And it matches the free function the caches key on.
+        for (d, idx) in population.iter().zip(&mapping) {
+            assert_eq!(engine_index(d.content_hash(), 3), *idx);
+        }
+        // 64 docs over 3 engines: every engine owns some.
+        for e in 0..3 {
+            assert!(mapping.contains(&e), "engine {e} owns no docs");
+        }
+    }
+
+    #[test]
+    fn affinity_keeps_per_engine_caches_hot_and_disjoint() {
+        let router = tiny_router(3, 256);
+        let population = docs(router.encoder_config(), 12, 23);
+        for d in &population {
+            assert!(!router.encode(d.clone()).unwrap().cache_hit);
+        }
+        // Second pass: every doc lands back on its engine's warm cache.
+        for d in &population {
+            assert!(router.encode(d.clone()).unwrap().cache_hit);
+        }
+        // Requests spread exactly by the pinned mapping — no engine saw a
+        // doc it does not own.
+        let mut want = [0u64; 3];
+        for d in &population {
+            want[router.route(d)] += 2;
+        }
+        for (e, w) in router.engines().iter().zip(want) {
+            assert_eq!(e.metrics().snapshot().requests, w);
+        }
+    }
+
+    /// Satellite: kill one engine's worker pool mid-load and assert the
+    /// shed accounting balances exactly — no silently lost requests —
+    /// while the surviving engines' affinity is unchanged.
+    #[test]
+    fn chaos_killing_one_engine_sheds_exactly_and_siblings_survive() {
+        const ENGINES: usize = 3;
+        const THREADS: usize = 4;
+        let router = Arc::new(tiny_router(ENGINES, 256));
+        let cfg = router.encoder_config().clone();
+
+        // Phase 1 docs (served before the kill) and phase 2 docs (fresh,
+        // so none can be answered from a dead engine's cache).
+        let phase1 = docs(&cfg, 24, 101);
+        let phase2 = docs(&cfg, 24, 202);
+        let mapping1: Vec<usize> = phase1.iter().map(|d| router.route(d)).collect();
+
+        let barrier = Arc::new(std::sync::Barrier::new(THREADS + 1));
+        let (ok, errs) = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..THREADS {
+                let router = Arc::clone(&router);
+                let barrier = Arc::clone(&barrier);
+                let phase1 = &phase1;
+                let phase2 = &phase2;
+                handles.push(s.spawn(move || {
+                    let mut ok = 0u64;
+                    let mut errs = 0u64;
+                    for d in phase1.iter().skip(t).step_by(THREADS) {
+                        match router.encode(d.clone()) {
+                            Ok(_) => ok += 1,
+                            Err(_) => errs += 1,
+                        }
+                    }
+                    barrier.wait(); // all phase-1 requests done
+                    barrier.wait(); // the kill has happened
+                    for d in phase2.iter().skip(t).step_by(THREADS) {
+                        match router.encode(d.clone()) {
+                            Ok(_) => ok += 1,
+                            Err(_) => errs += 1,
+                        }
+                    }
+                    (ok, errs)
+                }));
+            }
+            barrier.wait();
+            router.engines()[1].kill();
+            barrier.wait();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .fold((0u64, 0u64), |(a, b), (o, e)| (a + o, b + e))
+        });
+
+        let total = (phase1.len() + phase2.len()) as u64;
+        // Exact balance: every request is either served or explicitly shed.
+        assert_eq!(ok + errs, total, "requests lost or double-counted");
+        // Exactly the phase-2 docs affined to the dead engine were shed.
+        let expected_shed = phase2.iter().filter(|d| router.route(d) == 1).count() as u64;
+        assert!(expected_shed > 0, "chaos test needs docs on the dead engine");
+        assert_eq!(errs, expected_shed);
+        // The server-side ledger agrees with the client view.
+        let snaps: Vec<_> = router.engines().iter().map(|e| e.metrics().snapshot()).collect();
+        assert_eq!(snaps[1].rejected, expected_shed);
+        assert_eq!(snaps[0].rejected, 0);
+        assert_eq!(snaps[2].rejected, 0);
+        // Survivors saw exactly their affined share — the doc→engine
+        // mapping did not move after the kill.
+        let mapping1_after: Vec<usize> = phase1.iter().map(|d| router.route(d)).collect();
+        assert_eq!(mapping1, mapping1_after, "affinity must not re-hash on failure");
+        for e in [0usize, 2] {
+            let want = phase1.iter().chain(&phase2).filter(|d| router.route(d) == e).count();
+            assert_eq!(snaps[e].requests, want as u64, "engine {e} request count");
+        }
+    }
+
+    /// Satellite: one snapshot promotes across N=3 engines atomically —
+    /// same generation everywhere — and a canary reject touches nothing.
+    #[test]
+    fn fanout_promotion_lands_one_generation_everywhere_and_reject_is_torn_free() {
+        let router = tiny_router(3, 256);
+        let refs: Vec<&Engine> = router.engines().iter().map(Arc::as_ref).collect();
+        let canary = CanarySet::build(router.encoder_config(), 4, 99);
+
+        // A doc cached at generation 0 (on its affined engine).
+        let doc = docs(router.encoder_config(), 1, 7).pop().unwrap();
+        let before = router.encode(doc.clone()).unwrap();
+
+        // Same-seed candidates = drift 0 → must pass any bound.
+        let candidates: Vec<ClipEncoder> =
+            (0..3).map(|_| ClipEncoder::new(tiny_cfg(7))).collect();
+        let promo =
+            validate_and_promote_all(&refs, candidates, &canary, Some(0.5), Instant::now())
+                .expect("identical weights must promote");
+        assert_eq!(promo.drift, 0.0);
+        assert_eq!(router.generations(), vec![1, 1, 1]);
+        assert_eq!(router.generation_agreement().unwrap(), 1);
+
+        // Cache coherence across the generation bump: the old entry is
+        // dead (key mixes the generation), the re-encode repopulates.
+        let after = router.encode(doc.clone()).unwrap();
+        assert!(!after.cache_hit, "generation bump must invalidate the cache");
+        assert_eq!(
+            *after.embedding, *before.embedding,
+            "identical weights must reproduce the embedding"
+        );
+        assert!(router.encode(doc).unwrap().cache_hit);
+
+        // A wildly different candidate set is rejected with **no** torn
+        // fan-out: every generation stays, every engine records the reject.
+        let unrelated: Vec<ClipEncoder> =
+            (0..3).map(|_| ClipEncoder::new(tiny_cfg(31337))).collect();
+        let err = validate_and_promote_all(
+            &refs,
+            unrelated,
+            &canary,
+            Some(0.05),
+            Instant::now(),
+        )
+        .unwrap_err();
+        assert!(err.contains("drift"), "{err}");
+        assert_eq!(router.generations(), vec![1, 1, 1]);
+        for e in router.engines() {
+            let snap = e.metrics().snapshot();
+            assert_eq!(snap.standby_promotions, 1);
+            assert_eq!(snap.standby_rejects, 1);
+        }
+    }
+}

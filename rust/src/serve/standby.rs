@@ -183,11 +183,12 @@ pub fn max_drift(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
     worst
 }
 
-/// A successful [`validate_and_promote`] outcome.
+/// A successful [`validate_and_promote`] /
+/// [`validate_and_promote_all`] outcome.
 pub struct Promotion {
     /// worst per-input canary cosine distance observed live-vs-candidate
     pub drift: f32,
-    /// the engine's exclusive swap pause
+    /// the engine's exclusive swap pause (worst engine for a fan-out)
     pub pause: Duration,
     /// the candidate's canary embeddings — what the live engine must now
     /// reproduce bit-for-bit (the post-promotion probe expectation);
@@ -210,18 +211,57 @@ pub fn validate_and_promote(
     drift_max: Option<f32>,
     prepare_t0: Instant,
 ) -> Result<Promotion, String> {
+    validate_and_promote_all(&[engine], vec![candidate], canary, drift_max, prepare_t0)
+}
+
+/// The fan-out form of [`validate_and_promote`]: one candidate *per
+/// engine* (all built from the same snapshot weights), validated **once**
+/// against engine 0's live encoder, then installed across every engine.
+///
+/// The no-torn-fan-out contract: nothing is installed anywhere until the
+/// canary gate has passed and every candidate's shape has been checked
+/// against its engine, so a rejection leaves **all** generations
+/// untouched (each engine records the rejection).  After the installs,
+/// per-engine generation agreement is asserted — disagreement means the
+/// engines were not aligned going in, and is reported as an error rather
+/// than papered over.
+pub fn validate_and_promote_all(
+    engines: &[&Engine],
+    candidates: Vec<ClipEncoder>,
+    canary: &CanarySet,
+    drift_max: Option<f32>,
+    prepare_t0: Instant,
+) -> Result<Promotion, String> {
+    assert_eq!(
+        engines.len(),
+        candidates.len(),
+        "one candidate per engine"
+    );
+    assert!(!engines.is_empty(), "at least one engine");
     let reject = |why: String| -> String {
-        engine.metrics().record_reject();
+        for e in engines {
+            e.metrics().record_reject();
+        }
         why
     };
-    let live = engine.current_encoder();
+    // Shape pre-check on every engine *before* validating or installing
+    // anything: install_encoder would refuse too, but only after siblings
+    // were already promoted — exactly the torn fan-out this guards against.
+    for (i, (e, c)) in engines.iter().zip(&candidates).enumerate() {
+        if !c.config().same_shape(e.encoder_config()) {
+            return Err(reject(format!(
+                "candidate shape does not match engine {i}'s serving contract"
+            )));
+        }
+    }
+    let live = engines[0].current_encoder();
     // live + candidate canary encodes run concurrently on the
     // util::threads pool — the preparation cost never rides a request
     let mut embs = par_map(2, |i| {
         if i == 0 {
             canary.encode_with(&live)
         } else {
-            canary.encode_with(&candidate)
+            canary.encode_with(&candidates[0])
         }
     });
     let cand_embs = embs.pop().expect("candidate embeddings");
@@ -238,19 +278,39 @@ pub fn validate_and_promote(
         }
     }
     let _sp = crate::trace::span("standby.promote", "standby");
-    // swap + promotion counters are one atomic group: a concurrent
-    // metrics snapshot must never observe the promotion without its
-    // hot-swap (promotions > swaps)
-    let _g = engine.metrics().grouped();
-    match engine.install_encoder(candidate) {
-        Ok(pause) => {
-            engine
-                .metrics()
-                .record_promote(prepare_t0.elapsed().as_nanos() as u64);
-            Ok(Promotion { drift, pause, canary_embs: cand_embs })
+    let mut worst_pause = Duration::ZERO;
+    for (i, (engine, candidate)) in engines.iter().zip(candidates).enumerate() {
+        // swap + promotion counters are one atomic group per engine: a
+        // concurrent metrics snapshot must never observe the promotion
+        // without its hot-swap (promotions > swaps)
+        let _g = engine.metrics().grouped();
+        match engine.install_encoder(candidate) {
+            Ok(pause) => {
+                engine
+                    .metrics()
+                    .record_promote(prepare_t0.elapsed().as_nanos() as u64);
+                worst_pause = worst_pause.max(pause);
+            }
+            // Unreachable after the shape pre-check; surfaced loudly
+            // because engines before `i` are already promoted.
+            Err(e) => {
+                return Err(format!(
+                    "install on engine {i} rejected after {i} sibling(s) promoted: {e}"
+                ))
+            }
         }
-        Err(e) => Err(reject(format!("install rejected: {e}"))),
     }
+    let gen0 = engines[0].generation();
+    for (i, e) in engines.iter().enumerate() {
+        if e.generation() != gen0 {
+            return Err(format!(
+                "generation disagreement after fan-out: engine 0 at {gen0}, \
+                 engine {i} at {}",
+                e.generation()
+            ));
+        }
+    }
+    Ok(Promotion { drift, pause: worst_pause, canary_embs: cand_embs })
 }
 
 /// What one watcher step observed (returned by [`Standby::poll_once`] /
@@ -306,6 +366,10 @@ fn backoff_polls(attempts: u32) -> u32 {
 /// [`Self::probe_once`] directly.
 pub struct Standby {
     engine: Arc<Engine>,
+    /// sibling engines behind the same router: every promotion (and
+    /// rollback) fans out to these too, validated once against the
+    /// primary — empty for the classic single-engine watcher
+    fanout: Vec<Arc<Engine>>,
     cfg: StandbyConfig,
     canary: CanarySet,
     /// highest *promoted manifest* step (starts at `initial_step`) —
@@ -334,12 +398,23 @@ impl Standby {
     /// A fresh watcher state over `engine`: builds the canary
     /// population and seats the baseline as the first rollback anchor.
     pub fn new(engine: Arc<Engine>, cfg: StandbyConfig) -> Self {
+        Self::new_fanout(vec![engine], cfg)
+    }
+
+    /// A watcher over a router's whole engine fleet: `engines[0]` is the
+    /// primary (canary validation, probes, the rollback anchor); every
+    /// promotion and rollback is installed across all of them, with
+    /// generation agreement asserted after each fan-out.
+    pub fn new_fanout(mut engines: Vec<Arc<Engine>>, cfg: StandbyConfig) -> Self {
+        assert!(!engines.is_empty(), "standby needs at least one engine");
+        let engine = engines.remove(0);
         let canary =
             CanarySet::build(engine.encoder_config(), cfg.canary.max(1), cfg.canary_seed);
         let last_step = cfg.initial_step;
         let current = cfg.baseline.clone();
         Self {
             engine,
+            fanout: engines,
             cfg,
             canary,
             last_step,
@@ -469,11 +544,18 @@ impl Standby {
     fn prepare_and_promote(&mut self, step: u64, path: &std::path::Path) -> StandbyEvent {
         let _sp = crate::trace::span("standby.prepare", "standby");
         // `/readyz` reports not-ready for the whole prepare→promote
-        // window; the guard clears the flag on every exit path
-        let _promoting = self.engine.metrics().mark_promoting();
+        // window — on every engine in the fan-out; the guards clear the
+        // flag on every exit path
+        let _promoting: Vec<_> = std::iter::once(&self.engine)
+            .chain(self.fanout.iter())
+            .map(|e| e.metrics().mark_promoting())
+            .collect();
         let t0 = Instant::now();
         let reject = |me: &Self, reason: String| -> StandbyEvent {
             me.engine.metrics().record_reject();
+            for e in &me.fanout {
+                e.metrics().record_reject();
+            }
             StandbyEvent::Rejected { step, reason }
         };
         let ck = match ckpt::load(path) {
@@ -492,14 +574,22 @@ impl Standby {
         }
         // serving precision is the engine's choice, not the checkpoint's
         let cand_cfg = EncoderConfig { kind: serve_cfg.kind, ..ck.encoder.clone() };
-        let weights = match ckpt::encoder_weights(&cand_cfg, &ck.params) {
-            Ok(w) => w,
-            Err(e) => return reject(self, format!("weight layout: {e}")),
-        };
-        let candidate = ClipEncoder::from_weights(cand_cfg, weights);
-        match validate_and_promote(
-            &self.engine,
-            candidate,
+        // One candidate per engine, all from the same snapshot params —
+        // built *before* anything is installed (no torn fan-out).
+        let engines: Vec<&Engine> = std::iter::once(self.engine.as_ref())
+            .chain(self.fanout.iter().map(Arc::as_ref))
+            .collect();
+        let mut candidates = Vec::with_capacity(engines.len());
+        for _ in &engines {
+            let weights = match ckpt::encoder_weights(&cand_cfg, &ck.params) {
+                Ok(w) => w,
+                Err(e) => return reject(self, format!("weight layout: {e}")),
+            };
+            candidates.push(ClipEncoder::from_weights(cand_cfg.clone(), weights));
+        }
+        match validate_and_promote_all(
+            &engines,
+            candidates,
             &self.canary,
             self.cfg.drift_max,
             t0,
@@ -545,7 +635,8 @@ impl Standby {
     }
 
     /// Reinstall the previous generation's weights (another generation
-    /// bump, so stale cache entries from the bad generation die too).
+    /// bump, so stale cache entries from the bad generation die too) —
+    /// across the whole fan-out, so the fleet stays generation-aligned.
     fn rollback(&mut self, reason: &str) -> StandbyEvent {
         let Some(params) = self.anchor.take() else {
             self.expected = None; // stop re-probing an expectation we can't fix
@@ -554,28 +645,35 @@ impl Standby {
             };
         };
         let serve_cfg = self.engine.encoder_config().clone();
-        let restored = match ckpt::encoder_weights(&serve_cfg, &params) {
-            Ok(w) => ClipEncoder::from_weights(serve_cfg, w),
-            Err(e) => {
+        // One restored encoder per engine, all built before any install.
+        let mut restored = Vec::with_capacity(1 + self.fanout.len());
+        for _ in 0..(1 + self.fanout.len()) {
+            match ckpt::encoder_weights(&serve_cfg, &params) {
+                Ok(w) => restored.push(ClipEncoder::from_weights(serve_cfg.clone(), w)),
+                Err(e) => {
+                    return StandbyEvent::ProbeFailed {
+                        reason: format!("{reason}; rollback rebuild failed: {e}"),
+                    }
+                }
+            }
+        }
+        let expected = self.canary.encode_with(&restored[0]);
+        let engines: Vec<&Engine> = std::iter::once(self.engine.as_ref())
+            .chain(self.fanout.iter().map(Arc::as_ref))
+            .collect();
+        for (engine, enc) in engines.iter().zip(restored) {
+            if let Err(e) = engine.install_encoder(enc) {
                 return StandbyEvent::ProbeFailed {
-                    reason: format!("{reason}; rollback rebuild failed: {e}"),
-                }
+                    reason: format!("{reason}; rollback install failed: {e}"),
+                };
             }
-        };
-        let expected = self.canary.encode_with(&restored);
-        match self.engine.install_encoder(restored) {
-            Ok(_pause) => {
-                self.engine.metrics().record_rollback();
-                self.current = Some(params);
-                self.expected = Some(expected);
-                StandbyEvent::RolledBack {
-                    generation: self.engine.generation(),
-                    reason: reason.to_string(),
-                }
-            }
-            Err(e) => StandbyEvent::ProbeFailed {
-                reason: format!("{reason}; rollback install failed: {e}"),
-            },
+            engine.metrics().record_rollback();
+        }
+        self.current = Some(params);
+        self.expected = Some(expected);
+        StandbyEvent::RolledBack {
+            generation: self.engine.generation(),
+            reason: reason.to_string(),
         }
     }
 }
@@ -606,13 +704,20 @@ impl Drop for StandbyHandle {
 /// Start the watcher thread: poll → prepare → canary → promote/reject,
 /// with a probe (and possible rollback) every `probe_every` polls.
 pub fn spawn(engine: Arc<Engine>, cfg: StandbyConfig) -> StandbyHandle {
+    spawn_fanout(vec![engine], cfg)
+}
+
+/// [`spawn`] over a router's whole fleet: **one** watcher thread
+/// validates each snapshot once (against `engines[0]`) and promotes it
+/// across every engine, keeping the generations in lock-step.
+pub fn spawn_fanout(engines: Vec<Arc<Engine>>, cfg: StandbyConfig) -> StandbyHandle {
     let stop = Arc::new(AtomicBool::new(false));
     let flag = Arc::clone(&stop);
     let join = std::thread::spawn(move || {
         let poll = cfg.poll;
         let probe_every = cfg.probe_every;
         let verbose = cfg.verbose;
-        let mut sb = Standby::new(engine, cfg);
+        let mut sb = Standby::new_fanout(engines, cfg);
         let mut ticks: u32 = 0;
         while !flag.load(Ordering::Relaxed) {
             log_event(verbose, &sb.poll_once());

@@ -13,6 +13,10 @@
 //!   well-formed `/metrics` scrape, zero scrape errors, scrape p99 under
 //!   [`SCRAPE_P99_BUDGET_US`], and the serve tail within
 //!   [`SCRAPE_TAIL_FACTOR`]× of the same document's scraper-free run),
+//!   the real-TCP socket invariants (zero request errors through the
+//!   front door, a clean run sheds nothing, the overload run records ≥1
+//!   admission rejection, and the socket tail stays within
+//!   [`SOCKET_TAIL_FACTOR`]× of the same document's in-process run),
 //!   the learning invariants (loss decreased, no
 //!   divergence, spike counts) for train, and — for the ckpt pipeline —
 //!   the standby promote/reject/rollback/quarantine counters plus the
@@ -128,6 +132,15 @@ pub const SCRAPE_P99_BUDGET_US: f64 = 50_000.0;
 /// come from the same machine, so absolute speed cancels out).
 pub const SCRAPE_TAIL_FACTOR: f64 = 10.0;
 
+/// The network front door costs a real TCP round trip per request
+/// (connect once, then HTTP/1.1 framing + loopback syscalls), but a
+/// socket-mode p99 beyond this multiple of the same document's
+/// in-process run for the same (kind, concurrency) means the front door
+/// is queueing, not serving — gated as a within-document invariant
+/// (both runs come from the same machine, so absolute speed cancels
+/// out).
+pub const SOCKET_TAIL_FACTOR: f64 = 10.0;
+
 /// One serve-results entry in comparable form.
 struct ServeEntry {
     kind: String,
@@ -136,9 +149,17 @@ struct ServeEntry {
     swap_every: u64,
     /// scrape cadence in ms (0 = no rider scraper attached)
     scrape_every: u64,
+    /// clients went through a real TCP front door (`loadgen --socket`)
+    socket: bool,
+    /// the socket run deliberately exceeded the admission window
+    overload: bool,
     rps: f64,
     p99: f64,
     errors: f64,
+    /// requests shed by the admission window / a dead engine (socket
+    /// entries record this from the client's ledger; 0 when absent on
+    /// in-process entries)
+    rejected: f64,
     /// standby promotions recorded by the run's metrics (0 when absent)
     promotions: f64,
     /// standby rejections recorded by the run's metrics (0 when absent)
@@ -182,14 +203,29 @@ fn serve_index(v: &Value) -> Result<Vec<ServeEntry>, String> {
             } else {
                 (0.0, 0.0, 0.0)
             };
+            // once an entry declares it went over the wire, its error and
+            // shed counts are required — a socket run that lost its own
+            // ledger is incomparable, not a pass
+            let socket = r.get("socket").and_then(Value::as_bool).unwrap_or(false);
+            let overload =
+                r.get("overload").and_then(Value::as_bool).unwrap_or(false);
+            let rejected = if socket {
+                req_num(r, &ctx, "errors")?;
+                req_num(metrics, &ctx, "rejected")?
+            } else {
+                opt_num(metrics, &ctx, "rejected")?.unwrap_or(0.0)
+            };
             Ok(ServeEntry {
                 kind,
                 conc,
                 swap_every,
                 scrape_every,
+                socket,
+                overload,
                 rps,
                 p99,
                 errors,
+                rejected,
                 promotions,
                 rejects,
                 scrapes,
@@ -200,20 +236,25 @@ fn serve_index(v: &Value) -> Result<Vec<ServeEntry>, String> {
         .collect()
 }
 
+/// A plain in-process single-generation run: no swap cadence, no rider
+/// scraper, no TCP front door.  These are the entries the throughput
+/// ratios and the within-document tail bounds are measured against.
+fn is_plain(e: &ServeEntry) -> bool {
+    e.swap_every == 0 && e.scrape_every == 0 && !e.socket
+}
+
 /// The Standard-vs-SwitchBack ratios per concurrency (machine-portable),
-/// over the plain single-generation, scraper-free runs only.
+/// over the plain single-generation, scraper-free, in-process runs only.
 fn serve_ratios(idx: &[ServeEntry]) -> Vec<(u64, f64, f64)> {
     let mut out = vec![];
     for e in idx {
-        if e.kind != "switchback" || e.swap_every > 0 || e.scrape_every > 0 {
+        if e.kind != "switchback" || !is_plain(e) {
             continue;
         }
-        if let Some(std_e) = idx.iter().find(|o| {
-            o.kind == "standard"
-                && o.conc == e.conc
-                && o.swap_every == 0
-                && o.scrape_every == 0
-        }) {
+        if let Some(std_e) = idx
+            .iter()
+            .find(|o| o.kind == "standard" && o.conc == e.conc && is_plain(o))
+        {
             if std_e.rps > 0.0 && e.p99 > 0.0 {
                 out.push((e.conc, e.rps / std_e.rps, std_e.p99 / e.p99));
             }
@@ -252,6 +293,20 @@ fn compare_serve(
              refresh the baseline) before comparing"
                 .into(),
         );
+    }
+    // …and for the real-TCP runs: both the clean socket entry and the
+    // overload entry carry gated invariants, so either vanishing fails
+    // closed on its own
+    for (overload, what) in [(false, "clean"), (true, "overload")] {
+        if oi.iter().any(|e| e.socket && e.overload == overload)
+            && !ni.iter().any(|e| e.socket && e.overload == overload)
+        {
+            return Err(format!(
+                "baseline has a --socket {what} entry but the new document \
+                 has none — the real-TCP run disappeared; restore it (or \
+                 refresh the baseline) before comparing"
+            ));
+        }
     }
     let mut regs = vec![];
     let mut compared = 0usize;
@@ -301,12 +356,10 @@ fn compare_serve(
                 e.rejects
             ));
         }
-        if let Some(plain) = ni.iter().find(|o| {
-            o.kind == e.kind
-                && o.conc == e.conc
-                && o.swap_every == 0
-                && o.scrape_every == 0
-        }) {
+        if let Some(plain) = ni
+            .iter()
+            .find(|o| o.kind == e.kind && o.conc == e.conc && is_plain(o))
+        {
             if plain.p99 > 0.0 && e.p99 > plain.p99 * SWAP_TAIL_FACTOR {
                 regs.push(format!(
                     "{tag}: swap-tail-latency invariant broken — p99 \
@@ -354,12 +407,10 @@ fn compare_serve(
                 e.scrape_p99_us
             ));
         }
-        if let Some(plain) = ni.iter().find(|o| {
-            o.kind == e.kind
-                && o.conc == e.conc
-                && o.swap_every == 0
-                && o.scrape_every == 0
-        }) {
+        if let Some(plain) = ni
+            .iter()
+            .find(|o| o.kind == e.kind && o.conc == e.conc && is_plain(o))
+        {
             if plain.p99 > 0.0 && e.p99 > plain.p99 * SCRAPE_TAIL_FACTOR {
                 regs.push(format!(
                     "{tag}: scrape-tail-latency invariant broken — serve \
@@ -371,6 +422,65 @@ fn compare_serve(
             }
         }
     }
+    // portable socket invariants: every real-TCP run must lose nothing
+    // (failed requests mean the door broke mid-conversation), the clean
+    // run must stay inside the admission window (a shed there means the
+    // window is mis-sized), the overload run must actually overload (≥1
+    // rejection, or the bound was never exercised), and the clean run's
+    // tail must stay within SOCKET_TAIL_FACTOR of the same
+    // configuration's in-process run (the front door may tax, not queue)
+    for e in ni.iter().filter(|e| e.socket) {
+        compared += 1;
+        let tag = format!(
+            "serve {} c={} socket{}",
+            e.kind,
+            e.conc,
+            if e.overload { " overload" } else { "" }
+        );
+        if e.errors > 0.0 {
+            regs.push(format!(
+                "{tag}: {:.0} requests failed through the front door",
+                e.errors
+            ));
+        }
+        if e.overload && e.rejected < 1.0 {
+            regs.push(format!(
+                "{tag}: no admission rejections — the overload run never \
+                 filled the window, the 429 path went unexercised"
+            ));
+        }
+        if !e.overload {
+            if e.rejected > 0.0 {
+                regs.push(format!(
+                    "{tag}: {:.0} request(s) shed under the admission window \
+                     (the clean run must not overload)",
+                    e.rejected
+                ));
+            }
+            match ni
+                .iter()
+                .find(|o| o.kind == e.kind && o.conc == e.conc && is_plain(o))
+            {
+                Some(plain) => {
+                    if plain.p99 > 0.0 && e.p99 > plain.p99 * SOCKET_TAIL_FACTOR {
+                        regs.push(format!(
+                            "{tag}: socket-tail-latency invariant broken — p99 \
+                             {:.2} ms vs {:.2} ms in-process \
+                             (> {SOCKET_TAIL_FACTOR}×): the front door is \
+                             queueing, not serving",
+                            e.p99, plain.p99
+                        ));
+                    }
+                }
+                // the bound needs its in-process anchor: absence must not
+                // read as a pass
+                None => regs.push(format!(
+                    "{tag}: no in-process entry for the same (kind, \
+                     concurrency) to bound the socket tail against"
+                )),
+            }
+        }
+    }
     if strict {
         for e in &ni {
             let Some(o) = oi.iter().find(|o| {
@@ -378,6 +488,8 @@ fn compare_serve(
                     && o.conc == e.conc
                     && o.swap_every == e.swap_every
                     && o.scrape_every == e.scrape_every
+                    && o.socket == e.socket
+                    && o.overload == e.overload
             }) else {
                 continue;
             };
@@ -1289,6 +1401,114 @@ mod tests {
         .unwrap();
         let err = compare_bench(&good, &gutted, 0.15, false).unwrap_err();
         assert!(err.contains("scrapes"), "{err}");
+    }
+
+    /// A serve doc with the plain standard/switchback pair plus the two
+    /// real-TCP entries `loadgen --socket` emits: a clean run at the base
+    /// concurrency and an overload run at 4× with `overload:true`.
+    fn serve_doc_with_socket(
+        clean_errors: u64,
+        clean_rejected: u64,
+        clean_p99: f64,
+        overload_rejected: u64,
+    ) -> Value {
+        parse(&format!(
+            r#"{{"bench":"serve_throughput","policy":{{}},"results":[
+                {{"kind":"standard","concurrency":16,"requests_per_sec":1000.0,
+                  "errors":0,"metrics":{{"request_p99_ms":10.0}}}},
+                {{"kind":"switchback","concurrency":16,"requests_per_sec":1500.0,
+                  "errors":0,"metrics":{{"request_p99_ms":8.0}}}},
+                {{"kind":"switchback","concurrency":16,"socket":true,
+                  "requests_per_sec":900.0,"errors":{clean_errors},
+                  "metrics":{{"request_p99_ms":{clean_p99},
+                              "rejected":{clean_rejected}}}}},
+                {{"kind":"switchback","concurrency":64,"socket":true,
+                  "overload":true,"requests_per_sec":700.0,"errors":0,
+                  "metrics":{{"request_p99_ms":40.0,
+                              "rejected":{overload_rejected}}}}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    /// Socket entries are gated on invariants (zero request errors, the
+    /// clean run sheds nothing, the overload run records ≥1 admission
+    /// rejection, socket tail within SOCKET_TAIL_FACTOR of the in-process
+    /// run) and are excluded from the plain throughput-ratio comparison.
+    #[test]
+    fn socket_entries_are_gated_on_invariants() {
+        let old = serve_doc(1000.0, 1500.0, 10.0, 8.0); // no socket entries
+        let good = serve_doc_with_socket(0, 0, 12.0, 37);
+        let regs = compare_bench(&old, &good, 0.15, false).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+        // the socket runs must not poison the ratio math: identical docs
+        // pass even though slower socket entries exist for switchback —
+        // in portable and strict mode both
+        let regs = compare_bench(&good, &good, 0.15, false).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+        let regs = compare_bench(&good, &good, 0.15, true).unwrap();
+        assert!(regs.is_empty(), "{regs:?}");
+
+        // requests failing through the front door: caught
+        let broken = serve_doc_with_socket(3, 0, 12.0, 37);
+        let regs = compare_bench(&old, &broken, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("front door")), "{regs:?}");
+
+        // the clean run shedding under the admission window: caught
+        let shed = serve_doc_with_socket(0, 5, 12.0, 37);
+        let regs = compare_bench(&old, &shed, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("must not overload")), "{regs:?}");
+
+        // an overload run that never got rejected: caught
+        let lax = serve_doc_with_socket(0, 0, 12.0, 0);
+        let regs = compare_bench(&old, &lax, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("429")), "{regs:?}");
+
+        // socket p99 more than SOCKET_TAIL_FACTOR× the in-process p99
+        let queueing = serve_doc_with_socket(0, 0, 8.0 * SOCKET_TAIL_FACTOR + 1.0, 37);
+        let regs = compare_bench(&old, &queueing, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("socket-tail-latency")),
+            "{regs:?}"
+        );
+
+        // either socket entry disappearing from the fresh doc fails closed
+        let err = compare_bench(&good, &old, 0.15, false).unwrap_err();
+        assert!(err.contains("socket"), "{err}");
+
+        // a socket entry with no in-process anchor cannot prove its tail
+        // bound — flagged, not silently passed
+        let unanchored = parse(
+            r#"{"bench":"serve_throughput","policy":{},"results":[
+                {"kind":"standard","concurrency":16,"requests_per_sec":1000.0,
+                 "metrics":{"request_p99_ms":10.0}},
+                {"kind":"switchback","concurrency":16,"requests_per_sec":1500.0,
+                 "metrics":{"request_p99_ms":8.0}},
+                {"kind":"switchback","concurrency":32,"socket":true,
+                 "requests_per_sec":900.0,"errors":0,
+                 "metrics":{"request_p99_ms":12.0,"rejected":0}}
+            ]}"#,
+        )
+        .unwrap();
+        let regs = compare_bench(&old, &unanchored, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("no in-process entry")), "{regs:?}");
+
+        // a socket entry missing its own ledger is incomparable, not a
+        // pass (fail closed on the declared-but-absent schema)
+        let gutted = parse(
+            r#"{"bench":"serve_throughput","policy":{},"results":[
+                {"kind":"standard","concurrency":16,"requests_per_sec":1000.0,
+                 "metrics":{"request_p99_ms":10.0}},
+                {"kind":"switchback","concurrency":16,"requests_per_sec":1500.0,
+                 "metrics":{"request_p99_ms":8.0}},
+                {"kind":"switchback","concurrency":16,"socket":true,
+                 "requests_per_sec":900.0,"errors":0,
+                 "metrics":{"request_p99_ms":12.0}}
+            ]}"#,
+        )
+        .unwrap();
+        let err = compare_bench(&good, &gutted, 0.15, false).unwrap_err();
+        assert!(err.contains("rejected"), "{err}");
     }
 
     /// Ckpt standby counters gate: rollbacks are never expected, and the

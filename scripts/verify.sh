@@ -97,7 +97,30 @@ fi
 # --scrape-every adds one scraper-present run: a rider thread scrapes a
 # live /metrics plane over the engine while the closed loop runs, so the
 # benchdiff gate can hold "a concurrent scraper neither fails nor moves
-# the serve tail" (benchmarks/README.md §Scrape metrics)
+# the serve tail" (benchmarks/README.md §Scrape metrics).
+# --socket adds two real-TCP runs against the front door booted below
+# (`serve --listen`, 2 engines behind a doc-hash router): a clean run at
+# the base concurrency (zero errors, zero sheds — enforced by loadgen
+# itself) and an overload run at 4× that concurrency (≥1 admission
+# rejection required).  The server is held up with --hold-ms and killed
+# once the artifact is written (benchmarks/README.md §Socket metrics)
+FRONT_LOG="$REPO_ROOT/.verify_frontend_serve.log"
+rm -f "$FRONT_LOG"
+"$BIN" serve --kind switchback --requests 64 \
+    --listen 127.0.0.1:0 --hold-ms 600000 >"$FRONT_LOG" 2>&1 &
+FRONT_PID=$!
+FRONT_ADDR=""
+for _ in $(seq 1 100); do
+    FRONT_ADDR="$(sed -n 's/^frontend: listening on \([^ ]*\).*/\1/p' "$FRONT_LOG" | head -n 1)"
+    [[ -n "$FRONT_ADDR" ]] && break
+    sleep 0.1
+done
+[[ -n "$FRONT_ADDR" ]] || {
+    echo "socket smoke FAILED: serve --listen never printed the bound address" >&2
+    cat "$FRONT_LOG" >&2
+    kill "$FRONT_PID" 2>/dev/null || true
+    exit 1
+}
 SWAP_EVERY=$((REQUESTS / 4))
 "$BIN" loadgen \
     --requests "$REQUESTS" \
@@ -105,11 +128,29 @@ SWAP_EVERY=$((REQUESTS / 4))
     --kinds standard,switchback \
     --swap-every "$SWAP_EVERY" \
     --scrape-every 5 \
+    --socket "$FRONT_ADDR" \
     --out "$REPO_ROOT/BENCH_serve.json"
 grep -q '"standby_promotions":' "$REPO_ROOT/BENCH_serve.json" \
     || { echo "loadgen smoke FAILED: no standby promotions in BENCH_serve.json" >&2; exit 1; }
 grep -q '"scrape_errors":0,' "$REPO_ROOT/BENCH_serve.json" \
     || { echo "loadgen smoke FAILED: no clean scraper-present run in BENCH_serve.json" >&2; exit 1; }
+# belt and braces on top of loadgen's own socket bails (zero errors on
+# both TCP runs, zero sheds on the clean run, ≥1 rejection on the
+# overload run): the artifact must carry both tagged entries, and the
+# front-door process must have *survived* the overload — a crashed or
+# panicked server is a failure even if the clients limped through
+grep -q '"socket":true' "$REPO_ROOT/BENCH_serve.json" \
+    || { echo "socket smoke FAILED: no socket entry in BENCH_serve.json" >&2; exit 1; }
+grep -q '"overload":true' "$REPO_ROOT/BENCH_serve.json" \
+    || { echo "socket smoke FAILED: no overload entry in BENCH_serve.json" >&2; exit 1; }
+kill -0 "$FRONT_PID" 2>/dev/null \
+    || { echo "socket smoke FAILED: serve --listen died under load" >&2; cat "$FRONT_LOG" >&2; exit 1; }
+grep -q "socket self-probe OK" "$FRONT_LOG" \
+    || { echo "socket smoke FAILED: the server's own socket self-probe did not pass" >&2; cat "$FRONT_LOG" >&2; exit 1; }
+kill "$FRONT_PID" 2>/dev/null || true
+wait "$FRONT_PID" 2>/dev/null || true
+rm -f "$FRONT_LOG"
+echo "socket smoke OK — real-TCP entries measured through a live front door"
 
 echo
 echo "== train smoke (BENCH_train.json) =="
