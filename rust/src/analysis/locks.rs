@@ -1,0 +1,894 @@
+//! Lock-order analyzer: per-function acquisition sequences → one
+//! inter-procedural acquisition graph → cycle + held-across-blocking
+//! findings.
+//!
+//! Scope is `serve/`, `trace/`, `ckpt/` — the directories where request
+//! threads, the standby watcher, the background saver, and the metrics
+//! registry interleave.  The model is lexical and deliberately simple:
+//!
+//! * An **acquisition** is a `.lock()` / `.read()` / `.write()` call with
+//!   empty parens (argument-taking `io::Read::read` etc. never match).
+//!   The lock's identity is `(file, receiver)` — the last identifier of
+//!   the dotted receiver chain, so `self.shared.encoder.read()` is node
+//!   `serve/engine.rs::encoder`.
+//! * The **hold range** of a guard runs to the end of the enclosing
+//!   brace block for `let`-bound guards (or to an explicit `drop(name)`),
+//!   to the end of the `if let`/`while let`/`match` block for
+//!   condition-bound guards, and to the end of the statement for
+//!   temporaries.  The model is positional: it does not follow loop
+//!   back-edges.
+//! * An **edge** `A → B` means B was acquired (directly, or transitively
+//!   through a resolvable call) while A was held.  Calls resolve by name:
+//!   same-file definitions win; otherwise a globally unique definition;
+//!   method calls additionally skip std-colliding names (`push`, `get`,
+//!   …) so `Vec::push` never aliases a lock-taking method.  Unresolvable
+//!   calls contribute nothing — the graph under-approximates rather than
+//!   inventing edges.
+//! * A cycle in the graph is a potential deadlock ([`Level::Error`]), as
+//!   is holding any lock across `join()` / `recv()` / `recv_timeout()` /
+//!   `accept()` / `thread::sleep` — directly or through a resolvable
+//!   call.  `Condvar::wait*` is exempt: it releases the guard it takes
+//!   (that is the condvar idiom the batcher uses).
+//!
+//! `// lint:allow(lock-order)` on an acquisition line removes that site
+//! from the graph (counted as a suppression); on a blocking call's line
+//! it suppresses the held-across finding.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::rules::{in_dirs, Finding, Level};
+use super::scan::{
+    find_word, is_ident_byte, matching_close, next_nonspace, prev_nonspace,
+    word_ending_at, ScannedFile,
+};
+
+/// Directories whose locks participate in the graph.
+const LOCK_DIRS: &[&str] = &["serve", "trace", "ckpt"];
+/// Receivers that look like locks but are std stream handles.
+const STREAM_RECEIVERS: &[&str] = &["stdout", "stderr", "stdin"];
+/// Method-call names too std-common to resolve against our definitions.
+const METHOD_CALL_DENY: &[&str] = &[
+    "clear", "clone", "drop", "flush", "get", "insert", "is_empty", "join",
+    "len", "new", "next", "pop", "push", "read", "recv", "remove", "send",
+    "take", "wait", "write",
+];
+
+/// One acquisition edge: `to` was acquired while `from` was held, at
+/// `rel:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Edge {
+    pub from: String,
+    pub to: String,
+    pub rel: String,
+    pub line: usize,
+}
+
+/// The inter-procedural lock graph plus the findings derived from it.
+#[derive(Debug, Default)]
+pub struct LockGraph {
+    /// All acquisition nodes (`rel::receiver`), sorted.
+    pub nodes: Vec<String>,
+    /// Deduplicated edges (first witnessing site kept).
+    pub edges: Vec<Edge>,
+    /// Each cycle as the node ring that forms it.
+    pub cycles: Vec<Vec<String>>,
+    /// `lock-order` findings: one per cycle, one per held-across-blocking
+    /// site (suppressed ones carry `suppressed: true`).
+    pub findings: Vec<Finding>,
+    /// Functions whose bodies were analyzed.
+    pub functions: usize,
+}
+
+impl LockGraph {
+    /// Unsuppressed held-across-blocking findings.
+    pub fn blocking_holds(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| !f.suppressed && f.message.contains("held across"))
+            .count()
+    }
+}
+
+struct Acq {
+    node: usize,
+    pos: usize,
+    end: usize,
+    line: usize,
+}
+
+struct CallSite {
+    pos: usize,
+    name: String,
+    method: bool,
+}
+
+struct FnDef {
+    file: usize,
+    body: (usize, usize),
+    acqs: Vec<Acq>,
+    calls: Vec<CallSite>,
+    /// (pos, what) direct blocking operations.
+    blocking: Vec<(usize, String)>,
+}
+
+/// Matching opener for the closer at `close`, scanning backwards.
+fn matching_open(b: &[u8], close: usize) -> Option<usize> {
+    let (o, c) = match b[close] {
+        b')' => (b'(', b')'),
+        b']' => (b'[', b']'),
+        _ => return None,
+    };
+    let mut depth = 1i32;
+    let mut j = close;
+    while j > 0 {
+        j -= 1;
+        if b[j] == c {
+            depth += 1;
+        } else if b[j] == o {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// Last identifier of the receiver chain ending at the `.` at `dot`.
+fn receiver_name(f: &ScannedFile, dot: usize) -> Option<String> {
+    let b = f.masked.as_bytes();
+    let mut j = prev_nonspace(b, dot)?;
+    loop {
+        if is_ident_byte(b[j]) {
+            let w = word_ending_at(&f.masked, j + 1);
+            if w.is_empty() || w.as_bytes()[0].is_ascii_digit() {
+                return None;
+            }
+            return Some(w.to_string());
+        }
+        if b[j] == b')' || b[j] == b']' {
+            let open = matching_open(b, j)?;
+            j = prev_nonspace(b, open)?;
+            continue;
+        }
+        return None;
+    }
+}
+
+/// End of the brace block enclosing `from`.
+fn enclosing_block_end(b: &[u8], from: usize) -> usize {
+    let mut d = 0i32;
+    let mut j = from;
+    while j < b.len() {
+        match b[j] {
+            b'{' => d += 1,
+            b'}' => {
+                if d == 0 {
+                    return j;
+                }
+                d -= 1;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    b.len()
+}
+
+/// End of the statement containing `from` (a `;` outside nested groups,
+/// or the enclosing `}`).
+fn stmt_end(b: &[u8], from: usize) -> usize {
+    let mut pd = 0i32;
+    let mut bd = 0i32;
+    let mut j = from;
+    while j < b.len() {
+        match b[j] {
+            b'(' | b'[' => pd += 1,
+            b')' | b']' => pd -= 1,
+            b'{' => bd += 1,
+            b'}' => {
+                if bd == 0 {
+                    return j;
+                }
+                bd -= 1;
+            }
+            b';' if pd <= 0 && bd <= 0 => return j,
+            _ => {}
+        }
+        j += 1;
+    }
+    b.len()
+}
+
+/// End of the first brace block after `from` — the body of the
+/// `if let`/`while let`/`match` whose condition holds the guard.
+fn first_block_end(b: &[u8], from: usize) -> usize {
+    let mut pd = 0i32;
+    let mut j = from;
+    while j < b.len() {
+        match b[j] {
+            b'(' | b'[' => pd += 1,
+            b')' | b']' => pd -= 1,
+            b'{' if pd <= 0 => return matching_close(b, j),
+            b';' if pd <= 0 => return j,
+            _ => {}
+        }
+        j += 1;
+    }
+    b.len()
+}
+
+/// Where the guard acquired at `dot` stops being held.
+fn hold_end(f: &ScannedFile, dot: usize) -> usize {
+    let b = f.masked.as_bytes();
+    // statement start: nearest `;`/`{`/`}` before the acquisition
+    let mut s = dot;
+    while s > 0 {
+        let c = b[s - 1];
+        if c == b';' || c == b'{' || c == b'}' {
+            break;
+        }
+        s -= 1;
+    }
+    let Some(w0) = next_nonspace(b, s) else { return stmt_end(b, dot) };
+    let mut e0 = w0;
+    while e0 < b.len() && is_ident_byte(b[e0]) {
+        e0 += 1;
+    }
+    match &f.masked[w0..e0] {
+        "let" => {
+            let mut w = next_nonspace(b, e0).unwrap_or(e0);
+            let mut we = w;
+            while we < b.len() && is_ident_byte(b[we]) {
+                we += 1;
+            }
+            if &f.masked[w..we] == "mut" {
+                w = next_nonspace(b, we).unwrap_or(we);
+                we = w;
+                while we < b.len() && is_ident_byte(b[we]) {
+                    we += 1;
+                }
+            }
+            let bind = &f.masked[w..we];
+            if bind == "_" {
+                // `let _ = ..` drops the guard immediately
+                return stmt_end(b, dot);
+            }
+            let simple = !bind.is_empty()
+                && next_nonspace(b, we).map(|p| b[p] == b'=' || b[p] == b':')
+                    == Some(true);
+            let end = enclosing_block_end(b, dot);
+            if simple {
+                // an explicit drop(bind) releases early
+                let bind = bind.to_string();
+                for at in find_word(&f.masked[dot..end.min(f.masked.len())], "drop") {
+                    let at = dot + at;
+                    let Some(op) = next_nonspace(b, at + 4) else { continue };
+                    if b[op] != b'(' {
+                        continue;
+                    }
+                    let Some(aw) = next_nonspace(b, op + 1) else { continue };
+                    let mut ae = aw;
+                    while ae < b.len() && is_ident_byte(b[ae]) {
+                        ae += 1;
+                    }
+                    if f.masked[aw..ae] == bind
+                        && next_nonspace(b, ae).map(|p| b[p]) == Some(b')')
+                    {
+                        return at;
+                    }
+                }
+            }
+            end
+        }
+        "if" | "while" | "match" => first_block_end(b, dot),
+        _ => stmt_end(b, dot),
+    }
+}
+
+/// Collect every function body in `f` as `(name, (open, end))`.
+fn fn_bodies(f: &ScannedFile) -> Vec<(String, (usize, usize))> {
+    let b = f.masked.as_bytes();
+    let mut out = Vec::new();
+    for at in find_word(&f.masked, "fn") {
+        let Some(ns) = next_nonspace(b, at + 2) else { continue };
+        if !is_ident_byte(b[ns]) || b[ns].is_ascii_digit() {
+            continue;
+        }
+        let mut e = ns;
+        while e < b.len() && is_ident_byte(b[e]) {
+            e += 1;
+        }
+        // find the body `{`, or bail at a bodyless `;` declaration
+        let mut j = e;
+        let mut depth = 0i32;
+        let mut body = None;
+        while j < b.len() {
+            match b[j] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b';' if depth <= 0 => break,
+                b'{' if depth <= 0 => {
+                    body = Some((j, matching_close(b, j) + 1));
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        if let Some(range) = body {
+            out.push((f.masked[ns..e].to_string(), range));
+        }
+    }
+    out
+}
+
+/// Build the lock graph over `files` (only `serve/`/`trace/`/`ckpt/`
+/// files participate).
+pub fn analyze(files: &[ScannedFile]) -> LockGraph {
+    let scoped: Vec<&ScannedFile> = files
+        .iter()
+        .filter(|f| in_dirs(&f.rel, LOCK_DIRS))
+        .collect();
+
+    // ---- function table ----------------------------------------------
+    let mut fns: Vec<FnDef> = Vec::new();
+    let mut fn_names: Vec<String> = Vec::new();
+    let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (fi, f) in scoped.iter().enumerate() {
+        for (name, body) in fn_bodies(f) {
+            let idx = fns.len();
+            by_name.entry(name.clone()).or_default().push(idx);
+            fn_names.push(name);
+            fns.push(FnDef {
+                file: fi,
+                body,
+                acqs: Vec::new(),
+                calls: Vec::new(),
+                blocking: Vec::new(),
+            });
+        }
+    }
+
+    // innermost function whose body contains `pos` in file `fi`
+    let owner = |fns: &[FnDef], fi: usize, pos: usize| -> Option<usize> {
+        fns.iter()
+            .enumerate()
+            .filter(|(_, d)| d.file == fi && d.body.0 <= pos && pos < d.body.1)
+            .max_by_key(|(_, d)| d.body.0)
+            .map(|(i, _)| i)
+    };
+
+    // ---- events ------------------------------------------------------
+    let mut nodes: Vec<String> = Vec::new();
+    let mut node_ids: BTreeMap<String, usize> = BTreeMap::new();
+    let mut findings: Vec<Finding> = Vec::new();
+
+    for (fi, f) in scoped.iter().enumerate() {
+        let b = f.masked.as_bytes();
+
+        // acquisitions
+        for m in ["lock", "read", "write"] {
+            for at in find_word(&f.masked, m) {
+                let Some(p) = prev_nonspace(b, at) else { continue };
+                if b[p] != b'.' {
+                    continue;
+                }
+                let Some(op) = next_nonspace(b, at + m.len()) else { continue };
+                if b[op] != b'(' {
+                    continue;
+                }
+                if next_nonspace(b, op + 1).map(|q| b[q]) != Some(b')') {
+                    continue;
+                }
+                if f.in_test(at) {
+                    continue;
+                }
+                let Some(name) = receiver_name(f, p) else { continue };
+                if STREAM_RECEIVERS.contains(&name.as_str()) {
+                    continue;
+                }
+                let line = f.line_of(at);
+                if f.allow_on(line, "lock-order") {
+                    findings.push(Finding {
+                        rule: "lock-order",
+                        level: Level::Error,
+                        rel: f.rel.clone(),
+                        line,
+                        message: format!("acquisition of `{name}` excluded from graph"),
+                        suppressed: true,
+                    });
+                    continue;
+                }
+                let key = format!("{}::{}", f.rel, name);
+                let node = *node_ids.entry(key.clone()).or_insert_with(|| {
+                    nodes.push(key);
+                    nodes.len() - 1
+                });
+                if let Some(fx) = owner(&fns, fi, at) {
+                    let end = hold_end(f, p).min(fns[fx].body.1);
+                    fns[fx].acqs.push(Acq { node, pos: at, end, line });
+                }
+            }
+        }
+
+        // direct blocking operations
+        let mut push_blocking = |fns: &mut Vec<FnDef>, at: usize, what: String| {
+            if f.in_test(at) {
+                return;
+            }
+            if let Some(fx) = owner(fns, fi, at) {
+                fns[fx].blocking.push((at, what));
+            }
+        };
+        for (m, empty) in [("join", true), ("recv", true), ("accept", true), ("recv_timeout", false)]
+        {
+            for at in find_word(&f.masked, m) {
+                let Some(p) = prev_nonspace(b, at) else { continue };
+                if b[p] != b'.' {
+                    continue;
+                }
+                let Some(op) = next_nonspace(b, at + m.len()) else { continue };
+                if b[op] != b'(' {
+                    continue;
+                }
+                if empty && next_nonspace(b, op + 1).map(|q| b[q]) != Some(b')') {
+                    continue;
+                }
+                push_blocking(&mut fns, at, format!(".{m}()"));
+            }
+        }
+        for at in find_word(&f.masked, "sleep") {
+            let Some(c) = prev_nonspace(b, at) else { continue };
+            if b[c] != b':' || c == 0 || b[c - 1] != b':' {
+                continue;
+            }
+            let Some(tw) = prev_nonspace(b, c - 1) else { continue };
+            if word_ending_at(&f.masked, tw + 1) != "thread" {
+                continue;
+            }
+            if next_nonspace(b, at + 5).map(|p| b[p]) != Some(b'(') {
+                continue;
+            }
+            push_blocking(&mut fns, at, "thread::sleep".into());
+        }
+
+        // calls to functions we know.  `drop` never resolves: explicit
+        // `drop(x)` is always `std::mem::drop` (calling `Drop::drop` is
+        // E0040), so linking it to our `Drop` impls would invent edges.
+        for (name, defs) in &by_name {
+            if name == "drop" {
+                continue;
+            }
+            let same_file = defs.iter().any(|&d| fns[d].file == fi);
+            let unique = defs.len() == 1;
+            for at in find_word(&f.masked, name) {
+                let Some(op) = next_nonspace(b, at + name.len()) else { continue };
+                if b[op] != b'(' {
+                    continue;
+                }
+                let prev = prev_nonspace(b, at);
+                let method = prev.map(|p| b[p]) == Some(b'.');
+                if method && METHOD_CALL_DENY.contains(&name.as_str()) {
+                    continue;
+                }
+                if let Some(p) = prev {
+                    // skip the definition itself and type constructors
+                    if is_ident_byte(b[p]) {
+                        let w = word_ending_at(&f.masked, p + 1);
+                        if w == "fn" || w == "struct" {
+                            continue;
+                        }
+                    }
+                }
+                if !same_file && !unique {
+                    continue; // ambiguous cross-file name
+                }
+                if f.in_test(at) {
+                    continue;
+                }
+                if let Some(fx) = owner(&fns, fi, at) {
+                    fns[fx].calls.push(CallSite { pos: at, name: name.clone(), method });
+                }
+            }
+        }
+    }
+
+    // ---- call resolution + transitive closure ------------------------
+    let resolve = |caller_file: usize, name: &str| -> Vec<usize> {
+        let Some(defs) = by_name.get(name) else { return vec![] };
+        let local: Vec<usize> = defs
+            .iter()
+            .copied()
+            .filter(|&d| fns[d].file == caller_file)
+            .collect();
+        if !local.is_empty() {
+            return local;
+        }
+        if defs.len() == 1 {
+            return defs.clone();
+        }
+        vec![]
+    };
+
+    let mut acq_sets: Vec<BTreeSet<usize>> = fns
+        .iter()
+        .map(|d| d.acqs.iter().map(|a| a.node).collect())
+        .collect();
+    let mut blocks: Vec<Option<String>> = fns
+        .iter()
+        .map(|d| d.blocking.first().map(|(_, w)| w.clone()))
+        .collect();
+    loop {
+        let mut changed = false;
+        for i in 0..fns.len() {
+            for c in &fns[i].calls {
+                for callee in resolve(fns[i].file, &c.name) {
+                    if callee == i {
+                        continue;
+                    }
+                    let add: Vec<usize> = acq_sets[callee]
+                        .iter()
+                        .copied()
+                        .filter(|n| !acq_sets[i].contains(n))
+                        .collect();
+                    if !add.is_empty() {
+                        acq_sets[i].extend(add);
+                        changed = true;
+                    }
+                    if blocks[i].is_none() {
+                        if let Some(w) = blocks[callee].clone() {
+                            blocks[i] = Some(format!("{}() -> {w}", c.name));
+                            changed = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // ---- edges + held-across findings --------------------------------
+    let mut edges: Vec<Edge> = Vec::new();
+    let mut seen: BTreeSet<(usize, usize)> = BTreeSet::new();
+    let mut adj: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); nodes.len()];
+    for (i, d) in fns.iter().enumerate() {
+        let f = scoped[d.file];
+        for a in &d.acqs {
+            let held = |pos: usize| a.pos < pos && pos < a.end;
+            let mut add_edge = |to: usize, line: usize, edges: &mut Vec<Edge>| {
+                if to == a.node {
+                    return;
+                }
+                adj[a.node].insert(to);
+                if seen.insert((a.node, to)) {
+                    edges.push(Edge {
+                        from: nodes[a.node].clone(),
+                        to: nodes[to].clone(),
+                        rel: f.rel.clone(),
+                        line,
+                    });
+                }
+            };
+            for b2 in &d.acqs {
+                if held(b2.pos) {
+                    add_edge(b2.node, b2.line, &mut edges);
+                }
+            }
+            for c in &d.calls {
+                if !held(c.pos) {
+                    continue;
+                }
+                let line = f.line_of(c.pos);
+                for callee in resolve(d.file, &c.name) {
+                    if callee == i {
+                        continue;
+                    }
+                    for &n in acq_sets[callee].iter() {
+                        add_edge(n, line, &mut edges);
+                    }
+                    if let Some(w) = &blocks[callee] {
+                        let suppressed = f.allow_on(line, "lock-order");
+                        findings.push(Finding {
+                            rule: "lock-order",
+                            level: Level::Error,
+                            rel: f.rel.clone(),
+                            line,
+                            message: format!(
+                                "lock `{}` held across blocking {w}",
+                                nodes[a.node]
+                            ),
+                            suppressed,
+                        });
+                    }
+                }
+            }
+            for (pos, what) in &d.blocking {
+                if !held(*pos) {
+                    continue;
+                }
+                let line = f.line_of(*pos);
+                let suppressed = f.allow_on(line, "lock-order");
+                findings.push(Finding {
+                    rule: "lock-order",
+                    level: Level::Error,
+                    rel: f.rel.clone(),
+                    line,
+                    message: format!("lock `{}` held across blocking {what}", nodes[a.node]),
+                    suppressed,
+                });
+            }
+        }
+    }
+
+    // ---- cycles (Tarjan SCC; self-edges were never added) ------------
+    let cycles = sccs(&adj)
+        .into_iter()
+        .filter(|c| c.len() > 1)
+        .map(|c| {
+            let mut ring: Vec<String> = c.iter().map(|&n| nodes[n].clone()).collect();
+            ring.sort();
+            ring
+        })
+        .collect::<Vec<_>>();
+    for ring in &cycles {
+        let site = edges
+            .iter()
+            .find(|e| ring.contains(&e.from) && ring.contains(&e.to));
+        findings.push(Finding {
+            rule: "lock-order",
+            level: Level::Error,
+            rel: site.map(|e| e.rel.clone()).unwrap_or_default(),
+            line: site.map(|e| e.line).unwrap_or(0),
+            message: format!("lock-order cycle: {}", ring.join(" -> ")),
+            suppressed: false,
+        });
+    }
+
+    let mut sorted_nodes = nodes.clone();
+    sorted_nodes.sort();
+    edges.sort_by(|a, b| (&a.from, &a.to).cmp(&(&b.from, &b.to)));
+    LockGraph {
+        nodes: sorted_nodes,
+        edges,
+        cycles,
+        findings,
+        functions: fns.len(),
+    }
+}
+
+/// Strongly connected components (iterative Tarjan).
+fn sccs(adj: &[BTreeSet<usize>]) -> Vec<Vec<usize>> {
+    let n = adj.len();
+    let mut index = vec![usize::MAX; n];
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut next = 0usize;
+    let mut out: Vec<Vec<usize>> = Vec::new();
+
+    // explicit DFS stack: (node, iterator position over neighbors)
+    for root in 0..n {
+        if index[root] != usize::MAX {
+            continue;
+        }
+        let mut work: Vec<(usize, Vec<usize>, usize)> =
+            vec![(root, adj[root].iter().copied().collect(), 0)];
+        index[root] = next;
+        low[root] = next;
+        next += 1;
+        stack.push(root);
+        on_stack[root] = true;
+        while let Some((v, nbrs, mut i)) = work.pop() {
+            let mut descended = false;
+            while i < nbrs.len() {
+                let w = nbrs[i];
+                i += 1;
+                if index[w] == usize::MAX {
+                    work.push((v, nbrs.clone(), i));
+                    index[w] = next;
+                    low[w] = next;
+                    next += 1;
+                    stack.push(w);
+                    on_stack[w] = true;
+                    work.push((w, adj[w].iter().copied().collect(), 0));
+                    descended = true;
+                    break;
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+            }
+            if descended {
+                continue;
+            }
+            if low[v] == index[v] {
+                let mut comp = Vec::new();
+                while let Some(w) = stack.pop() {
+                    on_stack[w] = false;
+                    comp.push(w);
+                    if w == v {
+                        break;
+                    }
+                }
+                out.push(comp);
+            }
+            if let Some(frame) = work.last() {
+                let p = frame.0;
+                low[p] = low[p].min(low[v]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(files: &[(&str, &str)]) -> LockGraph {
+        let scanned: Vec<ScannedFile> =
+            files.iter().map(|(rel, src)| ScannedFile::new(rel, src)).collect();
+        analyze(&scanned)
+    }
+
+    #[test]
+    fn nested_acquisition_makes_an_edge() {
+        let g = graph(&[(
+            "serve/a.rs",
+            "fn f(x: &M, y: &M) {\n    let a = x.alpha.lock().unwrap();\n    let b = y.beta.lock().unwrap();\n}\n",
+        )]);
+        assert_eq!(g.nodes, vec!["serve/a.rs::alpha", "serve/a.rs::beta"]);
+        assert_eq!(g.edges.len(), 1);
+        assert_eq!(g.edges[0].from, "serve/a.rs::alpha");
+        assert_eq!(g.edges[0].to, "serve/a.rs::beta");
+        assert!(g.cycles.is_empty());
+    }
+
+    #[test]
+    fn two_lock_cycle_across_functions_is_detected() {
+        let src = "\
+fn ab(s: &S) {
+    let a = s.alpha.lock().unwrap();
+    take_beta(s);
+}
+fn take_beta(s: &S) {
+    let b = s.beta.lock().unwrap();
+}
+fn ba(s: &S) {
+    let b = s.beta.lock().unwrap();
+    let a = s.alpha.lock().unwrap();
+}
+";
+        let g = graph(&[("serve/cycle.rs", src)]);
+        assert_eq!(g.cycles.len(), 1, "edges: {:?}", g.edges);
+        assert!(g.findings.iter().any(|f| f.message.contains("cycle")));
+    }
+
+    #[test]
+    fn sequential_temporaries_do_not_make_edges() {
+        let src = "\
+fn f(x: &M, y: &M) -> usize {
+    let a = x.alpha.lock().unwrap().len();
+    let n = compute(a);
+    y.beta.lock().unwrap().push(n);
+    x.alpha.lock().unwrap().clear();
+    n
+}
+";
+        // `a` here is a usize, not a guard — but the model treats the
+        // alpha guard as block-held, so alpha->beta is reported.  The
+        // second, temporary beta/alpha acquisitions add nothing new.
+        let g = graph(&[("serve/a.rs", src)]);
+        assert!(g.cycles.is_empty(), "edges: {:?}", g.edges);
+    }
+
+    #[test]
+    fn drop_releases_a_block_bound_guard() {
+        let src = "\
+fn f(x: &M, y: &M) {
+    let a = x.alpha.lock().unwrap();
+    drop(a);
+    let b = y.beta.lock().unwrap();
+}
+fn g(x: &M, y: &M) {
+    let b = y.beta.lock().unwrap();
+    let a = x.alpha.lock().unwrap();
+}
+";
+        // without the drop() this would be an alpha<->beta cycle
+        let g = graph(&[("serve/a.rs", src)]);
+        assert!(g.cycles.is_empty(), "edges: {:?}", g.edges);
+        assert_eq!(g.edges.len(), 1);
+        assert_eq!(g.edges[0].from, "serve/a.rs::beta");
+    }
+
+    #[test]
+    fn join_under_lock_is_flagged_condvar_wait_is_not() {
+        let src = "\
+fn bad(s: &S) {
+    let g = s.state.lock().unwrap();
+    s.handle.join();
+}
+fn fine(s: &S) {
+    let g = s.state.lock().unwrap();
+    let g = s.cv.wait(g).unwrap();
+}
+";
+        let g = graph(&[("serve/a.rs", src)]);
+        let holds: Vec<&Finding> = g
+            .findings
+            .iter()
+            .filter(|f| f.message.contains("held across"))
+            .collect();
+        assert_eq!(holds.len(), 1, "findings: {:?}", g.findings);
+        assert!(holds[0].message.contains(".join()"));
+    }
+
+    #[test]
+    fn transitive_blocking_through_a_call_is_flagged() {
+        let src = "\
+fn outer(s: &S) {
+    let g = s.state.lock().unwrap();
+    drain(s);
+}
+fn drain(s: &S) {
+    s.rx.recv();
+}
+";
+        let g = graph(&[("ckpt/a.rs", src)]);
+        assert_eq!(g.blocking_holds(), 1, "findings: {:?}", g.findings);
+    }
+
+    #[test]
+    fn allow_comment_removes_acquisition_and_counts_suppression() {
+        let src = "\
+fn f(x: &M, y: &M) {
+    let a = x.alpha.lock().unwrap(); // lint:allow(lock-order): leaf lock
+    let b = y.beta.lock().unwrap();
+}
+";
+        let g = graph(&[("serve/a.rs", src)]);
+        assert!(g.edges.is_empty());
+        assert_eq!(g.findings.iter().filter(|f| f.suppressed).count(), 1);
+    }
+
+    #[test]
+    fn io_read_write_with_args_are_not_acquisitions() {
+        let src = "\
+fn f(r: &mut R, w: &mut W, buf: &mut [u8]) {
+    r.read(buf);
+    w.write(buf);
+    r.stream.read_exact(buf);
+}
+";
+        let g = graph(&[("serve/a.rs", src)]);
+        assert!(g.nodes.is_empty(), "nodes: {:?}", g.nodes);
+    }
+
+    #[test]
+    fn out_of_scope_dirs_do_not_participate() {
+        let g = graph(&[(
+            "gemm/a.rs",
+            "fn f(x: &M) { let a = x.alpha.lock().unwrap(); x.h.join(); }\n",
+        )]);
+        assert!(g.nodes.is_empty());
+        assert!(g.findings.is_empty());
+    }
+
+    #[test]
+    fn test_code_is_ignored() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    fn f(x: &M, y: &M) {
+        let a = x.alpha.lock().unwrap();
+        let b = y.beta.lock().unwrap();
+    }
+}
+";
+        let g = graph(&[("serve/a.rs", src)]);
+        assert!(g.nodes.is_empty());
+    }
+}

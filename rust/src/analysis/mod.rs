@@ -1,0 +1,260 @@
+//! In-tree static analysis: the `switchback lint` invariant linter.
+//!
+//! Three layers (ISSUE/DESIGN §Static analysis):
+//!
+//! 1. [`scan`] — a lexical Rust scanner that masks comments/strings/char
+//!    literals and tracks `#[test]`/`#[cfg(test)]` item bodies, so rules
+//!    match code and only code.
+//! 2. [`rules`] — the repo-invariant rules (`no-panic-path`,
+//!    `safety-comment`, `checked-narrowing`, `epoch-clock`,
+//!    `metrics-naming`, `joined-spawn`), each suppressible inline with
+//!    `// lint:allow(rule): reason`.
+//! 3. [`locks`] — the lock-order analyzer: per-function acquisition
+//!    sequences, the inter-procedural acquisition graph, cycle and
+//!    held-across-blocking detection over `serve/`, `trace/`, `ckpt/`.
+//!
+//! [`lint_root`] walks a source tree, runs all three, and returns a
+//! [`LintReport`] that renders as human text and as the flat
+//! `BENCH_lint.json` ledger gated by `benchdiff` (suppressions may only
+//! shrink against the committed baseline).
+
+pub mod locks;
+pub mod rules;
+pub mod scan;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::ObjWriter;
+pub use locks::LockGraph;
+pub use rules::{Finding, Level, RULES};
+pub use scan::ScannedFile;
+
+/// Everything one lint pass produced.
+pub struct LintReport {
+    /// Files scanned.
+    pub files: usize,
+    /// All findings — rule findings and lock-order findings, suppressed
+    /// ones included (they carry `suppressed: true`).
+    pub findings: Vec<Finding>,
+    /// The lock acquisition graph.
+    pub graph: LockGraph,
+}
+
+impl LintReport {
+    /// Unsuppressed findings, file/line ordered.
+    pub fn active(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.suppressed)
+    }
+
+    pub fn suppressed_total(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed).count()
+    }
+
+    /// Highest level among unsuppressed findings.
+    pub fn worst(&self) -> Option<Level> {
+        self.active().map(|f| f.level).max()
+    }
+
+    /// `(active, suppressed)` counts per rule, every known rule present.
+    pub fn rule_counts(&self) -> BTreeMap<&'static str, (usize, usize)> {
+        let mut out: BTreeMap<&'static str, (usize, usize)> =
+            RULES.iter().map(|r| (*r, (0, 0))).collect();
+        for f in &self.findings {
+            let slot = out.entry(f.rule).or_insert((0, 0));
+            if f.suppressed {
+                slot.1 += 1;
+            } else {
+                slot.0 += 1;
+            }
+        }
+        out
+    }
+
+    /// The flat `BENCH_lint.json` ledger (`schema: lint_ledger_v1`).
+    pub fn ledger_json(&self) -> String {
+        let mut w = ObjWriter::new();
+        w.field_str("schema", "lint_ledger_v1");
+        w.field_u64("files", self.files as u64);
+        w.field_u64("findings_total", self.active().count() as u64);
+        w.field_u64("suppressed_total", self.suppressed_total() as u64);
+        for (rule, (active, sup)) in self.rule_counts() {
+            let key = rule.replace('-', "_");
+            w.field_u64(&format!("rule_{key}"), active as u64);
+            w.field_u64(&format!("sup_{key}"), sup as u64);
+        }
+        w.field_u64("lock_nodes", self.graph.nodes.len() as u64);
+        w.field_u64("lock_edges", self.graph.edges.len() as u64);
+        w.field_u64("lock_cycles", self.graph.cycles.len() as u64);
+        w.field_u64("blocking_holds", self.graph.blocking_holds() as u64);
+        w.field_u64("lock_functions", self.graph.functions as u64);
+        w.finish()
+    }
+
+    /// Human-readable report: findings, then the lock graph, then totals.
+    pub fn render(&self, verbose: bool) -> String {
+        let mut out = String::new();
+        for f in self.active() {
+            out.push_str(&format!(
+                "{}:{}: [{}/{}] {}\n",
+                f.rel,
+                f.line,
+                f.level.as_str(),
+                f.rule,
+                f.message
+            ));
+        }
+        if verbose || self.active().count() == 0 {
+            out.push_str(&format!(
+                "lock graph: {} nodes, {} edges, {} cycles ({} functions)\n",
+                self.graph.nodes.len(),
+                self.graph.edges.len(),
+                self.graph.cycles.len(),
+                self.graph.functions
+            ));
+            for e in &self.graph.edges {
+                out.push_str(&format!(
+                    "  {} -> {}  ({}:{})\n",
+                    e.from, e.to, e.rel, e.line
+                ));
+            }
+        }
+        let per_rule: Vec<String> = self
+            .rule_counts()
+            .iter()
+            .filter(|(_, (a, s))| *a + *s > 0)
+            .map(|(r, (a, s))| format!("{r}: {a} (+{s} suppressed)"))
+            .collect();
+        out.push_str(&format!(
+            "lint: {} files, {} findings, {} suppressions{}\n",
+            self.files,
+            self.active().count(),
+            self.suppressed_total(),
+            if per_rule.is_empty() {
+                String::new()
+            } else {
+                format!(" — {}", per_rule.join(", "))
+            }
+        ));
+        out
+    }
+}
+
+/// Lint in-memory sources (`(rel, src)` pairs) — the fixture/test entry
+/// point, and the core of [`lint_root`].
+pub fn lint_sources(sources: &[(String, String)]) -> LintReport {
+    let scanned: Vec<ScannedFile> = sources
+        .iter()
+        .map(|(rel, src)| ScannedFile::new(rel, src))
+        .collect();
+    let mut findings = Vec::new();
+    for f in &scanned {
+        rules::check_file(f, &mut findings);
+    }
+    let graph = locks::analyze(&scanned);
+    findings.extend(graph.findings.iter().cloned());
+    findings.sort_by(|a, b| (&a.rel, a.line).cmp(&(&b.rel, b.line)));
+    LintReport { files: scanned.len(), findings, graph }
+}
+
+/// Recursively collect `.rs` files under `root` (skipping `target/`,
+/// `vendor/`, hidden dirs) as `(rel, src)`, sorted by path.
+pub fn collect_sources(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if path.is_dir() {
+                if name == "target" || name == "vendor" || name.starts_with('.') {
+                    continue;
+                }
+                stack.push(path);
+            } else if name.ends_with(".rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                let src = std::fs::read_to_string(&path)?;
+                files.push((rel, src));
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Lint every `.rs` file under `root`.
+pub fn lint_root(root: &Path) -> std::io::Result<LintReport> {
+    Ok(lint_sources(&collect_sources(root)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn report(files: &[(&str, &str)]) -> LintReport {
+        let sources: Vec<(String, String)> = files
+            .iter()
+            .map(|(r, s)| (r.to_string(), s.to_string()))
+            .collect();
+        lint_sources(&sources)
+    }
+
+    #[test]
+    fn clean_tree_reports_zero_findings() {
+        let r = report(&[("serve/a.rs", "fn f(x: Option<u32>) -> Option<u32> { x }\n")]);
+        assert_eq!(r.active().count(), 0);
+        assert_eq!(r.worst(), None);
+        assert!(r.render(false).contains("0 findings"));
+    }
+
+    #[test]
+    fn ledger_is_valid_flat_json_with_all_rules() {
+        let r = report(&[
+            ("serve/a.rs", "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n"),
+            (
+                "serve/b.rs",
+                "fn g(v: &[u32], i: usize) -> u32 { v[i] // lint:allow(no-panic-path): bounded\n}\n",
+            ),
+        ]);
+        let v = json::parse(&r.ledger_json()).expect("ledger parses");
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("lint_ledger_v1"));
+        assert_eq!(v.get("files").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("findings_total").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("suppressed_total").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("rule_no_panic_path").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("sup_no_panic_path").unwrap().as_usize(), Some(1));
+        for rule in RULES {
+            let key = rule.replace('-', "_");
+            assert!(v.get(&format!("rule_{key}")).is_some(), "missing rule_{key}");
+            assert!(v.get(&format!("sup_{key}")).is_some(), "missing sup_{key}");
+        }
+        assert_eq!(v.get("lock_cycles").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn worst_level_escalates_to_error_on_lock_findings() {
+        let r = report(&[(
+            "serve/a.rs",
+            "fn f(s: &S) {\n    let g = s.state.lock().unwrap();\n    s.h.join();\n}\n",
+        )]);
+        assert_eq!(r.worst(), Some(Level::Error));
+        let v = json::parse(&r.ledger_json()).unwrap();
+        assert_eq!(v.get("blocking_holds").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn render_lists_findings_with_location() {
+        let r = report(&[("net/a.rs", "fn f(x: u64) -> u32 { x as u32 }\n")]);
+        let text = r.render(false);
+        assert!(text.contains("net/a.rs:1:"), "got: {text}");
+        assert!(text.contains("checked-narrowing"), "got: {text}");
+    }
+}

@@ -1,0 +1,558 @@
+//! The invariant rules the linter enforces, over [`ScannedFile`]s.
+//!
+//! Every rule is lexical (it reads the masked source, so strings and
+//! comments never fire), test-aware (findings inside `#[test]`/
+//! `#[cfg(test)]` items are dropped), and suppressible with
+//! `// lint:allow(rule): reason` on the finding's line or the line
+//! above.  Rule semantics are specified in DESIGN.md §Static analysis;
+//! the should-fire / should-not-fire corpus lives in
+//! `tests/fixtures/lint*/`.
+
+use super::scan::{
+    find_word, is_ident_byte, matching_close, next_nonspace, prev_nonspace,
+    word_ending_at, ScannedFile,
+};
+
+/// Finding severity. `--deny LEVEL` fails the run when any unsuppressed
+/// finding reaches `LEVEL`; rule findings are [`Level::Warn`], lock-order
+/// hazards are [`Level::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "info" => Some(Level::Info),
+            "warn" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// One lint finding, suppressed or not (suppressed findings are kept so
+/// the ledger can count suppressions per rule).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub level: Level,
+    pub rel: String,
+    pub line: usize,
+    pub message: String,
+    pub suppressed: bool,
+}
+
+/// Every rule the engine knows, in report order.  `lock-order` findings
+/// come from [`super::locks`], the rest from [`check_file`].
+pub const RULES: &[&str] = &[
+    "no-panic-path",
+    "safety-comment",
+    "checked-narrowing",
+    "epoch-clock",
+    "metrics-naming",
+    "joined-spawn",
+    "lock-order",
+];
+
+/// Directories whose non-test code must not panic.
+const PANIC_FREE_DIRS: &[&str] = &["serve", "net", "ckpt"];
+/// Directories whose parsers must not narrow with bare `as`.
+const PARSER_DIRS: &[&str] = &["ckpt", "net"];
+
+/// Does `rel`'s directory path contain one of `dirs` as a component?
+pub(crate) fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    let mut parts: Vec<&str> = rel.split('/').collect();
+    parts.pop(); // file name
+    parts.iter().any(|p| dirs.contains(p))
+}
+
+fn emit(
+    f: &ScannedFile,
+    out: &mut Vec<Finding>,
+    rule: &'static str,
+    off: usize,
+    message: String,
+) {
+    if f.in_test(off) {
+        return;
+    }
+    let line = f.line_of(off);
+    let suppressed = f.allow_on(line, rule);
+    out.push(Finding {
+        rule,
+        level: Level::Warn,
+        rel: f.rel.clone(),
+        line,
+        message,
+        suppressed,
+    });
+}
+
+/// Run every file-local rule over `f`, appending findings to `out`.
+pub fn check_file(f: &ScannedFile, out: &mut Vec<Finding>) {
+    no_panic_path(f, out);
+    safety_comment(f, out);
+    checked_narrowing(f, out);
+    epoch_clock(f, out);
+    metrics_naming(f, out);
+    joined_spawn(f, out);
+}
+
+/// Offsets of `.name(` method calls (whitespace-tolerant) in `masked`.
+fn method_calls(masked: &str, name: &str) -> Vec<usize> {
+    let b = masked.as_bytes();
+    let mut out = Vec::new();
+    for at in find_word(masked, name) {
+        let Some(p) = prev_nonspace(b, at) else { continue };
+        if b[p] != b'.' {
+            continue;
+        }
+        let Some(q) = next_nonspace(b, at + name.len()) else { continue };
+        if b[q] == b'(' {
+            out.push(at);
+        }
+    }
+    out
+}
+
+/// Keywords that turn `word [` into a type/pattern position, not an
+/// index expression.
+const NON_EXPR_KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate",
+    "dyn", "else", "enum", "fn", "for", "if", "impl", "in", "let", "loop",
+    "match", "move", "mut", "pub", "ref", "return", "static", "struct",
+    "trait", "type", "union", "unsafe", "use", "where", "while", "yield",
+];
+
+fn short(inner: &str) -> String {
+    let s: String = inner.chars().take(24).collect();
+    if s.len() < inner.len() {
+        format!("{s}...")
+    } else {
+        s
+    }
+}
+
+/// `no-panic-path`: under `serve/`, `net/`, `ckpt/`, non-test code may
+/// not `.unwrap()`, `.expect(..)`, hit a panicking macro, or index with a
+/// non-trivial subscript (integer literals and `..` ranges are exempt —
+/// they are either obviously bounded or slice-typed, and slicing is
+/// checked by the same length guards the parsers already assert).
+fn no_panic_path(f: &ScannedFile, out: &mut Vec<Finding>) {
+    if !in_dirs(&f.rel, PANIC_FREE_DIRS) {
+        return;
+    }
+    for name in ["unwrap", "expect"] {
+        for at in method_calls(&f.masked, name) {
+            emit(
+                f,
+                out,
+                "no-panic-path",
+                at,
+                format!(".{name}() can panic — return an error instead"),
+            );
+        }
+    }
+    let b = f.masked.as_bytes();
+    for mac in ["panic", "unreachable", "todo", "unimplemented"] {
+        for at in find_word(&f.masked, mac) {
+            if next_nonspace(b, at + mac.len()).map(|p| b[p]) == Some(b'!') {
+                emit(
+                    f,
+                    out,
+                    "no-panic-path",
+                    at,
+                    format!("{mac}! aborts the thread — fail closed instead"),
+                );
+            }
+        }
+    }
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] != b'[' {
+            i += 1;
+            continue;
+        }
+        let open = i;
+        i += 1;
+        let Some(p) = prev_nonspace(b, open) else { continue };
+        let candidate = if is_ident_byte(b[p]) {
+            let w = word_ending_at(&f.masked, p + 1);
+            !w.is_empty()
+                && !w.as_bytes()[0].is_ascii_digit()
+                && !NON_EXPR_KEYWORDS.contains(&w)
+        } else {
+            b[p] == b')' || b[p] == b']'
+        };
+        if !candidate {
+            continue;
+        }
+        let close = matching_close(b, open);
+        let inner = f.masked[open + 1..close.min(f.masked.len())].trim();
+        if inner.is_empty()
+            || inner.bytes().all(|c| c.is_ascii_digit() || c == b'_')
+            || inner.contains("..")
+        {
+            continue;
+        }
+        emit(
+            f,
+            out,
+            "no-panic-path",
+            open,
+            format!("indexing `[{}]` can panic — use .get()", short(inner)),
+        );
+    }
+}
+
+/// `safety-comment`: every `unsafe` needs `// SAFETY:` on its line or
+/// within the three lines above (one comment covers all `unsafe` tokens
+/// on a line).
+fn safety_comment(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let mut last_line = 0usize;
+    for at in find_word(&f.masked, "unsafe") {
+        let line = f.line_of(at);
+        if line == last_line {
+            continue;
+        }
+        last_line = line;
+        if !f.safety_near(line) {
+            emit(
+                f,
+                out,
+                "safety-comment",
+                at,
+                "unsafe without an adjacent // SAFETY: justification".into(),
+            );
+        }
+    }
+}
+
+/// `checked-narrowing`: wire/ckpt parsers must not narrow integers with
+/// bare `as` — use `try_from` and fail closed on overflow.
+fn checked_narrowing(f: &ScannedFile, out: &mut Vec<Finding>) {
+    if !in_dirs(&f.rel, PARSER_DIRS) {
+        return;
+    }
+    let b = f.masked.as_bytes();
+    const NARROW: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32"];
+    for at in find_word(&f.masked, "as") {
+        let Some(q) = next_nonspace(b, at + 2) else { continue };
+        if !is_ident_byte(b[q]) {
+            continue;
+        }
+        let mut e = q;
+        while e < b.len() && is_ident_byte(b[e]) {
+            e += 1;
+        }
+        let ty = &f.masked[q..e];
+        if NARROW.contains(&ty) {
+            emit(
+                f,
+                out,
+                "checked-narrowing",
+                at,
+                format!("bare `as {ty}` truncates silently — use {ty}::try_from"),
+            );
+        }
+    }
+}
+
+/// `epoch-clock`: outside `trace/`, time comes from `trace::clock()` so
+/// every timestamp is anchored to the one process trace epoch.
+fn epoch_clock(f: &ScannedFile, out: &mut Vec<Finding>) {
+    if in_dirs(&f.rel, &["trace"]) {
+        return;
+    }
+    let b = f.masked.as_bytes();
+    for at in find_word(&f.masked, "Instant") {
+        let Some(c) = next_nonspace(b, at + "Instant".len()) else { continue };
+        if b[c] != b':' || b.get(c + 1) != Some(&b':') {
+            continue;
+        }
+        let Some(w) = next_nonspace(b, c + 2) else { continue };
+        let mut e = w;
+        while e < b.len() && is_ident_byte(b[e]) {
+            e += 1;
+        }
+        if &f.masked[w..e] != "now" {
+            continue;
+        }
+        if next_nonspace(b, e).map(|p| b[p]) == Some(b'(') {
+            emit(
+                f,
+                out,
+                "epoch-clock",
+                at,
+                "raw Instant::now() — use trace::clock() (the epoch anchor)".into(),
+            );
+        }
+    }
+}
+
+/// `metrics-naming`: counter names registered via the trace registry are
+/// exposed with a `_total` suffix appended at exposition, so the literal
+/// must be bare `[a-z0-9._]+` and must NOT already end in `_total`
+/// (double suffix at scrape time).
+fn metrics_naming(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let mb = f.masked.as_bytes();
+    let sb = f.src.as_bytes();
+    for at in find_word(&f.masked, "counter") {
+        let Some(p) = prev_nonspace(mb, at) else { continue };
+        if mb[p] != b'.' {
+            continue;
+        }
+        let Some(op) = next_nonspace(mb, at + "counter".len()) else { continue };
+        if mb[op] != b'(' {
+            continue;
+        }
+        // the argument only matters when it is a string literal — read it
+        // from the unmasked source
+        let Some(q) = next_nonspace(sb, op + 1) else { continue };
+        if sb[q] != b'"' {
+            continue;
+        }
+        let mut e = q + 1;
+        while e < sb.len() && sb[e] != b'"' && sb[e] != b'\\' {
+            e += 1;
+        }
+        if sb.get(e) != Some(&b'"') {
+            continue;
+        }
+        let name = &f.src[q + 1..e];
+        let clean = !name.is_empty()
+            && name
+                .bytes()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'.' || c == b'_');
+        if name.ends_with("_total") || !clean {
+            emit(
+                f,
+                out,
+                "metrics-naming",
+                at,
+                format!(
+                    "counter {name:?} — names are [a-z0-9._]+ and must not end in \
+                     _total (the registry appends it at exposition)"
+                ),
+            );
+        }
+    }
+}
+
+/// `joined-spawn`: a `thread::spawn` whose `JoinHandle` is discarded
+/// (bare statement or `let _ =`) leaks the thread past scope — bind the
+/// handle and join it, or register it with the owning pool.
+fn joined_spawn(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let b = f.masked.as_bytes();
+    for at in find_word(&f.masked, "spawn") {
+        let Some(c) = prev_nonspace(b, at) else { continue };
+        if b[c] != b':' || c == 0 || b[c - 1] != b':' {
+            continue;
+        }
+        let Some(tw) = prev_nonspace(b, c - 1) else { continue };
+        if word_ending_at(&f.masked, tw + 1) != "thread" {
+            continue;
+        }
+        let Some(op) = next_nonspace(b, at + "spawn".len()) else { continue };
+        if b[op] != b'(' {
+            continue;
+        }
+        let close = matching_close(b, op);
+        if next_nonspace(b, close + 1).map(|p| b[p]) != Some(b';') {
+            continue; // handle is bound, collected, chained, or returned
+        }
+        // statement start: `thread` or a leading `std::`
+        let mut start = tw + 1 - "thread".len();
+        if let Some(pc) = prev_nonspace(b, start) {
+            if b[pc] == b':' && pc > 0 && b[pc - 1] == b':' {
+                if let Some(se) = prev_nonspace(b, pc - 1) {
+                    if word_ending_at(&f.masked, se + 1) == "std" {
+                        start = se + 1 - "std".len();
+                    }
+                }
+            }
+        }
+        let discarded = match prev_nonspace(b, start) {
+            None => true,
+            Some(p) => match b[p] {
+                b';' | b'{' | b'}' => true,
+                b'=' => {
+                    // `let _ = thread::spawn(..);` still discards it
+                    let mut is_let_underscore = false;
+                    if let Some(we) = prev_nonspace(b, p) {
+                        let w = word_ending_at(&f.masked, we + 1);
+                        if w == "_" {
+                            let ws = we + 1 - w.len();
+                            if let Some(le) = prev_nonspace(b, ws) {
+                                is_let_underscore =
+                                    word_ending_at(&f.masked, le + 1) == "let";
+                            }
+                        }
+                    }
+                    is_let_underscore
+                }
+                _ => false,
+            },
+        };
+        if discarded {
+            emit(
+                f,
+                out,
+                "joined-spawn",
+                at,
+                "thread::spawn handle discarded — join it or register it".into(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let f = ScannedFile::new(rel, src);
+        let mut out = Vec::new();
+        check_file(&f, &mut out);
+        out
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().filter(|f| !f.suppressed).map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unwrap_fires_only_in_scoped_dirs() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules_of(&findings("serve/a.rs", src)), vec!["no-panic-path"]);
+        assert_eq!(rules_of(&findings("ckpt/sub/a.rs", src)), vec!["no-panic-path"]);
+        assert!(rules_of(&findings("train/a.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn unwrap_in_test_or_string_or_comment_does_not_fire() {
+        let src = "\
+fn live() -> &'static str { \"x.unwrap()\" } // or .unwrap() in prose
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { Some(1).unwrap(); }
+}
+";
+        assert!(rules_of(&findings("serve/a.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_variants_do_not_fire() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0).min(x.unwrap_or_default()) }\n";
+        assert!(rules_of(&findings("serve/a.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn panic_macros_fire_but_paths_do_not() {
+        let src = "fn f() { if std::panic::catch_unwind(|| ()).is_err() { panic!(\"x\") } }\n";
+        assert_eq!(rules_of(&findings("net/a.rs", src)), vec!["no-panic-path"]);
+    }
+
+    #[test]
+    fn indexing_semantics() {
+        let fire = "fn f(v: &[u32], i: usize) -> u32 { v[i] }\n";
+        assert_eq!(rules_of(&findings("serve/a.rs", fire)), vec!["no-panic-path"]);
+        let clean = "\
+fn f(v: &[u32], h: &[u8; 8]) -> u32 {
+    let a: [u8; 4] = [1, 2, 3, 4];
+    let _s = &v[..2];
+    let _t = &h[4..];
+    let x = vec![1u32];
+    v[0] + x[0] + (a[1] as u32)
+}
+";
+        assert!(rules_of(&findings("serve/a.rs", clean)).is_empty());
+    }
+
+    #[test]
+    fn lint_allow_suppresses_and_is_counted() {
+        let src = "fn f(v: &[u32], i: usize) -> u32 {\n    v[i] // lint:allow(no-panic-path): i is bounded\n}\n";
+        let fs = findings("serve/a.rs", src);
+        assert!(rules_of(&fs).is_empty());
+        assert_eq!(fs.iter().filter(|f| f.suppressed).count(), 1);
+    }
+
+    #[test]
+    fn safety_comment_rule() {
+        let bad = "fn f() { unsafe { g() } }\n";
+        assert_eq!(rules_of(&findings("gemm/a.rs", bad)), vec!["safety-comment"]);
+        let good = "fn f() {\n    // SAFETY: g has no preconditions\n    unsafe { g() }\n}\n";
+        assert!(rules_of(&findings("gemm/a.rs", good)).is_empty());
+    }
+
+    #[test]
+    fn narrowing_fires_in_parsers_only() {
+        let src = "fn f(x: u64) -> u32 { x as u32 }\n";
+        assert_eq!(rules_of(&findings("ckpt/a.rs", src)), vec!["checked-narrowing"]);
+        assert!(rules_of(&findings("gemm/a.rs", src)).is_empty());
+        let widen = "fn f(x: u8) -> u64 { (x as u64) + (1 as usize as u64) }\n";
+        assert!(rules_of(&findings("ckpt/a.rs", widen)).is_empty());
+    }
+
+    #[test]
+    fn epoch_clock_fires_outside_trace() {
+        let src = "fn f() { let _t = std::time::Instant::now(); }\n";
+        assert_eq!(rules_of(&findings("serve/a.rs", src)), vec!["epoch-clock"]);
+        assert!(rules_of(&findings("trace/a.rs", src)).is_empty());
+        let ok = "fn f() { let _t = crate::trace::clock(); }\n";
+        assert!(rules_of(&findings("serve/a.rs", ok)).is_empty());
+    }
+
+    #[test]
+    fn metrics_naming_checks_literals() {
+        let bad = "fn f(r: &Registry) { r.counter(\"serve.hits_total\"); }\n";
+        assert_eq!(rules_of(&findings("serve/a.rs", bad)), vec!["metrics-naming"]);
+        let bad2 = "fn f(r: &Registry) { r.counter(\"Serve Hits\"); }\n";
+        assert_eq!(rules_of(&findings("serve/a.rs", bad2)), vec!["metrics-naming"]);
+        let good = "fn f(r: &Registry) { r.counter(\"serve.hits\"); }\n";
+        assert!(rules_of(&findings("serve/a.rs", good)).is_empty());
+        let dynamic = "fn f(r: &Registry, n: &str) { r.counter(n); }\n";
+        assert!(rules_of(&findings("serve/a.rs", dynamic)).is_empty());
+    }
+
+    #[test]
+    fn joined_spawn_fires_on_discarded_handles_only() {
+        let bare = "fn f() { std::thread::spawn(|| work()); }\n";
+        assert_eq!(rules_of(&findings("util/a.rs", bare)), vec!["joined-spawn"]);
+        let let_us = "fn f() { let _ = thread::spawn(|| work()); }\n";
+        assert_eq!(rules_of(&findings("util/a.rs", let_us)), vec!["joined-spawn"]);
+        let bound = "fn f() { let h = thread::spawn(|| work()); h.join().unwrap(); }\n";
+        assert!(rules_of(&findings("util/a.rs", bound)).is_empty());
+        let collected = "\
+fn f() -> Vec<std::thread::JoinHandle<()>> {
+    (0..4)
+        .map(|_| {
+            std::thread::spawn(move || work())
+        })
+        .collect()
+}
+";
+        assert!(rules_of(&findings("util/a.rs", collected)).is_empty());
+    }
+
+    #[test]
+    fn in_dirs_matches_components_not_prefixes() {
+        assert!(in_dirs("serve/a.rs", &["serve"]));
+        assert!(in_dirs("x/serve/a.rs", &["serve"]));
+        assert!(!in_dirs("observer/a.rs", &["serve"]));
+        assert!(!in_dirs("serve.rs", &["serve"]));
+    }
+}

@@ -1,0 +1,571 @@
+//! Lexical Rust scanner: the token layer under the in-tree linter.
+//!
+//! One pass over a source file produces a [`ScannedFile`]:
+//!
+//! * `masked` — the source with every comment, string literal (plain,
+//!   raw, byte, C), and char literal blanked to spaces, byte-for-byte the
+//!   same length as `src` so offsets and line numbers line up.  Rules
+//!   pattern-match on `masked` and can never fire inside a string or a
+//!   comment by construction.
+//! * `comments` — the text of every `//` comment, per line.  This is
+//!   where `// lint:allow(rule)` suppressions and `// SAFETY:`
+//!   justifications live.
+//! * test regions — byte ranges owned by an item whose attribute
+//!   mentions `test` (`#[test]`, `#[cfg(test)]`, `#[cfg(all(test, ..))]`);
+//!   findings inside them are dropped, so test code may `.unwrap()`
+//!   freely.
+//!
+//! The scanner is lexical, not a parser: it understands exactly enough
+//! Rust (nested block comments, `r#".."#` hash-delimited raw strings,
+//! char-literal vs. lifetime disambiguation, attribute bracket nesting)
+//! to make the rule layer's substring matching sound.
+
+/// A scanned source file: original text, masked text, comment map and
+/// test regions, plus a line table for offset → line translation.
+pub struct ScannedFile {
+    /// Path relative to the lint root, `/`-separated (`serve/engine.rs`).
+    pub rel: String,
+    /// Original source text.
+    pub src: String,
+    /// Source with comments/strings/chars blanked to spaces (newlines
+    /// kept), identical length to `src`.
+    pub masked: String,
+    /// `(line, text)` for every `//` comment, in file order.
+    comments: Vec<(usize, String)>,
+    /// Byte ranges `[start, end)` of test items.
+    test_regions: Vec<(usize, usize)>,
+    /// Byte offset of the start of each line (line 1 first).
+    line_starts: Vec<usize>,
+}
+
+impl ScannedFile {
+    pub fn new(rel: &str, src: &str) -> Self {
+        let (masked, comments) = mask_source(src);
+        let test_regions = test_regions(&masked);
+        let mut line_starts = vec![0usize];
+        for (i, b) in src.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        ScannedFile {
+            rel: rel.to_string(),
+            src: src.to_string(),
+            masked,
+            comments,
+            test_regions,
+            line_starts,
+        }
+    }
+
+    /// 1-based line containing byte offset `off`.
+    pub fn line_of(&self, off: usize) -> usize {
+        match self.line_starts.binary_search(&off) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Is `off` inside an item marked by a `test` attribute?
+    pub fn in_test(&self, off: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= off && off < b)
+    }
+
+    fn comments_on(&self, line: usize) -> impl Iterator<Item = &str> {
+        self.comments
+            .iter()
+            .filter(move |(l, _)| *l == line)
+            .map(|(_, t)| t.as_str())
+    }
+
+    /// Does a `// lint:allow(rule, ...)` comment on this line or the line
+    /// above suppress `rule`?
+    pub fn allow_on(&self, line: usize, rule: &str) -> bool {
+        for l in [line, line.saturating_sub(1)] {
+            for c in self.comments_on(l) {
+                if let Some(rest) = c.split("lint:allow(").nth(1) {
+                    if let Some(list) = rest.split(')').next() {
+                        if list.split(',').any(|r| r.trim() == rule) {
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// Is there a `// SAFETY:` comment on `line` or within the three
+    /// lines above it?
+    pub fn safety_near(&self, line: usize) -> bool {
+        (line.saturating_sub(3)..=line)
+            .any(|l| self.comments_on(l).any(|c| c.contains("SAFETY:")))
+    }
+}
+
+fn blank(out: &mut [u8], from: usize, to: usize) {
+    for b in out.iter_mut().take(to).skip(from) {
+        if *b != b'\n' {
+            *b = b' ';
+        }
+    }
+}
+
+fn count_newlines(b: &[u8], from: usize, to: usize) -> usize {
+    b[from..to.min(b.len())].iter().filter(|&&c| c == b'\n').count()
+}
+
+pub(crate) fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+fn utf8_len(lead: u8) -> usize {
+    match lead {
+        c if c < 0x80 => 1,
+        c if c < 0xE0 => 2,
+        c if c < 0xF0 => 3,
+        _ => 4,
+    }
+}
+
+/// `r"..."`, `r#"..."#`, `br".."`, `cr#".."#` opener at `i`:
+/// `(opener_len, hash_count)`.
+fn raw_string_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let r = match b[i] {
+        b'r' => i,
+        b'b' | b'c' if b.get(i + 1) == Some(&b'r') => i + 1,
+        _ => return None,
+    };
+    let mut k = r + 1;
+    let mut hashes = 0usize;
+    while b.get(k) == Some(&b'#') {
+        hashes += 1;
+        k += 1;
+    }
+    if b.get(k) == Some(&b'"') {
+        Some((k + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+fn find_raw_end(b: &[u8], start: usize, hashes: usize) -> usize {
+    let mut j = start;
+    while j < b.len() {
+        if b[j] == b'"' {
+            let mut h = 0;
+            while h < hashes && b.get(j + 1 + h) == Some(&b'#') {
+                h += 1;
+            }
+            if h == hashes {
+                return j + 1 + hashes;
+            }
+        }
+        j += 1;
+    }
+    b.len()
+}
+
+fn find_string_end(b: &[u8], mut j: usize) -> usize {
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    b.len()
+}
+
+/// End of a char literal opening at quote `q`, or `None` for a lifetime.
+fn char_literal_end(b: &[u8], q: usize) -> Option<usize> {
+    let first = *b.get(q + 1)?;
+    if first == b'\\' {
+        // skip the escaped char itself so `'\''` terminates at its own
+        // closing quote, then scan (bounded: longest escape is \u{10FFFF})
+        let mut j = q + 3;
+        let limit = (q + 16).min(b.len());
+        while j < limit {
+            if b[j] == b'\'' {
+                return Some(j + 1);
+            }
+            j += 1;
+        }
+        return None;
+    }
+    if first == b'\'' {
+        return None;
+    }
+    let l = utf8_len(first);
+    if b.get(q + 1 + l) == Some(&b'\'') {
+        return Some(q + 2 + l);
+    }
+    None
+}
+
+/// Blank comments, strings, and char literals; collect `//` comment text.
+fn mask_source(src: &str) -> (String, Vec<(usize, String)>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let end = src[i..].find('\n').map(|j| i + j).unwrap_or(n);
+            comments.push((line, src[i + 2..end].to_string()));
+            blank(&mut out, i, end);
+            i = end;
+            continue;
+        }
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            line += count_newlines(b, i, j);
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        // a literal can only start where an identifier does not continue
+        // (`carrier"` is an ident then a string; `br"` alone is a prefix)
+        let fresh = i == 0 || !is_ident_byte(b[i - 1]);
+        if fresh {
+            if let Some((open, hashes)) = raw_string_open(b, i) {
+                let j = find_raw_end(b, i + open, hashes);
+                line += count_newlines(b, i, j);
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+        }
+        if c == b'"'
+            || (fresh
+                && (c == b'b' || c == b'c')
+                && b.get(i + 1) == Some(&b'"'))
+        {
+            let q = if c == b'"' { i } else { i + 1 };
+            let j = find_string_end(b, q + 1);
+            line += count_newlines(b, i, j);
+            blank(&mut out, i, j);
+            i = j;
+            continue;
+        }
+        if c == b'\'' || (fresh && c == b'b' && b.get(i + 1) == Some(&b'\'')) {
+            let q = if c == b'\'' { i } else { i + 1 };
+            if let Some(j) = char_literal_end(b, q) {
+                blank(&mut out, i, j);
+                i = j;
+                continue;
+            }
+            i = q + 1;
+            continue;
+        }
+        i += 1;
+    }
+    let masked = String::from_utf8(out).expect("masking whole literals keeps utf-8");
+    (masked, comments)
+}
+
+/// Does `s` contain `word` with non-identifier bytes on both sides?
+pub(crate) fn has_word(s: &str, word: &str) -> bool {
+    let b = s.as_bytes();
+    let mut from = 0;
+    while let Some(p) = s[from..].find(word) {
+        let at = from + p;
+        let pre_ok = at == 0 || !is_ident_byte(b[at - 1]);
+        let post = at + word.len();
+        let post_ok = post >= b.len() || !is_ident_byte(b[post]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = at + word.len();
+    }
+    false
+}
+
+/// Byte offsets of every word-boundary occurrence of `word` in `s`.
+pub(crate) fn find_word(s: &str, word: &str) -> Vec<usize> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = s[from..].find(word) {
+        let at = from + p;
+        let pre_ok = at == 0 || !is_ident_byte(b[at - 1]);
+        let post = at + word.len();
+        let post_ok = post >= b.len() || !is_ident_byte(b[post]);
+        if pre_ok && post_ok {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+/// Index of the last non-whitespace byte strictly before `i`.
+pub(crate) fn prev_nonspace(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if !b[j].is_ascii_whitespace() {
+            return Some(j);
+        }
+    }
+    None
+}
+
+/// Index of the first non-whitespace byte at or after `i`.
+pub(crate) fn next_nonspace(b: &[u8], mut i: usize) -> Option<usize> {
+    while i < b.len() {
+        if !b[i].is_ascii_whitespace() {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// The identifier ending exactly at byte `end` (exclusive), or `""`.
+pub(crate) fn word_ending_at(s: &str, end: usize) -> &str {
+    let b = s.as_bytes();
+    let mut start = end;
+    while start > 0 && is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    &s[start..end]
+}
+
+/// Matching close bracket for the opener at `open` (same kind only), or
+/// the end of the buffer if unbalanced.
+pub(crate) fn matching_close(b: &[u8], open: usize) -> usize {
+    let (o, c) = match b[open] {
+        b'(' => (b'(', b')'),
+        b'[' => (b'[', b']'),
+        b'{' => (b'{', b'}'),
+        _ => return open,
+    };
+    let mut depth = 1i32;
+    let mut j = open + 1;
+    while j < b.len() {
+        if b[j] == o {
+            depth += 1;
+        } else if b[j] == c {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+        j += 1;
+    }
+    b.len()
+}
+
+/// From the end of an item's attributes, find where its body ends:
+/// `Some(end)` for a brace-bodied item, `None` for `...;` declarations.
+pub(crate) fn item_body_end(b: &[u8], mut j: usize) -> Option<usize> {
+    let n = b.len();
+    let mut depth = 0i32;
+    while j < n {
+        match b[j] {
+            b'(' | b'[' => depth += 1,
+            b')' | b']' => depth -= 1,
+            b';' if depth <= 0 => return None,
+            b'{' if depth <= 0 => {
+                let mut d = 1i32;
+                let mut e = j + 1;
+                while e < n && d > 0 {
+                    match b[e] {
+                        b'{' => d += 1,
+                        b'}' => d -= 1,
+                        _ => {}
+                    }
+                    e += 1;
+                }
+                return Some(e);
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Byte ranges of items whose attribute mentions `test`.
+fn test_regions(masked: &str) -> Vec<(usize, usize)> {
+    let b = masked.as_bytes();
+    let n = b.len();
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if b[i] == b'#' && b.get(i + 1) == Some(&b'[') {
+            let mut j = i + 2;
+            let mut depth = 1i32;
+            while j < n && depth > 0 {
+                match b[j] {
+                    b'[' => depth += 1,
+                    b']' => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if has_word(&masked[i..j], "test") {
+                if let Some(end) = item_body_end(b, j) {
+                    regions.push((i, end));
+                }
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    regions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_line_and_block_comments_and_keeps_text() {
+        let f = ScannedFile::new(
+            "x.rs",
+            "let a = 1; // unwrap() here\n/* multi\nline panic!() */ let b = 2;\n",
+        );
+        assert!(!f.masked.contains("unwrap"));
+        assert!(!f.masked.contains("panic"));
+        assert!(f.masked.contains("let a = 1;"));
+        assert!(f.masked.contains("let b = 2;"));
+        assert_eq!(f.masked.len(), f.src.len());
+        assert!(f.comments_on(1).any(|c| c.contains("unwrap() here")));
+    }
+
+    #[test]
+    fn masks_nested_block_comments() {
+        let f = ScannedFile::new("x.rs", "/* a /* b */ panic!() */ ok();");
+        assert!(!f.masked.contains("panic"));
+        assert!(f.masked.contains("ok();"));
+    }
+
+    #[test]
+    fn masks_strings_raw_strings_and_chars() {
+        let src = r####"let s = "a.unwrap()"; let r = r#"panic!("x")"#; let c = '[';"####;
+        let f = ScannedFile::new("x.rs", src);
+        assert!(!f.masked.contains("unwrap"));
+        assert!(!f.masked.contains("panic"));
+        assert!(!f.masked.contains('['));
+        assert!(f.masked.contains("let s ="));
+    }
+
+    #[test]
+    fn string_escapes_do_not_leak() {
+        let f = ScannedFile::new("x.rs", r#"let s = "a\"b.unwrap()"; x();"#);
+        assert!(!f.masked.contains("unwrap"));
+        assert!(f.masked.contains("x();"));
+    }
+
+    #[test]
+    fn lifetimes_survive_but_char_literals_do_not() {
+        let f = ScannedFile::new("x.rs", "fn f<'a>(x: &'a str) { let c = 'x'; }");
+        assert!(f.masked.contains("<'a>"));
+        assert!(f.masked.contains("&'a str"));
+        assert!(!f.masked.contains("'x'"));
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_terminates() {
+        let f = ScannedFile::new("x.rs", r#"let q = '\''; let s = "unwrap";"#);
+        assert!(!f.masked.contains("unwrap"), "masked: {}", f.masked);
+    }
+
+    #[test]
+    fn ident_ending_in_r_is_not_a_raw_string() {
+        let f = ScannedFile::new("x.rs", "let hdr = 1; for r in 0..2 { g(r); }");
+        assert!(f.masked.contains("let hdr = 1;"));
+        assert!(f.masked.contains("g(r);"));
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_literals() {
+        let f = ScannedFile::new("x.rs", "let s = \"a\nb\nc\";\nfire();\n");
+        let off = f.masked.find("fire").unwrap();
+        assert_eq!(f.line_of(off), 4);
+    }
+
+    #[test]
+    fn test_attribute_marks_next_item_body() {
+        let src = "fn live() { a(); }\n#[cfg(test)]\nmod tests {\n  fn t() { b(); }\n}\n";
+        let f = ScannedFile::new("x.rs", src);
+        assert!(!f.in_test(f.masked.find("a()").unwrap()));
+        assert!(f.in_test(f.masked.find("b()").unwrap()));
+    }
+
+    #[test]
+    fn cfg_test_use_declaration_marks_nothing() {
+        let src = "#[cfg(test)]\nuse crate::x;\nfn live() { a(); }\n";
+        let f = ScannedFile::new("x.rs", src);
+        assert!(!f.in_test(f.masked.find("a()").unwrap()));
+    }
+
+    #[test]
+    fn attr_mentioning_test_in_string_does_not_mark() {
+        let src = "#[doc = \"test\"]\nfn live() { a(); }\n";
+        let f = ScannedFile::new("x.rs", src);
+        assert!(!f.in_test(f.masked.find("a()").unwrap()));
+    }
+
+    #[test]
+    fn allow_matches_same_and_previous_line_and_rule_lists() {
+        let src = "\
+a(); // lint:allow(no-panic-path)
+b();
+// lint:allow(epoch-clock, joined-spawn): reason
+c();
+";
+        let f = ScannedFile::new("x.rs", src);
+        assert!(f.allow_on(1, "no-panic-path"));
+        assert!(!f.allow_on(2, "no-panic-path"));
+        assert!(f.allow_on(4, "joined-spawn"));
+        assert!(f.allow_on(4, "epoch-clock"));
+        assert!(!f.allow_on(4, "no-panic-path"));
+    }
+
+    #[test]
+    fn safety_comment_window_is_three_lines() {
+        let src = "// SAFETY: fine\n\n\nunsafe { x() }\n\n\n\nunsafe { y() }\n";
+        let f = ScannedFile::new("x.rs", src);
+        assert!(f.safety_near(4));
+        assert!(!f.safety_near(8));
+    }
+
+    #[test]
+    fn word_helpers_respect_boundaries() {
+        assert!(has_word("a test b", "test"));
+        assert!(!has_word("attested", "test"));
+        assert_eq!(find_word("spawn respawn spawn", "spawn"), vec![0, 14]);
+        assert_eq!(word_ending_at("foo.bar_2[", 9), "bar_2");
+        assert_eq!(word_ending_at("  [", 2), "");
+    }
+
+    #[test]
+    fn bracket_matching_nests() {
+        let s = "a[b[c]][d]";
+        assert_eq!(matching_close(s.as_bytes(), 1), 6);
+    }
+}

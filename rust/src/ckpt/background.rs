@@ -22,7 +22,7 @@
 //!   paths, so retention can never race a save it is about to expose.
 
 use super::format::{self, TrainCheckpoint};
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};
@@ -101,6 +101,9 @@ impl AsyncSaver {
                     None => Ok(totals),
                 }
             })
+            // OS thread-spawn failure at run setup is unrecoverable, and
+            // this saver is not a connection thread:
+            // lint:allow(no-panic-path): unrecoverable at startup
             .expect("spawning the ckpt-saver thread");
         Self { tx: Some(tx), join: Some(join), in_flight }
     }
@@ -137,7 +140,9 @@ impl AsyncSaver {
     /// complete.
     pub fn finish(mut self) -> Result<SaveTotals> {
         self.tx.take(); // close the channel: the worker drains then exits
-        let join = self.join.take().expect("finish called once");
+        let Some(join) = self.join.take() else {
+            bail!("ckpt-saver thread already joined");
+        };
         join.join()
             .map_err(|_| anyhow!("the ckpt-saver thread panicked"))?
     }

@@ -64,7 +64,6 @@ use crate::util::json::{self, ObjWriter, Value};
 use crate::util::threads::{par_map, par_try_map};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
-use std::time::Instant;
 
 /// File magic: the first four bytes of every checkpoint (and of a v2
 /// snapshot directory's root manifest).
@@ -125,8 +124,10 @@ fn write_f32_exact(w: &mut ObjWriter, key: &str, v: f32) {
 }
 
 fn read_f32_exact(v: &Value, key: &str) -> Result<f32> {
-    if let Some(b) = v.get(&format!("{key}_bits")).and_then(Value::as_f64) {
-        return Ok(f32::from_bits(b as u32));
+    if let Some(b) = v.get(&format!("{key}_bits")).and_then(Value::as_usize) {
+        let bits = u32::try_from(b)
+            .map_err(|_| anyhow!("manifest {key}_bits {b} out of u32 range"))?;
+        return Ok(f32::from_bits(bits));
     }
     v.get(key)
         .and_then(Value::as_f64)
@@ -282,6 +283,12 @@ fn manifest_json(
     top.finish()
 }
 
+/// Shard index → span counter for `span_n`, saturating instead of
+/// wrapping (shard counts are tiny; the id is display-only).
+fn span_id(s: usize) -> u32 {
+    u32::try_from(s).unwrap_or(u32::MAX)
+}
+
 fn f32s_to_le_bytes(data: &[f32]) -> Vec<u8> {
     let mut out = vec![0u8; data.len() * 4];
     for (chunk, v) in out.chunks_exact_mut(4).zip(data) {
@@ -311,7 +318,9 @@ fn parse_header(head: &[u8; 16], path: &Path) -> Result<(u32, usize)> {
              {FORMAT_VERSION} and {FORMAT_VERSION_V2}"
         );
     }
-    let mlen = u64::from_le_bytes(head[8..16].try_into().expect("16-byte header"));
+    let mlen = u64::from_le_bytes([
+        head[8], head[9], head[10], head[11], head[12], head[13], head[14], head[15],
+    ]);
     Ok((version, mlen as usize))
 }
 
@@ -584,7 +593,8 @@ fn shard_list(m: &Value) -> Result<Vec<(String, u64, u32)>> {
             Ok((
                 read_str(s, "file")?.to_string(),
                 read_u64_num(s, "bytes")?,
-                read_u64_num(s, "crc")? as u32,
+                u32::try_from(read_u64_num(s, "crc")?)
+                    .map_err(|_| anyhow!("manifest shard crc out of u32 range"))?,
             ))
         })
         .collect()
@@ -599,7 +609,9 @@ fn read_dir_manifest(dir: &Path) -> Result<(Value, usize, u64)> {
     if raw.len() < 16 {
         bail!("{mpath:?} is not a switchback checkpoint (bad magic)");
     }
-    let head: &[u8; 16] = raw[0..16].try_into().expect("length checked above");
+    let Ok(head) = <&[u8; 16]>::try_from(&raw[0..16]) else {
+        bail!("{mpath:?} is not a switchback checkpoint (bad magic)");
+    };
     let (version, mlen) = parse_header(head, &mpath)?;
     if version != FORMAT_VERSION_V2 {
         bail!(
@@ -697,8 +709,11 @@ fn shard_plan(sizes: &[usize], shards: usize) -> Vec<std::ops::Range<usize>> {
         // take tensors until the cumulative size reaches this shard's
         // boundary, but always at least one, and always leave one per
         // remaining shard
-        while end < n_t && (cum < target || end == start) && (n_t - end) > (n - k - 1) {
-            cum += sizes[end] as u64;
+        while let Some(&sz) = sizes.get(end) {
+            if !((cum < target || end == start) && (n_t - end) > (n - k - 1)) {
+                break;
+            }
+            cum += sz as u64;
             end += 1;
         }
         out.push(start..end);
@@ -791,7 +806,7 @@ fn ensure_parent(path: &Path) -> Result<()> {
 pub fn save(path: &Path, ck: &TrainCheckpoint) -> Result<IoStats> {
     let _sp = trace::span("ckpt.save", "ckpt");
     let entries = blob_entries(ck)?;
-    let t0 = Instant::now();
+    let t0 = trace::clock();
     // encode every blob once; offsets/crcs feed the manifest, bytes the file
     let mut blob_meta: Vec<(String, usize, u64, u32)> = vec![];
     let mut blob_bytes: Vec<Vec<u8>> = vec![];
@@ -862,22 +877,27 @@ pub fn save_sharded(path: &Path, ck: &TrainCheckpoint, shards: usize) -> Result<
     }
     let _sp = trace::span("ckpt.save", "ckpt");
     let entries = blob_entries(ck)?;
-    let t0 = Instant::now();
+    let t0 = trace::clock();
     let sizes: Vec<usize> = entries.iter().map(|(_, d)| d.len() * 4).collect();
     let plan = shard_plan(&sizes, shards);
     // encode + CRC every shard in parallel (the compute half of a save)
     let encoded: Vec<(Vec<u8>, u32)> = par_map(plan.len(), |s| {
+        // `s < plan.len()` by the par_map contract, and shard_plan built
+        // the ranges over these same entries — `.get()` keeps the worker
+        // panic-free anyway.
+        let range = plan.get(s).cloned().unwrap_or_default();
+        let shard_entries = entries.get(range).unwrap_or(&[]);
         let bytes = {
-            let _enc = trace::span_n("ckpt.shard_encode", "ckpt", s as u32);
-            let mut bytes =
-                Vec::with_capacity(plan[s].clone().map(|t| sizes[t]).sum::<usize>());
-            for (_, data) in &entries[plan[s].clone()] {
+            let _enc = trace::span_n("ckpt.shard_encode", "ckpt", span_id(s));
+            let cap = shard_entries.iter().map(|(_, d)| d.len() * 4).sum::<usize>();
+            let mut bytes = Vec::with_capacity(cap);
+            for (_, data) in shard_entries {
                 bytes.extend_from_slice(&f32s_to_le_bytes(data));
             }
             bytes
         };
         let crc = {
-            let _crc = trace::span_n("ckpt.shard_crc", "ckpt", s as u32);
+            let _crc = trace::span_n("ckpt.shard_crc", "ckpt", span_id(s));
             crc32(&bytes)
         };
         (bytes, crc)
@@ -888,7 +908,7 @@ pub fn save_sharded(path: &Path, ck: &TrainCheckpoint, shards: usize) -> Result<
     let mut tensors: Vec<String> = Vec::with_capacity(entries.len());
     for (s, range) in plan.iter().enumerate() {
         let mut off = 0u64;
-        for (name, data) in &entries[range.clone()] {
+        for (name, data) in entries.get(range.clone()).unwrap_or(&[]) {
             let mut w = ObjWriter::new();
             w.field_str("name", name)
                 .field_u64("len", data.len() as u64)
@@ -924,10 +944,11 @@ pub fn save_sharded(path: &Path, ck: &TrainCheckpoint, shards: usize) -> Result<
         .with_context(|| format!("creating {staging:?}"))?;
     // shards first, in parallel, each atomically (temp + rename)
     par_try_map(encoded.len(), |s| -> Result<()> {
-        let _wr = trace::span_n("ckpt.shard_write", "ckpt", s as u32);
+        let _wr = trace::span_n("ckpt.shard_write", "ckpt", span_id(s));
         let tmp = staging.join(format!("{}.tmp", shard_filename(s)));
         let dst = staging.join(shard_filename(s));
-        std::fs::write(&tmp, &encoded[s].0).with_context(|| format!("writing {tmp:?}"))?;
+        let shard = encoded.get(s).ok_or_else(|| anyhow!("shard {s} out of range"))?;
+        std::fs::write(&tmp, &shard.0).with_context(|| format!("writing {tmp:?}"))?;
         std::fs::rename(&tmp, &dst).with_context(|| format!("renaming to {dst:?}"))?;
         Ok(())
     })?;
@@ -962,7 +983,7 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
         return load_dir(path);
     }
     let _sp = trace::span("ckpt.load", "ckpt");
-    let t0 = Instant::now();
+    let t0 = trace::clock();
     let raw = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
     let bytes = raw.len() as u64;
     // fail closed on anything shorter than a header — a 0/8/15-byte junk
@@ -970,7 +991,9 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
     if raw.len() < 16 {
         bail!("{path:?} is not a switchback checkpoint (bad magic)");
     }
-    let head: &[u8; 16] = raw[0..16].try_into().expect("length checked above");
+    let Ok(head) = <&[u8; 16]>::try_from(&raw[0..16]) else {
+        bail!("{path:?} is not a switchback checkpoint (bad magic)");
+    };
     let (version, mlen) = parse_header(head, path)?;
     if version != FORMAT_VERSION {
         bail!(
@@ -1004,7 +1027,8 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
         let name = read_str(t, "name")?;
         let len = read_usize(t, "len")?;
         let off = read_usize(t, "offset")?;
-        let crc = read_u64_num(t, "crc")? as u32;
+        let crc = u32::try_from(read_u64_num(t, "crc")?)
+            .map_err(|_| anyhow!("tensor {name:?} crc out of u32 range"))?;
         // len/offset are untrusted manifest values: checked arithmetic,
         // or a corrupt manifest could wrap the bounds math and either
         // panic or slice the wrong bytes instead of failing closed
@@ -1038,15 +1062,16 @@ pub fn load(path: &Path) -> Result<(TrainCheckpoint, IoStats)> {
 /// shard file in parallel and slice the tensors out of their shards.
 fn load_dir(dir: &Path) -> Result<(TrainCheckpoint, IoStats)> {
     let _sp = trace::span("ckpt.load", "ckpt");
-    let t0 = Instant::now();
+    let t0 = trace::clock();
     let (m, _mlen, manifest_bytes) = read_dir_manifest(dir)?;
     let core = manifest_core(&m)?;
     let shards = shard_list(&m)?;
 
     // parallel streaming read: each worker reads and CRC-checks one shard
     let shard_bufs: Vec<Vec<u8>> = par_try_map(shards.len(), |s| -> Result<Vec<u8>> {
-        let _rd = trace::span_n("ckpt.shard_read", "ckpt", s as u32);
-        let (file, bytes, crc) = &shards[s];
+        let _rd = trace::span_n("ckpt.shard_read", "ckpt", span_id(s));
+        let (file, bytes, crc) =
+            shards.get(s).ok_or_else(|| anyhow!("shard {s} out of range"))?;
         let p = dir.join(file);
         let b = std::fs::read(&p).with_context(|| format!("reading shard {p:?}"))?;
         if b.len() as u64 != *bytes {

@@ -231,7 +231,8 @@ pub fn encoder_weights(cfg: &EncoderConfig, params: &[Vec<f32>]) -> Result<Encod
     };
     let mut it = params.iter();
     let mut next = |rows: usize, cols: usize, what: &str| -> Result<Matrix> {
-        mat(it.next().expect("count checked above"), rows, cols, what)
+        let data = it.next().ok_or_else(|| anyhow!("{what}: tensor list exhausted"))?;
+        mat(data, rows, cols, what)
     };
     let patch_embed = next(d, cfg.patch_dim, "patch_embed")?;
     let tok_embed = next(cfg.vocab, d, "tok_embed")?;

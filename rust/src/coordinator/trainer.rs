@@ -24,7 +24,6 @@ use crate::telemetry::{MetricsSink, StepRecord, TensorProbe};
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::time::Instant;
 
 /// Outcome of a full run.
 pub struct RunResult {
@@ -117,7 +116,7 @@ impl<'rt> Trainer<'rt> {
         let mut mags_first: Vec<f32> = vec![];
         let mut mags_last: Vec<f32> = vec![];
         let mut diverged = false;
-        let t0 = Instant::now();
+        let t0 = crate::trace::clock();
 
         for step in 1..=self.cfg.steps {
             let batch = data.next_batch(batch_size);

@@ -279,16 +279,22 @@ mod x86 {
 
     /// Sign-extend the low 8 i8 lanes to i16 (unpack-with-self then
     /// arithmetic shift — the SSE2 idiom; no SSE4.1 `pmovsx` needed).
+    // SAFETY: register-only SSE2 intrinsics, baseline on x86_64; no
+    // pointers are dereferenced.
     #[inline(always)]
     unsafe fn sext_lo(v: __m128i) -> __m128i {
         _mm_srai_epi16(_mm_unpacklo_epi8(v, v), 8)
     }
 
+    // SAFETY: register-only SSE2 intrinsics, baseline on x86_64; no
+    // pointers are dereferenced.
     #[inline(always)]
     unsafe fn sext_hi(v: __m128i) -> __m128i {
         _mm_srai_epi16(_mm_unpackhi_epi8(v, v), 8)
     }
 
+    // SAFETY: register-only SSE2 intrinsics, baseline on x86_64; no
+    // pointers are dereferenced.
     #[inline(always)]
     unsafe fn hsum(v: __m128i) -> i32 {
         let s = _mm_add_epi32(v, _mm_shuffle_epi32(v, 0b0100_1110));
@@ -299,6 +305,9 @@ mod x86 {
     /// SSE2 micro-kernel: 16 codes × MR rows per iteration via `pmaddwd`
     /// (i16 products pair-summed into i32 lanes — exact, no saturation:
     /// |codes| ≤ 127 so a pair sum is ≤ 2·127² ≪ 2³¹).
+    // SAFETY: caller must pass `x16.len()` a multiple of KP and
+    // `panel.len() == (x16.len()/KP)·MR·KP`; every unaligned load below
+    // then stays in bounds.  SSE2 is baseline on x86_64.
     pub unsafe fn panel_dots_sse2(x16: &[i16], panel: &[i8], acc: &mut [i32; MR]) {
         let kblocks = x16.len() / KP;
         debug_assert_eq!(panel.len(), kblocks * MR * KP);
@@ -324,6 +333,8 @@ mod x86 {
     }
 
     /// AVX2 micro-kernel: same tile, one `vpmaddwd` per 16 codes.
+    // SAFETY: same slice-shape contract as `panel_dots_sse2`, and the
+    // caller must have verified AVX2 support at runtime first.
     #[target_feature(enable = "avx2")]
     pub unsafe fn panel_dots_avx2(x16: &[i16], panel: &[i8], acc: &mut [i32; MR]) {
         let kblocks = x16.len() / KP;
@@ -352,8 +363,12 @@ mod x86 {
 fn panel_dots(isa: KernelIsa, x16: &[i16], panel: &[i8], acc: &mut [i32; MR]) {
     match isa {
         KernelIsa::Scalar => panel_dots_scalar(x16, panel, acc),
+        // SAFETY: `dots_rows` slices x16/panel to the packed layout the
+        // micro-kernels require; SSE2 is baseline on x86_64.
         #[cfg(target_arch = "x86_64")]
         KernelIsa::Sse2 => unsafe { x86::panel_dots_sse2(x16, panel, acc) },
+        // SAFETY: same shape contract as above, and KernelIsa::Avx2 is
+        // only ever constructed after `is_x86_feature_detected!("avx2")`.
         #[cfg(target_arch = "x86_64")]
         KernelIsa::Avx2 => unsafe { x86::panel_dots_avx2(x16, panel, acc) },
         #[cfg(not(target_arch = "x86_64"))]

@@ -39,6 +39,13 @@
 //!     always-on span profiler, one metrics registry shared by
 //!     train/serve/ckpt, and the spike flight recorder that dumps the
 //!     paper's `g²/v` under-estimation probes when a spike fires,
+//!   - [`analysis`] is the in-tree static analyzer behind `switchback
+//!     lint`: a lexical Rust scanner, the repo-invariant rule engine
+//!     (panic-free serve/net/ckpt paths, SAFETY comments, checked
+//!     narrowing, the trace epoch clock, metric naming, joined spawns)
+//!     and the lock-order analyzer that builds the inter-procedural
+//!     acquisition graph and rejects cycles and locks held across
+//!     blocking calls,
 //!   - [`net`] is the hand-rolled `std::net` HTTP/1.1 layer underneath
 //!     both the live telemetry plane (`--telemetry-addr`) and the
 //!     serving data plane (`--listen`): strict parsing limits, bounded
@@ -54,6 +61,7 @@
 //! `pjrt` cargo feature; everything else (including the native trainer,
 //! the serving engine and all benches) builds and tests without it.
 
+pub mod analysis;
 pub mod ckpt;
 pub mod config;
 pub mod coordinator;

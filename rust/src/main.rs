@@ -23,6 +23,7 @@
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::Arc;
+use switchback::analysis::{self, Level as LintLevel};
 use switchback::ckpt;
 use switchback::config::OptimizerKind;
 use switchback::coordinator::common::spike_shifts;
@@ -94,6 +95,10 @@ USAGE:
                                             (--flight-out)
   switchback benchdiff <baseline> <new>     bench-regression gate
                                             [--tol X --strict]
+  switchback lint [PATH] [OPTIONS]          in-tree invariant linter +
+                                            lock-order analyzer over the
+                                            Rust sources (default PATH:
+                                            rust/src, else src)
 
 TRAIN OPTIONS (native):
   --steps N              (default: 200)
@@ -301,6 +306,19 @@ PROBE OPTIONS:
   --follow N             retry up to N times until the probe succeeds
                          (default: 1 = single shot)
   --every MS             delay between --follow retries (default: 200)
+
+LINT OPTIONS:
+  --deny LEVEL           exit nonzero when any unsuppressed finding is at
+                         or above LEVEL: info | warn | error (default:
+                         warn; rule findings are warn, lock-order cycles
+                         and locks held across blocking calls are error)
+  --json                 print the BENCH_lint ledger JSON instead of the
+                         findings report
+  --out PATH             also write the ledger JSON to PATH (the
+                         BENCH_lint.json artifact check_bench.sh gates —
+                         suppression counts may only shrink)
+  --verbose              print the lock acquisition graph even when
+                         findings exist
 ";
 
 /// Every `--key value` flag any subcommand accepts.  The parser rejects
@@ -363,6 +381,7 @@ const VALUE_FLAGS: &[&str] = &[
     "--ckpt-dir",
     "--ckpt-keep",
     "--ckpt-shards",
+    "--deny",
     "--dim",
     "--heads",
     "--blocks",
@@ -376,6 +395,7 @@ const VALUE_FLAGS: &[&str] = &[
 const BOOL_FLAGS: &[&str] = &[
     "--list",
     "--all",
+    "--json",
     "--verbose",
     "--quiet",
     "--with-shifts",
@@ -1413,7 +1433,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
                         ok: &dyn Fn(&ServeSnapshot) -> bool,
                         bad: &dyn Fn(&ServeSnapshot) -> Option<String>|
          -> Result<(), String> {
-            let t0 = std::time::Instant::now();
+            let t0 = trace::clock();
             loop {
                 let snap = engine.metrics().snapshot();
                 if ok(&snap) {
@@ -1673,6 +1693,50 @@ fn cmd_benchdiff(args: &Args) -> Result<()> {
     }
 }
 
+/// `switchback lint [PATH] [--deny LEVEL] [--json] [--out PATH]`: run the
+/// in-tree invariant linter + lock-order analyzer (see `analysis`).
+fn cmd_lint(args: &Args) -> Result<()> {
+    let path = args.positional.first().cloned().unwrap_or_else(|| {
+        if std::path::Path::new("rust/src").is_dir() {
+            "rust/src".into()
+        } else if std::path::Path::new("src").is_dir() {
+            "src".into()
+        } else {
+            ".".into()
+        }
+    });
+    let deny_s: String = args.get("deny", "warn".to_string())?;
+    let Some(deny) = LintLevel::parse(&deny_s) else {
+        bail!("--deny must be info|warn|error, got {deny_s:?}");
+    };
+    let root = std::path::Path::new(&path);
+    if !root.is_dir() {
+        bail!("lint: {path:?} is not a directory");
+    }
+    let report = analysis::lint_root(root)
+        .map_err(|e| anyhow::anyhow!("lint: cannot read {path}: {e}"))?;
+    if args.has("--json") {
+        println!("{}", report.ledger_json());
+    } else {
+        print!("{}", report.render(args.has("--verbose") || args.has("-v")));
+    }
+    if let Some(out) = args.flags.get("out") {
+        std::fs::write(out, report.ledger_json())
+            .map_err(|e| anyhow::anyhow!("lint: cannot write {out}: {e}"))?;
+        if !args.has("--json") {
+            println!("wrote {out}");
+        }
+    }
+    if report.worst().is_some_and(|w| w >= deny) {
+        bail!(
+            "lint: {} finding(s) at or above --deny {} in {path}",
+            report.active().filter(|f| f.level >= deny).count(),
+            deny.as_str()
+        );
+    }
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn cmd_needs_pjrt(cmd: &str) -> Result<()> {
     bail!(
@@ -1925,7 +1989,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 "standby: watching {dir} — newest snapshot step {newest} > \
                  booted step {boot_step}, waiting for its promotion"
             );
-            let t0 = std::time::Instant::now();
+            let t0 = trace::clock();
             loop {
                 let snap = engine.metrics().snapshot();
                 if snap.standby_promotions >= 1 {
@@ -2323,6 +2387,7 @@ fn main() -> Result<()> {
         "ckpt" => cmd_ckpt(&args),
         "trace" => cmd_trace(&args),
         "benchdiff" => cmd_benchdiff(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())

@@ -726,7 +726,9 @@ impl Http1Client {
         if self.conn.is_none() {
             self.conn = Some(self.dial()?);
         }
-        let reader = self.conn.as_mut().expect("connection just dialed");
+        let Some(reader) = self.conn.as_mut() else {
+            bail!("connection lost immediately after dial");
+        };
         let head = format!(
             "POST {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
             self.authority,

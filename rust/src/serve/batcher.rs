@@ -40,6 +40,13 @@ pub struct BatchQueue<T> {
     policy: BatchPolicy,
 }
 
+/// Poison-recovering lock: a holder that panicked only did single queue
+/// ops under the lock, so the `VecDeque` is still coherent — recovering
+/// keeps one bad request from wedging every connection thread.
+fn lock_state<T>(m: &Mutex<State<T>>) -> std::sync::MutexGuard<'_, State<T>> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl<T> BatchQueue<T> {
     /// An open queue under `policy` (panics on a zero `max_batch`).
     pub fn new(policy: BatchPolicy) -> Self {
@@ -59,11 +66,11 @@ impl<T> BatchQueue<T> {
     /// Enqueue an item; returns `false` (with the item dropped) if the
     /// queue is closed.
     pub fn push(&self, item: T) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_state(&self.state);
         if st.closed {
             return false;
         }
-        st.queue.push_back((item, Instant::now()));
+        st.queue.push_back((item, crate::trace::clock()));
         drop(st);
         self.cv.notify_one();
         true
@@ -71,20 +78,20 @@ impl<T> BatchQueue<T> {
 
     /// Number of items currently waiting (diagnostics only).
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        lock_state(&self.state).queue.len()
     }
 
     /// Close the queue: pending items still drain; subsequent `push`es are
     /// rejected; `pop_batch` returns `None` once empty.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_state(&self.state).closed = true;
         self.cv.notify_all();
     }
 
     /// Block until a batch is ready per the policy.  Returns `None` only
     /// after [`Self::close`] once the queue has fully drained.
     pub fn pop_batch(&self) -> Option<Vec<T>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_state(&self.state);
         loop {
             if st.queue.len() >= self.policy.max_batch {
                 return Some(self.drain(&mut st));
@@ -97,18 +104,18 @@ impl<T> BatchQueue<T> {
             }
             if let Some(&(_, enqueued)) = st.queue.front() {
                 let deadline = enqueued + self.policy.max_wait;
-                let now = Instant::now();
+                let now = crate::trace::clock();
                 if now >= deadline {
                     return Some(self.drain(&mut st));
                 }
                 let (next, _timeout) =
-                    self.cv.wait_timeout(st, deadline - now).unwrap();
+                    self.cv.wait_timeout(st, deadline - now).unwrap_or_else(|e| e.into_inner());
                 st = next;
                 // loop around: the deadline is recomputed from the current
                 // front, so an item another worker drained mid-wait cannot
                 // cause a freshly-enqueued item to flush early
             } else {
-                st = self.cv.wait(st).unwrap();
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         }
     }

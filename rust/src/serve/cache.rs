@@ -120,13 +120,22 @@ impl ShardedLru {
         }
     }
 
+    /// Poison-recovering lock: a holder that panicked mid-op leaves the
+    /// map/log coherent (worst case a stale recency stamp) — a poisoned
+    /// shard must never panic the connection thread that hits it next.
+    fn lock_shard(m: &Mutex<Shard>) -> std::sync::MutexGuard<'_, Shard> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     fn shard(&self, key: u64) -> &Mutex<Shard> {
-        &self.shards[(key as usize) % self.shards.len()]
+        let idx = (key as usize) % self.shards.len().max(1);
+        // the modulo above keeps idx in range even for a 1-shard cache
+        self.shards.get(idx).unwrap_or_else(|| &self.shards[0])
     }
 
     /// Look up an embedding, refreshing its recency on hit.
     pub fn get(&self, key: u64) -> Option<Arc<Vec<f32>>> {
-        let mut sh = self.shard(key).lock().unwrap();
+        let mut sh = Self::lock_shard(self.shard(key));
         sh.tick += 1;
         let tick = sh.tick;
         match sh.map.get_mut(&key) {
@@ -150,7 +159,7 @@ impl ShardedLru {
     /// Insert (or refresh) an embedding, evicting the least recently used
     /// entry if the shard is at capacity.
     pub fn insert(&self, key: u64, val: Arc<Vec<f32>>) {
-        let mut sh = self.shard(key).lock().unwrap();
+        let mut sh = Self::lock_shard(self.shard(key));
         let stamp = sh.touch(key);
         let existed = sh.map.insert(key, Entry { val, stamp }).is_some();
         if !existed && sh.map.len() > sh.cap {
@@ -161,7 +170,7 @@ impl ShardedLru {
 
     /// Total live entries across shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.shards.iter().map(|s| Self::lock_shard(s).map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {

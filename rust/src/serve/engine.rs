@@ -169,7 +169,7 @@ impl Engine {
             ));
         }
         let fresh = Arc::new(encoder);
-        let t0 = Instant::now();
+        let t0 = crate::trace::clock();
         {
             let mut slot = sh.encoder.write().map_err(|_| "encoder lock poisoned")?;
             *slot = fresh;
@@ -201,7 +201,7 @@ impl Engine {
     /// its canary batch through this to measure embedding drift against a
     /// candidate without consuming engine capacity.
     pub fn current_encoder(&self) -> Arc<ClipEncoder> {
-        Arc::clone(&self.shared.encoder.read().unwrap())
+        Arc::clone(&read_encoder(&self.shared.encoder))
     }
 
     /// Blocking encode of one input.  Thread-safe; call from any number of
@@ -216,7 +216,7 @@ impl Engine {
         // requests only
         sh.metrics.requests.inc();
         let key = cache_key(input.content_hash(), sh.generation.load(Ordering::SeqCst));
-        let t0 = Instant::now();
+        let t0 = crate::trace::clock();
         if let Some(cache) = &sh.cache {
             let probed = {
                 let _sp = trace::span("serve.cache_probe", "serve");
@@ -284,7 +284,7 @@ impl Engine {
     /// Precision label of the *current* serving encoder ("standard",
     /// "switchback", …) — may change across hot-swaps.
     pub fn kind_label(&self) -> &'static str {
-        self.shared.encoder.read().unwrap().config().kind.label()
+        read_encoder(&self.shared.encoder).config().kind.label()
     }
 
     /// (hits, misses) seen by the embedding cache, if enabled.
@@ -294,7 +294,7 @@ impl Engine {
 
     /// Resident encoder weight bytes (pre-quantized form).
     pub fn weight_bytes(&self) -> usize {
-        self.shared.encoder.read().unwrap().weight_bytes()
+        read_encoder(&self.shared.encoder).weight_bytes()
     }
 
     /// Stop accepting work, drain the queue, and join the workers.
@@ -333,6 +333,16 @@ fn same_shape(a: &EncoderConfig, b: &EncoderConfig) -> bool {
     a.same_shape(b)
 }
 
+/// Poison-recovering encoder read.  The only writer
+/// ([`Engine::install_encoder`]) holds the write lock for a pointer swap
+/// that cannot leave the slot torn, so even a poisoned lock guards a
+/// coherent `Arc` — readers keep serving instead of panicking.
+fn read_encoder(
+    slot: &RwLock<Arc<ClipEncoder>>,
+) -> std::sync::RwLockReadGuard<'_, Arc<ClipEncoder>> {
+    slot.read().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Worker: pull micro-batches until the queue closes and drains.
 fn worker_loop(sh: &Shared) {
     let mut assemble_t0 = trace::now_ns();
@@ -359,47 +369,53 @@ fn worker_loop(sh: &Shared) {
             );
         }
         let _sp = trace::span_n("serve.batch", "serve", batch.len() as u32);
-        let t0 = Instant::now();
+        let t0 = crate::trace::clock();
         // pin the live encoder for this whole micro-batch: a concurrent
         // hot-swap takes effect at the next batch boundary, and the read
         // guard is dropped immediately so a swap never waits on a forward
-        let encoder = Arc::clone(&sh.encoder.read().unwrap());
+        let encoder = Arc::clone(&read_encoder(&sh.encoder));
         let n = batch.len();
-        // partition by modality, remembering original slots
+        // partition by modality in one pass, remembering original slots
         let mut img_idx = vec![];
+        let mut imgs: Vec<&[f32]> = vec![];
         let mut txt_idx = vec![];
+        let mut txts: Vec<&[i32]> = vec![];
         for (i, job) in batch.iter().enumerate() {
-            if job.input.is_image() {
-                img_idx.push(i);
-            } else {
-                txt_idx.push(i);
+            match &job.input {
+                EncodeInput::Image(px) => {
+                    img_idx.push(i);
+                    imgs.push(px.as_slice());
+                }
+                EncodeInput::Text(t) => {
+                    txt_idx.push(i);
+                    txts.push(t.as_slice());
+                }
             }
         }
-        let imgs: Vec<&[f32]> = img_idx
-            .iter()
-            .map(|&i| match &batch[i].input {
-                EncodeInput::Image(px) => px.as_slice(),
-                EncodeInput::Text(_) => unreachable!(),
-            })
-            .collect();
-        let txts: Vec<&[i32]> = txt_idx
-            .iter()
-            .map(|&i| match &batch[i].input {
-                EncodeInput::Text(t) => t.as_slice(),
-                EncodeInput::Image(_) => unreachable!(),
-            })
-            .collect();
         let img_embs = encoder.encode_images(&imgs);
         let txt_embs = encoder.encode_texts(&txts);
         let mut out: Vec<Option<Arc<Vec<f32>>>> = vec![None; n];
         for (slot, emb) in img_idx.iter().zip(img_embs) {
-            out[*slot] = Some(Arc::new(emb));
+            if let Some(o) = out.get_mut(*slot) {
+                *o = Some(Arc::new(emb));
+            }
         }
         for (slot, emb) in txt_idx.iter().zip(txt_embs) {
-            out[*slot] = Some(Arc::new(emb));
+            if let Some(o) = out.get_mut(*slot) {
+                *o = Some(Arc::new(emb));
+            }
         }
         for (job, emb) in batch.iter().zip(out) {
-            let emb = emb.expect("every slot encoded");
+            // a slot can only be empty if the encoder returned fewer
+            // embeddings than inputs — fail that request, never the
+            // worker thread that every other connection depends on
+            let Some(emb) = emb else {
+                sh.metrics.rejected.inc();
+                let _ = job
+                    .reply
+                    .send(Err("internal error: batch slot not encoded".into()));
+                continue;
+            };
             if let Some(cache) = &sh.cache {
                 cache.insert(job.key, Arc::clone(&emb));
             }

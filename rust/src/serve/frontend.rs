@@ -32,6 +32,7 @@ use super::engine::EncodeResponse;
 use super::router::Router;
 use super::EncodeInput;
 use crate::net::http1::{Handler, Http1Client, Http1Config, Http1Server, Request, Response};
+use crate::trace;
 use crate::util::json::{self, ObjWriter, Value};
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -154,7 +155,9 @@ fn handle(req: &Request, router: &Arc<Router>, gate: &Admission) -> Response {
     // JSON parsing.  The primary engine's `rejected` counter is the
     // ledger (the per-engine affinity is unknown before parsing).
     let Some(_permit) = gate.try_acquire() else {
-        router.engines()[0].metrics().rejected.inc();
+        if let Some(primary) = router.engines().first() {
+            primary.metrics().rejected.inc();
+        }
         return err_json(429, "admission window full; back off and retry");
     };
     let input = match parse_encode_body(&req.body) {
@@ -162,7 +165,12 @@ fn handle(req: &Request, router: &Arc<Router>, gate: &Admission) -> Response {
         Err(e) => return err_json(400, &e),
     };
     let idx = router.route(&input);
-    let engine = &router.engines()[idx];
+    // fail closed: a routing index outside the fleet is an internal bug,
+    // and it must cost this request a 500, never the connection thread
+    let Some(engine) = router.engines().get(idx) else {
+        trace::global().counter("serve.frontend.misroute").inc();
+        return err_json(500, "router selected an unavailable engine");
+    };
     match engine.encode(input) {
         Ok(resp) => ok_json(&resp, idx, engine.generation()),
         // The engine's own shed (closed queue) — a component is down.

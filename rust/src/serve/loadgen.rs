@@ -34,7 +34,7 @@ use crate::net::http_get;
 use crate::tensor::Rng;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// One loadgen run's knobs.
 #[derive(Debug, Clone)]
@@ -208,7 +208,7 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
     let errors = Arc::new(AtomicU64::new(0));
     let scrape_lat = Mutex::new(Vec::<u64>::new());
     let scrape_errors = AtomicU64::new(0);
-    let t0 = Instant::now();
+    let t0 = crate::trace::clock();
     std::thread::scope(|s| {
         for _ in 0..cfg.concurrency.max(1) {
             let population = Arc::clone(&population);
@@ -219,8 +219,11 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
                 if i >= cfg.requests {
                     return;
                 }
-                let input = population[i % population.len()].clone();
-                if engine.encode(input).is_err() {
+                let Some(input) = population.get(i % population.len().max(1)) else {
+                    errors.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                };
+                if engine.encode(input.clone()).is_err() {
                     errors.fetch_add(1, Ordering::Relaxed);
                 }
             });
@@ -245,7 +248,7 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
                         // same shape contract, canary-checked for
                         // finiteness (no drift bound — generations are
                         // unrelated by design)
-                        let prep_t0 = Instant::now();
+                        let prep_t0 = crate::trace::clock();
                         let mut ec = engine.encoder_config().clone();
                         ec.seed = cfg.seed ^ (0x5AB0 + generation as u64);
                         let candidate = ClipEncoder::new(ec);
@@ -275,18 +278,21 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadgenReport {
                 }
             });
         }
-        if cfg.scrape_every_ms > 0 {
-            let url = cfg.scrape_url.clone().expect("checked above");
+        if let Some(url) =
+            cfg.scrape_url.clone().filter(|_| cfg.scrape_every_ms > 0)
+        {
             let next = Arc::clone(&next);
             let (lat, errs) = (&scrape_lat, &scrape_errors);
             s.spawn(move || {
                 // one scrape happens before the exit check, so even a
                 // run the clients finish instantly records `scrapes ≥ 1`
                 loop {
-                    let st0 = Instant::now();
+                    let st0 = crate::trace::clock();
                     match http_get(&url, Duration::from_secs(5)) {
                         Ok(resp) if resp.is_ok() && exposition_well_formed(&resp.body) => {
-                            lat.lock().unwrap().push(st0.elapsed().as_micros() as u64);
+                            lat.lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .push(st0.elapsed().as_micros() as u64);
                         }
                         _ => {
                             errs.fetch_add(1, Ordering::Relaxed);
@@ -346,7 +352,7 @@ pub fn run_loadgen_socket(
     let next = AtomicUsize::new(0);
     let errors = AtomicU64::new(0);
     let metrics = ServeMetrics::new();
-    let t0 = Instant::now();
+    let t0 = crate::trace::clock();
     std::thread::scope(|s| {
         for _ in 0..cfg.concurrency.max(1) {
             let (population, next, errors, metrics) =
@@ -362,10 +368,14 @@ pub fn run_loadgen_socket(
                     if i >= cfg.requests {
                         return;
                     }
-                    let input = population[i % population.len()].clone();
+                    let Some(input) = population.get(i % population.len().max(1))
+                    else {
+                        errors.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    };
                     metrics.requests.inc();
-                    let rt0 = Instant::now();
-                    match client.encode(&input) {
+                    let rt0 = crate::trace::clock();
+                    match client.encode(input) {
                         Ok(SocketOutcome::Ok { cache_hit, .. }) => {
                             metrics.request_ns.record(rt0.elapsed().as_nanos() as u64);
                             if cache_hit {
@@ -421,7 +431,7 @@ fn p99_us(lat: &mut [u64]) -> f64 {
     }
     lat.sort_unstable();
     let idx = ((lat.len() as f64) * 0.99).ceil() as usize;
-    lat[idx.clamp(1, lat.len()) - 1] as f64
+    lat.get(idx.clamp(1, lat.len()) - 1).copied().unwrap_or(0) as f64
 }
 
 /// Write `BENCH_serve.json`: machine-readable perf trajectory artifact.

@@ -84,7 +84,12 @@ impl Router {
     /// its `rejected` counter); the router never re-routes.
     pub fn encode(&self, input: EncodeInput) -> EncodeResult {
         let idx = self.route(&input);
-        self.engines[idx].encode(input)
+        // fail closed: `route` is modulo the fleet size, so a miss here
+        // would be an internal bug — shed the request, don't panic
+        match self.engines.get(idx) {
+            Some(engine) => engine.encode(input),
+            None => Err("router selected an unavailable engine".into()),
+        }
     }
 
     /// Per-engine generations, index-aligned with [`Self::engines`].

@@ -264,8 +264,9 @@ pub fn validate_and_promote_all(
             canary.encode_with(&candidates[0])
         }
     });
-    let cand_embs = embs.pop().expect("candidate embeddings");
-    let live_embs = embs.pop().expect("live embeddings");
+    let (Some(cand_embs), Some(live_embs)) = (embs.pop(), embs.pop()) else {
+        return Err(reject("canary encode returned no embeddings".into()));
+    };
     let drift = max_drift(&live_embs, &cand_embs);
     if !drift.is_finite() {
         return Err(reject("candidate canary embeddings are non-finite".into()));
@@ -550,7 +551,7 @@ impl Standby {
             .chain(self.fanout.iter())
             .map(|e| e.metrics().mark_promoting())
             .collect();
-        let t0 = Instant::now();
+        let t0 = crate::trace::clock();
         let reject = |me: &Self, reason: String| -> StandbyEvent {
             me.engine.metrics().record_reject();
             for e in &me.fanout {

@@ -37,7 +37,8 @@ pub use registry::{
     Registry,
 };
 pub use span::{
-    calibrate_span_cost_ns, enabled, event_at, now_ns, peek, set_enabled,
-    span, span_n, spans_recorded, take, Span, SpanGuard, TraceDump, RING_CAP,
+    calibrate_span_cost_ns, clock, enabled, event_at, now_ns, peek,
+    set_enabled, span, span_n, spans_recorded, take, Span, SpanGuard,
+    TraceDump, RING_CAP,
 };
 pub use telemetry_http::{Readiness, TelemetryConfig, TelemetryServer};

@@ -58,6 +58,16 @@ pub fn now_ns() -> u64 {
     epoch().elapsed().as_nanos() as u64
 }
 
+/// The process clock: the one audited `Instant` source outside `trace/`
+/// (the `epoch-clock` lint rule bans raw `Instant::now()` elsewhere).
+/// Reading it pins the trace epoch first, so durations measured from the
+/// returned instant and span timestamps from [`now_ns`] share one
+/// timeline.
+pub fn clock() -> Instant {
+    let _ = epoch();
+    Instant::now()
+}
+
 /// Globally enable/disable span recording (metrics are unaffected).
 pub fn set_enabled(on: bool) {
     ENABLED.store(on, Ordering::Relaxed);

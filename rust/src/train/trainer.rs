@@ -45,7 +45,6 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 /// Live telemetry hooks armed by `--telemetry-addr`: the trainer
 /// publishes into these every step; the HTTP plane
@@ -296,7 +295,7 @@ pub fn forward_backward(
 
     // 1) sharded forward (shard slices come straight from the batch — no
     //    full-batch intermediate copy on the hot path)
-    let t0 = Instant::now();
+    let t0 = trace::clock();
     let caches = par_map(ranges.len(), |s| {
         let (lo, hi) = ranges[s];
         let rows = (hi - lo) * c.patches;
@@ -311,7 +310,7 @@ pub fn forward_backward(
     let forward_ms = t0.elapsed().as_secs_f64() * 1e3;
 
     // 2) global loss over the assembled full-batch embeddings
-    let t1 = Instant::now();
+    let t1 = trace::clock();
     let e = c.embed_dim;
     let mut img_z = Matrix::zeros(n, e);
     let mut txt_z = Matrix::zeros(n, e);
@@ -323,7 +322,7 @@ pub fn forward_backward(
     let loss_ms = t1.elapsed().as_secs_f64() * 1e3;
 
     // 3) sharded backward + ordered accumulation
-    let t2 = Instant::now();
+    let t2 = trace::clock();
     let shard_grads = par_map(ranges.len(), |s| {
         let (lo, hi) = ranges[s];
         let rows = hi - lo;
@@ -805,11 +804,11 @@ impl NativeTrainer {
             )
         });
         let spans_before = trace::spans_recorded();
-        let run_t0 = Instant::now();
+        let run_t0 = trace::clock();
 
         for step in self.start_step + 1..=h.steps {
             let _step_sp = trace::span_n("train.step", "train", step as u32);
-            let step_t0 = Instant::now();
+            let step_t0 = trace::clock();
             let batch = {
                 let _sp = trace::span("train.data", "train");
                 self.data.next_batch(self.cfg.batch)
@@ -866,7 +865,7 @@ impl NativeTrainer {
             }
             drop(clip_sp);
 
-            let t_opt = Instant::now();
+            let t_opt = trace::clock();
             let opt_sp = trace::span("train.optim", "train");
             let lr = schedule.at(step);
             let stats = if rolled_back {

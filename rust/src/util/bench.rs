@@ -6,7 +6,7 @@
 //! matters because the figure benches compare *ratios* (SwitchBack vs
 //! baseline) rather than absolute numbers.
 
-use std::time::Instant;
+use crate::trace;
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
@@ -28,7 +28,7 @@ impl BenchResult {
 /// sample takes ≳ `min_sample_ms`.
 pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
     // warmup + calibration
-    let t0 = Instant::now();
+    let t0 = trace::clock();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);
     let iters = ((5e-3 / once).ceil() as usize).clamp(1, 1000);
@@ -37,7 +37,7 @@ pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
     }
     let mut times = Vec::with_capacity(samples);
     for _ in 0..samples {
-        let t = Instant::now();
+        let t = trace::clock();
         for _ in 0..iters {
             f();
         }

@@ -54,6 +54,19 @@ pub fn compare_bench(
             .map(str::to_string)
             .ok_or_else(|| "document has no \"bench\" field".into())
     };
+    // Lint ledgers identify via "schema", not "bench" — route them to the
+    // suppression-monotonicity gate before the bench-kind check.
+    let is_lint =
+        |v: &Value| v.get("schema").and_then(Value::as_str) == Some("lint_ledger_v1");
+    match (is_lint(old), is_lint(new)) {
+        (true, true) => return compare_lint(old, new),
+        (false, false) => {}
+        _ => {
+            return Err(
+                "one document is a lint ledger, the other is not".to_string()
+            )
+        }
+    }
     let (ok, nk) = (kind(old)?, kind(new)?);
     if ok != nk {
         return Err(format!("bench kinds differ: baseline {ok:?} vs new {nk:?}"));
@@ -65,6 +78,55 @@ pub fn compare_bench(
         "gemm_kernels" => Ok(compare_gemm(old, new, tol, strict)?),
         other => Err(format!("unknown bench kind {other:?}")),
     }
+}
+
+// ----- lint ledger ----------------------------------------------------
+
+/// A required lint-ledger counter; a vanished field fails closed (a
+/// ledger that stops reporting a counter must not silently pass).
+fn lint_num(v: &Value, ctx: &str, key: &str) -> Result<u64, String> {
+    v.get(key)
+        .and_then(Value::as_usize)
+        .map(|n| n as u64)
+        .ok_or_else(|| format!("{ctx} lint ledger: missing counter {key:?}"))
+}
+
+/// Gate a fresh `BENCH_lint.json` against the committed baseline:
+///
+/// * the tree must lint clean (`findings_total == 0`) with a cycle-free
+///   lock graph (`lock_cycles == 0`) — absolute invariants, not ratios;
+/// * `suppressed_total`, `blocking_holds` and every per-rule `sup_*`
+///   counter the baseline records are monotonically non-increasing, so
+///   `// lint:allow` escape hatches can be burned down but never silently
+///   accumulate.
+fn compare_lint(old: &Value, new: &Value) -> Result<Vec<String>, String> {
+    let mut regs = Vec::new();
+    let findings = lint_num(new, "new", "findings_total")?;
+    if findings > 0 {
+        regs.push(format!(
+            "lint: {findings} unsuppressed finding(s) — the tree must lint clean"
+        ));
+    }
+    let cycles = lint_num(new, "new", "lock_cycles")?;
+    if cycles > 0 {
+        regs.push(format!(
+            "lint: {cycles} cycle(s) in the lock acquisition graph"
+        ));
+    }
+    let mut monotonic: Vec<String> =
+        vec!["suppressed_total".into(), "blocking_holds".into()];
+    if let Value::Obj(fields) = old {
+        monotonic.extend(fields.keys().filter(|k| k.starts_with("sup_")).cloned());
+    }
+    for key in &monotonic {
+        let (o, n) = (lint_num(old, "baseline", key)?, lint_num(new, "new", key)?);
+        if n > o {
+            regs.push(format!(
+                "lint: {key} grew {o} -> {n} — suppressions may only shrink"
+            ));
+        }
+    }
+    Ok(regs)
 }
 
 fn results(v: &Value) -> Result<&[Value], String> {
@@ -987,6 +1049,88 @@ fn compare_gemm(
 mod tests {
     use super::*;
     use crate::util::json::parse;
+
+    fn lint_doc(findings: u64, sup: u64, cycles: u64, holds: u64, sup_npp: u64) -> Value {
+        parse(&format!(
+            r#"{{"schema":"lint_ledger_v1","files":70,
+                "findings_total":{findings},"suppressed_total":{sup},
+                "rule_no_panic_path":0,"sup_no_panic_path":{sup_npp},
+                "lock_nodes":9,"lock_edges":1,
+                "lock_cycles":{cycles},"blocking_holds":{holds},
+                "lock_functions":400}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn lint_clean_tree_passes() {
+        let base = lint_doc(0, 1, 0, 0, 1);
+        let new = lint_doc(0, 1, 0, 0, 1);
+        assert!(compare_bench(&base, &new, 0.15, false).unwrap().is_empty());
+    }
+
+    #[test]
+    fn lint_any_active_finding_fails() {
+        let base = lint_doc(0, 1, 0, 0, 1);
+        let new = lint_doc(3, 1, 0, 0, 1);
+        let regs = compare_bench(&base, &new, 0.15, false).unwrap();
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("3 unsuppressed"), "{regs:?}");
+    }
+
+    #[test]
+    fn lint_cycle_fails() {
+        let base = lint_doc(0, 1, 0, 0, 1);
+        let new = lint_doc(0, 1, 2, 0, 1);
+        let regs = compare_bench(&base, &new, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("cycle")), "{regs:?}");
+    }
+
+    #[test]
+    fn lint_suppressions_may_shrink_but_not_grow() {
+        let base = lint_doc(0, 1, 0, 0, 1);
+        let fewer = lint_doc(0, 0, 0, 0, 0);
+        assert!(compare_bench(&base, &fewer, 0.15, false).unwrap().is_empty());
+        let more = lint_doc(0, 2, 0, 0, 2);
+        let regs = compare_bench(&base, &more, 0.15, false).unwrap();
+        assert!(
+            regs.iter().any(|r| r.contains("suppressed_total grew 1 -> 2")),
+            "{regs:?}"
+        );
+        assert!(
+            regs.iter().any(|r| r.contains("sup_no_panic_path grew 1 -> 2")),
+            "{regs:?}"
+        );
+    }
+
+    #[test]
+    fn lint_blocking_holds_may_not_grow() {
+        let base = lint_doc(0, 1, 0, 0, 1);
+        let new = lint_doc(0, 1, 0, 1, 1);
+        let regs = compare_bench(&base, &new, 0.15, false).unwrap();
+        assert!(regs.iter().any(|r| r.contains("blocking_holds")), "{regs:?}");
+    }
+
+    #[test]
+    fn lint_vanished_counter_fails_closed() {
+        let base = lint_doc(0, 1, 0, 0, 1);
+        let mut gutted = String::from(
+            r#"{"schema":"lint_ledger_v1","files":70,"findings_total":0,
+                "lock_cycles":0,"blocking_holds":0}"#,
+        );
+        gutted.retain(|c| c != '\n');
+        let new = parse(&gutted).unwrap();
+        let err = compare_bench(&base, &new, 0.15, false).unwrap_err();
+        assert!(err.contains("suppressed_total"), "{err}");
+    }
+
+    #[test]
+    fn lint_vs_bench_document_is_an_error() {
+        let lint = lint_doc(0, 1, 0, 0, 1);
+        let serve = serve_doc(100.0, 120.0, 10.0, 9.0);
+        assert!(compare_bench(&lint, &serve, 0.15, false).is_err());
+        assert!(compare_bench(&serve, &lint, 0.15, false).is_err());
+    }
 
     fn serve_doc(std_rps: f64, sb_rps: f64, std_p99: f64, sb_p99: f64) -> Value {
         parse(&format!(

@@ -1,0 +1,30 @@
+//! Should-NOT-fire fixture for `checked-narrowing`: widening and checked
+//! conversions are fine even in a parser directory; `as` in comments,
+//! strings and test code must not fire.
+//!
+//! Beware: a doc mentioning `raw as u32` is prose, not a cast.
+
+pub fn widening_is_fine(x: u16) -> u64 {
+    x as u64
+}
+
+pub fn usize_cast_is_fine(x: u32) -> usize {
+    x as usize
+}
+
+pub fn checked_narrowing(x: u64) -> Result<u32, String> {
+    u32::try_from(x).map_err(|_| "out of range".to_string())
+}
+
+pub fn string_trap() -> &'static str {
+    "casting raw as u32 here is just a sentence"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn narrowing_in_tests_is_fine() {
+        let x = 300u64;
+        assert_eq!(x as u32, 300);
+    }
+}

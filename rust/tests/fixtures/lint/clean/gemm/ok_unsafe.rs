@@ -1,0 +1,7 @@
+//! Should-NOT-fire fixture for `safety-comment`: documented unsafe.
+
+pub fn caller(p: *const u8) -> u8 {
+    // SAFETY: `p` is non-null and points at one readable byte — the only
+    // caller derives it from a live slice.
+    unsafe { *p }
+}

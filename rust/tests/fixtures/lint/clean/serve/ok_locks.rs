@@ -1,0 +1,40 @@
+//! Should-NOT-fire fixture for the lock-order analyzer: consistent
+//! acquisition order, sequential (non-nested) holds, and an explicit
+//! `drop` before the blocking call.
+
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+pub struct Pair {
+    pub alpha: Mutex<u32>,
+    pub beta: Mutex<u32>,
+}
+
+pub fn consistent_order_one(p: &Pair) -> u32 {
+    let a = p.alpha.lock();
+    let b = p.beta.lock();
+    let out = *a.unwrap_or_else(|e| e.into_inner()) + *b.unwrap_or_else(|e| e.into_inner());
+    out
+}
+
+pub fn consistent_order_two(p: &Pair) -> u32 {
+    let a = p.alpha.lock();
+    let b = p.beta.lock();
+    let out = *b.unwrap_or_else(|e| e.into_inner()) - *a.unwrap_or_else(|e| e.into_inner());
+    out
+}
+
+pub fn sequential_holds(p: &Pair) {
+    p.alpha.lock().unwrap_or_else(|e| e.into_inner());
+    p.beta.lock().unwrap_or_else(|e| e.into_inner());
+}
+
+pub fn dropped_before_join(m: &Mutex<u32>, h: JoinHandle<()>) {
+    let guard = m.lock();
+    drop(guard);
+    let _ = h.join();
+}
+
+pub fn metrics_ok() {
+    crate::trace::global().counter("serve.fixture.requests").inc();
+}

@@ -1,0 +1,42 @@
+//! Should-NOT-fire fixture for `no-panic-path`: every shape that looks
+//! like a violation to a naive scanner but is not one.
+//!
+//! A comment saying panic!("never") or xs.unwrap() must not fire.
+
+pub fn string_and_comment_traps() -> &'static str {
+    // .unwrap() inside a string literal is data, not code:
+    let msg = "please don't .unwrap() or panic!(...) here";
+    let raw = r#"indexing like xs[idx] inside a raw string"#;
+    let _ = raw;
+    msg
+}
+
+pub fn allowed_index_shapes(xs: &[u32]) -> u32 {
+    let first = xs[0]; // literal index — allowed
+    let head = &xs[..2]; // range — slicing, not the Index panic shape
+    let tail = &xs[1..]; // range again
+    let v = vec![1, 2, 3]; // vec![ — macro bracket, not indexing
+    let arr: [u8; 4] = [0; 4]; // type and repeat-literal brackets
+    first + head.len() as u32 + tail.len() as u32 + v.len() as u32 + arr.len() as u32
+}
+
+pub fn fail_closed(v: Option<u32>) -> Result<u32, String> {
+    v.ok_or_else(|| "missing".to_string())
+}
+
+pub fn suppressed_with_reason(v: Option<u32>) -> u32 {
+    // lint:allow(no-panic-path): fixture exercising the suppression path
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+        let xs = [1u32, 2, 3];
+        let i = 1usize;
+        assert_eq!(xs[i], 2);
+    }
+}

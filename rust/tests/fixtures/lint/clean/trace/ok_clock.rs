@@ -1,0 +1,8 @@
+//! Should-NOT-fire fixture for `epoch-clock`: `trace/` is the one place
+//! raw `Instant::now()` is legal (it implements the epoch).
+
+use std::time::Instant;
+
+pub fn epoch_impl() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,21 @@
+//! Should-NOT-fire fixture for `joined-spawn`: handles that are bound,
+//! collected or returned are all joinable — only discarding fires.
+
+use std::thread::JoinHandle;
+
+pub fn bound_and_joined() {
+    let h = std::thread::spawn(|| 1);
+    let _ = h.join();
+}
+
+pub fn collected(handles: &mut Vec<JoinHandle<i32>>) {
+    handles.push(std::thread::spawn(|| 2));
+}
+
+pub fn returned() -> JoinHandle<i32> {
+    std::thread::spawn(|| 3)
+}
+
+pub fn spawn_in_string() -> &'static str {
+    "std::thread::spawn(|| 4); — prose, not code"
+}

@@ -1,0 +1,10 @@
+//! Should-fire fixture: bare `as` integer narrowing on a parse path
+//! (`ckpt/` is a parser directory).
+
+pub fn parse_crc(raw: u64) -> u32 {
+    raw as u32
+}
+
+pub fn parse_len(raw: u64) -> u16 {
+    raw as u16
+}

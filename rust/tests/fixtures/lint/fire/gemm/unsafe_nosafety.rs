@@ -1,0 +1,5 @@
+//! Should-fire fixture: `unsafe` with no adjacent justification comment.
+
+pub fn caller(p: *const u8) -> u8 {
+    unsafe { *p }
+}

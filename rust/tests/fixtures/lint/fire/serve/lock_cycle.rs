@@ -1,0 +1,31 @@
+//! Should-fire fixture: a synthetic two-lock cycle (`alpha` before
+//! `beta` in one function, `beta` before `alpha` in another) plus a lock
+//! held across a blocking `join()`.
+
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+pub struct Pair {
+    pub alpha: Mutex<u32>,
+    pub beta: Mutex<u32>,
+}
+
+pub fn alpha_then_beta(p: &Pair) -> u32 {
+    let a = p.alpha.lock();
+    let b = p.beta.lock();
+    let out = *b.unwrap_or_else(|e| e.into_inner()) + *a.unwrap_or_else(|e| e.into_inner());
+    out
+}
+
+pub fn beta_then_alpha(p: &Pair) -> u32 {
+    let b = p.beta.lock();
+    let a = p.alpha.lock();
+    let out = *a.unwrap_or_else(|e| e.into_inner()) + *b.unwrap_or_else(|e| e.into_inner());
+    out
+}
+
+pub fn held_across_join(m: &Mutex<u32>, h: JoinHandle<()>) {
+    let guard = m.lock();
+    let _ = h.join();
+    drop(guard);
+}

@@ -1,0 +1,9 @@
+//! Should-fire fixture: counter names that violate the exposition
+//! contract — the registry appends `_total` at exposition time, so a
+//! literal already ending in `_total` double-suffixes, and names must be
+//! lowercase dotted.
+
+pub fn bad_counter_names() {
+    crate::trace::global().counter("serve.requests_total").inc();
+    crate::trace::global().counter("Serve.Requests").inc();
+}

@@ -1,0 +1,21 @@
+//! Should-fire fixture: every `no-panic-path` shape the rule must catch
+//! inside a panic-free directory (`serve/`).
+
+pub fn unwrap_on_request_path(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn expect_on_request_path(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
+
+pub fn panics(flag: bool) {
+    if flag {
+        panic!("boom");
+    }
+    unreachable!()
+}
+
+pub fn variable_indexing(xs: &[u32], idx: usize) -> u32 {
+    xs[idx]
+}

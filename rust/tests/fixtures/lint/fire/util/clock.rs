@@ -1,0 +1,11 @@
+//! Should-fire fixture: raw `Instant::now()` outside `trace/`.
+
+use std::time::Instant;
+
+pub fn stamp() -> Instant {
+    Instant::now()
+}
+
+pub fn stamp_qualified() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,12 @@
+//! Should-fire fixture: a spawn whose `JoinHandle` is discarded — the
+//! thread can never be joined.
+
+pub fn fire_and_forget() {
+    std::thread::spawn(|| {
+        println!("orphan");
+    });
+}
+
+pub fn discarded_via_let_underscore() {
+    let _ = std::thread::spawn(|| 42);
+}

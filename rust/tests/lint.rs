@@ -1,0 +1,123 @@
+//! Integration tests for `switchback lint` over the committed fixture
+//! corpus (tests/fixtures/lint/) and over the real tree itself.
+//!
+//! - `fire/` must produce at least one ACTIVE finding per rule, one lock
+//!   cycle, and one held-across-blocking finding;
+//! - `clean/` must produce zero active findings (its string/comment
+//!   traps and `lint:allow` site are the interesting part);
+//! - `src/` (the shipped tree) must lint clean with a cycle-free,
+//!   non-empty lock graph — the same gate CI enforces.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use switchback::analysis::{lint_root, Level, LintReport, RULES};
+use switchback::util::json;
+
+fn fixture(tree: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/lint")
+        .join(tree)
+}
+
+fn lint_fixture(tree: &str) -> LintReport {
+    lint_root(&fixture(tree)).expect("fixture tree readable")
+}
+
+#[test]
+fn fire_tree_triggers_every_rule() {
+    let r = lint_fixture("fire");
+    let fired: BTreeSet<&str> = r.active().map(|f| f.rule).collect();
+    for rule in RULES {
+        assert!(fired.contains(rule), "rule {rule} did not fire on fire/");
+    }
+    // `--deny warn` must fail on this tree.
+    assert!(r.worst() >= Some(Level::Warn));
+    assert_eq!(r.suppressed_total(), 0, "fire/ has no lint:allow sites");
+}
+
+#[test]
+fn fire_tree_findings_land_in_the_expected_files() {
+    let r = lint_fixture("fire");
+    let expect = [
+        ("no-panic-path", "serve/panic_path.rs"),
+        ("safety-comment", "gemm/unsafe_nosafety.rs"),
+        ("checked-narrowing", "ckpt/narrowing.rs"),
+        ("epoch-clock", "util/clock.rs"),
+        ("metrics-naming", "serve/metrics_name.rs"),
+        ("joined-spawn", "util/spawn_discard.rs"),
+        ("lock-order", "serve/lock_cycle.rs"),
+    ];
+    for (rule, rel) in expect {
+        assert!(
+            r.active().any(|f| f.rule == rule && f.rel == rel),
+            "expected {rule} finding in {rel}"
+        );
+    }
+}
+
+#[test]
+fn fire_tree_lock_graph_has_the_synthetic_cycle() {
+    let r = lint_fixture("fire");
+    assert!(!r.graph.cycles.is_empty(), "two-lock cycle not detected");
+    let cycle = &r.graph.cycles[0];
+    assert!(cycle.iter().any(|n| n.ends_with("::alpha")), "cycle: {cycle:?}");
+    assert!(cycle.iter().any(|n| n.ends_with("::beta")), "cycle: {cycle:?}");
+    assert!(r.graph.blocking_holds() >= 1, "held-across-join not detected");
+    // Lock findings are errors: a cycle must fail even `--deny error`.
+    assert_eq!(r.worst(), Some(Level::Error));
+}
+
+#[test]
+fn clean_tree_has_zero_active_findings() {
+    let r = lint_fixture("clean");
+    let leaked: Vec<String> = r
+        .active()
+        .map(|f| format!("{}:{} {} {}", f.rel, f.line, f.rule, f.message))
+        .collect();
+    assert!(leaked.is_empty(), "clean/ fired: {leaked:?}");
+    // The one `lint:allow(no-panic-path)` site is counted, not dropped.
+    assert_eq!(r.suppressed_total(), 1);
+    assert!(r.graph.cycles.is_empty());
+    assert_eq!(r.graph.blocking_holds(), 0);
+    // Consistent-order nesting still shows up as a graph edge.
+    assert!(!r.graph.edges.is_empty(), "alpha->beta edge expected");
+}
+
+#[test]
+fn shipped_tree_lints_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let r = lint_root(&src).expect("src tree readable");
+    let leaked: Vec<String> = r
+        .active()
+        .map(|f| format!("{}:{} {} {}", f.rel, f.line, f.rule, f.message))
+        .collect();
+    assert!(leaked.is_empty(), "shipped tree fired: {leaked:?}");
+    assert!(r.graph.cycles.is_empty(), "real lock graph has a cycle");
+    assert_eq!(r.graph.blocking_holds(), 0);
+    assert!(!r.graph.nodes.is_empty(), "lock graph saw no locks at all");
+    assert!(r.graph.functions > 0);
+}
+
+#[test]
+fn ledger_json_round_trips_for_both_trees() {
+    for (tree, active_min) in [("fire", 1usize), ("clean", 0usize)] {
+        let r = lint_fixture(tree);
+        let v = json::parse(&r.ledger_json()).expect("ledger parses");
+        assert_eq!(v.get("schema").and_then(json::Value::as_str), Some("lint_ledger_v1"));
+        let total = v.get("findings_total").and_then(json::Value::as_usize).unwrap();
+        if active_min == 0 {
+            assert_eq!(total, 0, "{tree} ledger");
+        } else {
+            assert!(total >= active_min, "{tree} ledger: {total}");
+        }
+        for rule in RULES {
+            let key = rule.replace('-', "_");
+            assert!(v.get(&format!("rule_{key}")).is_some(), "{tree}: rule_{key}");
+            assert!(v.get(&format!("sup_{key}")).is_some(), "{tree}: sup_{key}");
+        }
+        for key in ["lock_nodes", "lock_edges", "lock_cycles", "blocking_holds"] {
+            assert!(v.get(key).is_some(), "{tree}: {key} missing");
+        }
+    }
+}

@@ -19,6 +19,11 @@
 #   cp BENCH_train.json benchmarks/BENCH_train.baseline.json
 #   cp BENCH_ckpt.json  benchmarks/BENCH_ckpt.baseline.json
 #   cp BENCH_gemm.json  benchmarks/BENCH_gemm.baseline.json
+#   cp BENCH_lint.json  benchmarks/BENCH_lint.baseline.json
+#
+# The BENCH_lint pair is gated with lint semantics, not tolerances: zero
+# active findings, zero lock cycles, and suppression counters that may
+# only shrink relative to the committed baseline.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -54,6 +59,20 @@ check benchmarks/BENCH_serve.baseline.json BENCH_serve.json
 check benchmarks/BENCH_train.baseline.json BENCH_train.json
 check benchmarks/BENCH_ckpt.baseline.json BENCH_ckpt.json
 check benchmarks/BENCH_gemm.baseline.json BENCH_gemm.json
+check_lint() {
+    local baseline=benchmarks/BENCH_lint.baseline.json fresh=BENCH_lint.json
+    if [[ ! -f "$baseline" || ! -f "$fresh" ]]; then
+        echo "check_bench: missing $baseline or $fresh — run scripts/verify.sh first" >&2
+        FAILED=1
+        return
+    fi
+    echo "== benchdiff: $fresh vs $baseline (lint ledger) =="
+    # no tolerance args: the lint comparator is exact by design
+    if ! "$BIN" benchdiff "$baseline" "$fresh"; then
+        FAILED=1
+    fi
+}
+check_lint
 
 if [[ "$FAILED" -ne 0 ]]; then
     echo "check_bench: FAILED (see regressions above)" >&2

@@ -9,12 +9,13 @@
 #            dedicated test job; the release build is incremental
 #            against the restored cargo cache)
 #
-# Emits BENCH_serve.json, BENCH_train.json, BENCH_ckpt.json and
-# BENCH_gemm.json at the repo root so the serving, training,
-# checkpoint/hot-swap and GEMM-kernel perf trajectories are tracked
-# across PRs (schemas: EXPERIMENTS.md §Serve / §Train / §Ckpt, gemm:
-# benchmarks/README.md).  scripts/check_bench.sh gates all four against
-# the committed baselines in benchmarks/.  Also emits
+# Emits BENCH_serve.json, BENCH_train.json, BENCH_ckpt.json,
+# BENCH_gemm.json and BENCH_lint.json at the repo root so the serving,
+# training, checkpoint/hot-swap, GEMM-kernel and static-analysis
+# trajectories are tracked across PRs (schemas: EXPERIMENTS.md §Serve /
+# §Train / §Ckpt, gemm + lint: benchmarks/README.md).
+# scripts/check_bench.sh gates all five against the committed baselines
+# in benchmarks/.  Also emits
 # BENCH_metrics.scrape.prom — one real /metrics scrape of the live
 # telemetry plane (`--telemetry-addr`), uploaded by CI as the per-PR
 # observability artifact.
@@ -35,6 +36,21 @@ else
 fi
 
 BIN=target/release/switchback
+
+echo
+echo "== lint: invariant linter + lock-order analysis (BENCH_lint.json) =="
+# fail-closed: any unsuppressed finding (warn or error) fails verify; the
+# ledger is gated by check_bench.sh so suppressions can only shrink
+"$BIN" lint src --deny warn --out "$REPO_ROOT/BENCH_lint.json"
+# the linter must still be able to fire: the committed should-fire
+# fixture corpus has ≥1 violation per rule plus a two-lock cycle
+if "$BIN" lint tests/fixtures/lint/fire --deny warn >/dev/null 2>&1; then
+    echo "lint smoke FAILED: should-fire fixtures passed --deny warn" >&2
+    exit 1
+fi
+"$BIN" lint tests/fixtures/lint/clean --deny warn >/dev/null \
+    || { echo "lint smoke FAILED: should-not-fire fixtures fired" >&2; exit 1; }
+echo "lint smoke OK — tree clean, fixtures fire/stay-quiet as committed"
 
 echo
 echo "== serve smoke =="
@@ -352,4 +368,4 @@ rm -rf "$CKPT_A" "$CKPT_B" "$CKPT_PIPE" \
     "$REPO_ROOT/.bench_ckpt_smoke_a.json" "$REPO_ROOT/.bench_ckpt_smoke_b.json"
 
 echo
-echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json + $REPO_ROOT/BENCH_train.json + $REPO_ROOT/BENCH_ckpt.json + $REPO_ROOT/BENCH_gemm.json + $REPO_ROOT/BENCH_metrics.scrape.prom"
+echo "verify OK — wrote $REPO_ROOT/BENCH_serve.json + $REPO_ROOT/BENCH_train.json + $REPO_ROOT/BENCH_ckpt.json + $REPO_ROOT/BENCH_gemm.json + $REPO_ROOT/BENCH_lint.json + $REPO_ROOT/BENCH_metrics.scrape.prom"
